@@ -1,0 +1,62 @@
+//! Figure 3 reproduction: total training time vs the number of tiers M
+//! available to the dynamic scheduler (M = 1..7), under the two
+//! resource-profile cases of Table 1 with profiles switching every 20
+//! rounds.
+//!
+//! The paper's claim: training time generally *decreases* as M grows —
+//! more tiers give the scheduler finer granularity to fit each client.
+//!
+//! ```sh
+//! cargo run --release --example fig3 -- [--rounds N] [--target A] [--artifact tiny]
+//! ```
+
+use dtfl::csv_row;
+use dtfl::harness::{time_cell, RunSpec};
+use dtfl::metrics::CsvWriter;
+use dtfl::simulation::ProfilePool;
+use dtfl::util::{logging, Args};
+
+fn main() -> anyhow::Result<()> {
+    logging::init();
+    let args = Args::from_env()?;
+    let rounds = args.usize_or("rounds", 40)?;
+    let target = args.f64_opt("target")?;
+    let artifact = args.str_or("artifact", "resnet110s-c10");
+    let dataset = args.str_or("dataset", if artifact == "tiny" { "tiny" } else { "cifar10" });
+
+    let mut csv = CsvWriter::create(
+        "results/fig3.csv",
+        &["case", "num_tiers", "total_time", "reached_target"],
+    )?;
+
+    let rt = dtfl::harness::RunSpec { artifact: artifact.clone(), ..Default::default() }.open_runtime()?;
+    println!("== Figure 3: training time vs number of tiers (DTFL) ==");
+    println!("{:>6} {:>6} {:>12}", "case", "M", "total_time");
+    for (case, pool) in [("case1", ProfilePool::Case1), ("case2", ProfilePool::Case2)] {
+        for m in 1..=7usize {
+            let spec = RunSpec {
+                artifact: artifact.clone(),
+                dataset: dataset.clone(),
+                method: "dtfl".into(),
+                max_tiers: m,
+                pool,
+                rounds,
+                target_accuracy: target,
+                switch_every: 20,
+                switch_frac: 0.3,
+                ..Default::default()
+            };
+            let (report, _) = spec.run_shared(rt.clone())?;
+            println!("{case:>6} {m:>6} {:>12}", time_cell(&report));
+            csv.row(&csv_row![
+                case,
+                m,
+                time_cell(&report),
+                report.time_to_target.is_some()
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("\nwrote results/fig3.csv");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Table 1 reproduction: training time for 10 clients with *every client
+//! pinned to the same tier* (single-tier splits, tiers 1..M) vs FedAvg,
+//! under the paper's two resource-profile cases, to a target accuracy on
+//! IID CIFAR-10 with the ResNet110-S model.
+//!
+//! Emits `results/table1.csv` with computation/communication/overall rows
+//! per tier — the paper's claim is the *shape*: a non-trivial tier
+//! minimizes overall time, and the winner differs between case 1 and 2.
+//!
+//! ```sh
+//! cargo run --release --example table1 -- [--rounds N] [--target A] [--artifact tiny]
+//! ```
+
+use dtfl::csv_row;
+use dtfl::harness::RunSpec;
+use dtfl::metrics::CsvWriter;
+use dtfl::simulation::ProfilePool;
+use dtfl::util::{logging, Args};
+
+fn main() -> anyhow::Result<()> {
+    logging::init();
+    let args = Args::from_env()?;
+    let artifact = args.str_or("artifact", "resnet110s-c10");
+    let dataset = args.str_or("dataset", if artifact == "tiny" { "tiny" } else { "cifar10" });
+    let rounds = args.usize_or("rounds", 40)?;
+    let target = args.f64_opt("target")?;
+    let tiers = args.usize_or("tiers", 6)?;
+    let train_total = args.usize_or("train-total", 1280)?;
+
+    let mut csv = CsvWriter::create(
+        "results/table1.csv",
+        &["case", "tier", "compute_time", "comm_time", "overall_time", "reached_target"],
+    )?;
+
+    let rt = RunSpec { artifact: artifact.clone(), ..Default::default() }.open_runtime()?;
+    for (case, pool) in [("case1", ProfilePool::Case1), ("case2", ProfilePool::Case2)] {
+        println!("\n== Table 1 {case}: fixed single-tier assignments ({artifact}) ==");
+        println!("tier    compute(s)  comm(s)   overall(s)");
+        for tier in 1..=tiers + 1 {
+            let is_fedavg = tier == tiers + 1;
+            let spec = RunSpec {
+                artifact: artifact.clone(),
+                dataset: dataset.clone(),
+                method: if is_fedavg { "fedavg".into() } else { "static".into() },
+                static_tier: (!is_fedavg).then_some(tier),
+                max_tiers: tiers.max(1),
+                pool,
+                rounds,
+                target_accuracy: target,
+                train_total,
+                batch_cap: Some(args.usize_or("batch-cap", 8).unwrap_or(8)),
+                out_name: None,
+                ..Default::default()
+            };
+            let (report, records) = spec.run_shared(rt.clone())?;
+            // accumulate the straggler critical path up to target (or end)
+            let horizon = report.time_to_target.unwrap_or(report.total_sim_time);
+            let mut comp = 0.0;
+            let mut comm = 0.0;
+            for r in &records {
+                if r.sim_time <= horizon + 1e-9 {
+                    comp += r.makespan_compute;
+                    comm += r.makespan_comm;
+                }
+            }
+            let overall = comp + comm;
+            let label = if is_fedavg { "FedAvg".into() } else { format!("{tier}") };
+            println!(
+                "{:>6}  {:>10.1}  {:>7.1}  {:>10.1}{}",
+                label,
+                comp,
+                comm,
+                overall,
+                if report.time_to_target.is_some() { "" } else { "  (target not reached)" }
+            );
+            csv.row(&csv_row![
+                case,
+                label,
+                format!("{comp:.1}"),
+                format!("{comm:.1}"),
+                format!("{overall:.1}"),
+                report.time_to_target.is_some()
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("\nwrote results/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Table 3 + Figure 2 reproduction: time-to-target-accuracy of DTFL vs the
+//! four baselines (FedAvg, SplitFed, FedYogi, FedGKT) across dataset
+//! variants, on a dynamic heterogeneous population (30% of profiles
+//! re-drawn every 50 rounds), 10 clients.
+//!
+//! Emits `results/table3.csv` (one row per method × dataset) and
+//! `results/fig2_<method>.csv` accuracy-vs-simulated-time curves for the
+//! IID CIFAR-10 cell (Figure 2).
+//!
+//! The full paper grid (7 dataset variants × 2 models × 5 methods) is
+//! hours of wall time on this testbed; the default runs the CIFAR-10
+//! IID + non-IID column with ResNet56-S. `--full` adds CIFAR-100, CINIC-10
+//! and HAM10000 variants; `--artifact resnet110s-c10` switches models.
+//!
+//! ```sh
+//! cargo run --release --example table3 -- [--rounds N] [--target A] [--full]
+//! ```
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use dtfl::csv_row;
+use dtfl::harness::{time_cell, RunSpec};
+use dtfl::metrics::CsvWriter;
+use dtfl::util::{logging, Args};
+
+const METHODS: [&str; 5] = ["dtfl", "fedavg", "splitfed", "fedyogi", "fedgkt"];
+
+fn main() -> anyhow::Result<()> {
+    logging::init();
+    let args = Args::from_env()?;
+    let rounds = args.usize_or("rounds", 60)?;
+    let target = args.f64_opt("target")?;
+    let artifact = args.str_or("artifact", "resnet56s-c10");
+    let full = args.bool("full");
+
+    // (dataset, artifact, non_iid, label); the `tiny` artifact pairs with
+    // the 16px tiny dataset (the fast CIFAR-10 analogue).
+    let base_ds = if artifact == "tiny" { "tiny" } else { "cifar10" };
+    let mut cells: Vec<(String, String, bool, String)> = vec![
+        (base_ds.into(), artifact.clone(), false, "CIFAR-10 IID".into()),
+        (base_ds.into(), artifact.clone(), true, "CIFAR-10 non-IID".into()),
+    ];
+    if full {
+        cells.push(("cifar100".into(), "resnet56s-c100".into(), false, "CIFAR-100 IID".into()));
+        cells.push(("cifar100".into(), "resnet56s-c100".into(), true, "CIFAR-100 non-IID".into()));
+        cells.push(("cinic10".into(), artifact.clone(), false, "CINIC-10 IID".into()));
+        cells.push(("cinic10".into(), artifact.clone(), true, "CINIC-10 non-IID".into()));
+        cells.push(("ham10000".into(), "resnet56s-ham".into(), false, "HAM10000".into()));
+    }
+
+    let mut csv = CsvWriter::create(
+        "results/table3.csv",
+        &["dataset", "method", "time_to_target", "best_accuracy", "rounds", "sim_time"],
+    )?;
+
+    let mut runtimes: HashMap<String, Rc<dtfl::runtime::Runtime>> = HashMap::new();
+    for (dataset, art, non_iid, label) in &cells {
+        println!("\n== Table 3 cell: {label} ({art}) ==");
+        println!("{:<10} {:>14} {:>10} {:>8}", "method", "time-to-target", "best_acc", "rounds");
+        for method in METHODS {
+            let fig2 = dataset == base_ds && !non_iid;
+            let spec = RunSpec {
+                artifact: art.clone(),
+                dataset: dataset.clone(),
+                method: method.into(),
+                clients: 10,
+                rounds,
+                non_iid: *non_iid,
+                batch_cap: Some(args.usize_or("batch-cap", 2)?),
+                target_accuracy: target,
+                switch_every: 50,
+                switch_frac: 0.3,
+                out_name: fig2.then(|| format!("fig2_{method}")),
+                ..Default::default()
+            };
+            let rt = match runtimes.get(art) {
+                Some(rt) => rt.clone(),
+                None => {
+                    let rt = spec.open_runtime()?;
+                    runtimes.insert(art.clone(), rt.clone());
+                    rt
+                }
+            };
+            let (report, _records) = spec.run_shared(rt)?;
+            println!(
+                "{:<10} {:>14} {:>10.3} {:>8}",
+                method,
+                time_cell(&report),
+                report.best_accuracy,
+                report.rounds_run
+            );
+            csv.row(&csv_row![
+                label,
+                method,
+                time_cell(&report),
+                format!("{:.4}", report.best_accuracy),
+                report.rounds_run,
+                format!("{:.1}", report.total_sim_time)
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("\nwrote results/table3.csv (+ fig2_<method>.csv curves for CIFAR-10 IID)");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT exporter: lower every DTFL step function to HLO text + metadata.
+
+Interchange format is HLO *text* (not serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model config this writes into artifacts/<config>/:
+  client_step_t{m}.hlo.txt        m = 1..MAX_TIERS
+  client_step_t{m}_dcor.hlo.txt   (privacy variant; --dcor configs only)
+  server_step_t{m}.hlo.txt
+  full_step.hlo.txt  full_step_sgd.hlo.txt  eval.hlo.txt
+  init_full.bin  init_aux_t{m}.bin          (f32 LE initial parameters)
+  metadata.json                             (flat layout, shapes, D_size)
+
+Run via `make artifacts`. Python never runs on the request path: the rust
+coordinator consumes these files only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _scalar(dtype=F32):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def lower_fn(fn, arg_specs):
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def export_config(cfg: M.ModelConfig, out_dir: str, dcor: bool, verbose: bool = True):
+    os.makedirs(out_dir, exist_ok=True)
+    spec = M.build_spec(cfg)
+    t_start = time.time()
+
+    xs = _spec((cfg.batch, cfg.image_hw, cfg.image_hw, cfg.in_channels))
+    ys = _spec((cfg.batch,), I32)
+    exs = _spec((cfg.eval_batch, cfg.image_hw, cfg.image_hw, cfg.in_channels))
+    eys = _spec((cfg.eval_batch,), I32)
+
+    tiers_meta = []
+    for tier in range(1, M.MAX_TIERS + 1):
+        cut = spec.cut_offset(tier)
+        asp = M.aux_spec(cfg, tier)
+        clen = cut + asp.total  # client_vec = client params || aux params
+        slen = spec.total - cut
+        zs = M.z_shape(cfg, tier)
+
+        cvec = _spec((clen,))
+        csteps = [cvec, cvec, cvec, _scalar(), _scalar(), xs, ys]
+        write(
+            os.path.join(out_dir, f"client_step_t{tier}.hlo.txt"),
+            lower_fn(M.make_client_step(cfg, tier), csteps),
+        )
+        if dcor:
+            write(
+                os.path.join(out_dir, f"client_step_t{tier}_dcor.hlo.txt"),
+                lower_fn(M.make_client_step(cfg, tier, dcor=True), csteps + [_scalar()]),
+            )
+
+        svec = _spec((slen,))
+        write(
+            os.path.join(out_dir, f"server_step_t{tier}.hlo.txt"),
+            lower_fn(
+                M.make_server_step(cfg, tier),
+                [svec, svec, svec, _scalar(), _scalar(), _spec(zs), ys],
+            ),
+        )
+
+        # Initial aux params for this tier.
+        aux0 = np.asarray(M.init_aux_flat(cfg, tier), dtype=np.float32)
+        aux0.tofile(os.path.join(out_dir, f"init_aux_t{tier}.bin"))
+
+        # Transferred bytes (paper: client-side model down + up, plus the
+        # intermediate activation z and labels per batch).
+        tiers_meta.append(
+            dict(
+                tier=tier,
+                cut_module=tier,
+                cut_offset=cut,
+                client_param_len=cut,
+                aux_len=asp.total,
+                client_vec_len=clen,
+                server_vec_len=slen,
+                z_shape=list(zs),
+                z_bytes_per_batch=int(np.prod(zs)) * 4,
+                model_transfer_bytes=2 * (cut + asp.total) * 4,
+            )
+        )
+        if verbose:
+            print(
+                f"[{cfg.name}] tier {tier}: client={clen} server={slen} "
+                f"z={zs} ({time.time() - t_start:.1f}s)",
+                flush=True,
+            )
+
+    fvec = _spec((spec.total,))
+    write(
+        os.path.join(out_dir, "full_step.hlo.txt"),
+        lower_fn(
+            M.make_full_step(cfg),
+            [fvec, fvec, fvec, _scalar(), _scalar(), xs, ys],
+        ),
+    )
+    write(
+        os.path.join(out_dir, "full_step_sgd.hlo.txt"),
+        lower_fn(
+            M.make_full_step(cfg, sgd=True),
+            [fvec, fvec, fvec, _scalar(), _scalar(), xs, ys],
+        ),
+    )
+    write(
+        os.path.join(out_dir, "eval.hlo.txt"),
+        lower_fn(M.make_eval(cfg), [fvec, exs, eys]),
+    )
+
+    full0 = np.asarray(M.init_flat(cfg, 0), dtype=np.float32)
+    full0.tofile(os.path.join(out_dir, "init_full.bin"))
+
+    meta = dict(
+        config=cfg.name,
+        num_classes=cfg.num_classes,
+        image_hw=cfg.image_hw,
+        in_channels=cfg.in_channels,
+        batch=cfg.batch,
+        eval_batch=cfg.eval_batch,
+        widths=list(cfg.widths),
+        strides=list(cfg.strides),
+        blocks=list(cfg.blocks),
+        total_params=spec.total,
+        module_offsets=spec.module_offsets,
+        max_tiers=M.MAX_TIERS,
+        has_dcor=dcor,
+        adam=dict(b1=M.ADAM_B1, b2=M.ADAM_B2, eps=M.ADAM_EPS),
+        tiers=tiers_meta,
+        params=[
+            dict(module=e.module, name=e.name, shape=list(e.shape), offset=e.offset)
+            for e in spec.entries
+        ],
+    )
+    with open(os.path.join(out_dir, "metadata.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    if verbose:
+        print(
+            f"[{cfg.name}] exported to {out_dir} in {time.time() - t_start:.1f}s",
+            flush=True,
+        )
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip rebuilds."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for name in ["model.py", "aot.py", "kernels/matmul.py"]:
+        with open(os.path.join(base, name), "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+DEFAULT_CONFIGS = ["tiny", "resnet56s-c10", "resnet110s-c10", "resnet56s-c100", "resnet56s-ham"]
+# Distance-correlation variants are only needed for the Table 5 config.
+DCOR_CONFIGS = {"resnet56s-c10", "tiny"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--configs",
+        default=",".join(DEFAULT_CONFIGS),
+        help="comma-separated config names (see model.CONFIGS), or 'all'",
+    )
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+
+    names = (
+        list(M.CONFIGS) if args.configs == "all" else args.configs.split(",")
+    )
+    os.makedirs(args.out, exist_ok=True)
+
+    fp = source_fingerprint() + "|" + ",".join(sorted(names))
+    stamp = os.path.join(args.out, ".fingerprint")
+    if not args.force and os.path.exists(stamp):
+        with open(stamp) as f:
+            if f.read() == fp:
+                print("artifacts up to date, skipping (use --force to rebuild)")
+                return
+
+    for name in names:
+        cfg = M.CONFIGS[name]
+        export_config(cfg, os.path.join(args.out, name), dcor=name in DCOR_CONFIGS)
+
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print("all artifact sets written to", args.out)
+
+
+if __name__ == "__main__":
+    main()

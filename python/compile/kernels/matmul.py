@@ -1,0 +1,171 @@
+"""L1 Pallas kernel: tiled matmul shaped for the TPU MXU systolic array.
+
+This is the compute hot-spot of DTFL: every convolution in the ResNet-style
+global model is lowered to im2col + matmul (see `model.py`), and every dense
+layer is a matmul, so one well-tiled kernel carries the whole training step.
+
+Hardware adaptation (paper trains on GPUs): instead of porting CUDA
+threadblock/shared-memory tiling, we express the HBM->VMEM schedule with a
+`BlockSpec` grid: (M/bm, N/bn, K/bk).  Each (i, j) output tile is revisited
+along the k axis and accumulated in place, which Pallas pipelines through
+VMEM; `jnp.dot(..., preferred_element_type=f32)` targets the MXU with f32
+accumulation.  The default 128x128x128 blocks match the MXU tile; callers
+shrink blocks for small problems (see `_clamp_block`).
+
+The kernel MUST be lowered with interpret=True on this CPU-only image: the
+grid then becomes plain HLO control flow that the rust PJRT CPU client can
+execute.  Real-TPU performance is estimated structurally (VMEM footprint,
+MXU-tile alignment) in DESIGN.md / EXPERIMENTS.md SSPerf.
+
+A `jax.custom_vjp` wrapper routes the backward pass through the same kernel
+(dx = g @ w^T, dw = x^T @ g), so client/server training steps spend their
+FLOPs in this kernel in both directions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tile. 128x128 is the systolic-array native tile; the
+# k-block trades VMEM footprint against pipeline depth.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+# VMEM budget per core used for the structural footprint check (bytes).
+# ~16 MiB on current TPU generations; we keep a conservative 12 MiB target.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    """Grid point (i, j, k): o[i, j] += x[i, k] @ y[k, j].
+
+    The output block is revisited for every k, so we zero it at k == 0 and
+    accumulate in place — the Pallas analogue of a CUDA shared-memory
+    accumulator that lives across the k-loop of a threadblock.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _round_up(a: int, b: int) -> int:
+    return _ceil_div(a, b) * b
+
+
+def _clamp_block(dim: int, block: int, minimum: int = 8) -> int:
+    """Shrink a block to the problem size, keeping TPU-friendly multiples.
+
+    Small problems (early ResNet modules, aux heads) should not pad to a full
+    128 tile; we round the dimension up to a multiple of `minimum` instead.
+    """
+    if dim >= block:
+        return block
+    return max(minimum, _round_up(dim, minimum))
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM footprint of one grid step (x, y and o tiles)."""
+    return dtype_bytes * (block_m * block_k + block_k * block_n + block_m * block_n)
+
+
+def mxu_utilization(block_m: int, block_n: int, block_k: int) -> float:
+    """Fraction of MXU 128x128x128 issue slots the tile shape can fill.
+
+    Structural estimate used by the SSPerf analysis: a (bm, bn, bk) tile
+    occupies ceil(b/128) native tiles per axis; utilization is the ratio of
+    useful MACs to the MACs of the padded native tiles.
+    """
+    pad = lambda b: _round_up(b, 128)
+    useful = block_m * block_n * block_k
+    issued = pad(block_m) * pad(block_n) * pad(block_k)
+    return useful / issued
+
+
+def _matmul_raw(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int,
+    block_n: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    """Padded, tiled pallas matmul: (M, K) @ (K, N) -> (M, N), f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+
+    bm = _clamp_block(m, block_m)
+    bn = _clamp_block(n, block_n)
+    bk = _clamp_block(k, block_k)
+
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5)
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Differentiable tiled matmul; fwd and bwd both run the Pallas kernel."""
+    return _matmul_raw(
+        x, y, block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+
+
+def _matmul_fwd(x, y, block_m, block_n, block_k, interpret):
+    out = _matmul_raw(
+        x, y, block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+    return out, (x, y)
+
+
+def _matmul_bwd(block_m, block_n, block_k, interpret, res, g):
+    x, y = res
+    # dx = g @ y^T : (M, N) @ (N, K); dw = x^T @ g : (K, M) @ (M, N).
+    dx = _matmul_raw(
+        g, y.T, block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+    dy = _matmul_raw(
+        x.T, g, block_m=block_m, block_n=block_n, block_k=block_k, interpret=interpret
+    )
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

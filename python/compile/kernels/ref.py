@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernel and the model building blocks.
+
+Everything here is the *specification*: slow, obviously-correct jnp code that
+pytest/hypothesis compare against the Pallas kernel (`matmul.py`) and the
+model ops (`model.py`).  Nothing in this file is ever lowered into the
+artifacts that rust executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference matmul with f32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int, padding: int) -> jax.Array:
+    """Reference NHWC conv via lax.conv_general_dilated.
+
+    x: (B, H, W, Cin); w: (kh, kw, Cin, Cout) -> (B, H', W', Cout).
+    """
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def group_norm_ref(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, groups: int, eps: float = 1e-5
+) -> jax.Array:
+    b, h, w, c = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xn = (xg - mu) / jnp.sqrt(var + eps)
+    return xn.reshape(b, h, w, c) * scale + bias
+
+
+def cross_entropy_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    nll = logz - jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return nll.mean()
+
+
+def adam_ref(p, g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+def distance_correlation_ref(x: jax.Array, z: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """Szekely distance correlation between flattened batches x and z.
+
+    Used by the NoPeek-style privacy regularizer (paper SS4.4, Table 5).
+    """
+
+    def _dist(a):
+        a = a.reshape(a.shape[0], -1)
+        sq = jnp.sum(a * a, axis=1)
+        d2 = sq[:, None] + sq[None, :] - 2.0 * (a @ a.T)
+        d = jnp.sqrt(jnp.maximum(d2, 0.0) + eps)
+        # double centering
+        return d - d.mean(0, keepdims=True) - d.mean(1, keepdims=True) + d.mean()
+
+    ax, az = _dist(x), _dist(z)
+    dcov = jnp.sqrt(jnp.maximum((ax * az).mean(), 0.0) + eps)
+    dvx = jnp.sqrt(jnp.maximum((ax * ax).mean(), 0.0) + eps)
+    dvz = jnp.sqrt(jnp.maximum((az * az).mean(), 0.0) + eps)
+    return dcov / jnp.sqrt(dvx * dvz)

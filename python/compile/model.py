@@ -1,0 +1,521 @@
+"""L2: DTFL's splittable ResNet-style global model in JAX.
+
+The global model mirrors the paper's 8-module decomposition of ResNet-56/110
+(Appendix A.5, Tables 8-9): md1 is the stem conv, md2..md7 are residual
+stages, md8 is avgpool + fc.  Tier m's client-side model is md1..md_m plus an
+auxiliary head (avgpool + fc, Table 10); the server-side model is the rest.
+
+All convolutions are lowered to im2col + the L1 Pallas matmul kernel
+(`kernels.matmul`), so both the forward and backward FLOPs of every training
+step run through the kernel.
+
+Flat parameter layout
+---------------------
+Parameters are serialized module-by-module into one flat f32 vector.  The cut
+for tier m is then a single offset: client = flat[:cut], server = flat[cut:].
+Auxiliary heads are separate per-tier vectors (they are not part of the
+global model, matching the paper).  `ParamSpec` records (name, shape, offset)
+for every tensor; `metadata.json` exports it so the rust coordinator can
+slice/aggregate without any pytree logic.
+
+Exported step functions (lowered by aot.py, executed from rust):
+  client_step  (client_vec, m, v, t, lr, x, y)        -> updated + z + loss
+  client_step_dcor  adds a distance-correlation term weighted by input alpha
+  server_step  (server_vec, m, v, t, lr, z, y)        -> updated + loss + acc
+  full_step    (full_vec, m, v, t, lr, x, y)          -> updated + loss + acc
+  full_step_sgd same but plain SGD (FedYogi client-side pseudo-gradients)
+  eval_batch   (full_vec, x, y)                       -> loss + correct
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul
+
+# Number of modules the global model is split into (paper: md1..md8).
+NUM_MODULES = 8
+# Maximum number of tiers: cut after md1 .. md7 (tier m keeps md1..md_m on
+# the client; md8 is never on the client — Table 11).
+MAX_TIERS = 7
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GN_EPS = 1e-5
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + batch configuration for one artifact set."""
+
+    name: str
+    num_classes: int = 10
+    image_hw: int = 32
+    in_channels: int = 3
+    batch: int = 32
+    eval_batch: int = 64
+    # Output channels of md1..md7 (md8 is avgpool+fc on widths[-1]).
+    widths: Tuple[int, ...] = (16, 16, 16, 32, 32, 64, 64)
+    # Stride of each residual stage md2..md7.
+    strides: Tuple[int, ...] = (1, 1, 2, 1, 2, 1)
+    # Residual blocks per stage md2..md7 (ResNet-56-S: 1 each; deeper
+    # configs raise these, mirroring x1/x2/x3 block counts in Tables 8-9).
+    blocks: Tuple[int, ...] = (1, 1, 1, 1, 1, 1)
+    # Pallas matmul block shape (SSPerf tunable).
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+
+    def __post_init__(self):
+        assert len(self.widths) == NUM_MODULES - 1
+        assert len(self.strides) == NUM_MODULES - 2
+        assert len(self.blocks) == NUM_MODULES - 2
+
+
+# The named configs rust experiments refer to. `*-s` are the scaled ("-S")
+# models trained end-to-end on this CPU testbed; resnet56/resnet110 configs
+# keep the paper's block multiplicities for shape/structure checks.
+CONFIGS: Dict[str, ModelConfig] = {
+    "resnet56s-c10": ModelConfig(name="resnet56s-c10", num_classes=10),
+    "resnet110s-c10": ModelConfig(
+        name="resnet110s-c10", num_classes=10, blocks=(2, 2, 2, 2, 2, 2)
+    ),
+    "resnet56s-c100": ModelConfig(name="resnet56s-c100", num_classes=100),
+    "resnet56s-ham": ModelConfig(name="resnet56s-ham", num_classes=7),
+    # Tiny config for fast tests and CI-style runs.
+    "tiny": ModelConfig(
+        name="tiny",
+        num_classes=10,
+        image_hw=16,
+        batch=8,
+        eval_batch=16,
+        widths=(8, 8, 8, 16, 16, 32, 32),
+    ),
+    # SSPerf L1 variant: k-block sized to the model's largest contraction
+    # (K <= 576 after im2col), eliminating k-padding + k-revisits.
+    "tiny-k512": ModelConfig(
+        name="tiny-k512",
+        num_classes=10,
+        image_hw=16,
+        batch=8,
+        eval_batch=16,
+        widths=(8, 8, 8, 16, 16, 32, 32),
+        block_k=512,
+    ),
+    # Paper-faithful module multiplicities (structure checks only).
+    "resnet56": ModelConfig(
+        name="resnet56",
+        num_classes=10,
+        widths=(16, 64, 64, 128, 128, 256, 256),
+        blocks=(3, 3, 3, 3, 3, 3),
+    ),
+    "resnet110": ModelConfig(
+        name="resnet110",
+        num_classes=10,
+        widths=(16, 64, 64, 128, 128, 256, 256),
+        blocks=(6, 6, 6, 6, 6, 6),
+    ),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter specification / flat layout
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    module: int  # 1-based module index (md1..md8)
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+
+    @property
+    def size(self) -> int:
+        s = 1
+        for d in self.shape:
+            s *= d
+        return s
+
+
+class ParamSpec:
+    """Ordered flat layout of the global model's parameters."""
+
+    def __init__(self, entries: List[Tuple[int, str, Tuple[int, ...]]]):
+        self.entries: List[ParamEntry] = []
+        off = 0
+        for module, name, shape in entries:
+            self.entries.append(ParamEntry(module, name, shape, off))
+            off += functools.reduce(lambda a, b: a * b, shape, 1)
+        self.total = off
+        # module_offsets[i] = flat offset where module (i+1) starts;
+        # appended total gives module ends.
+        self.module_offsets: List[int] = []
+        seen = set()
+        for e in self.entries:
+            if e.module not in seen:
+                seen.add(e.module)
+                self.module_offsets.append(e.offset)
+        self.module_offsets.append(self.total)
+
+    def cut_offset(self, cut_module: int) -> int:
+        """Flat offset at which modules (cut_module+1).. start."""
+        return self.module_offsets[cut_module]
+
+    def unflatten(self, flat: jax.Array, base: int = 0) -> Dict[str, jax.Array]:
+        out = {}
+        for e in self.entries:
+            out[e.name] = jax.lax.slice(
+                flat, (e.offset - base,), (e.offset - base + e.size,)
+            ).reshape(e.shape)
+        return out
+
+    def sub(self, lo_module: int, hi_module: int) -> "SubSpec":
+        """Entries for modules in [lo_module, hi_module]."""
+        ents = [e for e in self.entries if lo_module <= e.module <= hi_module]
+        return SubSpec(ents, ents[0].offset if ents else 0)
+
+
+class SubSpec:
+    def __init__(self, entries: List[ParamEntry], base: int):
+        self.entries = entries
+        self.base = base
+        self.total = sum(e.size for e in entries)
+
+    def unflatten(self, flat: jax.Array) -> Dict[str, jax.Array]:
+        out = {}
+        for e in self.entries:
+            lo = e.offset - self.base
+            out[e.name] = jax.lax.slice(flat, (lo,), (lo + e.size,)).reshape(e.shape)
+        return out
+
+
+def _gn_groups(c: int) -> int:
+    g = min(8, c)
+    while c % g != 0:
+        g -= 1
+    return g
+
+
+def _block_entries(
+    module: int, prefix: str, cin: int, cout: int, stride: int
+) -> List[Tuple[int, str, Tuple[int, ...]]]:
+    ents = [
+        (module, f"{prefix}.conv1.w", (3, 3, cin, cout)),
+        (module, f"{prefix}.gn1.scale", (cout,)),
+        (module, f"{prefix}.gn1.bias", (cout,)),
+        (module, f"{prefix}.conv2.w", (3, 3, cout, cout)),
+        (module, f"{prefix}.gn2.scale", (cout,)),
+        (module, f"{prefix}.gn2.bias", (cout,)),
+    ]
+    if stride != 1 or cin != cout:
+        ents += [
+            (module, f"{prefix}.proj.w", (1, 1, cin, cout)),
+            (module, f"{prefix}.gnp.scale", (cout,)),
+            (module, f"{prefix}.gnp.bias", (cout,)),
+        ]
+    return ents
+
+
+def build_spec(cfg: ModelConfig) -> ParamSpec:
+    """Flat layout of the full global model (md1..md8)."""
+    ents: List[Tuple[int, str, Tuple[int, ...]]] = [
+        (1, "md1.conv.w", (3, 3, cfg.in_channels, cfg.widths[0])),
+        (1, "md1.gn.scale", (cfg.widths[0],)),
+        (1, "md1.gn.bias", (cfg.widths[0],)),
+    ]
+    cin = cfg.widths[0]
+    for stage in range(6):  # md2..md7
+        module = stage + 2
+        cout = cfg.widths[stage + 1]
+        for b in range(cfg.blocks[stage]):
+            stride = cfg.strides[stage] if b == 0 else 1
+            ents += _block_entries(module, f"md{module}.b{b}", cin, cout, stride)
+            cin = cout
+    ents += [
+        (8, "md8.fc.w", (cfg.widths[-1], cfg.num_classes)),
+        (8, "md8.fc.b", (cfg.num_classes,)),
+    ]
+    return ParamSpec(ents)
+
+
+def aux_spec(cfg: ModelConfig, tier: int) -> ParamSpec:
+    """Auxiliary head for tier `tier`: avgpool + fc on md_tier's channels."""
+    c = cfg.widths[tier - 1]
+    return ParamSpec(
+        [(1, "aux.fc.w", (c, cfg.num_classes)), (1, "aux.fc.b", (cfg.num_classes,))]
+    )
+
+
+def z_shape(cfg: ModelConfig, tier: int, batch: int | None = None) -> Tuple[int, ...]:
+    """Shape of the intermediate activation after md_tier."""
+    b = cfg.batch if batch is None else batch
+    hw = cfg.image_hw
+    # strides applied in stages md2..md_tier
+    for stage in range(max(0, tier - 1)):
+        hw //= cfg.strides[stage]
+    return (b, hw, hw, cfg.widths[tier - 1])
+
+
+# --------------------------------------------------------------------------
+# Forward pass (im2col + Pallas matmul)
+# --------------------------------------------------------------------------
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> jax.Array:
+    """(B, H, W, C) -> (B, H', W', kh*kw*C) with (i, j, c) patch ordering."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    hout = (h + 2 * padding - kh) // stride + 1
+    wout = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    xp,
+                    (0, i, j, 0),
+                    (b, i + (hout - 1) * stride + 1, j + (wout - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d(cfg: ModelConfig, x: jax.Array, w: jax.Array, stride: int, padding: int):
+    """NHWC conv via im2col + Pallas matmul. w: (kh, kw, Cin, Cout)."""
+    kh, kw, cin, cout = w.shape
+    patches = _im2col(x, kh, kw, stride, padding)
+    b, hout, wout, pk = patches.shape
+    flat = patches.reshape(b * hout * wout, pk)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = matmul(flat, wmat, cfg.block_m, cfg.block_n, cfg.block_k)
+    return out.reshape(b, hout, wout, cout)
+
+
+def group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    b, h, w, c = x.shape
+    g = _gn_groups(c)
+    xg = x.reshape(b, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xn = (xg - mu) / jnp.sqrt(var + GN_EPS)
+    return xn.reshape(b, h, w, c) * scale + bias
+
+
+def _res_block(cfg, p, prefix: str, x: jax.Array, stride: int) -> jax.Array:
+    h = conv2d(cfg, x, p[f"{prefix}.conv1.w"], stride, 1)
+    h = jax.nn.relu(group_norm(h, p[f"{prefix}.gn1.scale"], p[f"{prefix}.gn1.bias"]))
+    h = conv2d(cfg, h, p[f"{prefix}.conv2.w"], 1, 1)
+    h = group_norm(h, p[f"{prefix}.gn2.scale"], p[f"{prefix}.gn2.bias"])
+    if f"{prefix}.proj.w" in p:
+        skip = conv2d(cfg, x, p[f"{prefix}.proj.w"], stride, 0)
+        skip = group_norm(skip, p[f"{prefix}.gnp.scale"], p[f"{prefix}.gnp.bias"])
+    else:
+        skip = x
+    return jax.nn.relu(h + skip)
+
+
+def forward_modules(
+    cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array, lo: int, hi: int
+) -> jax.Array:
+    """Run modules md_lo..md_hi. md8 returns logits."""
+    h = x
+    for module in range(lo, hi + 1):
+        if module == 1:
+            h = conv2d(cfg, h, p["md1.conv.w"], 1, 1)
+            h = jax.nn.relu(group_norm(h, p["md1.gn.scale"], p["md1.gn.bias"]))
+        elif module == 8:
+            pooled = h.mean(axis=(1, 2))  # (B, C)
+            h = matmul(
+                pooled, p["md8.fc.w"], cfg.block_m, cfg.block_n, cfg.block_k
+            ) + p["md8.fc.b"]
+        else:
+            stage = module - 2
+            for b in range(cfg.blocks[stage]):
+                stride = cfg.strides[stage] if b == 0 else 1
+                h = _res_block(cfg, p, f"md{module}.b{b}", h, stride)
+    return h
+
+
+def aux_forward(cfg: ModelConfig, p: Dict[str, jax.Array], z: jax.Array) -> jax.Array:
+    pooled = z.mean(axis=(1, 2))
+    return matmul(
+        pooled, p["aux.fc.w"], cfg.block_m, cfg.block_n, cfg.block_k
+    ) + p["aux.fc.b"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    nll = logz - jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return nll.mean()
+
+
+def correct_count(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+
+
+def distance_correlation(x: jax.Array, z: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """NoPeek privacy regularizer: DCor(raw batch, intermediate batch)."""
+
+    def _dist(a):
+        a = a.reshape(a.shape[0], -1)
+        sq = jnp.sum(a * a, axis=1)
+        d2 = sq[:, None] + sq[None, :] - 2.0 * (a @ a.T)
+        d = jnp.sqrt(jnp.maximum(d2, 0.0) + eps)
+        return d - d.mean(0, keepdims=True) - d.mean(1, keepdims=True) + d.mean()
+
+    ax, az = _dist(x), _dist(z)
+    dcov = jnp.sqrt(jnp.maximum((ax * az).mean(), 0.0) + eps)
+    dvx = jnp.sqrt(jnp.maximum((ax * ax).mean(), 0.0) + eps)
+    dvz = jnp.sqrt(jnp.maximum((az * az).mean(), 0.0) + eps)
+    return dcov / jnp.sqrt(dvx * dvz)
+
+
+# --------------------------------------------------------------------------
+# Optimizers (flat vectors)
+# --------------------------------------------------------------------------
+
+
+def adam_update(p, g, m, v, t, lr):
+    """One Adam step on flat vectors. t is the 1-based step count (f32)."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1**t)
+    vhat = v / (1.0 - ADAM_B2**t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+# --------------------------------------------------------------------------
+# Exported step functions
+# --------------------------------------------------------------------------
+
+
+def make_client_step(cfg: ModelConfig, tier: int, dcor: bool = False):
+    """Client-side local-loss training step for tier `tier`.
+
+    client_vec = client_params (md1..md_tier) || aux_params.
+    Returns (new_client_vec, new_m, new_v, new_t, z, loss).
+    With dcor=True an extra `alpha` scalar input weights the
+    distance-correlation privacy term (paper SS4.4).
+    """
+    spec = build_spec(cfg)
+    csub = spec.sub(1, tier)
+    asp = aux_spec(cfg, tier)
+    pc = csub.total
+
+    def step(client_vec, m, v, t, lr, x, y, *maybe_alpha):
+        alpha = maybe_alpha[0] if dcor else None
+
+        def loss_fn(cv):
+            p = csub.unflatten(cv[:pc])
+            ap = asp.unflatten(cv[pc:])
+            z = forward_modules(cfg, p, x, 1, tier)
+            logits = aux_forward(cfg, ap, z)
+            loss = cross_entropy(logits, y)
+            if dcor:
+                loss = (1.0 - alpha) * loss + alpha * distance_correlation(x, z)
+            return loss, z
+
+        (loss, z), g = jax.value_and_grad(loss_fn, has_aux=True)(client_vec)
+        new_p, new_m, new_v = adam_update(client_vec, g, m, v, t, lr)
+        return new_p, new_m, new_v, t + 1.0, z, loss
+
+    return step
+
+
+def make_server_step(cfg: ModelConfig, tier: int):
+    """Server-side step for tier `tier`: trains md_{tier+1}..md8 on (z, y).
+
+    Returns (new_server_vec, new_m, new_v, new_t, loss, correct).
+    """
+    spec = build_spec(cfg)
+    ssub = spec.sub(tier + 1, 8)
+
+    def step(server_vec, m, v, t, lr, z, y):
+        def loss_fn(sv):
+            p = ssub.unflatten(sv)
+            logits = forward_modules(cfg, p, z, tier + 1, 8)
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(server_vec)
+        new_p, new_m, new_v = adam_update(server_vec, g, m, v, t, lr)
+        return new_p, new_m, new_v, t + 1.0, loss, correct_count(logits, y)
+
+    return step
+
+
+def make_full_step(cfg: ModelConfig, sgd: bool = False):
+    """Whole-model training step (FedAvg/FedYogi/SplitFed baselines)."""
+    spec = build_spec(cfg)
+
+    def step(full_vec, m, v, t, lr, x, y):
+        def loss_fn(fv):
+            p = spec.unflatten(fv)
+            logits = forward_modules(cfg, p, x, 1, 8)
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(full_vec)
+        if sgd:
+            new_p, new_m, new_v = full_vec - lr * g, m, v
+        else:
+            new_p, new_m, new_v = adam_update(full_vec, g, m, v, t, lr)
+        return new_p, new_m, new_v, t + 1.0, loss, correct_count(logits, y)
+
+    return step
+
+
+def make_eval(cfg: ModelConfig):
+    spec = build_spec(cfg)
+
+    def evaluate(full_vec, x, y):
+        p = spec.unflatten(full_vec)
+        logits = forward_modules(cfg, p, x, 1, 8)
+        return cross_entropy(logits, y), correct_count(logits, y)
+
+    return evaluate
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+
+
+def init_flat(cfg: ModelConfig, seed: int = 0) -> jax.Array:
+    """He-normal conv/fc weights, unit GN scales, zero biases — flat vector."""
+    spec = build_spec(cfg)
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for e in spec.entries:
+        key, sub = jax.random.split(key)
+        parts.append(_init_entry(e, sub))
+    return jnp.concatenate(parts)
+
+
+def init_aux_flat(cfg: ModelConfig, tier: int, seed: int = 0) -> jax.Array:
+    sp = aux_spec(cfg, tier)
+    key = jax.random.PRNGKey(seed + 1000 + tier)
+    parts = []
+    for e in sp.entries:
+        key, sub = jax.random.split(key)
+        parts.append(_init_entry(e, sub))
+    return jnp.concatenate(parts)
+
+
+def _init_entry(e: ParamEntry, key) -> jax.Array:
+    if e.name.endswith(".w") and len(e.shape) == 4:  # conv (kh, kw, cin, cout)
+        fan_in = e.shape[0] * e.shape[1] * e.shape[2]
+        std = (2.0 / fan_in) ** 0.5
+        return (jax.random.normal(key, e.shape) * std).reshape(-1)
+    if e.name.endswith(".w") and len(e.shape) == 2:  # fc (cin, cout)
+        std = (2.0 / e.shape[0]) ** 0.5
+        return (jax.random.normal(key, e.shape) * std).reshape(-1)
+    if e.name.endswith(".scale"):
+        return jnp.ones(e.shape).reshape(-1)
+    return jnp.zeros(e.shape).reshape(-1)  # biases

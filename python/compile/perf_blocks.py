@@ -1,0 +1,113 @@
+"""L1 §Perf: structural block-shape analysis for the Pallas matmul kernel.
+
+interpret=True gives CPU-numpy timings that are NOT a TPU proxy, so the
+kernel is optimized *structurally*: for every matmul shape the model
+actually issues (one per conv after im2col, plus the heads), sweep candidate
+(bm, bn, bk) tiles and report
+
+  * VMEM footprint of one grid step (x, y, o tiles) vs the ~12 MiB budget,
+  * MXU utilization (useful MACs / padded native-tile MACs),
+  * padding waste (padded problem MACs / useful MACs),
+  * grid size (pipeline depth — too few steps starves the pipeline).
+
+Usage: python -m compile.perf_blocks [config-name]
+The chosen defaults (128,128,128 clamped per-problem by `_clamp_block`) are
+justified by this table; see EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from compile import model as M
+from compile.kernels.matmul import mxu_utilization, vmem_bytes, VMEM_BUDGET_BYTES
+
+
+def matmul_shapes(cfg: M.ModelConfig):
+    """Every (M, K, N) the model's forward pass feeds the kernel."""
+    shapes = []
+    hw = cfg.image_hw
+    b = cfg.batch
+    # stem
+    shapes.append(("md1.conv", b * hw * hw, 9 * cfg.in_channels, cfg.widths[0]))
+    cin = cfg.widths[0]
+    for stage in range(6):
+        cout = cfg.widths[stage + 1]
+        stride = cfg.strides[stage]
+        hw_out = hw // stride
+        for blk in range(cfg.blocks[stage]):
+            s = stride if blk == 0 else 1
+            shapes.append(
+                (f"md{stage+2}.b{blk}.conv1", b * (hw // s) * (hw // s), 9 * cin, cout)
+            )
+            shapes.append(
+                (f"md{stage+2}.b{blk}.conv2", b * hw_out * hw_out, 9 * cout, cout)
+            )
+            if s != 1 or cin != cout:
+                shapes.append(
+                    (f"md{stage+2}.b{blk}.proj", b * hw_out * hw_out, cin, cout)
+                )
+            cin = cout
+        hw = hw_out
+    shapes.append(("md8.fc", b, cfg.widths[-1], cfg.num_classes))
+    return shapes
+
+
+CANDIDATES = [
+    (128, 128, 128),
+    (256, 128, 64),
+    (64, 64, 64),
+    (512, 128, 32),
+    (128, 128, 512),
+    (32, 32, 32),
+]
+
+
+def pad_up(v, b):
+    return -(-v // b) * b
+
+
+def analyze(cfg: M.ModelConfig):
+    print(f"== L1 block-shape analysis: {cfg.name} (batch {cfg.batch}) ==\n")
+    shapes = matmul_shapes(cfg)
+    total_macs = sum(m * k * n for _, m, k, n in shapes)
+    print(f"{len(shapes)} matmul sites, {total_macs/1e6:.1f} MMACs per forward pass\n")
+
+    print(f"{'block (bm,bn,bk)':<20} {'VMEM KiB':>9} {'MXU util':>9} {'pad waste':>10} {'med grid':>9}")
+    for bm, bn, bk in CANDIDATES:
+        vm = vmem_bytes(bm, bn, bk) / 1024
+        util = mxu_utilization(bm, bn, bk)
+        # padding waste + grid depth across the actual sites (block clamped
+        # the way the kernel wrapper clamps)
+        from compile.kernels.matmul import _clamp_block
+
+        wastes, grids = [], []
+        for _, m, k, n in shapes:
+            cbm, cbn, cbk = _clamp_block(m, bm), _clamp_block(n, bn), _clamp_block(k, bk)
+            padded = pad_up(m, cbm) * pad_up(k, cbk) * pad_up(n, cbn)
+            wastes.append(padded / (m * k * n))
+            grids.append(
+                (pad_up(m, cbm) // cbm) * (pad_up(n, cbn) // cbn) * (pad_up(k, cbk) // cbk)
+            )
+        wastes.sort()
+        grids.sort()
+        med_w = wastes[len(wastes) // 2]
+        med_g = grids[len(grids) // 2]
+        flag = " OVER-BUDGET" if vmem_bytes(bm, bn, bk) > VMEM_BUDGET_BYTES else ""
+        print(
+            f"({bm:>3},{bn:>3},{bk:>3})      {vm:>9.0f} {util:>9.2f} {med_w:>9.2f}x {med_g:>9}{flag}"
+        )
+
+    print("\nper-site detail at the default (128,128,128):")
+    print(f"{'site':<18} {'M':>7} {'K':>5} {'N':>4} {'pad waste':>10}")
+    from compile.kernels.matmul import _clamp_block
+
+    for name, m, k, n in shapes:
+        cbm, cbn, cbk = _clamp_block(m, 128), _clamp_block(n, 128), _clamp_block(k, 128)
+        padded = pad_up(m, cbm) * pad_up(k, cbk) * pad_up(n, cbn)
+        print(f"{name:<18} {m:>7} {k:>5} {n:>4} {padded/(m*k*n):>9.2f}x")
+
+
+if __name__ == "__main__":
+    name = sys.argv[1] if len(sys.argv) > 1 else "resnet56s-c10"
+    analyze(M.CONFIGS[name])

@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas tiled matmul vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes (the system's core numeric contract);
+explicit cases cover block-boundary geometry and the custom-vjp backward
+path (both directions run the kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import (
+    matmul,
+    mxu_utilization,
+    vmem_bytes,
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_M,
+    DEFAULT_BLOCK_N,
+)
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref_over_random_shapes(m, k, n, seed):
+    x = rand(seed, (m, k))
+    y = rand(seed + 1, (k, n))
+    got = matmul(x, y, 32, 32, 32)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_matmul_block_shape_invariance(seed, bm, bn, bk):
+    """The result must not depend on the tiling."""
+    x = rand(seed, (33, 47))
+    y = rand(seed + 1, (47, 29))
+    got = matmul(x, y, bm, bn, bk)
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (8, 8, 8),          # exactly one minimum tile
+        (128, 128, 128),    # exactly one MXU tile
+        (129, 127, 130),    # just past block boundaries
+        (256, 64, 8),       # wide/narrow mixes
+        (3, 500, 2),        # long contraction
+    ],
+)
+def test_matmul_boundary_shapes(m, k, n):
+    x = rand(0, (m, k))
+    y = rand(1, (k, n))
+    np.testing.assert_allclose(
+        matmul(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    x = rand(2, (32, 64), dtype=jnp.bfloat16)
+    y = rand(3, (64, 16), dtype=jnp.bfloat16)
+    got = matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+    want = matmul_ref(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_gradients_match_ref():
+    """custom_vjp backward (two kernel calls) vs autodiff of the oracle."""
+    x = rand(4, (17, 23))
+    y = rand(5, (23, 11))
+
+    def loss_kernel(x, y):
+        return jnp.sum(matmul(x, y, 16, 16, 16) ** 2)
+
+    def loss_ref(x, y):
+        return jnp.sum(matmul_ref(x, y) ** 2)
+
+    gx, gy = jax.grad(loss_kernel, argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(loss_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy, ry, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_under_jit():
+    x = rand(6, (40, 30))
+    y = rand(7, (30, 20))
+    f = jax.jit(lambda a, b: matmul(a, b, 16, 16, 16))
+    np.testing.assert_allclose(f(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_footprint_model():
+    # default MXU tile: 3 * 128*128 * 4B = 196 KiB << 12 MiB budget
+    b = vmem_bytes(DEFAULT_BLOCK_M, DEFAULT_BLOCK_N, DEFAULT_BLOCK_K)
+    assert b == 3 * 128 * 128 * 4
+    assert b < 12 * 1024 * 1024
+
+
+def test_mxu_utilization_model():
+    assert mxu_utilization(128, 128, 128) == 1.0
+    # half-tiles waste issue slots
+    assert abs(mxu_utilization(64, 128, 128) - 0.5) < 1e-12
+    assert mxu_utilization(8, 8, 8) < 0.01

@@ -1,0 +1,277 @@
+"""L2 correctness: model building blocks vs oracles, split/flat-layout
+invariants, and training-step semantics (client/server/full/eval)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["tiny"]
+SPEC = M.build_spec(CFG)
+
+
+def batch(seed=0, cfg=CFG):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (cfg.batch, cfg.image_hw, cfg.image_hw, cfg.in_channels))
+    y = jax.random.randint(ky, (cfg.batch,), 0, cfg.num_classes)
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# building blocks vs oracles
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    cin=st.sampled_from([1, 3, 8]),
+    cout=st.sampled_from([4, 8]),
+    stride=st.sampled_from([1, 2]),
+    hw=st.sampled_from([8, 16]),
+    seed=st.integers(0, 1000),
+)
+def test_conv2d_matches_lax_conv(cin, cout, stride, hw, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (2, hw, hw, cin))
+    w = jax.random.normal(k2, (3, 3, cin, cout)) * 0.2
+    got = M.conv2d(CFG, x, w, stride, 1)
+    want = R.conv2d_ref(x, w, stride, 1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_1x1_projection():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 8, 16)) * 0.2
+    got = M.conv2d(CFG, x, w, 2, 0)
+    want = R.conv2d_ref(x, w, 2, 0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_group_norm_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 16))
+    scale = jnp.linspace(0.5, 1.5, 16)
+    bias = jnp.linspace(-0.2, 0.2, 16)
+    got = M.group_norm(x, scale, bias)
+    want = R.group_norm_ref(x, scale, bias, groups=8)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cross_entropy_matches_ref():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (8, 10))
+    labels = jnp.arange(8) % 10
+    np.testing.assert_allclose(
+        M.cross_entropy(logits, labels),
+        R.cross_entropy_ref(logits, labels),
+        rtol=1e-6,
+    )
+
+
+def test_distance_correlation_properties():
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 6))
+    # perfectly dependent: dcor ~ 1
+    d_same = M.distance_correlation(x, 2.0 * x)
+    assert 0.9 < float(d_same) <= 1.01
+    # independent: small
+    z = jax.random.normal(jax.random.PRNGKey(5), (8, 6))
+    d_ind = float(M.distance_correlation(x, z))
+    assert d_ind < float(d_same)
+    np.testing.assert_allclose(
+        d_ind, float(R.distance_correlation_ref(x, z)), rtol=1e-4
+    )
+
+
+def test_adam_update_matches_ref():
+    p = jnp.array([1.0, -2.0, 3.0])
+    g = jnp.array([0.5, 0.1, -0.4])
+    m = jnp.zeros(3)
+    v = jnp.zeros(3)
+    got = M.adam_update(p, g, m, v, 1.0, 1e-2)
+    want = R.adam_ref(p, g, m, v, 1.0, 1e-2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# flat layout / split invariants
+# --------------------------------------------------------------------------
+
+
+def test_spec_offsets_are_contiguous():
+    off = 0
+    for e in SPEC.entries:
+        assert e.offset == off
+        off += e.size
+    assert off == SPEC.total
+
+
+def test_module_offsets_partition_the_layout():
+    assert len(SPEC.module_offsets) == 9
+    assert SPEC.module_offsets[0] == 0
+    assert SPEC.module_offsets[-1] == SPEC.total
+    assert SPEC.module_offsets == sorted(SPEC.module_offsets)
+
+
+@pytest.mark.parametrize("tier", range(1, M.MAX_TIERS + 1))
+def test_split_forward_equals_full_forward(tier):
+    """client_forward(tier) ∘ server_forward(tier) == full forward."""
+    flat = M.init_flat(CFG, seed=3)
+    x, _ = batch(7)
+    p = SPEC.unflatten(flat)
+    full_logits = M.forward_modules(CFG, p, x, 1, 8)
+
+    cut = SPEC.cut_offset(tier)
+    csub = SPEC.sub(1, tier)
+    ssub = SPEC.sub(tier + 1, 8)
+    z = M.forward_modules(CFG, csub.unflatten(flat[:cut]), x, 1, tier)
+    split_logits = M.forward_modules(CFG, ssub.unflatten(flat[cut:]), z, tier + 1, 8)
+    np.testing.assert_allclose(split_logits, full_logits, rtol=1e-4, atol=1e-5)
+
+
+def test_z_shape_helper_matches_forward():
+    flat = M.init_flat(CFG, seed=1)
+    x, _ = batch(1)
+    for tier in range(1, M.MAX_TIERS + 1):
+        csub = SPEC.sub(1, tier)
+        z = M.forward_modules(
+            CFG, csub.unflatten(flat[: SPEC.cut_offset(tier)]), x, 1, tier
+        )
+        assert z.shape == M.z_shape(CFG, tier), f"tier {tier}"
+
+
+# --------------------------------------------------------------------------
+# training-step semantics
+# --------------------------------------------------------------------------
+
+
+def test_client_step_reduces_local_loss():
+    tier = 3
+    cut = SPEC.cut_offset(tier)
+    flat = M.init_flat(CFG, 0)
+    cvec = jnp.concatenate([flat[:cut], M.init_aux_flat(CFG, tier)])
+    step = jax.jit(M.make_client_step(CFG, tier))
+    x, y = batch(11)
+    m = jnp.zeros_like(cvec)
+    v = jnp.zeros_like(cvec)
+    t = 1.0
+    losses = []
+    for _ in range(6):
+        cvec, m, v, t, z, loss = step(cvec, m, v, t, 5e-3, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert z.shape == M.z_shape(CFG, tier)
+
+
+def test_server_step_reduces_loss_and_counts_correct():
+    tier = 2
+    cut = SPEC.cut_offset(tier)
+    flat = M.init_flat(CFG, 0)
+    x, y = batch(12)
+    csub = SPEC.sub(1, tier)
+    z = M.forward_modules(CFG, csub.unflatten(flat[:cut]), x, 1, tier)
+    svec = flat[cut:]
+    step = jax.jit(M.make_server_step(CFG, tier))
+    m = jnp.zeros_like(svec)
+    v = jnp.zeros_like(svec)
+    t = 1.0
+    losses = []
+    for _ in range(6):
+        svec, m, v, t, loss, correct = step(svec, m, v, t, 5e-3, z, y)
+        losses.append(float(loss))
+        assert 0.0 <= float(correct) <= CFG.batch
+    assert losses[-1] < losses[0], losses
+
+
+def test_full_step_adam_vs_sgd_variants_differ():
+    flat = M.init_flat(CFG, 0)
+    x, y = batch(13)
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    adam = jax.jit(M.make_full_step(CFG, sgd=False))
+    sgd = jax.jit(M.make_full_step(CFG, sgd=True))
+    pa = adam(flat, m, v, 1.0, 1e-3, x, y)[0]
+    ps = sgd(flat, m, v, 1.0, 1e-3, x, y)[0]
+    assert not np.allclose(np.asarray(pa), np.asarray(ps))
+    # SGD variant must be exactly p - lr*g: moments untouched
+    _, ms, vs, *_ = sgd(flat, m, v, 1.0, 1e-3, x, y)
+    assert np.all(np.asarray(ms) == 0.0)
+    assert np.all(np.asarray(vs) == 0.0)
+
+
+def test_eval_matches_full_forward():
+    flat = M.init_flat(CFG, 0)
+    ev = jax.jit(M.make_eval(CFG))
+    kx, ky = jax.random.split(jax.random.PRNGKey(21))
+    x = jax.random.uniform(kx, (CFG.eval_batch, CFG.image_hw, CFG.image_hw, 3))
+    y = jax.random.randint(ky, (CFG.eval_batch,), 0, CFG.num_classes)
+    loss, correct = ev(flat, x, y)
+    logits = M.forward_modules(CFG, SPEC.unflatten(flat), x, 1, 8)
+    np.testing.assert_allclose(loss, R.cross_entropy_ref(logits, y), rtol=1e-5)
+    assert float(correct) == float(
+        jnp.sum(jnp.argmax(logits, -1) == y)
+    )
+
+
+def test_dcor_step_alpha_zero_close_to_plain():
+    tier = 2
+    cut = SPEC.cut_offset(tier)
+    flat = M.init_flat(CFG, 0)
+    cvec = jnp.concatenate([flat[:cut], M.init_aux_flat(CFG, tier)])
+    x, y = batch(14)
+    m = jnp.zeros_like(cvec)
+    v = jnp.zeros_like(cvec)
+    plain = M.make_client_step(CFG, tier)(cvec, m, v, 1.0, 1e-3, x, y)
+    # alpha=0: loss term equals plain loss exactly; update equal up to the
+    # (zero-weighted) dcor gradient path
+    dcor = M.make_client_step(CFG, tier, dcor=True)(
+        cvec, m, v, 1.0, 1e-3, x, y, jnp.float32(0.0)
+    )
+    np.testing.assert_allclose(float(plain[5]), float(dcor[5]), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(plain[0]), np.asarray(dcor[0]), rtol=1e-3, atol=1e-5
+    )
+
+
+def test_dcor_alpha_changes_update():
+    tier = 2
+    cut = SPEC.cut_offset(tier)
+    flat = M.init_flat(CFG, 0)
+    cvec = jnp.concatenate([flat[:cut], M.init_aux_flat(CFG, tier)])
+    x, y = batch(15)
+    m = jnp.zeros_like(cvec)
+    v = jnp.zeros_like(cvec)
+    step = jax.jit(M.make_client_step(CFG, tier, dcor=True))
+    lo = step(cvec, m, v, 1.0, 1e-3, x, y, jnp.float32(0.0))
+    hi = step(cvec, m, v, 1.0, 1e-3, x, y, jnp.float32(0.75))
+    assert not np.allclose(np.asarray(lo[0]), np.asarray(hi[0]))
+    # the dcor-regularized scalar objective differs from plain CE
+    assert abs(float(lo[5]) - float(hi[5])) > 1e-4
+
+
+# --------------------------------------------------------------------------
+# config sanity across the full artifact matrix
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", list(M.CONFIGS))
+def test_all_configs_build_valid_specs(name):
+    cfg = M.CONFIGS[name]
+    spec = M.build_spec(cfg)
+    assert spec.total > 0
+    assert len(spec.module_offsets) == 9
+    for tier in range(1, M.MAX_TIERS + 1):
+        zs = M.z_shape(cfg, tier)
+        assert len(zs) == 4 and all(d > 0 for d in zs)
+        aux = M.aux_spec(cfg, tier)
+        assert aux.total == cfg.widths[tier - 1] * cfg.num_classes + cfg.num_classes
+
+
+def test_paper_configs_have_paper_block_counts():
+    # ResNet-56: 9 blocks/stage-group => our md decomposition uses 3 per md
+    assert M.CONFIGS["resnet56"].blocks == (3, 3, 3, 3, 3, 3)
+    assert M.CONFIGS["resnet110"].blocks == (6, 6, 6, 6, 6, 6)

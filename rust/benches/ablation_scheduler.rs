@@ -1,0 +1,147 @@
+//! Ablation bench: the dynamic tier scheduler vs static assignments vs an
+//! oracle, on a pure-simulation timing model (no PJRT — runs in ms).
+//!
+//! Questions answered (the design choices DESIGN.md calls out):
+//!   1. How much round-makespan does dynamic re-tiering save over the best
+//!      static single tier, across profile pools and timing noise?
+//!   2. How close is the profiler's EMA+ratio estimate to an oracle that
+//!      knows every client's true speed (scheduler regret)?
+//!   3. How does the EMA weight β trade estimate error under noise?
+//!
+//! Run: `cargo bench --bench ablation_scheduler`
+
+use dtfl::coordinator::{schedule, ClientLoad, Profiler, TierProfile};
+use dtfl::runtime::Metadata;
+use dtfl::simulation::{ProfilePool, ServerModel};
+use dtfl::util::bench::section;
+use dtfl::util::Rng64;
+
+/// True per-batch client compute seconds for client k in tier m.
+fn true_time(profile_cpus: f64, ref_profile: &TierProfile, m: usize) -> f64 {
+    ref_profile.client_batch_secs[m - 1] / profile_cpus
+}
+
+/// Simulated round makespan for a tier assignment under the true model.
+fn makespan(
+    meta: &Metadata,
+    ref_profile: &TierProfile,
+    cpus: &[f64],
+    mbps: &[f64],
+    tiers: &[usize],
+    nb: usize,
+    server: &ServerModel,
+) -> f64 {
+    tiers
+        .iter()
+        .enumerate()
+        .map(|(k, &m)| {
+            let t = meta.tier(m);
+            let tc = true_time(cpus[k], ref_profile, m) * nb as f64;
+            let bytes = t.model_transfer_bytes as f64 + nb as f64 * t.z_bytes_per_batch as f64;
+            let tcom = bytes * 8.0 / (mbps[k] * 1e6);
+            let ts = server.secs(ref_profile.server_batch_secs[m - 1]) * nb as f64
+                / server.parallel_factor;
+            (tc + tcom).max(ts + tcom)
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Oracle: exhaustive best per-client tier given TRUE times (min-max).
+fn oracle_tiers(
+    meta: &Metadata,
+    ref_profile: &TierProfile,
+    cpus: &[f64],
+    mbps: &[f64],
+    nb: usize,
+    server: &ServerModel,
+) -> Vec<usize> {
+    let k = cpus.len();
+    let est = |ki: usize, m: usize| {
+        makespan(meta, ref_profile, &cpus[ki..ki + 1], &mbps[ki..ki + 1], &[m], nb, server)
+    };
+    // T_max = max_k min_m, then per-client largest tier under T_max —
+    // same policy as the scheduler but with perfect information.
+    let tmax = (0..k)
+        .map(|ki| (1..=meta.max_tiers).map(|m| est(ki, m)).fold(f64::INFINITY, f64::min))
+        .fold(0.0, f64::max);
+    (0..k)
+        .map(|ki| {
+            (1..=meta.max_tiers)
+                .rev()
+                .find(|&m| est(ki, m) <= tmax + 1e-12)
+                .unwrap_or(1)
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if !dir.join("metadata.json").exists() {
+        eprintln!("tiny artifacts missing; run `make artifacts`");
+        return Ok(());
+    }
+    let meta = Metadata::load(&dir)?;
+    // representative reference profile (measured shape: client grows,
+    // server shrinks with tier)
+    let ref_profile = TierProfile {
+        client_batch_secs: vec![0.0013, 0.0058, 0.0100, 0.0124, 0.0147, 0.0172, 0.0191],
+        server_batch_secs: vec![0.0204, 0.0163, 0.0089, 0.0192, 0.0026, 0.0012, 0.0002],
+    };
+    let server = ServerModel::default();
+    let nb = 4usize;
+    let k = 10usize;
+
+    for pool in [ProfilePool::Paper, ProfilePool::Case1, ProfilePool::Case2] {
+        section(&format!("pool = {} (10 clients, 200 rounds, noise 10%)", pool.name()));
+        let mut rng = Rng64::seed_from_u64(7);
+        let profiles = pool.assign(k, &mut rng);
+        let cpus: Vec<f64> = profiles.iter().map(|p| p.cpus).collect();
+        let mbps: Vec<f64> = profiles.iter().map(|p| p.mbps).collect();
+
+        // oracle + best-static references
+        let oracle = oracle_tiers(&meta, &ref_profile, &cpus, &mbps, nb, &server);
+        let t_oracle = makespan(&meta, &ref_profile, &cpus, &mbps, &oracle, nb, &server);
+        let (best_static, t_static) = (1..=meta.max_tiers)
+            .map(|m| {
+                let tiers = vec![m; k];
+                (m, makespan(&meta, &ref_profile, &cpus, &mbps, &tiers, nb, &server))
+            })
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .unwrap();
+
+        // dynamic scheduler driven by noisy observations over rounds
+        for beta in [0.1, 0.5, 0.9] {
+            let mut prof = Profiler::new(ref_profile.clone(), k, beta);
+            let loads = vec![ClientLoad { n_batches: nb, participating: true }; k];
+            let mut total = 0.0;
+            let mut rounds = 0usize;
+            let mut tiers: Vec<usize> = vec![1; k];
+            for _ in 0..200 {
+                let s = schedule(&meta, &prof, &server, &loads, meta.max_tiers);
+                for a in &s.assignments {
+                    tiers[a.client_id] = a.tier;
+                }
+                let t = makespan(&meta, &ref_profile, &cpus, &mbps, &tiers, nb, &server);
+                total += t;
+                rounds += 1;
+                // noisy observation of each client's true per-batch time
+                for ki in 0..k {
+                    let obs = true_time(cpus[ki], &ref_profile, tiers[ki])
+                        * (1.0 + rng.gen_f64(-0.1, 0.1));
+                    prof.observe(ki, tiers[ki], obs, mbps[ki] * 1e6 / 8.0);
+                }
+            }
+            let avg = total / rounds as f64;
+            println!(
+                "beta={beta:<4}  dynamic avg makespan {:>7.3}s | oracle {:>7.3}s (regret {:+5.1}%) | best static (tier {best_static}) {:>7.3}s ({:+5.1}%)",
+                avg,
+                t_oracle,
+                100.0 * (avg - t_oracle) / t_oracle,
+                t_static,
+                100.0 * (avg - t_static) / t_static,
+            );
+        }
+    }
+    println!("\n(negative % vs static = dynamic wins; regret vs oracle should be small)");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! L3 hot-path micro-benchmarks (the §Perf targets):
+//!   * flat-layout aggregation (O(K·P) FMAs — the per-round CPU hot loop)
+//!   * dynamic tier scheduling (O(K·M) estimates)
+//!   * literal construction / extraction (FFI boundary per step)
+//!   * batch assembly, patch shuffling, dataset generation
+//!
+//! Run: `cargo bench --bench micro_hotpath`
+
+use std::time::Duration;
+
+use dtfl::coordinator::{aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile};
+use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
+use dtfl::runtime::{literal as lit, Metadata};
+use dtfl::simulation::ServerModel;
+use dtfl::util::bench::{bench, section};
+use dtfl::util::Rng64;
+
+fn tiny_meta() -> Option<Metadata> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    Metadata::load(&d).ok()
+}
+
+fn main() {
+    let budget = Duration::from_secs(3);
+
+    // ---------------- aggregation ----------------
+    if let Some(meta) = tiny_meta() {
+        section("aggregation (step ⑤): K clients × P params");
+        let prev = GlobalModel::new(
+            vec![0.1; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.1; t.aux_len]).collect(),
+            &meta,
+        );
+        for k in [10usize, 50, 200] {
+            let updates: Vec<ClientUpdate> = (0..k)
+                .map(|i| {
+                    let tier = 1 + i % meta.max_tiers;
+                    let t = meta.tier(tier);
+                    ClientUpdate {
+                        client_id: i,
+                        tier,
+                        weight: 100.0,
+                        client_vec: vec![0.5; t.client_vec_len],
+                        server_vec: vec![0.5; t.server_vec_len],
+                    }
+                })
+                .collect();
+            bench(
+                &format!("aggregate K={k} P={}", meta.total_params),
+                200,
+                budget,
+                || {
+                    let g = aggregate(&meta, &prev, &updates).unwrap();
+                    std::hint::black_box(g.flat[0]);
+                },
+            );
+        }
+
+        // ---------------- scheduler ----------------
+        section("dynamic tier scheduler (Algorithm 1, lines 21–35)");
+        let profile = TierProfile {
+            client_batch_secs: (0..meta.max_tiers).map(|i| 0.1 + 0.05 * i as f64).collect(),
+            server_batch_secs: (0..meta.max_tiers).map(|i| 0.4 - 0.05 * i as f64).collect(),
+        };
+        for k in [10usize, 200, 2000] {
+            let mut prof = Profiler::new(profile.clone(), k, 0.5);
+            let mut rng = Rng64::seed_from_u64(1);
+            for i in 0..k {
+                prof.observe(i, 1 + i % meta.max_tiers, rng.gen_f64(0.01, 2.0), 1e6);
+            }
+            let loads = vec![ClientLoad { n_batches: 4, participating: true }; k];
+            let server = ServerModel::default();
+            bench(&format!("schedule K={k} M={}", meta.max_tiers), 500, budget, || {
+                let s = schedule(&meta, &prof, &server, &loads, meta.max_tiers);
+                std::hint::black_box(s.t_max);
+            });
+        }
+    } else {
+        eprintln!("tiny artifacts missing — aggregation/scheduler benches skipped");
+    }
+
+    // ---------------- literal conversions ----------------
+    section("literal conversions (FFI boundary, per step)");
+    for n in [44_370usize, 400_000] {
+        let data = vec![0.5f32; n];
+        bench(&format!("f32_vec -> literal n={n}"), 500, budget, || {
+            let l = lit::f32_vec(&data).unwrap();
+            std::hint::black_box(l.element_count());
+        });
+        let l = lit::f32_vec(&data).unwrap();
+        let mut dst = vec![0.0f32; n];
+        bench(&format!("literal -> buffer  n={n}"), 500, budget, || {
+            lit::copy_to_f32(&l, &mut dst).unwrap();
+            std::hint::black_box(dst[0]);
+        });
+    }
+
+    // ---------------- data pipeline ----------------
+    section("data pipeline");
+    let spec = DatasetSpec::tiny(512, 64);
+    bench("generate_train 512x16x16x3", 20, budget, || {
+        let d = generate_train(&spec);
+        std::hint::black_box(d.images.len());
+    });
+    let ds = generate_train(&spec);
+    let idx: Vec<usize> = (0..64).collect();
+    let b = Batcher::new(&ds, &idx, 8);
+    bench("batch assembly 8x16x16x3", 2000, budget, || {
+        let bt = b.batch(0).unwrap();
+        std::hint::black_box(bt.size);
+    });
+    let mut z = vec![0.5f32; 8 * 16 * 16 * 8];
+    bench("patch_shuffle 8x16x16x8 p=4", 2000, budget, || {
+        patch_shuffle(&mut z, &[8, 16, 16, 8], 4, 9);
+        std::hint::black_box(z[0]);
+    });
+}

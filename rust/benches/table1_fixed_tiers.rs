@@ -1,0 +1,75 @@
+//! Table 1 bench (fast estimator form): per-tier end-to-end round time for
+//! 10 clients all pinned to the same tier, under both profile cases.
+//!
+//! Unlike `examples/table1.rs` (which trains to a target accuracy), this
+//! bench runs TWO real rounds per (case, tier) cell and reports the
+//! simulated round makespan decomposition — enough to regenerate the
+//! table's *shape* (which tier wins per case) in seconds.
+//!
+//! Run: `cargo bench --bench table1_fixed_tiers`
+
+use dtfl::harness::RunSpec;
+use dtfl::simulation::ProfilePool;
+use dtfl::util::bench::section;
+
+fn main() -> anyhow::Result<()> {
+    let art = std::env::var("DTFL_BENCH_ARTIFACT").unwrap_or_else(|_| "tiny".into());
+    let dataset = if art == "tiny" { "tiny" } else { "cifar10" };
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&art);
+    if !root.join("metadata.json").exists() {
+        eprintln!("artifacts missing at {}; run `make artifacts` first", root.display());
+        return Ok(());
+    }
+
+    // one shared runtime: artifacts compile once for the whole bench
+    let rt = RunSpec { artifact: art.clone(), ..Default::default() }.open_runtime()?;
+    for (case, pool) in [("case1", ProfilePool::Case1), ("case2", ProfilePool::Case2)] {
+        section(&format!("Table 1 {case}: per-round makespan by fixed tier ({art})"));
+        println!("tier    compute(s)  comm(s)   round makespan(s)");
+        let mut best = (0usize, f64::INFINITY);
+        for tier in 1..=7usize {
+            let spec = RunSpec {
+                artifact: art.clone(),
+                dataset: dataset.into(),
+                method: "static".into(),
+                static_tier: Some(tier),
+                pool,
+                rounds: 2,
+                eval_every: 100, // skip eval; timing only
+                // full-ish local epochs so the z-upload vs model-transfer
+                // tradeoff surfaces (the paper's Table 1 crossover)
+                batch_cap: Some(8),
+                ..Default::default()
+            };
+            let (_, records) = spec.run_shared(rt.clone())?;
+            // second round avoids first-execution compile noise
+            let r = records.last().unwrap();
+            println!(
+                "{:>4}  {:>10.2}  {:>8.2}  {:>14.2}",
+                tier, r.makespan_compute, r.makespan_comm, r.makespan
+            );
+            if r.makespan < best.1 {
+                best = (tier, r.makespan);
+            }
+        }
+        // FedAvg row
+        let spec = RunSpec {
+            artifact: art.clone(),
+            dataset: dataset.into(),
+            method: "fedavg".into(),
+            pool,
+            rounds: 2,
+            eval_every: 100,
+            batch_cap: Some(8),
+            ..Default::default()
+        };
+        let (_, records) = spec.run_shared(rt.clone())?;
+        let r = records.last().unwrap();
+        println!(
+            "{:>4}  {:>10.2}  {:>8.2}  {:>14.2}",
+            "FA", r.makespan_compute, r.makespan_comm, r.makespan
+        );
+        println!("--> best fixed tier for {case}: tier {} ({:.2}s/round)", best.0, best.1);
+    }
+    Ok(())
+}

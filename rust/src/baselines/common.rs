@@ -1,0 +1,58 @@
+//! Shared helpers for whole-model baselines (FedAvg / FedYogi / SplitFed).
+
+use anyhow::Result;
+
+use crate::fed::RoundEnv;
+use crate::runtime::{StepEngine, TrainState};
+
+/// Run Ñ_k whole-model local steps for client k starting from `global`.
+/// Returns (updated params, host compute seconds, last batch loss).
+pub fn local_full_train(
+    env: &RoundEnv,
+    k: usize,
+    global: &[f32],
+    sgd: bool,
+) -> Result<(Vec<f32>, f64, f64)> {
+    let engine = StepEngine::new(env.rt);
+    let batch = env.rt.meta.batch;
+    let nb = env.n_batches(k, batch);
+    let shard = &env.partition.client_indices[k];
+    let batcher = crate::data::Batcher::new(env.train, shard, batch);
+
+    let mut state = TrainState::new(global.to_vec());
+    let mut host = 0.0f64;
+    let mut loss = 0.0f64;
+    for bi in 0..nb {
+        let bt = batcher.batch(bi % batcher.num_batches().max(1))?;
+        let out = engine.full_step(&mut state, env.lr, &bt.x, &bt.y, sgd)?;
+        host += out.host_secs;
+        loss = out.loss as f64;
+    }
+    Ok((state.params, host, loss))
+}
+
+/// Weighted average of full-model parameter vectors into `out`.
+pub fn weighted_average(updates: &[(Vec<f32>, f64)], out: &mut [f32]) {
+    let total: f64 = updates.iter().map(|(_, w)| *w).sum();
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for (params, w) in updates {
+        let wn = (*w / total) as f32;
+        for (o, &p) in out.iter_mut().zip(params.iter()) {
+            *o += wn * p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_respects_weights() {
+        let ups = vec![(vec![1.0f32, 1.0], 3.0), (vec![5.0f32, 5.0], 1.0)];
+        let mut out = vec![0.0f32; 2];
+        weighted_average(&ups, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        assert!((out[1] - 2.0).abs() < 1e-6);
+    }
+}

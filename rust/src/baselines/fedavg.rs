@@ -1,0 +1,60 @@
+//! FedAvg (McMahan et al., 2017): every client trains the **whole** global
+//! model locally; the server averages parameters weighted by dataset size.
+//!
+//! Timing model: client compute = full-model step time scaled by the
+//! client's CPU share; communication = full model download + upload; no
+//! server-side training (T^s = 0). This is the configuration whose straggler
+//! behaviour DTFL's Table 1/3 rows are compared against.
+
+use anyhow::Result;
+
+use crate::fed::{Method, RoundEnv, RoundOutcome};
+use crate::simulation::ClientRoundTime;
+
+use super::common::{local_full_train, weighted_average};
+
+pub struct FedAvg {
+    pub global: Vec<f32>,
+}
+
+impl FedAvg {
+    pub fn new(global: Vec<f32>) -> Self {
+        Self { global }
+    }
+}
+
+impl Method for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let model_bytes = 2 * self.global.len() * 4; // download + upload
+        let mut updates = Vec::with_capacity(env.participants.len());
+        let mut times = Vec::with_capacity(env.participants.len());
+        let mut loss_sum = 0.0f64;
+
+        for &k in env.participants {
+            let (params, host, loss) = local_full_train(env, k, &self.global, false)?;
+            let profile = env.profiles[k];
+            times.push(ClientRoundTime {
+                compute: profile.compute_secs(host),
+                comm: profile.comm_secs(model_bytes),
+                server: 0.0,
+            });
+            loss_sum += loss;
+            updates.push((params, env.partition.size(k).max(1) as f64));
+        }
+
+        weighted_average(&updates, &mut self.global);
+        Ok(RoundOutcome {
+            times,
+            train_loss: loss_sum / env.participants.len().max(1) as f64,
+            tiers: vec![],
+        })
+    }
+
+    fn global_params(&self) -> &[f32] {
+        &self.global
+    }
+}

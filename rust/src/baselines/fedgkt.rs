@@ -1,0 +1,117 @@
+//! FedGKT (He et al., 2020 "Group Knowledge Transfer") — approximation.
+//!
+//! GKT trains a small fixed model on every client and periodically
+//! transfers knowledge to a large server model by distillation on uploaded
+//! features. We approximate it with the machinery we have (documented in
+//! DESIGN.md §Substitutions):
+//!
+//! * clients permanently train the tier-2 client-side model + aux head via
+//!   local-loss steps (small fixed client model, like GKT's edge CNN);
+//! * the server trains the tier-2 server-side model on uploaded (z, y) for
+//!   `server_epochs` passes (GKT's asynchronous server distillation);
+//! * per-round transfer adds the soft-label exchange (B × classes floats
+//!   per batch, both directions).
+//!
+//! This preserves GKT's systems profile — tiny client compute, heavy server
+//! compute, feature+logit traffic every round — and its slower convergence
+//! relative to DTFL (client model never grows).
+
+use anyhow::Result;
+
+use crate::coordinator::{aggregate, ClientUpdate, GlobalModel};
+use crate::fed::{Method, RoundEnv, RoundOutcome};
+use crate::runtime::{Runtime, StepEngine, TrainState};
+use crate::simulation::ClientRoundTime;
+
+pub struct FedGkt {
+    pub global: GlobalModel,
+    /// Fixed split (GKT's edge model ≈ our tier-2 client side).
+    pub tier: usize,
+    /// Server-side distillation passes per round.
+    pub server_epochs: usize,
+}
+
+impl FedGkt {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(Self {
+            global: crate::coordinator::load_initial_model(rt)?,
+            tier: 2,
+            server_epochs: 2,
+        })
+    }
+}
+
+impl Method for FedGkt {
+    fn name(&self) -> &'static str {
+        "fedgkt"
+    }
+
+    fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let rt = env.rt;
+        let meta = &rt.meta;
+        let engine = StepEngine::new(rt);
+        let batch = meta.batch;
+        let tier = self.tier;
+        let tmeta = meta.tier(tier);
+
+        let mut updates = Vec::with_capacity(env.participants.len());
+        let mut times = Vec::with_capacity(env.participants.len());
+        let mut loss_sum = 0.0f64;
+
+        for &k in env.participants {
+            let profile = env.profiles[k];
+            let nb = env.n_batches(k, batch);
+            let shard = &env.partition.client_indices[k];
+            let batcher = crate::data::Batcher::new(env.train, shard, batch);
+
+            let mut cstate = TrainState::new(self.global.client_vec(meta, tier));
+            let mut sstate = TrainState::new(self.global.server_vec(meta, tier));
+
+            let mut host_client = 0.0f64;
+            let mut host_server = 0.0f64;
+            let mut zs = Vec::with_capacity(nb);
+            for bi in 0..nb {
+                let bt = batcher.batch(bi % batcher.num_batches().max(1))?;
+                let out = engine.client_step(tier, &mut cstate, env.lr, &bt.x, &bt.y, None)?;
+                host_client += out.host_secs;
+                loss_sum += out.loss as f64 / nb as f64;
+                zs.push((out.z, bt.y));
+            }
+            // server distillation: multiple passes over the uploaded features
+            for _ in 0..self.server_epochs {
+                for (z, y) in &zs {
+                    let out = engine.server_step(tier, &mut sstate, env.lr, z, y)?;
+                    host_server += out.host_secs;
+                }
+            }
+
+            // timing: features up + soft labels both ways + client model sync
+            let logit_bytes = batch * meta.num_classes * 4;
+            let bytes = tmeta.model_transfer_bytes
+                + nb * (tmeta.z_bytes_per_batch + 2 * logit_bytes);
+            let sim_c = profile.compute_secs(host_client);
+            let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
+            let sim_com = profile.comm_secs(bytes);
+            times.push(ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s });
+
+            updates.push(ClientUpdate {
+                client_id: k,
+                tier,
+                weight: env.partition.size(k).max(1) as f64,
+                client_vec: cstate.params,
+                server_vec: sstate.params,
+            });
+        }
+
+        self.global = aggregate(meta, &self.global, &updates)?;
+        Ok(RoundOutcome {
+            times,
+            train_loss: loss_sum / env.participants.len().max(1) as f64,
+            tiers: vec![tier; env.participants.len()],
+        })
+    }
+
+    fn global_params(&self) -> &[f32] {
+        &self.global.flat
+    }
+}

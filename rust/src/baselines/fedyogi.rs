@@ -1,0 +1,124 @@
+//! FedYogi (Reddi et al., 2020 "Adaptive Federated Optimization").
+//!
+//! Clients compute pseudo-gradients with plain local SGD (the
+//! `full_step_sgd` artifact); the server applies the Yogi adaptive update
+//! to the aggregated pseudo-gradient:
+//!
+//!   Δ_t  = avg_k (w_k − w)            (pseudo-gradient)
+//!   m_t  = β1 m + (1−β1) Δ_t
+//!   v_t  = v − (1−β2) Δ_t² sign(v − Δ_t²)
+//!   w   += η_s · m_t / (√v_t + τ)
+//!
+//! Timing model is identical to FedAvg (whole model down/up + full local
+//! compute) — FedYogi changes the optimizer, not the systems profile.
+
+use anyhow::Result;
+
+use crate::fed::{Method, RoundEnv, RoundOutcome};
+use crate::simulation::ClientRoundTime;
+
+use super::common::{local_full_train, weighted_average};
+
+pub struct FedYogi {
+    pub global: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Server learning rate η_s.
+    pub server_lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub tau: f32,
+}
+
+impl FedYogi {
+    pub fn new(global: Vec<f32>) -> Self {
+        let n = global.len();
+        Self {
+            global,
+            m: vec![0.0; n],
+            // Reddi et al. initialize v to tau^2-scale values
+            v: vec![1e-6; n],
+            server_lr: 0.01,
+            beta1: 0.9,
+            beta2: 0.99,
+            tau: 1e-3,
+        }
+    }
+}
+
+impl Method for FedYogi {
+    fn name(&self) -> &'static str {
+        "fedyogi"
+    }
+
+    fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let model_bytes = 2 * self.global.len() * 4;
+        let mut updates = Vec::with_capacity(env.participants.len());
+        let mut times = Vec::with_capacity(env.participants.len());
+        let mut loss_sum = 0.0f64;
+
+        for &k in env.participants {
+            let (params, host, loss) = local_full_train(env, k, &self.global, true)?;
+            let profile = env.profiles[k];
+            times.push(ClientRoundTime {
+                compute: profile.compute_secs(host),
+                comm: profile.comm_secs(model_bytes),
+                server: 0.0,
+            });
+            loss_sum += loss;
+            updates.push((params, env.partition.size(k).max(1) as f64));
+        }
+
+        // aggregated client model → pseudo-gradient
+        let mut avg = vec![0.0f32; self.global.len()];
+        weighted_average(&updates, &mut avg);
+
+        for i in 0..self.global.len() {
+            let delta = avg[i] - self.global[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * delta;
+            let d2 = delta * delta;
+            self.v[i] -= (1.0 - self.beta2) * d2 * (self.v[i] - d2).signum();
+            self.global[i] += self.server_lr * self.m[i] / (self.v[i].max(0.0).sqrt() + self.tau);
+        }
+
+        Ok(RoundOutcome {
+            times,
+            train_loss: loss_sum / env.participants.len().max(1) as f64,
+            tiers: vec![],
+        })
+    }
+
+    fn global_params(&self) -> &[f32] {
+        &self.global
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yogi_moves_toward_client_average() {
+        // pure-update check without PJRT: drive the optimizer equations
+        let mut y = FedYogi::new(vec![0.0f32; 4]);
+        let target = [1.0f32, -1.0, 0.5, 0.0];
+        for _ in 0..200 {
+            let avg: Vec<f32> = target.to_vec();
+            for i in 0..4 {
+                let delta = avg[i] - y.global[i];
+                y.m[i] = y.beta1 * y.m[i] + (1.0 - y.beta1) * delta;
+                let d2 = delta * delta;
+                y.v[i] -= (1.0 - y.beta2) * d2 * (y.v[i] - d2).signum();
+                y.global[i] += y.server_lr * y.m[i] / (y.v[i].max(0.0).sqrt() + y.tau);
+            }
+        }
+        for i in 0..3 {
+            assert!(
+                (y.global[i] - target[i]).abs() < 0.2,
+                "dim {i}: {} vs {}",
+                y.global[i],
+                target[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Baseline federated methods the paper compares DTFL against (Table 3):
+//! FedAvg, SplitFed, FedYogi, FedGKT. The static single-tier ablation
+//! (Table 1 / TiFL-style) is `coordinator::Dtfl` with
+//! `DtflOptions::static_tier`.
+
+pub mod common;
+pub mod fedavg;
+pub mod fedgkt;
+pub mod fedyogi;
+pub mod splitfed;
+
+pub use fedavg::FedAvg;
+pub use fedgkt::FedGkt;
+pub use fedyogi::FedYogi;
+pub use splitfed::SplitFed;

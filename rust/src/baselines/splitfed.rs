@@ -1,0 +1,101 @@
+//! SplitFed / SFL-V1 (Thapa et al., 2022): split learning with federated
+//! aggregation, split after module md2 (as in the paper's experiments).
+//!
+//! Parameter math: true split learning backpropagates the exact end-to-end
+//! gradient through the cut, so its updates equal whole-model local SGD —
+//! we therefore run the `full_step` artifact for correctness and model the
+//! *systems* behaviour (the paper's complaint about SFL) in the timing:
+//!
+//! per batch, **sequentially** (the client stalls on the server):
+//!   client forward  →  upload z  →  server fwd+bwd  →  download ∂L/∂z
+//!   →  client backward
+//!
+//! so per-client round time is the *sum* of compute and per-batch
+//! communication, not the max — this synchronization stall is exactly what
+//! DTFL's local-loss training removes.
+
+use anyhow::Result;
+
+use crate::fed::{Method, RoundEnv, RoundOutcome};
+use crate::simulation::ClientRoundTime;
+
+use super::common::{local_full_train, weighted_average};
+
+/// Fraction of a training step spent in the forward pass (fwd ≈ ⅓ of
+/// fwd+bwd for conv nets; used to split measured full-step time into the
+/// client/server sequential phases).
+const FWD_FRACTION: f64 = 1.0 / 3.0;
+
+pub struct SplitFed {
+    pub global: Vec<f32>,
+    /// Cut module (paper: md2 ⇒ tier-2 geometry).
+    pub cut_tier: usize,
+}
+
+impl SplitFed {
+    pub fn new(global: Vec<f32>) -> Self {
+        Self { global, cut_tier: 2 }
+    }
+}
+
+impl Method for SplitFed {
+    fn name(&self) -> &'static str {
+        "splitfed"
+    }
+
+    fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let meta = &env.rt.meta;
+        let t = meta.tier(self.cut_tier);
+        let batch = meta.batch;
+        // client-side share of the full model's compute, by parameter ratio
+        // weighted toward early layers' activation cost: use profiled split
+        // fraction = client params / total as a proxy, floored at 15%.
+        let client_frac =
+            (t.client_param_len as f64 / meta.total_params as f64).max(0.15);
+
+        let mut updates = Vec::with_capacity(env.participants.len());
+        let mut times = Vec::with_capacity(env.participants.len());
+        let mut loss_sum = 0.0f64;
+
+        for &k in env.participants {
+            let (params, host, loss) = local_full_train(env, k, &self.global, false)?;
+            let profile = env.profiles[k];
+            let nb = env.n_batches(k, batch) as f64;
+
+            // decompose measured whole-step host time
+            let host_client = host * client_frac;
+            let host_server = host * (1.0 - client_frac);
+
+            // sequential pipeline: client fwd ; z up ; server fwd+bwd ;
+            // grad(z) down ; client bwd  — per batch
+            let t_client_fwd = profile.compute_secs(host_client * FWD_FRACTION);
+            let t_client_bwd = profile.compute_secs(host_client * (1.0 - FWD_FRACTION));
+            let t_server = env.server.secs(host_server);
+            // z and grad(z) have identical size; model down+up once per round
+            let act_bytes = 2.0 * t.z_bytes_per_batch as f64 * nb;
+            let model_bytes = t.model_transfer_bytes as f64;
+            let t_comm = profile.comm_secs((act_bytes + model_bytes) as usize);
+
+            // everything serial: Eq. (5)'s max degenerates to a sum
+            let total_compute = t_client_fwd + t_client_bwd + t_server;
+            times.push(ClientRoundTime {
+                compute: total_compute,
+                comm: t_comm,
+                server: 0.0, // folded into the serial compute path
+            });
+            loss_sum += loss;
+            updates.push((params, env.partition.size(k).max(1) as f64));
+        }
+
+        weighted_average(&updates, &mut self.global);
+        Ok(RoundOutcome {
+            times,
+            train_loss: loss_sum / env.participants.len().max(1) as f64,
+            tiers: vec![self.cut_tier; env.participants.len()],
+        })
+    }
+
+    fn global_params(&self) -> &[f32] {
+        &self.global
+    }
+}

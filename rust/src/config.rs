@@ -1,0 +1,330 @@
+//! Experiment configuration (TOML). Every table/figure harness and the CLI
+//! launcher drive runs through `ExperimentConfig`; see `configs/*.toml`.
+//!
+//! Parsed by the in-tree mini-TOML reader (`util::toml_mini`) — the offline
+//! testbed has no serde/toml crates.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::simulation::ProfilePool;
+use crate::util::toml_mini::TomlDoc;
+
+fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("DTFL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    /// Artifact set name under the artifacts dir (e.g. "resnet56s-c10").
+    pub artifact: String,
+    /// Artifacts root; defaults to $DTFL_ARTIFACTS or ./artifacts.
+    pub artifacts_dir: PathBuf,
+}
+
+impl ModelCfg {
+    pub fn artifact_path(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.artifact)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DataCfg {
+    /// Dataset spec name: cifar10 | cifar100 | cinic10 | ham10000 | tiny.
+    pub spec: String,
+    pub train_total: usize,
+    pub test_total: usize,
+    /// Dirichlet label-skew non-IID (Appendix A.4) vs IID.
+    pub non_iid: bool,
+    pub dirichlet_alpha: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ClientsCfg {
+    pub count: usize,
+    pub profile_pool: ProfilePool,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunCfg {
+    /// dtfl | static | fedavg | splitfed | fedyogi | fedgkt
+    pub method: String,
+    pub rounds: usize,
+    /// Stop early once test accuracy reaches this (paper's time-to-target).
+    pub target_accuracy: Option<f64>,
+    pub lr: f32,
+    /// Plateau LR schedule: multiply by lr_decay after lr_patience evals
+    /// without improvement (paper: ×0.9 on plateau).
+    pub lr_decay: f32,
+    pub lr_patience: usize,
+    /// Fraction of clients sampled per round (Table 4 uses 0.1).
+    pub sample_frac: f64,
+    pub eval_every: usize,
+    /// Cap Ñ_k per round (testbed wall-clock control; None = full epoch).
+    pub batch_cap: Option<usize>,
+    /// Number of tiers M available to the scheduler.
+    pub max_tiers: usize,
+    /// Pin all clients to one tier ("static" method / Table 1 rows).
+    pub static_tier: Option<usize>,
+    pub ema_beta: f64,
+    pub timing_noise: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimCfg {
+    /// Server speed relative to the 1-CPU reference host.
+    pub server_speedup: f64,
+    /// Concurrent per-client server-side executors.
+    pub server_parallel: f64,
+    /// Re-draw profiles for `switch_frac` of clients every `switch_every`
+    /// rounds (0 disables; Table 3 uses 50/0.3, Fig 3 uses 20).
+    pub profile_switch_every: usize,
+    pub profile_switch_frac: f64,
+}
+
+impl Default for SimCfg {
+    fn default() -> Self {
+        Self {
+            server_speedup: 8.0,
+            server_parallel: 4.0,
+            profile_switch_every: 0,
+            profile_switch_frac: 0.0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PrivacyCfgToml {
+    /// Distance-correlation weight α (0 disables the dcor artifact path).
+    pub dcor_alpha: Option<f32>,
+    /// Patch size for patch shuffling of uploaded activations.
+    pub patch_shuffle: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct OutputCfg {
+    /// Directory for CSV outputs (curves, per-round records).
+    pub dir: PathBuf,
+    /// Basename for this run's files; defaults to "<method>-<artifact>".
+    pub name: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub model: ModelCfg,
+    pub data: DataCfg,
+    pub clients: ClientsCfg,
+    pub run: RunCfg,
+    pub sim: SimCfg,
+    pub privacy: PrivacyCfgToml,
+    pub output: Option<OutputCfg>,
+}
+
+impl ExperimentConfig {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+
+        let model = {
+            let s = doc.section("model");
+            ModelCfg {
+                artifact: s.req_str("artifact")?,
+                artifacts_dir: s
+                    .opt_str("artifacts_dir")?
+                    .map(PathBuf::from)
+                    .unwrap_or_else(default_artifacts_dir),
+            }
+        };
+        let data = {
+            let s = doc.section("data");
+            DataCfg {
+                spec: s.req_str("spec")?,
+                train_total: s.usize_or("train_total", 2000)?,
+                test_total: s.usize_or("test_total", 512)?,
+                non_iid: s.bool_or("non_iid", false)?,
+                dirichlet_alpha: s.f64_or("dirichlet_alpha", 0.5)?,
+            }
+        };
+        let clients = {
+            let s = doc.section("clients");
+            let pool_name = s.str_or("profile_pool", "paper")?;
+            ClientsCfg {
+                count: s.usize_or("count", 10)?,
+                profile_pool: ProfilePool::from_name(&pool_name)
+                    .ok_or_else(|| anyhow!("unknown profile_pool '{pool_name}'"))?,
+                seed: s.u64_or("seed", 17)?,
+            }
+        };
+        let run = {
+            let s = doc.section("run");
+            RunCfg {
+                method: s.req_str("method")?,
+                rounds: s.usize_or("rounds", 50)?,
+                target_accuracy: s.opt_f64("target_accuracy")?,
+                lr: s.f64_or("lr", 1e-3)? as f32,
+                lr_decay: s.f64_or("lr_decay", 0.9)? as f32,
+                lr_patience: s.usize_or("lr_patience", 5)?,
+                sample_frac: s.f64_or("sample_frac", 1.0)?,
+                eval_every: s.usize_or("eval_every", 1)?.max(1),
+                batch_cap: s.opt_usize("batch_cap")?,
+                max_tiers: s.usize_or("max_tiers", 7)?,
+                static_tier: s.opt_usize("static_tier")?,
+                ema_beta: s.f64_or("ema_beta", 0.5)?,
+                timing_noise: s.f64_or("timing_noise", 0.05)?,
+            }
+        };
+        let sim = {
+            let s = doc.section("sim");
+            SimCfg {
+                server_speedup: s.f64_or("server_speedup", 8.0)?,
+                server_parallel: s.f64_or("server_parallel", 4.0)?,
+                profile_switch_every: s.usize_or("profile_switch_every", 0)?,
+                profile_switch_frac: s.f64_or("profile_switch_frac", 0.0)?,
+            }
+        };
+        let privacy = {
+            let s = doc.section("privacy");
+            PrivacyCfgToml {
+                dcor_alpha: s.opt_f64("dcor_alpha")?.map(|v| v as f32),
+                patch_shuffle: s.opt_usize("patch_shuffle")?,
+            }
+        };
+        let output = if doc.has_section("output") {
+            let s = doc.section("output");
+            Some(OutputCfg {
+                dir: PathBuf::from(s.str_or("dir", "results")?),
+                name: s.opt_str("name")?,
+            })
+        } else {
+            None
+        };
+
+        let cfg = Self { model, data, clients, run, sim, privacy, output };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.clients.count > 0, "clients.count must be > 0");
+        anyhow::ensure!(
+            self.run.sample_frac > 0.0 && self.run.sample_frac <= 1.0,
+            "run.sample_frac must be in (0, 1]"
+        );
+        anyhow::ensure!(self.run.rounds > 0, "run.rounds must be > 0");
+        anyhow::ensure!(
+            matches!(
+                self.run.method.as_str(),
+                "dtfl" | "static" | "fedavg" | "splitfed" | "fedyogi" | "fedgkt"
+            ),
+            "unknown method '{}'",
+            self.run.method
+        );
+        if self.run.method == "static" {
+            anyhow::ensure!(
+                self.run.static_tier.is_some(),
+                "method 'static' requires run.static_tier"
+            );
+        }
+        if let Some(a) = self.privacy.dcor_alpha {
+            anyhow::ensure!((0.0..=1.0).contains(&a), "dcor_alpha must be in [0,1]");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"
+        [model]
+        artifact = "tiny"
+        [data]
+        spec = "tiny"
+        [run]
+        method = "dtfl"
+    "#;
+
+    #[test]
+    fn minimal_config_parses_with_defaults() {
+        let cfg = ExperimentConfig::parse(MINIMAL).unwrap();
+        assert_eq!(cfg.clients.count, 10);
+        assert_eq!(cfg.run.rounds, 50);
+        assert_eq!(cfg.run.max_tiers, 7);
+        assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
+        assert!(cfg.privacy.dcor_alpha.is_none());
+        assert!(cfg.output.is_none());
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let text = MINIMAL.replace("\"dtfl\"", "\"sgd\"");
+        assert!(ExperimentConfig::parse(&text).is_err());
+    }
+
+    #[test]
+    fn static_requires_tier() {
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"static\"");
+        assert!(ExperimentConfig::parse(&text).is_err());
+        let text = MINIMAL.replace(
+            "method = \"dtfl\"",
+            "method = \"static\"\nstatic_tier = 3",
+        );
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(cfg.run.static_tier, Some(3));
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let text = r#"
+            [model]
+            artifact = "resnet56s-c10"
+            artifacts_dir = "artifacts"
+            [data]
+            spec = "cifar10"
+            train_total = 4000
+            non_iid = true
+            dirichlet_alpha = 0.5
+            [clients]
+            count = 20
+            profile_pool = "case1"
+            seed = 3
+            [run]
+            method = "fedavg"
+            rounds = 100
+            target_accuracy = 0.8
+            sample_frac = 0.5
+            [sim]
+            server_speedup = 4.0
+            profile_switch_every = 50
+            profile_switch_frac = 0.3
+            [privacy]
+            dcor_alpha = 0.25
+            patch_shuffle = 4
+            [output]
+            dir = "results"
+        "#;
+        let cfg = ExperimentConfig::parse(text).unwrap();
+        assert_eq!(cfg.clients.count, 20);
+        assert_eq!(cfg.privacy.patch_shuffle, Some(4));
+        assert_eq!(cfg.sim.profile_switch_every, 50);
+        assert_eq!(cfg.output.as_ref().unwrap().dir, PathBuf::from("results"));
+        assert_eq!(cfg.clients.profile_pool, crate::simulation::ProfilePool::Case1);
+    }
+
+    #[test]
+    fn bad_profile_pool_rejected() {
+        let text = MINIMAL.to_string() + "\n[clients]\nprofile_pool = \"warp\"\n";
+        assert!(ExperimentConfig::parse(&text).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Model aggregation (Algorithm 1, step ⑤ / lines 11–13).
+//!
+//! Each client's halves are reconstituted in the flat layout
+//! (w_k = client_vec[..cut_k] ‖ server_vec_k) and averaged, weighted by
+//! dataset size N_k per Eq. (1). Auxiliary heads are averaged per tier
+//! among the clients that trained that tier this round.
+//!
+//! This is the L3 hot loop — O(K · P) f32 FMAs per round — so the inner
+//! loops are written to autovectorize (no bounds checks in the hot path,
+//! slice-zip form).
+
+use anyhow::Result;
+
+use crate::runtime::Metadata;
+
+use super::model_state::{ClientUpdate, GlobalModel};
+
+/// `acc += w * x`, vectorizable.
+#[inline]
+fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x.iter()) {
+        *a += w * b;
+    }
+}
+
+/// Weighted-average aggregation over one round's client updates.
+///
+/// Returns the new global model. Aux heads of tiers with no participant
+/// this round are carried over unchanged.
+pub fn aggregate(
+    meta: &Metadata,
+    prev: &GlobalModel,
+    updates: &[ClientUpdate],
+) -> Result<GlobalModel> {
+    anyhow::ensure!(!updates.is_empty(), "aggregate called with no updates");
+    let total_w: f64 = updates.iter().map(|u| u.weight).sum();
+    anyhow::ensure!(total_w > 0.0, "total aggregation weight must be positive");
+
+    let mut flat = vec![0.0f32; meta.total_params];
+    let mut aux_acc: Vec<Vec<f32>> = meta.tiers.iter().map(|t| vec![0.0f32; t.aux_len]).collect();
+    let mut aux_w = vec![0.0f64; meta.max_tiers];
+
+    for u in updates {
+        u.check(meta)?;
+        let w = (u.weight / total_w) as f32;
+        let cut = meta.cut_offset(u.tier);
+        // client params occupy the flat prefix [..cut]
+        axpy(&mut flat[..cut], &u.client_vec[..cut], w);
+        // server half occupies [cut..]
+        axpy(&mut flat[cut..], &u.server_vec, w);
+        // aux tail, averaged within its tier
+        aux_w[u.tier - 1] += u.weight;
+        if meta.tier(u.tier).aux_len > 0 {
+            // weight renormalized after the loop
+            axpy(
+                &mut aux_acc[u.tier - 1],
+                &u.client_vec[cut..],
+                u.weight as f32,
+            );
+        }
+    }
+
+    let aux: Vec<Vec<f32>> = aux_acc
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut acc)| {
+            if aux_w[i] > 0.0 {
+                let inv = (1.0 / aux_w[i]) as f32;
+                acc.iter_mut().for_each(|v| *v *= inv);
+                acc
+            } else {
+                prev.aux[i].clone()
+            }
+        })
+        .collect();
+
+    Ok(GlobalModel { flat, aux })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::metadata::Metadata;
+
+    fn tiny_meta() -> Option<Metadata> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Metadata::load(&d).ok()
+    }
+
+    fn update(meta: &Metadata, tier: usize, fill: f32, weight: f64, id: usize) -> ClientUpdate {
+        let t = meta.tier(tier);
+        ClientUpdate {
+            client_id: id,
+            tier,
+            weight,
+            client_vec: vec![fill; t.client_vec_len],
+            server_vec: vec![fill; t.server_vec_len],
+        }
+    }
+
+    #[test]
+    fn identical_updates_average_to_same_value() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
+            &meta,
+        );
+        let ups = vec![
+            update(&meta, 2, 3.0, 10.0, 0),
+            update(&meta, 5, 3.0, 10.0, 1),
+        ];
+        let g = aggregate(&meta, &prev, &ups).unwrap();
+        assert!(g.flat.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn weights_are_proportional() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
+            &meta,
+        );
+        // same tier: 1.0-filled with weight 3, 0.0-filled with weight 1
+        let ups = vec![update(&meta, 3, 1.0, 3.0, 0), update(&meta, 3, 0.0, 1.0, 1)];
+        let g = aggregate(&meta, &prev, &ups).unwrap();
+        assert!(g.flat.iter().all(|&v| (v - 0.75).abs() < 1e-6));
+        // aux head of tier 3 averaged the same way
+        assert!(g.aux[2].iter().all(|&v| (v - 0.75).abs() < 1e-6));
+    }
+
+    #[test]
+    fn unused_tier_aux_carried_over() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev_aux: Vec<Vec<f32>> = meta.tiers.iter().map(|t| vec![7.5; t.aux_len]).collect();
+        let prev = GlobalModel::new(vec![0.0; meta.total_params], prev_aux, &meta);
+        let ups = vec![update(&meta, 1, 1.0, 1.0, 0)];
+        let g = aggregate(&meta, &prev, &ups).unwrap();
+        // tier 2 had no participants; its aux head is unchanged
+        assert!(g.aux[1].iter().all(|&v| v == 7.5));
+        // tier 1 aux updated
+        assert!(g.aux[0].iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn empty_updates_rejected() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
+            &meta,
+        );
+        assert!(aggregate(&meta, &prev, &[]).is_err());
+    }
+
+    #[test]
+    fn mixed_tiers_blend_prefix_only_where_covered() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
+            &meta,
+        );
+        // tier-1 client contributes 2.0 everywhere; tier-7 client 4.0.
+        let ups = vec![update(&meta, 1, 2.0, 1.0, 0), update(&meta, 7, 4.0, 1.0, 1)];
+        let g = aggregate(&meta, &prev, &ups).unwrap();
+        // every flat element receives (2 + 4) / 2 = 3 regardless of which
+        // half it came from — the reconstitution is position-independent.
+        assert!(g.flat.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,120 @@
+//! Global model state in the flat parameter layout.
+//!
+//! The global model is one flat f32 vector ordered module-by-module
+//! (md1..md8). Tier m's client-side model is the prefix `flat[..cut(m)]`
+//! and the server-side model is the suffix — so splitting, re-tiering and
+//! aggregating are all pure slice operations (see DESIGN.md "Flat parameter
+//! layout").
+
+use crate::runtime::Metadata;
+
+/// The server's copy of the global model w (Algorithm 1, line 13 state).
+#[derive(Debug, Clone)]
+pub struct GlobalModel {
+    pub flat: Vec<f32>,
+    /// Per-tier auxiliary head parameters (not part of the global model —
+    /// the paper's aux networks are tier-local).
+    pub aux: Vec<Vec<f32>>,
+}
+
+impl GlobalModel {
+    /// Assemble from the initial parameter blobs of an artifact set.
+    pub fn new(flat: Vec<f32>, aux: Vec<Vec<f32>>, meta: &Metadata) -> Self {
+        assert_eq!(flat.len(), meta.total_params, "init_full.bin length");
+        assert_eq!(aux.len(), meta.max_tiers, "one aux head per tier");
+        for (i, a) in aux.iter().enumerate() {
+            assert_eq!(a.len(), meta.tiers[i].aux_len, "aux head {} length", i + 1);
+        }
+        Self { flat, aux }
+    }
+
+    /// Client-side download for tier m: client params ‖ aux params
+    /// (Algorithm 1 step ① "clients download their client-side models").
+    pub fn client_vec(&self, meta: &Metadata, tier: usize) -> Vec<f32> {
+        let cut = meta.cut_offset(tier);
+        let mut v = Vec::with_capacity(meta.tier(tier).client_vec_len);
+        v.extend_from_slice(&self.flat[..cut]);
+        v.extend_from_slice(&self.aux[tier - 1]);
+        v
+    }
+
+    /// Server-side slice for tier m.
+    pub fn server_vec(&self, meta: &Metadata, tier: usize) -> Vec<f32> {
+        self.flat[meta.cut_offset(tier)..].to_vec()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.flat.len()
+    }
+}
+
+/// One client's updated model halves at the end of a round, prior to
+/// aggregation: `client_vec[..cut]` ‖ `server_vec` reconstitutes the full
+/// model w_k in the global layout (Algorithm 1, line 11).
+#[derive(Debug, Clone)]
+pub struct ClientUpdate {
+    pub client_id: usize,
+    pub tier: usize,
+    /// Weight N_k (client dataset size) for the weighted average.
+    pub weight: f64,
+    /// client params ‖ aux params (aux tail is split off during aggregation)
+    pub client_vec: Vec<f32>,
+    pub server_vec: Vec<f32>,
+}
+
+impl ClientUpdate {
+    /// Validate the halves against the layout.
+    pub fn check(&self, meta: &Metadata) -> anyhow::Result<()> {
+        let t = meta.tier(self.tier);
+        anyhow::ensure!(
+            self.client_vec.len() == t.client_vec_len,
+            "client {} tier {}: client_vec len {} != {}",
+            self.client_id,
+            self.tier,
+            self.client_vec.len(),
+            t.client_vec_len
+        );
+        anyhow::ensure!(
+            self.server_vec.len() == t.server_vec_len,
+            "client {} tier {}: server_vec len {} != {}",
+            self.client_id,
+            self.tier,
+            self.server_vec.len(),
+            t.server_vec_len
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::metadata::Metadata;
+
+    fn tiny_meta() -> Option<Metadata> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Metadata::load(&d).ok()
+    }
+
+    #[test]
+    fn client_server_partition_full_layout() {
+        let Some(meta) = tiny_meta() else { return };
+        let flat: Vec<f32> = (0..meta.total_params).map(|i| i as f32).collect();
+        let aux: Vec<Vec<f32>> = meta
+            .tiers
+            .iter()
+            .map(|t| vec![0.5; t.aux_len])
+            .collect();
+        let g = GlobalModel::new(flat.clone(), aux, &meta);
+        for tier in 1..=meta.max_tiers {
+            let cv = g.client_vec(&meta, tier);
+            let sv = g.server_vec(&meta, tier);
+            let cut = meta.cut_offset(tier);
+            // prefix of client_vec + server_vec reproduces the full layout
+            let mut recon = cv[..cut].to_vec();
+            recon.extend_from_slice(&sv);
+            assert_eq!(recon, flat, "tier {tier} partition must be lossless");
+            assert_eq!(cv.len(), meta.tier(tier).client_vec_len);
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Tier profiling (§3.3 "Tier Profiling").
+//!
+//! Two ingredients let the scheduler estimate every client's training time
+//! in every tier while only ever observing the tier it actually ran:
+//!
+//! 1. **Reference tier profile** — per-tier client/server per-batch compute
+//!    times measured once at startup with a standard batch on the reference
+//!    host (`TierProfile`, the Table 2 analogue). The paper's key
+//!    observation: the *ratio* between two tiers' normalized times depends
+//!    only on the model split, not on the client, so one observation in any
+//!    tier pins down all tiers for that client.
+//! 2. **Per-client EMA history** — the measured per-batch client-side
+//!    compute time of each client in its assigned tier, smoothed with an
+//!    exponential moving average to absorb measurement noise.
+
+/// Per-tier reference compute times (seconds per standard batch on the
+/// reference 1-CPU host). Index 0 = tier 1.
+#[derive(Debug, Clone)]
+pub struct TierProfile {
+    pub client_batch_secs: Vec<f64>,
+    pub server_batch_secs: Vec<f64>,
+}
+
+impl TierProfile {
+    pub fn num_tiers(&self) -> usize {
+        self.client_batch_secs.len()
+    }
+
+    /// Normalized client-side times relative to tier 1 (Table 2 rows).
+    pub fn normalized_client(&self) -> Vec<f64> {
+        let base = self.client_batch_secs[0].max(1e-12);
+        self.client_batch_secs.iter().map(|t| t / base).collect()
+    }
+
+    pub fn normalized_server(&self) -> Vec<f64> {
+        let base = self.server_batch_secs[0].max(1e-12);
+        self.server_batch_secs.iter().map(|t| t / base).collect()
+    }
+
+    /// Cross-tier extrapolation factor T^{c_p}(to) / T^{c_p}(from).
+    pub fn client_ratio(&self, from_tier: usize, to_tier: usize) -> f64 {
+        self.client_batch_secs[to_tier - 1] / self.client_batch_secs[from_tier - 1].max(1e-12)
+    }
+}
+
+/// EMA-smoothed observation history for one client.
+#[derive(Debug, Clone, Default)]
+pub struct ClientHistory {
+    /// EMA of per-batch client-side compute seconds, per tier (None until
+    /// the client has been observed in that tier at least once).
+    pub ema_client_batch: Vec<Option<f64>>,
+    /// Tier of the most recent observation.
+    pub last_tier: Option<usize>,
+    /// Measured link speed ν_k in bytes/second (from the latest round's
+    /// transfer).
+    pub nu_bytes_per_sec: Option<f64>,
+}
+
+/// Tier profiler: reference profile + per-client histories (the state the
+/// `TierScheduler(·)` function of Algorithm 1 reads and writes).
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    pub profile: TierProfile,
+    /// EMA smoothing weight for new observations (β in DESIGN.md).
+    pub beta: f64,
+    pub clients: Vec<ClientHistory>,
+}
+
+impl Profiler {
+    pub fn new(profile: TierProfile, num_clients: usize, beta: f64) -> Self {
+        let tiers = profile.num_tiers();
+        Self {
+            profile,
+            beta,
+            clients: vec![
+                ClientHistory {
+                    ema_client_batch: vec![None; tiers],
+                    last_tier: None,
+                    nu_bytes_per_sec: None,
+                };
+                num_clients
+            ],
+        }
+    }
+
+    /// Record a round observation for client k (Algorithm 1, lines 22–25):
+    /// measured per-batch client compute seconds in `tier`, and the link
+    /// speed measured from this round's transfer.
+    pub fn observe(
+        &mut self,
+        k: usize,
+        tier: usize,
+        client_batch_secs: f64,
+        nu_bytes_per_sec: f64,
+    ) {
+        let h = &mut self.clients[k];
+        let slot = &mut h.ema_client_batch[tier - 1];
+        *slot = Some(match *slot {
+            Some(prev) => self.beta * client_batch_secs + (1.0 - self.beta) * prev,
+            None => client_batch_secs,
+        });
+        h.last_tier = Some(tier);
+        h.nu_bytes_per_sec = Some(nu_bytes_per_sec);
+    }
+
+    /// Estimated per-batch client compute seconds of client k in tier m
+    /// (Algorithm 1, line 27): scale the freshest EMA observation by the
+    /// reference-profile ratio.
+    pub fn estimate_client_batch(&self, k: usize, m: usize) -> f64 {
+        let h = &self.clients[k];
+        // prefer a direct observation in m, else extrapolate from the most
+        // recently observed tier, else from any observed tier
+        if let Some(t) = h.ema_client_batch[m - 1] {
+            return t;
+        }
+        let from = h
+            .last_tier
+            .filter(|&t| h.ema_client_batch[t - 1].is_some())
+            .or_else(|| {
+                h.ema_client_batch
+                    .iter()
+                    .position(Option::is_some)
+                    .map(|i| i + 1)
+            });
+        match from {
+            Some(t) => h.ema_client_batch[t - 1].unwrap() * self.profile.client_ratio(t, m),
+            // never observed: assume reference speed (bootstrap probe fills
+            // this in before round 0 in practice)
+            None => self.profile.client_batch_secs[m - 1],
+        }
+    }
+
+    /// Measured link speed for client k, bytes/second.
+    pub fn nu(&self, k: usize) -> f64 {
+        self.clients[k]
+            .nu_bytes_per_sec
+            // 30 Mbps default until first measured transfer
+            .unwrap_or(30.0e6 / 8.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> TierProfile {
+        TierProfile {
+            client_batch_secs: vec![0.1, 0.16, 0.22, 0.27, 0.33, 0.38, 0.45],
+            server_batch_secs: vec![0.5, 0.45, 0.4, 0.3, 0.25, 0.15, 0.02],
+        }
+    }
+
+    #[test]
+    fn normalized_profile_matches_ratios() {
+        let p = profile();
+        let n = p.normalized_client();
+        assert!((n[0] - 1.0).abs() < 1e-12);
+        assert!((n[1] - 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_smooths_observations() {
+        let mut prof = Profiler::new(profile(), 1, 0.5);
+        prof.observe(0, 3, 1.0, 1e6);
+        assert!((prof.estimate_client_batch(0, 3) - 1.0).abs() < 1e-12);
+        prof.observe(0, 3, 2.0, 1e6);
+        // EMA(0.5): 0.5*2 + 0.5*1 = 1.5
+        assert!((prof.estimate_client_batch(0, 3) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_tier_extrapolation_uses_profile_ratio() {
+        let mut prof = Profiler::new(profile(), 1, 0.5);
+        // client is 10x slower than reference, observed in tier 1
+        prof.observe(0, 1, 1.0, 1e6);
+        let est = prof.estimate_client_batch(0, 4);
+        // expected: 1.0 * (0.27 / 0.1) = 2.7
+        assert!((est - 2.7).abs() < 1e-9, "est={est}");
+    }
+
+    #[test]
+    fn unobserved_client_falls_back_to_reference() {
+        let prof = Profiler::new(profile(), 2, 0.5);
+        assert!((prof.estimate_client_batch(1, 5) - 0.33).abs() < 1e-12);
+    }
+
+    #[test]
+    fn direct_observation_preferred_over_extrapolation() {
+        let mut prof = Profiler::new(profile(), 1, 1.0);
+        prof.observe(0, 1, 5.0, 1e6); // slow in tier 1
+        prof.observe(0, 4, 0.5, 1e6); // but fast measured in tier 4
+        assert!((prof.estimate_client_batch(0, 4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nu_defaults_then_tracks() {
+        let mut prof = Profiler::new(profile(), 1, 0.5);
+        assert!((prof.nu(0) - 30.0e6 / 8.0).abs() < 1.0);
+        prof.observe(0, 1, 1.0, 123456.0);
+        assert!((prof.nu(0) - 123456.0).abs() < 1e-9);
+    }
+}

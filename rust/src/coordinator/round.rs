@@ -1,0 +1,277 @@
+//! The DTFL training round (Algorithm 1 / Figure 1, steps ①–⑤).
+//!
+//! Per round, for every participating client:
+//!   ① the dynamic tier scheduler picks a tier; the client "downloads" its
+//!     client-side model (global flat prefix + the tier's aux head);
+//!   ②③ the client runs Ñ_k local-loss steps through the AOT
+//!     `client_step_t{m}` artifact, producing activations z per batch;
+//!   ④ the server trains its per-client server-side model on (z, y) via
+//!     `server_step_t{m}` — in parallel with ③ in the paper's timing model
+//!     (Eq. 5 takes the max of the two paths);
+//!   ⑤ client and server halves are reconstituted and weight-averaged into
+//!     the new global model; per-tier aux heads are averaged among that
+//!     tier's participants.
+//!
+//! Real PJRT step times on this host are measured and scaled by each
+//! client's simulated resource profile to produce the training times the
+//! paper reports (see `simulation`).
+
+use anyhow::Result;
+
+use crate::fed::{Method, RoundEnv, RoundOutcome};
+use crate::runtime::{literal as lit, Runtime, StepEngine, TrainState};
+use crate::simulation::{ClientRoundTime, ServerModel};
+use crate::util::Rng64;
+
+use super::aggregate::aggregate;
+use super::model_state::{ClientUpdate, GlobalModel};
+use super::profiler::{Profiler, TierProfile};
+use super::scheduler::{schedule, ClientLoad, Schedule};
+
+/// Options for the DTFL method.
+#[derive(Debug, Clone)]
+pub struct DtflOptions {
+    /// Number of tiers M the scheduler may use (≤ artifact max_tiers).
+    pub max_tiers: usize,
+    /// EMA smoothing weight β for timing observations.
+    pub ema_beta: f64,
+    /// Multiplicative measurement noise on simulated compute times
+    /// (exercises the EMA; 0.0 = deterministic).
+    pub timing_noise: f64,
+    /// Static tier override: Some(m) pins every client to tier m (Table 1
+    /// single-tier ablation / Han et al. style fixed split).
+    pub static_tier: Option<usize>,
+}
+
+impl Default for DtflOptions {
+    fn default() -> Self {
+        Self { max_tiers: 7, ema_beta: 0.5, timing_noise: 0.05, static_tier: None }
+    }
+}
+
+/// DTFL method state.
+pub struct Dtfl {
+    pub global: GlobalModel,
+    pub profiler: Profiler,
+    pub opts: DtflOptions,
+    /// Schedule of the most recent round (diagnostics, Table 2 / Fig 3).
+    pub last_schedule: Option<Schedule>,
+}
+
+impl Dtfl {
+    /// Build from an artifact set; runs startup tier profiling (one
+    /// standard batch per tier on the reference host, §3.3).
+    pub fn new(rt: &Runtime, num_clients: usize, opts: DtflOptions) -> Result<Self> {
+        let meta = &rt.meta;
+        anyhow::ensure!(
+            opts.max_tiers >= 1 && opts.max_tiers <= meta.max_tiers,
+            "max_tiers {} out of range 1..={}",
+            opts.max_tiers,
+            meta.max_tiers
+        );
+        let global = load_initial_model(rt)?;
+        let profile = profile_tiers(rt, &global, opts.max_tiers)?;
+        let profiler = Profiler::new(profile, num_clients, opts.ema_beta);
+        Ok(Self { global, profiler, opts, last_schedule: None })
+    }
+
+    fn noisy(&self, secs: f64, rng: &mut Rng64) -> f64 {
+        if self.opts.timing_noise <= 0.0 {
+            secs
+        } else {
+            secs * (1.0 + rng.gen_f64(-self.opts.timing_noise, self.opts.timing_noise))
+        }
+    }
+}
+
+/// Load `init_full.bin` + per-tier aux heads into a `GlobalModel`.
+pub fn load_initial_model(rt: &Runtime) -> Result<GlobalModel> {
+    let dir = rt.artifact_dir();
+    let flat = crate::runtime::load_f32_bin(&dir.join("init_full.bin"))?;
+    let aux = (1..=rt.meta.max_tiers)
+        .map(|t| crate::runtime::load_f32_bin(&dir.join(format!("init_aux_t{t}.bin"))))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(GlobalModel::new(flat, aux, &rt.meta))
+}
+
+/// Startup tier profiling: run each tier's client and server step once with
+/// a standard (synthetic) batch and record per-batch reference times. The
+/// first execution of each artifact includes compile time, so every tier is
+/// run twice and the second timing is kept.
+pub fn profile_tiers(rt: &Runtime, global: &GlobalModel, tiers: usize) -> Result<TierProfile> {
+    let meta = &rt.meta;
+    let tiers = tiers.min(meta.max_tiers).max(1);
+    let engine = StepEngine::new(rt);
+    let b = meta.batch;
+    let hw = meta.image_hw;
+    let ch = meta.in_channels;
+    // standard batch: mid-gray images, labels 0..B
+    let x = lit::f32_literal(&vec![0.5f32; b * hw * hw * ch], &[b, hw, hw, ch])?;
+    let y = lit::i32_vec(
+        &(0..b)
+            .map(|i| (i % meta.num_classes) as i32)
+            .collect::<Vec<_>>(),
+    )?;
+
+    let mut client_secs = Vec::with_capacity(tiers);
+    let mut server_secs = Vec::with_capacity(tiers);
+    for tier in 1..=tiers {
+        let mut cstate = TrainState::new(global.client_vec(meta, tier));
+        let mut best_c = f64::INFINITY;
+        let mut z = None;
+        for _ in 0..2 {
+            let out = engine.client_step(tier, &mut cstate, 1e-3, &x, &y, None)?;
+            best_c = best_c.min(out.host_secs);
+            z = Some(out.z);
+        }
+        client_secs.push(best_c);
+
+        let mut sstate = TrainState::new(global.server_vec(meta, tier));
+        let z = z.unwrap();
+        let mut best_s = f64::INFINITY;
+        for _ in 0..2 {
+            let out = engine.server_step(tier, &mut sstate, 1e-3, &z, &y)?;
+            best_s = best_s.min(out.host_secs);
+        }
+        server_secs.push(best_s);
+    }
+    log::info!("tier profiling complete: client={client_secs:?} server={server_secs:?}");
+    Ok(TierProfile { client_batch_secs: client_secs, server_batch_secs: server_secs })
+}
+
+impl Method for Dtfl {
+    fn name(&self) -> &'static str {
+        if self.opts.static_tier.is_some() {
+            "static-tier"
+        } else {
+            "dtfl"
+        }
+    }
+
+    fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let rt = env.rt;
+        let meta = &rt.meta;
+        let engine = StepEngine::new(rt);
+        let batch = meta.batch;
+
+        // ① dynamic tier scheduling (or the static-tier ablation)
+        let loads: Vec<ClientLoad> = (0..self.profiler.clients.len())
+            .map(|k| ClientLoad {
+                n_batches: env.n_batches(k, batch),
+                participating: env.participants.contains(&k),
+            })
+            .collect();
+        let sched = schedule(meta, &self.profiler, &env.server, &loads, self.opts.max_tiers);
+        let tier_of = |k: usize| -> usize {
+            self.opts.static_tier.unwrap_or_else(|| sched.tier_of(k))
+        };
+
+        let mut updates = Vec::with_capacity(env.participants.len());
+        let mut times = Vec::with_capacity(env.participants.len());
+        let mut tiers = Vec::with_capacity(env.participants.len());
+        let mut loss_sum = 0.0f64;
+
+        for &k in env.participants {
+            let tier = tier_of(k);
+            let tmeta = meta.tier(tier);
+            let profile = env.profiles[k];
+            let nb = env.n_batches(k, batch);
+
+            // ① download client-side model + aux head
+            let mut cstate = TrainState::new(self.global.client_vec(meta, tier));
+            // ④ server-side model for this client
+            let mut sstate = TrainState::new(self.global.server_vec(meta, tier));
+
+            let shard = &env.partition.client_indices[k];
+            let batcher = crate::data::Batcher::new(env.train, shard, batch);
+
+            let mut host_client = 0.0f64;
+            let mut host_server = 0.0f64;
+            let mut last_loss = 0.0f64;
+            for bi in 0..nb {
+                let bt = batcher.batch(bi % batcher.num_batches().max(1))?;
+                // ②③ client local-loss step
+                let cout = engine.client_step(
+                    tier,
+                    &mut cstate,
+                    env.lr,
+                    &bt.x,
+                    &bt.y,
+                    env.privacy.dcor_alpha,
+                )?;
+                host_client += cout.host_secs;
+                last_loss = cout.loss as f64;
+
+                // optional privacy transform on the uploaded activation
+                let z = match env.privacy.patch_shuffle {
+                    Some(p) => {
+                        let mut zv = lit::to_f32_vec(&cout.z)?;
+                        crate::data::patch_shuffle(
+                            &mut zv,
+                            &tmeta.z_shape,
+                            p,
+                            (env.round as u64) << 20 | (k as u64) << 8 | bi as u64,
+                        );
+                        lit::f32_literal(&zv, &tmeta.z_shape)?
+                    }
+                    None => cout.z,
+                };
+
+                // ④ server step on (z, y)
+                let sout = engine.server_step(tier, &mut sstate, env.lr, &z, &bt.y)?;
+                host_server += sout.host_secs;
+            }
+
+            // --- simulated timings (Eq. 5) ---
+            let sim_c = self.noisy(profile.compute_secs(host_client), env.rng);
+            let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
+            let bytes = tmeta.model_transfer_bytes + nb * tmeta.z_bytes_per_batch;
+            let sim_com = profile.comm_secs(bytes);
+            times.push(ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s });
+
+            // profiler observation (per-batch compute + measured link speed)
+            let nu = bytes as f64 / sim_com.max(1e-9);
+            self.profiler.observe(k, tier, sim_c / nb.max(1) as f64, nu);
+
+            loss_sum += last_loss;
+            tiers.push(tier);
+            updates.push(ClientUpdate {
+                client_id: k,
+                tier,
+                weight: env.partition.size(k).max(1) as f64,
+                client_vec: cstate.params,
+                server_vec: sstate.params,
+            });
+        }
+
+        // ⑤ aggregate into the new global model
+        self.global = aggregate(meta, &self.global, &updates)?;
+        self.last_schedule = Some(sched);
+
+        Ok(RoundOutcome {
+            times,
+            train_loss: loss_sum / env.participants.len().max(1) as f64,
+            tiers,
+        })
+    }
+
+    fn global_params(&self) -> &[f32] {
+        &self.global.flat
+    }
+}
+
+/// Convenience: estimate per-tier round time for one client under the
+/// current profiler state (used by Table 1 / Fig 3 harnesses).
+pub fn estimate_all_tiers(
+    rt: &Runtime,
+    dtfl: &Dtfl,
+    server: &ServerModel,
+    k: usize,
+    n_batches: usize,
+) -> Vec<f64> {
+    (1..=rt.meta.max_tiers)
+        .map(|m| {
+            super::scheduler::estimate_round_time(&rt.meta, &dtfl.profiler, server, k, m, n_batches)
+        })
+        .collect()
+}

@@ -1,0 +1,243 @@
+//! The dynamic tier scheduler (Algorithm 1, `TierScheduler(·)`, lines 21–35)
+//! — the paper's core contribution.
+//!
+//! Per round it:
+//!  1. estimates every client's round time T̂_k(m) in every tier m using
+//!     the profiler's EMA histories + reference-profile extrapolation
+//!     (Eq. 5: T̂ = max(T̂^c + T̂^com, T̂^s + T̂^com));
+//!  2. computes the unavoidable straggler time
+//!     T_max = max_k min_m T̂_k(m)  (line 31);
+//!  3. assigns every other client the *largest* tier (least offload to the
+//!     server, best resource utilization) whose estimate stays ≤ T_max
+//!     (line 33).
+
+use crate::runtime::Metadata;
+use crate::simulation::ServerModel;
+
+use super::profiler::Profiler;
+
+/// Scheduler view of one client for the upcoming round.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientLoad {
+    /// Ñ_k — number of standard batches the client will run.
+    pub n_batches: usize,
+    /// Whether the client participates this round (sampled clients only).
+    pub participating: bool,
+}
+
+/// Per-client assignment diagnostics (logged + used by tests/benches).
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub client_id: usize,
+    pub tier: usize,
+    /// Estimated round time in the chosen tier.
+    pub est_secs: f64,
+    /// Estimated best achievable time min_m T̂_k(m).
+    pub est_best_secs: f64,
+}
+
+/// Scheduler output for one round.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub assignments: Vec<Assignment>,
+    /// T_max — the unavoidable straggler time (line 31).
+    pub t_max: f64,
+}
+
+impl Schedule {
+    pub fn tier_of(&self, client_id: usize) -> usize {
+        self.assignments
+            .iter()
+            .find(|a| a.client_id == client_id)
+            .map(|a| a.tier)
+            .expect("client not in schedule")
+    }
+}
+
+/// Estimate T̂_k(m) for one (client, tier) pair — Eq. (5) with the tier
+/// profiling estimates of §3.3.
+pub fn estimate_round_time(
+    meta: &Metadata,
+    profiler: &Profiler,
+    server: &ServerModel,
+    k: usize,
+    m: usize,
+    n_batches: usize,
+) -> f64 {
+    let t = meta.tier(m);
+    let nb = n_batches as f64;
+    // T̂^c: per-batch client compute (EMA + cross-tier ratio) × Ñ_k
+    let t_c = profiler.estimate_client_batch(k, m) * nb;
+    // T̂^com: client-side model down+up plus per-batch activations
+    let bytes = t.model_transfer_bytes as f64 + nb * t.z_bytes_per_batch as f64;
+    let t_com = bytes / profiler.nu(k);
+    // T̂^s: server-side per-batch reference time × Ñ_k, scaled by the
+    // server's speed and divided across its parallel executors
+    let t_s = server.secs(profiler.profile.server_batch_secs[m - 1]) * nb
+        / server.parallel_factor.max(1.0);
+    (t_c + t_com).max(t_s + t_com)
+}
+
+/// The dynamic tier scheduler. Returns tier assignments for all
+/// participating clients.
+pub fn schedule(
+    meta: &Metadata,
+    profiler: &Profiler,
+    server: &ServerModel,
+    loads: &[ClientLoad],
+    max_tiers: usize,
+) -> Schedule {
+    let tiers = max_tiers.min(meta.max_tiers).max(1);
+
+    // Estimate every participating client in every tier.
+    let mut est: Vec<Vec<f64>> = Vec::with_capacity(loads.len());
+    for (k, load) in loads.iter().enumerate() {
+        if !load.participating {
+            est.push(Vec::new());
+            continue;
+        }
+        est.push(
+            (1..=tiers)
+                .map(|m| estimate_round_time(meta, profiler, server, k, m, load.n_batches))
+                .collect(),
+        );
+    }
+
+    // Line 31: T_max = max_k min_m T̂_k(m).
+    let t_max = est
+        .iter()
+        .filter(|e| !e.is_empty())
+        .map(|e| e.iter().cloned().fold(f64::INFINITY, f64::min))
+        .fold(0.0, f64::max);
+
+    // Line 33: every client takes the largest tier with T̂ ≤ T_max; the
+    // straggler itself lands on its argmin tier.
+    let assignments = loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.participating)
+        .map(|(k, _)| {
+            let e = &est[k];
+            let best = e.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mut tier = 0usize;
+            for m in (1..=tiers).rev() {
+                if e[m - 1] <= t_max + 1e-12 {
+                    tier = m;
+                    break;
+                }
+            }
+            if tier == 0 {
+                // numerical fallback: argmin tier
+                tier = 1 + e
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+            }
+            Assignment {
+                client_id: k,
+                tier,
+                est_secs: e[tier - 1],
+                est_best_secs: best,
+            }
+        })
+        .collect();
+
+    Schedule { assignments, t_max }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::profiler::TierProfile;
+    use crate::runtime::metadata::Metadata;
+
+    fn tiny_meta() -> Option<Metadata> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        Metadata::load(&d).ok()
+    }
+
+    fn profile(meta: &Metadata) -> TierProfile {
+        // client-side time grows with tier, server-side shrinks
+        let tiers = meta.max_tiers;
+        TierProfile {
+            client_batch_secs: (0..tiers).map(|i| 0.1 + 0.05 * i as f64).collect(),
+            server_batch_secs: (0..tiers).map(|i| 0.4 - 0.05 * i as f64).collect(),
+        }
+    }
+
+    fn server() -> ServerModel {
+        ServerModel { speedup: 8.0, parallel_factor: 4.0 }
+    }
+
+    #[test]
+    fn homogeneous_clients_share_a_tier() {
+        let Some(meta) = tiny_meta() else { return };
+        let prof = Profiler::new(profile(&meta), 4, 0.5);
+        let loads = vec![ClientLoad { n_batches: 4, participating: true }; 4];
+        let s = schedule(&meta, &prof, &server(), &loads, meta.max_tiers);
+        let tiers: Vec<usize> = s.assignments.iter().map(|a| a.tier).collect();
+        assert!(tiers.iter().all(|&t| t == tiers[0]), "{tiers:?}");
+    }
+
+    #[test]
+    fn slow_client_gets_lower_tier_than_fast() {
+        let Some(meta) = tiny_meta() else { return };
+        let mut prof = Profiler::new(profile(&meta), 2, 0.5);
+        // client 0 is 20x slower than reference; client 1 is 4x faster
+        prof.observe(0, 4, profile(&meta).client_batch_secs[3] * 20.0, 30e6 / 8.0);
+        prof.observe(1, 4, profile(&meta).client_batch_secs[3] / 4.0, 100e6 / 8.0);
+        let loads = vec![ClientLoad { n_batches: 4, participating: true }; 2];
+        let s = schedule(&meta, &prof, &server(), &loads, meta.max_tiers);
+        let t0 = s.tier_of(0);
+        let t1 = s.tier_of(1);
+        assert!(t0 < t1, "slow client tier {t0} should be below fast {t1}");
+    }
+
+    #[test]
+    fn tmax_is_max_of_min_estimates() {
+        let Some(meta) = tiny_meta() else { return };
+        let prof = Profiler::new(profile(&meta), 3, 0.5);
+        let loads = vec![ClientLoad { n_batches: 2, participating: true }; 3];
+        let s = schedule(&meta, &prof, &server(), &loads, meta.max_tiers);
+        for a in &s.assignments {
+            assert!(a.est_best_secs <= s.t_max + 1e-12);
+            assert!(a.est_secs <= s.t_max + 1e-9, "assigned tier respects T_max");
+        }
+    }
+
+    #[test]
+    fn non_participants_are_skipped() {
+        let Some(meta) = tiny_meta() else { return };
+        let prof = Profiler::new(profile(&meta), 3, 0.5);
+        let loads = vec![
+            ClientLoad { n_batches: 2, participating: true },
+            ClientLoad { n_batches: 2, participating: false },
+            ClientLoad { n_batches: 2, participating: true },
+        ];
+        let s = schedule(&meta, &prof, &server(), &loads, meta.max_tiers);
+        assert_eq!(s.assignments.len(), 2);
+        assert!(s.assignments.iter().all(|a| a.client_id != 1));
+    }
+
+    #[test]
+    fn max_tiers_caps_assignment() {
+        let Some(meta) = tiny_meta() else { return };
+        let prof = Profiler::new(profile(&meta), 2, 0.5);
+        let loads = vec![ClientLoad { n_batches: 2, participating: true }; 2];
+        let s = schedule(&meta, &prof, &server(), &loads, 3);
+        assert!(s.assignments.iter().all(|a| a.tier <= 3));
+    }
+
+    #[test]
+    fn fast_network_prefers_low_tier_for_slow_cpu() {
+        let Some(meta) = tiny_meta() else { return };
+        let mut prof = Profiler::new(profile(&meta), 1, 0.5);
+        // very slow CPU but fast network: offloading (tier 1) is attractive
+        prof.observe(0, 7, 50.0, 100e6 / 8.0);
+        let loads = vec![ClientLoad { n_batches: 4, participating: true }];
+        let s = schedule(&meta, &prof, &server(), &loads, meta.max_tiers);
+        assert_eq!(s.tier_of(0), 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Batch assembly: gathers client samples into fixed-shape NHWC literals.
+//!
+//! Artifacts are compiled for a fixed batch size B; a client with N_k
+//! samples contributes Ñ_k = ceil(N_k / B) batches per local epoch, with the
+//! final partial batch wrapped around (sampling with replacement from the
+//! client's own shard), matching fixed-shape AOT execution.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::literal as lit;
+
+use super::synth::Dataset;
+
+/// Pre-encoded batch ready for PJRT execution.
+pub struct Batch {
+    pub x: Literal,
+    pub y: Literal,
+    pub size: usize,
+}
+
+/// Builds batches for one client shard (indices into a dataset).
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    indices: &'a [usize],
+    batch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, indices: &'a [usize], batch: usize) -> Self {
+        Self { ds, indices, batch }
+    }
+
+    /// Ñ_k — number of batches per local epoch.
+    pub fn num_batches(&self) -> usize {
+        if self.indices.is_empty() {
+            0
+        } else {
+            self.indices.len().div_ceil(self.batch)
+        }
+    }
+
+    /// Assemble batch `b` (0-based); wraps around the shard for the final
+    /// partial batch.
+    pub fn batch(&self, b: usize) -> Result<Batch> {
+        let hw = self.ds.spec.image_hw;
+        let ch = self.ds.spec.channels;
+        let p = self.ds.spec.pixels_per_image();
+        let mut xs = vec![0.0f32; self.batch * p];
+        let mut ys = vec![0i32; self.batch];
+        for i in 0..self.batch {
+            let pos = (b * self.batch + i) % self.indices.len();
+            let id = self.indices[pos];
+            xs[i * p..(i + 1) * p].copy_from_slice(self.ds.image(id));
+            ys[i] = self.ds.labels[id];
+        }
+        Ok(Batch {
+            x: lit::f32_literal(&xs, &[self.batch, hw, hw, ch])?,
+            y: lit::i32_vec(&ys)?,
+            size: self.batch,
+        })
+    }
+
+    /// All batches for one epoch.
+    pub fn epoch(&self) -> Result<Vec<Batch>> {
+        (0..self.num_batches()).map(|b| self.batch(b)).collect()
+    }
+}
+
+/// Batches over a full dataset (evaluation path).
+pub fn eval_batches(ds: &Dataset, batch: usize) -> Result<Vec<Batch>> {
+    let idx: Vec<usize> = (0..ds.len()).collect();
+    // Trim to whole batches so correct-count normalization stays exact.
+    let whole = (ds.len() / batch) * batch;
+    let idx = &idx[..whole.max(batch.min(ds.len()))];
+    let b = Batcher::new(ds, idx, batch);
+    b.epoch()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_train, DatasetSpec};
+
+    #[test]
+    fn batch_count_rounds_up() {
+        let ds = generate_train(&DatasetSpec::tiny(50, 16));
+        let idx: Vec<usize> = (0..10).collect();
+        let b = Batcher::new(&ds, &idx, 4);
+        assert_eq!(b.num_batches(), 3);
+        let batches = b.epoch().unwrap();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].size, 4);
+    }
+
+    #[test]
+    fn empty_shard_has_no_batches() {
+        let ds = generate_train(&DatasetSpec::tiny(10, 16));
+        let idx: Vec<usize> = vec![];
+        let b = Batcher::new(&ds, &idx, 4);
+        assert_eq!(b.num_batches(), 0);
+    }
+
+    #[test]
+    fn literal_shapes_match_spec() {
+        let ds = generate_train(&DatasetSpec::tiny(20, 16));
+        let idx: Vec<usize> = (0..8).collect();
+        let b = Batcher::new(&ds, &idx, 8).batch(0).unwrap();
+        assert_eq!(b.x.element_count(), 8 * 16 * 16 * 3);
+        assert_eq!(b.y.element_count(), 8);
+    }
+}

@@ -1,0 +1,13 @@
+//! Data pipeline: synthetic vision datasets (CIFAR/CINIC/HAM analogues),
+//! IID / Dirichlet non-IID partitioning, fixed-shape batch assembly, and
+//! the patch-shuffling privacy transform.
+
+pub mod batcher;
+pub mod partition;
+pub mod shuffle;
+pub mod synth;
+
+pub use batcher::{eval_batches, Batch, Batcher};
+pub use partition::{partition, Partition, PartitionScheme};
+pub use shuffle::patch_shuffle;
+pub use synth::{generate_test, generate_train, Dataset, DatasetSpec};

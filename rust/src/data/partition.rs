@@ -1,0 +1,171 @@
+//! Client data partitioning: IID or Dirichlet label-skew non-IID.
+//!
+//! Non-IID follows the paper (Appendix A.4): per class, proportions across
+//! clients are drawn from Dirichlet(α) with a fixed seed (α = 0.5 in all
+//! paper experiments), producing label-distribution skew like Table 7.
+
+use crate::util::Rng64;
+
+use super::synth::Dataset;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionScheme {
+    Iid,
+    Dirichlet { alpha: f64 },
+}
+
+/// Per-client sample indices into the training set.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub client_indices: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn num_clients(&self) -> usize {
+        self.client_indices.len()
+    }
+
+    /// N_k — dataset size of client k.
+    pub fn size(&self, k: usize) -> usize {
+        self.client_indices[k].len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.client_indices.iter().map(Vec::len).sum()
+    }
+
+    /// Label histogram of client k (for reporting non-IID skew, Table 7).
+    pub fn label_histogram(&self, ds: &Dataset, k: usize) -> Vec<usize> {
+        let mut h = vec![0usize; ds.spec.classes];
+        for &i in &self.client_indices[k] {
+            h[ds.labels[i] as usize] += 1;
+        }
+        h
+    }
+}
+
+/// Partition `ds` across `clients` clients.
+pub fn partition(
+    ds: &Dataset,
+    clients: usize,
+    scheme: PartitionScheme,
+    seed: u64,
+) -> Partition {
+    let mut rng = Rng64::seed_from_u64(seed);
+    match scheme {
+        PartitionScheme::Iid => {
+            let mut idx: Vec<usize> = (0..ds.len()).collect();
+            rng.shuffle(&mut idx);
+            let mut out = vec![Vec::new(); clients];
+            for (i, id) in idx.into_iter().enumerate() {
+                out[i % clients].push(id);
+            }
+            Partition { client_indices: out }
+        }
+        PartitionScheme::Dirichlet { alpha } => {
+            // group sample ids by class
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.spec.classes];
+            for (i, &l) in ds.labels.iter().enumerate() {
+                by_class[l as usize].push(i);
+            }
+            let mut out = vec![Vec::new(); clients];
+            for ids in by_class.iter_mut() {
+                rng.shuffle(ids);
+                let props: Vec<f64> = if clients == 1 {
+                    vec![1.0]
+                } else {
+                    rng.dirichlet(alpha, clients)
+                };
+                // cumulative cut points over this class's samples
+                let n = ids.len();
+                let mut start = 0usize;
+                let mut acc = 0.0f64;
+                for (k, p) in props.iter().enumerate() {
+                    acc += p;
+                    let end = if k + 1 == clients { n } else { (acc * n as f64).round() as usize };
+                    let end = end.clamp(start, n);
+                    out[k].extend_from_slice(&ids[start..end]);
+                    start = end;
+                }
+            }
+            // shuffle within each client so batches mix classes
+            for c in out.iter_mut() {
+                rng.shuffle(c);
+            }
+            Partition { client_indices: out }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::DatasetSpec;
+
+    fn dataset(n: usize) -> Dataset {
+        crate::data::synth::generate_train(&DatasetSpec::tiny(n, 16))
+    }
+
+    #[test]
+    fn iid_partition_covers_everything_evenly() {
+        let ds = dataset(100);
+        let p = partition(&ds, 10, PartitionScheme::Iid, 0);
+        assert_eq!(p.num_clients(), 10);
+        assert_eq!(p.total(), 100);
+        for k in 0..10 {
+            assert_eq!(p.size(k), 10);
+        }
+        // disjoint cover
+        let mut all: Vec<usize> = p.client_indices.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dirichlet_partition_covers_everything() {
+        let ds = dataset(200);
+        let p = partition(&ds, 10, PartitionScheme::Dirichlet { alpha: 0.5 }, 7);
+        assert_eq!(p.total(), 200);
+        let mut all: Vec<usize> = p.client_indices.concat();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 200);
+    }
+
+    #[test]
+    fn dirichlet_skews_labels() {
+        let ds = dataset(400);
+        let iid = partition(&ds, 8, PartitionScheme::Iid, 3);
+        let skew = partition(&ds, 8, PartitionScheme::Dirichlet { alpha: 0.3 }, 3);
+        // measure max class share per client; dirichlet should exceed IID
+        let max_share = |p: &Partition| -> f64 {
+            (0..8)
+                .map(|k| {
+                    let h = p.label_histogram(&ds, k);
+                    let n: usize = h.iter().sum();
+                    if n == 0 {
+                        0.0
+                    } else {
+                        *h.iter().max().unwrap() as f64 / n as f64
+                    }
+                })
+                .fold(0.0, f64::max)
+        };
+        assert!(max_share(&skew) > max_share(&iid));
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        let ds = dataset(100);
+        let a = partition(&ds, 5, PartitionScheme::Dirichlet { alpha: 0.5 }, 9);
+        let b = partition(&ds, 5, PartitionScheme::Dirichlet { alpha: 0.5 }, 9);
+        assert_eq!(a.client_indices, b.client_indices);
+    }
+
+    #[test]
+    fn single_client_gets_all() {
+        let ds = dataset(50);
+        let p = partition(&ds, 1, PartitionScheme::Dirichlet { alpha: 0.5 }, 1);
+        assert_eq!(p.size(0), 50);
+    }
+}

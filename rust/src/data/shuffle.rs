@@ -1,0 +1,110 @@
+//! Patch shuffling over intermediate activations (paper §4.4, Table 5).
+//!
+//! Following Yao et al. (2022), the client permutes spatial patches of the
+//! activation z before uploading it, destroying spatial structure an
+//! attacker could invert while keeping per-patch statistics the CE loss
+//! needs. Applied on the (B, H, W, C) activation, per sample.
+
+use crate::util::Rng64;
+
+/// Shuffle `patch`×`patch` spatial tiles of an NHWC activation in place.
+/// `z` has shape (b, h, w, c) flattened row-major. Patches are permuted
+/// independently per sample with a seeded RNG (per-round seed).
+pub fn patch_shuffle(z: &mut [f32], shape: &[usize], patch: usize, seed: u64) {
+    let (b, h, w, c) = (shape[0], shape[1], shape[2], shape[3]);
+    assert_eq!(z.len(), b * h * w * c, "activation shape mismatch");
+    if patch == 0 || h % patch != 0 || w % patch != 0 {
+        return; // patch size must tile the activation; no-op otherwise
+    }
+    let ph = h / patch;
+    let pw = w / patch;
+    let n_patches = ph * pw;
+    if n_patches <= 1 {
+        return;
+    }
+    let mut rng = Rng64::seed_from_u64(seed);
+    let mut perm: Vec<usize> = (0..n_patches).collect();
+
+    let sample_stride = h * w * c;
+    let mut scratch = vec![0.0f32; sample_stride];
+    for s in 0..b {
+        rng.shuffle(&mut perm);
+        let img = &mut z[s * sample_stride..(s + 1) * sample_stride];
+        scratch.copy_from_slice(img);
+        for (dst_p, &src_p) in perm.iter().enumerate() {
+            let (dpy, dpx) = (dst_p / pw, dst_p % pw);
+            let (spy, spx) = (src_p / pw, src_p % pw);
+            for y in 0..patch {
+                let dy = dpy * patch + y;
+                let sy = spy * patch + y;
+                let drow = (dy * w + dpx * patch) * c;
+                let srow = (sy * w + spx * patch) * c;
+                img[drow..drow + patch * c].copy_from_slice(&scratch[srow..srow + patch * c]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_z(b: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+        (0..b * h * w * c).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let shape = [2, 8, 8, 4];
+        let mut z = make_z(2, 8, 8, 4);
+        let orig = z.clone();
+        patch_shuffle(&mut z, &shape, 4, 123);
+        assert_ne!(z, orig, "shuffle should move patches");
+        let mut a = orig;
+        let mut b = z;
+        a.sort_by(f32::total_cmp);
+        b.sort_by(f32::total_cmp);
+        assert_eq!(a, b, "values must be preserved exactly");
+    }
+
+    #[test]
+    fn non_tiling_patch_is_noop() {
+        let shape = [1, 6, 6, 2];
+        let mut z = make_z(1, 6, 6, 2);
+        let orig = z.clone();
+        patch_shuffle(&mut z, &shape, 4, 1);
+        assert_eq!(z, orig);
+    }
+
+    #[test]
+    fn single_patch_is_noop() {
+        let shape = [1, 4, 4, 1];
+        let mut z = make_z(1, 4, 4, 1);
+        let orig = z.clone();
+        patch_shuffle(&mut z, &shape, 4, 1);
+        assert_eq!(z, orig);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let shape = [2, 8, 8, 2];
+        let mut a = make_z(2, 8, 8, 2);
+        let mut b = make_z(2, 8, 8, 2);
+        patch_shuffle(&mut a, &shape, 2, 9);
+        patch_shuffle(&mut b, &shape, 2, 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rows_within_patch_stay_together() {
+        // with a full-width patch (pw == 1 column of patches), shuffling
+        // permutes horizontal bands; check band contents survive.
+        let shape = [1, 4, 2, 1];
+        let mut z = make_z(1, 4, 2, 1);
+        patch_shuffle(&mut z, &shape, 2, 5);
+        // bands are rows {0,1} and {2,3}; each output band must equal one
+        // of the input bands
+        let band0: Vec<f32> = z[0..4].to_vec();
+        assert!(band0 == vec![0.0, 1.0, 2.0, 3.0] || band0 == vec![4.0, 5.0, 6.0, 7.0]);
+    }
+}

@@ -1,0 +1,309 @@
+//! SynthVision: deterministic synthetic image-classification datasets.
+//!
+//! Substitute for CIFAR-10/100, CINIC-10 and HAM10000 (no network access on
+//! this testbed — see DESIGN.md §Substitutions). Each class gets a smooth
+//! low-frequency color template (random coarse grid, bilinearly upsampled);
+//! a sample is its class template under a random affine jitter (shift +
+//! contrast) plus pixel noise. The task is learnable by a small CNN but not
+//! linearly trivial, which is what the accuracy-retention comparisons need.
+
+use crate::util::Rng64;
+
+/// Specification of one synthetic dataset (mirrors the paper's datasets).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub classes: usize,
+    pub image_hw: usize,
+    pub channels: usize,
+    pub train_total: usize,
+    pub test_total: usize,
+    /// Pixel noise stddev; higher = harder (CINIC-10 analogue uses more).
+    pub noise: f32,
+    /// Per-class sample weights for imbalanced sets (HAM10000 analogue);
+    /// empty = balanced.
+    pub class_weights: Vec<f32>,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// CIFAR-10 analogue (balanced, 10 classes).
+    pub fn cifar10(train_total: usize, test_total: usize) -> Self {
+        Self {
+            name: "synth-cifar10".into(),
+            classes: 10,
+            image_hw: 32,
+            channels: 3,
+            train_total,
+            test_total,
+            noise: 0.35,
+            class_weights: vec![],
+            seed: 42,
+        }
+    }
+
+    /// CIFAR-100 analogue (100 classes — fewer samples per class).
+    pub fn cifar100(train_total: usize, test_total: usize) -> Self {
+        Self {
+            name: "synth-cifar100".into(),
+            classes: 100,
+            image_hw: 32,
+            channels: 3,
+            train_total,
+            test_total,
+            noise: 0.3,
+            class_weights: vec![],
+            seed: 43,
+        }
+    }
+
+    /// CINIC-10 analogue: larger and noisier than CIFAR-10.
+    pub fn cinic10(train_total: usize, test_total: usize) -> Self {
+        Self {
+            name: "synth-cinic10".into(),
+            classes: 10,
+            image_hw: 32,
+            channels: 3,
+            train_total,
+            test_total,
+            noise: 0.55,
+            class_weights: vec![],
+            seed: 44,
+        }
+    }
+
+    /// HAM10000 analogue: 7 classes, heavily imbalanced (melanocytic nevi
+    /// dominate the real set at ~67%).
+    pub fn ham10000(train_total: usize, test_total: usize) -> Self {
+        Self {
+            name: "synth-ham10000".into(),
+            classes: 7,
+            image_hw: 32,
+            channels: 3,
+            train_total,
+            test_total,
+            noise: 0.3,
+            class_weights: vec![0.67, 0.11, 0.11, 0.05, 0.03, 0.02, 0.01],
+            seed: 45,
+        }
+    }
+
+    /// Small/fast spec matching the `tiny` artifact set (16×16 images).
+    pub fn tiny(train_total: usize, test_total: usize) -> Self {
+        Self {
+            name: "synth-tiny".into(),
+            classes: 10,
+            image_hw: 16,
+            channels: 3,
+            train_total,
+            test_total,
+            noise: 0.3,
+            class_weights: vec![],
+            seed: 46,
+        }
+    }
+
+    pub fn by_name(name: &str, train_total: usize, test_total: usize) -> Option<Self> {
+        Some(match name {
+            "cifar10" => Self::cifar10(train_total, test_total),
+            "cifar100" => Self::cifar100(train_total, test_total),
+            "cinic10" => Self::cinic10(train_total, test_total),
+            "ham10000" => Self::ham10000(train_total, test_total),
+            "tiny" => Self::tiny(train_total, test_total),
+            _ => return None,
+        })
+    }
+
+    pub fn pixels_per_image(&self) -> usize {
+        self.image_hw * self.image_hw * self.channels
+    }
+}
+
+/// In-memory dataset: NHWC f32 images in [0, 1] + i32 labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub spec: DatasetSpec,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let p = self.spec.pixels_per_image();
+        &self.images[i * p..(i + 1) * p]
+    }
+}
+
+/// Class template: coarse random grid bilinearly upsampled to image size.
+fn class_template(rng: &mut Rng64, hw: usize, ch: usize) -> Vec<f32> {
+    const GRID: usize = 4;
+    let coarse: Vec<f32> = (0..GRID * GRID * ch).map(|_| rng.gen_f32(0.0, 1.0)).collect();
+    let mut out = vec![0.0f32; hw * hw * ch];
+    for y in 0..hw {
+        for x in 0..hw {
+            // bilinear sample of the coarse grid
+            let fy = y as f32 / hw as f32 * (GRID - 1) as f32;
+            let fx = x as f32 / hw as f32 * (GRID - 1) as f32;
+            let (y0, x0) = (fy as usize, fx as usize);
+            let (y1, x1) = ((y0 + 1).min(GRID - 1), (x0 + 1).min(GRID - 1));
+            let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+            for c in 0..ch {
+                let g = |yy: usize, xx: usize| coarse[(yy * GRID + xx) * ch + c];
+                let v = g(y0, x0) * (1.0 - dy) * (1.0 - dx)
+                    + g(y0, x1) * (1.0 - dy) * dx
+                    + g(y1, x0) * dy * (1.0 - dx)
+                    + g(y1, x1) * dy * dx;
+                out[(y * hw + x) * ch + c] = v;
+            }
+        }
+    }
+    out
+}
+
+/// Draw class counts: balanced or weighted (imbalanced) per spec.
+fn class_counts(spec: &DatasetSpec, total: usize) -> Vec<usize> {
+    if spec.class_weights.is_empty() {
+        let base = total / spec.classes;
+        let mut counts = vec![base; spec.classes];
+        for c in counts.iter_mut().take(total - base * spec.classes) {
+            *c += 1;
+        }
+        counts
+    } else {
+        let wsum: f32 = spec.class_weights.iter().sum();
+        let mut counts: Vec<usize> = spec
+            .class_weights
+            .iter()
+            .map(|w| ((w / wsum) * total as f32).floor() as usize)
+            .collect();
+        let mut assigned: usize = counts.iter().sum();
+        let mut c = 0;
+        while assigned < total {
+            counts[c % spec.classes] += 1;
+            assigned += 1;
+            c += 1;
+        }
+        counts
+    }
+}
+
+/// Generate one split deterministically from (spec.seed, split_salt).
+fn generate_split(spec: &DatasetSpec, total: usize, split_salt: u64) -> Dataset {
+    let hw = spec.image_hw;
+    let ch = spec.channels;
+    let mut trng = Rng64::seed_from_u64(spec.seed); // templates shared across splits
+    let templates: Vec<Vec<f32>> = (0..spec.classes)
+        .map(|_| class_template(&mut trng, hw, ch))
+        .collect();
+
+    let mut rng =
+        Rng64::seed_from_u64(spec.seed ^ 0x9e3779b97f4a7c15u64.wrapping_mul(split_salt + 1));
+    let counts = class_counts(spec, total);
+
+    let p = spec.pixels_per_image();
+    let mut images = vec![0.0f32; total * p];
+    let mut labels = vec![0i32; total];
+    let mut order: Vec<usize> = Vec::with_capacity(total);
+    for (cls, &cnt) in counts.iter().enumerate() {
+        order.extend(std::iter::repeat(cls).take(cnt));
+    }
+    // interleave classes deterministically
+    rng.shuffle(&mut order);
+
+    for (i, &cls) in order.iter().enumerate() {
+        labels[i] = cls as i32;
+        let tmpl = &templates[cls];
+        let shift_y = rng.gen_range_i64(-3, 3);
+        let shift_x = rng.gen_range_i64(-3, 3);
+        let contrast = rng.gen_f32(0.7, 1.3);
+        let brightness = rng.gen_f32(-0.1, 0.1);
+        let img = &mut images[i * p..(i + 1) * p];
+        for y in 0..hw {
+            for x in 0..hw {
+                let sy = (y as i64 + shift_y).rem_euclid(hw as i64) as usize;
+                let sx = (x as i64 + shift_x).rem_euclid(hw as i64) as usize;
+                for c in 0..ch {
+                    let v = tmpl[(sy * hw + sx) * ch + c] * contrast
+                        + brightness
+                        + rng.gen_f32(-spec.noise, spec.noise);
+                    img[(y * hw + x) * ch + c] = v.clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    Dataset { spec: spec.clone(), images, labels }
+}
+
+/// Generate the train split.
+pub fn generate_train(spec: &DatasetSpec) -> Dataset {
+    generate_split(spec, spec.train_total, 0)
+}
+
+/// Generate the held-out test split (same templates, fresh noise/jitter).
+pub fn generate_test(spec: &DatasetSpec) -> Dataset {
+    generate_split(spec, spec.test_total, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = DatasetSpec::tiny(64, 32);
+        let a = generate_train(&spec);
+        let b = generate_train(&spec);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn train_and_test_differ() {
+        let spec = DatasetSpec::tiny(64, 64);
+        let tr = generate_train(&spec);
+        let te = generate_test(&spec);
+        assert_ne!(tr.images, te.images);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let spec = DatasetSpec::tiny(32, 16);
+        let d = generate_train(&spec);
+        assert!(d.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(d.images.len(), 32 * spec.pixels_per_image());
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let spec = DatasetSpec::cifar10(1000, 100);
+        let d = generate_train(&spec);
+        for cls in 0..10 {
+            let n = d.labels.iter().filter(|&&l| l == cls).count();
+            assert_eq!(n, 100);
+        }
+    }
+
+    #[test]
+    fn imbalanced_ham_dominant_class() {
+        let spec = DatasetSpec::ham10000(1000, 100);
+        let d = generate_train(&spec);
+        let n0 = d.labels.iter().filter(|&&l| l == 0).count();
+        assert!(n0 > 600, "dominant class should hold ~67%: {n0}");
+        assert_eq!(d.len(), 1000);
+    }
+
+    #[test]
+    fn labels_within_range() {
+        let spec = DatasetSpec::cifar100(500, 100);
+        let d = generate_train(&spec);
+        assert!(d.labels.iter().all(|&l| (0..100).contains(&l)));
+    }
+}

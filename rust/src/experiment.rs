@@ -1,0 +1,319 @@
+//! Experiment driver: builds the runtime, data, heterogeneity simulation
+//! and the selected method from an `ExperimentConfig`, then runs the
+//! federated training loop with evaluation, LR plateau scheduling,
+//! early stop at target accuracy, and CSV emission.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::baselines::{FedAvg, FedGkt, FedYogi, SplitFed};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{load_initial_model, Dtfl, DtflOptions};
+use crate::csv_row;
+use crate::data::{self, Dataset, DatasetSpec, Partition, PartitionScheme};
+use crate::fed::{Method, PrivacyCfg, RoundEnv};
+use crate::metrics::{CsvWriter, Recorder, RoundRecord, RunReport};
+use crate::runtime::{Runtime, StepEngine};
+use crate::simulation::{DynamicEnvironment, ResourceProfile, ServerModel, VirtualClock};
+use crate::util::Rng64;
+
+/// A fully-constructed experiment, ready to run.
+pub struct Experiment {
+    pub cfg: ExperimentConfig,
+    pub rt: Rc<Runtime>,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub partition: Partition,
+    pub profiles: Vec<ResourceProfile>,
+    pub method: Box<dyn Method>,
+    pub clock: VirtualClock,
+    rng: Rng64,
+    env_dyn: Option<DynamicEnvironment>,
+    lr: f32,
+    plateau: usize,
+    best_acc: f64,
+}
+
+impl Experiment {
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        let rt = Rc::new(
+            Runtime::open(cfg.model.artifact_path())
+                .with_context(|| format!("opening artifact set '{}'", cfg.model.artifact))?,
+        );
+        Self::with_runtime(cfg, rt)
+    }
+
+    /// Build on a shared runtime (one process, many experiment cells — the
+    /// executable cache is reused so artifacts compile once per process).
+    pub fn with_runtime(cfg: ExperimentConfig, rt: Rc<Runtime>) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            rt.meta.config == cfg.model.artifact,
+            "shared runtime holds artifact '{}' but config wants '{}'",
+            rt.meta.config,
+            cfg.model.artifact
+        );
+
+        // --- data ---
+        let spec = DatasetSpec::by_name(&cfg.data.spec, cfg.data.train_total, cfg.data.test_total)
+            .with_context(|| format!("unknown dataset spec '{}'", cfg.data.spec))?;
+        anyhow::ensure!(
+            spec.image_hw == rt.meta.image_hw && spec.classes == rt.meta.num_classes,
+            "dataset spec {} ({}px/{} classes) does not match artifact {} ({}px/{} classes)",
+            spec.name,
+            spec.image_hw,
+            spec.classes,
+            rt.meta.config,
+            rt.meta.image_hw,
+            rt.meta.num_classes
+        );
+        let train = data::generate_train(&spec);
+        let test = data::generate_test(&spec);
+        let scheme = if cfg.data.non_iid {
+            PartitionScheme::Dirichlet { alpha: cfg.data.dirichlet_alpha }
+        } else {
+            PartitionScheme::Iid
+        };
+        let partition = data::partition(&train, cfg.clients.count, scheme, cfg.clients.seed);
+
+        // --- heterogeneity ---
+        let mut rng = Rng64::seed_from_u64(cfg.clients.seed ^ 0xD7F1);
+        let profiles = cfg.clients.profile_pool.assign(cfg.clients.count, &mut rng);
+        let env_dyn = (cfg.sim.profile_switch_every > 0).then(|| DynamicEnvironment {
+            pool: cfg.clients.profile_pool,
+            switch_every: cfg.sim.profile_switch_every,
+            switch_frac: cfg.sim.profile_switch_frac,
+        });
+
+        // --- method ---
+        let method = build_method(&cfg, &rt)?;
+        let lr = cfg.run.lr;
+
+        Ok(Self {
+            cfg,
+            rt,
+            train,
+            test,
+            partition,
+            profiles,
+            method,
+            clock: VirtualClock::new(),
+            rng,
+            env_dyn,
+            lr,
+            plateau: 0,
+            best_acc: 0.0,
+        })
+    }
+
+    fn server_model(&self) -> ServerModel {
+        ServerModel {
+            speedup: self.cfg.sim.server_speedup,
+            parallel_factor: self.cfg.sim.server_parallel,
+        }
+    }
+
+    /// Evaluate the current global model on the test set.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        let engine = StepEngine::new(&self.rt);
+        let batches = data::eval_batches(&self.test, self.rt.meta.eval_batch)?;
+        let params = self.method.global_params();
+        let mut loss = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0usize;
+        for b in &batches {
+            let (l, c) = engine.eval_batch(params, &b.x, &b.y)?;
+            loss += l as f64;
+            correct += c as f64;
+            n += b.size;
+        }
+        let nb = batches.len().max(1) as f64;
+        Ok((loss / nb, correct / n.max(1) as f64))
+    }
+
+    /// Run the full experiment loop; returns the report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.run_with(|_| {})
+    }
+
+    /// Run with a per-round observer (curve capture for figures).
+    pub fn run_with(&mut self, mut observe: impl FnMut(&RoundRecord)) -> Result<RunReport> {
+        let mut recorder = Recorder::new();
+        let rounds = self.cfg.run.rounds;
+        let target = self.cfg.run.target_accuracy;
+        let n_clients = self.cfg.clients.count;
+        let sample = ((n_clients as f64) * self.cfg.run.sample_frac).round().max(1.0) as usize;
+
+        let mut csv = self.open_csv()?;
+
+        for r in 0..rounds {
+            let t0 = Instant::now();
+
+            // dynamic environment: re-draw some profiles
+            if let Some(env) = &self.env_dyn {
+                let changed = env.maybe_switch(r, &mut self.profiles, &mut self.rng);
+                if !changed.is_empty() {
+                    log::info!("round {r}: {} client profiles switched", changed.len());
+                }
+            }
+
+            // client sampling
+            let mut ids = self.rng.sample_indices(n_clients, sample);
+            ids.sort_unstable();
+
+            let outcome = {
+                let mut env = RoundEnv {
+                    rt: &self.rt,
+                    train: &self.train,
+                    partition: &self.partition,
+                    profiles: &self.profiles,
+                    participants: &ids,
+                    server: self.server_model(),
+                    lr: self.lr,
+                    round: r,
+                    batch_cap: self.cfg.run.batch_cap,
+                    privacy: PrivacyCfg {
+                        dcor_alpha: self.cfg.privacy.dcor_alpha.filter(|&a| a > 0.0),
+                        patch_shuffle: self.cfg.privacy.patch_shuffle,
+                    },
+                    rng: &mut self.rng,
+                };
+                self.method.round(&mut env)?
+            };
+            let makespan = self.clock.advance_round(&outcome.times);
+            // straggler decomposition (Table 1 compute/comm rows)
+            let (ms_comp, ms_comm) = outcome
+                .times
+                .iter()
+                .max_by(|a, b| a.total().total_cmp(&b.total()))
+                .map(|t| (t.total() - t.comm, t.comm))
+                .unwrap_or((0.0, 0.0));
+
+            // evaluation + plateau LR schedule
+            let (test_loss, test_acc) = if r % self.cfg.run.eval_every == 0 || r + 1 == rounds {
+                let (l, a) = self.evaluate()?;
+                if a > self.best_acc + 1e-4 {
+                    self.best_acc = a;
+                    self.plateau = 0;
+                } else {
+                    self.plateau += 1;
+                    if self.plateau >= self.cfg.run.lr_patience {
+                        self.lr *= self.cfg.run.lr_decay;
+                        self.plateau = 0;
+                        log::info!("round {r}: plateau, lr decayed to {}", self.lr);
+                    }
+                }
+                (Some(l), Some(a))
+            } else {
+                (None, None)
+            };
+
+            let mean_tier = if outcome.tiers.is_empty() {
+                0.0
+            } else {
+                outcome.tiers.iter().sum::<usize>() as f64 / outcome.tiers.len() as f64
+            };
+            let rec = RoundRecord {
+                round: r,
+                sim_time: self.clock.now(),
+                makespan,
+                makespan_compute: ms_comp,
+                makespan_comm: ms_comm,
+                train_loss: outcome.train_loss,
+                test_loss,
+                test_accuracy: test_acc,
+                lr: self.lr,
+                mean_tier,
+                host_secs: t0.elapsed().as_secs_f64(),
+            };
+            log::info!(
+                "round {r}: sim_time={:.1}s loss={:.3} acc={} mean_tier={:.1} host={:.2}s",
+                rec.sim_time,
+                rec.train_loss,
+                test_acc.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+                mean_tier,
+                rec.host_secs
+            );
+            if let Some(w) = csv.as_mut() {
+                w.row(&csv_row![
+                    rec.round,
+                    rec.sim_time,
+                    rec.makespan,
+                    rec.train_loss,
+                    rec.test_loss.map(|v| v.to_string()).unwrap_or_default(),
+                    rec.test_accuracy.map(|v| v.to_string()).unwrap_or_default(),
+                    rec.lr,
+                    rec.mean_tier,
+                    rec.host_secs
+                ])?;
+            }
+            observe(&rec);
+            recorder.push(rec, target);
+
+            if target.is_some() && recorder.reached_target() {
+                log::info!("round {r}: target accuracy reached — stopping");
+                break;
+            }
+        }
+        if let Some(w) = csv.as_mut() {
+            w.flush()?;
+        }
+
+        Ok(recorder.report(
+            self.method.name(),
+            &self.cfg.model.artifact,
+            &self.cfg.data.spec,
+            target,
+        ))
+    }
+
+    fn open_csv(&self) -> Result<Option<CsvWriter>> {
+        let Some(out) = &self.cfg.output else { return Ok(None) };
+        let name = out
+            .name
+            .clone()
+            .unwrap_or_else(|| format!("{}-{}", self.cfg.run.method, self.cfg.model.artifact));
+        let path = out.dir.join(format!("{name}.csv"));
+        Ok(Some(CsvWriter::create(
+            path,
+            &[
+                "round",
+                "sim_time",
+                "makespan",
+                "train_loss",
+                "test_loss",
+                "test_accuracy",
+                "lr",
+                "mean_tier",
+                "host_secs",
+            ],
+        )?))
+    }
+}
+
+/// Instantiate the configured method.
+pub fn build_method(cfg: &ExperimentConfig, rt: &Runtime) -> Result<Box<dyn Method>> {
+    let method: Box<dyn Method> = match cfg.run.method.as_str() {
+        "dtfl" | "static" => {
+            let opts = DtflOptions {
+                max_tiers: cfg.run.max_tiers.min(rt.meta.max_tiers),
+                ema_beta: cfg.run.ema_beta,
+                timing_noise: cfg.run.timing_noise,
+                static_tier: if cfg.run.method == "static" {
+                    cfg.run.static_tier
+                } else {
+                    None
+                },
+            };
+            Box::new(Dtfl::new(rt, cfg.clients.count, opts)?)
+        }
+        "fedavg" => Box::new(FedAvg::new(load_initial_model(rt)?.flat)),
+        "splitfed" => Box::new(SplitFed::new(load_initial_model(rt)?.flat)),
+        "fedyogi" => Box::new(FedYogi::new(load_initial_model(rt)?.flat)),
+        "fedgkt" => Box::new(FedGkt::new(rt)?),
+        other => anyhow::bail!("unknown method '{other}'"),
+    };
+    Ok(method)
+}

@@ -1,0 +1,71 @@
+//! Common abstraction every federated method implements (DTFL and the four
+//! baselines), plus the shared per-round environment the experiment driver
+//! passes in.
+
+use anyhow::Result;
+
+use crate::data::{Dataset, Partition};
+use crate::runtime::Runtime;
+use crate::simulation::{ClientRoundTime, ResourceProfile, ServerModel};
+use crate::util::Rng64;
+
+/// Privacy configuration (paper §4.4, Table 5).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrivacyCfg {
+    /// Distance-correlation weight α; None disables the dcor artifact.
+    pub dcor_alpha: Option<f32>,
+    /// Patch size for activation patch shuffling; None disables.
+    pub patch_shuffle: Option<usize>,
+}
+
+/// Everything a method needs to run one round.
+pub struct RoundEnv<'a> {
+    pub rt: &'a Runtime,
+    pub train: &'a Dataset,
+    pub partition: &'a Partition,
+    pub profiles: &'a [ResourceProfile],
+    /// Client ids participating this round (sampling done by the driver).
+    pub participants: &'a [usize],
+    pub server: ServerModel,
+    pub lr: f32,
+    pub round: usize,
+    /// Cap on Ñ_k batches per client per round (wall-clock control on this
+    /// testbed; None = full local epoch).
+    pub batch_cap: Option<usize>,
+    pub privacy: PrivacyCfg,
+    pub rng: &'a mut Rng64,
+}
+
+impl RoundEnv<'_> {
+    /// Ñ_k for client k under the configured cap.
+    pub fn n_batches(&self, k: usize, batch: usize) -> usize {
+        let n = self.partition.size(k).div_ceil(batch).max(1);
+        match self.batch_cap {
+            Some(cap) => n.min(cap),
+            None => n,
+        }
+    }
+}
+
+/// Per-round result reported by a method.
+#[derive(Debug, Clone, Default)]
+pub struct RoundOutcome {
+    /// Simulated per-participant timings (Eq. 5 components).
+    pub times: Vec<ClientRoundTime>,
+    /// Mean training loss across participants (client-side loss for split
+    /// methods).
+    pub train_loss: f64,
+    /// Tier of each participant (DTFL/static-tier; tier 0 = whole model).
+    pub tiers: Vec<usize>,
+}
+
+/// A federated training method.
+pub trait Method {
+    fn name(&self) -> &'static str;
+
+    /// Execute one global round over `env.participants`.
+    fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome>;
+
+    /// Full global model parameters in the flat layout (for evaluation).
+    fn global_params(&self) -> &[f32];
+}

@@ -1,0 +1,47 @@
+//! # DTFL — Dynamic Tiering-based Federated Learning
+//!
+//! Production-style reproduction of *"Speed Up Federated Learning in
+//! Heterogeneous Environment: A Dynamic Tiering Approach"* (2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the dynamic tier scheduler
+//!   (the paper's contribution, Algorithm 1), tier profiling with EMA
+//!   smoothing, the federated round loop, flat-layout model aggregation, a
+//!   heterogeneity simulator (CPU/network resource profiles + virtual
+//!   clock), synthetic datasets with Dirichlet non-IID partitioning, and the
+//!   FedAvg / SplitFed / FedYogi / FedGKT baselines.
+//! * **Layer 2** — the splittable ResNet-style global model, written in JAX
+//!   (`python/compile/model.py`) and AOT-lowered to HLO text artifacts.
+//! * **Layer 1** — a tiled Pallas matmul kernel carrying every conv/dense
+//!   FLOP of the model (`python/compile/kernels/matmul.py`).
+//!
+//! Python runs once at build time (`make artifacts`); this crate executes
+//! the artifacts through the PJRT CPU client (`xla` crate) and never calls
+//! Python at runtime.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dtfl::config::ExperimentConfig;
+//! use dtfl::experiment::Experiment;
+//!
+//! let cfg = ExperimentConfig::load("configs/quickstart.toml").unwrap();
+//! let mut exp = Experiment::new(cfg).unwrap();
+//! let report = exp.run().unwrap();
+//! println!("reached {:.1}% in {:.0}s (simulated)",
+//!          100.0 * report.final_accuracy, report.total_sim_time);
+//! ```
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiment;
+pub mod fed;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod simulation;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

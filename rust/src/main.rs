@@ -1,0 +1,119 @@
+//! `dtfl` — CLI launcher for the DTFL coordinator.
+//!
+//! ```text
+//! dtfl run     --config configs/quickstart.toml [--method fedavg] [--rounds 20]
+//! dtfl info    --artifacts artifacts/tiny
+//! dtfl profile --artifacts artifacts/tiny       # tier profiling (Table 2)
+//! ```
+
+use anyhow::{bail, Result};
+
+use dtfl::config::ExperimentConfig;
+use dtfl::coordinator::{load_initial_model, profile_tiers};
+use dtfl::experiment::Experiment;
+use dtfl::runtime::Runtime;
+use dtfl::util::{logging, Args};
+
+const USAGE: &str = "\
+dtfl — Dynamic Tiering-based Federated Learning coordinator
+
+USAGE:
+  dtfl run --config <path.toml> [--method M] [--rounds N] [--clients K]
+           [--target ACC] [--out DIR]
+  dtfl info --artifacts <dir>       print artifact-set metadata
+  dtfl profile --artifacts <dir>    run tier profiling (Table 2 measurement)
+
+ENV:
+  DTFL_ARTIFACTS   artifacts root (default ./artifacts)
+  DTFL_LOG         error|warn|info|debug|trace (default info)
+";
+
+fn main() -> Result<()> {
+    logging::init();
+    let args = Args::from_env()?;
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "run" => cmd_run(&args),
+        "info" => cmd_info(&args),
+        "profile" => cmd_profile(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = ExperimentConfig::load(args.req("config")?)?;
+    if let Some(m) = args.get("method") {
+        cfg.run.method = m.to_string();
+    }
+    if let Some(r) = args.usize_opt("rounds")? {
+        cfg.run.rounds = r;
+    }
+    if let Some(c) = args.usize_opt("clients")? {
+        cfg.clients.count = c;
+    }
+    if let Some(t) = args.f64_opt("target")? {
+        cfg.run.target_accuracy = Some(t);
+    }
+    if let Some(dir) = args.get("out") {
+        cfg.output = Some(dtfl::config::OutputCfg { dir: dir.into(), name: None });
+    }
+    cfg.validate()?;
+    let mut exp = Experiment::new(cfg)?;
+    let report = exp.run()?;
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.req("artifacts")?)?;
+    let m = &rt.meta;
+    println!("config:        {}", m.config);
+    println!("classes:       {}", m.num_classes);
+    println!("image:         {0}x{0}x{1}", m.image_hw, m.in_channels);
+    println!("batch:         {} (eval {})", m.batch, m.eval_batch);
+    println!("total params:  {}", m.total_params);
+    println!("tiers:         {}", m.max_tiers);
+    println!("dcor variant:  {}", m.has_dcor);
+    println!();
+    println!("tier  client_params  aux  server_params  z_shape             model_MB  z_KB/batch");
+    for t in &m.tiers {
+        println!(
+            "{:>4}  {:>13}  {:>3}  {:>13}  {:<18}  {:>8.3}  {:>10.1}",
+            t.tier,
+            t.client_param_len,
+            t.aux_len,
+            t.server_vec_len,
+            format!("{:?}", t.z_shape),
+            t.model_transfer_bytes as f64 / 1e6,
+            t.z_bytes_per_batch as f64 / 1e3,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let rt = Runtime::open(args.req("artifacts")?)?;
+    let global = load_initial_model(&rt)?;
+    let prof = profile_tiers(&rt, &global, rt.meta.max_tiers)?;
+    println!("tier  client_ms/batch  server_ms/batch  norm_client  norm_server");
+    let nc = prof.normalized_client();
+    let ns = prof.normalized_server();
+    for i in 0..prof.num_tiers() {
+        println!(
+            "{:>4}  {:>15.2}  {:>15.2}  {:>11.2}  {:>11.2}",
+            i + 1,
+            prof.client_batch_secs[i] * 1e3,
+            prof.server_batch_secs[i] * 1e3,
+            nc[i],
+            ns[i],
+        );
+    }
+    Ok(())
+}

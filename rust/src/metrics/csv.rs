@@ -1,0 +1,78 @@
+//! Minimal CSV emitter for the table/figure harnesses (no external dep).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Simple CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(Self { out, columns: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.columns,
+            "row has {} fields, header has {}",
+            fields.len(),
+            self.columns
+        );
+        writeln!(self.out, "{}", fields.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Format helper for mixed-type rows.
+#[macro_export]
+macro_rules! csv_row {
+    ($($v:expr),* $(,)?) => {
+        vec![$(format!("{}", $v)),*]
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("dtfl-csv-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&csv_row![1, 2.5]).unwrap();
+            w.row(&csv_row!["x", "y"]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\nx,y\n");
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let dir = std::env::temp_dir().join("dtfl-csv-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.row(&csv_row![1]).is_err());
+    }
+}

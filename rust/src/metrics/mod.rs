@@ -1,0 +1,8 @@
+//! Run metrics: per-round records, run reports, CSV emitters for the
+//! table/figure harnesses.
+
+pub mod csv;
+pub mod recorder;
+
+pub use csv::CsvWriter;
+pub use recorder::{Recorder, RoundRecord, RunReport};

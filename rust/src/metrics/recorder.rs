@@ -1,0 +1,181 @@
+//! Per-round metric recording and run-level reports.
+
+use crate::util::json::{self, Json};
+
+/// One training round's record (a row of the Figure 2 curve CSV).
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Simulated wall-clock at the END of this round (seconds).
+    pub sim_time: f64,
+    /// Round makespan (straggler time, Eq. 5 max over clients).
+    pub makespan: f64,
+    /// Compute part of the straggler's critical path this round.
+    pub makespan_compute: f64,
+    /// Communication part of the straggler's critical path this round.
+    pub makespan_comm: f64,
+    pub train_loss: f64,
+    /// Test metrics (None on non-eval rounds).
+    pub test_loss: Option<f64>,
+    pub test_accuracy: Option<f64>,
+    pub lr: f32,
+    /// Mean tier over participants (0 for whole-model methods).
+    pub mean_tier: f64,
+    /// Host wall seconds actually spent executing this round.
+    pub host_secs: f64,
+}
+
+/// Final report for one run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub method: String,
+    pub artifact: String,
+    pub dataset: String,
+    pub rounds_run: usize,
+    pub total_sim_time: f64,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    /// Simulated seconds at which target accuracy was first reached.
+    pub time_to_target: Option<f64>,
+    pub target_accuracy: Option<f64>,
+    pub host_secs: f64,
+}
+
+impl RunReport {
+    /// JSON rendering for the CLI / harness outputs.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("method", json::s(self.method.clone())),
+            ("artifact", json::s(self.artifact.clone())),
+            ("dataset", json::s(self.dataset.clone())),
+            ("rounds_run", json::num(self.rounds_run as f64)),
+            ("total_sim_time", json::num(self.total_sim_time)),
+            ("final_accuracy", json::num(self.final_accuracy)),
+            ("best_accuracy", json::num(self.best_accuracy)),
+            (
+                "time_to_target",
+                self.time_to_target.map(json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "target_accuracy",
+                self.target_accuracy.map(json::num).unwrap_or(Json::Null),
+            ),
+            ("host_secs", json::num(self.host_secs)),
+        ])
+    }
+}
+
+/// Accumulates round records and derives the report.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub records: Vec<RoundRecord>,
+    best_acc: f64,
+    time_to_target: Option<f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: RoundRecord, target: Option<f64>) {
+        if let Some(acc) = rec.test_accuracy {
+            if acc > self.best_acc {
+                self.best_acc = acc;
+            }
+            if let Some(t) = target {
+                if acc >= t && self.time_to_target.is_none() {
+                    self.time_to_target = Some(rec.sim_time);
+                }
+            }
+        }
+        self.records.push(rec);
+    }
+
+    pub fn reached_target(&self) -> bool {
+        self.time_to_target.is_some()
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.best_acc
+    }
+
+    pub fn last_accuracy(&self) -> f64 {
+        self.records
+            .iter()
+            .rev()
+            .find_map(|r| r.test_accuracy)
+            .unwrap_or(0.0)
+    }
+
+    pub fn report(
+        &self,
+        method: &str,
+        artifact: &str,
+        dataset: &str,
+        target: Option<f64>,
+    ) -> RunReport {
+        RunReport {
+            method: method.to_string(),
+            artifact: artifact.to_string(),
+            dataset: dataset.to_string(),
+            rounds_run: self.records.len(),
+            total_sim_time: self.records.last().map(|r| r.sim_time).unwrap_or(0.0),
+            final_accuracy: self.last_accuracy(),
+            best_accuracy: self.best_acc,
+            time_to_target: self.time_to_target,
+            target_accuracy: target,
+            host_secs: self.records.iter().map(|r| r.host_secs).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, sim: f64, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            sim_time: sim,
+            makespan: 1.0,
+            makespan_compute: 0.8,
+            makespan_comm: 0.2,
+            train_loss: 1.0,
+            test_loss: acc.map(|_| 0.5),
+            test_accuracy: acc,
+            lr: 1e-3,
+            mean_tier: 3.0,
+            host_secs: 0.1,
+        }
+    }
+
+    #[test]
+    fn time_to_target_is_first_crossing() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 10.0, Some(0.5)), Some(0.7));
+        r.push(rec(1, 20.0, Some(0.72)), Some(0.7));
+        r.push(rec(2, 30.0, Some(0.9)), Some(0.7));
+        assert!(r.reached_target());
+        let rep = r.report("dtfl", "tiny", "tiny", Some(0.7));
+        assert_eq!(rep.time_to_target, Some(20.0));
+        assert!((rep.best_accuracy - 0.9).abs() < 1e-12);
+        assert_eq!(rep.rounds_run, 3);
+    }
+
+    #[test]
+    fn no_target_never_reached() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 10.0, Some(0.99)), None);
+        assert!(!r.reached_target());
+        assert_eq!(r.report("m", "a", "d", None).time_to_target, None);
+    }
+
+    #[test]
+    fn last_accuracy_skips_non_eval_rounds() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 1.0, Some(0.4)), None);
+        r.push(rec(1, 2.0, None), None);
+        assert!((r.last_accuracy() - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,190 @@
+//! Typed wrappers over the raw artifact executables.
+//!
+//! Each DTFL step artifact has a fixed signature (see `python/compile/aot.py`);
+//! this module turns "vector of literals in / tuple of literals out" into
+//! typed rust calls and keeps optimizer state in flat `Vec<f32>`s.
+
+use anyhow::Result;
+use xla::Literal;
+
+use super::client::Runtime;
+use super::literal as lit;
+
+/// Flat-vector training state for one model slice (params + Adam moments).
+///
+/// `t` is the 1-based Adam step counter; it is fed to the artifact as an f32
+/// scalar and incremented by the artifact itself, so the rust copy mirrors
+/// the device-side value.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+}
+
+impl TrainState {
+    pub fn new(params: Vec<f32>) -> Self {
+        let n = params.len();
+        Self {
+            params,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 1.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Reset optimizer moments (used when a client is re-tiered or a round
+    /// starts fresh — see DESIGN.md "optimizer state" note).
+    pub fn reset_opt(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 1.0;
+    }
+}
+
+/// Output of a client-side local-loss step.
+pub struct ClientStepOut {
+    /// Intermediate activation, kept as a literal so it can be fed straight
+    /// into the matching server step without a host round-trip.
+    pub z: Literal,
+    pub loss: f32,
+    /// Host wall-clock seconds of the PJRT execution (profiler input).
+    pub host_secs: f64,
+}
+
+/// Output of a server-side step.
+pub struct ServerStepOut {
+    pub loss: f32,
+    pub correct: f32,
+    pub host_secs: f64,
+}
+
+/// Output of a whole-model step (baselines).
+pub struct FullStepOut {
+    pub loss: f32,
+    pub correct: f32,
+    pub host_secs: f64,
+}
+
+/// Typed step dispatcher bound to one `Runtime`.
+pub struct StepEngine<'a> {
+    pub rt: &'a Runtime,
+}
+
+impl<'a> StepEngine<'a> {
+    pub fn new(rt: &'a Runtime) -> Self {
+        Self { rt }
+    }
+
+    fn state_literals(state: &TrainState, lr: f32) -> Result<[Literal; 5]> {
+        Ok([
+            lit::f32_vec(&state.params)?,
+            lit::f32_vec(&state.m)?,
+            lit::f32_vec(&state.v)?,
+            lit::f32_scalar(state.t),
+            lit::f32_scalar(lr),
+        ])
+    }
+
+    fn update_state(state: &mut TrainState, parts: &[Literal]) -> Result<()> {
+        lit::copy_to_f32(&parts[0], &mut state.params)?;
+        lit::copy_to_f32(&parts[1], &mut state.m)?;
+        lit::copy_to_f32(&parts[2], &mut state.v)?;
+        state.t = lit::scalar_f32(&parts[3])?;
+        Ok(())
+    }
+
+    /// One client-side local-loss training step (Algorithm 1, lines 15–19).
+    ///
+    /// `dcor_alpha` selects the privacy variant artifact with the given
+    /// distance-correlation weight (paper §4.4, Table 5).
+    pub fn client_step(
+        &self,
+        tier: usize,
+        state: &mut TrainState,
+        lr: f32,
+        x: &Literal,
+        y: &Literal,
+        dcor_alpha: Option<f32>,
+    ) -> Result<ClientStepOut> {
+        let name = match dcor_alpha {
+            Some(_) => format!("client_step_t{tier}_dcor"),
+            None => format!("client_step_t{tier}"),
+        };
+        let s = Self::state_literals(state, lr)?;
+        let alpha = dcor_alpha.map(lit::f32_scalar);
+        let mut inputs: Vec<&Literal> = vec![&s[0], &s[1], &s[2], &s[3], &s[4], x, y];
+        if let Some(a) = alpha.as_ref() {
+            inputs.push(a);
+        }
+        let (parts, secs) = self.rt.execute(&name, &inputs)?;
+        anyhow::ensure!(parts.len() == 6, "client_step returned {} parts", parts.len());
+        Self::update_state(state, &parts)?;
+        let loss = lit::scalar_f32(&parts[5])?;
+        let z = parts.into_iter().nth(4).unwrap();
+        Ok(ClientStepOut { z, loss, host_secs: secs })
+    }
+
+    /// One server-side step on (z, y) (Algorithm 1, lines 4–8).
+    pub fn server_step(
+        &self,
+        tier: usize,
+        state: &mut TrainState,
+        lr: f32,
+        z: &Literal,
+        y: &Literal,
+    ) -> Result<ServerStepOut> {
+        let name = format!("server_step_t{tier}");
+        let s = Self::state_literals(state, lr)?;
+        let inputs: Vec<&Literal> = vec![&s[0], &s[1], &s[2], &s[3], &s[4], z, y];
+        let (parts, secs) = self.rt.execute(&name, &inputs)?;
+        anyhow::ensure!(parts.len() == 6, "server_step returned {} parts", parts.len());
+        Self::update_state(state, &parts)?;
+        Ok(ServerStepOut {
+            loss: lit::scalar_f32(&parts[4])?,
+            correct: lit::scalar_f32(&parts[5])?,
+            host_secs: secs,
+        })
+    }
+
+    /// One whole-model step (FedAvg/SplitFed; `sgd` selects the plain-SGD
+    /// variant used for FedYogi pseudo-gradients).
+    pub fn full_step(
+        &self,
+        state: &mut TrainState,
+        lr: f32,
+        x: &Literal,
+        y: &Literal,
+        sgd: bool,
+    ) -> Result<FullStepOut> {
+        let name = if sgd { "full_step_sgd" } else { "full_step" };
+        let s = Self::state_literals(state, lr)?;
+        let inputs: Vec<&Literal> = vec![&s[0], &s[1], &s[2], &s[3], &s[4], x, y];
+        let (parts, secs) = self.rt.execute(name, &inputs)?;
+        anyhow::ensure!(parts.len() == 6, "full_step returned {} parts", parts.len());
+        Self::update_state(state, &parts)?;
+        Ok(FullStepOut {
+            loss: lit::scalar_f32(&parts[4])?,
+            correct: lit::scalar_f32(&parts[5])?,
+            host_secs: secs,
+        })
+    }
+
+    /// Evaluate the full model on one eval batch → (loss, correct_count).
+    pub fn eval_batch(&self, params: &[f32], x: &Literal, y: &Literal) -> Result<(f32, f32)> {
+        let p = lit::f32_vec(params)?;
+        let inputs: Vec<&Literal> = vec![&p, x, y];
+        let (parts, _) = self.rt.execute("eval", &inputs)?;
+        anyhow::ensure!(parts.len() == 2, "eval returned {} parts", parts.len());
+        Ok((lit::scalar_f32(&parts[0])?, lit::scalar_f32(&parts[1])?))
+    }
+}

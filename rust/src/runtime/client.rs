@@ -1,0 +1,132 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once, executes them
+//! from the round loop.
+//!
+//! One `Runtime` owns the PJRT CPU client and a cache of compiled
+//! executables keyed by artifact name, so re-tiering a client never
+//! recompiles anything — all (tier, kind) executables are compiled lazily on
+//! first use and reused for the rest of the run.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::metadata::Metadata;
+
+/// Compiled-executable cache statistics (exposed for perf accounting).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// PJRT client + artifact registry for one artifact set (one model config).
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    pub meta: Metadata,
+    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact set at `artifacts/<config>`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta = Metadata::load(&dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "runtime ready: platform={} devices={} config={}",
+            client.platform_name(),
+            client.device_count(),
+            meta.config
+        );
+        Ok(Self {
+            client,
+            dir,
+            meta,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    fn compiled(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let dt = t0.elapsed().as_secs_f64();
+        log::debug!("compiled artifact {name} in {dt:.2}s");
+        let mut stats = self.stats.lock().unwrap();
+        stats.compiles += 1;
+        stats.compile_secs += dt;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute the named artifact with the given inputs; returns the output
+    /// tuple elements (artifacts are lowered with `return_tuple=True`) and
+    /// the host-side wall time of the execution.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<(Vec<Literal>, f64)> {
+        self.compiled(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} output"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let parts = tuple.to_tuple().context("decomposing output tuple")?;
+        let mut stats = self.stats.lock().unwrap();
+        stats.executions += 1;
+        stats.execute_secs += dt;
+        Ok((parts, dt))
+    }
+
+    /// Warm the executable cache for every artifact a run may need.
+    pub fn warmup(&self, tiers: usize, dcor: bool) -> Result<()> {
+        for t in 1..=tiers {
+            self.compiled(&format!("client_step_t{t}"))?;
+            self.compiled(&format!("server_step_t{t}"))?;
+            if dcor && self.meta.has_dcor {
+                self.compiled(&format!("client_step_t{t}_dcor"))?;
+            }
+        }
+        self.compiled("full_step")?;
+        self.compiled("full_step_sgd")?;
+        self.compiled("eval")?;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+}

@@ -1,0 +1,115 @@
+//! Conversions between rust buffers and `xla::Literal`s.
+//!
+//! These sit on the hot path (every client/server step crosses them), so
+//! they use the untyped-data constructor — one memcpy, no per-element work.
+
+use anyhow::{anyhow, Result};
+use xla::{ArrayElement, Literal, PrimitiveType};
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(
+        n == data.len(),
+        "shape {:?} does not match data length {}",
+        dims,
+        data.len()
+    );
+    let mut lit = Literal::create_from_shape(PrimitiveType::F32, dims);
+    lit.copy_raw_from(data)?;
+    Ok(lit)
+}
+
+/// Build a rank-1 f32 literal.
+pub fn f32_vec(data: &[f32]) -> Result<Literal> {
+    f32_literal(data, &[data.len()])
+}
+
+/// Build a rank-1 i32 literal.
+pub fn i32_vec(data: &[i32]) -> Result<Literal> {
+    let mut lit = Literal::create_from_shape(PrimitiveType::S32, &[data.len()]);
+    lit.copy_raw_from(data)?;
+    Ok(lit)
+}
+
+/// Scalar f32 literal (Adam step counter, learning rate, alpha, ...).
+pub fn f32_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Copy a literal out to a Vec<f32>.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Copy a literal into an existing buffer (avoids an allocation on the
+/// aggregation hot path).
+pub fn copy_to_f32(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    anyhow::ensure!(
+        lit.element_count() == dst.len(),
+        "literal has {} elements, destination {}",
+        lit.element_count(),
+        dst.len()
+    );
+    lit.copy_raw_to(dst)?;
+    Ok(())
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar read: {e}"))
+}
+
+/// Sanity helper: element type must be f32.
+pub fn expect_f32(lit: &Literal) -> Result<()> {
+    let ty = lit.ty()?;
+    anyhow::ensure!(
+        ty == f32::TY,
+        "expected f32 literal, got {:?}",
+        ty
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.5, -0.125];
+        let lit = f32_literal(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![0i32, 5, -3, 9];
+        let lit = i32_vec(&data).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = f32_scalar(4.5);
+        assert_eq!(scalar_f32(&lit).unwrap(), 4.5);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn copy_to_existing_buffer() {
+        let data = vec![1.0f32, 2.0, 3.0];
+        let lit = f32_vec(&data).unwrap();
+        let mut dst = vec![0.0f32; 3];
+        copy_to_f32(&lit, &mut dst).unwrap();
+        assert_eq!(dst, data);
+        let mut wrong = vec![0.0f32; 2];
+        assert!(copy_to_f32(&lit, &mut wrong).is_err());
+    }
+}

@@ -1,0 +1,269 @@
+//! Deserialized `artifacts/<config>/metadata.json` — the contract between
+//! the JAX compile path (`python/compile/aot.py`) and this coordinator.
+//!
+//! The metadata pins down the **flat parameter layout**: every tensor of the
+//! global model serialized module-by-module into one f32 vector, so that the
+//! tier-m split is a single offset and aggregation is pure slicing.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor in the flat layout.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    /// 1-based module index (md1..md8, matching paper Tables 8–9).
+    pub module: usize,
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Start offset (in f32 elements) within the flat vector.
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Adam hyperparameters baked into the step artifacts.
+#[derive(Debug, Clone)]
+pub struct AdamMeta {
+    pub b1: f64,
+    pub b2: f64,
+    pub eps: f64,
+}
+
+/// Per-tier split geometry + transfer sizes (scheduler inputs).
+#[derive(Debug, Clone)]
+pub struct TierMeta {
+    /// 1-based tier id; tier m keeps modules md1..md_m on the client.
+    pub tier: usize,
+    pub cut_module: usize,
+    /// Flat offset where the server-side slice starts.
+    pub cut_offset: usize,
+    /// Length of the client-side *model* parameters (excludes aux head).
+    pub client_param_len: usize,
+    /// Length of the auxiliary head parameters.
+    pub aux_len: usize,
+    /// client_vec = client params ‖ aux params.
+    pub client_vec_len: usize,
+    pub server_vec_len: usize,
+    /// Intermediate activation shape (B, H, W, C).
+    pub z_shape: Vec<usize>,
+    /// Bytes of one activation batch uploaded to the server.
+    pub z_bytes_per_batch: usize,
+    /// Bytes of the client-side model download + upload per round
+    /// (`D_size(m)` model component in §3.3).
+    pub model_transfer_bytes: usize,
+}
+
+/// Full artifact-set metadata for one model config.
+#[derive(Debug, Clone)]
+pub struct Metadata {
+    pub config: String,
+    pub num_classes: usize,
+    pub image_hw: usize,
+    pub in_channels: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub widths: Vec<usize>,
+    pub strides: Vec<usize>,
+    pub blocks: Vec<usize>,
+    pub total_params: usize,
+    /// module_offsets[i] = flat offset where module (i+1) starts; the last
+    /// element is `total_params`.
+    pub module_offsets: Vec<usize>,
+    pub max_tiers: usize,
+    pub has_dcor: bool,
+    pub adam: AdamMeta,
+    pub tiers: Vec<TierMeta>,
+    pub params: Vec<ParamEntry>,
+}
+
+impl Metadata {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("metadata.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = crate::util::json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let meta = Self::from_json(&j).with_context(|| format!("decoding {}", path.display()))?;
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let adam = j.get("adam")?;
+        let tiers = j
+            .get("tiers")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(TierMeta {
+                    tier: t.get("tier")?.as_usize()?,
+                    cut_module: t.get("cut_module")?.as_usize()?,
+                    cut_offset: t.get("cut_offset")?.as_usize()?,
+                    client_param_len: t.get("client_param_len")?.as_usize()?,
+                    aux_len: t.get("aux_len")?.as_usize()?,
+                    client_vec_len: t.get("client_vec_len")?.as_usize()?,
+                    server_vec_len: t.get("server_vec_len")?.as_usize()?,
+                    z_shape: t.get("z_shape")?.usize_vec()?,
+                    z_bytes_per_batch: t.get("z_bytes_per_batch")?.as_usize()?,
+                    model_transfer_bytes: t.get("model_transfer_bytes")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    module: p.get("module")?.as_usize()?,
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                    offset: p.get("offset")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Metadata {
+            config: j.get("config")?.as_str()?.to_string(),
+            num_classes: j.get("num_classes")?.as_usize()?,
+            image_hw: j.get("image_hw")?.as_usize()?,
+            in_channels: j.get("in_channels")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            widths: j.get("widths")?.usize_vec()?,
+            strides: j.get("strides")?.usize_vec()?,
+            blocks: j.get("blocks")?.usize_vec()?,
+            total_params: j.get("total_params")?.as_usize()?,
+            module_offsets: j.get("module_offsets")?.usize_vec()?,
+            max_tiers: j.get("max_tiers")?.as_usize()?,
+            has_dcor: j.get("has_dcor")?.as_bool()?,
+            adam: AdamMeta {
+                b1: adam.get("b1")?.as_f64()?,
+                b2: adam.get("b2")?.as_f64()?,
+                eps: adam.get("eps")?.as_f64()?,
+            },
+            tiers,
+            params,
+        })
+    }
+
+    /// Geometry for one tier (1-based).
+    pub fn tier(&self, tier: usize) -> &TierMeta {
+        &self.tiers[tier - 1]
+    }
+
+    /// Flat offset at which the server-side slice of `tier` starts.
+    pub fn cut_offset(&self, tier: usize) -> usize {
+        self.tier(tier).cut_offset
+    }
+
+    /// Internal consistency checks; catches layout drift between python and
+    /// rust early instead of via silent mis-slicing.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.module_offsets.len() == 9,
+            "expected 8 modules + end offset, got {}",
+            self.module_offsets.len()
+        );
+        anyhow::ensure!(
+            *self.module_offsets.last().unwrap() == self.total_params,
+            "module offsets do not end at total_params"
+        );
+        anyhow::ensure!(self.tiers.len() == self.max_tiers, "tier table size");
+        let mut expect = 0usize;
+        for e in &self.params {
+            anyhow::ensure!(
+                e.offset == expect,
+                "param {} offset {} != expected {} (layout gap)",
+                e.name,
+                e.offset,
+                expect
+            );
+            expect += e.size();
+        }
+        anyhow::ensure!(expect == self.total_params, "params do not sum to total");
+        for t in &self.tiers {
+            anyhow::ensure!(
+                t.cut_offset == self.module_offsets[t.cut_module],
+                "tier {} cut offset mismatch",
+                t.tier
+            );
+            anyhow::ensure!(
+                t.client_param_len + t.server_vec_len == self.total_params,
+                "tier {} client+server != total",
+                t.tier
+            );
+            anyhow::ensure!(
+                t.client_vec_len == t.client_param_len + t.aux_len,
+                "tier {} client_vec_len mismatch",
+                t.tier
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Load a little-endian f32 binary blob (initial parameters).
+pub fn load_f32_bin(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "f32 bin length not multiple of 4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        d.join("metadata.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_and_validates_tiny_metadata() {
+        let Some(dir) = artifacts_dir() else { return };
+        let meta = Metadata::load(&dir).unwrap();
+        assert_eq!(meta.config, "tiny");
+        assert_eq!(meta.max_tiers, 7);
+        assert!(meta.total_params > 0);
+        // client slice of tier m must end exactly where server slice starts
+        for t in &meta.tiers {
+            assert_eq!(t.client_param_len, t.cut_offset);
+        }
+        // adam hyperparameters round-trip
+        assert!((meta.adam.b1 - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn init_bin_matches_total_params() {
+        let Some(dir) = artifacts_dir() else { return };
+        let meta = Metadata::load(&dir).unwrap();
+        let init = load_f32_bin(&dir.join("init_full.bin")).unwrap();
+        assert_eq!(init.len(), meta.total_params);
+        for t in &meta.tiers {
+            let aux = load_f32_bin(&dir.join(format!("init_aux_t{}.bin", t.tier))).unwrap();
+            assert_eq!(aux.len(), t.aux_len);
+        }
+    }
+
+    #[test]
+    fn tier_transfer_sizes_monotone_in_model_bytes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let meta = Metadata::load(&dir).unwrap();
+        for w in meta.tiers.windows(2) {
+            assert!(
+                w[1].model_transfer_bytes >= w[0].model_transfer_bytes,
+                "client model grows with tier"
+            );
+        }
+    }
+}

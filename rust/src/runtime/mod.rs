@@ -1,0 +1,13 @@
+//! PJRT runtime layer: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text) and executes them on the CPU PJRT
+//! client via the `xla` crate. See `/opt/xla-example/` for the minimal
+//! pattern this generalizes.
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+pub mod metadata;
+
+pub use artifact::{ClientStepOut, FullStepOut, ServerStepOut, StepEngine, TrainState};
+pub use client::{Runtime, RuntimeStats};
+pub use metadata::{load_f32_bin, Metadata, ParamEntry, TierMeta};

@@ -1,0 +1,94 @@
+//! Virtual clock: accumulates *simulated* training time.
+//!
+//! The paper reports training time on simulated CPU/network profiles; we do
+//! the same. Real PJRT step times (measured on this host) are scaled by each
+//! client's profile and combined per Eq. (5); the clock advances by the
+//! round makespan max_k T_k since clients train in parallel.
+
+/// Per-client simulated timings for one round (Eq. 5 components).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClientRoundTime {
+    /// Client-side compute seconds T^c_k.
+    pub compute: f64,
+    /// Communication seconds T^com_k (model down/up + activations).
+    pub comm: f64,
+    /// Server-side compute seconds for this client's model T^s_k.
+    pub server: f64,
+}
+
+impl ClientRoundTime {
+    /// Overall per-client round time, Eq. (5):
+    /// T_k = max(T^c + T^com, T^s + T^com).
+    pub fn total(&self) -> f64 {
+        (self.compute + self.comm).max(self.server + self.comm)
+    }
+}
+
+/// Simulated wall clock for one training run.
+#[derive(Debug, Default, Clone)]
+pub struct VirtualClock {
+    now: f64,
+    rounds: usize,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance by the makespan of a round (slowest participating client —
+    /// the straggler determines the round time, §3.3).
+    pub fn advance_round(&mut self, times: &[ClientRoundTime]) -> f64 {
+        let makespan = times.iter().map(|t| t.total()).fold(0.0, f64::max);
+        self.now += makespan;
+        self.rounds += 1;
+        makespan
+    }
+
+    /// Advance by an explicit duration (aggregation overhead, profiling...).
+    pub fn advance(&mut self, secs: f64) {
+        self.now += secs;
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_takes_max_of_parallel_paths() {
+        let t = ClientRoundTime { compute: 2.0, comm: 1.0, server: 5.0 };
+        // server path dominates: 5 + 1
+        assert!((t.total() - 6.0).abs() < 1e-12);
+        let t = ClientRoundTime { compute: 9.0, comm: 1.0, server: 5.0 };
+        assert!((t.total() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_advances_by_straggler() {
+        let mut clock = VirtualClock::new();
+        let times = vec![
+            ClientRoundTime { compute: 1.0, comm: 0.5, server: 0.2 },
+            ClientRoundTime { compute: 8.0, comm: 1.0, server: 0.2 }, // straggler
+            ClientRoundTime { compute: 2.0, comm: 0.1, server: 0.2 },
+        ];
+        let makespan = clock.advance_round(&times);
+        assert!((makespan - 9.0).abs() < 1e-12);
+        assert!((clock.now() - 9.0).abs() < 1e-12);
+        assert_eq!(clock.rounds(), 1);
+    }
+
+    #[test]
+    fn empty_round_is_zero() {
+        let mut clock = VirtualClock::new();
+        assert_eq!(clock.advance_round(&[]), 0.0);
+    }
+}

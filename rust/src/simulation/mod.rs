@@ -1,0 +1,48 @@
+//! Heterogeneity simulation: resource profiles, the dynamic environment,
+//! and the virtual clock that turns real PJRT step timings into the
+//! simulated training times the paper reports.
+
+pub mod clock;
+pub mod profile;
+
+pub use clock::{ClientRoundTime, VirtualClock};
+pub use profile::{
+    DynamicEnvironment, ProfilePool, ResourceProfile, CASE1_PROFILES, CASE2_PROFILES,
+    PAPER_PROFILES,
+};
+
+/// Server compute model: the paper's server is a GPU box that trains all
+/// per-client server-side models; ours is the same CPU that runs clients'
+/// steps. `speedup` converts measured host seconds into simulated server
+/// seconds (server assumed `speedup`× faster than the 1-CPU reference);
+/// `parallel_factor` models how many per-client server models train
+/// concurrently.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerModel {
+    pub speedup: f64,
+    pub parallel_factor: f64,
+}
+
+impl Default for ServerModel {
+    fn default() -> Self {
+        Self { speedup: 8.0, parallel_factor: 4.0 }
+    }
+}
+
+impl ServerModel {
+    /// Simulated server seconds for work measuring `ref_secs` on the host.
+    pub fn secs(&self, ref_secs: f64) -> f64 {
+        ref_secs / self.speedup
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_model_scales() {
+        let s = ServerModel { speedup: 8.0, parallel_factor: 1.0 };
+        assert!((s.secs(4.0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,212 @@
+//! Heterogeneous resource profiles (paper §4.1).
+//!
+//! The paper simulates client heterogeneity by assigning each client a
+//! (simulated CPUs, network Mbps) profile; we do exactly the same. Compute
+//! time scales inversely with the CPU share; communication time is
+//! bytes / bandwidth. Profiles can be re-drawn during training to model a
+//! dynamic environment (30% of clients every 50 rounds in Table 3).
+
+use crate::util::Rng64;
+
+/// One client's simulated capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceProfile {
+    /// Simulated CPU share; 1.0 ≡ one reference core. Compute time on this
+    /// client = reference time / cpus.
+    pub cpus: f64,
+    /// Link speed to the server in Mbit/s.
+    pub mbps: f64,
+}
+
+impl ResourceProfile {
+    pub const fn new(cpus: f64, mbps: f64) -> Self {
+        Self { cpus, mbps }
+    }
+
+    /// Simulated compute seconds for work that takes `ref_secs` on the
+    /// reference (1-CPU) host.
+    pub fn compute_secs(&self, ref_secs: f64) -> f64 {
+        ref_secs / self.cpus
+    }
+
+    /// Simulated seconds to move `bytes` over this client's link.
+    pub fn comm_secs(&self, bytes: usize) -> f64 {
+        (bytes as f64 * 8.0) / (self.mbps * 1e6)
+    }
+}
+
+/// The paper's five cross-device/cross-silo profiles (§4.1).
+pub const PAPER_PROFILES: [ResourceProfile; 5] = [
+    ResourceProfile::new(4.0, 100.0),
+    ResourceProfile::new(2.0, 30.0),
+    ResourceProfile::new(1.0, 30.0),
+    ResourceProfile::new(0.2, 30.0),
+    ResourceProfile::new(0.1, 10.0),
+];
+
+/// Table 1 "Case 1" profiles.
+pub const CASE1_PROFILES: [ResourceProfile; 3] = [
+    ResourceProfile::new(2.0, 30.0),
+    ResourceProfile::new(1.0, 30.0),
+    ResourceProfile::new(0.2, 30.0),
+];
+
+/// Table 1 "Case 2" profiles.
+pub const CASE2_PROFILES: [ResourceProfile; 3] = [
+    ResourceProfile::new(4.0, 100.0),
+    ResourceProfile::new(1.0, 30.0),
+    ResourceProfile::new(0.1, 10.0),
+];
+
+/// A named profile pool used by configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProfilePool {
+    /// The five paper profiles, 20% of clients each.
+    Paper,
+    /// Table 1 / Figure 3 case 1.
+    Case1,
+    /// Table 1 / Figure 3 case 2.
+    Case2,
+    /// Every client identical (1 CPU, 30 Mbps) — homogeneity ablation.
+    Uniform,
+}
+
+impl ProfilePool {
+    pub fn from_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "paper" => ProfilePool::Paper,
+            "case1" => ProfilePool::Case1,
+            "case2" => ProfilePool::Case2,
+            "uniform" => ProfilePool::Uniform,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ProfilePool::Paper => "paper",
+            ProfilePool::Case1 => "case1",
+            ProfilePool::Case2 => "case2",
+            ProfilePool::Uniform => "uniform",
+        }
+    }
+
+    pub fn profiles(self) -> &'static [ResourceProfile] {
+        match self {
+            ProfilePool::Paper => &PAPER_PROFILES,
+            ProfilePool::Case1 => &CASE1_PROFILES,
+            ProfilePool::Case2 => &CASE2_PROFILES,
+            ProfilePool::Uniform => &PAPER_PROFILES[2..3],
+        }
+    }
+
+    /// Deterministic initial assignment: profiles are spread evenly (the
+    /// paper assigns 20% of clients to each of the five profiles), then the
+    /// assignment order is shuffled by `rng`.
+    pub fn assign(self, clients: usize, rng: &mut Rng64) -> Vec<ResourceProfile> {
+        let pool = self.profiles();
+        let mut out: Vec<ResourceProfile> =
+            (0..clients).map(|i| pool[i % pool.len()]).collect();
+        rng.shuffle(&mut out);
+        out
+    }
+}
+
+/// Dynamic environment: every `switch_every` rounds, `switch_frac` of the
+/// clients are re-assigned a random profile from the pool (Table 3 uses
+/// 30% every 50 rounds; Figure 3 switches every 20 rounds).
+#[derive(Debug, Clone)]
+pub struct DynamicEnvironment {
+    pub pool: ProfilePool,
+    pub switch_every: usize,
+    pub switch_frac: f64,
+}
+
+impl DynamicEnvironment {
+    /// Mutates `profiles` in place at the start of round `round`; returns
+    /// the indices of clients whose profile changed.
+    pub fn maybe_switch(
+        &self,
+        round: usize,
+        profiles: &mut [ResourceProfile],
+        rng: &mut Rng64,
+    ) -> Vec<usize> {
+        if self.switch_every == 0 || round == 0 || round % self.switch_every != 0 {
+            return Vec::new();
+        }
+        let k = ((profiles.len() as f64) * self.switch_frac).round() as usize;
+        let idx = rng.sample_indices(profiles.len(), k);
+        let pool = self.pool.profiles();
+        for &i in &idx {
+            profiles[i] = pool[rng.gen_range(0, pool.len())];
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_time_scales_inversely_with_cpus() {
+        let fast = ResourceProfile::new(4.0, 100.0);
+        let slow = ResourceProfile::new(0.1, 10.0);
+        assert!((fast.compute_secs(1.0) - 0.25).abs() < 1e-12);
+        assert!((slow.compute_secs(1.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_time_matches_bandwidth() {
+        let p = ResourceProfile::new(1.0, 30.0);
+        // 30 Mbps -> 3.75 MB/s; 3.75 MB should take 1s.
+        let bytes = 3_750_000;
+        assert!((p.comm_secs(bytes) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_pool_assignment_is_balanced() {
+        let mut rng = Rng64::seed_from_u64(7);
+        let assigned = ProfilePool::Paper.assign(10, &mut rng);
+        assert_eq!(assigned.len(), 10);
+        // 10 clients over 5 profiles -> each profile exactly twice.
+        for p in PAPER_PROFILES {
+            assert_eq!(assigned.iter().filter(|&&a| a == p).count(), 2);
+        }
+    }
+
+    #[test]
+    fn dynamic_environment_switches_expected_fraction() {
+        let mut rng = Rng64::seed_from_u64(1);
+        let env = DynamicEnvironment {
+            pool: ProfilePool::Paper,
+            switch_every: 50,
+            switch_frac: 0.3,
+        };
+        let mut profiles = ProfilePool::Paper.assign(10, &mut rng);
+        assert!(env.maybe_switch(49, &mut profiles, &mut rng).is_empty());
+        assert!(env.maybe_switch(0, &mut profiles, &mut rng).is_empty());
+        let changed = env.maybe_switch(50, &mut profiles, &mut rng);
+        assert_eq!(changed.len(), 3);
+    }
+
+    #[test]
+    fn uniform_pool_is_homogeneous() {
+        let mut rng = Rng64::seed_from_u64(2);
+        let assigned = ProfilePool::Uniform.assign(6, &mut rng);
+        assert!(assigned.iter().all(|p| *p == assigned[0]));
+    }
+
+    #[test]
+    fn pool_names_round_trip() {
+        for p in [
+            ProfilePool::Paper,
+            ProfilePool::Case1,
+            ProfilePool::Case2,
+            ProfilePool::Uniform,
+        ] {
+            assert_eq!(ProfilePool::from_name(p.name()), Some(p));
+        }
+        assert_eq!(ProfilePool::from_name("bogus"), None);
+    }
+}

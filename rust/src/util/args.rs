@@ -1,0 +1,119 @@
+//! Minimal CLI argument parser (offline testbed — no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; used by the `dtfl` binary and the examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(items: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_opt(&self, name: &str) -> Result<Option<usize>> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.usize_opt(name)?.unwrap_or(default))
+    }
+
+    pub fn f64_opt(&self, name: &str) -> Result<Option<f64>> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        Ok(self.f64_opt(name)?.unwrap_or(default))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NOTE: a bare boolean flag greedily consumes a following non-flag
+        // token ("--verbose pos" means verbose=pos); put positionals before
+        // flags or use --flag=true.
+        let a = parse("run pos2 --config x.toml --rounds=20 --verbose");
+        assert_eq!(a.positional, vec!["run", "pos2"]);
+        assert_eq!(a.get("config"), Some("x.toml"));
+        assert_eq!(a.usize_or("rounds", 0).unwrap(), 20);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn required_missing() {
+        let a = parse("run");
+        assert!(a.req("config").is_err());
+    }
+
+    #[test]
+    fn numeric_errors_surface() {
+        let a = parse("--rounds abc");
+        assert!(a.usize_or("rounds", 0).is_err());
+    }
+}

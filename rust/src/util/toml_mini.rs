@@ -1,0 +1,265 @@
+//! Mini-TOML parser for experiment configs (offline testbed — no `toml`).
+//!
+//! Supports the subset `configs/*.toml` uses: `[section]` headers (one
+//! level, dotted names kept verbatim), `key = value` with strings, bools,
+//! integers, floats, and `#` comments. Values are exposed through typed
+//! getters with defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(v) => Ok(*v),
+            TomlValue::Int(v) => Ok(*v as f64),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(v) if *v >= 0 => Ok(*v as usize),
+            _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+}
+
+/// Parsed document: section name → key → value. Top-level keys live under
+/// the "" section.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(!name.is_empty(), "line {}: empty section", lineno + 1);
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim().to_string();
+            anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: value for '{}'", lineno + 1, key))?;
+            doc.sections.get_mut(&current).unwrap().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn section<'a>(&'a self, name: &'a str) -> Section<'a> {
+        Section { doc: self, name }
+    }
+
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.contains_key(name)
+    }
+}
+
+/// Typed accessor for one section (missing section == empty section).
+pub struct Section<'a> {
+    doc: &'a TomlDoc,
+    name: &'a str,
+}
+
+impl Section<'_> {
+    fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.doc.sections.get(self.name)?.get(key)
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.get(key)
+            .ok_or_else(|| anyhow!("[{}] missing required key '{}'", self.name, key))?
+            .as_str()
+            .map(str::to_string)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn opt_str(&self, key: &str) -> Result<Option<String>> {
+        self.get(key).map(|v| v.as_str().map(str::to_string)).transpose()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.as_usize(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key).map(TomlValue::as_usize).transpose()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key).map(TomlValue::as_f64).transpose()
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.usize_or(key, default as usize)? as u64)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no '#' inside strings in our configs except when quoted — handle the
+    // quoted case by scanning
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    anyhow::ensure!(!text.is_empty(), "empty value");
+    if let Some(stripped) = text.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string: {text}"))?;
+        anyhow::ensure!(!inner.contains('"'), "nested quotes unsupported: {text}");
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(v) = text.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("cannot parse value: {text}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+        # experiment
+        top = 1
+        [model]
+        artifact = "tiny"        # artifact set
+        [run]
+        method = "dtfl"
+        rounds = 40
+        lr = 1e-3
+        sample_frac = 0.5
+        non_iid = false
+        target_accuracy = 0.8
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.section("").usize_or("top", 0).unwrap(), 1);
+        assert_eq!(d.section("model").req_str("artifact").unwrap(), "tiny");
+        let run = d.section("run");
+        assert_eq!(run.req_str("method").unwrap(), "dtfl");
+        assert_eq!(run.usize_or("rounds", 0).unwrap(), 40);
+        assert!((run.f64_or("lr", 0.0).unwrap() - 1e-3).abs() < 1e-12);
+        assert!(!run.bool_or("non_iid", true).unwrap());
+        assert_eq!(run.opt_f64("target_accuracy").unwrap(), Some(0.8));
+        assert_eq!(run.opt_f64("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_sections() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.section("sim").f64_or("server_speedup", 8.0).unwrap(), 8.0);
+        assert!(!d.has_section("sim"));
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let d = TomlDoc::parse("[model]\n").unwrap();
+        assert!(d.section("model").req_str("artifact").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let d = TomlDoc::parse("[a]\nk = \"x # y\"\n").unwrap();
+        assert_eq!(d.section("a").req_str("k").unwrap(), "x # y");
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("justakey\n").is_err());
+        assert!(TomlDoc::parse("k = \"open\n").is_err());
+    }
+
+    #[test]
+    fn underscored_integers() {
+        let d = TomlDoc::parse("n = 10_000\n").unwrap();
+        assert_eq!(d.section("").usize_or("n", 0).unwrap(), 10_000);
+    }
+}

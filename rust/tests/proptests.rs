@@ -1,0 +1,275 @@
+//! Property-based tests (hand-rolled randomized driver — no proptest crate
+//! on this offline testbed). Each property runs against a few hundred
+//! seeded random cases; failures print the seed for reproduction.
+
+use dtfl::coordinator::{aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile};
+use dtfl::data::{partition, patch_shuffle, synth, PartitionScheme};
+use dtfl::runtime::Metadata;
+use dtfl::simulation::ServerModel;
+use dtfl::util::json;
+use dtfl::util::Rng64;
+
+fn tiny_meta() -> Option<Metadata> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    Metadata::load(&d).ok()
+}
+
+/// Drive `prop` over `cases` seeded random cases.
+fn forall(cases: u64, mut prop: impl FnMut(&mut Rng64, u64)) {
+    for seed in 0..cases {
+        let mut rng = Rng64::seed_from_u64(0xbeef ^ seed);
+        prop(&mut rng, seed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// aggregation invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_aggregation_preserves_constant_models() {
+    // if every client holds the SAME value v everywhere, the aggregate is v
+    // regardless of tier mixture and weights
+    let Some(meta) = tiny_meta() else { return };
+    forall(50, |rng, seed| {
+        let v = rng.gen_f32(-3.0, 3.0);
+        let k = rng.gen_range(1, 8);
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
+            &meta,
+        );
+        let updates: Vec<ClientUpdate> = (0..k)
+            .map(|i| {
+                let tier = rng.gen_range(1, meta.max_tiers + 1);
+                let t = meta.tier(tier);
+                ClientUpdate {
+                    client_id: i,
+                    tier,
+                    weight: rng.gen_f64(1.0, 500.0),
+                    client_vec: vec![v; t.client_vec_len],
+                    server_vec: vec![v; t.server_vec_len],
+                }
+            })
+            .collect();
+        let g = aggregate(&meta, &prev, &updates).unwrap();
+        for (i, &x) in g.flat.iter().enumerate() {
+            assert!(
+                (x - v).abs() < 1e-4,
+                "seed {seed}: flat[{i}]={x} expected {v}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_aggregation_is_convex_combination() {
+    // every aggregated coordinate lies within [min, max] of contributions
+    let Some(meta) = tiny_meta() else { return };
+    forall(30, |rng, seed| {
+        let k = rng.gen_range(2, 6);
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
+            &meta,
+        );
+        let vals: Vec<f32> = (0..k).map(|_| rng.gen_f32(-2.0, 2.0)).collect();
+        let updates: Vec<ClientUpdate> = vals
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| {
+                let tier = rng.gen_range(1, meta.max_tiers + 1);
+                let t = meta.tier(tier);
+                ClientUpdate {
+                    client_id: i,
+                    tier,
+                    weight: rng.gen_f64(1.0, 100.0),
+                    client_vec: vec![v; t.client_vec_len],
+                    server_vec: vec![v; t.server_vec_len],
+                }
+            })
+            .collect();
+        let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min) - 1e-4;
+        let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max) + 1e-4;
+        let g = aggregate(&meta, &prev, &updates).unwrap();
+        assert!(
+            g.flat.iter().all(|&x| (lo..=hi).contains(&x)),
+            "seed {seed}: aggregate escaped the convex hull [{lo}, {hi}]"
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// scheduler invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_respects_tmax_and_bounds() {
+    let Some(meta) = tiny_meta() else { return };
+    let profile = TierProfile {
+        client_batch_secs: (0..meta.max_tiers).map(|i| 0.05 + 0.03 * i as f64).collect(),
+        server_batch_secs: (0..meta.max_tiers).map(|i| 0.3 - 0.04 * i as f64).collect(),
+    };
+    let server = ServerModel::default();
+    forall(100, |rng, seed| {
+        let k = rng.gen_range(1, 20);
+        let mut prof = Profiler::new(profile.clone(), k, 0.5);
+        for i in 0..k {
+            // random client speeds spanning 100x and random link speeds
+            prof.observe(
+                i,
+                rng.gen_range(1, meta.max_tiers + 1),
+                rng.gen_f64(0.01, 1.0),
+                rng.gen_f64(1e5, 1e8),
+            );
+        }
+        let loads: Vec<ClientLoad> = (0..k)
+            .map(|_| ClientLoad { n_batches: rng.gen_range(1, 10), participating: true })
+            .collect();
+        let s = schedule(&meta, &prof, &server, &loads, meta.max_tiers);
+        assert_eq!(s.assignments.len(), k, "seed {seed}");
+        for a in &s.assignments {
+            assert!(
+                (1..=meta.max_tiers).contains(&a.tier),
+                "seed {seed}: tier {} out of range",
+                a.tier
+            );
+            // T_max is achievable by everyone: best estimate <= T_max
+            assert!(
+                a.est_best_secs <= s.t_max + 1e-9,
+                "seed {seed}: client {} best {} > t_max {}",
+                a.client_id,
+                a.est_best_secs,
+                s.t_max
+            );
+            // assigned tier estimate never exceeds T_max (minimized makespan)
+            assert!(
+                a.est_secs <= s.t_max + 1e-6,
+                "seed {seed}: client {} est {} > t_max {}",
+                a.client_id,
+                a.est_secs,
+                s.t_max
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_monotone_in_client_speed() {
+    // making a client strictly slower (same link) never raises its tier
+    let Some(meta) = tiny_meta() else { return };
+    let profile = TierProfile {
+        client_batch_secs: (0..meta.max_tiers).map(|i| 0.05 + 0.03 * i as f64).collect(),
+        server_batch_secs: (0..meta.max_tiers).map(|i| 0.3 - 0.04 * i as f64).collect(),
+    };
+    let server = ServerModel::default();
+    forall(60, |rng, seed| {
+        let base = rng.gen_f64(0.01, 0.5);
+        let slow_factor = rng.gen_f64(1.5, 30.0);
+        let nu = rng.gen_f64(1e6, 1e8);
+        let mk = |speed: f64| {
+            let mut prof = Profiler::new(profile.clone(), 2, 0.5);
+            prof.observe(0, 3, speed, nu);
+            prof.observe(1, 3, 0.05, nu); // anchor client fixes T_max scale
+            prof
+        };
+        let loads = vec![ClientLoad { n_batches: 4, participating: true }; 2];
+        let fast = schedule(&meta, &mk(base), &server, &loads, meta.max_tiers);
+        let slow = schedule(&meta, &mk(base * slow_factor), &server, &loads, meta.max_tiers);
+        assert!(
+            slow.tier_of(0) <= fast.tier_of(0),
+            "seed {seed}: slower client got higher tier ({} > {})",
+            slow.tier_of(0),
+            fast.tier_of(0)
+        );
+    });
+}
+
+// ---------------------------------------------------------------------
+// data invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_partition_is_disjoint_cover() {
+    forall(20, |rng, seed| {
+        let n = rng.gen_range(20, 300);
+        let clients = rng.gen_range(1, 12);
+        let spec = synth::DatasetSpec::tiny(n, 8);
+        let ds = synth::generate_train(&spec);
+        let scheme = if seed % 2 == 0 {
+            PartitionScheme::Iid
+        } else {
+            PartitionScheme::Dirichlet { alpha: rng.gen_f64(0.1, 5.0) }
+        };
+        let p = partition(&ds, clients, scheme, seed);
+        let mut all: Vec<usize> = p.client_indices.concat();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..n).collect();
+        assert_eq!(all, expect, "seed {seed}: not a disjoint cover");
+    });
+}
+
+#[test]
+fn prop_patch_shuffle_preserves_values_any_geometry() {
+    forall(40, |rng, seed| {
+        let b = rng.gen_range(1, 4);
+        let h = [4usize, 8, 16][rng.gen_range(0, 3)];
+        let w = h;
+        let c = rng.gen_range(1, 6);
+        let patch = [1usize, 2, 4, 3][rng.gen_range(0, 4)];
+        let mut z: Vec<f32> = (0..b * h * w * c).map(|i| i as f32).collect();
+        let mut sorted_before = z.clone();
+        patch_shuffle(&mut z, &[b, h, w, c], patch, seed);
+        let mut sorted_after = z;
+        sorted_before.sort_by(f32::total_cmp);
+        sorted_after.sort_by(f32::total_cmp);
+        assert_eq!(sorted_before, sorted_after, "seed {seed}: values changed");
+    });
+}
+
+// ---------------------------------------------------------------------
+// codec invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_json(rng: &mut Rng64, depth: usize) -> json::Json {
+        match if depth == 0 { rng.gen_range(0, 4) } else { rng.gen_range(0, 6) } {
+            0 => json::Json::Null,
+            1 => json::Json::Bool(rng.next_f64() < 0.5),
+            2 => json::Json::Num((rng.gen_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => json::Json::Str(format!("s{}-\"x\"\n", rng.gen_range(0, 1000))),
+            4 => json::Json::Arr((0..rng.gen_range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => json::Json::Obj(
+                (0..rng.gen_range(0, 5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(200, |rng, seed| {
+        let doc = random_json(rng, 3);
+        let text = doc.to_string_pretty();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(doc, back, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_rng_gen_range_uniformity() {
+    // chi-square-ish sanity: each of 10 buckets within 3x of expectation
+    forall(5, |rng, seed| {
+        let mut counts = [0usize; 10];
+        let n = 20_000;
+        for _ in 0..n {
+            counts[rng.gen_range(0, 10)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (n / 10 / 2..n / 10 * 2).contains(&c),
+                "seed {seed}: bucket {i} count {c} far from {}",
+                n / 10
+            );
+        }
+    });
+}
