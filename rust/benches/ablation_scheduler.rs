@@ -74,7 +74,7 @@ fn oracle_tiers(
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     if !dir.join("metadata.json").exists() {
         eprintln!("tiny artifacts missing; run `make artifacts`");

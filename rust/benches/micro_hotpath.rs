@@ -1,30 +1,58 @@
 //! L3 hot-path micro-benchmarks (the §Perf targets):
 //!   * flat-layout aggregation (O(K·P) FMAs — the per-round CPU hot loop)
 //!   * dynamic tier scheduling (O(K·M) estimates)
-//!   * literal construction / extraction (FFI boundary per step)
+//!   * literal construction / extraction (backend boundary per step)
 //!   * batch assembly, patch shuffling, dataset generation
+//!   * `bench_round`: whole-round throughput, sequential (1 thread) vs the
+//!     parallel round engine (all cores), K=50 clients
 //!
 //! Run: `cargo bench --bench micro_hotpath`
+//!
+//! Emits `BENCH_hotpath.json` at the repository root so the perf trajectory
+//! is tracked across PRs.
 
 use std::time::Duration;
 
-use dtfl::coordinator::{aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile};
+use dtfl::coordinator::{
+    aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile,
+};
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
+use dtfl::harness::measure_round_throughput;
 use dtfl::runtime::{literal as lit, Metadata};
 use dtfl::simulation::ServerModel;
-use dtfl::util::bench::{bench, section};
+use dtfl::util::bench::{bench, hotpath_report_path, section, BenchReport};
 use dtfl::util::Rng64;
 
-fn tiny_meta() -> Option<Metadata> {
+fn tiny_meta() -> Metadata {
+    // `tiny` is a built-in config: Metadata::load synthesizes it even with
+    // no artifacts on disk
     let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    Metadata::load(&d).ok()
+    Metadata::load(&d).expect("tiny is a built-in config")
+}
+
+/// Round-throughput comparison: K clients, 1 thread vs all cores (shared
+/// probe in `harness::measure_round_throughput`).
+fn bench_round(report: &mut BenchReport, clients: usize, rounds: usize) {
+    section(&format!("bench_round: K={clients} sequential vs parallel"));
+    let rt = measure_round_throughput(clients, rounds, 16).expect("round throughput probe");
+    assert!(rt.bit_identical, "parallel round engine must be bit-identical to sequential");
+    println!(
+        "K={clients}: sequential {:.3}s/round, parallel({} threads) {:.3}s/round — {:.2}x",
+        rt.seq_secs_per_round,
+        rt.threads,
+        rt.par_secs_per_round,
+        rt.speedup()
+    );
+    report.extra("bench_round", rt.to_json("cargo bench micro_hotpath"));
 }
 
 fn main() {
     let budget = Duration::from_secs(3);
+    let mut report = BenchReport::new();
 
     // ---------------- aggregation ----------------
-    if let Some(meta) = tiny_meta() {
+    {
+        let meta = tiny_meta();
         section("aggregation (step ⑤): K clients × P params");
         let prev = GlobalModel::new(
             vec![0.1; meta.total_params],
@@ -45,7 +73,7 @@ fn main() {
                     }
                 })
                 .collect();
-            bench(
+            report.push(bench(
                 &format!("aggregate K={k} P={}", meta.total_params),
                 200,
                 budget,
@@ -53,7 +81,7 @@ fn main() {
                     let g = aggregate(&meta, &prev, &updates).unwrap();
                     std::hint::black_box(g.flat[0]);
                 },
-            );
+            ));
         }
 
         // ---------------- scheduler ----------------
@@ -70,48 +98,56 @@ fn main() {
             }
             let loads = vec![ClientLoad { n_batches: 4, participating: true }; k];
             let server = ServerModel::default();
-            bench(&format!("schedule K={k} M={}", meta.max_tiers), 500, budget, || {
-                let s = schedule(&meta, &prof, &server, &loads, meta.max_tiers);
-                std::hint::black_box(s.t_max);
-            });
+            report.push(bench(
+                &format!("schedule K={k} M={}", meta.max_tiers),
+                500,
+                budget,
+                || {
+                    let s = schedule(&meta, &prof, &server, &loads, meta.max_tiers);
+                    std::hint::black_box(s.t_max);
+                },
+            ));
         }
-    } else {
-        eprintln!("tiny artifacts missing — aggregation/scheduler benches skipped");
     }
 
     // ---------------- literal conversions ----------------
-    section("literal conversions (FFI boundary, per step)");
+    section("literal conversions (backend boundary, per step)");
     for n in [44_370usize, 400_000] {
         let data = vec![0.5f32; n];
-        bench(&format!("f32_vec -> literal n={n}"), 500, budget, || {
+        report.push(bench(&format!("f32_vec -> literal n={n}"), 500, budget, || {
             let l = lit::f32_vec(&data).unwrap();
             std::hint::black_box(l.element_count());
-        });
+        }));
         let l = lit::f32_vec(&data).unwrap();
         let mut dst = vec![0.0f32; n];
-        bench(&format!("literal -> buffer  n={n}"), 500, budget, || {
+        report.push(bench(&format!("literal -> buffer  n={n}"), 500, budget, || {
             lit::copy_to_f32(&l, &mut dst).unwrap();
             std::hint::black_box(dst[0]);
-        });
+        }));
     }
 
     // ---------------- data pipeline ----------------
     section("data pipeline");
     let spec = DatasetSpec::tiny(512, 64);
-    bench("generate_train 512x16x16x3", 20, budget, || {
+    report.push(bench("generate_train 512x16x16x3", 20, budget, || {
         let d = generate_train(&spec);
         std::hint::black_box(d.images.len());
-    });
+    }));
     let ds = generate_train(&spec);
     let idx: Vec<usize> = (0..64).collect();
     let b = Batcher::new(&ds, &idx, 8);
-    bench("batch assembly 8x16x16x3", 2000, budget, || {
+    report.push(bench("batch assembly 8x16x16x3", 2000, budget, || {
         let bt = b.batch(0).unwrap();
         std::hint::black_box(bt.size);
-    });
+    }));
     let mut z = vec![0.5f32; 8 * 16 * 16 * 8];
-    bench("patch_shuffle 8x16x16x8 p=4", 2000, budget, || {
+    report.push(bench("patch_shuffle 8x16x16x8 p=4", 2000, budget, || {
         patch_shuffle(&mut z, &[8, 16, 16, 8], 4, 9);
         std::hint::black_box(z[0]);
-    });
+    }));
+
+    // ---------------- whole-round throughput ----------------
+    bench_round(&mut report, 50, 2);
+
+    report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -12,7 +12,7 @@ use dtfl::harness::RunSpec;
 use dtfl::simulation::ProfilePool;
 use dtfl::util::bench::section;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     let art = std::env::var("DTFL_BENCH_ARTIFACT").unwrap_or_else(|_| "tiny".into());
     let dataset = if art == "tiny" { "tiny" } else { "cifar10" };
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(&art);

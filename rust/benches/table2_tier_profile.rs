@@ -15,7 +15,7 @@ use dtfl::coordinator::{load_initial_model, profile_tiers};
 use dtfl::runtime::Runtime;
 use dtfl::util::bench::{bench, section};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let art = std::env::var("DTFL_BENCH_ARTIFACT").unwrap_or_else(|_| "tiny".into());
     let dir = root.join(&art);

@@ -13,13 +13,13 @@
 //! ```
 
 use dtfl::coordinator::{Dtfl, DtflOptions};
-use dtfl::data::{generate_train, partition, DatasetSpec, PartitionScheme};
+use dtfl::data::{generate_train, partition, BatchCache, DatasetSpec, PartitionScheme};
 use dtfl::fed::{Method, PrivacyCfg, RoundEnv};
 use dtfl::runtime::Runtime;
 use dtfl::simulation::{DynamicEnvironment, ProfilePool, ServerModel, VirtualClock};
 use dtfl::util::{logging, Rng64};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     logging::init();
     let clients = 8usize;
     let rounds = 20usize;
@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
     let spec = DatasetSpec::tiny(640, 128);
     let train = generate_train(&spec);
     let part = partition(&train, clients, PartitionScheme::Iid, 7);
+    let batches = BatchCache::new(&part, rt.meta.batch);
 
     let mut rng = Rng64::seed_from_u64(11);
     let pool = ProfilePool::Paper;
@@ -51,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                 rt: &rt,
                 train: &train,
                 partition: &part,
+                batches: &batches,
                 profiles: &profiles,
                 participants: &ids,
                 server: ServerModel::default(),
@@ -58,7 +60,8 @@ fn main() -> anyhow::Result<()> {
                 round: r,
                 batch_cap: Some(1),
                 privacy: PrivacyCfg::default(),
-                rng: &mut rng,
+                seed: 11,
+                threads: 0,
             };
             dtfl.round(&mut env)?
         };

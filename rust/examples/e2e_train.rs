@@ -16,7 +16,7 @@
 use dtfl::harness::RunSpec;
 use dtfl::util::{logging, Args};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     logging::init();
     let args = Args::from_env()?;
 

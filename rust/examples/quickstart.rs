@@ -11,7 +11,7 @@
 use dtfl::harness::RunSpec;
 use dtfl::util::logging;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     logging::init();
 
     let spec = RunSpec {

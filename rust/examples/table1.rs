@@ -17,7 +17,7 @@ use dtfl::metrics::CsvWriter;
 use dtfl::simulation::ProfilePool;
 use dtfl::util::{logging, Args};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     logging::init();
     let args = Args::from_env()?;
     let artifact = args.str_or("artifact", "resnet110s-c10");

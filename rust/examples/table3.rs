@@ -26,7 +26,7 @@ use dtfl::util::{logging, Args};
 
 const METHODS: [&str; 5] = ["dtfl", "fedavg", "splitfed", "fedyogi", "fedgkt"];
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     logging::init();
     let args = Args::from_env()?;
     let rounds = args.usize_or("rounds", 60)?;

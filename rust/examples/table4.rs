@@ -14,7 +14,7 @@ use dtfl::harness::{time_cell, RunSpec};
 use dtfl::metrics::CsvWriter;
 use dtfl::util::{logging, Args};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     logging::init();
     let args = Args::from_env()?;
     let rounds = args.usize_or("rounds", 60)?;

@@ -15,7 +15,7 @@ use dtfl::harness::RunSpec;
 use dtfl::metrics::CsvWriter;
 use dtfl::util::{logging, Args};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dtfl::anyhow::Result<()> {
     logging::init();
     let args = Args::from_env()?;
     let rounds = args.usize_or("rounds", 60)?;
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     println!("== Table 5: privacy integration (DTFL, {} clients) ==", clients);
     println!("{:<22} {:>9} {:>9}", "variant", "best_acc", "final_acc");
 
-    let mut run_variant = |label: String, spec: RunSpec| -> anyhow::Result<()> {
+    let mut run_variant = |label: String, spec: RunSpec| -> dtfl::anyhow::Result<()> {
         let (report, _) = spec.run_shared(rt.clone())?;
         println!(
             "{:<22} {:>9.3} {:>9.3}",

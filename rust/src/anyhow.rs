@@ -1,0 +1,158 @@
+//! Minimal in-tree replacement for the `anyhow` crate.
+//!
+//! The offline testbed has no crates.io access, so the crate must build with
+//! zero external dependencies. This module provides exactly the subset the
+//! codebase uses: a string-backed `Error`, the `Result` alias, the `Context`
+//! extension trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Like the real `anyhow::Error`, this `Error` deliberately does **not**
+//! implement `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` impl (and therefore `?` on io/parse errors)
+//! coherent.
+
+use std::fmt;
+
+/// String-backed error with a flattened context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer ("context: cause"), anyhow-style.
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(...)` / `.with_context(|| ...)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("fmt", args...)` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! __dtfl_anyhow {
+    ($($arg:tt)*) => {
+        $crate::anyhow::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("fmt", args...)` — early-return an error.
+#[macro_export]
+macro_rules! __dtfl_bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// `ensure!(cond, "fmt", args...)` — early-return an error unless `cond`.
+#[macro_export]
+macro_rules! __dtfl_ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+pub use crate::__dtfl_anyhow as anyhow;
+pub use crate::__dtfl_bail as bail;
+pub use crate::__dtfl_ensure as ensure;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broke with code {}", 7)
+    }
+
+    #[test]
+    fn macros_and_context_compose() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: broke with code 7");
+        let e = anyhow!("x={}", 3);
+        assert_eq!(format!("{e}"), "x=3");
+    }
+
+    #[test]
+    fn ensure_both_arities() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok);
+            ensure!(ok, "with message {}", 1);
+            Ok(5)
+        }
+        assert_eq!(f(true).unwrap(), 5);
+        assert!(f(false).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<i32> {
+            let v: i32 = "12".parse()?;
+            let _ = std::str::from_utf8(&[0xFF]).context("utf8").is_err();
+            Ok(v)
+        }
+        assert_eq!(f().unwrap(), 12);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+        assert_eq!(Some(3u8).with_context(|| "x").unwrap(), 3);
+    }
+}

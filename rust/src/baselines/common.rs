@@ -1,9 +1,12 @@
-//! Shared helpers for whole-model baselines (FedAvg / FedYogi / SplitFed).
+//! Shared helpers for whole-model baselines (FedAvg / FedYogi / SplitFed):
+//! the per-client local training worker and a streaming weighted-average
+//! accumulator (the baselines' analogue of `coordinator::Aggregator`).
 
-use anyhow::Result;
-
+use crate::anyhow::Result;
+use crate::coordinator::parallel::for_each_streamed;
 use crate::fed::RoundEnv;
 use crate::runtime::{StepEngine, TrainState};
+use crate::simulation::ClientRoundTime;
 
 /// Run Ñ_k whole-model local steps for client k starting from `global`.
 /// Returns (updated params, host compute seconds, last batch loss).
@@ -16,14 +19,12 @@ pub fn local_full_train(
     let engine = StepEngine::new(env.rt);
     let batch = env.rt.meta.batch;
     let nb = env.n_batches(k, batch);
-    let shard = &env.partition.client_indices[k];
-    let batcher = crate::data::Batcher::new(env.train, shard, batch);
 
     let mut state = TrainState::new(global.to_vec());
     let mut host = 0.0f64;
     let mut loss = 0.0f64;
     for bi in 0..nb {
-        let bt = batcher.batch(bi % batcher.num_batches().max(1))?;
+        let bt = env.batch(k, bi)?;
         let out = engine.full_step(&mut state, env.lr, &bt.x, &bt.y, sgd)?;
         host += out.host_secs;
         loss = out.loss as f64;
@@ -31,16 +32,94 @@ pub fn local_full_train(
     Ok((state.params, host, loss))
 }
 
-/// Weighted average of full-model parameter vectors into `out`.
-pub fn weighted_average(updates: &[(Vec<f32>, f64)], out: &mut [f32]) {
-    let total: f64 = updates.iter().map(|(_, w)| *w).sum();
-    out.iter_mut().for_each(|v| *v = 0.0);
-    for (params, w) in updates {
-        let wn = (*w / total) as f32;
-        for (o, &p) in out.iter_mut().zip(params.iter()) {
-            *o += wn * p;
-        }
+/// One full-model round shared by FedAvg / FedYogi / SplitFed: fan
+/// [`local_full_train`] over the worker pool and stream each client's model
+/// into a [`WeightedAvg`] in participant order. The only thing that differs
+/// between those baselines is the optimizer flag and the per-client timing
+/// model, supplied as `time_of(client, host_secs)`.
+///
+/// Returns the (unfinished) accumulator, per-participant timings, and the
+/// summed last-batch losses.
+pub fn run_full_model_round(
+    env: &RoundEnv,
+    global: &[f32],
+    sgd: bool,
+    mut time_of: impl FnMut(usize, f64) -> ClientRoundTime,
+) -> Result<(WeightedAvg, Vec<ClientRoundTime>, f64)> {
+    let mut avg = WeightedAvg::new(global.len());
+    let mut times = Vec::with_capacity(env.participants.len());
+    let mut loss_sum = 0.0f64;
+    for_each_streamed(
+        env.threads,
+        env.participants,
+        |_, &k| {
+            let (params, host, loss) = local_full_train(env, k, global, sgd)?;
+            Ok((k, params, host, loss))
+        },
+        |_, (k, params, host, loss): (usize, Vec<f32>, f64, f64)| {
+            times.push(time_of(k, host));
+            loss_sum += loss;
+            avg.fold(&params, env.partition.size(k).max(1) as f64)
+        },
+    )?;
+    Ok((avg, times, loss_sum))
+}
+
+/// Streaming weighted average over full-model parameter vectors: folds each
+/// update in as it arrives (unnormalized), divides by the total weight once
+/// at the end — no `Vec` of K models is ever held.
+pub struct WeightedAvg {
+    acc: Vec<f32>,
+    total_w: f64,
+    count: usize,
+}
+
+impl WeightedAvg {
+    pub fn new(n: usize) -> Self {
+        Self { acc: vec![0.0f32; n], total_w: 0.0, count: 0 }
     }
+
+    pub fn fold(&mut self, params: &[f32], w: f64) -> Result<()> {
+        crate::anyhow::ensure!(
+            params.len() == self.acc.len(),
+            "update has {} params, accumulator {}",
+            params.len(),
+            self.acc.len()
+        );
+        crate::anyhow::ensure!(w > 0.0, "non-positive aggregation weight {w}");
+        let wf = w as f32;
+        for (a, &p) in self.acc.iter_mut().zip(params) {
+            *a += wf * p;
+        }
+        self.total_w += w;
+        self.count += 1;
+        Ok(())
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Normalize into `out`.
+    pub fn finish_into(self, out: &mut [f32]) -> Result<()> {
+        crate::anyhow::ensure!(self.count > 0, "weighted average of no updates");
+        crate::anyhow::ensure!(self.total_w > 0.0, "total weight must be positive");
+        let inv = (1.0 / self.total_w) as f32;
+        for (o, a) in out.iter_mut().zip(self.acc) {
+            *o = a * inv;
+        }
+        Ok(())
+    }
+}
+
+/// Weighted average of full-model parameter vectors into `out` (batch form,
+/// kept for tests/benches; round loops stream through [`WeightedAvg`]).
+pub fn weighted_average(updates: &[(Vec<f32>, f64)], out: &mut [f32]) {
+    let mut avg = WeightedAvg::new(out.len());
+    for (params, w) in updates {
+        avg.fold(params, *w).expect("weighted_average: bad update");
+    }
+    avg.finish_into(out).expect("weighted_average: no updates");
 }
 
 #[cfg(test)]
@@ -54,5 +133,32 @@ mod tests {
         weighted_average(&ups, &mut out);
         assert!((out[0] - 2.0).abs() < 1e-6);
         assert!((out[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn streaming_fold_matches_batch_form() {
+        let ups = vec![
+            (vec![0.5f32, -2.0, 3.0], 2.0),
+            (vec![1.5f32, 4.0, -1.0], 5.0),
+            (vec![-0.5f32, 0.0, 9.0], 1.0),
+        ];
+        let mut batch = vec![0.0f32; 3];
+        weighted_average(&ups, &mut batch);
+        let mut avg = WeightedAvg::new(3);
+        for (p, w) in &ups {
+            avg.fold(p, *w).unwrap();
+        }
+        let mut streamed = vec![0.0f32; 3];
+        avg.finish_into(&mut streamed).unwrap();
+        assert_eq!(batch, streamed);
+    }
+
+    #[test]
+    fn degenerate_averages_rejected() {
+        let mut avg = WeightedAvg::new(2);
+        assert!(avg.fold(&[1.0], 1.0).is_err(), "length mismatch");
+        assert!(avg.fold(&[1.0, 2.0], 0.0).is_err(), "zero weight");
+        let mut out = vec![0.0f32; 2];
+        assert!(WeightedAvg::new(2).finish_into(&mut out).is_err(), "no updates");
     }
 }

@@ -5,13 +5,15 @@
 //! client's CPU share; communication = full model download + upload; no
 //! server-side training (T^s = 0). This is the configuration whose straggler
 //! behaviour DTFL's Table 1/3 rows are compared against.
+//!
+//! Clients execute on the parallel worker pool; their models stream into a
+//! [`WeightedAvg`] in participant order (bit-identical to sequential).
 
-use anyhow::Result;
-
+use crate::anyhow::Result;
 use crate::fed::{Method, RoundEnv, RoundOutcome};
 use crate::simulation::ClientRoundTime;
 
-use super::common::{local_full_train, weighted_average};
+use super::common::run_full_model_round;
 
 pub struct FedAvg {
     pub global: Vec<f32>,
@@ -29,24 +31,19 @@ impl Method for FedAvg {
     }
 
     fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let env: &RoundEnv = env;
         let model_bytes = 2 * self.global.len() * 4; // download + upload
-        let mut updates = Vec::with_capacity(env.participants.len());
-        let mut times = Vec::with_capacity(env.participants.len());
-        let mut loss_sum = 0.0f64;
+        let (avg, times, loss_sum) =
+            run_full_model_round(env, &self.global, false, |k, host| {
+                let profile = env.profiles[k];
+                ClientRoundTime {
+                    compute: profile.compute_secs(host),
+                    comm: profile.comm_secs(model_bytes),
+                    server: 0.0,
+                }
+            })?;
 
-        for &k in env.participants {
-            let (params, host, loss) = local_full_train(env, k, &self.global, false)?;
-            let profile = env.profiles[k];
-            times.push(ClientRoundTime {
-                compute: profile.compute_secs(host),
-                comm: profile.comm_secs(model_bytes),
-                server: 0.0,
-            });
-            loss_sum += loss;
-            updates.push((params, env.partition.size(k).max(1) as f64));
-        }
-
-        weighted_average(&updates, &mut self.global);
+        avg.finish_into(&mut self.global)?;
         Ok(RoundOutcome {
             times,
             train_loss: loss_sum / env.participants.len().max(1) as f64,

@@ -14,11 +14,13 @@
 //!
 //! This preserves GKT's systems profile — tiny client compute, heavy server
 //! compute, feature+logit traffic every round — and its slower convergence
-//! relative to DTFL (client model never grows).
+//! relative to DTFL (client model never grows). Per-client work (client
+//! steps + this client's server distillation) runs on the worker pool;
+//! updates stream into the aggregator in participant order.
 
-use anyhow::Result;
-
-use crate::coordinator::{aggregate, ClientUpdate, GlobalModel};
+use crate::anyhow::Result;
+use crate::coordinator::parallel::for_each_streamed;
+use crate::coordinator::{Aggregator, ClientUpdate, GlobalModel};
 use crate::fed::{Method, RoundEnv, RoundOutcome};
 use crate::runtime::{Runtime, StepEngine, TrainState};
 use crate::simulation::ClientRoundTime;
@@ -41,69 +43,90 @@ impl FedGkt {
     }
 }
 
+struct GktBundle {
+    update: ClientUpdate,
+    time: ClientRoundTime,
+    loss: f64,
+}
+
 impl Method for FedGkt {
     fn name(&self) -> &'static str {
         "fedgkt"
     }
 
     fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
-        let rt = env.rt;
-        let meta = &rt.meta;
-        let engine = StepEngine::new(rt);
+        let env: &RoundEnv = env;
+        let meta = &env.rt.meta;
         let batch = meta.batch;
         let tier = self.tier;
-        let tmeta = meta.tier(tier);
+        let server_epochs = self.server_epochs;
+        let global = &self.global;
 
-        let mut updates = Vec::with_capacity(env.participants.len());
+        let mut agg = Aggregator::new(meta);
         let mut times = Vec::with_capacity(env.participants.len());
         let mut loss_sum = 0.0f64;
+        for_each_streamed(
+            env.threads,
+            env.participants,
+            |_, &k| -> Result<GktBundle> {
+                let rt = env.rt;
+                let engine = StepEngine::new(rt);
+                let tmeta = meta.tier(tier);
+                let profile = env.profiles[k];
+                let nb = env.n_batches(k, batch);
 
-        for &k in env.participants {
-            let profile = env.profiles[k];
-            let nb = env.n_batches(k, batch);
-            let shard = &env.partition.client_indices[k];
-            let batcher = crate::data::Batcher::new(env.train, shard, batch);
+                let mut cstate = TrainState::new(global.client_vec(meta, tier));
+                let mut sstate = TrainState::new(global.server_vec(meta, tier));
 
-            let mut cstate = TrainState::new(self.global.client_vec(meta, tier));
-            let mut sstate = TrainState::new(self.global.server_vec(meta, tier));
-
-            let mut host_client = 0.0f64;
-            let mut host_server = 0.0f64;
-            let mut zs = Vec::with_capacity(nb);
-            for bi in 0..nb {
-                let bt = batcher.batch(bi % batcher.num_batches().max(1))?;
-                let out = engine.client_step(tier, &mut cstate, env.lr, &bt.x, &bt.y, None)?;
-                host_client += out.host_secs;
-                loss_sum += out.loss as f64 / nb as f64;
-                zs.push((out.z, bt.y));
-            }
-            // server distillation: multiple passes over the uploaded features
-            for _ in 0..self.server_epochs {
-                for (z, y) in &zs {
-                    let out = engine.server_step(tier, &mut sstate, env.lr, z, y)?;
-                    host_server += out.host_secs;
+                let mut host_client = 0.0f64;
+                let mut host_server = 0.0f64;
+                let mut loss = 0.0f64;
+                let mut zs = Vec::with_capacity(nb);
+                for bi in 0..nb {
+                    let bt = env.batch(k, bi)?;
+                    let out = engine.client_step(tier, &mut cstate, env.lr, &bt.x, &bt.y, None)?;
+                    host_client += out.host_secs;
+                    loss += out.loss as f64 / nb as f64;
+                    zs.push((out.z, bt));
                 }
-            }
+                // server distillation: multiple passes over the uploaded features
+                for _ in 0..server_epochs {
+                    for (z, bt) in &zs {
+                        let out = engine.server_step(tier, &mut sstate, env.lr, z, &bt.y)?;
+                        host_server += out.host_secs;
+                    }
+                }
 
-            // timing: features up + soft labels both ways + client model sync
-            let logit_bytes = batch * meta.num_classes * 4;
-            let bytes = tmeta.model_transfer_bytes
-                + nb * (tmeta.z_bytes_per_batch + 2 * logit_bytes);
-            let sim_c = profile.compute_secs(host_client);
-            let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
-            let sim_com = profile.comm_secs(bytes);
-            times.push(ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s });
+                // timing: features up + soft labels both ways + client model sync
+                let logit_bytes = batch * meta.num_classes * 4;
+                let bytes = tmeta.model_transfer_bytes
+                    + nb * (tmeta.z_bytes_per_batch + 2 * logit_bytes);
+                let sim_c = profile.compute_secs(host_client);
+                let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
+                let sim_com = profile.comm_secs(bytes);
 
-            updates.push(ClientUpdate {
-                client_id: k,
-                tier,
-                weight: env.partition.size(k).max(1) as f64,
-                client_vec: cstate.params,
-                server_vec: sstate.params,
-            });
-        }
+                Ok(GktBundle {
+                    update: ClientUpdate {
+                        client_id: k,
+                        tier,
+                        weight: env.partition.size(k).max(1) as f64,
+                        client_vec: cstate.params,
+                        server_vec: sstate.params,
+                    },
+                    time: ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s },
+                    loss,
+                })
+            },
+            |_, b: GktBundle| {
+                agg.fold(&b.update)?;
+                times.push(b.time);
+                loss_sum += b.loss;
+                Ok(())
+            },
+        )?;
 
-        self.global = aggregate(meta, &self.global, &updates)?;
+        let new_global = agg.finish(&self.global)?;
+        self.global = new_global;
         Ok(RoundOutcome {
             times,
             train_loss: loss_sum / env.participants.len().max(1) as f64,

@@ -11,13 +11,14 @@
 //!
 //! Timing model is identical to FedAvg (whole model down/up + full local
 //! compute) — FedYogi changes the optimizer, not the systems profile.
+//! Clients run on the parallel pool; the streamed weighted average feeds the
+//! Yogi server update.
 
-use anyhow::Result;
-
+use crate::anyhow::Result;
 use crate::fed::{Method, RoundEnv, RoundOutcome};
 use crate::simulation::ClientRoundTime;
 
-use super::common::{local_full_train, weighted_average};
+use super::common::run_full_model_round;
 
 pub struct FedYogi {
     pub global: Vec<f32>,
@@ -52,31 +53,26 @@ impl Method for FedYogi {
     }
 
     fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let env: &RoundEnv = env;
         let model_bytes = 2 * self.global.len() * 4;
-        let mut updates = Vec::with_capacity(env.participants.len());
-        let mut times = Vec::with_capacity(env.participants.len());
-        let mut loss_sum = 0.0f64;
-
-        for &k in env.participants {
-            let (params, host, loss) = local_full_train(env, k, &self.global, true)?;
-            let profile = env.profiles[k];
-            times.push(ClientRoundTime {
-                compute: profile.compute_secs(host),
-                comm: profile.comm_secs(model_bytes),
-                server: 0.0,
-            });
-            loss_sum += loss;
-            updates.push((params, env.partition.size(k).max(1) as f64));
-        }
+        let (avg, times, loss_sum) =
+            run_full_model_round(env, &self.global, true, |k, host| {
+                let profile = env.profiles[k];
+                ClientRoundTime {
+                    compute: profile.compute_secs(host),
+                    comm: profile.comm_secs(model_bytes),
+                    server: 0.0,
+                }
+            })?;
 
         // aggregated client model → pseudo-gradient
-        let mut avg = vec![0.0f32; self.global.len()];
-        weighted_average(&updates, &mut avg);
+        let mut delta = vec![0.0f32; self.global.len()];
+        avg.finish_into(&mut delta)?;
 
         for i in 0..self.global.len() {
-            let delta = avg[i] - self.global[i];
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * delta;
-            let d2 = delta * delta;
+            let d = delta[i] - self.global[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * d;
+            let d2 = d * d;
             self.v[i] -= (1.0 - self.beta2) * d2 * (self.v[i] - d2).signum();
             self.global[i] += self.server_lr * self.m[i] / (self.v[i].max(0.0).sqrt() + self.tau);
         }
@@ -99,7 +95,7 @@ mod tests {
 
     #[test]
     fn yogi_moves_toward_client_average() {
-        // pure-update check without PJRT: drive the optimizer equations
+        // pure-update check without a backend: drive the optimizer equations
         let mut y = FedYogi::new(vec![0.0f32; 4]);
         let target = [1.0f32, -1.0, 0.5, 0.0];
         for _ in 0..200 {

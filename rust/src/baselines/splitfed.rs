@@ -12,14 +12,14 @@
 //!
 //! so per-client round time is the *sum* of compute and per-batch
 //! communication, not the max — this synchronization stall is exactly what
-//! DTFL's local-loss training removes.
+//! DTFL's local-loss training removes. (The *coordinator*, of course, still
+//! simulates many such stalled clients concurrently on the worker pool.)
 
-use anyhow::Result;
-
+use crate::anyhow::Result;
 use crate::fed::{Method, RoundEnv, RoundOutcome};
 use crate::simulation::ClientRoundTime;
 
-use super::common::{local_full_train, weighted_average};
+use super::common::run_full_model_round;
 
 /// Fraction of a training step spent in the forward pass (fwd ≈ ⅓ of
 /// fwd+bwd for conv nets; used to split measured full-step time into the
@@ -44,6 +44,7 @@ impl Method for SplitFed {
     }
 
     fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
+        let env: &RoundEnv = env;
         let meta = &env.rt.meta;
         let t = meta.tier(self.cut_tier);
         let batch = meta.batch;
@@ -53,41 +54,34 @@ impl Method for SplitFed {
         let client_frac =
             (t.client_param_len as f64 / meta.total_params as f64).max(0.15);
 
-        let mut updates = Vec::with_capacity(env.participants.len());
-        let mut times = Vec::with_capacity(env.participants.len());
-        let mut loss_sum = 0.0f64;
+        let (avg, times, loss_sum) =
+            run_full_model_round(env, &self.global, false, |k, host| {
+                let profile = env.profiles[k];
+                let nb = env.n_batches(k, batch) as f64;
 
-        for &k in env.participants {
-            let (params, host, loss) = local_full_train(env, k, &self.global, false)?;
-            let profile = env.profiles[k];
-            let nb = env.n_batches(k, batch) as f64;
+                // decompose measured whole-step host time
+                let host_client = host * client_frac;
+                let host_server = host * (1.0 - client_frac);
 
-            // decompose measured whole-step host time
-            let host_client = host * client_frac;
-            let host_server = host * (1.0 - client_frac);
+                // sequential pipeline: client fwd ; z up ; server fwd+bwd ;
+                // grad(z) down ; client bwd  — per batch
+                let t_client_fwd = profile.compute_secs(host_client * FWD_FRACTION);
+                let t_client_bwd = profile.compute_secs(host_client * (1.0 - FWD_FRACTION));
+                let t_server = env.server.secs(host_server);
+                // z and grad(z) have identical size; model down+up once per round
+                let act_bytes = 2.0 * t.z_bytes_per_batch as f64 * nb;
+                let model_bytes = t.model_transfer_bytes as f64;
+                let t_comm = profile.comm_secs((act_bytes + model_bytes) as usize);
 
-            // sequential pipeline: client fwd ; z up ; server fwd+bwd ;
-            // grad(z) down ; client bwd  — per batch
-            let t_client_fwd = profile.compute_secs(host_client * FWD_FRACTION);
-            let t_client_bwd = profile.compute_secs(host_client * (1.0 - FWD_FRACTION));
-            let t_server = env.server.secs(host_server);
-            // z and grad(z) have identical size; model down+up once per round
-            let act_bytes = 2.0 * t.z_bytes_per_batch as f64 * nb;
-            let model_bytes = t.model_transfer_bytes as f64;
-            let t_comm = profile.comm_secs((act_bytes + model_bytes) as usize);
+                // everything serial: Eq. (5)'s max degenerates to a sum
+                ClientRoundTime {
+                    compute: t_client_fwd + t_client_bwd + t_server,
+                    comm: t_comm,
+                    server: 0.0, // folded into the serial compute path
+                }
+            })?;
 
-            // everything serial: Eq. (5)'s max degenerates to a sum
-            let total_compute = t_client_fwd + t_client_bwd + t_server;
-            times.push(ClientRoundTime {
-                compute: total_compute,
-                comm: t_comm,
-                server: 0.0, // folded into the serial compute path
-            });
-            loss_sum += loss;
-            updates.push((params, env.partition.size(k).max(1) as f64));
-        }
-
-        weighted_average(&updates, &mut self.global);
+        avg.finish_into(&mut self.global)?;
         Ok(RoundOutcome {
             times,
             train_loss: loss_sum / env.participants.len().max(1) as f64,

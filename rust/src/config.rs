@@ -6,7 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow::{anyhow, Context, Result};
 
 use crate::simulation::ProfilePool;
 use crate::util::toml_mini::TomlDoc;
@@ -72,6 +72,8 @@ pub struct RunCfg {
     pub static_tier: Option<usize>,
     pub ema_beta: f64,
     pub timing_noise: f64,
+    /// Worker threads for per-client round execution (0 = all cores).
+    pub threads: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -181,6 +183,7 @@ impl ExperimentConfig {
                 static_tier: s.opt_usize("static_tier")?,
                 ema_beta: s.f64_or("ema_beta", 0.5)?,
                 timing_noise: s.f64_or("timing_noise", 0.05)?,
+                threads: s.usize_or("threads", 0)?,
             }
         };
         let sim = {
@@ -215,13 +218,13 @@ impl ExperimentConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(self.clients.count > 0, "clients.count must be > 0");
-        anyhow::ensure!(
+        crate::anyhow::ensure!(self.clients.count > 0, "clients.count must be > 0");
+        crate::anyhow::ensure!(
             self.run.sample_frac > 0.0 && self.run.sample_frac <= 1.0,
             "run.sample_frac must be in (0, 1]"
         );
-        anyhow::ensure!(self.run.rounds > 0, "run.rounds must be > 0");
-        anyhow::ensure!(
+        crate::anyhow::ensure!(self.run.rounds > 0, "run.rounds must be > 0");
+        crate::anyhow::ensure!(
             matches!(
                 self.run.method.as_str(),
                 "dtfl" | "static" | "fedavg" | "splitfed" | "fedyogi" | "fedgkt"
@@ -230,13 +233,13 @@ impl ExperimentConfig {
             self.run.method
         );
         if self.run.method == "static" {
-            anyhow::ensure!(
+            crate::anyhow::ensure!(
                 self.run.static_tier.is_some(),
                 "method 'static' requires run.static_tier"
             );
         }
         if let Some(a) = self.privacy.dcor_alpha {
-            anyhow::ensure!((0.0..=1.0).contains(&a), "dcor_alpha must be in [0,1]");
+            crate::anyhow::ensure!((0.0..=1.0).contains(&a), "dcor_alpha must be in [0,1]");
         }
         Ok(())
     }

@@ -1,81 +1,121 @@
-//! Model aggregation (Algorithm 1, step ⑤ / lines 11–13).
+//! Model aggregation (Algorithm 1, step ⑤ / lines 11–13) — streaming.
 //!
 //! Each client's halves are reconstituted in the flat layout
 //! (w_k = client_vec[..cut_k] ‖ server_vec_k) and averaged, weighted by
 //! dataset size N_k per Eq. (1). Auxiliary heads are averaged per tier
 //! among the clients that trained that tier this round.
 //!
-//! This is the L3 hot loop — O(K · P) f32 FMAs per round — so the inner
-//! loops are written to autovectorize (no bounds checks in the hot path,
-//! slice-zip form).
+//! This is the L3 hot loop — O(K · P) f32 FMAs per round. [`Aggregator`]
+//! folds each update into a single accumulator **as it arrives** (the
+//! parallel round engine streams results through it in deterministic
+//! participant order), so no `Vec<ClientUpdate>` is ever materialized:
+//! peak memory is one accumulator + one in-flight update instead of K full
+//! models. Unnormalized weighted sums are kept during the fold and divided
+//! by the total weight once in `finish`. The inner loops are chunked,
+//! bounds-check-free axpy that autovectorizes.
 
-use anyhow::Result;
-
+use crate::anyhow::Result;
 use crate::runtime::Metadata;
 
 use super::model_state::{ClientUpdate, GlobalModel};
 
-/// `acc += w * x`, vectorizable.
+/// `acc += w * x` over cache-friendly chunks, vectorizable.
 #[inline]
 fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
     debug_assert_eq!(acc.len(), x.len());
-    for (a, &b) in acc.iter_mut().zip(x.iter()) {
-        *a += w * b;
+    const CHUNK: usize = 4096;
+    for (a, b) in acc.chunks_mut(CHUNK).zip(x.chunks(CHUNK)) {
+        for (ai, &bi) in a.iter_mut().zip(b.iter()) {
+            *ai += w * bi;
+        }
     }
 }
 
-/// Weighted-average aggregation over one round's client updates.
-///
-/// Returns the new global model. Aux heads of tiers with no participant
-/// this round are carried over unchanged.
+/// Streaming weighted-average accumulator for one round's client updates.
+pub struct Aggregator<'m> {
+    meta: &'m Metadata,
+    flat: Vec<f32>,
+    aux: Vec<Vec<f32>>,
+    aux_w: Vec<f64>,
+    total_w: f64,
+    count: usize,
+}
+
+impl<'m> Aggregator<'m> {
+    pub fn new(meta: &'m Metadata) -> Self {
+        Self {
+            flat: vec![0.0f32; meta.total_params],
+            aux: meta.tiers.iter().map(|t| vec![0.0f32; t.aux_len]).collect(),
+            aux_w: vec![0.0f64; meta.max_tiers],
+            total_w: 0.0,
+            count: 0,
+            meta,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Fold one client update into the accumulator (chunked axpy over the
+    /// client-prefix and server-suffix parameter ranges).
+    pub fn fold(&mut self, u: &ClientUpdate) -> Result<()> {
+        u.check(self.meta)?;
+        crate::anyhow::ensure!(u.weight > 0.0, "client {} has non-positive weight", u.client_id);
+        let w = u.weight as f32;
+        let cut = self.meta.cut_offset(u.tier);
+        // client params occupy the flat prefix [..cut]
+        axpy(&mut self.flat[..cut], &u.client_vec[..cut], w);
+        // server half occupies [cut..]
+        axpy(&mut self.flat[cut..], &u.server_vec, w);
+        // aux tail, averaged within its tier
+        self.aux_w[u.tier - 1] += u.weight;
+        if self.meta.tier(u.tier).aux_len > 0 {
+            axpy(&mut self.aux[u.tier - 1], &u.client_vec[cut..], w);
+        }
+        self.total_w += u.weight;
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Normalize and build the new global model. Aux heads of tiers with no
+    /// participant this round are carried over from `prev` unchanged.
+    pub fn finish(mut self, prev: &GlobalModel) -> Result<GlobalModel> {
+        crate::anyhow::ensure!(self.count > 0, "aggregate called with no updates");
+        crate::anyhow::ensure!(self.total_w > 0.0, "total aggregation weight must be positive");
+        let inv = (1.0 / self.total_w) as f32;
+        self.flat.iter_mut().for_each(|v| *v *= inv);
+        let aux: Vec<Vec<f32>> = self
+            .aux
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut acc)| {
+                if self.aux_w[i] > 0.0 {
+                    let ainv = (1.0 / self.aux_w[i]) as f32;
+                    acc.iter_mut().for_each(|v| *v *= ainv);
+                    acc
+                } else {
+                    prev.aux[i].clone()
+                }
+            })
+            .collect();
+        Ok(GlobalModel { flat: self.flat, aux })
+    }
+}
+
+/// Weighted-average aggregation over a fully materialized batch of updates
+/// (benches/tests and small call-sites; the round engines stream into
+/// [`Aggregator`] directly).
 pub fn aggregate(
     meta: &Metadata,
     prev: &GlobalModel,
     updates: &[ClientUpdate],
 ) -> Result<GlobalModel> {
-    anyhow::ensure!(!updates.is_empty(), "aggregate called with no updates");
-    let total_w: f64 = updates.iter().map(|u| u.weight).sum();
-    anyhow::ensure!(total_w > 0.0, "total aggregation weight must be positive");
-
-    let mut flat = vec![0.0f32; meta.total_params];
-    let mut aux_acc: Vec<Vec<f32>> = meta.tiers.iter().map(|t| vec![0.0f32; t.aux_len]).collect();
-    let mut aux_w = vec![0.0f64; meta.max_tiers];
-
+    let mut agg = Aggregator::new(meta);
     for u in updates {
-        u.check(meta)?;
-        let w = (u.weight / total_w) as f32;
-        let cut = meta.cut_offset(u.tier);
-        // client params occupy the flat prefix [..cut]
-        axpy(&mut flat[..cut], &u.client_vec[..cut], w);
-        // server half occupies [cut..]
-        axpy(&mut flat[cut..], &u.server_vec, w);
-        // aux tail, averaged within its tier
-        aux_w[u.tier - 1] += u.weight;
-        if meta.tier(u.tier).aux_len > 0 {
-            // weight renormalized after the loop
-            axpy(
-                &mut aux_acc[u.tier - 1],
-                &u.client_vec[cut..],
-                u.weight as f32,
-            );
-        }
+        agg.fold(u)?;
     }
-
-    let aux: Vec<Vec<f32>> = aux_acc
-        .into_iter()
-        .enumerate()
-        .map(|(i, mut acc)| {
-            if aux_w[i] > 0.0 {
-                let inv = (1.0 / aux_w[i]) as f32;
-                acc.iter_mut().for_each(|v| *v *= inv);
-                acc
-            } else {
-                prev.aux[i].clone()
-            }
-        })
-        .collect();
-
-    Ok(GlobalModel { flat, aux })
+    agg.finish(prev)
 }
 
 #[cfg(test)]
@@ -169,5 +209,29 @@ mod tests {
         // every flat element receives (2 + 4) / 2 = 3 regardless of which
         // half it came from — the reconstitution is position-independent.
         assert!(g.flat.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn streaming_fold_matches_batch_aggregate() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.5; t.aux_len]).collect(),
+            &meta,
+        );
+        let ups = vec![
+            update(&meta, 1, 0.25, 7.0, 0),
+            update(&meta, 4, -1.5, 2.0, 1),
+            update(&meta, 7, 3.0, 11.0, 2),
+        ];
+        let batch = aggregate(&meta, &prev, &ups).unwrap();
+        let mut agg = Aggregator::new(&meta);
+        for u in &ups {
+            agg.fold(u).unwrap();
+        }
+        assert_eq!(agg.count(), 3);
+        let streamed = agg.finish(&prev).unwrap();
+        assert_eq!(batch.flat, streamed.flat, "fold order is the batch order — bit-identical");
+        assert_eq!(batch.aux, streamed.aux);
     }
 }

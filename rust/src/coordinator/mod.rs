@@ -2,18 +2,23 @@
 //!
 //! * `scheduler` — the dynamic tier scheduler (Algorithm 1 lines 21–35);
 //! * `profiler` — tier profiling + EMA timing histories (§3.3);
-//! * `round` — the DTFL training round (steps ①–⑤, Figure 1);
-//! * `model_state`/`aggregate` — flat-layout model halves and the
+//! * `round` — the DTFL training round (steps ①–⑤, Figure 1), fanned over
+//!   the worker pool;
+//! * `parallel` — the deterministic scoped worker pool (in-order streaming
+//!   reduction);
+//! * `model_state`/`aggregate` — flat-layout model halves and the streaming
 //!   weighted-average global update (step ⑤).
 
 pub mod aggregate;
 pub mod model_state;
+pub mod parallel;
 pub mod profiler;
 pub mod round;
 pub mod scheduler;
 
-pub use aggregate::aggregate;
+pub use aggregate::{aggregate, Aggregator};
 pub use model_state::{ClientUpdate, GlobalModel};
+pub use parallel::{for_each_streamed, resolve_threads};
 pub use profiler::{ClientHistory, Profiler, TierProfile};
 pub use round::{estimate_all_tiers, load_initial_model, profile_tiers, Dtfl, DtflOptions};
 pub use scheduler::{estimate_round_time, schedule, Assignment, ClientLoad, Schedule};

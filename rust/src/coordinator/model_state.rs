@@ -64,9 +64,9 @@ pub struct ClientUpdate {
 
 impl ClientUpdate {
     /// Validate the halves against the layout.
-    pub fn check(&self, meta: &Metadata) -> anyhow::Result<()> {
+    pub fn check(&self, meta: &Metadata) -> crate::anyhow::Result<()> {
         let t = meta.tier(self.tier);
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             self.client_vec.len() == t.client_vec_len,
             "client {} tier {}: client_vec len {} != {}",
             self.client_id,
@@ -74,7 +74,7 @@ impl ClientUpdate {
             self.client_vec.len(),
             t.client_vec_len
         );
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             self.server_vec.len() == t.server_vec_len,
             "client {} tier {}: server_vec len {} != {}",
             self.client_id,

@@ -1,0 +1,248 @@
+//! Deterministic scoped worker pool for per-client round execution.
+//!
+//! The contract that makes parallel rounds bit-identical to sequential ones:
+//!
+//! * `work(i, item)` must be a pure function of its item (per-client RNG
+//!   streams are derived from `(seed, round, client_id)`, never shared);
+//! * `sink(i, result)` runs on the **calling thread**, strictly in item
+//!   order, as results stream in — so fold-style reduction (aggregation,
+//!   profiler observations) sees exactly the sequential order and can own
+//!   `&mut` state without locks.
+//!
+//! Workers pull indices from an atomic counter (work stealing) and push
+//! results through a channel; a small reorder buffer on the caller side
+//! restores item order. The buffer is **bounded**: a worker does not start
+//! item `i` until `i` is within a fixed window of the next undelivered
+//! index, so a straggler on item 0 holds at most O(threads) results in
+//! flight — not O(K) — preserving the streaming-aggregation memory bound.
+//! With `threads <= 1` the pool degenerates to the plain sequential loop —
+//! the two paths produce identical bits.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::anyhow::{Error, Result};
+
+/// Resolve a thread-count knob: 0 = all available cores.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Run `work` over `items` on up to `threads` workers, delivering results to
+/// `sink` strictly in item order on the calling thread.
+///
+/// The first error (from `work` or `sink`) aborts the run: remaining workers
+/// stop at their next pull and the error is returned.
+pub fn for_each_streamed<T, R, W, S>(
+    threads: usize,
+    items: &[T],
+    work: W,
+    mut sink: S,
+) -> Result<()>
+where
+    T: Sync,
+    R: Send,
+    W: Fn(usize, &T) -> Result<R> + Sync,
+    S: FnMut(usize, R) -> Result<()>,
+{
+    let n = items.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let threads = resolve_threads(threads).min(n);
+    if threads <= 1 {
+        for (i, item) in items.iter().enumerate() {
+            sink(i, work(i, item)?)?;
+        }
+        return Ok(());
+    }
+
+    /// Trips the abort flag if a worker unwinds, so siblings parked on the
+    /// reorder window exit instead of spinning forever (the panic itself is
+    /// re-raised by `thread::scope` at join).
+    struct AbortOnPanic<'a>(&'a AtomicBool);
+    impl Drop for AbortOnPanic<'_> {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                self.0.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    let next = AtomicUsize::new(0);
+    let delivered = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    // in-flight bound: results the sink has not consumed yet never exceed
+    // this window, no matter how lopsided per-item runtimes are
+    let window = 2 * threads + 2;
+    let (tx, rx) = mpsc::channel::<(usize, Result<R>)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let work = &work;
+            let items = &items[..];
+            let next = &next;
+            let delivered = &delivered;
+            let abort = &abort;
+            scope.spawn(move || {
+                let _guard = AbortOnPanic(abort);
+                loop {
+                    if abort.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // stay within the reorder window of the next undelivered
+                    // index; progress is guaranteed because the worker
+                    // holding that index is never the one waiting here
+                    while i >= delivered.load(Ordering::Acquire) + window {
+                        if abort.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    let r = work(i, &items[i]);
+                    if tx.send((i, r)).is_err() {
+                        break; // receiver gone: run was aborted
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        let mut pending: BTreeMap<usize, Result<R>> = BTreeMap::new();
+        let mut deliver = 0usize;
+        let mut first_err: Option<Error> = None;
+        'recv: while deliver < n {
+            let Ok((i, r)) = rx.recv() else {
+                break;
+            };
+            pending.insert(i, r);
+            while let Some(r) = pending.remove(&deliver) {
+                deliver += 1;
+                delivered.store(deliver, Ordering::Release);
+                let res = match r {
+                    Ok(r) => sink(deliver - 1, r),
+                    Err(e) => Err(e),
+                };
+                if let Err(e) = res {
+                    first_err = Some(e);
+                    abort.store(true, Ordering::Relaxed);
+                    break 'recv;
+                }
+            }
+        }
+        drop(rx); // unblocks any worker stuck on send
+        abort.store(true, Ordering::Relaxed); // releases workers parked on the window
+        match first_err {
+            Some(e) => Err(e),
+            None if deliver == n => Ok(()),
+            None => Err(crate::anyhow!(
+                "worker pool delivered {deliver}/{n} results (a worker panicked?)"
+            )),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn resolve_threads_zero_means_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn sink_sees_results_in_item_order() {
+        let items: Vec<usize> = (0..64).collect();
+        for threads in [1usize, 4, 16] {
+            let mut seen = Vec::new();
+            for_each_streamed(
+                threads,
+                &items,
+                |i, &v| {
+                    // stagger completion order
+                    if v % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Ok(i * 10 + v % 3)
+                },
+                |i, r| {
+                    seen.push((i, r));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(seen.len(), 64);
+            assert!(seen.windows(2).all(|w| w[0].0 + 1 == w[1].0), "order broken");
+            let expect: Vec<usize> = items.iter().map(|&v| v * 10 + v % 3).collect();
+            assert_eq!(seen.iter().map(|&(_, r)| r).collect::<Vec<_>>(), expect);
+        }
+    }
+
+    #[test]
+    fn worker_error_aborts_and_surfaces() {
+        let items: Vec<usize> = (0..1000).collect();
+        let calls = AtomicUsize::new(0);
+        let err = for_each_streamed(
+            4,
+            &items,
+            |_, &v| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                // item 0 is slow, so by the time the error at item 5 can be
+                // delivered (in order, after 0..=4), the reorder window has
+                // capped how far ahead the other workers may run
+                if v == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                }
+                if v == 5 {
+                    Err(crate::anyhow!("boom at {v}"))
+                } else {
+                    Ok(v)
+                }
+            },
+            |_, _| Ok(()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+        // abort flag + bounded window keep the pool from chewing through
+        // the whole item list after the failure
+        assert!(calls.load(Ordering::Relaxed) < 100, "{}", calls.load(Ordering::Relaxed));
+    }
+
+    #[test]
+    fn sink_error_aborts() {
+        let items: Vec<usize> = (0..50).collect();
+        let err = for_each_streamed(
+            4,
+            &items,
+            |_, &v| Ok(v),
+            |i, _| {
+                if i == 3 {
+                    Err(crate::anyhow!("sink refuses {i}"))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("sink refuses 3"), "{err}");
+    }
+
+    #[test]
+    fn empty_items_is_a_noop() {
+        let items: Vec<usize> = vec![];
+        for_each_streamed(8, &items, |_, &v| Ok(v), |_, _| panic!("no items")).unwrap();
+    }
+}

@@ -3,8 +3,8 @@
 //! Per round, for every participating client:
 //!   ① the dynamic tier scheduler picks a tier; the client "downloads" its
 //!     client-side model (global flat prefix + the tier's aux head);
-//!   ②③ the client runs Ñ_k local-loss steps through the AOT
-//!     `client_step_t{m}` artifact, producing activations z per batch;
+//!   ②③ the client runs Ñ_k local-loss steps through the `client_step_t{m}`
+//!     artifact, producing activations z per batch;
 //!   ④ the server trains its per-client server-side model on (z, y) via
 //!     `server_step_t{m}` — in parallel with ③ in the paper's timing model
 //!     (Eq. 5 takes the max of the two paths);
@@ -12,19 +12,24 @@
 //!     the new global model; per-tier aux heads are averaged among that
 //!     tier's participants.
 //!
-//! Real PJRT step times on this host are measured and scaled by each
-//! client's simulated resource profile to produce the training times the
-//! paper reports (see `simulation`).
+//! **Parallel execution.** The paper's clients "update the models in
+//! parallel"; so does this engine. Steps ①–④ for all participants fan out
+//! over a scoped worker pool ([`super::parallel`]): each client is a pure
+//! function of (global snapshot, its shard, its `(round, client)` RNG
+//! stream), and its update streams back to the calling thread which folds it
+//! into the [`Aggregator`] and the profiler **in participant order** — so an
+//! N-thread round is bit-identical to the 1-thread round.
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use crate::fed::{Method, RoundEnv, RoundOutcome};
 use crate::runtime::{literal as lit, Runtime, StepEngine, TrainState};
-use crate::simulation::{ClientRoundTime, ServerModel};
+use crate::simulation::{ClientRoundTime, ResourceProfile, ServerModel};
 use crate::util::Rng64;
 
-use super::aggregate::aggregate;
+use super::aggregate::Aggregator;
 use super::model_state::{ClientUpdate, GlobalModel};
+use super::parallel::for_each_streamed;
 use super::profiler::{Profiler, TierProfile};
 use super::scheduler::{schedule, ClientLoad, Schedule};
 
@@ -63,7 +68,7 @@ impl Dtfl {
     /// standard batch per tier on the reference host, §3.3).
     pub fn new(rt: &Runtime, num_clients: usize, opts: DtflOptions) -> Result<Self> {
         let meta = &rt.meta;
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             opts.max_tiers >= 1 && opts.max_tiers <= meta.max_tiers,
             "max_tiers {} out of range 1..={}",
             opts.max_tiers,
@@ -74,30 +79,32 @@ impl Dtfl {
         let profiler = Profiler::new(profile, num_clients, opts.ema_beta);
         Ok(Self { global, profiler, opts, last_schedule: None })
     }
+}
 
-    fn noisy(&self, secs: f64, rng: &mut Rng64) -> f64 {
-        if self.opts.timing_noise <= 0.0 {
-            secs
-        } else {
-            secs * (1.0 + rng.gen_f64(-self.opts.timing_noise, self.opts.timing_noise))
-        }
+fn noisy(secs: f64, noise: f64, rng: &mut Rng64) -> f64 {
+    if noise <= 0.0 {
+        secs
+    } else {
+        secs * (1.0 + rng.gen_f64(-noise, noise))
     }
 }
 
-/// Load `init_full.bin` + per-tier aux heads into a `GlobalModel`.
+/// Load the initial global model: `init_full.bin` + per-tier aux heads when
+/// the artifact set is on disk, the deterministic in-tree initializer
+/// otherwise.
 pub fn load_initial_model(rt: &Runtime) -> Result<GlobalModel> {
-    let dir = rt.artifact_dir();
-    let flat = crate::runtime::load_f32_bin(&dir.join("init_full.bin"))?;
+    let flat = rt.initial_flat()?;
     let aux = (1..=rt.meta.max_tiers)
-        .map(|t| crate::runtime::load_f32_bin(&dir.join(format!("init_aux_t{t}.bin"))))
+        .map(|t| rt.initial_aux(t))
         .collect::<Result<Vec<_>>>()?;
     Ok(GlobalModel::new(flat, aux, &rt.meta))
 }
 
 /// Startup tier profiling: run each tier's client and server step once with
 /// a standard (synthetic) batch and record per-batch reference times. The
-/// first execution of each artifact includes compile time, so every tier is
-/// run twice and the second timing is kept.
+/// first execution of each artifact includes preparation, so every tier is
+/// run twice and the smaller timing is kept (a no-op under the reference
+/// backend's deterministic cost model, load-balancing under PJRT).
 pub fn profile_tiers(rt: &Runtime, global: &GlobalModel, tiers: usize) -> Result<TierProfile> {
     let meta = &rt.meta;
     let tiers = tiers.min(meta.max_tiers).max(1);
@@ -135,8 +142,109 @@ pub fn profile_tiers(rt: &Runtime, global: &GlobalModel, tiers: usize) -> Result
         }
         server_secs.push(best_s);
     }
-    log::info!("tier profiling complete: client={client_secs:?} server={server_secs:?}");
+    crate::log::info!("tier profiling complete: client={client_secs:?} server={server_secs:?}");
     Ok(TierProfile { client_batch_secs: client_secs, server_batch_secs: server_secs })
+}
+
+/// Per-client work description handed to the worker pool.
+struct ClientTask {
+    k: usize,
+    tier: usize,
+    nb: usize,
+    profile: ResourceProfile,
+}
+
+/// Per-client result streamed back to the reducer.
+struct ClientBundle {
+    update: ClientUpdate,
+    time: ClientRoundTime,
+    tier: usize,
+    last_loss: f64,
+    /// Profiler observation (per-batch compute secs, link bytes/sec); None
+    /// when the client ran no batches this round.
+    obs: Option<(f64, f64)>,
+}
+
+/// Steps ①–④ for one client — a pure function of the global snapshot, the
+/// task, and the client's deterministic RNG stream.
+fn run_client(
+    env: &RoundEnv,
+    global: &GlobalModel,
+    server: &ServerModel,
+    timing_noise: f64,
+    task: &ClientTask,
+) -> Result<ClientBundle> {
+    let rt = env.rt;
+    let meta = &rt.meta;
+    let engine = StepEngine::new(rt);
+    let (k, tier, nb) = (task.k, task.tier, task.nb);
+    let tmeta = meta.tier(tier);
+    let mut crng = env.client_rng(k);
+
+    // ① download client-side model + aux head; ④ server-side model
+    let mut cstate = TrainState::new(global.client_vec(meta, tier));
+    let mut sstate = TrainState::new(global.server_vec(meta, tier));
+
+    let mut host_client = 0.0f64;
+    let mut host_server = 0.0f64;
+    let mut last_loss = 0.0f64;
+    for bi in 0..nb {
+        let bt = env.batch(k, bi)?;
+        // ②③ client local-loss step
+        let cout = engine.client_step(
+            tier,
+            &mut cstate,
+            env.lr,
+            &bt.x,
+            &bt.y,
+            env.privacy.dcor_alpha,
+        )?;
+        host_client += cout.host_secs;
+        last_loss = cout.loss as f64;
+
+        // optional privacy transform on the uploaded activation
+        let z = match env.privacy.patch_shuffle {
+            Some(p) => {
+                let mut zv = lit::to_f32_vec(&cout.z)?;
+                crate::data::patch_shuffle(
+                    &mut zv,
+                    &tmeta.z_shape,
+                    p,
+                    (env.round as u64) << 20 | (k as u64) << 8 | bi as u64,
+                );
+                lit::f32_literal(&zv, &tmeta.z_shape)?
+            }
+            None => cout.z,
+        };
+
+        // ④ server step on (z, y)
+        let sout = engine.server_step(tier, &mut sstate, env.lr, &z, &bt.y)?;
+        host_server += sout.host_secs;
+    }
+
+    // --- simulated timings (Eq. 5) ---
+    let sim_c = noisy(task.profile.compute_secs(host_client), timing_noise, &mut crng);
+    let sim_s = server.secs(host_server) / server.parallel_factor.max(1.0);
+    let bytes = tmeta.model_transfer_bytes + nb * tmeta.z_bytes_per_batch;
+    let sim_com = task.profile.comm_secs(bytes);
+    let obs = (nb > 0).then(|| {
+        // per-batch compute + measured link speed
+        (sim_c / nb as f64, bytes as f64 / sim_com.max(1e-9))
+    });
+
+    Ok(ClientBundle {
+        update: ClientUpdate {
+            client_id: k,
+            tier,
+            weight: env.partition.size(k).max(1) as f64,
+            client_vec: cstate.params,
+            server_vec: sstate.params,
+        },
+        time: ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s },
+        tier,
+        last_loss,
+        obs,
+    })
 }
 
 impl Method for Dtfl {
@@ -149,9 +257,8 @@ impl Method for Dtfl {
     }
 
     fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
-        let rt = env.rt;
-        let meta = &rt.meta;
-        let engine = StepEngine::new(rt);
+        let env: &RoundEnv = env;
+        let meta = &env.rt.meta;
         let batch = meta.batch;
 
         // ① dynamic tier scheduling (or the static-tier ablation)
@@ -162,90 +269,46 @@ impl Method for Dtfl {
             })
             .collect();
         let sched = schedule(meta, &self.profiler, &env.server, &loads, self.opts.max_tiers);
-        let tier_of = |k: usize| -> usize {
-            self.opts.static_tier.unwrap_or_else(|| sched.tier_of(k))
-        };
+        let static_tier = self.opts.static_tier;
+        let tasks: Vec<ClientTask> = env
+            .participants
+            .iter()
+            .map(|&k| ClientTask {
+                k,
+                tier: static_tier.unwrap_or_else(|| sched.tier_of(k)),
+                nb: env.n_batches(k, batch),
+                profile: env.profiles[k],
+            })
+            .collect();
 
-        let mut updates = Vec::with_capacity(env.participants.len());
-        let mut times = Vec::with_capacity(env.participants.len());
-        let mut tiers = Vec::with_capacity(env.participants.len());
+        // ②③④ fan the per-client loop across the worker pool, ⑤ stream the
+        // updates into the aggregator in participant order
+        let global = &self.global;
+        let profiler = &mut self.profiler;
+        let timing_noise = self.opts.timing_noise;
+        let server = env.server;
+        let mut agg = Aggregator::new(meta);
+        let mut times = Vec::with_capacity(tasks.len());
+        let mut tiers = Vec::with_capacity(tasks.len());
         let mut loss_sum = 0.0f64;
+        for_each_streamed(
+            env.threads,
+            &tasks,
+            |_, task| run_client(env, global, &server, timing_noise, task),
+            |_, b: ClientBundle| {
+                agg.fold(&b.update)?;
+                if let Some((batch_secs, nu)) = b.obs {
+                    profiler.observe(b.update.client_id, b.tier, batch_secs, nu);
+                }
+                times.push(b.time);
+                tiers.push(b.tier);
+                loss_sum += b.last_loss;
+                Ok(())
+            },
+        )?;
 
-        for &k in env.participants {
-            let tier = tier_of(k);
-            let tmeta = meta.tier(tier);
-            let profile = env.profiles[k];
-            let nb = env.n_batches(k, batch);
-
-            // ① download client-side model + aux head
-            let mut cstate = TrainState::new(self.global.client_vec(meta, tier));
-            // ④ server-side model for this client
-            let mut sstate = TrainState::new(self.global.server_vec(meta, tier));
-
-            let shard = &env.partition.client_indices[k];
-            let batcher = crate::data::Batcher::new(env.train, shard, batch);
-
-            let mut host_client = 0.0f64;
-            let mut host_server = 0.0f64;
-            let mut last_loss = 0.0f64;
-            for bi in 0..nb {
-                let bt = batcher.batch(bi % batcher.num_batches().max(1))?;
-                // ②③ client local-loss step
-                let cout = engine.client_step(
-                    tier,
-                    &mut cstate,
-                    env.lr,
-                    &bt.x,
-                    &bt.y,
-                    env.privacy.dcor_alpha,
-                )?;
-                host_client += cout.host_secs;
-                last_loss = cout.loss as f64;
-
-                // optional privacy transform on the uploaded activation
-                let z = match env.privacy.patch_shuffle {
-                    Some(p) => {
-                        let mut zv = lit::to_f32_vec(&cout.z)?;
-                        crate::data::patch_shuffle(
-                            &mut zv,
-                            &tmeta.z_shape,
-                            p,
-                            (env.round as u64) << 20 | (k as u64) << 8 | bi as u64,
-                        );
-                        lit::f32_literal(&zv, &tmeta.z_shape)?
-                    }
-                    None => cout.z,
-                };
-
-                // ④ server step on (z, y)
-                let sout = engine.server_step(tier, &mut sstate, env.lr, &z, &bt.y)?;
-                host_server += sout.host_secs;
-            }
-
-            // --- simulated timings (Eq. 5) ---
-            let sim_c = self.noisy(profile.compute_secs(host_client), env.rng);
-            let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
-            let bytes = tmeta.model_transfer_bytes + nb * tmeta.z_bytes_per_batch;
-            let sim_com = profile.comm_secs(bytes);
-            times.push(ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s });
-
-            // profiler observation (per-batch compute + measured link speed)
-            let nu = bytes as f64 / sim_com.max(1e-9);
-            self.profiler.observe(k, tier, sim_c / nb.max(1) as f64, nu);
-
-            loss_sum += last_loss;
-            tiers.push(tier);
-            updates.push(ClientUpdate {
-                client_id: k,
-                tier,
-                weight: env.partition.size(k).max(1) as f64,
-                client_vec: cstate.params,
-                server_vec: sstate.params,
-            });
-        }
-
-        // ⑤ aggregate into the new global model
-        self.global = aggregate(meta, &self.global, &updates)?;
+        let new_global = agg.finish(&self.global)?;
+        self.global = new_global;
         self.last_schedule = Some(sched);
 
         Ok(RoundOutcome {

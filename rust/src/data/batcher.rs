@@ -4,15 +4,22 @@
 //! samples contributes Ñ_k = ceil(N_k / B) batches per local epoch, with the
 //! final partial batch wrapped around (sampling with replacement from the
 //! client's own shard), matching fixed-shape AOT execution.
+//!
+//! [`BatchCache`] memoizes the encoded literals per (client, batch index)
+//! across rounds — the dataset and partition are immutable for a run, so a
+//! shard's batches are identical every epoch and re-encoding them each round
+//! was pure waste. Slots are per-entry `OnceLock`s, so the parallel round
+//! engine can fill the cache concurrently without a global lock.
 
-use anyhow::Result;
-use xla::Literal;
+use std::sync::{Arc, OnceLock};
 
-use crate::runtime::literal as lit;
+use crate::anyhow::Result;
+use crate::runtime::literal::{self as lit, Literal};
 
+use super::partition::Partition;
 use super::synth::Dataset;
 
-/// Pre-encoded batch ready for PJRT execution.
+/// Pre-encoded batch ready for backend execution.
 pub struct Batch {
     pub x: Literal,
     pub y: Literal,
@@ -41,8 +48,12 @@ impl<'a> Batcher<'a> {
     }
 
     /// Assemble batch `b` (0-based); wraps around the shard for the final
-    /// partial batch.
+    /// partial batch. An empty shard is a descriptive error, not a panic.
     pub fn batch(&self, b: usize) -> Result<Batch> {
+        crate::anyhow::ensure!(
+            !self.indices.is_empty(),
+            "batch {b} requested from an empty shard (client holds no samples)"
+        );
         let hw = self.ds.spec.image_hw;
         let ch = self.ds.spec.channels;
         let p = self.ds.spec.pixels_per_image();
@@ -67,6 +78,66 @@ impl<'a> Batcher<'a> {
     }
 }
 
+/// Memoized encoded batches for every client shard, shared across rounds
+/// (and across worker threads within a round).
+pub struct BatchCache {
+    batch: usize,
+    /// `slots[k][b]` holds client k's b-th epoch batch once encoded.
+    slots: Vec<Vec<OnceLock<Arc<Batch>>>>,
+}
+
+impl BatchCache {
+    pub fn new(partition: &Partition, batch: usize) -> Self {
+        let slots = partition
+            .client_indices
+            .iter()
+            .map(|idx| {
+                let nb = if idx.is_empty() { 0 } else { idx.len().div_ceil(batch) };
+                (0..nb).map(|_| OnceLock::new()).collect()
+            })
+            .collect();
+        Self { batch, slots }
+    }
+
+    /// Ñ_k for client k (0 for an empty shard).
+    pub fn num_batches(&self, k: usize) -> usize {
+        self.slots[k].len()
+    }
+
+    /// Encoded batches currently resident (diagnostics / tests).
+    pub fn encoded(&self) -> usize {
+        self.slots
+            .iter()
+            .flat_map(|s| s.iter())
+            .filter(|c| c.get().is_some())
+            .count()
+    }
+
+    /// Fetch (encoding on first use) client k's batch `bi`; indices wrap
+    /// around the epoch like the round loop expects.
+    pub fn get(
+        &self,
+        ds: &Dataset,
+        partition: &Partition,
+        k: usize,
+        bi: usize,
+    ) -> Result<Arc<Batch>> {
+        let nb = self.slots[k].len();
+        crate::anyhow::ensure!(nb > 0, "client {k} has an empty shard — no batches to fetch");
+        let slot = &self.slots[k][bi % nb];
+        if let Some(b) = slot.get() {
+            return Ok(b.clone());
+        }
+        let built = Arc::new(
+            Batcher::new(ds, &partition.client_indices[k], self.batch).batch(bi % nb)?,
+        );
+        // a concurrent builder may have won the race; both built identical
+        // bytes, keep whichever landed
+        let _ = slot.set(built);
+        Ok(slot.get().expect("slot just initialized").clone())
+    }
+}
+
 /// Batches over a full dataset (evaluation path).
 pub fn eval_batches(ds: &Dataset, batch: usize) -> Result<Vec<Batch>> {
     let idx: Vec<usize> = (0..ds.len()).collect();
@@ -81,6 +152,7 @@ pub fn eval_batches(ds: &Dataset, batch: usize) -> Result<Vec<Batch>> {
 mod tests {
     use super::*;
     use crate::data::synth::{generate_train, DatasetSpec};
+    use crate::data::{partition, PartitionScheme};
 
     #[test]
     fn batch_count_rounds_up() {
@@ -102,11 +174,40 @@ mod tests {
     }
 
     #[test]
+    fn empty_shard_batch_is_an_error_not_a_panic() {
+        // regression: `pos % indices.len()` used to divide by zero here
+        let ds = generate_train(&DatasetSpec::tiny(10, 16));
+        let idx: Vec<usize> = vec![];
+        let b = Batcher::new(&ds, &idx, 4);
+        let err = b.batch(0).unwrap_err();
+        assert!(err.to_string().contains("empty shard"), "{err}");
+    }
+
+    #[test]
     fn literal_shapes_match_spec() {
         let ds = generate_train(&DatasetSpec::tiny(20, 16));
         let idx: Vec<usize> = (0..8).collect();
         let b = Batcher::new(&ds, &idx, 8).batch(0).unwrap();
         assert_eq!(b.x.element_count(), 8 * 16 * 16 * 3);
         assert_eq!(b.y.element_count(), 8);
+    }
+
+    #[test]
+    fn cache_memoizes_and_matches_direct_encoding() {
+        let ds = generate_train(&DatasetSpec::tiny(24, 8));
+        let part = partition(&ds, 3, PartitionScheme::Iid, 1);
+        let cache = BatchCache::new(&part, 4);
+        assert_eq!(cache.encoded(), 0);
+        let a = cache.get(&ds, &part, 0, 0).unwrap();
+        let b = cache.get(&ds, &part, 0, 0).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second fetch must hit the cache");
+        assert_eq!(cache.encoded(), 1);
+        // wrap-around indices alias the same slot
+        let w = cache.get(&ds, &part, 0, cache.num_batches(0)).unwrap();
+        assert!(Arc::ptr_eq(&a, &w));
+        // cached literal equals a fresh encoding
+        let direct = Batcher::new(&ds, &part.client_indices[0], 4).batch(0).unwrap();
+        assert_eq!(a.x, direct.x);
+        assert_eq!(a.y, direct.y);
     }
 }

@@ -7,7 +7,7 @@ pub mod partition;
 pub mod shuffle;
 pub mod synth;
 
-pub use batcher::{eval_batches, Batch, Batcher};
+pub use batcher::{eval_batches, Batch, BatchCache, Batcher};
 pub use partition::{partition, Partition, PartitionScheme};
 pub use shuffle::patch_shuffle;
 pub use synth::{generate_test, generate_train, Dataset, DatasetSpec};

@@ -6,13 +6,14 @@
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
 use crate::baselines::{FedAvg, FedGkt, FedYogi, SplitFed};
 use crate::config::ExperimentConfig;
+use crate::coordinator::parallel::for_each_streamed;
 use crate::coordinator::{load_initial_model, Dtfl, DtflOptions};
 use crate::csv_row;
-use crate::data::{self, Dataset, DatasetSpec, Partition, PartitionScheme};
+use crate::data::{self, Batch, BatchCache, Dataset, DatasetSpec, Partition, PartitionScheme};
 use crate::fed::{Method, PrivacyCfg, RoundEnv};
 use crate::metrics::{CsvWriter, Recorder, RoundRecord, RunReport};
 use crate::runtime::{Runtime, StepEngine};
@@ -26,6 +27,10 @@ pub struct Experiment {
     pub train: Dataset,
     pub test: Dataset,
     pub partition: Partition,
+    /// Memoized encoded training batches (shared across rounds/threads).
+    pub batches: BatchCache,
+    /// Pre-encoded evaluation batches (encoded once per run).
+    eval_batches: Vec<Batch>,
     pub profiles: Vec<ResourceProfile>,
     pub method: Box<dyn Method>,
     pub clock: VirtualClock,
@@ -49,7 +54,7 @@ impl Experiment {
     /// executable cache is reused so artifacts compile once per process).
     pub fn with_runtime(cfg: ExperimentConfig, rt: Rc<Runtime>) -> Result<Self> {
         cfg.validate()?;
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             rt.meta.config == cfg.model.artifact,
             "shared runtime holds artifact '{}' but config wants '{}'",
             rt.meta.config,
@@ -59,7 +64,7 @@ impl Experiment {
         // --- data ---
         let spec = DatasetSpec::by_name(&cfg.data.spec, cfg.data.train_total, cfg.data.test_total)
             .with_context(|| format!("unknown dataset spec '{}'", cfg.data.spec))?;
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             spec.image_hw == rt.meta.image_hw && spec.classes == rt.meta.num_classes,
             "dataset spec {} ({}px/{} classes) does not match artifact {} ({}px/{} classes)",
             spec.name,
@@ -77,6 +82,8 @@ impl Experiment {
             PartitionScheme::Iid
         };
         let partition = data::partition(&train, cfg.clients.count, scheme, cfg.clients.seed);
+        let batches = BatchCache::new(&partition, rt.meta.batch);
+        let eval_batches = data::eval_batches(&test, rt.meta.eval_batch)?;
 
         // --- heterogeneity ---
         let mut rng = Rng64::seed_from_u64(cfg.clients.seed ^ 0xD7F1);
@@ -97,6 +104,8 @@ impl Experiment {
             train,
             test,
             partition,
+            batches,
+            eval_batches,
             profiles,
             method,
             clock: VirtualClock::new(),
@@ -115,21 +124,31 @@ impl Experiment {
         }
     }
 
-    /// Evaluate the current global model on the test set.
+    /// Evaluate the current global model on the test set. Batches are
+    /// pre-encoded at construction and fan out over the worker pool; the
+    /// in-order streaming reduction keeps the result bit-deterministic.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let engine = StepEngine::new(&self.rt);
-        let batches = data::eval_batches(&self.test, self.rt.meta.eval_batch)?;
         let params = self.method.global_params();
+        let rt = &*self.rt;
         let mut loss = 0.0f64;
         let mut correct = 0.0f64;
         let mut n = 0usize;
-        for b in &batches {
-            let (l, c) = engine.eval_batch(params, &b.x, &b.y)?;
-            loss += l as f64;
-            correct += c as f64;
-            n += b.size;
-        }
-        let nb = batches.len().max(1) as f64;
+        for_each_streamed(
+            self.cfg.run.threads,
+            &self.eval_batches,
+            |_, b| {
+                let engine = StepEngine::new(rt);
+                let (l, c) = engine.eval_batch(params, &b.x, &b.y)?;
+                Ok((l, c, b.size))
+            },
+            |_, (l, c, size): (f32, f32, usize)| {
+                loss += l as f64;
+                correct += c as f64;
+                n += size;
+                Ok(())
+            },
+        )?;
+        let nb = self.eval_batches.len().max(1) as f64;
         Ok((loss / nb, correct / n.max(1) as f64))
     }
 
@@ -155,7 +174,7 @@ impl Experiment {
             if let Some(env) = &self.env_dyn {
                 let changed = env.maybe_switch(r, &mut self.profiles, &mut self.rng);
                 if !changed.is_empty() {
-                    log::info!("round {r}: {} client profiles switched", changed.len());
+                    crate::log::info!("round {r}: {} client profiles switched", changed.len());
                 }
             }
 
@@ -168,6 +187,7 @@ impl Experiment {
                     rt: &self.rt,
                     train: &self.train,
                     partition: &self.partition,
+                    batches: &self.batches,
                     profiles: &self.profiles,
                     participants: &ids,
                     server: self.server_model(),
@@ -178,7 +198,8 @@ impl Experiment {
                         dcor_alpha: self.cfg.privacy.dcor_alpha.filter(|&a| a > 0.0),
                         patch_shuffle: self.cfg.privacy.patch_shuffle,
                     },
-                    rng: &mut self.rng,
+                    seed: self.cfg.clients.seed,
+                    threads: self.cfg.run.threads,
                 };
                 self.method.round(&mut env)?
             };
@@ -202,7 +223,7 @@ impl Experiment {
                     if self.plateau >= self.cfg.run.lr_patience {
                         self.lr *= self.cfg.run.lr_decay;
                         self.plateau = 0;
-                        log::info!("round {r}: plateau, lr decayed to {}", self.lr);
+                        crate::log::info!("round {r}: plateau, lr decayed to {}", self.lr);
                     }
                 }
                 (Some(l), Some(a))
@@ -228,7 +249,7 @@ impl Experiment {
                 mean_tier,
                 host_secs: t0.elapsed().as_secs_f64(),
             };
-            log::info!(
+            crate::log::info!(
                 "round {r}: sim_time={:.1}s loss={:.3} acc={} mean_tier={:.1} host={:.2}s",
                 rec.sim_time,
                 rec.train_loss,
@@ -253,7 +274,7 @@ impl Experiment {
             recorder.push(rec, target);
 
             if target.is_some() && recorder.reached_target() {
-                log::info!("round {r}: target accuracy reached — stopping");
+                crate::log::info!("round {r}: target accuracy reached — stopping");
                 break;
             }
         }
@@ -313,7 +334,7 @@ pub fn build_method(cfg: &ExperimentConfig, rt: &Runtime) -> Result<Box<dyn Meth
         "splitfed" => Box::new(SplitFed::new(load_initial_model(rt)?.flat)),
         "fedyogi" => Box::new(FedYogi::new(load_initial_model(rt)?.flat)),
         "fedgkt" => Box::new(FedGkt::new(rt)?),
-        other => anyhow::bail!("unknown method '{other}'"),
+        other => crate::anyhow::bail!("unknown method '{other}'"),
     };
     Ok(method)
 }

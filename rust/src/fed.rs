@@ -1,10 +1,17 @@
 //! Common abstraction every federated method implements (DTFL and the four
 //! baselines), plus the shared per-round environment the experiment driver
 //! passes in.
+//!
+//! The environment is designed for the parallel round engine: it is `Sync`,
+//! batches come from a thread-safe memoizing [`BatchCache`], and randomness
+//! is exposed as **per-client streams** derived from `(seed, round,
+//! client_id)` — never a shared mutable RNG — so a round's results are
+//! bit-identical no matter how many worker threads execute it.
 
-use anyhow::Result;
+use std::sync::Arc;
 
-use crate::data::{Dataset, Partition};
+use crate::anyhow::Result;
+use crate::data::{Batch, BatchCache, Dataset, Partition};
 use crate::runtime::Runtime;
 use crate::simulation::{ClientRoundTime, ResourceProfile, ServerModel};
 use crate::util::Rng64;
@@ -23,6 +30,8 @@ pub struct RoundEnv<'a> {
     pub rt: &'a Runtime,
     pub train: &'a Dataset,
     pub partition: &'a Partition,
+    /// Memoized encoded batches (shared across rounds and worker threads).
+    pub batches: &'a BatchCache,
     pub profiles: &'a [ResourceProfile],
     /// Client ids participating this round (sampling done by the driver).
     pub participants: &'a [usize],
@@ -33,17 +42,39 @@ pub struct RoundEnv<'a> {
     /// testbed; None = full local epoch).
     pub batch_cap: Option<usize>,
     pub privacy: PrivacyCfg,
-    pub rng: &'a mut Rng64,
+    /// Base seed for per-client RNG stream derivation.
+    pub seed: u64,
+    /// Worker threads for per-client execution (0 = all available cores).
+    pub threads: usize,
 }
 
 impl RoundEnv<'_> {
-    /// Ñ_k for client k under the configured cap.
+    /// Ñ_k for client k under the configured cap (0 for an empty shard —
+    /// such a client contributes its unchanged download to aggregation).
     pub fn n_batches(&self, k: usize, batch: usize) -> usize {
+        if self.partition.size(k) == 0 {
+            return 0;
+        }
         let n = self.partition.size(k).div_ceil(batch).max(1);
         match self.batch_cap {
             Some(cap) => n.min(cap),
             None => n,
         }
+    }
+
+    /// Deterministic RNG stream for client k this round: independent of
+    /// scheduling/thread interleaving by construction.
+    pub fn client_rng(&self, k: usize) -> Rng64 {
+        let mix = self
+            .seed
+            .wrapping_add((self.round as u64).wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add((k as u64 + 1).wrapping_mul(0xA24BAED4963EE407));
+        Rng64::seed_from_u64(mix)
+    }
+
+    /// Client k's batch `bi` (memoized; wraps around the shard's epoch).
+    pub fn batch(&self, k: usize, bi: usize) -> Result<Arc<Batch>> {
+        self.batches.get(self.train, self.partition, k, bi)
     }
 }
 
@@ -68,4 +99,39 @@ pub trait Method {
 
     /// Full global model parameters in the flat layout (for evaluation).
     fn global_params(&self) -> &[f32];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{self, DatasetSpec, PartitionScheme};
+
+    #[test]
+    fn client_rng_streams_are_stable_and_distinct() {
+        let train = data::generate_train(&DatasetSpec::tiny(32, 8));
+        let partition = data::partition(&train, 4, PartitionScheme::Iid, 1);
+        let batches = BatchCache::new(&partition, 8);
+        let rt = Runtime::open("artifacts/tiny").unwrap();
+        let env = RoundEnv {
+            rt: &rt,
+            train: &train,
+            partition: &partition,
+            batches: &batches,
+            profiles: &[],
+            participants: &[0, 1],
+            server: ServerModel::default(),
+            lr: 1e-3,
+            round: 3,
+            batch_cap: None,
+            privacy: PrivacyCfg::default(),
+            seed: 17,
+            threads: 0,
+        };
+        let mut a1 = env.client_rng(0);
+        let mut a2 = env.client_rng(0);
+        let mut b = env.client_rng(1);
+        assert_eq!(a1.next_u64(), a2.next_u64(), "same (seed, round, client) → same stream");
+        assert_ne!(env.client_rng(0).next_u64(), b.next_u64(), "clients get distinct streams");
+        let _ = a1.next_u64();
+    }
 }

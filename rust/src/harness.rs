@@ -3,15 +3,18 @@
 //! benches. Keeps each example a thin driver.
 
 use std::rc::Rc;
+use std::time::Instant;
 
-use anyhow::Result;
+use crate::anyhow::Result;
 
 use crate::config::{
     ClientsCfg, DataCfg, ExperimentConfig, ModelCfg, OutputCfg, PrivacyCfgToml, RunCfg, SimCfg,
 };
+use crate::coordinator::resolve_threads;
 use crate::experiment::Experiment;
 use crate::metrics::{RoundRecord, RunReport};
 use crate::simulation::ProfilePool;
+use crate::util::json::{self, Json};
 
 /// Builder with testbed-sized defaults; every table harness starts here and
 /// overrides what its experiment varies.
@@ -37,6 +40,8 @@ pub struct RunSpec {
     pub patch_shuffle: Option<usize>,
     pub seed: u64,
     pub eval_every: usize,
+    /// Worker threads for round execution (0 = all cores).
+    pub threads: usize,
     pub lr: f32,
     pub out_name: Option<String>,
 }
@@ -64,6 +69,7 @@ impl Default for RunSpec {
             patch_shuffle: None,
             seed: 17,
             eval_every: 2,
+            threads: 0,
             lr: 1e-3,
             out_name: None,
         }
@@ -110,6 +116,7 @@ impl RunSpec {
                 static_tier: self.static_tier,
                 ema_beta: 0.5,
                 timing_noise: 0.05,
+                threads: self.threads,
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -134,7 +141,10 @@ impl RunSpec {
     }
 
     /// Run on a shared runtime (compiled artifacts reused across cells).
-    pub fn run_shared(&self, rt: Rc<crate::runtime::Runtime>) -> Result<(RunReport, Vec<RoundRecord>)> {
+    pub fn run_shared(
+        &self,
+        rt: Rc<crate::runtime::Runtime>,
+    ) -> Result<(RunReport, Vec<RoundRecord>)> {
         self.run_impl(Some(rt))
     }
 
@@ -159,6 +169,80 @@ impl RunSpec {
             self.to_config().model.artifact_path(),
         )?))
     }
+}
+
+/// Result of one round-throughput probe (sequential vs parallel engine).
+#[derive(Debug, Clone)]
+pub struct RoundThroughput {
+    pub clients: usize,
+    pub rounds: usize,
+    /// Worker threads the parallel run used.
+    pub threads: usize,
+    pub seq_secs_per_round: f64,
+    pub par_secs_per_round: f64,
+    /// Whether both engines produced identical global parameter bits.
+    pub bit_identical: bool,
+}
+
+impl RoundThroughput {
+    pub fn speedup(&self) -> f64 {
+        self.seq_secs_per_round / self.par_secs_per_round.max(1e-12)
+    }
+
+    /// The `bench_round` object recorded in `BENCH_hotpath.json`.
+    pub fn to_json(&self, source: &str) -> Json {
+        json::obj(vec![
+            ("clients", json::num(self.clients as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("threads", json::num(self.threads as f64)),
+            ("seq_secs_per_round", json::num(self.seq_secs_per_round)),
+            ("par_secs_per_round", json::num(self.par_secs_per_round)),
+            ("speedup", json::num(self.speedup())),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Run the same K-client DTFL experiment twice — 1 worker thread, then the
+/// full pool — timing whole rounds (eval included) and comparing the final
+/// global parameters bit-for-bit. Shared by `benches/micro_hotpath.rs` and
+/// the `cargo test` smoke recorder so both report the same probe.
+pub fn measure_round_throughput(
+    clients: usize,
+    rounds: usize,
+    samples_per_client: usize,
+) -> Result<RoundThroughput> {
+    let spec = |threads: usize| RunSpec {
+        clients,
+        rounds,
+        batch_cap: Some(1),
+        train_total: clients * samples_per_client,
+        test_total: 32,
+        eval_every: 1,
+        threads,
+        ..Default::default()
+    };
+    let run = |threads: usize| -> Result<(f64, Vec<f32>)> {
+        let mut exp = Experiment::new(spec(threads).to_config())?;
+        let t0 = Instant::now();
+        exp.run()?;
+        let secs = t0.elapsed().as_secs_f64() / rounds.max(1) as f64;
+        Ok((secs, exp.method.global_params().to_vec()))
+    };
+    // parallel first: one-time process warmup (page faults, allocator, CPU
+    // ramp) then lands on the parallel sample, biasing the recorded speedup
+    // DOWN — conservative for the ">=2x" trajectory this file tracks
+    let (par_secs_per_round, par_params) = run(0)?;
+    let (seq_secs_per_round, seq_params) = run(1)?;
+    Ok(RoundThroughput {
+        clients,
+        rounds,
+        threads: resolve_threads(0),
+        seq_secs_per_round,
+        par_secs_per_round,
+        bit_identical: seq_params == par_params,
+    })
 }
 
 /// Format a simulated duration the way the paper's tables do (integer

@@ -6,7 +6,8 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: the dynamic tier scheduler
 //!   (the paper's contribution, Algorithm 1), tier profiling with EMA
-//!   smoothing, the federated round loop, flat-layout model aggregation, a
+//!   smoothing, the **parallel round engine** (per-client steps fanned over
+//!   a deterministic worker pool, streaming flat-layout aggregation), a
 //!   heterogeneity simulator (CPU/network resource profiles + virtual
 //!   clock), synthetic datasets with Dirichlet non-IID partitioning, and the
 //!   FedAvg / SplitFed / FedYogi / FedGKT baselines.
@@ -15,9 +16,12 @@
 //! * **Layer 1** — a tiled Pallas matmul kernel carrying every conv/dense
 //!   FLOP of the model (`python/compile/kernels/matmul.py`).
 //!
-//! Python runs once at build time (`make artifacts`); this crate executes
-//! the artifacts through the PJRT CPU client (`xla` crate) and never calls
-//! Python at runtime.
+//! Two interchangeable execution backends sit under the round loop (see
+//! `runtime`): the default pure-Rust **reference** backend — a port of the
+//! layer-1/2 math that needs no artifacts, no Python, and no PJRT, with a
+//! deterministic MAC-count cost model — and the **pjrt** backend (feature
+//! `pjrt`), which executes the AOT artifacts through the PJRT CPU client
+//! exactly as before. `rust/README.md` covers the layout and knobs.
 //!
 //! ## Quickstart
 //!
@@ -32,6 +36,7 @@
 //!          100.0 * report.final_accuracy, report.total_sim_time);
 //! ```
 
+pub mod anyhow;
 pub mod baselines;
 pub mod config;
 pub mod coordinator;
@@ -39,9 +44,10 @@ pub mod data;
 pub mod experiment;
 pub mod fed;
 pub mod harness;
+pub mod log;
 pub mod metrics;
 pub mod runtime;
 pub mod simulation;
 pub mod util;
 
-pub use anyhow::{anyhow, bail, Context, Result};
+pub use crate::anyhow::{anyhow, bail, Context, Result};

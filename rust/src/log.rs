@@ -1,0 +1,119 @@
+//! Minimal in-tree logging facade replacing the `log` crate (offline
+//! testbed — zero external dependencies).
+//!
+//! Provides `log::error!` … `log::trace!` macros, a global max-level filter,
+//! and a built-in stderr emitter with elapsed-time prefixes. Level selection
+//! lives in `util::logging::init` (reads `DTFL_LOG`).
+
+use std::fmt;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Global max level; 0 = off. Defaults to Info.
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Tests that mutate the process-global `MAX_LEVEL` serialize on this lock
+/// (cargo runs tests on parallel threads).
+#[cfg(test)]
+pub(crate) static LEVEL_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Set the max level; `None` disables logging entirely.
+pub fn set_max_level(level: Option<Level>) {
+    MAX_LEVEL.store(level.map(|l| l as usize).unwrap_or(0), Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record to stderr (no-op when filtered out).
+pub fn emit(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let module = target.rsplit("::").next().unwrap_or(target);
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {} {module}] {args}", level.tag());
+}
+
+#[macro_export]
+macro_rules! __dtfl_log_error {
+    ($($arg:tt)*) => {
+        $crate::log::emit($crate::log::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! __dtfl_log_warn {
+    ($($arg:tt)*) => {
+        $crate::log::emit($crate::log::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! __dtfl_log_info {
+    ($($arg:tt)*) => {
+        $crate::log::emit($crate::log::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! __dtfl_log_debug {
+    ($($arg:tt)*) => {
+        $crate::log::emit($crate::log::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+#[macro_export]
+macro_rules! __dtfl_log_trace {
+    ($($arg:tt)*) => {
+        $crate::log::emit($crate::log::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
+pub use crate::__dtfl_log_debug as debug;
+pub use crate::__dtfl_log_error as error;
+pub use crate::__dtfl_log_info as info;
+pub use crate::__dtfl_log_trace as trace;
+pub use crate::__dtfl_log_warn as warn;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filter_gates_emission() {
+        let _serial = LEVEL_TEST_LOCK.lock().unwrap();
+        set_max_level(Some(Level::Warn));
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Some(Level::Info));
+        assert!(enabled(Level::Info));
+        set_max_level(None);
+        assert!(!enabled(Level::Error));
+        set_max_level(Some(Level::Info));
+    }
+}

@@ -6,7 +6,7 @@
 //! dtfl profile --artifacts artifacts/tiny       # tier profiling (Table 2)
 //! ```
 
-use anyhow::{bail, Result};
+use dtfl::anyhow::{bail, Result};
 
 use dtfl::config::ExperimentConfig;
 use dtfl::coordinator::{load_initial_model, profile_tiers};

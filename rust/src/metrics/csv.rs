@@ -4,7 +4,7 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
 /// Simple CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -25,7 +25,7 @@ impl CsvWriter {
     }
 
     pub fn row(&mut self, fields: &[String]) -> Result<()> {
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             fields.len() == self.columns,
             "row has {} fields, header has {}",
             fields.len(),

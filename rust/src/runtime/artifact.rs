@@ -4,8 +4,8 @@
 //! this module turns "vector of literals in / tuple of literals out" into
 //! typed rust calls and keeps optimizer state in flat `Vec<f32>`s.
 
-use anyhow::Result;
-use xla::Literal;
+use crate::anyhow::Result;
+use super::literal::Literal;
 
 use super::client::Runtime;
 use super::literal as lit;
@@ -127,7 +127,7 @@ impl<'a> StepEngine<'a> {
             inputs.push(a);
         }
         let (parts, secs) = self.rt.execute(&name, &inputs)?;
-        anyhow::ensure!(parts.len() == 6, "client_step returned {} parts", parts.len());
+        crate::anyhow::ensure!(parts.len() == 6, "client_step returned {} parts", parts.len());
         Self::update_state(state, &parts)?;
         let loss = lit::scalar_f32(&parts[5])?;
         let z = parts.into_iter().nth(4).unwrap();
@@ -147,7 +147,7 @@ impl<'a> StepEngine<'a> {
         let s = Self::state_literals(state, lr)?;
         let inputs: Vec<&Literal> = vec![&s[0], &s[1], &s[2], &s[3], &s[4], z, y];
         let (parts, secs) = self.rt.execute(&name, &inputs)?;
-        anyhow::ensure!(parts.len() == 6, "server_step returned {} parts", parts.len());
+        crate::anyhow::ensure!(parts.len() == 6, "server_step returned {} parts", parts.len());
         Self::update_state(state, &parts)?;
         Ok(ServerStepOut {
             loss: lit::scalar_f32(&parts[4])?,
@@ -170,7 +170,7 @@ impl<'a> StepEngine<'a> {
         let s = Self::state_literals(state, lr)?;
         let inputs: Vec<&Literal> = vec![&s[0], &s[1], &s[2], &s[3], &s[4], x, y];
         let (parts, secs) = self.rt.execute(name, &inputs)?;
-        anyhow::ensure!(parts.len() == 6, "full_step returned {} parts", parts.len());
+        crate::anyhow::ensure!(parts.len() == 6, "full_step returned {} parts", parts.len());
         Self::update_state(state, &parts)?;
         Ok(FullStepOut {
             loss: lit::scalar_f32(&parts[4])?,
@@ -184,7 +184,7 @@ impl<'a> StepEngine<'a> {
         let p = lit::f32_vec(params)?;
         let inputs: Vec<&Literal> = vec![&p, x, y];
         let (parts, _) = self.rt.execute("eval", &inputs)?;
-        anyhow::ensure!(parts.len() == 2, "eval returned {} parts", parts.len());
+        crate::anyhow::ensure!(parts.len() == 2, "eval returned {} parts", parts.len());
         Ok((lit::scalar_f32(&parts[0])?, lit::scalar_f32(&parts[1])?))
     }
 }

@@ -1,0 +1,206 @@
+//! Execution backends behind the `ExecBackend` trait.
+//!
+//! * `RefBackend` (always available, the default) — executes the pure-Rust
+//!   math in [`super::refmath`]. "Compilation" is a cheap artifact-name →
+//!   step-plan resolution, cached in an `RwLock<HashMap>` of per-entry
+//!   `OnceLock`s: after first touch, concurrent `execute` calls share a read
+//!   lock and never contend — the property the parallel round engine relies
+//!   on.
+//! * `PjrtBackend` (feature `pjrt`, see `super::pjrt`) — the original
+//!   HLO-text → PJRT CPU path.
+//!
+//! Backends report a **cost** per execution. The reference backend derives
+//! it from the step's multiply-accumulate count at a fixed nominal
+//! throughput, so simulated timings are bit-deterministic regardless of
+//! thread count or machine load; PJRT reports measured wall time.
+
+use std::collections::HashMap;
+use std::sync::{Arc, OnceLock, RwLock};
+use std::time::Instant;
+
+use crate::anyhow::{anyhow, Result};
+
+use super::literal::Literal;
+use super::metadata::Metadata;
+use super::refmath;
+
+/// Nominal reference-host throughput used to turn MAC counts into simulated
+/// host seconds (the "1-CPU reference host" the paper's profiles scale).
+pub const REF_MACS_PER_SEC: f64 = 4.0e9;
+
+/// Read-mostly map of lazily-initialized per-key cells: lookups take a read
+/// lock, each value initializes exactly once via its `OnceLock`. Shared by
+/// the reference plan cache and the PJRT executable cache.
+pub struct OnceMap<V> {
+    inner: RwLock<HashMap<String, Arc<OnceLock<V>>>>,
+}
+
+impl<V> Default for OnceMap<V> {
+    fn default() -> Self {
+        Self { inner: RwLock::new(HashMap::new()) }
+    }
+}
+
+impl<V> OnceMap<V> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch (or create) the cell for `key`; read-locked on the hot path.
+    pub fn cell(&self, key: &str) -> Arc<OnceLock<V>> {
+        if let Some(cell) = self.inner.read().unwrap().get(key) {
+            return cell.clone();
+        }
+        let mut w = self.inner.write().unwrap();
+        w.entry(key.to_string()).or_default().clone()
+    }
+}
+
+/// Result of one artifact execution.
+pub struct ExecOut {
+    pub parts: Vec<Literal>,
+    /// Host-side cost in seconds: deterministic model cost for the reference
+    /// backend, measured wall time for PJRT.
+    pub cost_secs: f64,
+}
+
+/// An execution backend: compiles (prepares) named artifacts and executes
+/// them on literal tuples.
+pub trait ExecBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Prepare the named artifact. Returns `Some(seconds_spent)` when this
+    /// call performed the (one-time) preparation, `None` when it was already
+    /// cached. Thread-safe and idempotent.
+    fn prepare(&self, artifact: &str) -> Result<Option<f64>>;
+
+    /// Execute the named artifact (prepares it if needed).
+    fn execute(&self, artifact: &str, inputs: &[&Literal]) -> Result<ExecOut>;
+}
+
+/// Parsed artifact name — the step-dispatch "plan".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    Client { tier: usize, dcor: bool },
+    Server { tier: usize },
+    Full { sgd: bool },
+    Eval,
+}
+
+/// Resolve an artifact name (`client_step_t3`, `server_step_t5`,
+/// `full_step`, `full_step_sgd`, `eval`, `client_step_t2_dcor`).
+pub fn parse_artifact(name: &str, max_tiers: usize) -> Result<StepKind> {
+    match name {
+        "eval" => return Ok(StepKind::Eval),
+        "full_step" => return Ok(StepKind::Full { sgd: false }),
+        "full_step_sgd" => return Ok(StepKind::Full { sgd: true }),
+        _ => {}
+    }
+    let parse_tier = |s: &str| -> Result<usize> {
+        let tier: usize = s
+            .parse()
+            .map_err(|_| anyhow!("bad tier in artifact name '{name}'"))?;
+        crate::anyhow::ensure!(
+            (1..=max_tiers).contains(&tier),
+            "artifact '{name}': tier {tier} out of range 1..={max_tiers}"
+        );
+        Ok(tier)
+    };
+    if let Some(rest) = name.strip_prefix("client_step_t") {
+        if let Some(t) = rest.strip_suffix("_dcor") {
+            return Ok(StepKind::Client { tier: parse_tier(t)?, dcor: true });
+        }
+        return Ok(StepKind::Client { tier: parse_tier(rest)?, dcor: false });
+    }
+    if let Some(rest) = name.strip_prefix("server_step_t") {
+        return Ok(StepKind::Server { tier: parse_tier(rest)? });
+    }
+    Err(anyhow!("unknown artifact '{name}'"))
+}
+
+/// The pure-Rust reference backend.
+pub struct RefBackend {
+    meta: Metadata,
+    plans: OnceMap<StepKind>,
+}
+
+impl RefBackend {
+    pub fn new(meta: Metadata) -> Self {
+        Self { meta, plans: OnceMap::new() }
+    }
+
+    fn plan(&self, artifact: &str) -> Result<(StepKind, Option<f64>)> {
+        let cell = self.plans.cell(artifact);
+        if let Some(kind) = cell.get() {
+            return Ok((*kind, None));
+        }
+        let t0 = Instant::now();
+        // parse outside the cell init so errors are propagated, not cached
+        let kind = parse_artifact(artifact, self.meta.max_tiers)?;
+        if let StepKind::Client { dcor: true, .. } = kind {
+            crate::anyhow::ensure!(
+                self.meta.has_dcor,
+                "artifact '{artifact}' requires a dcor-enabled config"
+            );
+        }
+        let first = cell.set(kind).is_ok();
+        Ok((kind, first.then(|| t0.elapsed().as_secs_f64())))
+    }
+}
+
+impl ExecBackend for RefBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn prepare(&self, artifact: &str) -> Result<Option<f64>> {
+        Ok(self.plan(artifact)?.1)
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[&Literal]) -> Result<ExecOut> {
+        let (kind, _) = self.plan(artifact)?;
+        let mut macs = 0u64;
+        let parts = match kind {
+            StepKind::Client { tier, dcor } => {
+                refmath::client_step(&self.meta, tier, dcor, inputs, &mut macs)?
+            }
+            StepKind::Server { tier } => refmath::server_step(&self.meta, tier, inputs, &mut macs)?,
+            StepKind::Full { sgd } => refmath::full_step(&self.meta, sgd, inputs, &mut macs)?,
+            StepKind::Eval => refmath::eval(&self.meta, inputs, &mut macs)?,
+        };
+        Ok(ExecOut { parts, cost_secs: macs as f64 / REF_MACS_PER_SEC })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::spec;
+
+    #[test]
+    fn artifact_names_parse() {
+        assert_eq!(parse_artifact("eval", 7).unwrap(), StepKind::Eval);
+        assert_eq!(parse_artifact("full_step", 7).unwrap(), StepKind::Full { sgd: false });
+        assert_eq!(parse_artifact("full_step_sgd", 7).unwrap(), StepKind::Full { sgd: true });
+        assert_eq!(
+            parse_artifact("client_step_t3", 7).unwrap(),
+            StepKind::Client { tier: 3, dcor: false }
+        );
+        assert_eq!(
+            parse_artifact("client_step_t2_dcor", 7).unwrap(),
+            StepKind::Client { tier: 2, dcor: true }
+        );
+        assert_eq!(parse_artifact("server_step_t7", 7).unwrap(), StepKind::Server { tier: 7 });
+        assert!(parse_artifact("server_step_t8", 7).is_err());
+        assert!(parse_artifact("client_step_t0", 7).is_err());
+        assert!(parse_artifact("bogus", 7).is_err());
+    }
+
+    #[test]
+    fn prepare_reports_first_touch_only() {
+        let be = RefBackend::new(spec::synthesize("tiny").unwrap());
+        assert!(be.prepare("full_step").unwrap().is_some());
+        assert!(be.prepare("full_step").unwrap().is_none());
+        assert!(be.prepare("bogus").is_err());
+    }
+}

@@ -1,22 +1,32 @@
-//! PJRT runtime: loads HLO-text artifacts, compiles them once, executes them
-//! from the round loop.
+//! The `Runtime`: artifact-set handle + execution front-end.
 //!
-//! One `Runtime` owns the PJRT CPU client and a cache of compiled
-//! executables keyed by artifact name, so re-tiering a client never
-//! recompiles anything — all (tier, kind) executables are compiled lazily on
-//! first use and reused for the rest of the run.
+//! One `Runtime` owns an [`ExecBackend`](super::backend::ExecBackend) and the
+//! artifact-set metadata. With the default `reference` backend it needs no
+//! files on disk at all — metadata is synthesized from the built-in config
+//! table and initial parameters come from the deterministic initializer.
+//! With the `pjrt` feature and an artifact directory produced by
+//! `make artifacts`, the original PJRT CPU path is used instead.
+//!
+//! `Runtime` is `Sync` and designed for concurrent use by the parallel round
+//! engine: statistics are lock-free atomics and the backends' executable/plan
+//! caches are `RwLock` + per-entry `OnceLock`, so concurrent `execute` calls
+//! never serialize on a shared mutex (the pre-parallel design wrapped the
+//! whole cache and stats in `Mutex`es, which would have serialized every
+//! step).
 
-use std::collections::HashMap;
+use std::borrow::Borrow;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+use crate::anyhow::{Context, Result};
 
-use super::metadata::Metadata;
+use super::backend::{ExecBackend, RefBackend};
+use super::literal::Literal;
+use super::metadata::{load_f32_bin, Metadata};
+use super::spec;
 
-/// Compiled-executable cache statistics (exposed for perf accounting).
+/// Executable cache / execution statistics (exposed for perf accounting).
 #[derive(Debug, Default, Clone)]
 pub struct RuntimeStats {
     pub compiles: usize,
@@ -25,108 +35,204 @@ pub struct RuntimeStats {
     pub execute_secs: f64,
 }
 
-/// PJRT client + artifact registry for one artifact set (one model config).
+/// Backend + artifact registry for one artifact set (one model config).
 pub struct Runtime {
-    client: PjRtClient,
     dir: PathBuf,
     pub meta: Metadata,
-    cache: Mutex<HashMap<String, PjRtLoadedExecutable>>,
-    stats: Mutex<RuntimeStats>,
+    backend: Box<dyn ExecBackend>,
+    compiles: AtomicUsize,
+    compile_nanos: AtomicU64,
+    executions: AtomicUsize,
+    execute_nanos: AtomicU64,
 }
 
 impl Runtime {
-    /// Open the artifact set at `artifacts/<config>`.
+    /// Open the artifact set at `artifacts/<config>`. The directory does not
+    /// need to exist for built-in configs under the reference backend.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let meta = Metadata::load(&dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::info!(
-            "runtime ready: platform={} devices={} config={}",
-            client.platform_name(),
-            client.device_count(),
-            meta.config
+        let backend = Self::select_backend(&dir, &meta)?;
+        crate::log::info!(
+            "runtime ready: backend={} config={} params={}",
+            backend.name(),
+            meta.config,
+            meta.total_params
         );
         Ok(Self {
-            client,
             dir,
             meta,
-            cache: Mutex::new(HashMap::new()),
-            stats: Mutex::new(RuntimeStats::default()),
+            backend,
+            compiles: AtomicUsize::new(0),
+            compile_nanos: AtomicU64::new(0),
+            executions: AtomicUsize::new(0),
+            execute_nanos: AtomicU64::new(0),
         })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn select_backend(dir: &Path, meta: &Metadata) -> Result<Box<dyn ExecBackend>> {
+        let prefer_ref =
+            matches!(std::env::var("DTFL_BACKEND").as_deref(), Ok("reference") | Ok("ref"));
+        if !prefer_ref && dir.join("full_step.hlo.txt").exists() {
+            return Ok(Box::new(super::pjrt::PjrtBackend::open(dir, meta.clone())?));
+        }
+        Ok(Box::new(RefBackend::new(meta.clone())))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn select_backend(_dir: &Path, meta: &Metadata) -> Result<Box<dyn ExecBackend>> {
+        Ok(Box::new(RefBackend::new(meta.clone())))
     }
 
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }
 
-    /// Compile (or fetch from cache) the named artifact.
-    fn compiled(&self, name: &str) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(name) {
-            return Ok(());
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Prepare (or fetch from cache) the named artifact; records compile
+    /// statistics on first touch.
+    fn prepared(&self, name: &str) -> Result<()> {
+        if let Some(secs) = self.backend.prepare(name)? {
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            self.compile_nanos
+                .fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+            crate::log::debug!("prepared artifact {name} in {secs:.3}s");
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let dt = t0.elapsed().as_secs_f64();
-        log::debug!("compiled artifact {name} in {dt:.2}s");
-        let mut stats = self.stats.lock().unwrap();
-        stats.compiles += 1;
-        stats.compile_secs += dt;
-        cache.insert(name.to_string(), exe);
         Ok(())
     }
 
     /// Execute the named artifact with the given inputs; returns the output
-    /// tuple elements (artifacts are lowered with `return_tuple=True`) and
-    /// the host-side wall time of the execution.
-    pub fn execute<L: std::borrow::Borrow<Literal>>(
+    /// tuple elements and the backend-reported host cost in seconds
+    /// (deterministic model cost for the reference backend, wall time for
+    /// PJRT — the profiler input either way).
+    pub fn execute<L: Borrow<Literal>>(
         &self,
         name: &str,
         inputs: &[L],
     ) -> Result<(Vec<Literal>, f64)> {
-        self.compiled(name)?;
-        let cache = self.cache.lock().unwrap();
-        let exe = cache.get(name).unwrap();
+        self.prepared(name)?;
+        let refs: Vec<&Literal> = inputs.iter().map(Borrow::borrow).collect();
         let t0 = Instant::now();
-        let result = exe
-            .execute::<L>(inputs)
+        let out = self
+            .backend
+            .execute(name, &refs)
             .with_context(|| format!("executing {name}"))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching {name} output"))?;
-        let dt = t0.elapsed().as_secs_f64();
-        let parts = tuple.to_tuple().context("decomposing output tuple")?;
-        let mut stats = self.stats.lock().unwrap();
-        stats.executions += 1;
-        stats.execute_secs += dt;
-        Ok((parts, dt))
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.execute_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok((out.parts, out.cost_secs))
     }
 
     /// Warm the executable cache for every artifact a run may need.
     pub fn warmup(&self, tiers: usize, dcor: bool) -> Result<()> {
-        for t in 1..=tiers {
-            self.compiled(&format!("client_step_t{t}"))?;
-            self.compiled(&format!("server_step_t{t}"))?;
+        for t in 1..=tiers.min(self.meta.max_tiers) {
+            self.prepared(&format!("client_step_t{t}"))?;
+            self.prepared(&format!("server_step_t{t}"))?;
             if dcor && self.meta.has_dcor {
-                self.compiled(&format!("client_step_t{t}_dcor"))?;
+                self.prepared(&format!("client_step_t{t}_dcor"))?;
             }
         }
-        self.compiled("full_step")?;
-        self.compiled("full_step_sgd")?;
-        self.compiled("eval")?;
+        self.prepared("full_step")?;
+        self.prepared("full_step_sgd")?;
+        self.prepared("eval")?;
         Ok(())
     }
 
+    /// Initial full-model parameters: `init_full.bin` when the artifact set
+    /// is on disk, else the deterministic in-tree initializer.
+    pub fn initial_flat(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join("init_full.bin");
+        if path.exists() {
+            let flat = load_f32_bin(&path)?;
+            crate::anyhow::ensure!(
+                flat.len() == self.meta.total_params,
+                "init_full.bin length {} != total params {}",
+                flat.len(),
+                self.meta.total_params
+            );
+            Ok(flat)
+        } else {
+            Ok(spec::init_flat(&self.meta, 0))
+        }
+    }
+
+    /// Initial auxiliary head parameters for one tier (same fallback rule).
+    pub fn initial_aux(&self, tier: usize) -> Result<Vec<f32>> {
+        let path = self.dir.join(format!("init_aux_t{tier}.bin"));
+        if path.exists() {
+            load_f32_bin(&path)
+        } else {
+            spec::init_aux(&self.meta, tier, 0)
+        }
+    }
+
+    /// Snapshot of the atomic statistics counters.
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.lock().unwrap().clone()
+        RuntimeStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            compile_secs: self.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            executions: self.executions.load(Ordering::Relaxed),
+            execute_secs: self.execute_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_rt() -> Runtime {
+        // directory does not exist — metadata + init are synthesized
+        Runtime::open("artifacts/tiny").unwrap()
+    }
+
+    #[test]
+    fn opens_builtin_config_without_artifacts_on_disk() {
+        let rt = tiny_rt();
+        assert_eq!(rt.meta.config, "tiny");
+        assert_eq!(rt.initial_flat().unwrap().len(), rt.meta.total_params);
+        for t in 1..=rt.meta.max_tiers {
+            assert_eq!(rt.initial_aux(t).unwrap().len(), rt.meta.tier(t).aux_len);
+        }
+    }
+
+    #[test]
+    fn warmup_counts_each_artifact_once() {
+        let rt = tiny_rt();
+        rt.warmup(2, true).unwrap();
+        let s1 = rt.stats();
+        // 2 tiers × (client, server, client_dcor) + full, full_sgd, eval
+        assert_eq!(s1.compiles, 2 * 3 + 3);
+        rt.warmup(2, true).unwrap();
+        assert_eq!(rt.stats().compiles, s1.compiles, "warmup must be idempotent");
+    }
+
+    #[test]
+    fn execute_updates_stats_and_returns_deterministic_cost() {
+        use crate::runtime::literal as lit;
+        let rt = tiny_rt();
+        let m = &rt.meta;
+        let flat = rt.initial_flat().unwrap();
+        let n = m.eval_batch * m.image_hw * m.image_hw * m.in_channels;
+        let x = lit::f32_literal(&vec![0.5; n], &[m.eval_batch, m.image_hw, m.image_hw, 3])
+            .unwrap();
+        let y = lit::i32_vec(&vec![0i32; m.eval_batch]).unwrap();
+        let p = lit::f32_vec(&flat).unwrap();
+        let inputs = [&p, &x, &y];
+        let (parts1, c1) = rt.execute("eval", &inputs).unwrap();
+        let (_, c2) = rt.execute("eval", &inputs).unwrap();
+        assert_eq!(parts1.len(), 2);
+        assert!(c1 > 0.0);
+        assert_eq!(c1, c2, "reference cost model must be deterministic");
+        assert_eq!(rt.stats().executions, 2);
+    }
+
+    #[test]
+    fn unknown_config_is_rejected() {
+        assert!(Runtime::open("artifacts/not-a-config").is_err());
     }
 }

@@ -1,35 +1,131 @@
-//! Conversions between rust buffers and `xla::Literal`s.
+//! Backend-agnostic tensor literals.
 //!
-//! These sit on the hot path (every client/server step crosses them), so
-//! they use the untyped-data constructor — one memcpy, no per-element work.
+//! Historically this module converted rust buffers into `xla::Literal`s; the
+//! crate now owns its literal type so the whole coordinator compiles and runs
+//! without PJRT. The reference backend executes on these directly; the
+//! feature-gated PJRT backend converts at the execution boundary (one memcpy
+//! each way, same as before).
 
-use anyhow::{anyhow, Result};
-use xla::{ArrayElement, Literal, PrimitiveType};
+use crate::anyhow::{anyhow, Result};
+
+/// Element payload of a literal.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense tensor; shapes are row-major (NHWC for images).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<usize>,
+    data: LiteralData,
+}
+
+impl Literal {
+    pub fn from_f32(data: Vec<f32>, dims: &[usize]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        crate::anyhow::ensure!(
+            n == data.len(),
+            "shape {:?} does not match data length {}",
+            dims,
+            data.len()
+        );
+        Ok(Self { dims: dims.to_vec(), data: LiteralData::F32(data) })
+    }
+
+    pub fn from_i32(data: Vec<i32>, dims: &[usize]) -> Result<Self> {
+        let n: usize = dims.iter().product();
+        crate::anyhow::ensure!(
+            n == data.len(),
+            "shape {:?} does not match data length {}",
+            dims,
+            data.len()
+        );
+        Ok(Self { dims: dims.to_vec(), data: LiteralData::I32(data) })
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: Vec::new(), data: LiteralData::F32(vec![v]) }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.data, LiteralData::F32(_))
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(v),
+            LiteralData::I32(_) => Err(anyhow!("expected f32 literal, got i32")),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            LiteralData::I32(v) => Ok(v),
+            LiteralData::F32(_) => Err(anyhow!("expected i32 literal, got f32")),
+        }
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::slice(self).map(|s| s.to_vec())
+    }
+
+    pub fn get_first_element<T: Element>(&self) -> Result<T> {
+        let s = T::slice(self)?;
+        s.first()
+            .copied()
+            .ok_or_else(|| anyhow!("empty literal has no first element"))
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait Element: Copy {
+    fn slice(lit: &Literal) -> Result<&[Self]>;
+}
+
+impl Element for f32 {
+    fn slice(lit: &Literal) -> Result<&[Self]> {
+        lit.f32s()
+    }
+}
+
+impl Element for i32 {
+    fn slice(lit: &Literal) -> Result<&[Self]> {
+        lit.i32s()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Helper constructors/extractors (hot path: one memcpy, no per-element
+// work). Signatures preserved from the PJRT-only era.
+// ---------------------------------------------------------------------
 
 /// Build a rank-N f32 literal from a flat slice.
 pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<Literal> {
-    let n: usize = dims.iter().product();
-    anyhow::ensure!(
-        n == data.len(),
-        "shape {:?} does not match data length {}",
-        dims,
-        data.len()
-    );
-    let mut lit = Literal::create_from_shape(PrimitiveType::F32, dims);
-    lit.copy_raw_from(data)?;
-    Ok(lit)
+    Literal::from_f32(data.to_vec(), dims)
 }
 
 /// Build a rank-1 f32 literal.
 pub fn f32_vec(data: &[f32]) -> Result<Literal> {
-    f32_literal(data, &[data.len()])
+    Literal::from_f32(data.to_vec(), &[data.len()])
 }
 
 /// Build a rank-1 i32 literal.
 pub fn i32_vec(data: &[i32]) -> Result<Literal> {
-    let mut lit = Literal::create_from_shape(PrimitiveType::S32, &[data.len()]);
-    lit.copy_raw_from(data)?;
-    Ok(lit)
+    Literal::from_i32(data.to_vec(), &[data.len()])
 }
 
 /// Scalar f32 literal (Adam step counter, learning rate, alpha, ...).
@@ -39,36 +135,30 @@ pub fn f32_scalar(v: f32) -> Literal {
 
 /// Copy a literal out to a Vec<f32>.
 pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
-    Ok(lit.to_vec::<f32>()?)
+    lit.to_vec::<f32>()
 }
 
 /// Copy a literal into an existing buffer (avoids an allocation on the
 /// aggregation hot path).
 pub fn copy_to_f32(lit: &Literal, dst: &mut [f32]) -> Result<()> {
-    anyhow::ensure!(
+    crate::anyhow::ensure!(
         lit.element_count() == dst.len(),
         "literal has {} elements, destination {}",
         lit.element_count(),
         dst.len()
     );
-    lit.copy_raw_to(dst)?;
+    dst.copy_from_slice(lit.f32s()?);
     Ok(())
 }
 
 /// Read a scalar f32 out of a literal.
 pub fn scalar_f32(lit: &Literal) -> Result<f32> {
     lit.get_first_element::<f32>()
-        .map_err(|e| anyhow!("scalar read: {e}"))
 }
 
 /// Sanity helper: element type must be f32.
 pub fn expect_f32(lit: &Literal) -> Result<()> {
-    let ty = lit.ty()?;
-    anyhow::ensure!(
-        ty == f32::TY,
-        "expected f32 literal, got {:?}",
-        ty
-    );
+    crate::anyhow::ensure!(lit.is_f32(), "expected f32 literal");
     Ok(())
 }
 
@@ -81,6 +171,7 @@ mod tests {
         let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.5, -0.125];
         let lit = f32_literal(&data, &[2, 3]).unwrap();
         assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit.dims(), &[2, 3]);
         assert_eq!(to_f32_vec(&lit).unwrap(), data);
     }
 
@@ -89,12 +180,14 @@ mod tests {
         let data = vec![0i32, 5, -3, 9];
         let lit = i32_vec(&data).unwrap();
         assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+        assert!(lit.to_vec::<f32>().is_err());
     }
 
     #[test]
     fn scalar_roundtrip() {
         let lit = f32_scalar(4.5);
         assert_eq!(scalar_f32(&lit).unwrap(), 4.5);
+        assert!(lit.dims().is_empty());
     }
 
     #[test]

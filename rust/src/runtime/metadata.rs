@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -84,8 +84,26 @@ pub struct Metadata {
 }
 
 impl Metadata {
+    /// Load `metadata.json` from an artifact directory. When the file is
+    /// absent (no `make artifacts` run — the reference-backend case), the
+    /// metadata is synthesized from the built-in config table keyed by the
+    /// directory's basename.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("metadata.json");
+        if !path.exists() {
+            let name = dir
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap_or_default();
+            if let Some(meta) = super::spec::synthesize(name) {
+                meta.validate()?;
+                return Ok(meta);
+            }
+            crate::anyhow::bail!(
+                "no metadata.json at {} and '{name}' is not a built-in config",
+                dir.display()
+            );
+        }
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
         let j = crate::util::json::parse(&text)
@@ -166,19 +184,19 @@ impl Metadata {
     /// Internal consistency checks; catches layout drift between python and
     /// rust early instead of via silent mis-slicing.
     pub fn validate(&self) -> Result<()> {
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             self.module_offsets.len() == 9,
             "expected 8 modules + end offset, got {}",
             self.module_offsets.len()
         );
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             *self.module_offsets.last().unwrap() == self.total_params,
             "module offsets do not end at total_params"
         );
-        anyhow::ensure!(self.tiers.len() == self.max_tiers, "tier table size");
+        crate::anyhow::ensure!(self.tiers.len() == self.max_tiers, "tier table size");
         let mut expect = 0usize;
         for e in &self.params {
-            anyhow::ensure!(
+            crate::anyhow::ensure!(
                 e.offset == expect,
                 "param {} offset {} != expected {} (layout gap)",
                 e.name,
@@ -187,19 +205,19 @@ impl Metadata {
             );
             expect += e.size();
         }
-        anyhow::ensure!(expect == self.total_params, "params do not sum to total");
+        crate::anyhow::ensure!(expect == self.total_params, "params do not sum to total");
         for t in &self.tiers {
-            anyhow::ensure!(
+            crate::anyhow::ensure!(
                 t.cut_offset == self.module_offsets[t.cut_module],
                 "tier {} cut offset mismatch",
                 t.tier
             );
-            anyhow::ensure!(
+            crate::anyhow::ensure!(
                 t.client_param_len + t.server_vec_len == self.total_params,
                 "tier {} client+server != total",
                 t.tier
             );
-            anyhow::ensure!(
+            crate::anyhow::ensure!(
                 t.client_vec_len == t.client_param_len + t.aux_len,
                 "tier {} client_vec_len mismatch",
                 t.tier
@@ -212,7 +230,7 @@ impl Metadata {
 /// Load a little-endian f32 binary blob (initial parameters).
 pub fn load_f32_bin(path: &Path) -> Result<Vec<f32>> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    anyhow::ensure!(bytes.len() % 4 == 0, "f32 bin length not multiple of 4");
+    crate::anyhow::ensure!(bytes.len() % 4 == 0, "f32 bin length not multiple of 4");
     Ok(bytes
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))

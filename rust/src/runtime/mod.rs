@@ -1,13 +1,29 @@
-//! PJRT runtime layer: loads the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO text) and executes them on the CPU PJRT
-//! client via the `xla` crate. See `/opt/xla-example/` for the minimal
-//! pattern this generalizes.
+//! Execution runtime layer.
+//!
+//! Two backends behind one `Runtime` front-end:
+//!
+//! * **reference** (default, pure Rust, zero deps) — executes the model math
+//!   ported from `python/compile/` (`refmath`), with metadata and initial
+//!   parameters synthesized from the built-in config table (`spec`). Costs
+//!   are a deterministic MAC-count model, which makes whole simulated runs
+//!   bit-reproducible and thread-count independent.
+//! * **pjrt** (feature `pjrt`) — loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (HLO text) and executes them on the CPU PJRT
+//!   client via the `xla` crate.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod literal;
 pub mod metadata;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod refmath;
+pub mod spec;
 
 pub use artifact::{ClientStepOut, FullStepOut, ServerStepOut, StepEngine, TrainState};
+pub use backend::{ExecBackend, ExecOut, RefBackend, StepKind};
 pub use client::{Runtime, RuntimeStats};
+pub use literal::Literal;
 pub use metadata::{load_f32_bin, Metadata, ParamEntry, TierMeta};
+pub use spec::ModelConfig;

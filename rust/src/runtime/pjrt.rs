@@ -1,0 +1,145 @@
+//! PJRT execution backend (feature `pjrt`): loads HLO-text artifacts,
+//! compiles them once via the `xla` crate's PJRT CPU client, and executes
+//! them from the round loop.
+//!
+//! Compiled executables are cached in an `RwLock<HashMap>` of per-entry
+//! `OnceLock`s — after first compilation, concurrent `execute` calls take
+//! only a read lock. Note that unlike the reference backend, PJRT reports
+//! *measured* wall seconds as the execution cost, so simulated timings are
+//! not bit-reproducible across runs (they never were on this path).
+//!
+//! Requires the optional `xla` dependency (see Cargo.toml).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use xla::PjRtLoadedExecutable;
+
+use crate::anyhow::{Context, Result};
+
+use super::backend::{parse_artifact, ExecBackend, ExecOut, OnceMap, StepKind};
+use super::literal::Literal;
+use super::metadata::Metadata;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    meta: Metadata,
+    cache: OnceMap<PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    pub fn open(dir: &Path, meta: Metadata) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log::info!(
+            "pjrt backend: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            meta,
+            cache: OnceMap::new(),
+        })
+    }
+
+    fn compile(&self, name: &str) -> Result<(Arc<OnceLock<PjRtLoadedExecutable>>, Option<f64>)> {
+        let cell = self.cache.cell(name);
+        if cell.get().is_some() {
+            return Ok((cell, None));
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let first = cell.set(exe).is_ok();
+        Ok((cell, first.then_some(dt)))
+    }
+
+    fn to_xla(lit: &Literal) -> Result<xla::Literal> {
+        match (lit.f32s(), lit.i32s()) {
+            (Ok(data), _) => {
+                let mut out = xla::Literal::create_from_shape(xla::PrimitiveType::F32, lit.dims());
+                out.copy_raw_from(data)?;
+                Ok(out)
+            }
+            (_, Ok(data)) => {
+                let mut out = xla::Literal::create_from_shape(xla::PrimitiveType::S32, lit.dims());
+                out.copy_raw_from(data)?;
+                Ok(out)
+            }
+            _ => unreachable!("literal is either f32 or i32"),
+        }
+    }
+
+    /// Convert one output element back, reattaching shape: `z` gets the
+    /// tier's NHWC dims (the engine feeds it straight into the server step),
+    /// `t`/loss/correct come back as scalars, state vectors as rank 1.
+    fn from_xla(
+        kind: StepKind,
+        part: usize,
+        count: usize,
+        meta: &Metadata,
+        lit: &xla::Literal,
+    ) -> Result<Literal> {
+        let n = lit.element_count();
+        let data: Vec<f32> = lit.to_vec::<f32>()?;
+        let dims = match kind {
+            StepKind::Client { tier, .. } if part == 4 => meta.tier(tier).z_shape.clone(),
+            StepKind::Eval => Vec::new(),
+            _ if part == 3 || part + 2 >= count => Vec::new(),
+            _ => vec![n],
+        };
+        if dims.is_empty() && n == 1 {
+            Ok(Literal::scalar(data[0]))
+        } else if dims.is_empty() {
+            Literal::from_f32(data, &[n])
+        } else {
+            Literal::from_f32(data, &dims)
+        }
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn prepare(&self, artifact: &str) -> Result<Option<f64>> {
+        Ok(self.compile(artifact)?.1)
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[&Literal]) -> Result<ExecOut> {
+        let kind = parse_artifact(artifact, self.meta.max_tiers)?;
+        let (cell, _) = self.compile(artifact)?;
+        let exe = cell.get().expect("compile populates the cell");
+        let xla_inputs: Vec<xla::Literal> =
+            inputs.iter().map(|l| Self::to_xla(l)).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&xla_inputs)
+            .with_context(|| format!("executing {artifact}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {artifact} output"))?;
+        let cost = t0.elapsed().as_secs_f64();
+        let raw = tuple.to_tuple().context("decomposing output tuple")?;
+        let count = raw.len();
+        let parts = raw
+            .iter()
+            .enumerate()
+            .map(|(i, l)| Self::from_xla(kind, i, count, &self.meta, l))
+            .collect::<Result<_>>()?;
+        Ok(ExecOut { parts, cost_secs: cost })
+    }
+}

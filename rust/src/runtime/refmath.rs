@@ -1,0 +1,1284 @@
+//! Pure-Rust reference implementation of the DTFL step functions.
+//!
+//! This is the `reference` execution backend: a faithful port of the math
+//! specified by `python/compile/kernels/ref.py` + `python/compile/model.py`
+//! (im2col conv → matmul, group norm, residual blocks, avgpool + fc heads,
+//! cross-entropy, the NoPeek distance-correlation regularizer, and Adam),
+//! with hand-written backward passes (validated against finite differences —
+//! see the tests below).
+//!
+//! Everything here is deterministic: fixed-order f32 arithmetic with f64
+//! reduction accumulators, no wall-clock anywhere. Each function accumulates
+//! multiply-accumulate counts into a `macs` counter; the backend converts
+//! those to *deterministic* simulated host seconds, which is what makes
+//! N-thread round execution bit-identical to sequential execution.
+
+use crate::anyhow::Result;
+
+use super::literal::{self as lit, Literal};
+use super::metadata::{AdamMeta, Metadata};
+use super::spec::{gn_groups, GN_EPS};
+
+type Dims4 = [usize; 4];
+
+const DCOR_EPS: f64 = 1e-9;
+
+// ---------------------------------------------------------------------
+// matmul kernels (the L1 substitute: all conv/dense FLOPs land here)
+// ---------------------------------------------------------------------
+
+/// C(M,N) = A(M,K) · B(K,N).
+fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    *macs += (m * k * n) as u64;
+    c
+}
+
+/// C(K,N) = A(M,K)ᵀ · B(M,N).
+fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    for mi in 0..m {
+        let arow = &a[mi * k..(mi + 1) * k];
+        let brow = &b[mi * n..(mi + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    *macs += (m * k * n) as u64;
+    c
+}
+
+/// C(M,K) = A(M,N) · B(K,N)ᵀ.
+fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], k: usize, macs: &mut u64) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let brow = &b[kk * n..(kk + 1) * n];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            c[i * k + kk] = acc;
+        }
+    }
+    *macs += (m * n * k) as u64;
+    c
+}
+
+// ---------------------------------------------------------------------
+// conv2d = im2col + matmul (NHWC, weights (kh, kw, cin, cout))
+// ---------------------------------------------------------------------
+
+/// (B,H,W,C) → (B·H'·W', kh·kw·C) patches with (i, j, c) column ordering.
+fn im2col(
+    x: &[f32],
+    xd: Dims4,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let [b, h, w, c] = xd;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut out = vec![0.0f32; b * ho * wo * k];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * k;
+                for i in 0..kh {
+                    let py = oy * stride + i;
+                    if py < pad || py >= h + pad {
+                        continue;
+                    }
+                    let iy = py - pad;
+                    for j in 0..kw {
+                        let px = ox * stride + j;
+                        if px < pad || px >= w + pad {
+                            continue;
+                        }
+                        let ix = px - pad;
+                        let src = ((bi * h + iy) * w + ix) * c;
+                        let dst = row + (i * kw + j) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (out, b * ho * wo, k)
+}
+
+/// Scatter-add transpose of [`im2col`].
+fn col2im(cols: &[f32], xd: Dims4, kh: usize, kw: usize, stride: usize, pad: usize) -> Vec<f32> {
+    let [b, h, w, c] = xd;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * k;
+                for i in 0..kh {
+                    let py = oy * stride + i;
+                    if py < pad || py >= h + pad {
+                        continue;
+                    }
+                    let iy = py - pad;
+                    for j in 0..kw {
+                        let px = ox * stride + j;
+                        if px < pad || px >= w + pad {
+                            continue;
+                        }
+                        let ix = px - pad;
+                        let dst = ((bi * h + iy) * w + ix) * c;
+                        let src = row + (i * kw + j) * c;
+                        for cc in 0..c {
+                            dx[dst + cc] += cols[src + cc];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+struct ConvCache {
+    off: usize,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    pad: usize,
+    x: Vec<f32>,
+    xd: Dims4,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn conv_fwd(
+    p: &[f32],
+    off: usize,
+    x: Vec<f32>,
+    xd: Dims4,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    pad: usize,
+    macs: &mut u64,
+) -> (Vec<f32>, Dims4, ConvCache) {
+    debug_assert_eq!(xd[3], cin);
+    let (cols, rows, k) = im2col(&x, xd, kh, kw, stride, pad);
+    let w = &p[off..off + kh * kw * cin * cout];
+    let out = matmul(&cols, rows, k, w, cout, macs);
+    let ho = (xd[1] + 2 * pad - kh) / stride + 1;
+    let wo = (xd[2] + 2 * pad - kw) / stride + 1;
+    let od = [xd[0], ho, wo, cout];
+    (out, od, ConvCache { off, kh, kw, cin, cout, stride, pad, x, xd })
+}
+
+/// dW accumulated into `grads`; returns dX. Patches are recomputed from the
+/// cached input (memory-for-compute trade on the backward pass).
+fn conv_bwd(p: &[f32], c: &ConvCache, dout: &[f32], grads: &mut [f32], macs: &mut u64) -> Vec<f32> {
+    let (cols, rows, k) = im2col(&c.x, c.xd, c.kh, c.kw, c.stride, c.pad);
+    let wsz = c.kh * c.kw * c.cin * c.cout;
+    let dw = matmul_tn(&cols, rows, k, dout, c.cout, macs);
+    for (g, d) in grads[c.off..c.off + wsz].iter_mut().zip(&dw) {
+        *g += d;
+    }
+    let w = &p[c.off..c.off + wsz];
+    let dcols = matmul_nt(dout, rows, c.cout, w, k, macs);
+    col2im(&dcols, c.xd, c.kh, c.kw, c.stride, c.pad)
+}
+
+// ---------------------------------------------------------------------
+// group norm
+// ---------------------------------------------------------------------
+
+struct GnCache {
+    soff: usize,
+    boff: usize,
+    d: Dims4,
+    groups: usize,
+    /// Normalized activations (pre scale/bias).
+    y: Vec<f32>,
+    /// Per-(batch, group) standard deviation.
+    sigma: Vec<f64>,
+}
+
+fn gn_fwd(p: &[f32], soff: usize, boff: usize, x: &[f32], d: Dims4) -> (Vec<f32>, GnCache) {
+    let [b, h, w, c] = d;
+    let g = gn_groups(c);
+    let cg = c / g;
+    let m = (h * w * cg) as f64;
+    let mut y = vec![0.0f32; x.len()];
+    let mut out = vec![0.0f32; x.len()];
+    let mut sigma = vec![0.0f64; b * g];
+    for bi in 0..b {
+        for gi in 0..g {
+            let (mut s, mut s2) = (0.0f64, 0.0f64);
+            for hy in 0..h {
+                for wx in 0..w {
+                    let base = ((bi * h + hy) * w + wx) * c + gi * cg;
+                    for v in &x[base..base + cg] {
+                        let v = *v as f64;
+                        s += v;
+                        s2 += v * v;
+                    }
+                }
+            }
+            let mu = s / m;
+            let var = (s2 / m - mu * mu).max(0.0);
+            let sg = (var + GN_EPS as f64).sqrt();
+            sigma[bi * g + gi] = sg;
+            for hy in 0..h {
+                for wx in 0..w {
+                    let base = ((bi * h + hy) * w + wx) * c + gi * cg;
+                    for cc in 0..cg {
+                        let idx = base + cc;
+                        let ch = gi * cg + cc;
+                        let yv = ((x[idx] as f64 - mu) / sg) as f32;
+                        y[idx] = yv;
+                        out[idx] = yv * p[soff + ch] + p[boff + ch];
+                    }
+                }
+            }
+        }
+    }
+    (out, GnCache { soff, boff, d, groups: g, y, sigma })
+}
+
+/// Standard normalization backward: with y = (x−μ)/σ over each group,
+/// dx = (dy − mean(dy) − y·mean(dy∘y)) / σ. dscale/dbias accumulate into
+/// `grads`.
+fn gn_bwd(p: &[f32], cache: &GnCache, dout: &[f32], grads: &mut [f32]) -> Vec<f32> {
+    let [b, h, w, c] = cache.d;
+    let g = cache.groups;
+    let cg = c / g;
+    let m = (h * w * cg) as f64;
+    let mut dx = vec![0.0f32; dout.len()];
+    for bi in 0..b {
+        for gi in 0..g {
+            let (mut sdy, mut sdyy) = (0.0f64, 0.0f64);
+            for hy in 0..h {
+                for wx in 0..w {
+                    let base = ((bi * h + hy) * w + wx) * c + gi * cg;
+                    for cc in 0..cg {
+                        let idx = base + cc;
+                        let ch = gi * cg + cc;
+                        let dy = (dout[idx] * p[cache.soff + ch]) as f64;
+                        sdy += dy;
+                        sdyy += dy * cache.y[idx] as f64;
+                    }
+                }
+            }
+            let mdy = sdy / m;
+            let mdyy = sdyy / m;
+            let sg = cache.sigma[bi * g + gi];
+            for hy in 0..h {
+                for wx in 0..w {
+                    let base = ((bi * h + hy) * w + wx) * c + gi * cg;
+                    for cc in 0..cg {
+                        let idx = base + cc;
+                        let ch = gi * cg + cc;
+                        let dy = (dout[idx] * p[cache.soff + ch]) as f64;
+                        dx[idx] = ((dy - mdy - cache.y[idx] as f64 * mdyy) / sg) as f32;
+                    }
+                }
+            }
+        }
+    }
+    // channel-wise parameter grads
+    for bi in 0..b {
+        for hy in 0..h {
+            for wx in 0..w {
+                let base = ((bi * h + hy) * w + wx) * c;
+                for ch in 0..c {
+                    let idx = base + ch;
+                    grads[cache.boff + ch] += dout[idx];
+                    grads[cache.soff + ch] += dout[idx] * cache.y[idx];
+                }
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------
+// relu / heads / losses
+// ---------------------------------------------------------------------
+
+fn relu(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Mask `d` by the relu *output* (out > 0 passes gradient).
+fn relu_bwd_mask(out: &[f32], d: &mut [f32]) {
+    for (dv, &o) in d.iter_mut().zip(out) {
+        if o <= 0.0 {
+            *dv = 0.0;
+        }
+    }
+}
+
+struct HeadCache {
+    woff: usize,
+    boff: usize,
+    ncls: usize,
+    xd: Dims4,
+    pooled: Vec<f32>,
+}
+
+/// avgpool over (H, W) then fc: logits = mean_hw(x) · W + b.
+fn head_fwd(
+    p: &[f32],
+    woff: usize,
+    boff: usize,
+    x: &[f32],
+    xd: Dims4,
+    ncls: usize,
+    macs: &mut u64,
+) -> (Vec<f32>, HeadCache) {
+    let [b, h, w, c] = xd;
+    let inv = 1.0 / (h * w) as f64;
+    let mut pooled = vec![0.0f32; b * c];
+    for bi in 0..b {
+        for ch in 0..c {
+            let mut s = 0.0f64;
+            for hy in 0..h {
+                for wx in 0..w {
+                    s += x[((bi * h + hy) * w + wx) * c + ch] as f64;
+                }
+            }
+            pooled[bi * c + ch] = (s * inv) as f32;
+        }
+    }
+    let mut logits = matmul(&pooled, b, c, &p[woff..woff + c * ncls], ncls, macs);
+    for bi in 0..b {
+        for j in 0..ncls {
+            logits[bi * ncls + j] += p[boff + j];
+        }
+    }
+    (logits, HeadCache { woff, boff, ncls, xd, pooled })
+}
+
+fn head_bwd(
+    p: &[f32],
+    cache: &HeadCache,
+    dlogits: &[f32],
+    grads: &mut [f32],
+    macs: &mut u64,
+) -> Vec<f32> {
+    let [b, h, w, c] = cache.xd;
+    let ncls = cache.ncls;
+    let dw = matmul_tn(&cache.pooled, b, c, dlogits, ncls, macs);
+    for (g, d) in grads[cache.woff..cache.woff + c * ncls].iter_mut().zip(&dw) {
+        *g += d;
+    }
+    for bi in 0..b {
+        for j in 0..ncls {
+            grads[cache.boff + j] += dlogits[bi * ncls + j];
+        }
+    }
+    let dpooled = matmul_nt(dlogits, b, ncls, &p[cache.woff..cache.woff + c * ncls], c, macs);
+    let inv = 1.0 / (h * w) as f32;
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for hy in 0..h {
+            for wx in 0..w {
+                let base = ((bi * h + hy) * w + wx) * c;
+                for ch in 0..c {
+                    dx[base + ch] = dpooled[bi * c + ch] * inv;
+                }
+            }
+        }
+    }
+    dx
+}
+
+fn ce_fwd(logits: &[f32], b: usize, ncls: usize, y: &[i32]) -> f32 {
+    let mut total = 0.0f64;
+    for bi in 0..b {
+        let row = &logits[bi * ncls..(bi + 1) * ncls];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut s = 0.0f64;
+        for &v in row {
+            s += (v as f64 - mx).exp();
+        }
+        let logz = mx + s.ln();
+        total += logz - row[y[bi] as usize] as f64;
+    }
+    (total / b as f64) as f32
+}
+
+/// dlogits = upstream · (softmax − onehot) / B.
+fn ce_bwd(logits: &[f32], b: usize, ncls: usize, y: &[i32], upstream: f32) -> Vec<f32> {
+    let mut d = vec![0.0f32; b * ncls];
+    let scale = upstream / b as f32;
+    for bi in 0..b {
+        let row = &logits[bi * ncls..(bi + 1) * ncls];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let mut s = 0.0f64;
+        for &v in row {
+            s += (v as f64 - mx).exp();
+        }
+        let drow = &mut d[bi * ncls..(bi + 1) * ncls];
+        for (j, &v) in row.iter().enumerate() {
+            drow[j] = ((v as f64 - mx).exp() / s) as f32 * scale;
+        }
+        drow[y[bi] as usize] -= scale;
+    }
+    d
+}
+
+fn correct_count(logits: &[f32], b: usize, ncls: usize, y: &[i32]) -> f32 {
+    let mut correct = 0usize;
+    for bi in 0..b {
+        let row = &logits[bi * ncls..(bi + 1) * ncls];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == y[bi] as usize {
+            correct += 1;
+        }
+    }
+    correct as f32
+}
+
+// ---------------------------------------------------------------------
+// distance correlation (NoPeek privacy regularizer) with analytic grad
+// ---------------------------------------------------------------------
+
+/// Double centering: d − rowmean − colmean + mean (self-adjoint, so the same
+/// operator backpropagates gradients).
+fn double_center(d: &[f64], n: usize) -> Vec<f64> {
+    let mut col = vec![0.0f64; n];
+    let mut row = vec![0.0f64; n];
+    let mut tot = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let v = d[i * n + j];
+            row[i] += v;
+            col[j] += v;
+            tot += v;
+        }
+    }
+    let inv = 1.0 / n as f64;
+    let mut out = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            out[i * n + j] = d[i * n + j] - row[i] * inv - col[j] * inv + tot * inv * inv;
+        }
+    }
+    out
+}
+
+/// Pairwise distance matrix of row-flattened `a` (n rows): returns
+/// (sqrt(max(d², 0) + ε), d²).
+fn pair_dist(a: &[f32], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let f = a.len() / n;
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (ri, rj) = (&a[i * f..(i + 1) * f], &a[j * f..(j + 1) * f]);
+            let mut s = 0.0f64;
+            for (&x, &y) in ri.iter().zip(rj) {
+                let dv = (x - y) as f64;
+                s += dv * dv;
+            }
+            d2[i * n + j] = s;
+            d2[j * n + i] = s;
+        }
+    }
+    let d: Vec<f64> = d2.iter().map(|&v| (v.max(0.0) + DCOR_EPS).sqrt()).collect();
+    (d, d2)
+}
+
+/// DCor(x, z) and its gradient w.r.t. z.
+fn dcor_with_grad(x: &[f32], z: &[f32], n: usize) -> (f32, Vec<f32>) {
+    let fz = z.len() / n;
+    let (dxm, _) = pair_dist(x, n);
+    let (dzm, d2z) = pair_dist(z, n);
+    let ax = double_center(&dxm, n);
+    let az = double_center(&dzm, n);
+    let n2 = (n * n) as f64;
+    let mut u = 0.0f64;
+    let mut w2 = 0.0f64;
+    let mut vx = 0.0f64;
+    for i in 0..n * n {
+        u += ax[i] * az[i];
+        w2 += az[i] * az[i];
+        vx += ax[i] * ax[i];
+    }
+    u /= n2;
+    w2 /= n2;
+    vx /= n2;
+    let dcov = (u.max(0.0) + DCOR_EPS).sqrt();
+    let dvx = (vx.max(0.0) + DCOR_EPS).sqrt();
+    let dvz = (w2.max(0.0) + DCOR_EPS).sqrt();
+    let r = dcov / (dvx * dvz).sqrt();
+
+    let du = if u > 0.0 { (1.0 / (2.0 * dcov)) / (dvx * dvz).sqrt() } else { 0.0 };
+    let dw2 = if w2 > 0.0 { -r / (4.0 * dvz * dvz) } else { 0.0 };
+    // grad on the centered matrix, then back through centering + sqrt + d²
+    let gaz: Vec<f64> = (0..n * n)
+        .map(|i| du * ax[i] / n2 + dw2 * 2.0 * az[i] / n2)
+        .collect();
+    let gd = double_center(&gaz, n);
+    let mut dz = vec![0.0f64; z.len()];
+    for i in 0..n {
+        for j in 0..n {
+            let idx = i * n + j;
+            if d2z[idx] <= 0.0 {
+                continue;
+            }
+            let g2 = gd[idx] * 0.5 / dzm[idx];
+            let (ri, rj) = (i * fz, j * fz);
+            for ff in 0..fz {
+                let diff = (z[ri + ff] - z[rj + ff]) as f64;
+                dz[ri + ff] += g2 * 2.0 * diff;
+                dz[rj + ff] -= g2 * 2.0 * diff;
+            }
+        }
+    }
+    (r as f32, dz.into_iter().map(|v| v as f32).collect())
+}
+
+// ---------------------------------------------------------------------
+// module walker (md1 stem, md2..md7 residual stages, md8 head)
+// ---------------------------------------------------------------------
+
+enum Item {
+    Stem { conv: ConvCache, gn: GnCache, relu_out: Vec<f32> },
+    Block {
+        conv1: ConvCache,
+        gn1: GnCache,
+        relu1_out: Vec<f32>,
+        conv2: ConvCache,
+        gn2: GnCache,
+        proj: Option<(ConvCache, GnCache)>,
+        out: Vec<f32>,
+    },
+    Head(HeadCache),
+}
+
+fn take(cur: &mut usize, n: usize) -> usize {
+    let o = *cur;
+    *cur += n;
+    o
+}
+
+/// Run modules md_lo..md_hi; md8 returns logits (rank 2), otherwise an NHWC
+/// activation. Parameters are consumed off `p` in flat-layout order; the
+/// number of parameters consumed is returned for validation against the
+/// metadata split geometry.
+fn forward_modules(
+    meta: &Metadata,
+    p: &[f32],
+    mut x: Vec<f32>,
+    mut xd: Dims4,
+    lo: usize,
+    hi: usize,
+    macs: &mut u64,
+) -> Result<(Vec<f32>, Vec<usize>, Vec<Item>, usize)> {
+    crate::anyhow::ensure!(
+        (1..=8).contains(&lo) && lo <= hi && hi <= 8,
+        "bad module range {lo}..{hi}"
+    );
+    let mut cur = 0usize;
+    let mut items = Vec::new();
+    let mut cin = if lo == 1 { meta.in_channels } else { meta.widths[lo - 2] };
+    crate::anyhow::ensure!(xd[3] == cin, "input has {} channels, module {lo} expects {cin}", xd[3]);
+    for module in lo..=hi {
+        if module == 1 {
+            let w0 = meta.widths[0];
+            let woff = take(&mut cur, 3 * 3 * cin * w0);
+            let (h1, d1, c1) = conv_fwd(p, woff, x, xd, 3, 3, cin, w0, 1, 1, macs);
+            let soff = take(&mut cur, w0);
+            let boff = take(&mut cur, w0);
+            let (mut g1, gc) = gn_fwd(p, soff, boff, &h1, d1);
+            relu(&mut g1);
+            items.push(Item::Stem { conv: c1, gn: gc, relu_out: g1.clone() });
+            x = g1;
+            xd = d1;
+            cin = w0;
+        } else if module == 8 {
+            let ncls = meta.num_classes;
+            let woff = take(&mut cur, cin * ncls);
+            let boff = take(&mut cur, ncls);
+            let (logits, hc) = head_fwd(p, woff, boff, &x, xd, ncls, macs);
+            let b = xd[0];
+            items.push(Item::Head(hc));
+            return Ok((logits, vec![b, ncls], items, cur));
+        } else {
+            let stage = module - 2;
+            let cout = meta.widths[module - 1];
+            for bidx in 0..meta.blocks[stage] {
+                let stride = if bidx == 0 { meta.strides[stage] } else { 1 };
+                let need_proj = stride != 1 || cin != cout;
+                let w1off = take(&mut cur, 3 * 3 * cin * cout);
+                let (h1, d1, c1) =
+                    conv_fwd(p, w1off, x.clone(), xd, 3, 3, cin, cout, stride, 1, macs);
+                let s1 = take(&mut cur, cout);
+                let b1 = take(&mut cur, cout);
+                let (mut r1, g1c) = gn_fwd(p, s1, b1, &h1, d1);
+                relu(&mut r1);
+                let w2off = take(&mut cur, 3 * 3 * cout * cout);
+                let (h2, d2, c2) = conv_fwd(p, w2off, r1.clone(), d1, 3, 3, cout, cout, 1, 1, macs);
+                let s2 = take(&mut cur, cout);
+                let b2 = take(&mut cur, cout);
+                let (mut g2, g2c) = gn_fwd(p, s2, b2, &h2, d2);
+                let proj = if need_proj {
+                    let wpoff = take(&mut cur, cin * cout);
+                    let (hp, dp, cp) = conv_fwd(p, wpoff, x, xd, 1, 1, cin, cout, stride, 0, macs);
+                    let sp = take(&mut cur, cout);
+                    let bp = take(&mut cur, cout);
+                    let (gp, gpc) = gn_fwd(p, sp, bp, &hp, dp);
+                    debug_assert_eq!(dp, d2);
+                    for (a, b) in g2.iter_mut().zip(&gp) {
+                        *a += b;
+                    }
+                    Some((cp, gpc))
+                } else {
+                    for (a, b) in g2.iter_mut().zip(&x) {
+                        *a += b;
+                    }
+                    None
+                };
+                relu(&mut g2);
+                items.push(Item::Block {
+                    conv1: c1,
+                    gn1: g1c,
+                    relu1_out: r1,
+                    conv2: c2,
+                    gn2: g2c,
+                    proj,
+                    out: g2.clone(),
+                });
+                x = g2;
+                xd = d2;
+                cin = cout;
+            }
+        }
+    }
+    Ok((x, xd.to_vec(), items, cur))
+}
+
+/// Reverse the module walk, accumulating parameter grads; returns dX at the
+/// bottom of the range.
+fn backward_modules(
+    p: &[f32],
+    items: &[Item],
+    mut d: Vec<f32>,
+    grads: &mut [f32],
+    macs: &mut u64,
+) -> Vec<f32> {
+    for item in items.iter().rev() {
+        d = match item {
+            Item::Head(hc) => head_bwd(p, hc, &d, grads, macs),
+            Item::Stem { conv, gn, relu_out } => {
+                relu_bwd_mask(relu_out, &mut d);
+                let dg = gn_bwd(p, gn, &d, grads);
+                conv_bwd(p, conv, &dg, grads, macs)
+            }
+            Item::Block { conv1, gn1, relu1_out, conv2, gn2, proj, out } => {
+                relu_bwd_mask(out, &mut d);
+                let dg2 = gn_bwd(p, gn2, &d, grads);
+                let mut dr1 = conv_bwd(p, conv2, &dg2, grads, macs);
+                relu_bwd_mask(relu1_out, &mut dr1);
+                let dg1 = gn_bwd(p, gn1, &dr1, grads);
+                let mut dx = conv_bwd(p, conv1, &dg1, grads, macs);
+                match proj {
+                    Some((cp, gp)) => {
+                        let dgp = gn_bwd(p, gp, &d, grads);
+                        let dxp = conv_bwd(p, cp, &dgp, grads, macs);
+                        for (a, b) in dx.iter_mut().zip(&dxp) {
+                            *a += b;
+                        }
+                    }
+                    None => {
+                        for (a, b) in dx.iter_mut().zip(&d) {
+                            *a += b;
+                        }
+                    }
+                }
+                dx
+            }
+        };
+    }
+    d
+}
+
+// ---------------------------------------------------------------------
+// optimizers
+// ---------------------------------------------------------------------
+
+/// One Adam step on flat vectors; `t` is the 1-based step count (as f32, the
+/// same convention the AOT artifacts use).
+pub fn adam_update(
+    adam: &AdamMeta,
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+) {
+    let b1 = adam.b1 as f32;
+    let b2 = adam.b2 as f32;
+    let eps = adam.eps as f32;
+    let bc1 = 1.0 - b1.powf(t);
+    let bc2 = 1.0 - b2.powf(t);
+    for i in 0..p.len() {
+        let gi = g[i];
+        m[i] = b1 * m[i] + (1.0 - b1) * gi;
+        v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        p[i] -= lr * mh / (vh.sqrt() + eps);
+    }
+}
+
+// ---------------------------------------------------------------------
+// step entry points (artifact-compatible input/output tuples)
+// ---------------------------------------------------------------------
+
+struct TrainInputs<'a> {
+    p: &'a [f32],
+    m: &'a [f32],
+    v: &'a [f32],
+    t: f32,
+    lr: f32,
+    x: &'a [f32],
+    xd: Dims4,
+    y: &'a [i32],
+}
+
+fn parse_train_inputs<'a>(
+    meta: &Metadata,
+    inputs: &[&'a Literal],
+    plen: usize,
+    what: &str,
+) -> Result<TrainInputs<'a>> {
+    crate::anyhow::ensure!(inputs.len() >= 7, "{what}: expected >=7 inputs, got {}", inputs.len());
+    let p = inputs[0].f32s()?;
+    let m = inputs[1].f32s()?;
+    let v = inputs[2].f32s()?;
+    crate::anyhow::ensure!(
+        p.len() == plen && m.len() == plen && v.len() == plen,
+        "{what}: state length {} != expected {plen}",
+        p.len()
+    );
+    let t = lit::scalar_f32(inputs[3])?;
+    let lr = lit::scalar_f32(inputs[4])?;
+    let x = inputs[5].f32s()?;
+    let xdims = inputs[5].dims();
+    crate::anyhow::ensure!(xdims.len() == 4, "{what}: data input must be rank 4");
+    let xd = [xdims[0], xdims[1], xdims[2], xdims[3]];
+    let y = inputs[6].i32s()?;
+    crate::anyhow::ensure!(y.len() == xd[0], "{what}: labels/batch mismatch");
+    for &l in y {
+        crate::anyhow::ensure!(
+            (0..meta.num_classes as i32).contains(&l),
+            "{what}: label {l} out of range"
+        );
+    }
+    Ok(TrainInputs { p, m, v, t, lr, x, xd, y })
+}
+
+fn train_state_outputs(p: Vec<f32>, m: Vec<f32>, v: Vec<f32>, t: f32) -> Result<Vec<Literal>> {
+    Ok(vec![
+        lit::f32_vec(&p)?,
+        lit::f32_vec(&m)?,
+        lit::f32_vec(&v)?,
+        lit::f32_scalar(t + 1.0),
+    ])
+}
+
+/// Client-side local-loss step: modules 1..tier + aux head (+ optional
+/// distance-correlation term). Output tuple:
+/// `[client_vec', m', v', t+1, z, loss]`.
+pub fn client_step(
+    meta: &Metadata,
+    tier: usize,
+    dcor: bool,
+    inputs: &[&Literal],
+    macs: &mut u64,
+) -> Result<Vec<Literal>> {
+    let tm = meta.tier(tier);
+    let ti = parse_train_inputs(meta, inputs, tm.client_vec_len, "client_step")?;
+    let alpha = if dcor {
+        crate::anyhow::ensure!(inputs.len() == 8, "client_step_dcor: expected 8 inputs");
+        lit::scalar_f32(inputs[7])?
+    } else {
+        crate::anyhow::ensure!(inputs.len() == 7, "client_step: expected 7 inputs");
+        0.0
+    };
+    let cpl = tm.client_param_len;
+    let (z, zdims, items, used) = forward_modules(meta, ti.p, ti.x.to_vec(), ti.xd, 1, tier, macs)?;
+    crate::anyhow::ensure!(used == cpl, "client params consumed {used} != {cpl}");
+    let zd = [zdims[0], zdims[1], zdims[2], zdims[3]];
+    let c = meta.widths[tier - 1];
+    let ncls = meta.num_classes;
+    let (logits, auxc) = head_fwd(ti.p, cpl, cpl + c * ncls, &z, zd, ncls, macs);
+    let ce = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
+    let upstream = if dcor { 1.0 - alpha } else { 1.0 };
+    let dlogits = ce_bwd(&logits, ti.xd[0], ncls, ti.y, upstream);
+    let mut grads = vec![0.0f32; ti.p.len()];
+    let mut dz = head_bwd(ti.p, &auxc, &dlogits, &mut grads, macs);
+    let loss = if dcor {
+        let (r, dzd) = dcor_with_grad(ti.x, &z, ti.xd[0]);
+        for (a, b) in dz.iter_mut().zip(&dzd) {
+            *a += alpha * b;
+        }
+        (1.0 - alpha) * ce + alpha * r
+    } else {
+        ce
+    };
+    backward_modules(ti.p, &items, dz, &mut grads, macs);
+    let (mut p, mut m, mut v) = (ti.p.to_vec(), ti.m.to_vec(), ti.v.to_vec());
+    adam_update(&meta.adam, &mut p, &grads, &mut m, &mut v, ti.t, ti.lr);
+    let mut out = train_state_outputs(p, m, v, ti.t)?;
+    out.push(Literal::from_f32(z, &zd)?);
+    out.push(lit::f32_scalar(loss));
+    Ok(out)
+}
+
+/// Server-side step: modules tier+1..8 on (z, y). Output tuple:
+/// `[server_vec', m', v', t+1, loss, correct]`.
+pub fn server_step(
+    meta: &Metadata,
+    tier: usize,
+    inputs: &[&Literal],
+    macs: &mut u64,
+) -> Result<Vec<Literal>> {
+    crate::anyhow::ensure!(inputs.len() == 7, "server_step: expected 7 inputs");
+    let tm = meta.tier(tier);
+    let ti = parse_train_inputs(meta, inputs, tm.server_vec_len, "server_step")?;
+    crate::anyhow::ensure!(
+        ti.xd[3] == meta.widths[tier - 1],
+        "server_step tier {tier}: z has {} channels, expected {}",
+        ti.xd[3],
+        meta.widths[tier - 1]
+    );
+    let ncls = meta.num_classes;
+    let (logits, _, items, used) =
+        forward_modules(meta, ti.p, ti.x.to_vec(), ti.xd, tier + 1, 8, macs)?;
+    crate::anyhow::ensure!(used == ti.p.len(), "server params consumed {used} != {}", ti.p.len());
+    let loss = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
+    let correct = correct_count(&logits, ti.xd[0], ncls, ti.y);
+    let dlogits = ce_bwd(&logits, ti.xd[0], ncls, ti.y, 1.0);
+    let mut grads = vec![0.0f32; ti.p.len()];
+    backward_modules(ti.p, &items, dlogits, &mut grads, macs);
+    let (mut p, mut m, mut v) = (ti.p.to_vec(), ti.m.to_vec(), ti.v.to_vec());
+    adam_update(&meta.adam, &mut p, &grads, &mut m, &mut v, ti.t, ti.lr);
+    let mut out = train_state_outputs(p, m, v, ti.t)?;
+    out.push(lit::f32_scalar(loss));
+    out.push(lit::f32_scalar(correct));
+    Ok(out)
+}
+
+/// Whole-model step (baselines); `sgd` selects plain SGD (FedYogi
+/// pseudo-gradients). Output: `[params', m', v', t+1, loss, correct]`.
+pub fn full_step(
+    meta: &Metadata,
+    sgd: bool,
+    inputs: &[&Literal],
+    macs: &mut u64,
+) -> Result<Vec<Literal>> {
+    crate::anyhow::ensure!(inputs.len() == 7, "full_step: expected 7 inputs");
+    let ti = parse_train_inputs(meta, inputs, meta.total_params, "full_step")?;
+    let ncls = meta.num_classes;
+    let (logits, _, items, used) = forward_modules(meta, ti.p, ti.x.to_vec(), ti.xd, 1, 8, macs)?;
+    crate::anyhow::ensure!(used == meta.total_params, "full params consumed {used}");
+    let loss = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
+    let correct = correct_count(&logits, ti.xd[0], ncls, ti.y);
+    let dlogits = ce_bwd(&logits, ti.xd[0], ncls, ti.y, 1.0);
+    let mut grads = vec![0.0f32; ti.p.len()];
+    backward_modules(ti.p, &items, dlogits, &mut grads, macs);
+    let (mut p, mut m, mut v) = (ti.p.to_vec(), ti.m.to_vec(), ti.v.to_vec());
+    if sgd {
+        for i in 0..p.len() {
+            p[i] -= ti.lr * grads[i];
+        }
+    } else {
+        adam_update(&meta.adam, &mut p, &grads, &mut m, &mut v, ti.t, ti.lr);
+    }
+    let mut out = train_state_outputs(p, m, v, ti.t)?;
+    out.push(lit::f32_scalar(loss));
+    out.push(lit::f32_scalar(correct));
+    Ok(out)
+}
+
+/// Evaluate the full model on one batch → `[loss, correct]`.
+pub fn eval(meta: &Metadata, inputs: &[&Literal], macs: &mut u64) -> Result<Vec<Literal>> {
+    crate::anyhow::ensure!(inputs.len() == 3, "eval: expected 3 inputs");
+    let p = inputs[0].f32s()?;
+    crate::anyhow::ensure!(p.len() == meta.total_params, "eval params length");
+    let x = inputs[1].f32s()?;
+    let xdims = inputs[1].dims();
+    crate::anyhow::ensure!(xdims.len() == 4, "eval: data input must be rank 4");
+    let xd = [xdims[0], xdims[1], xdims[2], xdims[3]];
+    let y = inputs[2].i32s()?;
+    crate::anyhow::ensure!(y.len() == xd[0], "eval: labels/batch mismatch");
+    for &l in y {
+        crate::anyhow::ensure!((0..meta.num_classes as i32).contains(&l), "eval: label {l} range");
+    }
+    let (logits, _, _, used) = forward_modules(meta, p, x.to_vec(), xd, 1, 8, macs)?;
+    crate::anyhow::ensure!(used == meta.total_params, "eval params consumed {used}");
+    let loss = ce_fwd(&logits, xd[0], meta.num_classes, y);
+    let correct = correct_count(&logits, xd[0], meta.num_classes, y);
+    Ok(vec![lit::f32_scalar(loss), lit::f32_scalar(correct)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::spec;
+    use crate::util::Rng64;
+
+    fn tiny() -> Metadata {
+        spec::synthesize("tiny").unwrap()
+    }
+
+    fn batch(meta: &Metadata, b: usize, seed: u64) -> (Vec<f32>, Dims4, Vec<i32>) {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let n = b * meta.image_hw * meta.image_hw * meta.in_channels;
+        let x: Vec<f32> = (0..n).map(|_| rng.gen_f32(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % meta.num_classes) as i32).collect();
+        (x, [b, meta.image_hw, meta.image_hw, meta.in_channels], y)
+    }
+
+    /// Full-model loss + analytic grads (test helper).
+    fn loss_and_grads(
+        meta: &Metadata,
+        p: &[f32],
+        x: &[f32],
+        xd: Dims4,
+        y: &[i32],
+    ) -> (f64, Vec<f32>) {
+        let mut macs = 0u64;
+        let (logits, _, items, _) =
+            forward_modules(meta, p, x.to_vec(), xd, 1, 8, &mut macs).unwrap();
+        let loss = ce_fwd(&logits, xd[0], meta.num_classes, y) as f64;
+        let dlogits = ce_bwd(&logits, xd[0], meta.num_classes, y, 1.0);
+        let mut grads = vec![0.0f32; p.len()];
+        backward_modules(p, &items, dlogits, &mut grads, &mut macs);
+        (loss, grads)
+    }
+
+    #[test]
+    fn full_backward_matches_finite_differences() {
+        let meta = tiny();
+        let mut p = spec::init_flat(&meta, 3);
+        let (x, xd, y) = batch(&meta, 2, 11);
+        let (_, grads) = loss_and_grads(&meta, &p, &x, xd, &y);
+        // pick the largest-gradient coordinate of a few structurally distinct
+        // tensors and central-difference each one
+        let mut checked = 0;
+        for name in ["md1.conv.w", "md4.b0.conv1.w", "md4.b0.gn1.scale", "md8.fc.w", "md8.fc.b"] {
+            let e = meta.params.iter().find(|e| e.name == name).unwrap();
+            let rel = (0..e.size())
+                .max_by(|&a, &b| {
+                    grads[e.offset + a].abs().total_cmp(&grads[e.offset + b].abs())
+                })
+                .unwrap();
+            let i = e.offset + rel;
+            let g = grads[i] as f64;
+            if g.abs() < 1e-3 {
+                continue; // too small for stable f32 finite differences
+            }
+            let h = 4e-3f32;
+            let orig = p[i];
+            p[i] = orig + h;
+            let (lp, _) = loss_and_grads(&meta, &p, &x, xd, &y);
+            p[i] = orig - h;
+            let (lm, _) = loss_and_grads(&meta, &p, &x, xd, &y);
+            p[i] = orig;
+            let num = (lp - lm) / (2.0 * h as f64);
+            let rel_err = (g - num).abs() / num.abs().max(1e-5);
+            assert!(
+                rel_err < 0.25,
+                "{name}[{rel}]: analytic {g:.5e} vs numeric {num:.5e} (rel {rel_err:.3})"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 2, "finite-difference check exercised only {checked} tensors");
+    }
+
+    #[test]
+    fn full_step_learns_one_batch() {
+        let meta = tiny();
+        let p0 = spec::init_flat(&meta, 0);
+        let (x, xd, y) = batch(&meta, meta.batch, 5);
+        let xl = Literal::from_f32(x, &xd).unwrap();
+        let yl = lit::i32_vec(&y).unwrap();
+        let n = p0.len();
+        let (mut p, mut m, mut v, mut t) = (p0, vec![0.0f32; n], vec![0.0f32; n], 1.0f32);
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..20 {
+            let inputs = [
+                lit::f32_vec(&p).unwrap(),
+                lit::f32_vec(&m).unwrap(),
+                lit::f32_vec(&v).unwrap(),
+                lit::f32_scalar(t),
+                lit::f32_scalar(5e-3),
+                xl.clone(),
+                yl.clone(),
+            ];
+            let refs: Vec<&Literal> = inputs.iter().collect();
+            let mut macs = 0u64;
+            let out = full_step(&meta, false, &refs, &mut macs).unwrap();
+            assert_eq!(out.len(), 6);
+            assert!(macs > 0);
+            p = out[0].to_vec::<f32>().unwrap();
+            m = out[1].to_vec::<f32>().unwrap();
+            v = out[2].to_vec::<f32>().unwrap();
+            t = lit::scalar_f32(&out[3]).unwrap();
+            last = lit::scalar_f32(&out[4]).unwrap();
+            if step == 0 {
+                first = last;
+            }
+            assert!(last.is_finite());
+        }
+        assert_eq!(t, 21.0);
+        assert!(
+            last < 0.6 * first,
+            "adam on one batch should overfit: first {first} last {last}"
+        );
+    }
+
+    #[test]
+    fn client_and_server_steps_compose() {
+        let meta = tiny();
+        for tier in [1usize, 4, meta.max_tiers] {
+            let tm = meta.tier(tier);
+            let flat = spec::init_flat(&meta, 0);
+            let aux = spec::init_aux(&meta, tier, 0).unwrap();
+            let mut cv = flat[..tm.client_param_len].to_vec();
+            cv.extend_from_slice(&aux);
+            let sv = flat[tm.cut_offset..].to_vec();
+            let (x, xd, y) = batch(&meta, meta.batch, 9);
+            let zeros = vec![0.0f32; cv.len()];
+            let ci = [
+                lit::f32_vec(&cv).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_scalar(1.0),
+                lit::f32_scalar(1e-3),
+                Literal::from_f32(x, &xd).unwrap(),
+                lit::i32_vec(&y).unwrap(),
+            ];
+            let refs: Vec<&Literal> = ci.iter().collect();
+            let mut macs = 0u64;
+            let cout = client_step(&meta, tier, false, &refs, &mut macs).unwrap();
+            assert_eq!(cout.len(), 6);
+            let z = &cout[4];
+            assert_eq!(z.dims(), &tm.z_shape[..]);
+            let client_macs = macs;
+
+            let szeros = vec![0.0f32; sv.len()];
+            let si = [
+                lit::f32_vec(&sv).unwrap(),
+                lit::f32_vec(&szeros).unwrap(),
+                lit::f32_vec(&szeros).unwrap(),
+                lit::f32_scalar(1.0),
+                lit::f32_scalar(1e-3),
+                z.clone(),
+                lit::i32_vec(&y).unwrap(),
+            ];
+            let srefs: Vec<&Literal> = si.iter().collect();
+            let mut smacs = 0u64;
+            let sout = server_step(&meta, tier, &srefs, &mut smacs).unwrap();
+            assert_eq!(sout.len(), 6);
+            assert!(lit::scalar_f32(&sout[4]).unwrap().is_finite());
+            assert!(client_macs > 0 && smacs > 0);
+        }
+    }
+
+    #[test]
+    fn client_macs_grow_server_macs_shrink_with_tier() {
+        // the deterministic cost model must reproduce the Table 2 shape
+        let meta = tiny();
+        let (x, xd, y) = batch(&meta, meta.batch, 1);
+        let mut last_client = 0u64;
+        let mut last_server = u64::MAX;
+        for tier in 1..=meta.max_tiers {
+            let tm = meta.tier(tier);
+            let flat = spec::init_flat(&meta, 0);
+            let aux = spec::init_aux(&meta, tier, 0).unwrap();
+            let mut cv = flat[..tm.client_param_len].to_vec();
+            cv.extend_from_slice(&aux);
+            let zeros = vec![0.0f32; cv.len()];
+            let ci = [
+                lit::f32_vec(&cv).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_scalar(1.0),
+                lit::f32_scalar(1e-3),
+                Literal::from_f32(x.clone(), &xd).unwrap(),
+                lit::i32_vec(&y).unwrap(),
+            ];
+            let refs: Vec<&Literal> = ci.iter().collect();
+            let mut cm = 0u64;
+            let cout = client_step(&meta, tier, false, &refs, &mut cm).unwrap();
+
+            let sv = flat[tm.cut_offset..].to_vec();
+            let szeros = vec![0.0f32; sv.len()];
+            let si = [
+                lit::f32_vec(&sv).unwrap(),
+                lit::f32_vec(&szeros).unwrap(),
+                lit::f32_vec(&szeros).unwrap(),
+                lit::f32_scalar(1.0),
+                lit::f32_scalar(1e-3),
+                cout[4].clone(),
+                lit::i32_vec(&y).unwrap(),
+            ];
+            let srefs: Vec<&Literal> = si.iter().collect();
+            let mut sm = 0u64;
+            server_step(&meta, tier, &srefs, &mut sm).unwrap();
+
+            assert!(cm > last_client, "tier {tier}: client macs {cm} <= {last_client}");
+            assert!(sm < last_server, "tier {tier}: server macs {sm} >= {last_server}");
+            last_client = cm;
+            last_server = sm;
+        }
+    }
+
+    #[test]
+    fn dcor_term_changes_objective() {
+        let meta = tiny();
+        let tm = meta.tier(1);
+        let flat = spec::init_flat(&meta, 0);
+        let aux = spec::init_aux(&meta, 1, 0).unwrap();
+        let mut cv = flat[..tm.client_param_len].to_vec();
+        cv.extend_from_slice(&aux);
+        let (x, xd, y) = batch(&meta, meta.batch, 2);
+        let zeros = vec![0.0f32; cv.len()];
+        let mk = |alpha: f32| {
+            let ci = [
+                lit::f32_vec(&cv).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_scalar(1.0),
+                lit::f32_scalar(1e-3),
+                Literal::from_f32(x.clone(), &xd).unwrap(),
+                lit::i32_vec(&y).unwrap(),
+                lit::f32_scalar(alpha),
+            ];
+            let refs: Vec<&Literal> = ci.iter().collect();
+            let mut macs = 0u64;
+            let out = client_step(&meta, 1, true, &refs, &mut macs).unwrap();
+            lit::scalar_f32(&out[5]).unwrap()
+        };
+        let l0 = mk(0.0);
+        let l1 = mk(0.75);
+        assert!(l0.is_finite() && l1.is_finite());
+        assert_ne!(l0, l1, "alpha must change the objective");
+    }
+
+    #[test]
+    fn dcor_gradient_matches_finite_differences() {
+        let mut rng = Rng64::seed_from_u64(4);
+        let n = 4usize;
+        let x: Vec<f32> = (0..n * 6).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+        let mut z: Vec<f32> = (0..n * 5).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+        let (_, dz) = dcor_with_grad(&x, &z, n);
+        for i in [0usize, 7, 13, 19] {
+            let h = 1e-3f32;
+            let orig = z[i];
+            z[i] = orig + h;
+            let (rp, _) = dcor_with_grad(&x, &z, n);
+            z[i] = orig - h;
+            let (rm, _) = dcor_with_grad(&x, &z, n);
+            z[i] = orig;
+            let num = (rp as f64 - rm as f64) / (2.0 * h as f64);
+            let ana = dz[i] as f64;
+            assert!(
+                (ana - num).abs() < 1e-3 + 0.05 * num.abs(),
+                "dz[{i}]: analytic {ana:.5e} numeric {num:.5e}"
+            );
+        }
+    }
+
+    #[test]
+    fn eval_loss_near_uniform_at_init() {
+        let meta = tiny();
+        let p = spec::init_flat(&meta, 0);
+        let (x, xd, y) = batch(&meta, meta.eval_batch, 8);
+        let inputs = [
+            lit::f32_vec(&p).unwrap(),
+            Literal::from_f32(x, &xd).unwrap(),
+            lit::i32_vec(&y).unwrap(),
+        ];
+        let refs: Vec<&Literal> = inputs.iter().collect();
+        let mut macs = 0u64;
+        let out = eval(&meta, &refs, &mut macs).unwrap();
+        let loss = lit::scalar_f32(&out[0]).unwrap();
+        let correct = lit::scalar_f32(&out[1]).unwrap();
+        // random init on 10 classes: CE in a loose band around ln(10)
+        assert!((1.0..7.0).contains(&loss), "init loss {loss}");
+        assert!((0.0..=meta.eval_batch as f32).contains(&correct));
+    }
+
+    #[test]
+    fn steps_are_bit_deterministic() {
+        let meta = tiny();
+        let p = spec::init_flat(&meta, 0);
+        let (x, xd, y) = batch(&meta, meta.batch, 3);
+        let zeros = vec![0.0f32; p.len()];
+        let run = || {
+            let inputs = [
+                lit::f32_vec(&p).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_scalar(1.0),
+                lit::f32_scalar(1e-3),
+                Literal::from_f32(x.clone(), &xd).unwrap(),
+                lit::i32_vec(&y).unwrap(),
+            ];
+            let refs: Vec<&Literal> = inputs.iter().collect();
+            let mut macs = 0u64;
+            let out = full_step(&meta, false, &refs, &mut macs).unwrap();
+            (out[0].to_vec::<f32>().unwrap(), lit::scalar_f32(&out[4]).unwrap(), macs)
+        };
+        let (p1, l1, m1) = run();
+        let (p2, l2, m2) = run();
+        assert_eq!(l1, l2);
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+    }
+}

@@ -1,0 +1,376 @@
+//! Built-in model configurations and flat-layout synthesis.
+//!
+//! This is the rust-side port of `python/compile/model.py`'s `ModelConfig` /
+//! `build_spec` / `aux_spec` / `z_shape`, used by the pure-Rust `reference`
+//! backend so the crate runs with **no artifacts on disk**: when
+//! `artifacts/<config>/metadata.json` is missing, `Metadata::load` falls back
+//! to `synthesize(<config>)`, and initial parameters come from the
+//! deterministic He-normal initializer below instead of `init_full.bin`.
+//!
+//! The layout rules must stay in lockstep with the python exporter — both
+//! derive every tensor of the global model module-by-module (md1 stem,
+//! md2..md7 residual stages, md8 avgpool+fc) into one flat f32 vector, so
+//! tier splits and aggregation are pure slicing.
+
+use crate::anyhow::Result;
+use crate::util::Rng64;
+
+use super::metadata::{AdamMeta, Metadata, ParamEntry, TierMeta};
+
+/// Number of modules the global model is split into (paper: md1..md8).
+pub const NUM_MODULES: usize = 8;
+/// Maximum number of tiers: cut after md1..md7.
+pub const MAX_TIERS: usize = 7;
+
+pub const ADAM_B1: f64 = 0.9;
+pub const ADAM_B2: f64 = 0.999;
+pub const ADAM_EPS: f64 = 1e-8;
+pub const GN_EPS: f32 = 1e-5;
+
+/// Architecture + batch configuration for one artifact set (mirror of the
+/// python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub num_classes: usize,
+    pub image_hw: usize,
+    pub in_channels: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// Output channels of md1..md7.
+    pub widths: [usize; 7],
+    /// Stride of each residual stage md2..md7.
+    pub strides: [usize; 6],
+    /// Residual blocks per stage md2..md7.
+    pub blocks: [usize; 6],
+}
+
+const BASE: ModelConfig = ModelConfig {
+    name: "resnet56s-c10",
+    num_classes: 10,
+    image_hw: 32,
+    in_channels: 3,
+    batch: 32,
+    eval_batch: 64,
+    widths: [16, 16, 16, 32, 32, 64, 64],
+    strides: [1, 1, 2, 1, 2, 1],
+    blocks: [1, 1, 1, 1, 1, 1],
+};
+
+/// Look up a named config (the same table `python/compile/model.py` exports).
+pub fn config(name: &str) -> Option<ModelConfig> {
+    Some(match name {
+        "resnet56s-c10" => BASE,
+        "resnet110s-c10" => ModelConfig {
+            name: "resnet110s-c10",
+            blocks: [2, 2, 2, 2, 2, 2],
+            ..BASE
+        },
+        "resnet56s-c100" => ModelConfig { name: "resnet56s-c100", num_classes: 100, ..BASE },
+        "resnet56s-ham" => ModelConfig { name: "resnet56s-ham", num_classes: 7, ..BASE },
+        "tiny" | "tiny-k512" => ModelConfig {
+            name: if name == "tiny" { "tiny" } else { "tiny-k512" },
+            image_hw: 16,
+            batch: 8,
+            eval_batch: 16,
+            widths: [8, 8, 8, 16, 16, 32, 32],
+            ..BASE
+        },
+        "resnet56" => ModelConfig {
+            name: "resnet56",
+            widths: [16, 64, 64, 128, 128, 256, 256],
+            blocks: [3, 3, 3, 3, 3, 3],
+            ..BASE
+        },
+        "resnet110" => ModelConfig {
+            name: "resnet110",
+            widths: [16, 64, 64, 128, 128, 256, 256],
+            blocks: [6, 6, 6, 6, 6, 6],
+            ..BASE
+        },
+        _ => return None,
+    })
+}
+
+/// Configs whose artifact sets carry the distance-correlation variant.
+pub fn has_dcor(name: &str) -> bool {
+    matches!(name, "tiny" | "tiny-k512" | "resnet56s-c10")
+}
+
+/// GroupNorm group count for `c` channels (mirror of python `_gn_groups`).
+pub fn gn_groups(c: usize) -> usize {
+    let mut g = c.min(8);
+    while c % g != 0 {
+        g -= 1;
+    }
+    g
+}
+
+fn push(
+    entries: &mut Vec<ParamEntry>,
+    off: &mut usize,
+    module: usize,
+    name: String,
+    shape: Vec<usize>,
+) {
+    let size: usize = shape.iter().product();
+    entries.push(ParamEntry { module, name, shape, offset: *off });
+    *off += size;
+}
+
+fn push_block(
+    entries: &mut Vec<ParamEntry>,
+    off: &mut usize,
+    module: usize,
+    prefix: &str,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+) {
+    push(entries, off, module, format!("{prefix}.conv1.w"), vec![3, 3, cin, cout]);
+    push(entries, off, module, format!("{prefix}.gn1.scale"), vec![cout]);
+    push(entries, off, module, format!("{prefix}.gn1.bias"), vec![cout]);
+    push(entries, off, module, format!("{prefix}.conv2.w"), vec![3, 3, cout, cout]);
+    push(entries, off, module, format!("{prefix}.gn2.scale"), vec![cout]);
+    push(entries, off, module, format!("{prefix}.gn2.bias"), vec![cout]);
+    if stride != 1 || cin != cout {
+        push(entries, off, module, format!("{prefix}.proj.w"), vec![1, 1, cin, cout]);
+        push(entries, off, module, format!("{prefix}.gnp.scale"), vec![cout]);
+        push(entries, off, module, format!("{prefix}.gnp.bias"), vec![cout]);
+    }
+}
+
+/// Flat layout of the full global model (md1..md8), python `build_spec`.
+pub fn build_entries(cfg: &ModelConfig) -> Vec<ParamEntry> {
+    let mut entries = Vec::new();
+    let mut off = 0usize;
+    let stem_w = vec![3, 3, cfg.in_channels, cfg.widths[0]];
+    push(&mut entries, &mut off, 1, "md1.conv.w".into(), stem_w);
+    push(&mut entries, &mut off, 1, "md1.gn.scale".into(), vec![cfg.widths[0]]);
+    push(&mut entries, &mut off, 1, "md1.gn.bias".into(), vec![cfg.widths[0]]);
+    let mut cin = cfg.widths[0];
+    for stage in 0..6 {
+        let module = stage + 2;
+        let cout = cfg.widths[stage + 1];
+        for b in 0..cfg.blocks[stage] {
+            let stride = if b == 0 { cfg.strides[stage] } else { 1 };
+            let prefix = format!("md{module}.b{b}");
+            push_block(&mut entries, &mut off, module, &prefix, cin, cout, stride);
+            cin = cout;
+        }
+    }
+    push(&mut entries, &mut off, 8, "md8.fc.w".into(), vec![cfg.widths[6], cfg.num_classes]);
+    push(&mut entries, &mut off, 8, "md8.fc.b".into(), vec![cfg.num_classes]);
+    entries
+}
+
+/// Shape of the intermediate activation after md_tier for batch size `b`.
+pub fn z_shape(cfg: &ModelConfig, tier: usize, b: usize) -> Vec<usize> {
+    let mut hw = cfg.image_hw;
+    for stage in 0..tier.saturating_sub(1) {
+        hw /= cfg.strides[stage];
+    }
+    vec![b, hw, hw, cfg.widths[tier - 1]]
+}
+
+/// Auxiliary-head parameter count for one tier: avgpool + fc on that tier's
+/// channel width (`aux.fc.w` + `aux.fc.b`).
+pub fn aux_len(cfg: &ModelConfig, tier: usize) -> usize {
+    cfg.widths[tier - 1] * cfg.num_classes + cfg.num_classes
+}
+
+/// Synthesize the full `Metadata` for a named built-in config — the same
+/// document `python/compile/aot.py` writes to `metadata.json`.
+pub fn synthesize(name: &str) -> Option<Metadata> {
+    let cfg = config(name)?;
+    let entries = build_entries(&cfg);
+    let total: usize = entries.iter().map(ParamEntry::size).sum();
+
+    let mut module_offsets = Vec::with_capacity(NUM_MODULES + 1);
+    let mut seen = 0usize;
+    for e in &entries {
+        if e.module > seen {
+            module_offsets.push(e.offset);
+            seen = e.module;
+        }
+    }
+    module_offsets.push(total);
+
+    let tiers: Vec<TierMeta> = (1..=MAX_TIERS)
+        .map(|tier| {
+            let cut = module_offsets[tier];
+            let alen = aux_len(&cfg, tier);
+            let zs = z_shape(&cfg, tier, cfg.batch);
+            let z_elems: usize = zs.iter().product();
+            TierMeta {
+                tier,
+                cut_module: tier,
+                cut_offset: cut,
+                client_param_len: cut,
+                aux_len: alen,
+                client_vec_len: cut + alen,
+                server_vec_len: total - cut,
+                z_shape: zs,
+                z_bytes_per_batch: z_elems * 4,
+                model_transfer_bytes: 2 * (cut + alen) * 4,
+            }
+        })
+        .collect();
+
+    Some(Metadata {
+        config: cfg.name.to_string(),
+        num_classes: cfg.num_classes,
+        image_hw: cfg.image_hw,
+        in_channels: cfg.in_channels,
+        batch: cfg.batch,
+        eval_batch: cfg.eval_batch,
+        widths: cfg.widths.to_vec(),
+        strides: cfg.strides.to_vec(),
+        blocks: cfg.blocks.to_vec(),
+        total_params: total,
+        module_offsets,
+        max_tiers: MAX_TIERS,
+        has_dcor: has_dcor(name),
+        adam: AdamMeta { b1: ADAM_B1, b2: ADAM_B2, eps: ADAM_EPS },
+        tiers,
+        params: entries,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Deterministic initialization (reference-backend replacement for
+// init_full.bin / init_aux_t{m}.bin)
+// ---------------------------------------------------------------------
+
+fn init_entry(out: &mut Vec<f32>, e: &ParamEntry, rng: &mut Rng64) {
+    let size = e.size();
+    if e.name.ends_with(".w") && e.shape.len() == 4 {
+        // conv (kh, kw, cin, cout): He-normal on fan-in
+        let fan_in = (e.shape[0] * e.shape[1] * e.shape[2]) as f64;
+        let std = (2.0 / fan_in).sqrt();
+        out.extend((0..size).map(|_| (rng.normal() * std) as f32));
+    } else if e.name.ends_with(".w") && e.shape.len() == 2 {
+        let std = (2.0 / e.shape[0] as f64).sqrt();
+        out.extend((0..size).map(|_| (rng.normal() * std) as f32));
+    } else if e.name.ends_with(".scale") {
+        out.extend(std::iter::repeat(1.0f32).take(size));
+    } else {
+        out.extend(std::iter::repeat(0.0f32).take(size));
+    }
+}
+
+/// He-normal conv/fc weights, unit GN scales, zero biases — full flat vector.
+pub fn init_flat(meta: &Metadata, seed: u64) -> Vec<f32> {
+    let mut out = Vec::with_capacity(meta.total_params);
+    for (i, e) in meta.params.iter().enumerate() {
+        // fresh stream per entry so the layout can evolve without reshuffling
+        // every tensor's values
+        let mut rng = Rng64::seed_from_u64(
+            seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        init_entry(&mut out, e, &mut rng);
+    }
+    out
+}
+
+/// Initial auxiliary head for `tier`.
+pub fn init_aux(meta: &Metadata, tier: usize, seed: u64) -> Result<Vec<f32>> {
+    crate::anyhow::ensure!(
+        (1..=meta.max_tiers).contains(&tier),
+        "aux init: tier {tier} out of range"
+    );
+    let c = meta.widths[tier - 1];
+    let nc = meta.num_classes;
+    let entries = [
+        ParamEntry { module: 1, name: "aux.fc.w".into(), shape: vec![c, nc], offset: 0 },
+        ParamEntry { module: 1, name: "aux.fc.b".into(), shape: vec![nc], offset: c * nc },
+    ];
+    let mut out = Vec::with_capacity(c * nc + nc);
+    for (i, e) in entries.iter().enumerate() {
+        let mut rng = Rng64::seed_from_u64(
+            (seed + 1000 + tier as u64) ^ (i as u64 + 1).wrapping_mul(0xA24BAED4963EE407),
+        );
+        init_entry(&mut out, e, &mut rng);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesized_tiny_metadata_validates() {
+        let meta = synthesize("tiny").unwrap();
+        meta.validate().unwrap();
+        assert_eq!(meta.config, "tiny");
+        assert_eq!(meta.max_tiers, 7);
+        assert!(meta.has_dcor);
+        assert_eq!(meta.batch, 8);
+        // client slice of tier m must end exactly where server slice starts
+        for t in &meta.tiers {
+            assert_eq!(t.client_param_len, t.cut_offset);
+        }
+    }
+
+    #[test]
+    fn all_named_configs_synthesize_and_validate() {
+        for name in [
+            "tiny",
+            "tiny-k512",
+            "resnet56s-c10",
+            "resnet110s-c10",
+            "resnet56s-c100",
+            "resnet56s-ham",
+            "resnet56",
+            "resnet110",
+        ] {
+            let meta = synthesize(name).unwrap_or_else(|| panic!("{name} missing"));
+            meta.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        assert!(synthesize("bogus").is_none());
+    }
+
+    #[test]
+    fn transfer_bytes_monotone_in_tier() {
+        let meta = synthesize("tiny").unwrap();
+        for w in meta.tiers.windows(2) {
+            assert!(w[1].model_transfer_bytes >= w[0].model_transfer_bytes);
+        }
+    }
+
+    #[test]
+    fn z_shape_tracks_strides() {
+        let cfg = config("tiny").unwrap();
+        // strides (1,1,2,1,2,1): tier 1..=7 spatial dims
+        assert_eq!(z_shape(&cfg, 1, 8), vec![8, 16, 16, 8]);
+        assert_eq!(z_shape(&cfg, 4, 8), vec![8, 8, 8, 16]);
+        assert_eq!(z_shape(&cfg, 7, 8), vec![8, 4, 4, 32]);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_shaped() {
+        let meta = synthesize("tiny").unwrap();
+        let a = init_flat(&meta, 0);
+        let b = init_flat(&meta, 0);
+        assert_eq!(a.len(), meta.total_params);
+        assert_eq!(a, b);
+        let c = init_flat(&meta, 1);
+        assert_ne!(a, c);
+        // GN scales are exactly 1, biases 0
+        let e = meta.params.iter().find(|e| e.name == "md1.gn.scale").unwrap();
+        assert!(a[e.offset..e.offset + e.size()].iter().all(|&v| v == 1.0));
+        for t in 1..=meta.max_tiers {
+            let aux = init_aux(&meta, t, 0).unwrap();
+            assert_eq!(aux.len(), meta.tier(t).aux_len);
+        }
+    }
+
+    #[test]
+    fn gn_groups_divides_evenly() {
+        for c in [1usize, 3, 6, 8, 16, 32, 100] {
+            let g = gn_groups(c);
+            assert!(g >= 1 && c % g == 0 && g <= 8);
+        }
+    }
+}

@@ -5,7 +5,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::anyhow::{anyhow, bail, Result};
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {

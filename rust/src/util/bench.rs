@@ -2,9 +2,16 @@
 //!
 //! `cargo bench` runs `[[bench]]` targets with `harness = false`; each
 //! target drives this module. Reports mean / p50 / p95 wall time per
-//! iteration after a warmup phase, plus ops/sec.
+//! iteration after a warmup phase, plus ops/sec. [`BenchReport`] collects
+//! results and extra key/values into a machine-readable JSON file
+//! (`BENCH_hotpath.json` at the repo root) so the perf trajectory is
+//! tracked across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::anyhow::{Context, Result};
+use crate::util::json::{self, Json};
 
 /// One benchmark's statistics.
 #[derive(Debug, Clone)]
@@ -62,6 +69,88 @@ pub fn bench(name: &str, target_iters: usize, budget: Duration, mut f: impl FnMu
 /// Section header for bench binaries.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+impl BenchStats {
+    pub fn to_json(&self) -> Json {
+        let mean_ns = self.mean.as_nanos() as f64;
+        json::obj(vec![
+            ("name", json::s(self.name.clone())),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_ns", json::num(mean_ns)),
+            ("p50_ns", json::num(self.p50.as_nanos() as f64)),
+            ("p95_ns", json::num(self.p95.as_nanos() as f64)),
+            ("min_ns", json::num(self.min.as_nanos() as f64)),
+            ("ops_per_sec", json::num(if mean_ns > 0.0 { 1e9 / mean_ns } else { 0.0 })),
+        ])
+    }
+}
+
+/// Machine-readable bench report (entries + free-form extras).
+#[derive(Default)]
+pub struct BenchReport {
+    entries: Vec<BenchStats>,
+    /// Entries carried over from a previous report on disk (used when this
+    /// run only refreshes an extra, e.g. the cargo-test smoke recorder —
+    /// see [`BenchReport::preserve_entries_from`]).
+    carried_entries: Vec<Json>,
+    extras: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, stats: BenchStats) {
+        self.entries.push(stats);
+    }
+
+    /// Attach a structured extra (e.g. the round-throughput comparison).
+    pub fn extra(&mut self, key: &str, value: Json) {
+        self.extras.push((key.to_string(), value));
+    }
+
+    /// Keep the `entries` array of an existing report at `path` when this
+    /// report measured none itself, so a partial refresh (cargo-test smoke)
+    /// does not clobber the full `cargo bench` micro-bench data.
+    pub fn preserve_entries_from(&mut self, path: impl AsRef<Path>) {
+        if !self.entries.is_empty() {
+            return;
+        }
+        let Ok(text) = std::fs::read_to_string(path) else { return };
+        let Ok(doc) = json::parse(&text) else { return };
+        if let Ok(arr) = doc.get("entries").and_then(Json::as_arr) {
+            self.carried_entries = arr.to_vec();
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries = if self.entries.is_empty() {
+            self.carried_entries.clone()
+        } else {
+            self.entries.iter().map(BenchStats::to_json).collect()
+        };
+        let mut pairs = vec![("schema", json::num(1.0)), ("entries", Json::Arr(entries))];
+        for (k, v) in &self.extras {
+            pairs.push((k.as_str(), v.clone()));
+        }
+        json::obj(pairs)
+    }
+
+    /// Write the report as pretty JSON.
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("bench report written to {}", path.display());
+        Ok(())
+    }
+}
+
+/// Canonical location of the hot-path bench report: the repository root.
+pub fn hotpath_report_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_hotpath.json")
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Result};
+use crate::anyhow::{anyhow, bail, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -45,7 +45,7 @@ impl Json {
 
     pub fn as_usize(&self) -> Result<usize> {
         let v = self.as_f64()?;
-        anyhow::ensure!(v >= 0.0 && v.fract() == 0.0, "not a usize: {v}");
+        crate::anyhow::ensure!(v >= 0.0 && v.fract() == 0.0, "not a usize: {v}");
         Ok(v as usize)
     }
 
@@ -170,7 +170,7 @@ pub fn parse(text: &str) -> Result<Json> {
     p.ws();
     let v = p.value()?;
     p.ws();
-    anyhow::ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
+    crate::anyhow::ensure!(p.i == p.b.len(), "trailing garbage at byte {}", p.i);
     Ok(v)
 }
 
@@ -194,7 +194,7 @@ impl Parser<'_> {
     }
 
     fn expect(&mut self, c: u8) -> Result<()> {
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             self.peek()? == c,
             "expected '{}' at byte {}, found '{}'",
             c as char,
@@ -218,7 +218,7 @@ impl Parser<'_> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
-        anyhow::ensure!(
+        crate::anyhow::ensure!(
             self.b[self.i..].starts_with(word.as_bytes()),
             "invalid literal at byte {}",
             self.i
@@ -299,7 +299,7 @@ impl Parser<'_> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            anyhow::ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
+                            crate::anyhow::ensure!(self.i + 4 <= self.b.len(), "bad \\u escape");
                             let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let cp = u32::from_str_radix(hex, 16)?;
                             self.i += 4;

@@ -1,70 +1,29 @@
-//! Minimal stderr logger backing the `log` facade (offline testbed — no
-//! env_logger/tracing-subscriber). Level comes from `DTFL_LOG`
-//! (error|warn|info|debug|trace), default `info`.
+//! Logger initialization for the in-tree `log` facade (`crate::log`).
+//! Level comes from `DTFL_LOG` (error|warn|info|debug|trace|off),
+//! default `info`.
 
-use std::io::Write;
-use std::time::Instant;
+use crate::log::{set_max_level, Level};
 
-use log::{Level, LevelFilter, Metadata, Record};
-use std::sync::OnceLock;
-
-struct StderrLogger {
-    start: Instant,
-}
-
-static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, _: &Metadata) -> bool {
-        true
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = self.start.elapsed().as_secs_f64();
-        let lvl = match record.level() {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-            Level::Trace => "TRACE",
-        };
-        let mut err = std::io::stderr().lock();
-        let _ = writeln!(
-            err,
-            "[{t:9.3}s {lvl} {}] {}",
-            record.target().split("::").last().unwrap_or(""),
-            record.args()
-        );
-    }
-
-    fn flush(&self) {}
-}
-
-/// Install the logger (idempotent). Level from `DTFL_LOG` env.
+/// Install the log level from the `DTFL_LOG` env var (idempotent).
 pub fn init() {
     let level = match std::env::var("DTFL_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
+        Ok("error") => Some(Level::Error),
+        Ok("warn") => Some(Level::Warn),
+        Ok("debug") => Some(Level::Debug),
+        Ok("trace") => Some(Level::Trace),
+        Ok("off") => None,
+        _ => Some(Level::Info),
     };
-    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
-    if log::set_logger(logger).is_ok() {
-        log::set_max_level(level);
-    }
+    set_max_level(level);
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn init_is_idempotent() {
+        let _serial = crate::log::LEVEL_TEST_LOCK.lock().unwrap();
         super::init();
         super::init();
-        log::info!("logger smoke test");
+        crate::log::info!("logger smoke test");
     }
 }

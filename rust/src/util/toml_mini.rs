@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::anyhow::{anyhow, bail, Context, Result};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
@@ -71,7 +71,7 @@ impl TomlDoc {
                     .strip_suffix(']')
                     .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
                     .trim();
-                anyhow::ensure!(!name.is_empty(), "line {}: empty section", lineno + 1);
+                crate::anyhow::ensure!(!name.is_empty(), "line {}: empty section", lineno + 1);
                 current = name.to_string();
                 doc.sections.entry(current.clone()).or_default();
                 continue;
@@ -80,7 +80,7 @@ impl TomlDoc {
                 .split_once('=')
                 .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
             let key = k.trim().to_string();
-            anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
+            crate::anyhow::ensure!(!key.is_empty(), "line {}: empty key", lineno + 1);
             let value = parse_value(v.trim())
                 .with_context(|| format!("line {}: value for '{}'", lineno + 1, key))?;
             doc.sections.get_mut(&current).unwrap().insert(key, value);
@@ -175,12 +175,12 @@ fn strip_comment(line: &str) -> &str {
 }
 
 fn parse_value(text: &str) -> Result<TomlValue> {
-    anyhow::ensure!(!text.is_empty(), "empty value");
+    crate::anyhow::ensure!(!text.is_empty(), "empty value");
     if let Some(stripped) = text.strip_prefix('"') {
         let inner = stripped
             .strip_suffix('"')
             .ok_or_else(|| anyhow!("unterminated string: {text}"))?;
-        anyhow::ensure!(!inner.contains('"'), "nested quotes unsupported: {text}");
+        crate::anyhow::ensure!(!inner.contains('"'), "nested quotes unsupported: {text}");
         return Ok(TomlValue::Str(inner.to_string()));
     }
     match text {

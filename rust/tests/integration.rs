@@ -1,10 +1,12 @@
-//! Integration tests: PJRT runtime + coordinator + every federated method,
-//! end-to-end against the `tiny` artifact set.
+//! Integration tests: runtime + coordinator + every federated method,
+//! end-to-end against the `tiny` config.
 //!
-//! These are the consumer-side contract checks of the python⇄rust AOT
-//! interchange (the python side is covered by python/tests/test_aot.py).
-//! All tests no-op gracefully when artifacts are missing so `cargo test`
-//! stays usable before `make artifacts`.
+//! These are the consumer-side contract checks of the step-function
+//! interface (the python side is covered by python/tests/test_aot.py).
+//! Under the default reference backend the `tiny` artifact set needs no
+//! files on disk — metadata and initial parameters are synthesized — so
+//! these tests always run; with `--features pjrt` and `make artifacts`
+//! they exercise the PJRT path instead.
 
 use std::path::PathBuf;
 
@@ -15,8 +17,8 @@ use dtfl::experiment::Experiment;
 use dtfl::runtime::{literal as lit, Runtime, StepEngine, TrainState};
 
 fn artifacts() -> Option<PathBuf> {
-    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
-    d.join("metadata.json").exists().then_some(d)
+    // always available: the reference backend synthesizes missing artifacts
+    Some(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny"))
 }
 
 fn runtime() -> Option<Runtime> {

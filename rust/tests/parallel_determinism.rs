@@ -1,0 +1,134 @@
+//! Parallel-engine determinism contract: for every method, an N-thread
+//! round must be **bit-identical** to the 1-thread round under the same
+//! seed — same `RoundOutcome` timings, same losses, same global parameters.
+//!
+//! Also hosts the smoke-sized round-throughput recorder that refreshes
+//! `BENCH_hotpath.json` during `cargo test` (the full-size numbers come from
+//! `cargo bench --bench micro_hotpath`).
+
+
+use dtfl::config::ExperimentConfig;
+use dtfl::experiment::Experiment;
+use dtfl::harness::RunSpec;
+use dtfl::metrics::RoundRecord;
+
+fn config(method: &str, threads: usize) -> ExperimentConfig {
+    let mut spec = RunSpec {
+        method: method.into(),
+        clients: 6,
+        rounds: 2,
+        batch_cap: Some(1),
+        train_total: 96,
+        test_total: 32,
+        eval_every: 1,
+        // RunSpec hardcodes timing_noise = 0.05, exercising per-client RNG streams
+        threads,
+        ..Default::default()
+    };
+    if method == "static" {
+        spec.static_tier = Some(2);
+    }
+    spec.to_config()
+}
+
+fn run(method: &str, threads: usize) -> (Vec<RoundRecord>, Vec<f32>) {
+    let mut exp = Experiment::new(config(method, threads)).expect("experiment");
+    let mut records = Vec::new();
+    exp.run_with(|r| records.push(r.clone())).expect("run");
+    (records, exp.method.global_params().to_vec())
+}
+
+fn assert_bitwise_equal_runs(method: &str) {
+    let (rec1, p1) = run(method, 1);
+    let (recn, pn) = run(method, 4);
+    assert_eq!(rec1.len(), recn.len(), "{method}: round counts differ");
+    for (a, b) in rec1.iter().zip(&recn) {
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{method}: sim_time differs");
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{method}: makespan differs");
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "{method}: train_loss differs"
+        );
+        assert_eq!(a.test_loss.map(f64::to_bits), b.test_loss.map(f64::to_bits), "{method}");
+        assert_eq!(
+            a.test_accuracy.map(f64::to_bits),
+            b.test_accuracy.map(f64::to_bits),
+            "{method}: accuracy differs"
+        );
+        assert_eq!(a.mean_tier.to_bits(), b.mean_tier.to_bits(), "{method}: tiers differ");
+    }
+    assert_eq!(p1.len(), pn.len());
+    for (i, (a, b)) in p1.iter().zip(&pn).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{method}: global param {i} differs: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn dtfl_parallel_matches_sequential() {
+    assert_bitwise_equal_runs("dtfl");
+}
+
+#[test]
+fn static_tier_parallel_matches_sequential() {
+    assert_bitwise_equal_runs("static");
+}
+
+#[test]
+fn fedavg_parallel_matches_sequential() {
+    assert_bitwise_equal_runs("fedavg");
+}
+
+#[test]
+fn splitfed_parallel_matches_sequential() {
+    assert_bitwise_equal_runs("splitfed");
+}
+
+#[test]
+fn fedyogi_parallel_matches_sequential() {
+    assert_bitwise_equal_runs("fedyogi");
+}
+
+#[test]
+fn fedgkt_parallel_matches_sequential() {
+    assert_bitwise_equal_runs("fedgkt");
+}
+
+#[test]
+fn repeated_runs_are_bit_reproducible() {
+    // same seed + same thread count → identical runs (the cost model is
+    // deterministic, not wall-clock)
+    let (ra, pa) = run("dtfl", 0);
+    let (rb, pb) = run("dtfl", 0);
+    assert_eq!(pa, pb);
+    assert_eq!(ra.len(), rb.len());
+    for (a, b) in ra.iter().zip(&rb) {
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+    }
+}
+
+/// Smoke-size round-throughput recording at K=50: refreshes
+/// `BENCH_hotpath.json` on every `cargo test` run so the perf trajectory is
+/// tracked even where `cargo bench` never runs. Timing is recorded, not
+/// asserted (CI machines vary); bit-identity IS asserted.
+#[test]
+fn bench_round_smoke_writes_hotpath_json() {
+    use dtfl::harness::measure_round_throughput;
+    use dtfl::util::bench::{hotpath_report_path, BenchReport};
+
+    let rt = measure_round_throughput(50, 1, 8).expect("round throughput probe");
+    assert!(rt.bit_identical, "K=50 parallel round must match sequential bits");
+
+    let mut report = BenchReport::new();
+    // keep any full `cargo bench` micro-bench entries already on disk
+    report.preserve_entries_from(hotpath_report_path());
+    report.extra(
+        "bench_round",
+        rt.to_json("cargo-test smoke (see benches/micro_hotpath.rs for the full run)"),
+    );
+    report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
+}
