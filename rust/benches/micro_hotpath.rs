@@ -1,4 +1,5 @@
 //! L3 hot-path micro-benchmarks (the §Perf targets):
+//!   * blocked vs naive matmul kernels (GFLOP/s) + scratch-arena peak bytes
 //!   * flat-layout aggregation (O(K·P) FMAs — the per-round CPU hot loop)
 //!   * dynamic tier scheduling (O(K·M) estimates)
 //!   * literal construction / extraction (backend boundary per step)
@@ -17,7 +18,7 @@ use dtfl::coordinator::{
     aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile,
 };
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
-use dtfl::harness::measure_round_throughput;
+use dtfl::harness::{kernels_to_json, measure_kernel_throughput, measure_round_throughput};
 use dtfl::runtime::{literal as lit, Metadata};
 use dtfl::simulation::ServerModel;
 use dtfl::util::bench::{bench, hotpath_report_path, section, BenchReport};
@@ -49,6 +50,24 @@ fn bench_round(report: &mut BenchReport, clients: usize, rounds: usize) {
 fn main() {
     let budget = Duration::from_secs(3);
     let mut report = BenchReport::new();
+
+    // ---------------- matmul kernels ----------------
+    {
+        section("matmul kernels: blocked vs naive (GFLOP/s), arena peak");
+        let (kernels, arena_peak) =
+            measure_kernel_throughput(Duration::from_millis(800)).expect("kernel probe");
+        for kt in &kernels {
+            println!(
+                "{:<10} {:>4}x{:<4}x{:<4}  blocked {:>7.2} GFLOP/s  naive {:>7.2} GFLOP/s  {:.2}x",
+                kt.name, kt.m, kt.k, kt.n, kt.gflops_blocked, kt.gflops_naive, kt.speedup()
+            );
+        }
+        println!("arena peak: {arena_peak} bytes");
+        report.extra(
+            "kernels",
+            kernels_to_json(&kernels, arena_peak, "cargo bench micro_hotpath"),
+        );
+    }
 
     // ---------------- aggregation ----------------
     {

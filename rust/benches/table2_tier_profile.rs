@@ -49,7 +49,10 @@ fn main() -> dtfl::anyhow::Result<()> {
         .zip(&n2)
         .map(|(a, b)| (a - b).abs() / a.max(1e-9))
         .fold(0.0f64, f64::max);
-    println!("\nmax relative deviation of normalized ratios between passes: {:.1}%", 100.0 * max_dev);
+    println!(
+        "\nmax relative deviation of normalized ratios between passes: {:.1}%",
+        100.0 * max_dev
+    );
 
     section("per-tier step micro-bench (client_step)");
     let engine = dtfl::runtime::StepEngine::new(&rt);

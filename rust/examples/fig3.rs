@@ -29,7 +29,8 @@ fn main() -> dtfl::anyhow::Result<()> {
         &["case", "num_tiers", "total_time", "reached_target"],
     )?;
 
-    let rt = dtfl::harness::RunSpec { artifact: artifact.clone(), ..Default::default() }.open_runtime()?;
+    let rt = dtfl::harness::RunSpec { artifact: artifact.clone(), ..Default::default() }
+        .open_runtime()?;
     println!("== Figure 3: training time vs number of tiers (DTFL) ==");
     println!("{:>6} {:>6} {:>12}", "case", "M", "total_time");
     for (case, pool) in [("case1", ProfilePool::Case1), ("case2", ProfilePool::Case2)] {

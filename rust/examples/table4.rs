@@ -37,7 +37,8 @@ fn main() -> dtfl::anyhow::Result<()> {
         &["clients", "method", "time_to_target", "best_accuracy", "rounds"],
     )?;
 
-    let rt = dtfl::harness::RunSpec { artifact: artifact.clone(), ..Default::default() }.open_runtime()?;
+    let rt = dtfl::harness::RunSpec { artifact: artifact.clone(), ..Default::default() }
+        .open_runtime()?;
     println!("== Table 4: scalability (10% of clients sampled per round) ==");
     print!("{:>8}", "clients");
     for m in &methods {

@@ -74,6 +74,12 @@ pub struct RunCfg {
     pub timing_noise: f64,
     /// Worker threads for per-client round execution (0 = all cores).
     pub threads: usize,
+    /// Worker threads a single matmul may split row panels over inside one
+    /// client step (0 = all cores, 1 = off). Useful with `threads = 1` when
+    /// cores would otherwise idle during one big client's step. The knob is
+    /// **process-wide** (last-constructed experiment wins), which is safe
+    /// because results are bit-identical for every setting.
+    pub intra_threads: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -184,6 +190,7 @@ impl ExperimentConfig {
                 ema_beta: s.f64_or("ema_beta", 0.5)?,
                 timing_noise: s.f64_or("timing_noise", 0.05)?,
                 threads: s.usize_or("threads", 0)?,
+                intra_threads: s.usize_or("intra_threads", 1)?,
             }
         };
         let sim = {
@@ -264,6 +271,7 @@ mod tests {
         assert_eq!(cfg.clients.count, 10);
         assert_eq!(cfg.run.rounds, 50);
         assert_eq!(cfg.run.max_tiers, 7);
+        assert_eq!(cfg.run.intra_threads, 1, "intra-step parallelism defaults off");
         assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
         assert!(cfg.privacy.dcor_alpha.is_none());
         assert!(cfg.output.is_none());

@@ -18,7 +18,7 @@ pub mod scheduler;
 
 pub use aggregate::{aggregate, Aggregator};
 pub use model_state::{ClientUpdate, GlobalModel};
-pub use parallel::{for_each_streamed, resolve_threads};
+pub use parallel::{for_each_streamed, join_scoped, resolve_threads};
 pub use profiler::{ClientHistory, Profiler, TierProfile};
 pub use round::{estimate_all_tiers, load_initial_model, profile_tiers, Dtfl, DtflOptions};
 pub use scheduler::{estimate_round_time, schedule, Assignment, ClientLoad, Schedule};

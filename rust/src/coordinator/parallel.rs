@@ -34,6 +34,39 @@ pub fn resolve_threads(requested: usize) -> usize {
     }
 }
 
+/// Fork-join over pre-split work items: one scoped thread per item beyond
+/// the first, which runs on the calling thread. Items are disjoint by
+/// construction (callers carve output buffers with `split_at_mut` before
+/// the fan-out), so no synchronization or result reordering is needed.
+///
+/// Used by `runtime::kernels` for intra-step row-panel parallelism. The
+/// determinism contract mirrors [`for_each_streamed`]'s: each item's work
+/// must be a pure function of the item (never of load or timing), and the
+/// caller's per-element computation order must not depend on how the work
+/// was split, so results are bit-identical no matter how many threads run
+/// or which thread computes which item.
+pub fn join_scoped<T, F>(items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let mut items = items;
+    if items.len() <= 1 {
+        if let Some(item) = items.pop() {
+            f(item);
+        }
+        return;
+    }
+    let first = items.remove(0);
+    let f = &f;
+    std::thread::scope(|scope| {
+        for item in items {
+            scope.spawn(move || f(item));
+        }
+        f(first);
+    });
+}
+
 /// Run `work` over `items` on up to `threads` workers, delivering results to
 /// `sink` strictly in item order on the calling thread.
 ///
@@ -244,5 +277,40 @@ mod tests {
     fn empty_items_is_a_noop() {
         let items: Vec<usize> = vec![];
         for_each_streamed(8, &items, |_, &v| Ok(v), |_, _| panic!("no items")).unwrap();
+    }
+
+    #[test]
+    fn join_scoped_runs_every_disjoint_chunk() {
+        let mut data = vec![1.0f32; 64];
+        {
+            let mut rest: &mut [f32] = &mut data;
+            let mut chunks: Vec<(usize, &mut [f32])> = Vec::new();
+            let mut idx = 0;
+            while !rest.is_empty() {
+                let take = rest.len().min(10);
+                let (head, tail) = rest.split_at_mut(take);
+                chunks.push((idx, head));
+                rest = tail;
+                idx += 1;
+            }
+            join_scoped(chunks, |(i, chunk)| {
+                for v in chunk {
+                    *v = i as f32;
+                }
+            });
+        }
+        for (pos, &v) in data.iter().enumerate() {
+            assert_eq!(v, (pos / 10) as f32);
+        }
+    }
+
+    #[test]
+    fn join_scoped_handles_empty_and_single() {
+        join_scoped(Vec::<usize>::new(), |_| panic!("no items"));
+        let hit = AtomicUsize::new(0);
+        join_scoped(vec![7usize], |v| {
+            hit.fetch_add(v, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 7);
     }
 }

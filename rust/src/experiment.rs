@@ -98,6 +98,11 @@ impl Experiment {
         let method = build_method(&cfg, &rt)?;
         let lr = cfg.run.lr;
 
+        // intra-step kernel parallelism (process-wide knob; results are
+        // bit-identical for every setting, so late overrides by other
+        // experiments in the same process cannot skew outcomes)
+        crate::runtime::kernels::set_intra_threads(cfg.run.intra_threads);
+
         Ok(Self {
             cfg,
             rt,

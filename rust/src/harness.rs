@@ -3,7 +3,7 @@
 //! benches. Keeps each example a thin driver.
 
 use std::rc::Rc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::anyhow::Result;
 
@@ -42,6 +42,8 @@ pub struct RunSpec {
     pub eval_every: usize,
     /// Worker threads for round execution (0 = all cores).
     pub threads: usize,
+    /// Intra-step kernel parallelism (0 = all cores, 1 = off).
+    pub intra_threads: usize,
     pub lr: f32,
     pub out_name: Option<String>,
 }
@@ -70,6 +72,7 @@ impl Default for RunSpec {
             seed: 17,
             eval_every: 2,
             threads: 0,
+            intra_threads: 1,
             lr: 1e-3,
             out_name: None,
         }
@@ -117,6 +120,7 @@ impl RunSpec {
                 ema_beta: 0.5,
                 timing_noise: 0.05,
                 threads: self.threads,
+                intra_threads: self.intra_threads,
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -243,6 +247,187 @@ pub fn measure_round_throughput(
         par_secs_per_round,
         bit_identical: seq_params == par_params,
     })
+}
+
+/// One kernel's blocked-vs-naive throughput sample (`measure_kernel_throughput`).
+#[derive(Debug, Clone)]
+pub struct KernelThroughput {
+    pub name: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub gflops_blocked: f64,
+    pub gflops_naive: f64,
+}
+
+impl KernelThroughput {
+    pub fn speedup(&self) -> f64 {
+        self.gflops_blocked / self.gflops_naive.max(1e-12)
+    }
+}
+
+fn gflops(min: Duration, m: usize, k: usize, n: usize) -> f64 {
+    2.0 * (m * k * n) as f64 / min.as_secs_f64().max(1e-12) / 1e9
+}
+
+/// Drive one reference-backend `full_step` on a **fresh** arena and return
+/// that step's high-water mark. Deliberately not the process-wide
+/// `runtime::arena_peak_bytes` max, which would mean different things
+/// depending on what else ran first in the process (e.g. the cargo-test
+/// smoke runs K=50 rounds before this probe; `cargo bench` does not).
+fn arena_peak_after_step() -> Result<usize> {
+    use crate::runtime::{literal as lit, refmath, Literal, Metadata, ScratchArena};
+    let meta = Metadata::load(std::path::Path::new("artifacts/tiny"))?;
+    let flat = crate::runtime::spec::init_flat(&meta, 0);
+    let zeros = vec![0.0f32; flat.len()];
+    let nx = meta.batch * meta.image_hw * meta.image_hw * meta.in_channels;
+    let xd = [meta.batch, meta.image_hw, meta.image_hw, meta.in_channels];
+    let inputs = [
+        lit::f32_vec(&flat)?,
+        lit::f32_vec(&zeros)?,
+        lit::f32_vec(&zeros)?,
+        lit::f32_scalar(1.0),
+        lit::f32_scalar(1e-3),
+        lit::f32_literal(&vec![0.5f32; nx], &xd)?,
+        lit::i32_vec(&vec![0i32; meta.batch])?,
+    ];
+    let refs: Vec<&Literal> = inputs.iter().collect();
+    let mut arena = ScratchArena::new();
+    let mut macs = 0u64;
+    refmath::full_step(&meta, false, &refs, &mut arena, &mut macs)?;
+    Ok(arena.peak_bytes())
+}
+
+/// All three matmul orientations share this signature: two operands, three
+/// size arguments in call order, a MAC counter.
+type MatmulFn = fn(&[f32], usize, usize, &[f32], usize, &mut u64) -> Vec<f32>;
+
+/// Time one blocked/reference kernel pair on random operands. `args` are
+/// the three usize arguments in the kernel's call order; `dims` is the
+/// recorded `(m, k, n)` = output rows × reduction length × output cols
+/// (matmul's natural naming, same product for every orientation, so
+/// GFLOP/s is orientation-independent).
+#[allow(clippy::too_many_arguments)]
+fn bench_kernel_pair(
+    name: &'static str,
+    blocked: MatmulFn,
+    reference: MatmulFn,
+    args: (usize, usize, usize),
+    a_len: usize,
+    b_len: usize,
+    dims: (usize, usize, usize),
+    rng: &mut crate::util::Rng64,
+    budget: Duration,
+) -> KernelThroughput {
+    use crate::util::bench::bench;
+    let a: Vec<f32> = (0..a_len).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..b_len).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let (d1, d2, d3) = args;
+    let (m, k, n) = dims;
+    let mut macs = 0u64;
+    let sb = bench(&format!("{name} {m}x{k}x{n} blocked"), 400, budget, || {
+        let c = blocked(&a, d1, d2, &b, d3, &mut macs);
+        std::hint::black_box(c[0]);
+    });
+    let sn = bench(&format!("{name} {m}x{k}x{n} naive"), 400, budget, || {
+        let c = reference(&a, d1, d2, &b, d3, &mut macs);
+        std::hint::black_box(c[0]);
+    });
+    KernelThroughput {
+        name: name.into(),
+        m,
+        k,
+        n,
+        gflops_blocked: gflops(sb.min, m, k, n),
+        gflops_naive: gflops(sn.min, m, k, n),
+    }
+}
+
+/// Blocked vs naive matmul-kernel GFLOP/s at conv-shaped sizes, plus the
+/// arena high-water mark after a full training step. `budget` bounds each
+/// individual kernel sample. Shared by `benches/micro_hotpath.rs` and the
+/// cargo-test smoke recorder in `tests/parallel_determinism.rs`, so the
+/// perf trajectory in `BENCH_hotpath.json` gets a kernel data point from
+/// every `cargo test` run.
+pub fn measure_kernel_throughput(budget: Duration) -> Result<(Vec<KernelThroughput>, usize)> {
+    use crate::runtime::kernels::{self, naive};
+    use crate::util::Rng64;
+
+    let mut rng = Rng64::seed_from_u64(42);
+    let mut out = Vec::new();
+
+    // im2col-rows × patch-len × cout (conv hot shape) and a squarer
+    // compute-bound shape
+    for (m, k, n) in [(512usize, 144usize, 64usize), (256, 256, 256)] {
+        out.push(bench_kernel_pair(
+            "matmul",
+            kernels::matmul,
+            naive::matmul,
+            (m, k, n),
+            m * k,
+            k * n,
+            (m, k, n),
+            &mut rng,
+            budget,
+        ));
+    }
+
+    // dW shape: cols(rows × patch)ᵀ · dout(rows × cout)
+    let (rows, patch, cout) = (512usize, 144usize, 64usize);
+    out.push(bench_kernel_pair(
+        "matmul_tn",
+        kernels::matmul_tn,
+        naive::matmul_tn,
+        (rows, patch, cout),
+        rows * patch,
+        rows * cout,
+        (patch, rows, cout),
+        &mut rng,
+        budget,
+    ));
+
+    // dcols shape: dout(rows × cout) · W(patch × cout)ᵀ
+    out.push(bench_kernel_pair(
+        "matmul_nt",
+        kernels::matmul_nt,
+        naive::matmul_nt,
+        (rows, cout, patch),
+        rows * cout,
+        patch * cout,
+        (rows, cout, patch),
+        &mut rng,
+        budget,
+    ));
+
+    let peak = arena_peak_after_step()?;
+    Ok((out, peak))
+}
+
+/// The `kernels` object recorded in `BENCH_hotpath.json`.
+pub fn kernels_to_json(
+    kernels: &[KernelThroughput],
+    arena_peak_bytes: usize,
+    source: &str,
+) -> Json {
+    let entries: Vec<Json> = kernels
+        .iter()
+        .map(|kt| {
+            json::obj(vec![
+                ("name", json::s(kt.name.clone())),
+                ("m", json::num(kt.m as f64)),
+                ("k", json::num(kt.k as f64)),
+                ("n", json::num(kt.n as f64)),
+                ("gflops_blocked", json::num(kt.gflops_blocked)),
+                ("gflops_naive", json::num(kt.gflops_naive)),
+                ("speedup_vs_naive", json::num(kt.speedup())),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("source", json::s(source)),
+        ("arena_peak_bytes", json::num(arena_peak_bytes as f64)),
+        ("entries", Json::Arr(entries)),
+    ])
 }
 
 /// Format a simulated duration the way the paper's tables do (integer

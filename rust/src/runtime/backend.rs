@@ -15,7 +15,7 @@
 //! thread count or machine load; PJRT reports measured wall time.
 
 use std::collections::HashMap;
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
 use crate::anyhow::{anyhow, Result};
@@ -23,6 +23,7 @@ use crate::anyhow::{anyhow, Result};
 use super::literal::Literal;
 use super::metadata::Metadata;
 use super::refmath;
+use super::tensor::ScratchArena;
 
 /// Nominal reference-host throughput used to turn MAC counts into simulated
 /// host seconds (the "1-CPU reference host" the paper's profiles scale).
@@ -122,11 +123,19 @@ pub fn parse_artifact(name: &str, max_tiers: usize) -> Result<StepKind> {
 pub struct RefBackend {
     meta: Metadata,
     plans: OnceMap<StepKind>,
+    /// Scratch arenas, checked out for the duration of one execution. The
+    /// pool never grows beyond the number of concurrently executing worker
+    /// threads, and it outlives the round engine's scoped workers (which
+    /// die every round), so activation buffers are recycled across steps
+    /// AND across rounds at any thread count. Arena identity cannot affect
+    /// results (buffers are zeroed/overwritten on loan), so the pop order
+    /// is irrelevant to determinism.
+    arenas: Mutex<Vec<ScratchArena>>,
 }
 
 impl RefBackend {
     pub fn new(meta: Metadata) -> Self {
-        Self { meta, plans: OnceMap::new() }
+        Self { meta, plans: OnceMap::new(), arenas: Mutex::new(Vec::new()) }
     }
 
     fn plan(&self, artifact: &str) -> Result<(StepKind, Option<f64>)> {
@@ -160,15 +169,21 @@ impl ExecBackend for RefBackend {
     fn execute(&self, artifact: &str, inputs: &[&Literal]) -> Result<ExecOut> {
         let (kind, _) = self.plan(artifact)?;
         let mut macs = 0u64;
-        let parts = match kind {
+        let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
+        let result = match kind {
             StepKind::Client { tier, dcor } => {
-                refmath::client_step(&self.meta, tier, dcor, inputs, &mut macs)?
+                refmath::client_step(&self.meta, tier, dcor, inputs, &mut arena, &mut macs)
             }
-            StepKind::Server { tier } => refmath::server_step(&self.meta, tier, inputs, &mut macs)?,
-            StepKind::Full { sgd } => refmath::full_step(&self.meta, sgd, inputs, &mut macs)?,
-            StepKind::Eval => refmath::eval(&self.meta, inputs, &mut macs)?,
+            StepKind::Server { tier } => {
+                refmath::server_step(&self.meta, tier, inputs, &mut arena, &mut macs)
+            }
+            StepKind::Full { sgd } => {
+                refmath::full_step(&self.meta, sgd, inputs, &mut arena, &mut macs)
+            }
+            StepKind::Eval => refmath::eval(&self.meta, inputs, &mut arena, &mut macs),
         };
-        Ok(ExecOut { parts, cost_secs: macs as f64 / REF_MACS_PER_SEC })
+        self.arenas.lock().unwrap().push(arena);
+        Ok(ExecOut { parts: result?, cost_secs: macs as f64 / REF_MACS_PER_SEC })
     }
 }
 

@@ -33,6 +33,9 @@ pub struct RuntimeStats {
     pub compile_secs: f64,
     pub executions: usize,
     pub execute_secs: f64,
+    /// Largest single-arena footprint seen process-wide (reference
+    /// backend; bytes). See `runtime::tensor::arena_peak_bytes`.
+    pub arena_peak_bytes: usize,
 }
 
 /// Backend + artifact registry for one artifact set (one model config).
@@ -177,6 +180,7 @@ impl Runtime {
             compile_secs: self.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             executions: self.executions.load(Ordering::Relaxed),
             execute_secs: self.execute_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+            arena_peak_bytes: super::tensor::arena_peak_bytes(),
         }
     }
 }
@@ -229,6 +233,7 @@ mod tests {
         assert!(c1 > 0.0);
         assert_eq!(c1, c2, "reference cost model must be deterministic");
         assert_eq!(rt.stats().executions, 2);
+        assert!(rt.stats().arena_peak_bytes > 0, "eval must exercise the arena");
     }
 
     #[test]

@@ -1,0 +1,675 @@
+//! Cache-blocked, autovectorization-friendly compute kernels for the
+//! reference backend.
+//!
+//! One register-tiled core carries all three matmul orientations: plain
+//! `C = A·B` runs on the operands directly, while `matmul_tn` / `matmul_nt`
+//! first pack the transposed operand into a thread-local panel buffer so the
+//! core always streams contiguous rows. Tiles are a fixed `MR × NR` block of
+//! accumulators updated in ascending reduction order, which pins the exact
+//! f32 operation sequence per output element — results are **bit-identical**
+//! to the scalar reference loops (`naive`) for finite inputs, independent of
+//! tile boundaries and of how row panels are split across threads.
+//!
+//! Optional intra-step parallelism: `set_intra_threads(n)` lets a single
+//! matmul split its output row panels over scoped worker threads
+//! (`coordinator::parallel::join_scoped`). Panel boundaries do vary with
+//! the knob, but each output element is computed by exactly one worker in
+//! the same pinned reduction order whatever the split — so results are
+//! bit-identical for every setting, including 1 (no fork at all). The knob
+//! is per-process (default 1 = off); it is meant for `threads = 1` round
+//! execution where cores would otherwise idle during one big client's
+//! step.
+//!
+//! Epilogues (`Epilogue::Bias`, `Epilogue::BiasRelu`) are fused into the
+//! tile store, so dense heads do not re-walk their output.
+//!
+//! im2col / col2im write into caller-provided buffers (the arena's column
+//! buffer) instead of allocating per call.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::tensor::Dims4;
+use crate::coordinator::parallel::{join_scoped, resolve_threads};
+
+/// Rows per register tile (output rows accumulated simultaneously).
+pub const MR: usize = 4;
+/// Columns per register tile (f32 lanes held in accumulators).
+pub const NR: usize = 16;
+
+/// Minimum multiply-accumulate count before a matmul will fork row panels;
+/// below this the scoped-thread spawn costs more than it saves.
+const PAR_MIN_MACS: usize = 1 << 20;
+
+static INTRA_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the intra-step parallelism knob: worker threads a single matmul may
+/// split row panels over (0 = all cores, 1 = off). Process-wide; results
+/// are bit-identical for every setting.
+pub fn set_intra_threads(n: usize) {
+    INTRA_THREADS.store(resolve_threads(n), Ordering::Relaxed);
+}
+
+/// Current intra-step parallelism setting.
+pub fn intra_threads() -> usize {
+    INTRA_THREADS.load(Ordering::Relaxed).max(1)
+}
+
+thread_local! {
+    /// Packing buffer for the transposed operand of `matmul_tn`/`matmul_nt`.
+    static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Operation fused into the tile store.
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    None,
+    /// `c[i][j] += bias[j]`.
+    Bias(&'a [f32]),
+    /// `c[i][j] = max(0, c[i][j] + bias[j])`.
+    BiasRelu(&'a [f32]),
+}
+
+// ---------------------------------------------------------------------
+// register-tiled core: C(M,N) = A(M,K) · B(K,N)
+// ---------------------------------------------------------------------
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn store_tile(
+    c: &mut [f32],
+    n: usize,
+    i0: usize,
+    mr: usize,
+    j0: usize,
+    nr: usize,
+    acc: &[[f32; NR]; MR],
+    ep: Epilogue,
+) {
+    for r in 0..mr {
+        let base = (i0 + r) * n + j0;
+        let crow = &mut c[base..base + nr];
+        match ep {
+            Epilogue::None => crow.copy_from_slice(&acc[r][..nr]),
+            Epilogue::Bias(bias) => {
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv = acc[r][j] + bias[j0 + j];
+                }
+            }
+            Epilogue::BiasRelu(bias) => {
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv = (acc[r][j] + bias[j0 + j]).max(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Full MR×NR tile: constant trip counts so the inner loop vectorizes.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn mm_tile_full(
+    c: &mut [f32],
+    a: &[f32],
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    j0: usize,
+    ep: Epilogue,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let base = kk * n + j0;
+        let brow = &b[base..base + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * k + kk];
+            if av == 0.0 {
+                continue; // skip-zero: bit-neutral for finite data (see tests)
+            }
+            for (x, &bv) in accr.iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    store_tile(c, n, i0, MR, j0, NR, &acc, ep);
+}
+
+/// Edge tile with runtime `mr`/`nr` bounds — same per-element op order.
+#[allow(clippy::too_many_arguments)]
+fn mm_tile_edge(
+    c: &mut [f32],
+    a: &[f32],
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    mr: usize,
+    j0: usize,
+    nr: usize,
+    ep: Epilogue,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let base = kk * n + j0;
+        let brow = &b[base..base + nr];
+        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i0 + r) * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            for (x, &bv) in accr[..nr].iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    store_tile(c, n, i0, mr, j0, nr, &acc, ep);
+}
+
+/// One contiguous row panel: `c` is `m × n`, `a` is `m × k`.
+fn mm_panel(c: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize, ep: Epilogue) {
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            if mr == MR && nr == NR {
+                mm_tile_full(c, a, k, b, n, i0, j0, ep);
+            } else {
+                mm_tile_edge(c, a, k, b, n, i0, mr, j0, nr, ep);
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// Row-panel split for `t` workers: contiguous panels aligned to MR (only
+/// the last panel carries edge rows). Boundaries depend on `t`, but every
+/// output element is computed by exactly one worker in the same reduction
+/// order, so the result is bit-identical for any `t`.
+fn split_rows(m: usize, t: usize) -> Vec<usize> {
+    let per = (m.div_ceil(t).div_ceil(MR) * MR).max(MR);
+    let mut lens = Vec::with_capacity(t);
+    let mut start = 0;
+    while start < m {
+        let len = per.min(m - start);
+        lens.push(len);
+        start += len;
+    }
+    lens
+}
+
+fn panel_threads(m: usize, macs: usize) -> usize {
+    let t = intra_threads();
+    if t <= 1 || m < 2 * MR || macs < PAR_MIN_MACS {
+        1
+    } else {
+        t.min(m / MR)
+    }
+}
+
+/// Dispatch a full matmul: sequential panel, or row panels over scoped
+/// threads when the intra-step knob and the problem size justify it.
+fn mm_run(c: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize, ep: Epilogue) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let threads = panel_threads(m, m * k * n);
+    if threads <= 1 {
+        mm_panel(c, a, m, k, b, n, ep);
+        return;
+    }
+    let mut work: Vec<(&mut [f32], &[f32])> = Vec::with_capacity(threads);
+    let mut crem: &mut [f32] = c;
+    let mut arem: &[f32] = a;
+    for len in split_rows(m, threads) {
+        let (chead, ctail) = crem.split_at_mut(len * n);
+        let (ahead, atail) = arem.split_at(len * k);
+        work.push((chead, ahead));
+        crem = ctail;
+        arem = atail;
+    }
+    join_scoped(work, |(cp, ap)| {
+        let rows = cp.len() / n;
+        mm_panel(cp, ap, rows, k, b, n, ep);
+    });
+}
+
+// ---------------------------------------------------------------------
+// public matmul entry points
+// ---------------------------------------------------------------------
+
+/// C(M,N) = A(M,K) · B(K,N), with a fused epilogue.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_into(
+    c: &mut [f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    ep: Epilogue,
+    macs: &mut u64,
+) {
+    *macs += (m * k * n) as u64;
+    mm_run(c, a, m, k, b, n, ep);
+}
+
+/// C(K,N) = A(M,K)ᵀ · B(M,N): packs Aᵀ, then runs the same core.
+pub fn matmul_tn_into(
+    c: &mut [f32],
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    macs: &mut u64,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    *macs += (m * k * n) as u64;
+    PACK.with(|p| {
+        let mut at = p.borrow_mut();
+        transpose_into(&mut at, a, m, k);
+        mm_run(c, &at, k, m, b, n, Epilogue::None);
+    });
+}
+
+/// C(M,K) = A(M,N) · B(K,N)ᵀ: packs Bᵀ, then runs the same core.
+pub fn matmul_nt_into(
+    c: &mut [f32],
+    a: &[f32],
+    m: usize,
+    n: usize,
+    b: &[f32],
+    k: usize,
+    macs: &mut u64,
+) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * k);
+    *macs += (m * n * k) as u64;
+    PACK.with(|p| {
+        let mut bt = p.borrow_mut();
+        transpose_into(&mut bt, b, k, n);
+        mm_run(c, a, m, n, &bt, k, Epilogue::None);
+    });
+}
+
+/// Allocating wrapper over [`matmul_into`].
+pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(&mut c, a, m, k, b, n, Epilogue::None, macs);
+    c
+}
+
+/// Allocating `A·B + bias` (dense-head forward, fused bias add).
+pub fn matmul_bias(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    b: &[f32],
+    n: usize,
+    bias: &[f32],
+    macs: &mut u64,
+) -> Vec<f32> {
+    debug_assert_eq!(bias.len(), n);
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(&mut c, a, m, k, b, n, Epilogue::Bias(bias), macs);
+    c
+}
+
+/// Allocating wrapper over [`matmul_tn_into`].
+pub fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
+    let mut c = vec![0.0f32; k * n];
+    matmul_tn_into(&mut c, a, m, k, b, n, macs);
+    c
+}
+
+/// Allocating wrapper over [`matmul_nt_into`].
+pub fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], k: usize, macs: &mut u64) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * k];
+    matmul_nt_into(&mut c, a, m, n, b, k, macs);
+    c
+}
+
+/// Cache-blocked transpose: `src` is `rows × cols`, `dst` becomes
+/// `cols × rows`.
+fn transpose_into(dst: &mut Vec<f32>, src: &[f32], rows: usize, cols: usize) {
+    debug_assert_eq!(src.len(), rows * cols);
+    // no clear(): every element is overwritten below, so only a length
+    // change needs (re)initialization
+    dst.resize(rows * cols, 0.0);
+    const TB: usize = 32;
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = rows.min(r0 + TB);
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = cols.min(c0 + TB);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// im2col / col2im (NHWC, (i, j, c) column ordering)
+// ---------------------------------------------------------------------
+
+/// Geometry of the im2col matrix for input `xd` under a (kh, kw, stride,
+/// pad) window: `(rows, patch_len, ho, wo)`.
+pub fn im2col_geom(
+    xd: Dims4,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (usize, usize, usize, usize) {
+    let [b, h, w, c] = xd;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    (b * ho * wo, kh * kw * c, ho, wo)
+}
+
+/// (B,H,W,C) → (B·H'·W', kh·kw·C) patches into `out` (pre-zeroed, exact
+/// size — padding positions are the zeros the caller provided).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
+    out: &mut [f32],
+    x: &[f32],
+    xd: Dims4,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let [b, h, w, c] = xd;
+    let (rows, k, ho, wo) = im2col_geom(xd, kh, kw, stride, pad);
+    debug_assert_eq!(out.len(), rows * k);
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * k;
+                for i in 0..kh {
+                    let py = oy * stride + i;
+                    if py < pad || py >= h + pad {
+                        continue;
+                    }
+                    let iy = py - pad;
+                    for j in 0..kw {
+                        let px = ox * stride + j;
+                        if px < pad || px >= w + pad {
+                            continue;
+                        }
+                        let ix = px - pad;
+                        let src = ((bi * h + iy) * w + ix) * c;
+                        let dst = row + (i * kw + j) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scatter-add transpose of [`im2col_into`]; `dx` must be pre-zeroed and of
+/// exactly `b·h·w·c` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn col2im_into(
+    dx: &mut [f32],
+    cols: &[f32],
+    xd: Dims4,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) {
+    let [b, h, w, c] = xd;
+    let (rows, k, ho, wo) = im2col_geom(xd, kh, kw, stride, pad);
+    debug_assert_eq!(cols.len(), rows * k);
+    debug_assert_eq!(dx.len(), b * h * w * c);
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((bi * ho + oy) * wo + ox) * k;
+                for i in 0..kh {
+                    let py = oy * stride + i;
+                    if py < pad || py >= h + pad {
+                        continue;
+                    }
+                    let iy = py - pad;
+                    for j in 0..kw {
+                        let px = ox * stride + j;
+                        if px < pad || px >= w + pad {
+                            continue;
+                        }
+                        let ix = px - pad;
+                        let dst = ((bi * h + iy) * w + ix) * c;
+                        let src = row + (i * kw + j) * c;
+                        for cc in 0..c {
+                            dx[dst + cc] += cols[src + cc];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar reference kernels (PR-1 loops) — the baseline the property tests
+// and the GFLOP/s micro-bench compare against
+// ---------------------------------------------------------------------
+
+pub mod naive {
+    //! The pre-blocking scalar kernels, verbatim. Per output element these
+    //! accumulate in the same reduction order as the tiled core, so for
+    //! finite inputs the blocked kernels reproduce them bit-for-bit.
+
+    /// C(M,N) = A(M,K) · B(K,N).
+    pub fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        *macs += (m * k * n) as u64;
+        c
+    }
+
+    /// C(K,N) = A(M,K)ᵀ · B(M,N).
+    pub fn matmul_tn(
+        a: &[f32],
+        m: usize,
+        k: usize,
+        b: &[f32],
+        n: usize,
+        macs: &mut u64,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; k * n];
+        for mi in 0..m {
+            let arow = &a[mi * k..(mi + 1) * k];
+            let brow = &b[mi * n..(mi + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+        *macs += (m * k * n) as u64;
+        c
+    }
+
+    /// C(M,K) = A(M,N) · B(K,N)ᵀ.
+    pub fn matmul_nt(
+        a: &[f32],
+        m: usize,
+        n: usize,
+        b: &[f32],
+        k: usize,
+        macs: &mut u64,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * k];
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let brow = &b[kk * n..(kk + 1) * n];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                c[i * k + kk] = acc;
+            }
+        }
+        *macs += (m * n * k) as u64;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn rand_vec(rng: &mut Rng64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise() {
+        let mut rng = Rng64::seed_from_u64(7);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (4, 16, 16), (5, 17, 19), (33, 7, 40)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let (mut m1, mut m2) = (0u64, 0u64);
+            let want = naive::matmul(&a, m, k, &b, n, &mut m1);
+            let got = matmul(&a, m, k, &b, n, &mut m2);
+            assert_eq!(m1, m2);
+            assert_eq!(want, got, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn blocked_tn_nt_match_naive_bitwise() {
+        let mut rng = Rng64::seed_from_u64(8);
+        for &(m, k, n) in &[(2, 3, 4), (9, 20, 5), (31, 18, 17)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, m * n);
+            let mut mc = 0u64;
+            assert_eq!(
+                naive::matmul_tn(&a, m, k, &b, n, &mut mc),
+                matmul_tn(&a, m, k, &b, n, &mut mc),
+                "tn ({m},{k},{n})"
+            );
+            let a2 = rand_vec(&mut rng, m * n);
+            let b2 = rand_vec(&mut rng, k * n);
+            assert_eq!(
+                naive::matmul_nt(&a2, m, n, &b2, k, &mut mc),
+                matmul_nt(&a2, m, n, &b2, k, &mut mc),
+                "nt ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn epilogues_fuse_bias_and_relu() {
+        let mut rng = Rng64::seed_from_u64(9);
+        let (m, k, n) = (5, 7, 11);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        let mut mc = 0u64;
+        let plain = matmul(&a, m, k, &b, n, &mut mc);
+        let with_bias = matmul_bias(&a, m, k, &b, n, &bias, &mut mc);
+        let mut with_relu = vec![0.0f32; m * n];
+        matmul_into(&mut with_relu, &a, m, k, &b, n, Epilogue::BiasRelu(&bias), &mut mc);
+        for i in 0..m {
+            for j in 0..n {
+                let idx = i * n + j;
+                assert_eq!(with_bias[idx], plain[idx] + bias[j]);
+                assert_eq!(with_relu[idx], (plain[idx] + bias[j]).max(0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn intra_thread_split_is_bit_identical() {
+        // big enough to clear PAR_MIN_MACS so the fork actually happens
+        let (m, k, n) = (160, 96, 96);
+        let mut rng = Rng64::seed_from_u64(10);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut mc = 0u64;
+        set_intra_threads(1);
+        let seq = matmul(&a, m, k, &b, n, &mut mc);
+        set_intra_threads(4);
+        let par = matmul(&a, m, k, &b, n, &mut mc);
+        set_intra_threads(1);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn split_rows_covers_exactly() {
+        for m in [1usize, 4, 7, 64, 65, 130] {
+            for t in [1usize, 2, 3, 8] {
+                let lens = split_rows(m, t);
+                assert_eq!(lens.iter().sum::<usize>(), m, "m={m} t={t}");
+                assert!(lens.iter().all(|&l| l > 0));
+                // only the last panel may be MR-unaligned
+                for &l in &lens[..lens.len().saturating_sub(1)] {
+                    assert_eq!(l % MR, 0, "m={m} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng64::seed_from_u64(11);
+        let (r, c) = (37, 21);
+        let src = rand_vec(&mut rng, r * c);
+        let mut t = Vec::new();
+        transpose_into(&mut t, &src, r, c);
+        let mut back = Vec::new();
+        transpose_into(&mut back, &t, c, r);
+        assert_eq!(src, back);
+    }
+
+    #[test]
+    fn im2col_col2im_shapes_and_identity_window() {
+        // 1x1 window, stride 1, no pad: im2col is the identity matrix copy
+        let mut rng = Rng64::seed_from_u64(12);
+        let xd: Dims4 = [2, 3, 3, 4];
+        let x = rand_vec(&mut rng, 2 * 3 * 3 * 4);
+        let (rows, k, ho, wo) = im2col_geom(xd, 1, 1, 1, 0);
+        assert_eq!((rows, k, ho, wo), (18, 4, 3, 3));
+        let mut cols = vec![0.0f32; rows * k];
+        im2col_into(&mut cols, &x, xd, 1, 1, 1, 0);
+        assert_eq!(cols, x);
+        let mut dx = vec![0.0f32; x.len()];
+        col2im_into(&mut dx, &cols, xd, 1, 1, 1, 0);
+        assert_eq!(dx, x);
+    }
+}

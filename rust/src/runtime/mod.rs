@@ -6,7 +6,12 @@
 //!   ported from `python/compile/` (`refmath`), with metadata and initial
 //!   parameters synthesized from the built-in config table (`spec`). Costs
 //!   are a deterministic MAC-count model, which makes whole simulated runs
-//!   bit-reproducible and thread-count independent.
+//!   bit-reproducible and thread-count independent. Under `refmath` sit the
+//!   tensor/kernel layers: `tensor` (shape-carrying storage + the per-client
+//!   `ScratchArena` that holds each activation exactly once across fwd/bwd)
+//!   and `kernels` (register-tiled packed-panel matmuls with fused
+//!   bias/ReLU epilogues and optional deterministic intra-step row-panel
+//!   parallelism).
 //! * **pjrt** (feature `pjrt`) — loads the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text) and executes them on the CPU PJRT
 //!   client via the `xla` crate.
@@ -14,12 +19,14 @@
 pub mod artifact;
 pub mod backend;
 pub mod client;
+pub mod kernels;
 pub mod literal;
 pub mod metadata;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod refmath;
 pub mod spec;
+pub mod tensor;
 
 pub use artifact::{ClientStepOut, FullStepOut, ServerStepOut, StepEngine, TrainState};
 pub use backend::{ExecBackend, ExecOut, RefBackend, StepKind};
@@ -27,3 +34,4 @@ pub use client::{Runtime, RuntimeStats};
 pub use literal::Literal;
 pub use metadata::{load_f32_bin, Metadata, ParamEntry, TierMeta};
 pub use spec::ModelConfig;
+pub use tensor::{arena_peak_bytes, ActRef, Dims4, ScratchArena, Tensor, TensorView};

@@ -7,6 +7,16 @@
 //! with hand-written backward passes (validated against finite differences —
 //! see the tests below).
 //!
+//! Since the tensor/kernel refactor this module is a *model walker*, not a
+//! math library: all conv/dense FLOPs run through the register-tiled kernels
+//! in [`super::kernels`] (fused bias epilogues, optional intra-step row-panel
+//! parallelism), and every sizable buffer — im2col columns and the forward
+//! activations the backward pass replays — lives in a per-step
+//! [`ScratchArena`](super::tensor::ScratchArena). Activations are held
+//! exactly once: a layer output's `ActRef` serves both as the backward
+//! cache entry and as the next layer's saved input (they used to be two
+//! separate `Vec` copies).
+//!
 //! Everything here is deterministic: fixed-order f32 arithmetic with f64
 //! reduction accumulators, no wall-clock anywhere. Each function accumulates
 //! multiply-accumulate counts into a `macs` counter; the backend converts
@@ -15,156 +25,17 @@
 
 use crate::anyhow::Result;
 
+use super::kernels;
 use super::literal::{self as lit, Literal};
 use super::metadata::{AdamMeta, Metadata};
 use super::spec::{gn_groups, GN_EPS};
-
-type Dims4 = [usize; 4];
+use super::tensor::{ActRef, Dims4, ScratchArena, TensorView};
 
 const DCOR_EPS: f64 = 1e-9;
 
 // ---------------------------------------------------------------------
-// matmul kernels (the L1 substitute: all conv/dense FLOPs land here)
-// ---------------------------------------------------------------------
-
-/// C(M,N) = A(M,K) · B(K,N).
-fn matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
-    *macs += (m * k * n) as u64;
-    c
-}
-
-/// C(K,N) = A(M,K)ᵀ · B(M,N).
-fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
-    let mut c = vec![0.0f32; k * n];
-    for mi in 0..m {
-        let arow = &a[mi * k..(mi + 1) * k];
-        let brow = &b[mi * n..(mi + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[kk * n..(kk + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
-    *macs += (m * k * n) as u64;
-    c
-}
-
-/// C(M,K) = A(M,N) · B(K,N)ᵀ.
-fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], k: usize, macs: &mut u64) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for kk in 0..k {
-            let brow = &b[kk * n..(kk + 1) * n];
-            let mut acc = 0.0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            c[i * k + kk] = acc;
-        }
-    }
-    *macs += (m * n * k) as u64;
-    c
-}
-
-// ---------------------------------------------------------------------
 // conv2d = im2col + matmul (NHWC, weights (kh, kw, cin, cout))
 // ---------------------------------------------------------------------
-
-/// (B,H,W,C) → (B·H'·W', kh·kw·C) patches with (i, j, c) column ordering.
-fn im2col(
-    x: &[f32],
-    xd: Dims4,
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad: usize,
-) -> (Vec<f32>, usize, usize) {
-    let [b, h, w, c] = xd;
-    let ho = (h + 2 * pad - kh) / stride + 1;
-    let wo = (w + 2 * pad - kw) / stride + 1;
-    let k = kh * kw * c;
-    let mut out = vec![0.0f32; b * ho * wo * k];
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = ((bi * ho + oy) * wo + ox) * k;
-                for i in 0..kh {
-                    let py = oy * stride + i;
-                    if py < pad || py >= h + pad {
-                        continue;
-                    }
-                    let iy = py - pad;
-                    for j in 0..kw {
-                        let px = ox * stride + j;
-                        if px < pad || px >= w + pad {
-                            continue;
-                        }
-                        let ix = px - pad;
-                        let src = ((bi * h + iy) * w + ix) * c;
-                        let dst = row + (i * kw + j) * c;
-                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
-                    }
-                }
-            }
-        }
-    }
-    (out, b * ho * wo, k)
-}
-
-/// Scatter-add transpose of [`im2col`].
-fn col2im(cols: &[f32], xd: Dims4, kh: usize, kw: usize, stride: usize, pad: usize) -> Vec<f32> {
-    let [b, h, w, c] = xd;
-    let ho = (h + 2 * pad - kh) / stride + 1;
-    let wo = (w + 2 * pad - kw) / stride + 1;
-    let k = kh * kw * c;
-    let mut dx = vec![0.0f32; b * h * w * c];
-    for bi in 0..b {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = ((bi * ho + oy) * wo + ox) * k;
-                for i in 0..kh {
-                    let py = oy * stride + i;
-                    if py < pad || py >= h + pad {
-                        continue;
-                    }
-                    let iy = py - pad;
-                    for j in 0..kw {
-                        let px = ox * stride + j;
-                        if px < pad || px >= w + pad {
-                            continue;
-                        }
-                        let ix = px - pad;
-                        let dst = ((bi * h + iy) * w + ix) * c;
-                        let src = row + (i * kw + j) * c;
-                        for cc in 0..c {
-                            dx[dst + cc] += cols[src + cc];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    dx
-}
 
 struct ConvCache {
     off: usize,
@@ -174,7 +45,8 @@ struct ConvCache {
     cout: usize,
     stride: usize,
     pad: usize,
-    x: Vec<f32>,
+    /// Saved input (arena slot shared with the producing layer's cache).
+    x: ActRef,
     xd: Dims4,
 }
 
@@ -182,38 +54,60 @@ struct ConvCache {
 fn conv_fwd(
     p: &[f32],
     off: usize,
-    x: Vec<f32>,
-    xd: Dims4,
+    x: ActRef,
     kh: usize,
     kw: usize,
     cin: usize,
     cout: usize,
     stride: usize,
     pad: usize,
+    arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> (Vec<f32>, Dims4, ConvCache) {
+    let xd = arena.act_dims(x);
     debug_assert_eq!(xd[3], cin);
-    let (cols, rows, k) = im2col(&x, xd, kh, kw, stride, pad);
+    let (rows, k) = arena.im2col(x, kh, kw, stride, pad);
+    let mut out = arena.take_buf_uninit(rows * cout);
     let w = &p[off..off + kh * kw * cin * cout];
-    let out = matmul(&cols, rows, k, w, cout, macs);
+    kernels::matmul_into(&mut out, arena.cols(), rows, k, w, cout, kernels::Epilogue::None, macs);
     let ho = (xd[1] + 2 * pad - kh) / stride + 1;
     let wo = (xd[2] + 2 * pad - kw) / stride + 1;
     let od = [xd[0], ho, wo, cout];
     (out, od, ConvCache { off, kh, kw, cin, cout, stride, pad, x, xd })
 }
 
-/// dW accumulated into `grads`; returns dX. Patches are recomputed from the
-/// cached input (memory-for-compute trade on the backward pass).
-fn conv_bwd(p: &[f32], c: &ConvCache, dout: &[f32], grads: &mut [f32], macs: &mut u64) -> Vec<f32> {
-    let (cols, rows, k) = im2col(&c.x, c.xd, c.kh, c.kw, c.stride, c.pad);
+/// dW accumulated into `grads`; returns dX (empty when `need_dx` is false —
+/// the bottom-most layer's data gradient has no consumer, so its
+/// matmul_nt + col2im are skipped entirely). Patches are replayed from the
+/// arena-cached input into the shared column buffer (memory-for-compute
+/// trade on the backward pass, now without a per-layer allocation).
+#[allow(clippy::too_many_arguments)]
+fn conv_bwd(
+    p: &[f32],
+    c: &ConvCache,
+    dout: &[f32],
+    grads: &mut [f32],
+    arena: &mut ScratchArena,
+    macs: &mut u64,
+    need_dx: bool,
+) -> Vec<f32> {
+    let (rows, k) = arena.im2col(c.x, c.kh, c.kw, c.stride, c.pad);
     let wsz = c.kh * c.kw * c.cin * c.cout;
-    let dw = matmul_tn(&cols, rows, k, dout, c.cout, macs);
+    let mut dw = arena.take_buf_uninit(wsz);
+    kernels::matmul_tn_into(&mut dw, arena.cols(), rows, k, dout, c.cout, macs);
     for (g, d) in grads[c.off..c.off + wsz].iter_mut().zip(&dw) {
         *g += d;
     }
+    arena.recycle(dw);
+    if !need_dx {
+        return Vec::new();
+    }
     let w = &p[c.off..c.off + wsz];
-    let dcols = matmul_nt(dout, rows, c.cout, w, k, macs);
-    col2im(&dcols, c.xd, c.kh, c.kw, c.stride, c.pad)
+    let dcols = arena.dcols_mut(rows * k);
+    kernels::matmul_nt_into(dcols, dout, rows, c.cout, w, k, macs);
+    let mut dx = arena.take_buf(c.xd.iter().product());
+    kernels::col2im_into(&mut dx, arena.dcols(), c.xd, c.kh, c.kw, c.stride, c.pad);
+    dx
 }
 
 // ---------------------------------------------------------------------
@@ -225,19 +119,26 @@ struct GnCache {
     boff: usize,
     d: Dims4,
     groups: usize,
-    /// Normalized activations (pre scale/bias).
-    y: Vec<f32>,
+    /// Normalized activations (pre scale/bias), arena-held.
+    y: ActRef,
     /// Per-(batch, group) standard deviation.
     sigma: Vec<f64>,
 }
 
-fn gn_fwd(p: &[f32], soff: usize, boff: usize, x: &[f32], d: Dims4) -> (Vec<f32>, GnCache) {
+fn gn_fwd(
+    p: &[f32],
+    soff: usize,
+    boff: usize,
+    x: &[f32],
+    d: Dims4,
+    arena: &mut ScratchArena,
+) -> (Vec<f32>, GnCache) {
     let [b, h, w, c] = d;
     let g = gn_groups(c);
     let cg = c / g;
     let m = (h * w * cg) as f64;
-    let mut y = vec![0.0f32; x.len()];
-    let mut out = vec![0.0f32; x.len()];
+    let mut y = arena.take_buf_uninit(x.len());
+    let mut out = arena.take_buf_uninit(x.len());
     let mut sigma = vec![0.0f64; b * g];
     for bi in 0..b {
         for gi in 0..g {
@@ -270,18 +171,26 @@ fn gn_fwd(p: &[f32], soff: usize, boff: usize, x: &[f32], d: Dims4) -> (Vec<f32>
             }
         }
     }
+    let y = arena.store_vec(y, d);
     (out, GnCache { soff, boff, d, groups: g, y, sigma })
 }
 
 /// Standard normalization backward: with y = (x−μ)/σ over each group,
 /// dx = (dy − mean(dy) − y·mean(dy∘y)) / σ. dscale/dbias accumulate into
 /// `grads`.
-fn gn_bwd(p: &[f32], cache: &GnCache, dout: &[f32], grads: &mut [f32]) -> Vec<f32> {
+fn gn_bwd(
+    p: &[f32],
+    cache: &GnCache,
+    dout: &[f32],
+    grads: &mut [f32],
+    arena: &mut ScratchArena,
+) -> Vec<f32> {
     let [b, h, w, c] = cache.d;
     let g = cache.groups;
     let cg = c / g;
     let m = (h * w * cg) as f64;
-    let mut dx = vec![0.0f32; dout.len()];
+    let mut dx = arena.take_buf_uninit(dout.len());
+    let y = arena.act_data(cache.y);
     for bi in 0..b {
         for gi in 0..g {
             let (mut sdy, mut sdyy) = (0.0f64, 0.0f64);
@@ -293,7 +202,7 @@ fn gn_bwd(p: &[f32], cache: &GnCache, dout: &[f32], grads: &mut [f32]) -> Vec<f3
                         let ch = gi * cg + cc;
                         let dy = (dout[idx] * p[cache.soff + ch]) as f64;
                         sdy += dy;
-                        sdyy += dy * cache.y[idx] as f64;
+                        sdyy += dy * y[idx] as f64;
                     }
                 }
             }
@@ -307,7 +216,7 @@ fn gn_bwd(p: &[f32], cache: &GnCache, dout: &[f32], grads: &mut [f32]) -> Vec<f3
                         let idx = base + cc;
                         let ch = gi * cg + cc;
                         let dy = (dout[idx] * p[cache.soff + ch]) as f64;
-                        dx[idx] = ((dy - mdy - cache.y[idx] as f64 * mdyy) / sg) as f32;
+                        dx[idx] = ((dy - mdy - y[idx] as f64 * mdyy) / sg) as f32;
                     }
                 }
             }
@@ -321,7 +230,7 @@ fn gn_bwd(p: &[f32], cache: &GnCache, dout: &[f32], grads: &mut [f32]) -> Vec<f3
                 for ch in 0..c {
                     let idx = base + ch;
                     grads[cache.boff + ch] += dout[idx];
-                    grads[cache.soff + ch] += dout[idx] * cache.y[idx];
+                    grads[cache.soff + ch] += dout[idx] * y[idx];
                 }
             }
         }
@@ -358,17 +267,17 @@ struct HeadCache {
     pooled: Vec<f32>,
 }
 
-/// avgpool over (H, W) then fc: logits = mean_hw(x) · W + b.
+/// avgpool over (H, W) then fc: logits = mean_hw(x) · W + b. The bias add
+/// is fused into the matmul epilogue.
 fn head_fwd(
     p: &[f32],
     woff: usize,
     boff: usize,
-    x: &[f32],
-    xd: Dims4,
+    x: TensorView<'_>,
     ncls: usize,
     macs: &mut u64,
 ) -> (Vec<f32>, HeadCache) {
-    let [b, h, w, c] = xd;
+    let [b, h, w, c] = x.dims;
     let inv = 1.0 / (h * w) as f64;
     let mut pooled = vec![0.0f32; b * c];
     for bi in 0..b {
@@ -376,19 +285,22 @@ fn head_fwd(
             let mut s = 0.0f64;
             for hy in 0..h {
                 for wx in 0..w {
-                    s += x[((bi * h + hy) * w + wx) * c + ch] as f64;
+                    s += x.data[((bi * h + hy) * w + wx) * c + ch] as f64;
                 }
             }
             pooled[bi * c + ch] = (s * inv) as f32;
         }
     }
-    let mut logits = matmul(&pooled, b, c, &p[woff..woff + c * ncls], ncls, macs);
-    for bi in 0..b {
-        for j in 0..ncls {
-            logits[bi * ncls + j] += p[boff + j];
-        }
-    }
-    (logits, HeadCache { woff, boff, ncls, xd, pooled })
+    let logits = kernels::matmul_bias(
+        &pooled,
+        b,
+        c,
+        &p[woff..woff + c * ncls],
+        ncls,
+        &p[boff..boff + ncls],
+        macs,
+    );
+    (logits, HeadCache { woff, boff, ncls, xd: x.dims, pooled })
 }
 
 fn head_bwd(
@@ -396,11 +308,13 @@ fn head_bwd(
     cache: &HeadCache,
     dlogits: &[f32],
     grads: &mut [f32],
+    arena: &mut ScratchArena,
     macs: &mut u64,
+    need_dx: bool,
 ) -> Vec<f32> {
     let [b, h, w, c] = cache.xd;
     let ncls = cache.ncls;
-    let dw = matmul_tn(&cache.pooled, b, c, dlogits, ncls, macs);
+    let dw = kernels::matmul_tn(&cache.pooled, b, c, dlogits, ncls, macs);
     for (g, d) in grads[cache.woff..cache.woff + c * ncls].iter_mut().zip(&dw) {
         *g += d;
     }
@@ -409,9 +323,15 @@ fn head_bwd(
             grads[cache.boff + j] += dlogits[bi * ncls + j];
         }
     }
-    let dpooled = matmul_nt(dlogits, b, ncls, &p[cache.woff..cache.woff + c * ncls], c, macs);
+    if !need_dx {
+        return Vec::new();
+    }
+    let dpooled =
+        kernels::matmul_nt(dlogits, b, ncls, &p[cache.woff..cache.woff + c * ncls], c, macs);
     let inv = 1.0 / (h * w) as f32;
-    let mut dx = vec![0.0f32; b * h * w * c];
+    // arena-loaned: this activation-sized gradient flows into
+    // backward_modules and is recycled there, so it must be tracked
+    let mut dx = arena.take_buf_uninit(b * h * w * c);
     for bi in 0..b {
         for hy in 0..h {
             for wx in 0..w {
@@ -581,15 +501,15 @@ fn dcor_with_grad(x: &[f32], z: &[f32], n: usize) -> (f32, Vec<f32>) {
 // ---------------------------------------------------------------------
 
 enum Item {
-    Stem { conv: ConvCache, gn: GnCache, relu_out: Vec<f32> },
+    Stem { conv: ConvCache, gn: GnCache, out: ActRef },
     Block {
         conv1: ConvCache,
         gn1: GnCache,
-        relu1_out: Vec<f32>,
+        relu1: ActRef,
         conv2: ConvCache,
         gn2: GnCache,
         proj: Option<(ConvCache, GnCache)>,
-        out: Vec<f32>,
+        out: ActRef,
     },
     Head(HeadCache),
 }
@@ -600,17 +520,18 @@ fn take(cur: &mut usize, n: usize) -> usize {
     o
 }
 
-/// Run modules md_lo..md_hi; md8 returns logits (rank 2), otherwise an NHWC
-/// activation. Parameters are consumed off `p` in flat-layout order; the
-/// number of parameters consumed is returned for validation against the
-/// metadata split geometry.
+/// Run modules md_lo..md_hi; md8 returns logits (rank 2), otherwise an owned
+/// copy of the NHWC cut activation (the arena keeps the cached copy the
+/// backward pass replays). Parameters are consumed off `p` in flat-layout
+/// order; the number of parameters consumed is returned for validation
+/// against the metadata split geometry.
 fn forward_modules(
     meta: &Metadata,
     p: &[f32],
-    mut x: Vec<f32>,
-    mut xd: Dims4,
+    x0: ActRef,
     lo: usize,
     hi: usize,
+    arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> Result<(Vec<f32>, Vec<usize>, Vec<Item>, usize)> {
     crate::anyhow::ensure!(
@@ -620,25 +541,29 @@ fn forward_modules(
     let mut cur = 0usize;
     let mut items = Vec::new();
     let mut cin = if lo == 1 { meta.in_channels } else { meta.widths[lo - 2] };
+    let mut xcur = x0;
+    let mut xd = arena.act_dims(x0);
     crate::anyhow::ensure!(xd[3] == cin, "input has {} channels, module {lo} expects {cin}", xd[3]);
     for module in lo..=hi {
         if module == 1 {
             let w0 = meta.widths[0];
             let woff = take(&mut cur, 3 * 3 * cin * w0);
-            let (h1, d1, c1) = conv_fwd(p, woff, x, xd, 3, 3, cin, w0, 1, 1, macs);
+            let (h1, d1, c1) = conv_fwd(p, woff, xcur, 3, 3, cin, w0, 1, 1, arena, macs);
             let soff = take(&mut cur, w0);
             let boff = take(&mut cur, w0);
-            let (mut g1, gc) = gn_fwd(p, soff, boff, &h1, d1);
+            let (mut g1, gc) = gn_fwd(p, soff, boff, &h1, d1, arena);
+            arena.recycle(h1);
             relu(&mut g1);
-            items.push(Item::Stem { conv: c1, gn: gc, relu_out: g1.clone() });
-            x = g1;
+            let out = arena.store_vec(g1, d1);
+            items.push(Item::Stem { conv: c1, gn: gc, out });
+            xcur = out;
             xd = d1;
             cin = w0;
         } else if module == 8 {
             let ncls = meta.num_classes;
             let woff = take(&mut cur, cin * ncls);
             let boff = take(&mut cur, ncls);
-            let (logits, hc) = head_fwd(p, woff, boff, &x, xd, ncls, macs);
+            let (logits, hc) = head_fwd(p, woff, boff, arena.act(xcur), ncls, macs);
             let b = xd[0];
             items.push(Item::Head(hc));
             return Ok((logits, vec![b, ncls], items, cur));
@@ -650,93 +575,118 @@ fn forward_modules(
                 let need_proj = stride != 1 || cin != cout;
                 let w1off = take(&mut cur, 3 * 3 * cin * cout);
                 let (h1, d1, c1) =
-                    conv_fwd(p, w1off, x.clone(), xd, 3, 3, cin, cout, stride, 1, macs);
+                    conv_fwd(p, w1off, xcur, 3, 3, cin, cout, stride, 1, arena, macs);
                 let s1 = take(&mut cur, cout);
                 let b1 = take(&mut cur, cout);
-                let (mut r1, g1c) = gn_fwd(p, s1, b1, &h1, d1);
+                let (mut r1, g1c) = gn_fwd(p, s1, b1, &h1, d1, arena);
+                arena.recycle(h1);
                 relu(&mut r1);
+                let relu1 = arena.store_vec(r1, d1);
                 let w2off = take(&mut cur, 3 * 3 * cout * cout);
-                let (h2, d2, c2) = conv_fwd(p, w2off, r1.clone(), d1, 3, 3, cout, cout, 1, 1, macs);
+                let (h2, d2, c2) = conv_fwd(p, w2off, relu1, 3, 3, cout, cout, 1, 1, arena, macs);
                 let s2 = take(&mut cur, cout);
                 let b2 = take(&mut cur, cout);
-                let (mut g2, g2c) = gn_fwd(p, s2, b2, &h2, d2);
+                let (mut g2, g2c) = gn_fwd(p, s2, b2, &h2, d2, arena);
+                arena.recycle(h2);
                 let proj = if need_proj {
                     let wpoff = take(&mut cur, cin * cout);
-                    let (hp, dp, cp) = conv_fwd(p, wpoff, x, xd, 1, 1, cin, cout, stride, 0, macs);
+                    let (hp, dp, cp) =
+                        conv_fwd(p, wpoff, xcur, 1, 1, cin, cout, stride, 0, arena, macs);
                     let sp = take(&mut cur, cout);
                     let bp = take(&mut cur, cout);
-                    let (gp, gpc) = gn_fwd(p, sp, bp, &hp, dp);
+                    let (gp, gpc) = gn_fwd(p, sp, bp, &hp, dp, arena);
+                    arena.recycle(hp);
                     debug_assert_eq!(dp, d2);
                     for (a, b) in g2.iter_mut().zip(&gp) {
                         *a += b;
                     }
+                    arena.recycle(gp);
                     Some((cp, gpc))
                 } else {
-                    for (a, b) in g2.iter_mut().zip(&x) {
+                    for (a, b) in g2.iter_mut().zip(arena.act_data(xcur)) {
                         *a += b;
                     }
                     None
                 };
                 relu(&mut g2);
+                let out = arena.store_vec(g2, d2);
                 items.push(Item::Block {
                     conv1: c1,
                     gn1: g1c,
-                    relu1_out: r1,
+                    relu1,
                     conv2: c2,
                     gn2: g2c,
                     proj,
-                    out: g2.clone(),
+                    out,
                 });
-                x = g2;
+                xcur = out;
                 xd = d2;
                 cin = cout;
             }
         }
     }
-    Ok((x, xd.to_vec(), items, cur))
+    Ok((arena.act_data(xcur).to_vec(), xd.to_vec(), items, cur))
 }
 
 /// Reverse the module walk, accumulating parameter grads; returns dX at the
-/// bottom of the range.
+/// bottom of the range (empty: the callers have no consumer for it, so the
+/// bottom-most item skips its data-gradient kernels — see `need_dx`).
 fn backward_modules(
     p: &[f32],
     items: &[Item],
     mut d: Vec<f32>,
     grads: &mut [f32],
+    arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> Vec<f32> {
-    for item in items.iter().rev() {
-        d = match item {
-            Item::Head(hc) => head_bwd(p, hc, &d, grads, macs),
-            Item::Stem { conv, gn, relu_out } => {
-                relu_bwd_mask(relu_out, &mut d);
-                let dg = gn_bwd(p, gn, &d, grads);
-                conv_bwd(p, conv, &dg, grads, macs)
+    for (idx, item) in items.iter().enumerate().rev() {
+        let need_dx = idx > 0;
+        let next = match item {
+            Item::Head(hc) => head_bwd(p, hc, &d, grads, arena, macs, need_dx),
+            Item::Stem { conv, gn, out } => {
+                relu_bwd_mask(arena.act_data(*out), &mut d);
+                let dg = gn_bwd(p, gn, &d, grads, arena);
+                let dx = conv_bwd(p, conv, &dg, grads, arena, macs, need_dx);
+                arena.recycle(dg);
+                dx
             }
-            Item::Block { conv1, gn1, relu1_out, conv2, gn2, proj, out } => {
-                relu_bwd_mask(out, &mut d);
-                let dg2 = gn_bwd(p, gn2, &d, grads);
-                let mut dr1 = conv_bwd(p, conv2, &dg2, grads, macs);
-                relu_bwd_mask(relu1_out, &mut dr1);
-                let dg1 = gn_bwd(p, gn1, &dr1, grads);
-                let mut dx = conv_bwd(p, conv1, &dg1, grads, macs);
+            Item::Block { conv1, gn1, relu1, conv2, gn2, proj, out } => {
+                relu_bwd_mask(arena.act_data(*out), &mut d);
+                let dg2 = gn_bwd(p, gn2, &d, grads, arena);
+                let mut dr1 = conv_bwd(p, conv2, &dg2, grads, arena, macs, true);
+                arena.recycle(dg2);
+                relu_bwd_mask(arena.act_data(*relu1), &mut dr1);
+                let dg1 = gn_bwd(p, gn1, &dr1, grads, arena);
+                arena.recycle(dr1);
+                let mut dx = conv_bwd(p, conv1, &dg1, grads, arena, macs, need_dx);
+                arena.recycle(dg1);
                 match proj {
                     Some((cp, gp)) => {
-                        let dgp = gn_bwd(p, gp, &d, grads);
-                        let dxp = conv_bwd(p, cp, &dgp, grads, macs);
-                        for (a, b) in dx.iter_mut().zip(&dxp) {
-                            *a += b;
+                        // proj dW/gn grads are always needed; its dX only
+                        // feeds the residual sum, skipped at the bottom
+                        let dgp = gn_bwd(p, gp, &d, grads, arena);
+                        let dxp = conv_bwd(p, cp, &dgp, grads, arena, macs, need_dx);
+                        arena.recycle(dgp);
+                        if need_dx {
+                            for (a, b) in dx.iter_mut().zip(&dxp) {
+                                *a += b;
+                            }
                         }
+                        arena.recycle(dxp);
                     }
                     None => {
-                        for (a, b) in dx.iter_mut().zip(&d) {
-                            *a += b;
+                        if need_dx {
+                            for (a, b) in dx.iter_mut().zip(&d) {
+                                *a += b;
+                            }
                         }
                     }
                 }
                 dx
             }
         };
+        let old = std::mem::replace(&mut d, next);
+        arena.recycle(old);
     }
     d
 }
@@ -761,13 +711,12 @@ pub fn adam_update(
     let eps = adam.eps as f32;
     let bc1 = 1.0 - b1.powf(t);
     let bc2 = 1.0 - b2.powf(t);
-    for i in 0..p.len() {
-        let gi = g[i];
-        m[i] = b1 * m[i] + (1.0 - b1) * gi;
-        v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
-        let mh = m[i] / bc1;
-        let vh = v[i] / bc2;
-        p[i] -= lr * mh / (vh.sqrt() + eps);
+    for (((pv, &gi), mi), vi) in p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+        *mi = b1 * *mi + (1.0 - b1) * gi;
+        *vi = b2 * *vi + (1.0 - b2) * gi * gi;
+        let mh = *mi / bc1;
+        let vh = *vi / bc2;
+        *pv -= lr * mh / (vh.sqrt() + eps);
     }
 }
 
@@ -835,6 +784,7 @@ pub fn client_step(
     tier: usize,
     dcor: bool,
     inputs: &[&Literal],
+    arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> Result<Vec<Literal>> {
     let tm = meta.tier(tier);
@@ -847,17 +797,20 @@ pub fn client_step(
         0.0
     };
     let cpl = tm.client_param_len;
-    let (z, zdims, items, used) = forward_modules(meta, ti.p, ti.x.to_vec(), ti.xd, 1, tier, macs)?;
+    arena.begin_step();
+    let x0 = arena.store_slice(ti.x, ti.xd);
+    let (z, zdims, items, used) = forward_modules(meta, ti.p, x0, 1, tier, arena, macs)?;
     crate::anyhow::ensure!(used == cpl, "client params consumed {used} != {cpl}");
     let zd = [zdims[0], zdims[1], zdims[2], zdims[3]];
     let c = meta.widths[tier - 1];
     let ncls = meta.num_classes;
-    let (logits, auxc) = head_fwd(ti.p, cpl, cpl + c * ncls, &z, zd, ncls, macs);
+    let zv = TensorView { data: &z, dims: zd };
+    let (logits, auxc) = head_fwd(ti.p, cpl, cpl + c * ncls, zv, ncls, macs);
     let ce = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
     let upstream = if dcor { 1.0 - alpha } else { 1.0 };
     let dlogits = ce_bwd(&logits, ti.xd[0], ncls, ti.y, upstream);
     let mut grads = vec![0.0f32; ti.p.len()];
-    let mut dz = head_bwd(ti.p, &auxc, &dlogits, &mut grads, macs);
+    let mut dz = head_bwd(ti.p, &auxc, &dlogits, &mut grads, arena, macs, true);
     let loss = if dcor {
         let (r, dzd) = dcor_with_grad(ti.x, &z, ti.xd[0]);
         for (a, b) in dz.iter_mut().zip(&dzd) {
@@ -867,7 +820,7 @@ pub fn client_step(
     } else {
         ce
     };
-    backward_modules(ti.p, &items, dz, &mut grads, macs);
+    backward_modules(ti.p, &items, dz, &mut grads, arena, macs);
     let (mut p, mut m, mut v) = (ti.p.to_vec(), ti.m.to_vec(), ti.v.to_vec());
     adam_update(&meta.adam, &mut p, &grads, &mut m, &mut v, ti.t, ti.lr);
     let mut out = train_state_outputs(p, m, v, ti.t)?;
@@ -882,6 +835,7 @@ pub fn server_step(
     meta: &Metadata,
     tier: usize,
     inputs: &[&Literal],
+    arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> Result<Vec<Literal>> {
     crate::anyhow::ensure!(inputs.len() == 7, "server_step: expected 7 inputs");
@@ -894,14 +848,19 @@ pub fn server_step(
         meta.widths[tier - 1]
     );
     let ncls = meta.num_classes;
-    let (logits, _, items, used) =
-        forward_modules(meta, ti.p, ti.x.to_vec(), ti.xd, tier + 1, 8, macs)?;
+    arena.begin_step();
+    let x0 = arena.store_slice(ti.x, ti.xd);
+    let (logits, _, items, used) = forward_modules(meta, ti.p, x0, tier + 1, 8, arena, macs)?;
     crate::anyhow::ensure!(used == ti.p.len(), "server params consumed {used} != {}", ti.p.len());
     let loss = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
     let correct = correct_count(&logits, ti.xd[0], ncls, ti.y);
     let dlogits = ce_bwd(&logits, ti.xd[0], ncls, ti.y, 1.0);
     let mut grads = vec![0.0f32; ti.p.len()];
-    backward_modules(ti.p, &items, dlogits, &mut grads, macs);
+    // hand backward an arena-loaned copy so every buffer it recycles is
+    // tracked by the footprint accounting
+    let mut d0 = arena.take_buf_uninit(dlogits.len());
+    d0.copy_from_slice(&dlogits);
+    backward_modules(ti.p, &items, d0, &mut grads, arena, macs);
     let (mut p, mut m, mut v) = (ti.p.to_vec(), ti.m.to_vec(), ti.v.to_vec());
     adam_update(&meta.adam, &mut p, &grads, &mut m, &mut v, ti.t, ti.lr);
     let mut out = train_state_outputs(p, m, v, ti.t)?;
@@ -916,22 +875,29 @@ pub fn full_step(
     meta: &Metadata,
     sgd: bool,
     inputs: &[&Literal],
+    arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> Result<Vec<Literal>> {
     crate::anyhow::ensure!(inputs.len() == 7, "full_step: expected 7 inputs");
     let ti = parse_train_inputs(meta, inputs, meta.total_params, "full_step")?;
     let ncls = meta.num_classes;
-    let (logits, _, items, used) = forward_modules(meta, ti.p, ti.x.to_vec(), ti.xd, 1, 8, macs)?;
+    arena.begin_step();
+    let x0 = arena.store_slice(ti.x, ti.xd);
+    let (logits, _, items, used) = forward_modules(meta, ti.p, x0, 1, 8, arena, macs)?;
     crate::anyhow::ensure!(used == meta.total_params, "full params consumed {used}");
     let loss = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
     let correct = correct_count(&logits, ti.xd[0], ncls, ti.y);
     let dlogits = ce_bwd(&logits, ti.xd[0], ncls, ti.y, 1.0);
     let mut grads = vec![0.0f32; ti.p.len()];
-    backward_modules(ti.p, &items, dlogits, &mut grads, macs);
+    // hand backward an arena-loaned copy so every buffer it recycles is
+    // tracked by the footprint accounting
+    let mut d0 = arena.take_buf_uninit(dlogits.len());
+    d0.copy_from_slice(&dlogits);
+    backward_modules(ti.p, &items, d0, &mut grads, arena, macs);
     let (mut p, mut m, mut v) = (ti.p.to_vec(), ti.m.to_vec(), ti.v.to_vec());
     if sgd {
-        for i in 0..p.len() {
-            p[i] -= ti.lr * grads[i];
+        for (pv, &gv) in p.iter_mut().zip(&grads) {
+            *pv -= ti.lr * gv;
         }
     } else {
         adam_update(&meta.adam, &mut p, &grads, &mut m, &mut v, ti.t, ti.lr);
@@ -943,7 +909,12 @@ pub fn full_step(
 }
 
 /// Evaluate the full model on one batch → `[loss, correct]`.
-pub fn eval(meta: &Metadata, inputs: &[&Literal], macs: &mut u64) -> Result<Vec<Literal>> {
+pub fn eval(
+    meta: &Metadata,
+    inputs: &[&Literal],
+    arena: &mut ScratchArena,
+    macs: &mut u64,
+) -> Result<Vec<Literal>> {
     crate::anyhow::ensure!(inputs.len() == 3, "eval: expected 3 inputs");
     let p = inputs[0].f32s()?;
     crate::anyhow::ensure!(p.len() == meta.total_params, "eval params length");
@@ -956,7 +927,9 @@ pub fn eval(meta: &Metadata, inputs: &[&Literal], macs: &mut u64) -> Result<Vec<
     for &l in y {
         crate::anyhow::ensure!((0..meta.num_classes as i32).contains(&l), "eval: label {l} range");
     }
-    let (logits, _, _, used) = forward_modules(meta, p, x.to_vec(), xd, 1, 8, macs)?;
+    arena.begin_step();
+    let x0 = arena.store_slice(x, xd);
+    let (logits, _, _, used) = forward_modules(meta, p, x0, 1, 8, arena, macs)?;
     crate::anyhow::ensure!(used == meta.total_params, "eval params consumed {used}");
     let loss = ce_fwd(&logits, xd[0], meta.num_classes, y);
     let correct = correct_count(&logits, xd[0], meta.num_classes, y);
@@ -989,13 +962,16 @@ mod tests {
         xd: Dims4,
         y: &[i32],
     ) -> (f64, Vec<f32>) {
+        let mut arena = ScratchArena::new();
         let mut macs = 0u64;
+        arena.begin_step();
+        let x0 = arena.store_slice(x, xd);
         let (logits, _, items, _) =
-            forward_modules(meta, p, x.to_vec(), xd, 1, 8, &mut macs).unwrap();
+            forward_modules(meta, p, x0, 1, 8, &mut arena, &mut macs).unwrap();
         let loss = ce_fwd(&logits, xd[0], meta.num_classes, y) as f64;
         let dlogits = ce_bwd(&logits, xd[0], meta.num_classes, y, 1.0);
         let mut grads = vec![0.0f32; p.len()];
-        backward_modules(p, &items, dlogits, &mut grads, &mut macs);
+        backward_modules(p, &items, dlogits, &mut grads, &mut arena, &mut macs);
         (loss, grads)
     }
 
@@ -1047,6 +1023,7 @@ mod tests {
         let yl = lit::i32_vec(&y).unwrap();
         let n = p0.len();
         let (mut p, mut m, mut v, mut t) = (p0, vec![0.0f32; n], vec![0.0f32; n], 1.0f32);
+        let mut arena = ScratchArena::new();
         let mut first = f32::NAN;
         let mut last = f32::NAN;
         for step in 0..20 {
@@ -1061,7 +1038,7 @@ mod tests {
             ];
             let refs: Vec<&Literal> = inputs.iter().collect();
             let mut macs = 0u64;
-            let out = full_step(&meta, false, &refs, &mut macs).unwrap();
+            let out = full_step(&meta, false, &refs, &mut arena, &mut macs).unwrap();
             assert_eq!(out.len(), 6);
             assert!(macs > 0);
             p = out[0].to_vec::<f32>().unwrap();
@@ -1079,11 +1056,13 @@ mod tests {
             last < 0.6 * first,
             "adam on one batch should overfit: first {first} last {last}"
         );
+        assert!(arena.peak_bytes() > 0, "arena never tracked a step");
     }
 
     #[test]
     fn client_and_server_steps_compose() {
         let meta = tiny();
+        let mut arena = ScratchArena::new();
         for tier in [1usize, 4, meta.max_tiers] {
             let tm = meta.tier(tier);
             let flat = spec::init_flat(&meta, 0);
@@ -1104,7 +1083,7 @@ mod tests {
             ];
             let refs: Vec<&Literal> = ci.iter().collect();
             let mut macs = 0u64;
-            let cout = client_step(&meta, tier, false, &refs, &mut macs).unwrap();
+            let cout = client_step(&meta, tier, false, &refs, &mut arena, &mut macs).unwrap();
             assert_eq!(cout.len(), 6);
             let z = &cout[4];
             assert_eq!(z.dims(), &tm.z_shape[..]);
@@ -1122,7 +1101,7 @@ mod tests {
             ];
             let srefs: Vec<&Literal> = si.iter().collect();
             let mut smacs = 0u64;
-            let sout = server_step(&meta, tier, &srefs, &mut smacs).unwrap();
+            let sout = server_step(&meta, tier, &srefs, &mut arena, &mut smacs).unwrap();
             assert_eq!(sout.len(), 6);
             assert!(lit::scalar_f32(&sout[4]).unwrap().is_finite());
             assert!(client_macs > 0 && smacs > 0);
@@ -1134,6 +1113,7 @@ mod tests {
         // the deterministic cost model must reproduce the Table 2 shape
         let meta = tiny();
         let (x, xd, y) = batch(&meta, meta.batch, 1);
+        let mut arena = ScratchArena::new();
         let mut last_client = 0u64;
         let mut last_server = u64::MAX;
         for tier in 1..=meta.max_tiers {
@@ -1154,7 +1134,7 @@ mod tests {
             ];
             let refs: Vec<&Literal> = ci.iter().collect();
             let mut cm = 0u64;
-            let cout = client_step(&meta, tier, false, &refs, &mut cm).unwrap();
+            let cout = client_step(&meta, tier, false, &refs, &mut arena, &mut cm).unwrap();
 
             let sv = flat[tm.cut_offset..].to_vec();
             let szeros = vec![0.0f32; sv.len()];
@@ -1169,7 +1149,7 @@ mod tests {
             ];
             let srefs: Vec<&Literal> = si.iter().collect();
             let mut sm = 0u64;
-            server_step(&meta, tier, &srefs, &mut sm).unwrap();
+            server_step(&meta, tier, &srefs, &mut arena, &mut sm).unwrap();
 
             assert!(cm > last_client, "tier {tier}: client macs {cm} <= {last_client}");
             assert!(sm < last_server, "tier {tier}: server macs {sm} >= {last_server}");
@@ -1200,8 +1180,9 @@ mod tests {
                 lit::f32_scalar(alpha),
             ];
             let refs: Vec<&Literal> = ci.iter().collect();
+            let mut arena = ScratchArena::new();
             let mut macs = 0u64;
-            let out = client_step(&meta, 1, true, &refs, &mut macs).unwrap();
+            let out = client_step(&meta, 1, true, &refs, &mut arena, &mut macs).unwrap();
             lit::scalar_f32(&out[5]).unwrap()
         };
         let l0 = mk(0.0);
@@ -1245,8 +1226,9 @@ mod tests {
             lit::i32_vec(&y).unwrap(),
         ];
         let refs: Vec<&Literal> = inputs.iter().collect();
+        let mut arena = ScratchArena::new();
         let mut macs = 0u64;
-        let out = eval(&meta, &refs, &mut macs).unwrap();
+        let out = eval(&meta, &refs, &mut arena, &mut macs).unwrap();
         let loss = lit::scalar_f32(&out[0]).unwrap();
         let correct = lit::scalar_f32(&out[1]).unwrap();
         // random init on 10 classes: CE in a loose band around ln(10)
@@ -1271,8 +1253,9 @@ mod tests {
                 lit::i32_vec(&y).unwrap(),
             ];
             let refs: Vec<&Literal> = inputs.iter().collect();
+            let mut arena = ScratchArena::new();
             let mut macs = 0u64;
-            let out = full_step(&meta, false, &refs, &mut macs).unwrap();
+            let out = full_step(&meta, false, &refs, &mut arena, &mut macs).unwrap();
             (out[0].to_vec::<f32>().unwrap(), lit::scalar_f32(&out[4]).unwrap(), macs)
         };
         let (p1, l1, m1) = run();
@@ -1280,5 +1263,35 @@ mod tests {
         assert_eq!(l1, l2);
         assert_eq!(p1, p2);
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn arena_reuse_across_steps_is_bit_identical_to_fresh_arenas() {
+        // the recycled-buffer path must not leak state between steps
+        let meta = tiny();
+        let p = spec::init_flat(&meta, 1);
+        let (x, xd, y) = batch(&meta, meta.batch, 6);
+        let zeros = vec![0.0f32; p.len()];
+        let step = |arena: &mut ScratchArena| {
+            let inputs = [
+                lit::f32_vec(&p).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_vec(&zeros).unwrap(),
+                lit::f32_scalar(1.0),
+                lit::f32_scalar(1e-3),
+                Literal::from_f32(x.clone(), &xd).unwrap(),
+                lit::i32_vec(&y).unwrap(),
+            ];
+            let refs: Vec<&Literal> = inputs.iter().collect();
+            let mut macs = 0u64;
+            let out = full_step(&meta, false, &refs, arena, &mut macs).unwrap();
+            out[0].to_vec::<f32>().unwrap()
+        };
+        let mut shared = ScratchArena::new();
+        let a = step(&mut shared);
+        let b = step(&mut shared); // same inputs, recycled buffers
+        let c = step(&mut ScratchArena::new());
+        assert_eq!(a, b);
+        assert_eq!(a, c);
     }
 }

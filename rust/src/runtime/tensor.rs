@@ -1,0 +1,332 @@
+//! Tensor type + per-client scratch arena for the reference backend.
+//!
+//! [`Tensor`] is the minimal dense-tensor carrier the kernel layer works
+//! on: a shape plus contiguous row-major (NHWC) f32 storage, with borrowed
+//! [`TensorView`]s for read paths. [`ScratchArena`] owns every sizable
+//! buffer a training step touches — im2col column buffers and the forward
+//! activations the backward pass replays — so that (a) each layer output is
+//! held exactly **once** (pre-arena, every activation lived twice: once in
+//! the backward cache, once as the next conv's saved input), and (b) the
+//! allocations are recycled across steps instead of hitting the allocator
+//! per layer per batch.
+//!
+//! The arena is strictly per-step state: `begin_step` retires the previous
+//! step's activations into a free pool, and `ActRef` handles are only
+//! meaningful until the next `begin_step`. The reference backend keeps a
+//! small pool of arenas and checks one out per execution (see
+//! `runtime::backend`), so an arena is only ever touched by one step at a
+//! time and its contents cannot influence results — determinism is
+//! untouched.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Rank-4 shape (NHWC everywhere in the reference model).
+pub type Dims4 = [usize; 4];
+
+/// Process-wide arena high-water mark in bytes, for perf reports: every
+/// arena folds its peak in here (`fetch_max`), so stats consumers can read
+/// the largest per-step footprint seen anywhere in the process.
+static GLOBAL_ARENA_PEAK: AtomicUsize = AtomicUsize::new(0);
+
+/// Largest `ScratchArena::peak_bytes` observed process-wide.
+pub fn arena_peak_bytes() -> usize {
+    GLOBAL_ARENA_PEAK.load(Ordering::Relaxed)
+}
+
+/// Shape + contiguous f32 storage (row-major; images are NHWC).
+#[derive(Debug, Clone, Default)]
+pub struct Tensor {
+    data: Vec<f32>,
+    dims: Dims4,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: Dims4) -> Self {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Self { data, dims }
+    }
+
+    pub fn dims(&self) -> Dims4 {
+        self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn view(&self) -> TensorView<'_> {
+        TensorView { data: &self.data, dims: self.dims }
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+/// Borrowed view of a [`Tensor`] (or of arena-held activation storage):
+/// the shape-carrying read handle layer consumers take (e.g. the dense
+/// head's forward pass).
+#[derive(Debug, Clone, Copy)]
+pub struct TensorView<'a> {
+    pub data: &'a [f32],
+    pub dims: Dims4,
+}
+
+/// Handle to an activation stored in a [`ScratchArena`]. Only valid until
+/// the arena's next `begin_step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ActRef(usize);
+
+/// Per-client scratch memory for one training/eval step: activation slots
+/// (the tensors the backward pass replays), the shared im2col column buffer,
+/// and its backward twin. All storage is grow-only and recycled across
+/// steps.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Activations stored this step, in layer order.
+    slots: Vec<Tensor>,
+    /// Retired buffers awaiting reuse (capacity preserved, length 0).
+    free: Vec<Vec<f32>>,
+    /// im2col column buffer (forward and weight-gradient replays).
+    cols: Vec<f32>,
+    /// Column-gradient buffer for the data-gradient path (col2im input).
+    dcols: Vec<f32>,
+    /// Element capacity of buffers currently checked out via `take_buf`
+    /// (returned by `recycle`, or absorbed into a slot by `store_vec`).
+    /// Tracked so the high-water mark sees live gradient buffers too, not
+    /// just what sits inside the arena at `note_peak` time.
+    loaned: usize,
+    peak_bytes: usize,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a new step: retire all activation slots into the free pool
+    /// (contents kept — each take path re-initializes what it needs).
+    /// Every outstanding `ActRef` is invalidated.
+    pub fn begin_step(&mut self) {
+        for t in self.slots.drain(..) {
+            self.free.push(t.into_vec());
+        }
+    }
+
+    /// Store an owned activation; the arena now holds the only copy. If the
+    /// buffer came from [`ScratchArena::take_buf`], its loan ends here (it
+    /// is now counted as a slot).
+    pub fn store_vec(&mut self, data: Vec<f32>, dims: Dims4) -> ActRef {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        self.loaned = self.loaned.saturating_sub(data.capacity());
+        self.slots.push(Tensor::new(data, dims));
+        self.note_peak();
+        ActRef(self.slots.len() - 1)
+    }
+
+    /// Copy a borrowed activation into arena storage (recycled buffer).
+    pub fn store_slice(&mut self, src: &[f32], dims: Dims4) -> ActRef {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(src);
+        // balance store_vec's loan-end bookkeeping for this pool buffer
+        self.loaned += v.capacity();
+        self.store_vec(v, dims)
+    }
+
+    pub fn act(&self, id: ActRef) -> TensorView<'_> {
+        self.slots[id.0].view()
+    }
+
+    pub fn act_data(&self, id: ActRef) -> &[f32] {
+        self.slots[id.0].as_slice()
+    }
+
+    pub fn act_dims(&self, id: ActRef) -> Dims4 {
+        self.slots[id.0].dims()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements, recycled when
+    /// possible. Hand it back with [`ScratchArena::recycle`] (or
+    /// [`ScratchArena::store_vec`]) once dead — the bytes count against the
+    /// arena footprint until then.
+    pub fn take_buf(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        self.loaned += v.capacity();
+        self.note_peak();
+        v
+    }
+
+    /// Like [`ScratchArena::take_buf`] but with **unspecified contents**
+    /// (stale values from a prior loan) — for consumers that overwrite
+    /// every element, skipping the zero-fill pass. Same return/accounting
+    /// contract as `take_buf`.
+    pub fn take_buf_uninit(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        // only a length change touches memory: grow fills the gap,
+        // shrink is O(1); surviving elements keep their stale values
+        v.resize(len, 0.0);
+        self.loaned += v.capacity();
+        self.note_peak();
+        v
+    }
+
+    /// Return a buffer obtained from [`ScratchArena::take_buf`] /
+    /// [`ScratchArena::take_buf_uninit`] (or any dead Vec) to the free
+    /// pool. Contents are kept (not cleared) so overwrite-only reuse via
+    /// `take_buf_uninit` costs nothing; `take_buf` re-zeroes on loan.
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        self.loaned = self.loaned.saturating_sub(v.capacity());
+        self.free.push(v);
+    }
+
+    /// Fill the column buffer with im2col patches of the stored activation
+    /// `id`; returns `(rows, patch_len)` of the resulting matrix, readable
+    /// through [`ScratchArena::cols`].
+    pub fn im2col(
+        &mut self,
+        id: ActRef,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    ) -> (usize, usize) {
+        let Self { slots, cols, .. } = self;
+        let t = &slots[id.0];
+        let (rows, k, _, _) = super::kernels::im2col_geom(t.dims(), kh, kw, stride, pad);
+        cols.clear();
+        cols.resize(rows * k, 0.0);
+        super::kernels::im2col_into(cols, t.as_slice(), t.dims(), kh, kw, stride, pad);
+        self.note_peak();
+        (rows, k)
+    }
+
+    pub fn cols(&self) -> &[f32] {
+        &self.cols
+    }
+
+    /// Column-gradient buffer of exactly `len` elements with unspecified
+    /// contents — the caller's matmul overwrites every element. Read it
+    /// back with [`ScratchArena::dcols`].
+    pub fn dcols_mut(&mut self, len: usize) -> &mut [f32] {
+        self.dcols.resize(len, 0.0);
+        self.note_peak();
+        &mut self.dcols
+    }
+
+    pub fn dcols(&self) -> &[f32] {
+        &self.dcols
+    }
+
+    /// High-water mark of all memory this arena has held, in bytes.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    fn current_bytes(&self) -> usize {
+        let held: usize = self
+            .slots
+            .iter()
+            .map(Tensor::capacity)
+            .chain(self.free.iter().map(Vec::capacity))
+            .sum();
+        4 * (held + self.loaned + self.cols.capacity() + self.dcols.capacity())
+    }
+
+    fn note_peak(&mut self) {
+        let b = self.current_bytes();
+        if b > self.peak_bytes {
+            self.peak_bytes = b;
+            GLOBAL_ARENA_PEAK.fetch_max(b, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_and_view_roundtrip() {
+        let mut arena = ScratchArena::new();
+        arena.begin_step();
+        let id = arena.store_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], [1, 2, 3, 1]);
+        let v = arena.act(id);
+        assert_eq!(v.dims, [1, 2, 3, 1]);
+        assert_eq!(v.data, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(arena.act_dims(id), [1, 2, 3, 1]);
+    }
+
+    #[test]
+    fn buffers_are_recycled_across_steps() {
+        let mut arena = ScratchArena::new();
+        arena.begin_step();
+        let big = vec![0.0f32; 4096];
+        let cap_before = big.capacity();
+        arena.store_vec(big, [1, 64, 64, 1]);
+        arena.begin_step();
+        // the retired 4096-element buffer must be reused, not reallocated
+        let reused = arena.take_buf(4096);
+        assert!(reused.capacity() >= cap_before);
+        assert!(reused.iter().all(|&v| v == 0.0));
+        let peak = arena.peak_bytes();
+        assert!(peak >= 4096 * 4, "peak {peak} missed the slot");
+        assert!(arena_peak_bytes() >= peak);
+    }
+
+    #[test]
+    fn peak_counts_checked_out_buffers() {
+        // the high-water mark must see live take_buf loans, not just what
+        // sits inside the arena when note_peak happens to run
+        let mut arena = ScratchArena::new();
+        let b1 = arena.take_buf(1000);
+        let b2 = arena.take_buf(1000);
+        assert!(
+            arena.peak_bytes() >= 2 * 1000 * 4,
+            "peak {} missed a loaned buffer",
+            arena.peak_bytes()
+        );
+        arena.recycle(b1);
+        arena.store_vec(b2, [1, 10, 10, 10]);
+        // returning the loans must not inflate the footprint further
+        let settled = arena.peak_bytes();
+        arena.begin_step();
+        assert_eq!(arena.peak_bytes(), settled);
+    }
+
+    #[test]
+    fn take_buf_is_zeroed_even_after_recycle() {
+        let mut arena = ScratchArena::new();
+        let mut v = arena.take_buf(8);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        arena.recycle(v);
+        assert!(arena.take_buf(8).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn take_buf_uninit_promises_only_the_length() {
+        let mut arena = ScratchArena::new();
+        let mut v = arena.take_buf(16);
+        v.iter_mut().for_each(|x| *x = 3.0);
+        arena.recycle(v);
+        let u = arena.take_buf_uninit(8);
+        assert_eq!(u.len(), 8); // contents unspecified (stale 3.0s are fine)
+        arena.recycle(u);
+        // the zeroing loan still zeroes after an uninit round-trip
+        assert!(arena.take_buf(16).iter().all(|&x| x == 0.0));
+    }
+}

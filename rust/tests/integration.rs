@@ -254,7 +254,12 @@ fn dtfl_assigns_slow_clients_lower_tiers_over_time() {
     let Some(rt) = runtime() else { return };
     // construct DTFL directly and feed it synthetic observations through
     // the profiler, then check the schedule ordering matches speed ordering
-    let opts = DtflOptions { max_tiers: rt.meta.max_tiers, ema_beta: 1.0, timing_noise: 0.0, static_tier: None };
+    let opts = DtflOptions {
+        max_tiers: rt.meta.max_tiers,
+        ema_beta: 1.0,
+        timing_noise: 0.0,
+        static_tier: None,
+    };
     let mut dtfl = Dtfl::new(&rt, 2, opts).unwrap();
     let base = dtfl.profiler.profile.client_batch_secs[0];
     dtfl.profiler.observe(0, 1, base * 50.0, 30e6 / 8.0); // very slow client
@@ -264,7 +269,8 @@ fn dtfl_assigns_slow_clients_lower_tiers_over_time() {
         dtfl::coordinator::ClientLoad { n_batches: 4, participating: true };
         2
     ];
-    let s = dtfl::coordinator::schedule(&rt.meta, &dtfl.profiler, &server, &loads, rt.meta.max_tiers);
+    let s =
+        dtfl::coordinator::schedule(&rt.meta, &dtfl.profiler, &server, &loads, rt.meta.max_tiers);
     assert!(s.tier_of(0) <= s.tier_of(1), "slow client must not out-tier fast one");
 }
 

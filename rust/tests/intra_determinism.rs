@@ -1,0 +1,61 @@
+//! Intra-step kernel parallelism determinism contract.
+//!
+//! This lives in its own test binary on purpose: the `intra_threads` knob is
+//! process-wide (`runtime::kernels::set_intra_threads`), and every
+//! `Experiment` construction re-applies its config value. In a shared test
+//! binary a concurrently-constructed `Experiment` from another `#[test]`
+//! could reset the knob to 1 mid-run, which would make these assertions
+//! pass without ever exercising the row-panel fork. Here the only
+//! experiments in the process are the sequential ones below, so the intra=4
+//! run really does fork panels.
+
+use dtfl::experiment::Experiment;
+use dtfl::harness::RunSpec;
+use dtfl::metrics::RoundRecord;
+
+fn run(threads: usize, intra_threads: usize) -> (Vec<RoundRecord>, Vec<f32>) {
+    let spec = RunSpec {
+        clients: 6,
+        rounds: 2,
+        batch_cap: Some(1),
+        train_total: 96,
+        test_total: 32,
+        eval_every: 1,
+        threads,
+        intra_threads,
+        ..Default::default()
+    };
+    let mut exp = Experiment::new(spec.to_config()).expect("experiment");
+    let mut records = Vec::new();
+    exp.run_with(|r| records.push(r.clone())).expect("run");
+    (records, exp.method.global_params().to_vec())
+}
+
+#[test]
+fn intra_step_parallel_kernels_match_sequential() {
+    // intra-step row-panel parallelism (kernels splitting one matmul over
+    // scoped threads) must be bit-invisible: a 1-thread round with intra=4
+    // equals a 1-thread round with intra=1, and composing both kinds of
+    // parallelism (threads=4, intra=2) changes nothing either
+    let (rec_base, p_base) = run(1, 1);
+    for (threads, intra) in [(1usize, 4usize), (4, 2)] {
+        let (rec, p) = run(threads, intra);
+        assert_eq!(rec_base.len(), rec.len());
+        for (a, b) in rec_base.iter().zip(&rec) {
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "threads={threads} intra={intra}: train_loss differs"
+            );
+            assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        }
+        assert_eq!(p_base.len(), p.len());
+        for (i, (a, b)) in p_base.iter().zip(&p).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "threads={threads} intra={intra}: global param {i} differs"
+            );
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Property tests for the blocked kernel layer: randomized shapes —
+//! including edge tiles where M/N/K are not multiples of the register-tile
+//! sizes — compared against independent scalar references written here
+//! (f64 accumulation, textbook loop order), plus structural invariants
+//! (im2col/col2im adjointness, intra-thread bit-identity).
+
+use dtfl::runtime::kernels::{self, Epilogue, MR, NR};
+use dtfl::runtime::Dims4;
+use dtfl::util::Rng64;
+
+fn rand_vec(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_f32(-1.5, 1.5)).collect()
+}
+
+/// |got − want| ≤ atol + rtol·|want| elementwise, with f64 references.
+fn assert_close(got: &[f32], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let err = (g as f64 - w).abs();
+        let tol = 1e-4 + 1e-4 * w.abs();
+        assert!(err <= tol, "{what}[{i}]: got {g}, want {w} (err {err:.3e})");
+    }
+}
+
+// ---------------------------------------------------------------------
+// independent scalar references (f64 accumulators, textbook order)
+// ---------------------------------------------------------------------
+
+fn ref_matmul(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn ref_matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; k * n];
+    for kk in 0..k {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for mi in 0..m {
+                acc += a[mi * k + kk] as f64 * b[mi * n + j] as f64;
+            }
+            c[kk * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn ref_matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], k: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; m * k];
+    for i in 0..m {
+        for kk in 0..k {
+            let mut acc = 0.0f64;
+            for j in 0..n {
+                acc += a[i * n + j] as f64 * b[kk * n + j] as f64;
+            }
+            c[i * k + kk] = acc;
+        }
+    }
+    c
+}
+
+/// Per-element gather formulation of im2col (no early-continue structure).
+#[allow(clippy::too_many_arguments)]
+fn ref_im2col(x: &[f32], xd: Dims4, kh: usize, kw: usize, stride: usize, pad: usize) -> Vec<f32> {
+    let [b, h, w, c] = xd;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut out = vec![0.0f32; b * ho * wo * k];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for i in 0..kh {
+                    for j in 0..kw {
+                        for cc in 0..c {
+                            let py = oy * stride + i;
+                            let px = ox * stride + j;
+                            let v = if py >= pad && py < h + pad && px >= pad && px < w + pad {
+                                x[((bi * h + (py - pad)) * w + (px - pad)) * c + cc]
+                            } else {
+                                0.0
+                            };
+                            let row = ((bi * ho + oy) * wo + ox) * k;
+                            out[row + (i * kw + j) * c + cc] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Scatter-add built on the gather reference: for each column element that
+/// maps to a real input position, add it there.
+fn ref_col2im(
+    cols: &[f32],
+    xd: Dims4,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let [b, h, w, c] = xd;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut dx = vec![0.0f32; b * h * w * c];
+    for bi in 0..b {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for i in 0..kh {
+                    for j in 0..kw {
+                        for cc in 0..c {
+                            let py = oy * stride + i;
+                            let px = ox * stride + j;
+                            if py >= pad && py < h + pad && px >= pad && px < w + pad {
+                                let row = ((bi * ho + oy) * wo + ox) * k;
+                                dx[((bi * h + (py - pad)) * w + (px - pad)) * c + cc] +=
+                                    cols[row + (i * kw + j) * c + cc];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------
+// properties
+// ---------------------------------------------------------------------
+
+/// Shapes mixing edge-tile cases (±1 around MR/NR multiples) with random
+/// sizes, so partial tiles in both dimensions and short/long reductions are
+/// all exercised.
+fn shapes(rng: &mut Rng64, cases: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = vec![
+        (1, 1, 1),
+        (MR, 3, NR),
+        (MR - 1, 5, NR - 1),
+        (MR + 1, 7, NR + 1),
+        (2 * MR + 3, 2, 2 * NR + 5),
+        (3, 200, 3),
+    ];
+    for _ in 0..cases {
+        out.push((rng.gen_range(1, 48), rng.gen_range(1, 96), rng.gen_range(1, 48)));
+    }
+    out
+}
+
+#[test]
+fn prop_blocked_matmul_matches_scalar_reference() {
+    let mut rng = Rng64::seed_from_u64(0x5eed);
+    for (m, k, n) in shapes(&mut rng, 40) {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut macs = 0u64;
+        let got = kernels::matmul(&a, m, k, &b, n, &mut macs);
+        assert_eq!(macs, (m * k * n) as u64);
+        assert_close(&got, &ref_matmul(&a, m, k, &b, n), &format!("matmul {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn prop_blocked_matmul_tn_matches_scalar_reference() {
+    let mut rng = Rng64::seed_from_u64(0x7a11);
+    for (m, k, n) in shapes(&mut rng, 40) {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, m * n);
+        let mut macs = 0u64;
+        let got = kernels::matmul_tn(&a, m, k, &b, n, &mut macs);
+        assert_close(&got, &ref_matmul_tn(&a, m, k, &b, n), &format!("tn {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn prop_blocked_matmul_nt_matches_scalar_reference() {
+    let mut rng = Rng64::seed_from_u64(0xbeef);
+    for (m, n, k) in shapes(&mut rng, 40) {
+        let a = rand_vec(&mut rng, m * n);
+        let b = rand_vec(&mut rng, k * n);
+        let mut macs = 0u64;
+        let got = kernels::matmul_nt(&a, m, n, &b, k, &mut macs);
+        assert_close(&got, &ref_matmul_nt(&a, m, n, &b, k), &format!("nt {m}x{n}x{k}"));
+    }
+}
+
+#[test]
+fn prop_epilogues_match_unfused_reference() {
+    let mut rng = Rng64::seed_from_u64(0xfade);
+    for (m, k, n) in shapes(&mut rng, 15) {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        let plain = ref_matmul(&a, m, k, &b, n);
+        let mut macs = 0u64;
+        let with_bias = kernels::matmul_bias(&a, m, k, &b, n, &bias, &mut macs);
+        let mut with_relu = vec![0.0f32; m * n];
+        kernels::matmul_into(&mut with_relu, &a, m, k, &b, n, Epilogue::BiasRelu(&bias), &mut macs);
+        let want_bias: Vec<f64> = plain
+            .iter()
+            .enumerate()
+            .map(|(idx, &v)| v + bias[idx % n] as f64)
+            .collect();
+        let want_relu: Vec<f64> = want_bias.iter().map(|&v| v.max(0.0)).collect();
+        assert_close(&with_bias, &want_bias, &format!("bias {m}x{k}x{n}"));
+        assert_close(&with_relu, &want_relu, &format!("bias+relu {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn prop_blocked_kernels_are_zero_skip_consistent_on_sparse_data() {
+    // post-ReLU activations are ~half zeros; the skip-zero fast path must
+    // not change results relative to the dense reference
+    let mut rng = Rng64::seed_from_u64(0xaced);
+    for (m, k, n) in shapes(&mut rng, 20) {
+        let a: Vec<f32> = rand_vec(&mut rng, m * k)
+            .into_iter()
+            .map(|v| if v < 0.0 { 0.0 } else { v })
+            .collect();
+        let b = rand_vec(&mut rng, k * n);
+        let mut macs = 0u64;
+        let got = kernels::matmul(&a, m, k, &b, n, &mut macs);
+        assert_close(&got, &ref_matmul(&a, m, k, &b, n), &format!("sparse {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn prop_im2col_matches_gather_reference() {
+    let mut rng = Rng64::seed_from_u64(0x1217);
+    for case in 0..60u64 {
+        let b = rng.gen_range(1, 4);
+        let h = rng.gen_range(3, 10);
+        let w = rng.gen_range(3, 10);
+        let c = rng.gen_range(1, 6);
+        let kh = 1 + rng.gen_range(0, 3.min(h));
+        let kw = 1 + rng.gen_range(0, 3.min(w));
+        let stride = 1 + rng.gen_range(0, 2);
+        let pad = rng.gen_range(0, 2);
+        let xd: Dims4 = [b, h, w, c];
+        let x = rand_vec(&mut rng, b * h * w * c);
+        let (rows, k, _, _) = kernels::im2col_geom(xd, kh, kw, stride, pad);
+        let mut got = vec![0.0f32; rows * k];
+        kernels::im2col_into(&mut got, &x, xd, kh, kw, stride, pad);
+        let want = ref_im2col(&x, xd, kh, kw, stride, pad);
+        assert_eq!(got, want, "case {case}: {xd:?} k=({kh},{kw}) s={stride} p={pad}");
+    }
+}
+
+#[test]
+fn prop_col2im_matches_scatter_reference_and_is_adjoint() {
+    let mut rng = Rng64::seed_from_u64(0x90de);
+    for case in 0..60u64 {
+        let b = rng.gen_range(1, 3);
+        let h = rng.gen_range(3, 9);
+        let w = rng.gen_range(3, 9);
+        let c = rng.gen_range(1, 5);
+        let kh = 1 + rng.gen_range(0, 3.min(h));
+        let kw = 1 + rng.gen_range(0, 3.min(w));
+        let stride = 1 + rng.gen_range(0, 2);
+        let pad = rng.gen_range(0, 2);
+        let xd: Dims4 = [b, h, w, c];
+        let (rows, k, _, _) = kernels::im2col_geom(xd, kh, kw, stride, pad);
+        let cols = rand_vec(&mut rng, rows * k);
+        let mut got = vec![0.0f32; b * h * w * c];
+        kernels::col2im_into(&mut got, &cols, xd, kh, kw, stride, pad);
+        let want = ref_col2im(&cols, xd, kh, kw, stride, pad);
+        assert_eq!(got, want, "case {case}: {xd:?} k=({kh},{kw}) s={stride} p={pad}");
+
+        // adjointness: ⟨im2col(x), y⟩ = ⟨x, col2im(y)⟩ — im2col and col2im
+        // must be exact transposes of each other
+        let x = rand_vec(&mut rng, b * h * w * c);
+        let mut ix = vec![0.0f32; rows * k];
+        kernels::im2col_into(&mut ix, &x, xd, kh, kw, stride, pad);
+        let lhs: f64 = ix.iter().zip(&cols).map(|(&p, &q)| p as f64 * q as f64).sum();
+        let rhs: f64 = x.iter().zip(&got).map(|(&p, &q)| p as f64 * q as f64).sum();
+        assert!(
+            (lhs - rhs).abs() <= 1e-6 + 1e-9 * lhs.abs().max(rhs.abs()),
+            "case {case}: adjoint identity broken ({lhs} vs {rhs})"
+        );
+    }
+}
+
+#[test]
+fn prop_intra_thread_counts_are_bit_identical() {
+    // results must not depend on the intra-step split: same bits for 1, 2,
+    // 3 and 8 workers, including shapes big enough to clear the fork
+    // threshold and shapes with edge panels
+    let mut rng = Rng64::seed_from_u64(0xd00d);
+    for (m, k, n) in [(130, 70, 130), (257, 33, 129)] {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let btn = rand_vec(&mut rng, m * n);
+        let mut macs = 0u64;
+        kernels::set_intra_threads(1);
+        let base = kernels::matmul(&a, m, k, &b, n, &mut macs);
+        let base_tn = kernels::matmul_tn(&a, m, k, &btn, n, &mut macs);
+        for t in [2usize, 3, 8] {
+            kernels::set_intra_threads(t);
+            let got = kernels::matmul(&a, m, k, &b, n, &mut macs);
+            assert_eq!(base, got, "matmul bits differ at intra={t}");
+            let got_tn = kernels::matmul_tn(&a, m, k, &btn, n, &mut macs);
+            assert_eq!(base_tn, got_tn, "matmul_tn bits differ at intra={t}");
+        }
+        kernels::set_intra_threads(1);
+    }
+}

@@ -111,24 +111,29 @@ fn repeated_runs_are_bit_reproducible() {
     }
 }
 
-/// Smoke-size round-throughput recording at K=50: refreshes
+/// Smoke-size round-throughput + kernel-throughput recording: refreshes
 /// `BENCH_hotpath.json` on every `cargo test` run so the perf trajectory is
 /// tracked even where `cargo bench` never runs. Timing is recorded, not
 /// asserted (CI machines vary); bit-identity IS asserted.
 #[test]
 fn bench_round_smoke_writes_hotpath_json() {
-    use dtfl::harness::measure_round_throughput;
+    use std::time::Duration;
+
+    use dtfl::harness::{kernels_to_json, measure_kernel_throughput, measure_round_throughput};
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
 
     let rt = measure_round_throughput(50, 1, 8).expect("round throughput probe");
     assert!(rt.bit_identical, "K=50 parallel round must match sequential bits");
 
+    let (kernels, arena_peak) =
+        measure_kernel_throughput(Duration::from_millis(150)).expect("kernel throughput probe");
+    assert!(arena_peak > 0, "full_step must exercise the scratch arena");
+
     let mut report = BenchReport::new();
     // keep any full `cargo bench` micro-bench entries already on disk
     report.preserve_entries_from(hotpath_report_path());
-    report.extra(
-        "bench_round",
-        rt.to_json("cargo-test smoke (see benches/micro_hotpath.rs for the full run)"),
-    );
+    let source = "cargo-test smoke (see benches/micro_hotpath.rs for the full run)";
+    report.extra("bench_round", rt.to_json(source));
+    report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -2,7 +2,9 @@
 //! on this offline testbed). Each property runs against a few hundred
 //! seeded random cases; failures print the seed for reproduction.
 
-use dtfl::coordinator::{aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile};
+use dtfl::coordinator::{
+    aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile,
+};
 use dtfl::data::{partition, patch_shuffle, synth, PartitionScheme};
 use dtfl::runtime::Metadata;
 use dtfl::simulation::ServerModel;
@@ -239,7 +241,9 @@ fn prop_json_roundtrip_random_documents() {
             1 => json::Json::Bool(rng.next_f64() < 0.5),
             2 => json::Json::Num((rng.gen_f64(-1e6, 1e6) * 100.0).round() / 100.0),
             3 => json::Json::Str(format!("s{}-\"x\"\n", rng.gen_range(0, 1000))),
-            4 => json::Json::Arr((0..rng.gen_range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+            4 => json::Json::Arr(
+                (0..rng.gen_range(0, 5)).map(|_| random_json(rng, depth - 1)).collect(),
+            ),
             _ => json::Json::Obj(
                 (0..rng.gen_range(0, 5))
                     .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
