@@ -18,7 +18,10 @@ use dtfl::coordinator::{
     aggregate, schedule, ClientLoad, ClientUpdate, GlobalModel, Profiler, TierProfile,
 };
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
-use dtfl::harness::{kernels_to_json, measure_kernel_throughput, measure_round_throughput};
+use dtfl::harness::{
+    kernels_to_json, measure_kernel_throughput, measure_pipeline_throughput,
+    measure_round_throughput,
+};
 use dtfl::runtime::{literal as lit, Metadata};
 use dtfl::simulation::ServerModel;
 use dtfl::util::bench::{bench, hotpath_report_path, section, BenchReport};
@@ -29,6 +32,27 @@ fn tiny_meta() -> Metadata {
     // no artifacts on disk
     let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
     Metadata::load(&d).expect("tiny is a built-in config")
+}
+
+/// Pipelined-vs-barrier round throughput + sharded-aggregation GB/s
+/// (shared probe in `harness::measure_pipeline_throughput`).
+fn bench_pipeline(report: &mut BenchReport, clients: usize, rounds: usize) {
+    section(&format!("bench_pipeline: K={clients} barrier vs pipelined engine"));
+    let pt = measure_pipeline_throughput(clients, rounds, 16).expect("pipeline probe");
+    assert!(pt.bit_identical, "pipelined engine must be bit-identical to the barrier engine");
+    println!(
+        "K={clients}: barrier {:.3}s/round, pipelined {:.3}s/round — {:.2}x",
+        pt.barrier_secs_per_round,
+        pt.pipelined_secs_per_round,
+        pt.speedup()
+    );
+    for s in &pt.agg_shards {
+        println!(
+            "agg fold K={} P={} shards={:<3} {:>7.2} GB/s",
+            s.clients, s.params, s.shards, s.gb_per_sec
+        );
+    }
+    report.extra("pipeline", pt.to_json("cargo bench micro_hotpath"));
 }
 
 /// Round-throughput comparison: K clients, 1 thread vs all cores (shared
@@ -167,6 +191,9 @@ fn main() {
 
     // ---------------- whole-round throughput ----------------
     bench_round(&mut report, 50, 2);
+
+    // ---------------- pipelined engine + sharded aggregation ----------------
+    bench_pipeline(&mut report, 50, 2);
 
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

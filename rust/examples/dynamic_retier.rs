@@ -62,6 +62,9 @@ fn main() -> dtfl::anyhow::Result<()> {
                 privacy: PrivacyCfg::default(),
                 seed: 11,
                 threads: 0,
+                pipeline_depth: 4,
+                agg_shards: 0,
+                next_participants: None,
             };
             dtfl.round(&mut env)?
         };

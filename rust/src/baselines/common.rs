@@ -1,10 +1,18 @@
 //! Shared helpers for whole-model baselines (FedAvg / FedYogi / SplitFed):
 //! the per-client local training worker and a streaming weighted-average
-//! accumulator (the baselines' analogue of `coordinator::Aggregator`).
+//! accumulator (the baselines' analogue of `coordinator::Aggregator`, with
+//! the same pipelined/sharded fold).
+//!
+//! The double-buffering discipline here is implicit: workers read the
+//! method's `global` vector (the front snapshot) while updates accumulate
+//! into [`WeightedAvg`]'s separate buffer (the back); `finish_into`
+//! overwrites `global` only after the worker scope has ended, so no reader
+//! ever sees a partially reduced vector.
 
 use crate::anyhow::Result;
-use crate::coordinator::parallel::for_each_streamed;
-use crate::fed::RoundEnv;
+use crate::coordinator::aggregate::fold_whole;
+use crate::coordinator::parallel::{for_each_streamed_windowed, resolve_shards};
+use crate::fed::{PoolTask, RoundEnv};
 use crate::runtime::{StepEngine, TrainState};
 use crate::simulation::ClientRoundTime;
 
@@ -38,6 +46,11 @@ pub fn local_full_train(
 /// between those baselines is the optimizer flag and the per-client timing
 /// model, supplied as `time_of(client, host_secs)`.
 ///
+/// Pipelining: the accumulator buffers up to `env.pipeline_depth` updates
+/// per sharded flush (`env.agg_shards`), and next-round batch-encoding
+/// prefetch items ride at the tail of the pool's item list — both
+/// bit-invisible (see `coordinator::aggregate`).
+///
 /// Returns the (unfinished) accumulator, per-participant timings, and the
 /// summed last-batch losses.
 pub fn run_full_model_round(
@@ -46,20 +59,32 @@ pub fn run_full_model_round(
     sgd: bool,
     mut time_of: impl FnMut(usize, f64) -> ClientRoundTime,
 ) -> Result<(WeightedAvg, Vec<ClientRoundTime>, f64)> {
-    let mut avg = WeightedAvg::new(global.len());
+    let tasks = env.pool_tasks(env.participants.iter().copied());
+
+    let mut avg = WeightedAvg::with_pipeline(global.len(), env.pipeline_depth, env.agg_shards);
     let mut times = Vec::with_capacity(env.participants.len());
     let mut loss_sum = 0.0f64;
-    for_each_streamed(
+    for_each_streamed_windowed(
         env.threads,
-        env.participants,
-        |_, &k| {
-            let (params, host, loss) = local_full_train(env, k, global, sgd)?;
-            Ok((k, params, host, loss))
+        env.pipeline_depth.saturating_sub(1),
+        &tasks,
+        |_, task| match task {
+            PoolTask::Work(k) => {
+                let (params, host, loss) = local_full_train(env, *k, global, sgd)?;
+                Ok(Some((*k, params, host, loss)))
+            }
+            PoolTask::Prefetch { k, bi } => {
+                env.run_prefetch(*k, *bi)?;
+                Ok(None)
+            }
         },
-        |_, (k, params, host, loss): (usize, Vec<f32>, f64, f64)| {
+        |_, item: Option<(usize, Vec<f32>, f64, f64)>| {
+            let Some((k, params, host, loss)) = item else {
+                return Ok(());
+            };
             times.push(time_of(k, host));
             loss_sum += loss;
-            avg.fold(&params, env.partition.size(k).max(1) as f64)
+            avg.fold_owned(params, env.partition.size(k).max(1) as f64)
         },
     )?;
     Ok((avg, times, loss_sum))
@@ -67,43 +92,97 @@ pub fn run_full_model_round(
 
 /// Streaming weighted average over full-model parameter vectors: folds each
 /// update in as it arrives (unnormalized), divides by the total weight once
-/// at the end — no `Vec` of K models is ever held.
+/// at the end — no `Vec` of K models is ever held. With a pipeline depth,
+/// up to `depth` updates queue before a flush that folds them — sharded
+/// over scoped threads when `shards` > 1 — in arrival order per element,
+/// so every `(depth, shards)` setting produces identical bits.
 pub struct WeightedAvg {
     acc: Vec<f32>,
     total_w: f64,
     count: usize,
+    pending: Vec<(Vec<f32>, f32)>,
+    depth: usize,
+    shards: usize,
 }
 
 impl WeightedAvg {
+    /// Barrier accumulator (depth 1, serial fold) — the reference behavior.
     pub fn new(n: usize) -> Self {
-        Self { acc: vec![0.0f32; n], total_w: 0.0, count: 0 }
+        Self::with_pipeline(n, 1, 1)
     }
 
-    pub fn fold(&mut self, params: &[f32], w: f64) -> Result<()> {
+    /// Pipelined/sharded accumulator; `depth` clamped to ≥ 1, `shards`
+    /// resolved like the engine knob (0 = one per core).
+    pub fn with_pipeline(n: usize, depth: usize, shards: usize) -> Self {
+        Self {
+            acc: vec![0.0f32; n],
+            total_w: 0.0,
+            count: 0,
+            pending: Vec::new(),
+            depth: depth.max(1),
+            shards: resolve_shards(shards, n),
+        }
+    }
+
+    /// Shared admission: validate and apply the weight/count bookkeeping.
+    fn admit(&mut self, len: usize, w: f64) -> Result<()> {
         crate::anyhow::ensure!(
-            params.len() == self.acc.len(),
+            len == self.acc.len(),
             "update has {} params, accumulator {}",
-            params.len(),
+            len,
             self.acc.len()
         );
         crate::anyhow::ensure!(w > 0.0, "non-positive aggregation weight {w}");
-        let wf = w as f32;
-        for (a, &p) in self.acc.iter_mut().zip(params) {
-            *a += wf * p;
-        }
         self.total_w += w;
         self.count += 1;
         Ok(())
+    }
+
+    /// Fold one borrowed update. With no pipeline (depth 1) this folds
+    /// directly off the borrowed slice — zero-copy, the pre-pipeline hot
+    /// path; with a pipeline it is cloned into the queue (round loops hand
+    /// over ownership via [`WeightedAvg::fold_owned`] instead).
+    pub fn fold(&mut self, params: &[f32], w: f64) -> Result<()> {
+        if self.depth > 1 || !self.pending.is_empty() {
+            return self.fold_owned(params.to_vec(), w);
+        }
+        self.admit(params.len(), w)?;
+        fold_whole(&mut self.acc, &[(params, w as f32)], self.shards);
+        Ok(())
+    }
+
+    /// Queue one owned update for the pipelined fold.
+    pub fn fold_owned(&mut self, params: Vec<f32>, w: f64) -> Result<()> {
+        self.admit(params.len(), w)?;
+        self.pending.push((params, w as f32));
+        if self.pending.len() >= self.depth {
+            self.flush();
+        }
+        Ok(())
+    }
+
+    /// Fold all queued updates into the accumulator (sharded when
+    /// `shards` > 1; per-element order is arrival order either way —
+    /// the reduction core is shared with `coordinator::aggregate`).
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.pending);
+        let items: Vec<(&[f32], f32)> =
+            pending.iter().map(|(p, w)| (p.as_slice(), *w)).collect();
+        fold_whole(&mut self.acc, &items, self.shards);
     }
 
     pub fn count(&self) -> usize {
         self.count
     }
 
-    /// Normalize into `out`.
-    pub fn finish_into(self, out: &mut [f32]) -> Result<()> {
+    /// Flush and normalize into `out`.
+    pub fn finish_into(mut self, out: &mut [f32]) -> Result<()> {
         crate::anyhow::ensure!(self.count > 0, "weighted average of no updates");
         crate::anyhow::ensure!(self.total_w > 0.0, "total weight must be positive");
+        self.flush();
         let inv = (1.0 / self.total_w) as f32;
         for (o, a) in out.iter_mut().zip(self.acc) {
             *o = a * inv;
@@ -151,6 +230,33 @@ mod tests {
         let mut streamed = vec![0.0f32; 3];
         avg.finish_into(&mut streamed).unwrap();
         assert_eq!(batch, streamed);
+    }
+
+    #[test]
+    fn pipelined_sharded_average_is_bit_identical() {
+        // enough elements that resolve_shards does not clamp everything
+        // back to one shard
+        let n = 40_000usize;
+        let ups: Vec<(Vec<f32>, f64)> = (0..7)
+            .map(|i| {
+                let v: Vec<f32> =
+                    (0..n).map(|j| ((i * 31 + j) % 97) as f32 * 0.061 - 2.5).collect();
+                (v, 1.0 + i as f64)
+            })
+            .collect();
+        let mut reference = vec![0.0f32; n];
+        weighted_average(&ups, &mut reference);
+        for depth in [1usize, 3, 16] {
+            for shards in [1usize, 2, 5, 0] {
+                let mut avg = WeightedAvg::with_pipeline(n, depth, shards);
+                for (p, w) in &ups {
+                    avg.fold(p, *w).unwrap();
+                }
+                let mut out = vec![0.0f32; n];
+                avg.finish_into(&mut out).unwrap();
+                assert_eq!(reference, out, "depth={depth} shards={shards}");
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! behaviour DTFL's Table 1/3 rows are compared against.
 //!
 //! Clients execute on the parallel worker pool; their models stream into a
-//! [`WeightedAvg`] in participant order (bit-identical to sequential).
+//! pipelined, sharded [`WeightedAvg`] in participant order (bit-identical
+//! to the sequential barrier engine for every knob setting — see
+//! `baselines::common::run_full_model_round`).
 
 use crate::anyhow::Result;
 use crate::fed::{Method, RoundEnv, RoundOutcome};
@@ -43,6 +45,9 @@ impl Method for FedAvg {
                 }
             })?;
 
+        if avg.count() == 0 {
+            return Ok(RoundOutcome::carried_over(env.round));
+        }
         avg.finish_into(&mut self.global)?;
         Ok(RoundOutcome {
             times,

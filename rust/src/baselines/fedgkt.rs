@@ -19,14 +19,18 @@
 //! updates stream into the aggregator in participant order.
 
 use crate::anyhow::Result;
-use crate::coordinator::parallel::for_each_streamed;
+use crate::coordinator::parallel::for_each_streamed_windowed;
 use crate::coordinator::{Aggregator, ClientUpdate, GlobalModel};
-use crate::fed::{Method, RoundEnv, RoundOutcome};
+use crate::fed::{Method, PoolTask, RoundEnv, RoundOutcome};
 use crate::runtime::{Runtime, StepEngine, TrainState};
 use crate::simulation::ClientRoundTime;
 
 pub struct FedGkt {
     pub global: GlobalModel,
+    /// Double-buffered aggregation target (see `coordinator::round`):
+    /// workers read `global`, `finish_into` writes here, one swap
+    /// publishes. Reused across rounds.
+    back: GlobalModel,
     /// Fixed split (GKT's edge model ≈ our tier-2 client side).
     pub tier: usize,
     /// Server-side distillation passes per round.
@@ -35,11 +39,9 @@ pub struct FedGkt {
 
 impl FedGkt {
     pub fn new(rt: &Runtime) -> Result<Self> {
-        Ok(Self {
-            global: crate::coordinator::load_initial_model(rt)?,
-            tier: 2,
-            server_epochs: 2,
-        })
+        let global = crate::coordinator::load_initial_model(rt)?;
+        let back = global.zeros_like();
+        Ok(Self { global, back, tier: 2, server_epochs: 2 })
     }
 }
 
@@ -62,13 +64,23 @@ impl Method for FedGkt {
         let server_epochs = self.server_epochs;
         let global = &self.global;
 
-        let mut agg = Aggregator::new(meta);
+        let tasks = env.pool_tasks(env.participants.iter().copied());
+
+        let mut agg = Aggregator::with_pipeline(meta, env.pipeline_depth, env.agg_shards);
         let mut times = Vec::with_capacity(env.participants.len());
         let mut loss_sum = 0.0f64;
-        for_each_streamed(
+        for_each_streamed_windowed(
             env.threads,
-            env.participants,
-            |_, &k| -> Result<GktBundle> {
+            env.pipeline_depth.saturating_sub(1),
+            &tasks,
+            |_, task| -> Result<Option<GktBundle>> {
+                let k = match task {
+                    PoolTask::Work(k) => *k,
+                    PoolTask::Prefetch { k, bi } => {
+                        env.run_prefetch(*k, *bi)?;
+                        return Ok(None);
+                    }
+                };
                 let rt = env.rt;
                 let engine = StepEngine::new(rt);
                 let tmeta = meta.tier(tier);
@@ -105,7 +117,7 @@ impl Method for FedGkt {
                 let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
                 let sim_com = profile.comm_secs(bytes);
 
-                Ok(GktBundle {
+                Ok(Some(GktBundle {
                     update: ClientUpdate {
                         client_id: k,
                         tier,
@@ -115,18 +127,21 @@ impl Method for FedGkt {
                     },
                     time: ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s },
                     loss,
-                })
+                }))
             },
-            |_, b: GktBundle| {
-                agg.fold(&b.update)?;
+            |_, b: Option<GktBundle>| {
+                let Some(b) = b else { return Ok(()) };
                 times.push(b.time);
                 loss_sum += b.loss;
-                Ok(())
+                agg.fold_owned(b.update)
             },
         )?;
 
-        let new_global = agg.finish(&self.global)?;
-        self.global = new_global;
+        if agg.count() == 0 {
+            return Ok(RoundOutcome::carried_over(env.round));
+        }
+        agg.finish_into(&self.global, &mut self.back)?;
+        std::mem::swap(&mut self.global, &mut self.back);
         Ok(RoundOutcome {
             times,
             train_loss: loss_sum / env.participants.len().max(1) as f64,

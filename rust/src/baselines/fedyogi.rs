@@ -11,8 +11,8 @@
 //!
 //! Timing model is identical to FedAvg (whole model down/up + full local
 //! compute) — FedYogi changes the optimizer, not the systems profile.
-//! Clients run on the parallel pool; the streamed weighted average feeds the
-//! Yogi server update.
+//! Clients run on the parallel pool; the streamed (pipelined, sharded)
+//! weighted average feeds the Yogi server update.
 
 use crate::anyhow::Result;
 use crate::fed::{Method, RoundEnv, RoundOutcome};
@@ -64,6 +64,12 @@ impl Method for FedYogi {
                     server: 0.0,
                 }
             })?;
+
+        if avg.count() == 0 {
+            // no pseudo-gradient, no Yogi step — model and optimizer state
+            // carry over
+            return Ok(RoundOutcome::carried_over(env.round));
+        }
 
         // aggregated client model → pseudo-gradient
         let mut delta = vec![0.0f32; self.global.len()];

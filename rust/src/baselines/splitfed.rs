@@ -13,7 +13,11 @@
 //! so per-client round time is the *sum* of compute and per-batch
 //! communication, not the max — this synchronization stall is exactly what
 //! DTFL's local-loss training removes. (The *coordinator*, of course, still
-//! simulates many such stalled clients concurrently on the worker pool.)
+//! simulates many such stalled clients concurrently on the worker pool, and
+//! aggregates them through the pipelined, sharded [`WeightedAvg`] like the
+//! other whole-model baselines.)
+//!
+//! [`WeightedAvg`]: super::common::WeightedAvg
 
 use crate::anyhow::Result;
 use crate::fed::{Method, RoundEnv, RoundOutcome};
@@ -81,6 +85,9 @@ impl Method for SplitFed {
                 }
             })?;
 
+        if avg.count() == 0 {
+            return Ok(RoundOutcome::carried_over(env.round));
+        }
         avg.finish_into(&mut self.global)?;
         Ok(RoundOutcome {
             times,

@@ -80,6 +80,14 @@ pub struct RunCfg {
     /// **process-wide** (last-constructed experiment wins), which is safe
     /// because results are bit-identical for every setting.
     pub intra_threads: usize,
+    /// Client updates the round engines buffer before a sharded aggregation
+    /// flush (≥ 1; 1 = the barrier engine's update-at-a-time fold). Also
+    /// gates next-round input prefetch. Bit-identical results for every
+    /// setting.
+    pub pipeline_depth: usize,
+    /// Shards the flat parameter vector is split into during aggregation
+    /// (0 = one per core, 1 = serial fold). Bit-identical for every value.
+    pub agg_shards: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -191,6 +199,8 @@ impl ExperimentConfig {
                 timing_noise: s.f64_or("timing_noise", 0.05)?,
                 threads: s.usize_or("threads", 0)?,
                 intra_threads: s.usize_or("intra_threads", 1)?,
+                pipeline_depth: s.usize_or("pipeline_depth", 4)?,
+                agg_shards: s.usize_or("agg_shards", 0)?,
             }
         };
         let sim = {
@@ -248,6 +258,10 @@ impl ExperimentConfig {
         if let Some(a) = self.privacy.dcor_alpha {
             crate::anyhow::ensure!((0.0..=1.0).contains(&a), "dcor_alpha must be in [0,1]");
         }
+        crate::anyhow::ensure!(
+            self.run.pipeline_depth >= 1,
+            "run.pipeline_depth must be >= 1 (1 = barrier engine)"
+        );
         Ok(())
     }
 }
@@ -272,6 +286,8 @@ mod tests {
         assert_eq!(cfg.run.rounds, 50);
         assert_eq!(cfg.run.max_tiers, 7);
         assert_eq!(cfg.run.intra_threads, 1, "intra-step parallelism defaults off");
+        assert_eq!(cfg.run.pipeline_depth, 4, "pipelined aggregation defaults on");
+        assert_eq!(cfg.run.agg_shards, 0, "sharded aggregation defaults to one per core");
         assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
         assert!(cfg.privacy.dcor_alpha.is_none());
         assert!(cfg.output.is_none());
@@ -315,6 +331,8 @@ mod tests {
             rounds = 100
             target_accuracy = 0.8
             sample_frac = 0.5
+            pipeline_depth = 2
+            agg_shards = 3
             [sim]
             server_speedup = 4.0
             profile_switch_every = 50
@@ -327,10 +345,18 @@ mod tests {
         "#;
         let cfg = ExperimentConfig::parse(text).unwrap();
         assert_eq!(cfg.clients.count, 20);
+        assert_eq!(cfg.run.pipeline_depth, 2);
+        assert_eq!(cfg.run.agg_shards, 3);
         assert_eq!(cfg.privacy.patch_shuffle, Some(4));
         assert_eq!(cfg.sim.profile_switch_every, 50);
         assert_eq!(cfg.output.as_ref().unwrap().dir, PathBuf::from("results"));
         assert_eq!(cfg.clients.profile_pool, crate::simulation::ProfilePool::Case1);
+    }
+
+    #[test]
+    fn zero_pipeline_depth_rejected() {
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\npipeline_depth = 0");
+        assert!(ExperimentConfig::parse(&text).is_err());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Model aggregation (Algorithm 1, step ⑤ / lines 11–13) — streaming.
+//! Model aggregation (Algorithm 1, step ⑤ / lines 11–13) — streaming,
+//! pipelined, and sharded.
 //!
 //! Each client's halves are reconstituted in the flat layout
 //! (w_k = client_vec[..cut_k] ‖ server_vec_k) and averaged, weighted by
@@ -6,18 +7,39 @@
 //! among the clients that trained that tier this round.
 //!
 //! This is the L3 hot loop — O(K · P) f32 FMAs per round. [`Aggregator`]
-//! folds each update into a single accumulator **as it arrives** (the
-//! parallel round engine streams results through it in deterministic
-//! participant order), so no `Vec<ClientUpdate>` is ever materialized:
-//! peak memory is one accumulator + one in-flight update instead of K full
-//! models. Unnormalized weighted sums are kept during the fold and divided
-//! by the total weight once in `finish`. The inner loops are chunked,
-//! bounds-check-free axpy that autovectorizes.
+//! folds each update **as it arrives** (the parallel round engine streams
+//! results through it in deterministic participant order), so no
+//! `Vec<ClientUpdate>` of all K models is ever materialized. Two knobs
+//! pipeline and parallelize the fold without changing a single bit of the
+//! result:
+//!
+//! * **`pipeline_depth`** — up to `depth` updates are queued before their
+//!   flat-range folds run, so one flush amortizes the accumulator traffic
+//!   over several updates (and, with shards, one scoped fork). Peak memory
+//!   grows from one in-flight update to `depth` — still O(depth), never
+//!   O(K). Scalar bookkeeping (weights, counts, the tiny aux heads) is
+//!   folded eagerly so `count()`/diagnostics stay exact.
+//! * **`agg_shards`** — each flush splits the flat accumulator into
+//!   contiguous chunks ([`super::parallel::shard_chunks`]) reduced in
+//!   parallel over [`super::parallel::join_scoped`]. Within every chunk the
+//!   queued updates fold in participant order, so each accumulator element
+//!   sees exactly the sequential engine's addition order no matter the
+//!   shard or thread count — the same pinned-reduction-order discipline as
+//!   the kernels layer.
+//!
+//! Unnormalized weighted sums are kept during the fold and divided by the
+//! total weight once in `finish`/`finish_into`. [`Aggregator::finish_into`]
+//! writes the normalized model into a caller-owned **back buffer** (the
+//! round engines double-buffer their `GlobalModel` snapshot: readers hold
+//! the front, aggregation streams into the back, one swap publishes), also
+//! sharded. The inner loops are chunked, bounds-check-free axpy that
+//! autovectorizes.
 
 use crate::anyhow::Result;
 use crate::runtime::Metadata;
 
 use super::model_state::{ClientUpdate, GlobalModel};
+use super::parallel::{join_scoped, resolve_shards, shard_chunks};
 
 /// `acc += w * x` over cache-friendly chunks, vectorizable.
 #[inline]
@@ -31,6 +53,97 @@ fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
     }
 }
 
+/// One queued flat-range fold: the owned halves of a client update plus the
+/// precomputed cut and weight (aux bookkeeping already applied eagerly).
+struct PendingFold {
+    cut: usize,
+    w: f32,
+    client_vec: Vec<f32>,
+    server_vec: Vec<f32>,
+}
+
+/// Borrowed view of one queued fold, the unit `fold_refs` reduces.
+struct FoldRef<'a> {
+    cut: usize,
+    w: f32,
+    /// Full client vector; only the `[..cut]` prefix is read here (the aux
+    /// tail past `cut` is folded separately at enqueue time).
+    client: &'a [f32],
+    server: &'a [f32],
+}
+
+/// Fold a batch of queued updates into the flat accumulator, optionally
+/// sharded. **Determinism contract:** element `e` of `flat` receives the
+/// updates' contributions in slice order (= participant order) whether the
+/// loop runs serially or per-chunk on scoped threads — chunks are disjoint
+/// and each chunk iterates the same slice in the same order.
+fn fold_refs(flat: &mut [f32], folds: &[FoldRef<'_>], shards: usize) {
+    if folds.is_empty() {
+        return;
+    }
+    if shards <= 1 {
+        for f in folds {
+            axpy(&mut flat[..f.cut], &f.client[..f.cut], f.w);
+            axpy(&mut flat[f.cut..], f.server, f.w);
+        }
+        return;
+    }
+    let chunks = shard_chunks(flat, shards);
+    join_scoped(chunks, |(start, chunk)| {
+        let end = start + chunk.len();
+        for f in folds {
+            // client prefix covers global indices [0, cut)
+            if start < f.cut {
+                let hi = f.cut.min(end);
+                axpy(&mut chunk[..hi - start], &f.client[start..hi], f.w);
+            }
+            // server suffix covers global indices [cut, total)
+            if end > f.cut {
+                let lo = f.cut.max(start);
+                axpy(&mut chunk[lo - start..], &f.server[lo - f.cut..end - f.cut], f.w);
+            }
+        }
+    });
+}
+
+/// Fold whole-vector `(params, w)` updates — no client/server cut — into
+/// `acc` with an already-resolved shard count: a cut-less update is a
+/// [`FoldRef`] whose client half spans the entire vector. The baselines'
+/// `WeightedAvg` shares the sharded reduction core (and its pinned
+/// per-element order contract) through this instead of duplicating it.
+pub(crate) fn fold_whole(acc: &mut [f32], items: &[(&[f32], f32)], shards: usize) {
+    let cut = acc.len();
+    let folds: Vec<FoldRef<'_>> = items
+        .iter()
+        .map(|&(p, w)| FoldRef { cut, w, client: p, server: &[] })
+        .collect();
+    fold_refs(acc, &folds, shards);
+}
+
+/// Fold a fixed batch of updates into `acc` (length `meta.total_params`)
+/// with the given shard count — the bare sharded reduction without the
+/// streaming engine's bookkeeping, exposed so the micro-bench can measure
+/// the GB/s it sustains. `shards` is resolved like the engine knob
+/// (0 = one per core).
+pub fn fold_updates_sharded(
+    meta: &Metadata,
+    acc: &mut [f32],
+    updates: &[ClientUpdate],
+    shards: usize,
+) {
+    let folds: Vec<FoldRef<'_>> = updates
+        .iter()
+        .map(|u| FoldRef {
+            cut: meta.cut_offset(u.tier),
+            w: u.weight as f32,
+            client: &u.client_vec,
+            server: &u.server_vec,
+        })
+        .collect();
+    let shards = resolve_shards(shards, acc.len());
+    fold_refs(acc, &folds, shards);
+}
+
 /// Streaming weighted-average accumulator for one round's client updates.
 pub struct Aggregator<'m> {
     meta: &'m Metadata,
@@ -39,16 +152,34 @@ pub struct Aggregator<'m> {
     aux_w: Vec<f64>,
     total_w: f64,
     count: usize,
+    /// Updates whose flat-range folds are deferred to the next flush
+    /// (≤ `depth` in flight).
+    pending: Vec<PendingFold>,
+    depth: usize,
+    shards: usize,
 }
 
 impl<'m> Aggregator<'m> {
+    /// Barrier-engine accumulator: every update folds serially as it
+    /// arrives (`pipeline_depth` 1, `agg_shards` 1) — the reference
+    /// behavior all pipelined/sharded configurations must bit-match.
     pub fn new(meta: &'m Metadata) -> Self {
+        Self::with_pipeline(meta, 1, 1)
+    }
+
+    /// Pipelined/sharded accumulator. `depth` is clamped to ≥ 1; `shards`
+    /// is resolved per [`resolve_shards`] (0 = one per core). Results are
+    /// bit-identical for every `(depth, shards)` setting.
+    pub fn with_pipeline(meta: &'m Metadata, depth: usize, shards: usize) -> Self {
         Self {
             flat: vec![0.0f32; meta.total_params],
             aux: meta.tiers.iter().map(|t| vec![0.0f32; t.aux_len]).collect(),
             aux_w: vec![0.0f64; meta.max_tiers],
             total_w: 0.0,
             count: 0,
+            pending: Vec::new(),
+            depth: depth.max(1),
+            shards: resolve_shards(shards, meta.total_params),
             meta,
         }
     }
@@ -57,49 +188,140 @@ impl<'m> Aggregator<'m> {
         self.count
     }
 
-    /// Fold one client update into the accumulator (chunked axpy over the
-    /// client-prefix and server-suffix parameter ranges).
-    pub fn fold(&mut self, u: &ClientUpdate) -> Result<()> {
+    /// Updates queued but not yet folded into the flat accumulator
+    /// (diagnostics/tests; always 0 right after a flush or `finish`).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Shared admission: validate, then apply the eager bookkeeping
+    /// (weights, count, aux-tail fold). Returns `(cut, w)` for the caller's
+    /// flat-range fold.
+    fn admit(&mut self, u: &ClientUpdate) -> Result<(usize, f32)> {
         u.check(self.meta)?;
         crate::anyhow::ensure!(u.weight > 0.0, "client {} has non-positive weight", u.client_id);
         let w = u.weight as f32;
         let cut = self.meta.cut_offset(u.tier);
-        // client params occupy the flat prefix [..cut]
-        axpy(&mut self.flat[..cut], &u.client_vec[..cut], w);
-        // server half occupies [cut..]
-        axpy(&mut self.flat[cut..], &u.server_vec, w);
-        // aux tail, averaged within its tier
+        // aux tail, averaged within its tier (tiny — folded eagerly)
         self.aux_w[u.tier - 1] += u.weight;
         if self.meta.tier(u.tier).aux_len > 0 {
             axpy(&mut self.aux[u.tier - 1], &u.client_vec[cut..], w);
         }
         self.total_w += u.weight;
         self.count += 1;
+        Ok((cut, w))
+    }
+
+    /// Fold one borrowed client update. With no pipeline (depth 1) this is
+    /// the zero-copy hot path — the flat-range fold runs directly off the
+    /// borrowed slices, no clone, exactly the pre-pipeline behavior the
+    /// `aggregate K=…` micro-bench tracks. With a pipeline the update is
+    /// cloned into the queue (round engines avoid even that by handing
+    /// over ownership via [`Aggregator::fold_owned`]).
+    pub fn fold(&mut self, u: &ClientUpdate) -> Result<()> {
+        if self.depth > 1 || !self.pending.is_empty() {
+            return self.fold_owned(u.clone());
+        }
+        let (cut, w) = self.admit(u)?;
+        let f = FoldRef { cut, w, client: &u.client_vec, server: &u.server_vec };
+        fold_refs(&mut self.flat, std::slice::from_ref(&f), self.shards);
         Ok(())
     }
 
-    /// Normalize and build the new global model. Aux heads of tiers with no
-    /// participant this round are carried over from `prev` unchanged.
-    pub fn finish(mut self, prev: &GlobalModel) -> Result<GlobalModel> {
-        crate::anyhow::ensure!(self.count > 0, "aggregate called with no updates");
-        crate::anyhow::ensure!(self.total_w > 0.0, "total aggregation weight must be positive");
-        let inv = (1.0 / self.total_w) as f32;
-        self.flat.iter_mut().for_each(|v| *v *= inv);
-        let aux: Vec<Vec<f32>> = self
-            .aux
-            .into_iter()
-            .enumerate()
-            .map(|(i, mut acc)| {
-                if self.aux_w[i] > 0.0 {
-                    let ainv = (1.0 / self.aux_w[i]) as f32;
-                    acc.iter_mut().for_each(|v| *v *= ainv);
-                    acc
-                } else {
-                    prev.aux[i].clone()
-                }
+    /// Queue one owned client update for the pipelined fold. Bookkeeping is
+    /// applied immediately; the O(P) flat-range fold runs at the next flush
+    /// (after `pipeline_depth` updates, or at `finish`).
+    pub fn fold_owned(&mut self, u: ClientUpdate) -> Result<()> {
+        let (cut, w) = self.admit(&u)?;
+        self.pending.push(PendingFold {
+            cut,
+            w,
+            client_vec: u.client_vec,
+            server_vec: u.server_vec,
+        });
+        if self.pending.len() >= self.depth {
+            self.flush();
+        }
+        Ok(())
+    }
+
+    /// Fold all queued updates into the flat accumulator (sharded when
+    /// `agg_shards` > 1) and release their buffers.
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.pending);
+        let folds: Vec<FoldRef<'_>> = pending
+            .iter()
+            .map(|p| FoldRef {
+                cut: p.cut,
+                w: p.w,
+                client: &p.client_vec,
+                server: &p.server_vec,
             })
             .collect();
-        Ok(GlobalModel { flat: self.flat, aux })
+        fold_refs(&mut self.flat, &folds, self.shards);
+    }
+
+    /// Flush, normalize, and write the new global model into `back` — the
+    /// **double-buffered** publication path: readers of the front snapshot
+    /// (`prev`) are never touched, accumulation and normalization only
+    /// write `back`, and the caller's swap of front/back is the single
+    /// publication point, so no reader can ever observe a partially
+    /// reduced vector. Aux heads of tiers with no participant this round
+    /// are carried over from `prev` unchanged. Every element of `back` is
+    /// overwritten.
+    pub fn finish_into(&mut self, prev: &GlobalModel, back: &mut GlobalModel) -> Result<()> {
+        crate::anyhow::ensure!(self.count > 0, "aggregate called with no updates");
+        crate::anyhow::ensure!(self.total_w > 0.0, "total aggregation weight must be positive");
+        crate::anyhow::ensure!(
+            back.flat.len() == self.flat.len() && back.aux.len() == self.aux.len(),
+            "back snapshot shape mismatch"
+        );
+        self.flush();
+        let inv = (1.0 / self.total_w) as f32;
+        if self.shards <= 1 {
+            for (o, &a) in back.flat.iter_mut().zip(self.flat.iter()) {
+                *o = a * inv;
+            }
+        } else {
+            // sharded normalize: elementwise, so trivially order-pinned
+            let acc = &self.flat;
+            let chunks = shard_chunks(&mut back.flat, self.shards);
+            join_scoped(chunks, |(start, chunk)| {
+                let src = &acc[start..start + chunk.len()];
+                for (o, &a) in chunk.iter_mut().zip(src) {
+                    *o = a * inv;
+                }
+            });
+        }
+        for i in 0..self.meta.max_tiers {
+            crate::anyhow::ensure!(
+                back.aux[i].len() == self.aux[i].len(),
+                "back aux head {} shape mismatch",
+                i + 1
+            );
+            if self.aux_w[i] > 0.0 {
+                let ainv = (1.0 / self.aux_w[i]) as f32;
+                for (o, &a) in back.aux[i].iter_mut().zip(self.aux[i].iter()) {
+                    *o = a * ainv;
+                }
+            } else {
+                back.aux[i].copy_from_slice(&prev.aux[i]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Normalize and build the new global model (allocating form; the round
+    /// engines reuse a back buffer via [`Aggregator::finish_into`]). Aux
+    /// heads of tiers with no participant this round are carried over from
+    /// `prev` unchanged.
+    pub fn finish(mut self, prev: &GlobalModel) -> Result<GlobalModel> {
+        let mut back = GlobalModel::zeros(self.meta);
+        self.finish_into(prev, &mut back)?;
+        Ok(back)
     }
 }
 
@@ -128,6 +350,10 @@ mod tests {
         Metadata::load(&d).ok()
     }
 
+    fn zero_prev(meta: &Metadata) -> GlobalModel {
+        GlobalModel::zeros(meta)
+    }
+
     fn update(meta: &Metadata, tier: usize, fill: f32, weight: f64, id: usize) -> ClientUpdate {
         let t = meta.tier(tier);
         ClientUpdate {
@@ -142,11 +368,7 @@ mod tests {
     #[test]
     fn identical_updates_average_to_same_value() {
         let Some(meta) = tiny_meta() else { return };
-        let prev = GlobalModel::new(
-            vec![0.0; meta.total_params],
-            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
-            &meta,
-        );
+        let prev = zero_prev(&meta);
         let ups = vec![
             update(&meta, 2, 3.0, 10.0, 0),
             update(&meta, 5, 3.0, 10.0, 1),
@@ -158,11 +380,7 @@ mod tests {
     #[test]
     fn weights_are_proportional() {
         let Some(meta) = tiny_meta() else { return };
-        let prev = GlobalModel::new(
-            vec![0.0; meta.total_params],
-            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
-            &meta,
-        );
+        let prev = zero_prev(&meta);
         // same tier: 1.0-filled with weight 3, 0.0-filled with weight 1
         let ups = vec![update(&meta, 3, 1.0, 3.0, 0), update(&meta, 3, 0.0, 1.0, 1)];
         let g = aggregate(&meta, &prev, &ups).unwrap();
@@ -187,22 +405,14 @@ mod tests {
     #[test]
     fn empty_updates_rejected() {
         let Some(meta) = tiny_meta() else { return };
-        let prev = GlobalModel::new(
-            vec![0.0; meta.total_params],
-            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
-            &meta,
-        );
+        let prev = zero_prev(&meta);
         assert!(aggregate(&meta, &prev, &[]).is_err());
     }
 
     #[test]
     fn mixed_tiers_blend_prefix_only_where_covered() {
         let Some(meta) = tiny_meta() else { return };
-        let prev = GlobalModel::new(
-            vec![0.0; meta.total_params],
-            meta.tiers.iter().map(|t| vec![0.0; t.aux_len]).collect(),
-            &meta,
-        );
+        let prev = zero_prev(&meta);
         // tier-1 client contributes 2.0 everywhere; tier-7 client 4.0.
         let ups = vec![update(&meta, 1, 2.0, 1.0, 0), update(&meta, 7, 4.0, 1.0, 1)];
         let g = aggregate(&meta, &prev, &ups).unwrap();
@@ -233,5 +443,144 @@ mod tests {
         let streamed = agg.finish(&prev).unwrap();
         assert_eq!(batch.flat, streamed.flat, "fold order is the batch order — bit-identical");
         assert_eq!(batch.aux, streamed.aux);
+    }
+
+    /// Random-ish but deterministic update set mixing tiers and weights.
+    fn mixed_updates(meta: &Metadata, k: usize) -> Vec<ClientUpdate> {
+        (0..k)
+            .map(|i| {
+                let tier = 1 + (i * 3 + 1) % meta.max_tiers;
+                let fill = (i as f32 * 0.37 - 1.5) * if i % 2 == 0 { 1.0 } else { -0.5 };
+                update(meta, tier, fill, 1.0 + (i % 5) as f64 * 2.5, i)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_pipelined_fold_is_bit_identical_to_serial() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.25; t.aux_len]).collect(),
+            &meta,
+        );
+        let ups = mixed_updates(&meta, 9);
+        let reference = aggregate(&meta, &prev, &ups).unwrap();
+        for depth in [1usize, 2, 4, 64] {
+            for shards in [1usize, 2, 3, 5, 0] {
+                let mut agg = Aggregator::with_pipeline(&meta, depth, shards);
+                for u in &ups {
+                    agg.fold(u).unwrap();
+                }
+                let g = agg.finish(&prev).unwrap();
+                assert_eq!(
+                    reference.flat, g.flat,
+                    "depth={depth} shards={shards}: flat params diverged"
+                );
+                assert_eq!(reference.aux, g.aux, "depth={depth} shards={shards}: aux diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn finish_into_matches_finish_and_overwrites_back() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![4.25; t.aux_len]).collect(),
+            &meta,
+        );
+        let ups = mixed_updates(&meta, 5);
+        let reference = aggregate(&meta, &prev, &ups).unwrap();
+        // back buffer starts full of garbage; every element must be replaced
+        let mut back = GlobalModel {
+            flat: vec![f32::NAN; meta.total_params],
+            aux: meta.tiers.iter().map(|t| vec![f32::NAN; t.aux_len]).collect(),
+        };
+        let mut agg = Aggregator::with_pipeline(&meta, 3, 0);
+        for u in &ups {
+            agg.fold(u).unwrap();
+        }
+        agg.finish_into(&prev, &mut back).unwrap();
+        assert_eq!(reference.flat, back.flat);
+        assert_eq!(reference.aux, back.aux);
+        assert!(back.flat.iter().all(|v| v.is_finite()));
+    }
+
+    // --- edge cases: the unhappy paths the round engines can produce ---
+
+    #[test]
+    fn single_client_round_reconstitutes_that_client_exactly() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = zero_prev(&meta);
+        for shards in [1usize, 3] {
+            let tier = 2;
+            // power-of-two weight: w·x·(1/w) is exact in f32, so the
+            // bit-for-bit claim below holds with no rounding caveat
+            let u = update(&meta, tier, 1.75, 32.0, 0);
+            let mut agg = Aggregator::with_pipeline(&meta, 4, shards);
+            agg.fold(&u).unwrap();
+            let g = agg.finish(&prev).unwrap();
+            // weight cancels: the aggregate IS the client's reconstituted
+            // halves, bit-for-bit
+            let cut = meta.cut_offset(tier);
+            assert_eq!(&g.flat[..cut], &u.client_vec[..cut]);
+            assert_eq!(&g.flat[cut..], &u.server_vec[..]);
+            assert_eq!(&g.aux[tier - 1][..], &u.client_vec[cut..]);
+        }
+    }
+
+    #[test]
+    fn all_tiers_empty_but_one_carries_other_aux_heads() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev_aux: Vec<Vec<f32>> = meta
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(i, t)| vec![i as f32 + 0.5; t.aux_len])
+            .collect();
+        let prev = GlobalModel::new(vec![0.0; meta.total_params], prev_aux.clone(), &meta);
+        // every participant lands in tier 3; every other tier is empty
+        let ups: Vec<ClientUpdate> =
+            (0..4).map(|i| update(&meta, 3, 2.0, 1.0 + i as f64, i)).collect();
+        let mut agg = Aggregator::with_pipeline(&meta, 2, 0);
+        for u in &ups {
+            agg.fold(u).unwrap();
+        }
+        let g = agg.finish(&prev).unwrap();
+        for (i, aux) in g.aux.iter().enumerate() {
+            if i == 2 {
+                assert!(aux.iter().all(|&v| (v - 2.0).abs() < 1e-6), "tier 3 aux averaged");
+            } else {
+                assert_eq!(aux, &prev_aux[i], "tier {} aux must carry over", i + 1);
+            }
+        }
+        assert!(g.flat.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn zero_and_negative_weight_updates_rejected() {
+        let Some(meta) = tiny_meta() else { return };
+        for w in [0.0f64, -3.0] {
+            let mut agg = Aggregator::new(&meta);
+            let err = agg.fold(&update(&meta, 1, 1.0, w, 9)).unwrap_err();
+            assert!(err.to_string().contains("non-positive weight"), "{err}");
+            // the rejected update must leave no bookkeeping behind
+            assert_eq!(agg.count(), 0);
+            assert_eq!(agg.pending_len(), 0);
+        }
+    }
+
+    #[test]
+    fn fold_updates_sharded_matches_serial_reduction() {
+        let Some(meta) = tiny_meta() else { return };
+        let ups = mixed_updates(&meta, 7);
+        let mut serial = vec![0.0f32; meta.total_params];
+        fold_updates_sharded(&meta, &mut serial, &ups, 1);
+        for shards in [2usize, 4, 0] {
+            let mut sharded = vec![0.0f32; meta.total_params];
+            fold_updates_sharded(&meta, &mut sharded, &ups, shards);
+            assert_eq!(serial, sharded, "shards={shards}");
+        }
     }
 }

@@ -3,11 +3,11 @@
 //! * `scheduler` — the dynamic tier scheduler (Algorithm 1 lines 21–35);
 //! * `profiler` — tier profiling + EMA timing histories (§3.3);
 //! * `round` — the DTFL training round (steps ①–⑤, Figure 1), fanned over
-//!   the worker pool;
+//!   the worker pool with a double-buffered global snapshot;
 //! * `parallel` — the deterministic scoped worker pool (in-order streaming
-//!   reduction);
-//! * `model_state`/`aggregate` — flat-layout model halves and the streaming
-//!   weighted-average global update (step ⑤).
+//!   reduction) plus the shard-splitting helpers;
+//! * `model_state`/`aggregate` — flat-layout model halves and the
+//!   pipelined, sharded streaming weighted-average global update (step ⑤).
 
 pub mod aggregate;
 pub mod model_state;
@@ -16,9 +16,12 @@ pub mod profiler;
 pub mod round;
 pub mod scheduler;
 
-pub use aggregate::{aggregate, Aggregator};
+pub use aggregate::{aggregate, fold_updates_sharded, Aggregator};
 pub use model_state::{ClientUpdate, GlobalModel};
-pub use parallel::{for_each_streamed, join_scoped, resolve_threads};
+pub use parallel::{
+    for_each_streamed, for_each_streamed_windowed, join_scoped, resolve_shards, resolve_threads,
+    shard_chunks,
+};
 pub use profiler::{ClientHistory, Profiler, TierProfile};
 pub use round::{estimate_all_tiers, load_initial_model, profile_tiers, Dtfl, DtflOptions};
 pub use scheduler::{estimate_round_time, schedule, Assignment, ClientLoad, Schedule};

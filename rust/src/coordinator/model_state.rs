@@ -28,6 +28,24 @@ impl GlobalModel {
         Self { flat, aux }
     }
 
+    /// A zeroed model shaped like the artifact set's layout (aggregation
+    /// accumulators / back buffers).
+    pub fn zeros(meta: &Metadata) -> Self {
+        Self {
+            flat: vec![0.0f32; meta.total_params],
+            aux: meta.tiers.iter().map(|t| vec![0.0f32; t.aux_len]).collect(),
+        }
+    }
+
+    /// A zeroed model with the same shape as `self` — the double-buffer
+    /// back snapshot the round engines allocate once and reuse.
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            flat: vec![0.0f32; self.flat.len()],
+            aux: self.aux.iter().map(|a| vec![0.0f32; a.len()]).collect(),
+        }
+    }
+
     /// Client-side download for tier m: client params ‖ aux params
     /// (Algorithm 1 step ① "clients download their client-side models").
     pub fn client_vec(&self, meta: &Metadata, tier: usize) -> Vec<f32> {

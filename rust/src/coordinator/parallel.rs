@@ -12,9 +12,11 @@
 //! Workers pull indices from an atomic counter (work stealing) and push
 //! results through a channel; a small reorder buffer on the caller side
 //! restores item order. The buffer is **bounded**: a worker does not start
-//! item `i` until `i` is within a fixed window of the next undelivered
-//! index, so a straggler on item 0 holds at most O(threads) results in
-//! flight — not O(K) — preserving the streaming-aggregation memory bound.
+//! item `i` until `i` is within a window of the next undelivered index
+//! (`2·threads + 2`, widened by the pipeline depth via
+//! [`for_each_streamed_windowed`]), so a straggler on item 0 holds at most
+//! O(threads + depth) results in flight — not O(K) — preserving the
+//! streaming-aggregation memory bound.
 //! With `threads <= 1` the pool degenerates to the plain sequential loop —
 //! the two paths produce identical bits.
 
@@ -32,6 +34,44 @@ pub fn resolve_threads(requested: usize) -> usize {
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
+}
+
+/// Below this many f32s per shard, forking scoped threads costs more than
+/// the fold they would parallelize — `resolve_shards` caps the shard count
+/// so no shard shrinks under it.
+pub const MIN_SHARD_ELEMS: usize = 8192;
+
+/// Resolve an aggregation shard-count knob against a buffer length:
+/// 0 = one shard per available core, otherwise the requested count; always
+/// capped so each shard keeps at least [`MIN_SHARD_ELEMS`] elements (a
+/// perf-only cap — per-element reduction order is pinned for every shard
+/// count, so the setting never changes results).
+pub fn resolve_shards(requested: usize, len: usize) -> usize {
+    let want = if requested == 0 { resolve_threads(0) } else { requested };
+    // floor division: splitting must never produce a shard under the
+    // minimum, so a buffer below 2·MIN_SHARD_ELEMS stays unsplit
+    want.clamp(1, (len / MIN_SHARD_ELEMS).max(1))
+}
+
+/// Split `buf` into `shards` contiguous chunks, each tagged with its start
+/// offset into `buf` — the fan-out unit for sharded aggregation (the chunks
+/// are disjoint by construction, so [`join_scoped`] can reduce them in
+/// parallel with no synchronization).
+pub fn shard_chunks(buf: &mut [f32], shards: usize) -> Vec<(usize, &mut [f32])> {
+    let n = buf.len();
+    let shards = shards.clamp(1, n.max(1));
+    let size = n.div_ceil(shards).max(1);
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    let mut rest = buf;
+    while !rest.is_empty() {
+        let take = rest.len().min(size);
+        let (head, tail) = rest.split_at_mut(take);
+        out.push((start, head));
+        start += take;
+        rest = tail;
+    }
+    out
 }
 
 /// Fork-join over pre-split work items: one scoped thread per item beyond
@@ -76,6 +116,28 @@ pub fn for_each_streamed<T, R, W, S>(
     threads: usize,
     items: &[T],
     work: W,
+    sink: S,
+) -> Result<()>
+where
+    T: Sync,
+    R: Send,
+    W: Fn(usize, &T) -> Result<R> + Sync,
+    S: FnMut(usize, R) -> Result<()>,
+{
+    for_each_streamed_windowed(threads, 0, items, work, sink)
+}
+
+/// [`for_each_streamed`] with `extra_window` additional in-flight slots on
+/// top of the default `2·threads + 2` reorder window — the pipelined round
+/// engines pass their `pipeline_depth` so workers may run that much further
+/// ahead of a straggler before parking. Delivery order (and therefore every
+/// result bit) is unchanged; only the lookahead/memory bound moves, to
+/// O(threads + extra_window) undelivered results.
+pub fn for_each_streamed_windowed<T, R, W, S>(
+    threads: usize,
+    extra_window: usize,
+    items: &[T],
+    work: W,
     mut sink: S,
 ) -> Result<()>
 where
@@ -113,7 +175,7 @@ where
     let abort = AtomicBool::new(false);
     // in-flight bound: results the sink has not consumed yet never exceed
     // this window, no matter how lopsided per-item runtimes are
-    let window = 2 * threads + 2;
+    let window = 2 * threads + 2 + extra_window;
     let (tx, rx) = mpsc::channel::<(usize, Result<R>)>();
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -302,6 +364,65 @@ mod tests {
         for (pos, &v) in data.iter().enumerate() {
             assert_eq!(v, (pos / 10) as f32);
         }
+    }
+
+    #[test]
+    fn widened_window_preserves_order_and_results() {
+        let items: Vec<usize> = (0..48).collect();
+        for extra in [0usize, 3, 64] {
+            let mut seen = Vec::new();
+            for_each_streamed_windowed(
+                4,
+                extra,
+                &items,
+                |i, &v| {
+                    if v == 0 {
+                        // straggler at the front: later items may run ahead
+                        // up to the widened window, delivery stays ordered
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Ok(i + v)
+                },
+                |i, r| {
+                    seen.push((i, r));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            let expect: Vec<(usize, usize)> = items.iter().map(|&v| (v, 2 * v)).collect();
+            assert_eq!(seen, expect, "extra_window={extra}");
+        }
+    }
+
+    #[test]
+    fn shard_chunks_cover_disjointly_in_order() {
+        let mut data: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        for shards in [1usize, 3, 7, 1000, 5000] {
+            let chunks = shard_chunks(&mut data, shards);
+            assert!(chunks.len() <= shards.min(1000));
+            let mut next = 0usize;
+            for (start, chunk) in &chunks {
+                assert_eq!(*start, next, "chunks must tile the buffer in order");
+                assert!(!chunk.is_empty());
+                assert_eq!(chunk[0], *start as f32);
+                next += chunk.len();
+            }
+            assert_eq!(next, 1000, "chunks must cover the whole buffer");
+        }
+        let mut empty: Vec<f32> = vec![];
+        assert!(shard_chunks(&mut empty, 4).is_empty());
+    }
+
+    #[test]
+    fn resolve_shards_caps_by_len_and_resolves_auto() {
+        assert_eq!(resolve_shards(3, MIN_SHARD_ELEMS * 10), 3);
+        assert_eq!(resolve_shards(1, 100), 1);
+        // tiny buffers never split
+        assert_eq!(resolve_shards(16, 100), 1);
+        assert_eq!(resolve_shards(16, MIN_SHARD_ELEMS * 2), 2);
+        // auto resolves to at least one shard
+        assert!(resolve_shards(0, MIN_SHARD_ELEMS * 64) >= 1);
+        assert_eq!(resolve_shards(0, 0), 1);
     }
 
     #[test]

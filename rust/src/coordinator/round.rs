@@ -19,17 +19,31 @@
 //! stream), and its update streams back to the calling thread which folds it
 //! into the [`Aggregator`] and the profiler **in participant order** — so an
 //! N-thread round is bit-identical to the 1-thread round.
+//!
+//! **Pipelined execution.** Step ⑤ no longer runs as a barrier after the
+//! last client: the aggregator queues up to `pipeline_depth` updates per
+//! sharded flush (`agg_shards` chunks of the flat vector reduced over
+//! scoped threads, participant order pinned per element), and the
+//! `GlobalModel` snapshot is **double-buffered** — in-flight clients read
+//! the front snapshot while aggregation streams into the back buffer, and
+//! one `swap` after the worker scope publishes the new round. Once the
+//! scheduler has fixed round r+1's participants, their model-independent
+//! inputs (batch encodings) are prefetched by spare workers at the tail of
+//! the pool's item list, overlapping round r's straggler/aggregation window.
+//! None of this changes a bit of any result — enforced for every
+//! `{threads, pipeline_depth, agg_shards}` setting by
+//! `tests/golden_trace.rs`.
 
 use crate::anyhow::Result;
 
-use crate::fed::{Method, RoundEnv, RoundOutcome};
+use crate::fed::{Method, PoolTask, RoundEnv, RoundOutcome};
 use crate::runtime::{literal as lit, Runtime, StepEngine, TrainState};
 use crate::simulation::{ClientRoundTime, ResourceProfile, ServerModel};
 use crate::util::Rng64;
 
 use super::aggregate::Aggregator;
 use super::model_state::{ClientUpdate, GlobalModel};
-use super::parallel::for_each_streamed;
+use super::parallel::for_each_streamed_windowed;
 use super::profiler::{Profiler, TierProfile};
 use super::scheduler::{schedule, ClientLoad, Schedule};
 
@@ -56,7 +70,13 @@ impl Default for DtflOptions {
 
 /// DTFL method state.
 pub struct Dtfl {
+    /// Front snapshot: the published global model every in-flight client
+    /// reads. Immutable for the whole worker scope of a round.
     pub global: GlobalModel,
+    /// Back snapshot: the double-buffer target `Aggregator::finish_into`
+    /// writes the next round's model into; swapped with `global` to
+    /// publish. Reused across rounds (every element is overwritten).
+    back: GlobalModel,
     pub profiler: Profiler,
     pub opts: DtflOptions,
     /// Schedule of the most recent round (diagnostics, Table 2 / Fig 3).
@@ -75,9 +95,10 @@ impl Dtfl {
             meta.max_tiers
         );
         let global = load_initial_model(rt)?;
+        let back = global.zeros_like();
         let profile = profile_tiers(rt, &global, opts.max_tiers)?;
         let profiler = Profiler::new(profile, num_clients, opts.ema_beta);
-        Ok(Self { global, profiler, opts, last_schedule: None })
+        Ok(Self { global, back, profiler, opts, last_schedule: None })
     }
 }
 
@@ -270,46 +291,60 @@ impl Method for Dtfl {
             .collect();
         let sched = schedule(meta, &self.profiler, &env.server, &loads, self.opts.max_tiers);
         let static_tier = self.opts.static_tier;
-        let tasks: Vec<ClientTask> = env
-            .participants
-            .iter()
-            .map(|&k| ClientTask {
-                k,
-                tier: static_tier.unwrap_or_else(|| sched.tier_of(k)),
-                nb: env.n_batches(k, batch),
-                profile: env.profiles[k],
-            })
-            .collect();
+        // round r+1 input prefetch rides at the tail of the item list, so
+        // spare workers run it during this round's aggregation window
+        let tasks = env.pool_tasks(env.participants.iter().map(|&k| ClientTask {
+            k,
+            tier: static_tier.unwrap_or_else(|| sched.tier_of(k)),
+            nb: env.n_batches(k, batch),
+            profile: env.profiles[k],
+        }));
 
         // ②③④ fan the per-client loop across the worker pool, ⑤ stream the
-        // updates into the aggregator in participant order
+        // updates into the (pipelined, sharded) aggregator in participant
+        // order — accumulation targets the back buffer's accumulator while
+        // every worker keeps reading the front snapshot
         let global = &self.global;
         let profiler = &mut self.profiler;
         let timing_noise = self.opts.timing_noise;
         let server = env.server;
-        let mut agg = Aggregator::new(meta);
-        let mut times = Vec::with_capacity(tasks.len());
-        let mut tiers = Vec::with_capacity(tasks.len());
+        let mut agg = Aggregator::with_pipeline(meta, env.pipeline_depth, env.agg_shards);
+        let mut times = Vec::with_capacity(env.participants.len());
+        let mut tiers = Vec::with_capacity(env.participants.len());
         let mut loss_sum = 0.0f64;
-        for_each_streamed(
+        for_each_streamed_windowed(
             env.threads,
+            env.pipeline_depth.saturating_sub(1),
             &tasks,
-            |_, task| run_client(env, global, &server, timing_noise, task),
-            |_, b: ClientBundle| {
-                agg.fold(&b.update)?;
+            |_, task| match task {
+                PoolTask::Work(t) => run_client(env, global, &server, timing_noise, t).map(Some),
+                PoolTask::Prefetch { k, bi } => {
+                    env.run_prefetch(*k, *bi)?;
+                    Ok(None)
+                }
+            },
+            |_, b: Option<ClientBundle>| {
+                let Some(b) = b else { return Ok(()) };
                 if let Some((batch_secs, nu)) = b.obs {
                     profiler.observe(b.update.client_id, b.tier, batch_secs, nu);
                 }
                 times.push(b.time);
                 tiers.push(b.tier);
                 loss_sum += b.last_loss;
-                Ok(())
+                agg.fold_owned(b.update)
             },
         )?;
 
-        let new_global = agg.finish(&self.global)?;
-        self.global = new_global;
         self.last_schedule = Some(sched);
+        if agg.count() == 0 {
+            // nothing to aggregate — no flush, no snapshot swap
+            return Ok(RoundOutcome::carried_over(env.round));
+        }
+
+        // ⑤ publish: flush + normalize into the back snapshot, then one
+        // swap — no reader ever sees a partially reduced vector
+        agg.finish_into(&self.global, &mut self.back)?;
+        std::mem::swap(&mut self.global, &mut self.back);
 
         Ok(RoundOutcome {
             times,

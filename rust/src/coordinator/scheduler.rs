@@ -52,6 +52,44 @@ impl Schedule {
             .map(|a| a.tier)
             .expect("client not in schedule")
     }
+
+    /// Check the scheduler's output invariants (used by the property tests
+    /// and a debug assertion in [`schedule`]): every assignment holds a
+    /// valid tier in `1..=max_tiers`, finite estimates, an achievable best
+    /// (`est_best ≤ est`), and `t_max` is an upper bound on every client's
+    /// best-achievable estimate.
+    pub fn validate(&self, max_tiers: usize) -> crate::anyhow::Result<()> {
+        crate::anyhow::ensure!(self.t_max.is_finite() && self.t_max >= 0.0, "bad t_max");
+        for a in &self.assignments {
+            crate::anyhow::ensure!(
+                a.tier >= 1 && a.tier <= max_tiers,
+                "client {} assigned invalid tier {} (max {})",
+                a.client_id,
+                a.tier,
+                max_tiers
+            );
+            crate::anyhow::ensure!(
+                a.est_secs.is_finite() && a.est_best_secs.is_finite(),
+                "client {} has non-finite estimates",
+                a.client_id
+            );
+            crate::anyhow::ensure!(
+                a.est_best_secs <= a.est_secs + 1e-12,
+                "client {}: best {} exceeds assigned estimate {}",
+                a.client_id,
+                a.est_best_secs,
+                a.est_secs
+            );
+            crate::anyhow::ensure!(
+                a.est_best_secs <= self.t_max + 1e-9,
+                "client {}: best {} exceeds T_max {}",
+                a.client_id,
+                a.est_best_secs,
+                self.t_max
+            );
+        }
+        Ok(())
+    }
 }
 
 /// Estimate T̂_k(m) for one (client, tier) pair — Eq. (5) with the tier
@@ -144,7 +182,9 @@ pub fn schedule(
         })
         .collect();
 
-    Schedule { assignments, t_max }
+    let sched = Schedule { assignments, t_max };
+    debug_assert!(sched.validate(tiers).is_ok(), "scheduler invariants violated");
+    sched
 }
 
 #[cfg(test)]

@@ -129,6 +129,26 @@ impl Experiment {
         }
     }
 
+    /// Participants for round `r`, drawn from a per-round derived RNG
+    /// stream (never the shared experiment RNG): the sample is a pure
+    /// function of `(seed, r)`, so round r+1's participant set is known
+    /// while round r executes — the pipelined engines use it to prefetch
+    /// next-round batch encodings during the aggregation tail.
+    fn sample_for_round(&self, r: usize) -> Vec<usize> {
+        let n = self.cfg.clients.count;
+        let sample = ((n as f64) * self.cfg.run.sample_frac).round().max(1.0) as usize;
+        let mix = self
+            .cfg
+            .clients
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((r as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+        let mut rng = Rng64::seed_from_u64(mix ^ 0x5A4D_504C);
+        let mut ids = rng.sample_indices(n, sample.min(n));
+        ids.sort_unstable();
+        ids
+    }
+
     /// Evaluate the current global model on the test set. Batches are
     /// pre-encoded at construction and fan out over the worker pool; the
     /// in-order streaming reduction keeps the result bit-deterministic.
@@ -167,11 +187,12 @@ impl Experiment {
         let mut recorder = Recorder::new();
         let rounds = self.cfg.run.rounds;
         let target = self.cfg.run.target_accuracy;
-        let n_clients = self.cfg.clients.count;
-        let sample = ((n_clients as f64) * self.cfg.run.sample_frac).round().max(1.0) as usize;
 
         let mut csv = self.open_csv()?;
 
+        // participants come from per-round derived streams, so round r+1's
+        // sample is already fixed while round r runs (prefetch pipelining)
+        let mut ids = self.sample_for_round(0);
         for r in 0..rounds {
             let t0 = Instant::now();
 
@@ -183,10 +204,7 @@ impl Experiment {
                 }
             }
 
-            // client sampling
-            let mut ids = self.rng.sample_indices(n_clients, sample);
-            ids.sort_unstable();
-
+            let next_ids = (r + 1 < rounds).then(|| self.sample_for_round(r + 1));
             let outcome = {
                 let mut env = RoundEnv {
                     rt: &self.rt,
@@ -205,6 +223,9 @@ impl Experiment {
                     },
                     seed: self.cfg.clients.seed,
                     threads: self.cfg.run.threads,
+                    pipeline_depth: self.cfg.run.pipeline_depth,
+                    agg_shards: self.cfg.run.agg_shards,
+                    next_participants: next_ids.as_deref(),
                 };
                 self.method.round(&mut env)?
             };
@@ -252,6 +273,7 @@ impl Experiment {
                 test_accuracy: test_acc,
                 lr: self.lr,
                 mean_tier,
+                tiers: outcome.tiers.clone(),
                 host_secs: t0.elapsed().as_secs_f64(),
             };
             crate::log::info!(
@@ -281,6 +303,9 @@ impl Experiment {
             if target.is_some() && recorder.reached_target() {
                 crate::log::info!("round {r}: target accuracy reached — stopping");
                 break;
+            }
+            if let Some(next) = next_ids {
+                ids = next;
             }
         }
         if let Some(w) = csv.as_mut() {

@@ -46,7 +46,22 @@ pub struct RoundEnv<'a> {
     pub seed: u64,
     /// Worker threads for per-client execution (0 = all available cores).
     pub threads: usize,
+    /// Client updates buffered before a sharded aggregation flush (≥ 1;
+    /// 1 = the barrier engine's update-at-a-time fold). Bit-identical
+    /// results for every setting.
+    pub pipeline_depth: usize,
+    /// Shards the flat parameter vector is split into during aggregation
+    /// (0 = one per core, 1 = serial fold). Bit-identical for every value.
+    pub agg_shards: usize,
+    /// Participants of the NEXT round, when the driver has already fixed
+    /// them — lets the engines prefetch model-independent inputs (batch
+    /// encoding) for round r+1 while round r's aggregation streams.
+    pub next_participants: Option<&'a [usize]>,
 }
+
+/// How many leading batches per next-round participant the engines warm
+/// while the current round's aggregation tail streams.
+const PREFETCH_BATCHES_PER_CLIENT: usize = 2;
 
 impl RoundEnv<'_> {
     /// Ñ_k for client k under the configured cap (0 for an empty shard —
@@ -76,6 +91,60 @@ impl RoundEnv<'_> {
     pub fn batch(&self, k: usize, bi: usize) -> Result<Arc<Batch>> {
         self.batches.get(self.train, self.partition, k, bi)
     }
+
+    /// `(client, batch)` pairs of NEXT-round inputs worth warming during
+    /// this round — the pipelined engines append these to the worker-pool
+    /// item list, so spare workers encode round r+1's batches while round
+    /// r's stragglers finish and its aggregation streams. Batch encoding
+    /// never reads the model, and the [`BatchCache`] entries are identical
+    /// whoever fills them, so prefetching cannot change any result. Empty
+    /// when pipelining is off (`pipeline_depth` ≤ 1) or the next round is
+    /// unknown.
+    pub fn prefetch_batches(&self) -> Vec<(usize, usize)> {
+        if self.pipeline_depth <= 1 {
+            return Vec::new();
+        }
+        let Some(next) = self.next_participants else {
+            return Vec::new();
+        };
+        let batch = self.rt.meta.batch;
+        let mut out = Vec::new();
+        for &k in next {
+            let nb = self.n_batches(k, batch).min(PREFETCH_BATCHES_PER_CLIENT);
+            for bi in 0..nb {
+                out.push((k, bi));
+            }
+        }
+        out
+    }
+
+    /// This round's worker-pool item list: one [`PoolTask::Work`] per
+    /// participant payload, then the prefetch tail (shared by every round
+    /// engine so the Train/Prefetch plumbing lives in one place).
+    pub fn pool_tasks<T>(&self, work: impl IntoIterator<Item = T>) -> Vec<PoolTask<T>> {
+        let mut tasks: Vec<PoolTask<T>> = work.into_iter().map(PoolTask::Work).collect();
+        tasks.extend(
+            self.prefetch_batches()
+                .into_iter()
+                .map(|(k, bi)| PoolTask::Prefetch { k, bi }),
+        );
+        tasks
+    }
+
+    /// Execute one prefetch item (the non-Work arm of [`PoolTask`]): warm
+    /// the batch cache and discard the handle.
+    pub fn run_prefetch(&self, k: usize, bi: usize) -> Result<()> {
+        self.batch(k, bi).map(|_| ())
+    }
+}
+
+/// One worker-pool item of a pipelined round: a participant's real work, or
+/// a next-round batch-encoding prefetch riding the tail of the item list
+/// (see [`RoundEnv::prefetch_batches`]). Workers map `Prefetch` to a `None`
+/// result, which the in-order sinks skip.
+pub enum PoolTask<T> {
+    Work(T),
+    Prefetch { k: usize, bi: usize },
 }
 
 /// Per-round result reported by a method.
@@ -88,6 +157,18 @@ pub struct RoundOutcome {
     pub train_loss: f64,
     /// Tier of each participant (DTFL/static-tier; tier 0 = whole model).
     pub tiers: Vec<usize>,
+}
+
+impl RoundOutcome {
+    /// The empty-participant-round outcome, shared by every engine: nothing
+    /// trained, the caller keeps its global model unchanged, and the
+    /// carry-over is logged with the round index (correlating with
+    /// `VirtualClock::advance_round`'s empty-round log line — the clock
+    /// still counts the round, with makespan 0).
+    pub fn carried_over(round: usize) -> Self {
+        crate::log::info!("round {round}: empty participant set — global model carried over");
+        Self::default()
+    }
 }
 
 /// A federated training method.
@@ -126,6 +207,9 @@ mod tests {
             privacy: PrivacyCfg::default(),
             seed: 17,
             threads: 0,
+            pipeline_depth: 1,
+            agg_shards: 1,
+            next_participants: None,
         };
         let mut a1 = env.client_rng(0);
         let mut a2 = env.client_rng(0);

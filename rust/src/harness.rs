@@ -44,6 +44,10 @@ pub struct RunSpec {
     pub threads: usize,
     /// Intra-step kernel parallelism (0 = all cores, 1 = off).
     pub intra_threads: usize,
+    /// Updates buffered per sharded aggregation flush (1 = barrier engine).
+    pub pipeline_depth: usize,
+    /// Aggregation shards (0 = one per core, 1 = serial fold).
+    pub agg_shards: usize,
     pub lr: f32,
     pub out_name: Option<String>,
 }
@@ -73,6 +77,8 @@ impl Default for RunSpec {
             eval_every: 2,
             threads: 0,
             intra_threads: 1,
+            pipeline_depth: 4,
+            agg_shards: 0,
             lr: 1e-3,
             out_name: None,
         }
@@ -121,6 +127,8 @@ impl RunSpec {
                 timing_noise: 0.05,
                 threads: self.threads,
                 intra_threads: self.intra_threads,
+                pipeline_depth: self.pipeline_depth,
+                agg_shards: self.agg_shards,
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -247,6 +255,168 @@ pub fn measure_round_throughput(
         par_secs_per_round,
         bit_identical: seq_params == par_params,
     })
+}
+
+/// One sharded-aggregation bandwidth sample: GB/s of client-update stream
+/// folded into the flat accumulator at a given shard count.
+#[derive(Debug, Clone)]
+pub struct AggShardThroughput {
+    pub shards: usize,
+    pub clients: usize,
+    pub params: usize,
+    /// Update-stream gigabytes folded per second (K · P · 4 bytes / pass).
+    pub gb_per_sec: f64,
+}
+
+/// Result of the pipelined-vs-barrier round probe plus the sharded
+/// aggregation bandwidth sweep — the `pipeline` object in
+/// `BENCH_hotpath.json`.
+#[derive(Debug, Clone)]
+pub struct PipelineThroughput {
+    pub clients: usize,
+    pub rounds: usize,
+    pub threads: usize,
+    /// Seconds per round with pipelining off (depth 1, serial fold) — the
+    /// PR-2 barrier engine's configuration.
+    pub barrier_secs_per_round: f64,
+    /// Seconds per round with the pipelined engine (default depth, one
+    /// shard per core).
+    pub pipelined_secs_per_round: f64,
+    /// Whether both engines produced identical global parameter bits.
+    pub bit_identical: bool,
+    pub agg_shards: Vec<AggShardThroughput>,
+}
+
+impl PipelineThroughput {
+    pub fn speedup(&self) -> f64 {
+        self.barrier_secs_per_round / self.pipelined_secs_per_round.max(1e-12)
+    }
+
+    /// The `pipeline` object recorded in `BENCH_hotpath.json`.
+    pub fn to_json(&self, source: &str) -> Json {
+        let shards: Vec<Json> = self
+            .agg_shards
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("shards", json::num(s.shards as f64)),
+                    ("clients", json::num(s.clients as f64)),
+                    ("params", json::num(s.params as f64)),
+                    ("gb_per_sec", json::num(s.gb_per_sec)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("clients", json::num(self.clients as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("threads", json::num(self.threads as f64)),
+            ("barrier_secs_per_round", json::num(self.barrier_secs_per_round)),
+            ("pipelined_secs_per_round", json::num(self.pipelined_secs_per_round)),
+            ("speedup_vs_barrier", json::num(self.speedup())),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+            ("agg_shards_gb_per_sec", Json::Arr(shards)),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Run the same K-client DTFL experiment with the barrier engine
+/// (`pipeline_depth` 1, `agg_shards` 1 — PR 2's behavior) and the pipelined
+/// engine (buffered sharded flush + prefetch), both on the full worker
+/// pool, timing whole rounds and comparing final global parameters
+/// bit-for-bit. Also sweeps the bare sharded fold's bandwidth.
+pub fn measure_pipeline_throughput(
+    clients: usize,
+    rounds: usize,
+    samples_per_client: usize,
+) -> Result<PipelineThroughput> {
+    let spec = |depth: usize, shards: usize| RunSpec {
+        clients,
+        rounds,
+        batch_cap: Some(1),
+        train_total: clients * samples_per_client,
+        test_total: 32,
+        eval_every: 1,
+        threads: 0,
+        pipeline_depth: depth,
+        agg_shards: shards,
+        ..Default::default()
+    };
+    let run = |depth: usize, shards: usize| -> Result<(f64, Vec<f32>)> {
+        let mut exp = Experiment::new(spec(depth, shards).to_config())?;
+        let t0 = Instant::now();
+        exp.run()?;
+        let secs = t0.elapsed().as_secs_f64() / rounds.max(1) as f64;
+        Ok((secs, exp.method.global_params().to_vec()))
+    };
+    // pipelined first: process warmup (page faults, allocator, CPU ramp)
+    // lands on the pipelined sample, biasing the recorded speedup DOWN —
+    // conservative for the improvement this entry tracks
+    let default_depth = RunSpec::default().pipeline_depth;
+    let (pipelined_secs_per_round, pipe_params) = run(default_depth, 0)?;
+    let (barrier_secs_per_round, barrier_params) = run(1, 1)?;
+    let agg_shards = measure_agg_shard_throughput(clients, Duration::from_millis(300))?;
+    Ok(PipelineThroughput {
+        clients,
+        rounds,
+        threads: resolve_threads(0),
+        barrier_secs_per_round,
+        pipelined_secs_per_round,
+        bit_identical: pipe_params == barrier_params,
+        agg_shards,
+    })
+}
+
+/// Bandwidth of the bare sharded aggregation fold: K mixed-tier updates
+/// into a `total_params` accumulator, serial vs sharded (each sample
+/// bounded by `budget`).
+pub fn measure_agg_shard_throughput(
+    clients: usize,
+    budget: Duration,
+) -> Result<Vec<AggShardThroughput>> {
+    use crate::coordinator::{fold_updates_sharded, ClientUpdate};
+    use crate::runtime::Metadata;
+    use crate::util::bench::bench;
+
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    let meta = Metadata::load(&dir)?;
+    let updates: Vec<ClientUpdate> = (0..clients)
+        .map(|i| {
+            let tier = 1 + i % meta.max_tiers;
+            let t = meta.tier(tier);
+            ClientUpdate {
+                client_id: i,
+                tier,
+                weight: 100.0,
+                client_vec: vec![0.5; t.client_vec_len],
+                server_vec: vec![0.5; t.server_vec_len],
+            }
+        })
+        .collect();
+    let mut acc = vec![0.0f32; meta.total_params];
+    let mut shard_opts = vec![1usize, 2, resolve_threads(0)];
+    shard_opts.sort_unstable();
+    shard_opts.dedup();
+    let bytes = (clients * meta.total_params * 4) as f64;
+    let mut out = Vec::new();
+    for shards in shard_opts {
+        let st = bench(
+            &format!("agg fold K={clients} P={} shards={shards}", meta.total_params),
+            200,
+            budget,
+            || {
+                fold_updates_sharded(&meta, &mut acc, &updates, shards);
+                std::hint::black_box(acc[0]);
+            },
+        );
+        out.push(AggShardThroughput {
+            shards,
+            clients,
+            params: meta.total_params,
+            gb_per_sec: bytes / st.min.as_secs_f64().max(1e-12) / 1e9,
+        });
+    }
+    Ok(out)
 }
 
 /// One kernel's blocked-vs-naive throughput sample (`measure_kernel_throughput`).

@@ -21,6 +21,9 @@ pub struct RoundRecord {
     pub lr: f32,
     /// Mean tier over participants (0 for whole-model methods).
     pub mean_tier: f64,
+    /// Per-participant tier assignments this round, in participant order
+    /// (empty for whole-model methods; recorded for the golden traces).
+    pub tiers: Vec<usize>,
     /// Host wall seconds actually spent executing this round.
     pub host_secs: f64,
 }
@@ -146,6 +149,7 @@ mod tests {
             test_accuracy: acc,
             lr: 1e-3,
             mean_tier: 3.0,
+            tiers: vec![3; 4],
             host_secs: 0.1,
         }
     }

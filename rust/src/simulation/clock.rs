@@ -47,8 +47,11 @@ impl VirtualClock {
     /// clients), so it is logged at debug level rather than asserted.
     pub fn advance_round(&mut self, times: &[ClientRoundTime]) -> f64 {
         if times.is_empty() {
+            // the round index is the 0-based round being advanced (== the
+            // pre-increment round count), matching the coordinator's
+            // `env.round` so the two empty-round log lines correlate
             crate::log::debug!(
-                "advance_round: empty participant set — round {} counted with makespan 0.0",
+                "advance_round: round {} had an empty participant set — counted with makespan 0.0",
                 self.rounds
             );
         }

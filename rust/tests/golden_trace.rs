@@ -1,0 +1,256 @@
+//! Golden-trace suite: end-to-end guards on the DTFL training dynamics.
+//!
+//! For a small deterministic run of DTFL and every baseline we record a
+//! compact trace — per-round makespan/sim-time/loss/accuracy bits, the
+//! tier assignments, and a checksum plus the full bit pattern of the final
+//! global parameters — from the **sequential barrier engine** (1 thread,
+//! `pipeline_depth` 1, `agg_shards` 1, intra off). Every other engine
+//! configuration in the `{threads, intra_threads, pipeline_depth,
+//! agg_shards}` grid must reproduce that trace **byte for byte**: the
+//! pipelined round engine, the sharded aggregation flush, the double-
+//! buffered snapshot swap, and next-round input prefetch are all required
+//! to be bit-invisible.
+//!
+//! The reference trace is recorded in-process (float bit patterns are only
+//! stable per libm build, so a committed file would be flaky across
+//! machines); the DTFL trace is additionally written to
+//! `GOLDEN_trace.json` at the repo root for inspection, next to
+//! `BENCH_hotpath.json`.
+//!
+//! The CI determinism matrix injects an extra thread count per leg via
+//! `DTFL_TEST_THREADS` (1/2/8).
+
+use dtfl::experiment::Experiment;
+use dtfl::harness::RunSpec;
+use dtfl::metrics::RoundRecord;
+use dtfl::util::json::{self, Json};
+
+/// One round of the trace, everything reduced to exact bit patterns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct TraceRow {
+    round: usize,
+    sim_time: u64,
+    makespan: u64,
+    makespan_compute: u64,
+    makespan_comm: u64,
+    train_loss: u64,
+    test_loss: Option<u64>,
+    test_accuracy: Option<u64>,
+    lr: u32,
+    tiers: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Trace {
+    rows: Vec<TraceRow>,
+    /// Final global parameters, exact bits.
+    params: Vec<u32>,
+    /// FNV-1a over `params` (the compact fingerprint recorded in the JSON).
+    checksum: u64,
+}
+
+fn checksum(params: &[u32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for p in params {
+        for b in p.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn trace_of(records: &[RoundRecord], params: &[f32]) -> Trace {
+    let rows = records
+        .iter()
+        .map(|r| TraceRow {
+            round: r.round,
+            sim_time: r.sim_time.to_bits(),
+            makespan: r.makespan.to_bits(),
+            makespan_compute: r.makespan_compute.to_bits(),
+            makespan_comm: r.makespan_comm.to_bits(),
+            train_loss: r.train_loss.to_bits(),
+            test_loss: r.test_loss.map(f64::to_bits),
+            test_accuracy: r.test_accuracy.map(f64::to_bits),
+            lr: r.lr.to_bits(),
+            tiers: r.tiers.clone(),
+        })
+        .collect();
+    let params: Vec<u32> = params.iter().map(|p| p.to_bits()).collect();
+    let checksum = checksum(&params);
+    Trace { rows, params, checksum }
+}
+
+/// Engine configuration under test.
+#[derive(Debug, Clone, Copy)]
+struct Knobs {
+    threads: usize,
+    intra: usize,
+    depth: usize,
+    shards: usize,
+}
+
+const REFERENCE: Knobs = Knobs { threads: 1, intra: 1, depth: 1, shards: 1 };
+
+fn run(method: &str, k: Knobs) -> Trace {
+    let mut spec = RunSpec {
+        method: method.into(),
+        clients: 6,
+        rounds: 3,
+        batch_cap: Some(1),
+        train_total: 96,
+        test_total: 32,
+        eval_every: 1,
+        threads: k.threads,
+        intra_threads: k.intra,
+        pipeline_depth: k.depth,
+        agg_shards: k.shards,
+        ..Default::default()
+    };
+    if method == "static" {
+        spec.static_tier = Some(2);
+    }
+    let mut exp = Experiment::new(spec.to_config()).expect("experiment");
+    let mut records = Vec::new();
+    exp.run_with(|r| records.push(r.clone())).expect("run");
+    trace_of(&records, exp.method.global_params())
+}
+
+/// Extra thread count injected by the CI determinism matrix.
+fn env_threads() -> Option<usize> {
+    std::env::var("DTFL_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+}
+
+fn assert_trace_matches(method: &str, golden: &Trace, k: Knobs) {
+    let t = run(method, k);
+    assert_eq!(
+        golden.rows, t.rows,
+        "{method} {k:?}: per-round trace diverged from the sequential barrier engine"
+    );
+    assert_eq!(
+        golden.checksum, t.checksum,
+        "{method} {k:?}: global-param checksum diverged"
+    );
+    assert_eq!(golden.params, t.params, "{method} {k:?}: global param bits diverged");
+}
+
+/// The grid every method is checked against (DTFL gets a larger one).
+fn small_grid() -> Vec<Knobs> {
+    let mut g = vec![
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0 },
+        Knobs { threads: 2, intra: 1, depth: 8, shards: 3 },
+    ];
+    if let Some(n) = env_threads() {
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0 });
+    }
+    g
+}
+
+fn dtfl_grid() -> Vec<Knobs> {
+    let mut g = vec![
+        // pipelining/sharding alone, sequential pool
+        Knobs { threads: 1, intra: 1, depth: 4, shards: 3 },
+        // deep pipeline: every flat fold deferred to the finish flush
+        Knobs { threads: 1, intra: 1, depth: 64, shards: 0 },
+        // parallel pool with the barrier aggregator
+        Knobs { threads: 2, intra: 1, depth: 1, shards: 1 },
+        // parallel + pipelined + auto shards (the default engine)
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0 },
+        // everything composed, including intra-step kernel splits
+        Knobs { threads: 4, intra: 2, depth: 8, shards: 2 },
+    ];
+    if let Some(n) = env_threads() {
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0 });
+    }
+    g
+}
+
+fn assert_method_golden(method: &str, grid: &[Knobs]) -> Trace {
+    let golden = run(method, REFERENCE);
+    assert!(!golden.rows.is_empty(), "{method}: empty trace");
+    for &k in grid {
+        assert_trace_matches(method, &golden, k);
+    }
+    golden
+}
+
+#[test]
+fn dtfl_golden_trace_is_knob_invariant() {
+    let golden = assert_method_golden("dtfl", &dtfl_grid());
+    // tier assignments are part of the trace — make sure they carry signal
+    assert!(
+        golden.rows.iter().all(|r| !r.tiers.is_empty()),
+        "DTFL trace must record tier assignments"
+    );
+    write_golden_json("dtfl", &golden);
+}
+
+#[test]
+fn static_tier_golden_trace_is_knob_invariant() {
+    let golden = assert_method_golden("static", &small_grid());
+    assert!(golden.rows.iter().all(|r| r.tiers.iter().all(|&t| t == 2)));
+}
+
+#[test]
+fn fedavg_golden_trace_is_knob_invariant() {
+    assert_method_golden("fedavg", &small_grid());
+}
+
+#[test]
+fn splitfed_golden_trace_is_knob_invariant() {
+    assert_method_golden("splitfed", &small_grid());
+}
+
+#[test]
+fn fedyogi_golden_trace_is_knob_invariant() {
+    assert_method_golden("fedyogi", &small_grid());
+}
+
+#[test]
+fn fedgkt_golden_trace_is_knob_invariant() {
+    assert_method_golden("fedgkt", &small_grid());
+}
+
+/// Record the DTFL golden trace next to BENCH_hotpath.json (diagnostics —
+/// bit patterns are hex so diffs between machines/toolchains are obvious).
+fn write_golden_json(method: &str, t: &Trace) {
+    let rows: Vec<Json> = t
+        .rows
+        .iter()
+        .map(|r| {
+            json::obj(vec![
+                ("round", json::num(r.round as f64)),
+                ("sim_time_bits", json::s(format!("{:016x}", r.sim_time))),
+                ("makespan_bits", json::s(format!("{:016x}", r.makespan))),
+                ("train_loss_bits", json::s(format!("{:016x}", r.train_loss))),
+                (
+                    "test_accuracy_bits",
+                    r.test_accuracy
+                        .map(|b| json::s(format!("{b:016x}")))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "tiers",
+                    Json::Arr(r.tiers.iter().map(|&t| json::num(t as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("method", json::s(method)),
+        ("rounds", Json::Arr(rows)),
+        ("params", json::num(t.params.len() as f64)),
+        ("param_checksum_fnv1a", json::s(format!("{:016x}", t.checksum))),
+        (
+            "note",
+            json::s("recorded per-machine by tests/golden_trace.rs; engines are compared in-process"),
+        ),
+    ]);
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../GOLDEN_trace.json");
+    if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    }
+}

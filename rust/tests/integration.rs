@@ -275,6 +275,64 @@ fn dtfl_assigns_slow_clients_lower_tiers_over_time() {
 }
 
 #[test]
+fn pipelined_empty_round_carries_global_over() {
+    // regression: simulation/clock.rs logs + counts empty-participant
+    // rounds, but nothing exercised a *pipelined* empty round end-to-end —
+    // the engine must carry the global snapshot over unchanged (no
+    // aggregation, no snapshot swap) instead of erroring in finish.
+    use dtfl::coordinator::parallel::resolve_threads;
+    use dtfl::data::{self, BatchCache, PartitionScheme};
+    use dtfl::fed::{Method, PrivacyCfg, RoundEnv};
+    use dtfl::simulation::{ServerModel, VirtualClock};
+
+    let Some(rt) = runtime() else { return };
+    let opts = DtflOptions { max_tiers: 2, ema_beta: 0.5, timing_noise: 0.0, static_tier: None };
+    let mut dtfl = Dtfl::new(&rt, 3, opts).unwrap();
+    let before = dtfl.global_params().to_vec();
+
+    let train = generate_train(&DatasetSpec::tiny(96, 8));
+    let partition = data::partition(&train, 3, PartitionScheme::Iid, 5);
+    let batches = BatchCache::new(&partition, rt.meta.batch);
+    let profiles = vec![dtfl::simulation::ResourceProfile::new(1.0, 30.0); 3];
+    let next = vec![0usize, 2];
+    let mut env = RoundEnv {
+        rt: &rt,
+        train: &train,
+        partition: &partition,
+        batches: &batches,
+        profiles: &profiles,
+        participants: &[], // nobody sampled this round
+        server: ServerModel::default(),
+        lr: 1e-3,
+        round: 4,
+        batch_cap: Some(1),
+        privacy: PrivacyCfg::default(),
+        seed: 5,
+        threads: resolve_threads(0).min(4),
+        pipeline_depth: 4, // pipelined engine: prefetch + buffered flush on
+        agg_shards: 0,
+        next_participants: Some(&next),
+    };
+    let out = dtfl.round(&mut env).unwrap();
+    assert!(out.times.is_empty() && out.tiers.is_empty());
+    assert_eq!(out.train_loss, 0.0);
+    assert_eq!(
+        dtfl.global_params(),
+        &before[..],
+        "empty round must carry the global model over bit-for-bit"
+    );
+    // next-round inputs were still prefetched during the empty round
+    assert!(batches.encoded() > 0, "prefetch must warm the batch cache");
+
+    // the virtual clock counts the round (with the round index in its log)
+    // without moving time
+    let mut clock = VirtualClock::new();
+    assert_eq!(clock.advance_round(&out.times), 0.0);
+    assert_eq!(clock.rounds(), 1, "empty round must still count");
+    assert_eq!(clock.now(), 0.0, "empty round must not move the clock");
+}
+
+#[test]
 fn aggregation_round_trip_via_single_client() {
     if artifacts().is_none() {
         return;

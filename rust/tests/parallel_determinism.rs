@@ -38,9 +38,22 @@ fn run(method: &str, threads: usize) -> (Vec<RoundRecord>, Vec<f32>) {
     (records, exp.method.global_params().to_vec())
 }
 
+/// Thread count for the parallel side of the comparison. The CI
+/// determinism matrix overrides it via `DTFL_TEST_THREADS`, so
+/// scheduling-dependent bugs cannot hide behind one fixed pool size.
+/// An override of 1 is ignored — comparing a sequential run to itself
+/// would be a tautology — so that matrix leg falls back to 4.
+fn parallel_threads() -> usize {
+    std::env::var("DTFL_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 1)
+        .unwrap_or(4)
+}
+
 fn assert_bitwise_equal_runs(method: &str) {
     let (rec1, p1) = run(method, 1);
-    let (recn, pn) = run(method, 4);
+    let (recn, pn) = run(method, parallel_threads());
     assert_eq!(rec1.len(), recn.len(), "{method}: round counts differ");
     for (a, b) in rec1.iter().zip(&recn) {
         assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{method}: sim_time differs");
@@ -119,11 +132,17 @@ fn repeated_runs_are_bit_reproducible() {
 fn bench_round_smoke_writes_hotpath_json() {
     use std::time::Duration;
 
-    use dtfl::harness::{kernels_to_json, measure_kernel_throughput, measure_round_throughput};
+    use dtfl::harness::{
+        kernels_to_json, measure_kernel_throughput, measure_pipeline_throughput,
+        measure_round_throughput,
+    };
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
 
     let rt = measure_round_throughput(50, 1, 8).expect("round throughput probe");
     assert!(rt.bit_identical, "K=50 parallel round must match sequential bits");
+
+    let pt = measure_pipeline_throughput(50, 1, 8).expect("pipeline throughput probe");
+    assert!(pt.bit_identical, "K=50 pipelined round must match barrier-engine bits");
 
     let (kernels, arena_peak) =
         measure_kernel_throughput(Duration::from_millis(150)).expect("kernel throughput probe");
@@ -134,6 +153,7 @@ fn bench_round_smoke_writes_hotpath_json() {
     report.preserve_entries_from(hotpath_report_path());
     let source = "cargo-test smoke (see benches/micro_hotpath.rs for the full run)";
     report.extra("bench_round", rt.to_json(source));
+    report.extra("pipeline", pt.to_json(source));
     report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -1,0 +1,171 @@
+//! Property tests for the dynamic tier scheduler (hand-rolled randomized
+//! driver, same idiom as tests/proptests.rs — no proptest crate on this
+//! offline testbed).
+//!
+//! Invariants under test:
+//!   * the profiler's client-side estimate is monotone in tier depth for
+//!     monotone reference profiles (the cross-tier ratio extrapolation
+//!     cannot reorder tiers);
+//!   * every participating client always receives a valid tier in
+//!     `1..=max_tiers` with finite, T_max-consistent estimates, for
+//!     arbitrary observation histories;
+//!   * an all-equal-profile fleet yields a uniform assignment;
+//!   * T_max is exactly max_k min_m T̂_k(m).
+
+use dtfl::coordinator::{estimate_round_time, schedule, ClientLoad, Profiler, TierProfile};
+use dtfl::runtime::Metadata;
+use dtfl::simulation::ServerModel;
+use dtfl::util::Rng64;
+
+fn tiny_meta() -> Option<Metadata> {
+    let d = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    Metadata::load(&d).ok()
+}
+
+/// Drive `prop` over `cases` seeded random cases.
+fn forall(cases: u64, mut prop: impl FnMut(&mut Rng64, u64)) {
+    for seed in 0..cases {
+        let mut rng = Rng64::seed_from_u64(0x5c4ed ^ seed);
+        prop(&mut rng, seed);
+    }
+}
+
+/// Random reference profile with strictly increasing client-side per-batch
+/// times and strictly decreasing server-side times (the shape startup
+/// profiling produces — deeper tiers run more layers on the client).
+fn monotone_profile(rng: &mut Rng64, tiers: usize) -> TierProfile {
+    let mut client = Vec::with_capacity(tiers);
+    let mut server = Vec::with_capacity(tiers);
+    let mut c = rng.gen_f64(0.01, 0.2);
+    let mut s = rng.gen_f64(1.0, 3.0);
+    for _ in 0..tiers {
+        client.push(c);
+        server.push(s);
+        c += rng.gen_f64(0.01, 0.3);
+        s = (s - rng.gen_f64(0.01, 0.3)).max(1e-3);
+    }
+    TierProfile { client_batch_secs: client, server_batch_secs: server }
+}
+
+fn server() -> ServerModel {
+    ServerModel { speedup: 8.0, parallel_factor: 4.0 }
+}
+
+#[test]
+fn prop_client_estimate_monotone_in_tier_depth() {
+    let Some(meta) = tiny_meta() else { return };
+    let tiers = meta.max_tiers;
+    forall(200, |rng, seed| {
+        let profile = monotone_profile(rng, tiers);
+        let mut prof = Profiler::new(profile.clone(), 3, rng.gen_f64(0.1, 1.0));
+        // client 0: unobserved (pure reference profile). client 1: observed
+        // once in a random tier (arbitrary speed — one observation pins the
+        // whole curve through the ratio extrapolation). client 2: several
+        // observations in random tiers, all consistent with ONE speed
+        // factor ("fixed profile": the client is f× the reference host).
+        prof.observe(1, rng.gen_range(1, tiers + 1), rng.gen_f64(0.001, 50.0), 1e6);
+        let f = rng.gen_f64(0.05, 40.0);
+        for _ in 0..5 {
+            let t = rng.gen_range(1, tiers + 1);
+            prof.observe(2, t, f * profile.client_batch_secs[t - 1], 1e6);
+        }
+        for k in 0..3 {
+            let est: Vec<f64> = (1..=tiers).map(|m| prof.estimate_client_batch(k, m)).collect();
+            for w in est.windows(2) {
+                assert!(
+                    w[1] >= w[0] - 1e-12,
+                    "seed {seed}, client {k}: client estimate not monotone: {est:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_every_client_gets_a_valid_tier() {
+    let Some(meta) = tiny_meta() else { return };
+    let tiers = meta.max_tiers;
+    forall(200, |rng, seed| {
+        let k = rng.gen_range(1, 12);
+        let profile = monotone_profile(rng, tiers);
+        let mut prof = Profiler::new(profile, k, 0.5);
+        for i in 0..k {
+            // arbitrary histories, including extreme speeds and links
+            if rng.next_f64() < 0.8 {
+                prof.observe(
+                    i,
+                    rng.gen_range(1, tiers + 1),
+                    rng.gen_f64(1e-5, 500.0),
+                    rng.gen_f64(1e3, 1e9),
+                );
+            }
+        }
+        let loads: Vec<ClientLoad> = (0..k)
+            .map(|_| ClientLoad {
+                n_batches: rng.gen_range(0, 9),
+                participating: rng.next_f64() < 0.9,
+            })
+            .collect();
+        let max_tiers = rng.gen_range(1, tiers + 1);
+        let s = schedule(&meta, &prof, &server(), &loads, max_tiers);
+        s.validate(max_tiers).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let participants = loads.iter().filter(|l| l.participating).count();
+        assert_eq!(s.assignments.len(), participants, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_equal_profiles_yield_uniform_assignment() {
+    let Some(meta) = tiny_meta() else { return };
+    let tiers = meta.max_tiers;
+    forall(100, |rng, seed| {
+        let k = rng.gen_range(2, 10);
+        let profile = monotone_profile(rng, tiers);
+        let mut prof = Profiler::new(profile, k, 0.5);
+        // every client observed identically: same tier, same speed, same link
+        let obs_tier = rng.gen_range(1, tiers + 1);
+        let secs = rng.gen_f64(0.01, 5.0);
+        let nu = rng.gen_f64(1e5, 1e8);
+        for i in 0..k {
+            prof.observe(i, obs_tier, secs, nu);
+        }
+        let nb = rng.gen_range(1, 6);
+        let loads = vec![ClientLoad { n_batches: nb, participating: true }; k];
+        let s = schedule(&meta, &prof, &server(), &loads, tiers);
+        let t0 = s.tier_of(0);
+        for a in &s.assignments {
+            assert_eq!(a.tier, t0, "seed {seed}: equal fleet split tiers: {:?}", s.assignments);
+        }
+    });
+}
+
+#[test]
+fn prop_tmax_is_max_over_clients_of_min_over_tiers() {
+    let Some(meta) = tiny_meta() else { return };
+    let tiers = meta.max_tiers;
+    forall(100, |rng, seed| {
+        let k = rng.gen_range(1, 8);
+        let profile = monotone_profile(rng, tiers);
+        let mut prof = Profiler::new(profile, k, 0.5);
+        for i in 0..k {
+            prof.observe(i, rng.gen_range(1, tiers + 1), rng.gen_f64(0.001, 20.0), 1e6);
+        }
+        let nb = rng.gen_range(1, 5);
+        let loads = vec![ClientLoad { n_batches: nb, participating: true }; k];
+        let s = schedule(&meta, &prof, &server(), &loads, tiers);
+        let srv = server();
+        let expect = (0..k)
+            .map(|ki| {
+                (1..=tiers)
+                    .map(|m| estimate_round_time(&meta, &prof, &srv, ki, m, nb))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .fold(0.0, f64::max);
+        assert!(
+            (s.t_max - expect).abs() <= 1e-9 * expect.max(1.0),
+            "seed {seed}: t_max {} != max-min {}",
+            s.t_max,
+            expect
+        );
+    });
+}
