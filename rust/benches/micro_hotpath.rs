@@ -1,5 +1,7 @@
 //! L3 hot-path micro-benchmarks (the §Perf targets):
 //!   * blocked vs naive matmul kernels (GFLOP/s) + scratch-arena peak bytes
+//!   * fused vs unfused forward path (gn/relu epilogues, 1×1 im2col
+//!     elision) + the `kernels::tune` MR/NR register-tile sweep
 //!   * flat-layout aggregation (O(K·P) FMAs — the per-round CPU hot loop)
 //!   * dynamic tier scheduling (O(K·M) estimates)
 //!   * literal construction / extraction (backend boundary per step)
@@ -8,6 +10,11 @@
 //!     parallel round engine (all cores), K=50 clients
 //!
 //! Run: `cargo bench --bench micro_hotpath`
+//!
+//! `cargo bench --bench micro_hotpath -- fused` runs only the fused-path
+//! section (CI uses it as a release-codegen smoke for the fused kernels);
+//! in that mode `BENCH_hotpath.json` is left untouched so a partial run
+//! never clobbers full-run numbers.
 //!
 //! Emits `BENCH_hotpath.json` at the repository root so the perf trajectory
 //! is tracked across PRs.
@@ -19,9 +26,10 @@ use dtfl::coordinator::{
 };
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
 use dtfl::harness::{
-    kernels_to_json, measure_kernel_throughput, measure_pipeline_throughput,
-    measure_round_throughput,
+    kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
+    measure_pipeline_throughput, measure_round_throughput,
 };
+use dtfl::runtime::kernels::tune;
 use dtfl::runtime::{literal as lit, Metadata};
 use dtfl::simulation::ServerModel;
 use dtfl::util::bench::{bench, hotpath_report_path, section, BenchReport};
@@ -55,6 +63,52 @@ fn bench_pipeline(report: &mut BenchReport, clients: usize, rounds: usize) {
     report.extra("pipeline", pt.to_json("cargo bench micro_hotpath"));
 }
 
+/// Fused vs unfused forward path (shared probe in
+/// `harness::measure_fused_throughput`) plus the MR/NR register-tile sweep.
+/// Returns the `fused` JSON object so the filtered `-- fused` smoke can
+/// print without writing the report.
+fn bench_fused(clients: usize, rounds: usize) -> dtfl::util::json::Json {
+    section(&format!("bench_fused: K={clients} fused vs unfused forward path"));
+    let ft = measure_fused_throughput(clients, rounds, 16).expect("fused probe");
+    assert!(ft.bit_identical, "fused forward path must be bit-identical to unfused");
+    println!(
+        "K={clients}: unfused {:.3}s/round, fused {:.3}s/round — {:.2}x",
+        ft.unfused_secs_per_round,
+        ft.fused_secs_per_round,
+        ft.round_speedup()
+    );
+    println!(
+        "full fwd+bwd step: unfused {:.2} GFLOP/s, fused {:.2} GFLOP/s — {:.2}x; \
+         arena peak {} → {} bytes",
+        ft.step_gflops_unfused,
+        ft.step_gflops_fused,
+        ft.step_speedup(),
+        ft.arena_peak_unfused,
+        ft.arena_peak_fused
+    );
+    println!(
+        "1×1 elision rows={} {}→{}: {:.2} GB/s ({:.2}x vs im2col)",
+        ft.elision.rows,
+        ft.elision.cin,
+        ft.elision.cout,
+        ft.elision.gb_per_sec,
+        ft.elision.im2col_secs / ft.elision.elided_secs.max(1e-12)
+    );
+
+    section("kernels::tune — MR/NR register-tile sweep (conv hot shape)");
+    let sweep = tune::sweep(512, 144, 64, Duration::from_millis(400));
+    for s in &sweep {
+        println!(
+            "tile {}x{:<2} {:>7.2} GFLOP/s{}",
+            s.mr,
+            s.nr,
+            s.gflops,
+            if s.pinned { "  <- pinned in source" } else { "" }
+        );
+    }
+    ft.to_json(&sweep, "cargo bench micro_hotpath")
+}
+
 /// Round-throughput comparison: K clients, 1 thread vs all cores (shared
 /// probe in `harness::measure_round_throughput`).
 fn bench_round(report: &mut BenchReport, clients: usize, rounds: usize) {
@@ -72,6 +126,14 @@ fn bench_round(report: &mut BenchReport, clients: usize, rounds: usize) {
 }
 
 fn main() {
+    // `cargo bench --bench micro_hotpath -- fused`: release-codegen smoke
+    // for the fused kernels only; skips the report write so a partial run
+    // never clobbers the full numbers
+    if std::env::args().skip(1).any(|a| a == "fused") {
+        bench_fused(50, 1);
+        return;
+    }
+
     let budget = Duration::from_secs(3);
     let mut report = BenchReport::new();
 
@@ -194,6 +256,10 @@ fn main() {
 
     // ---------------- pipelined engine + sharded aggregation ----------------
     bench_pipeline(&mut report, 50, 2);
+
+    // ---------------- fused forward path + NR sweep ----------------
+    let fused = bench_fused(50, 2);
+    report.extra("fused", fused);
 
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

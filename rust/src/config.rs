@@ -88,6 +88,15 @@ pub struct RunCfg {
     /// Shards the flat parameter vector is split into during aggregation
     /// (0 = one per core, 1 = serial fold). Bit-identical for every value.
     pub agg_shards: usize,
+    /// Fused forward path in the reference backend: single-sweep gn(+relu)
+    /// epilogues and im2col elision for 1×1 stride-1 projections. Escape
+    /// hatch only — fused and unfused are bit-identical (enforced by the
+    /// conformance and golden-trace suites), so this stays on unless a
+    /// regression is being bisected. The knob is **per-runtime** (set on
+    /// the experiment's backend at construction); experiments sharing one
+    /// runtime should use the same setting — results cannot depend on it
+    /// either way.
+    pub fuse_forward: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -201,6 +210,7 @@ impl ExperimentConfig {
                 intra_threads: s.usize_or("intra_threads", 1)?,
                 pipeline_depth: s.usize_or("pipeline_depth", 4)?,
                 agg_shards: s.usize_or("agg_shards", 0)?,
+                fuse_forward: s.bool_or("fuse_forward", true)?,
             }
         };
         let sim = {
@@ -288,6 +298,7 @@ mod tests {
         assert_eq!(cfg.run.intra_threads, 1, "intra-step parallelism defaults off");
         assert_eq!(cfg.run.pipeline_depth, 4, "pipelined aggregation defaults on");
         assert_eq!(cfg.run.agg_shards, 0, "sharded aggregation defaults to one per core");
+        assert!(cfg.run.fuse_forward, "fused forward path defaults on");
         assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
         assert!(cfg.privacy.dcor_alpha.is_none());
         assert!(cfg.output.is_none());
@@ -333,6 +344,7 @@ mod tests {
             sample_frac = 0.5
             pipeline_depth = 2
             agg_shards = 3
+            fuse_forward = false
             [sim]
             server_speedup = 4.0
             profile_switch_every = 50
@@ -347,6 +359,7 @@ mod tests {
         assert_eq!(cfg.clients.count, 20);
         assert_eq!(cfg.run.pipeline_depth, 2);
         assert_eq!(cfg.run.agg_shards, 3);
+        assert!(!cfg.run.fuse_forward, "explicit fuse_forward = false must stick");
         assert_eq!(cfg.privacy.patch_shuffle, Some(4));
         assert_eq!(cfg.sim.profile_switch_every, 50);
         assert_eq!(cfg.output.as_ref().unwrap().dir, PathBuf::from("results"));

@@ -100,8 +100,11 @@ impl Experiment {
 
         // intra-step kernel parallelism (process-wide knob; results are
         // bit-identical for every setting, so late overrides by other
-        // experiments in the same process cannot skew outcomes)
+        // experiments in the same process cannot skew outcomes) + the
+        // per-runtime fused-forward knob (scoped to this experiment's
+        // backend, so concurrent fused/unfused comparisons cannot race)
         crate::runtime::kernels::set_intra_threads(cfg.run.intra_threads);
+        rt.set_fuse_forward(cfg.run.fuse_forward);
 
         Ok(Self {
             cfg,

@@ -48,6 +48,9 @@ pub struct RunSpec {
     pub pipeline_depth: usize,
     /// Aggregation shards (0 = one per core, 1 = serial fold).
     pub agg_shards: usize,
+    /// Fused forward path (gn/relu epilogues + 1×1 im2col elision);
+    /// bit-identical either way, off only for bisection.
+    pub fuse_forward: bool,
     pub lr: f32,
     pub out_name: Option<String>,
 }
@@ -79,6 +82,7 @@ impl Default for RunSpec {
             intra_threads: 1,
             pipeline_depth: 4,
             agg_shards: 0,
+            fuse_forward: true,
             lr: 1e-3,
             out_name: None,
         }
@@ -129,6 +133,7 @@ impl RunSpec {
                 intra_threads: self.intra_threads,
                 pipeline_depth: self.pipeline_depth,
                 agg_shards: self.agg_shards,
+                fuse_forward: self.fuse_forward,
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -419,6 +424,243 @@ pub fn measure_agg_shard_throughput(
     Ok(out)
 }
 
+/// One 1×1 im2col-elision bandwidth sample: the elided direct-feed matmul
+/// vs the column-buffer fill + matmul it replaces.
+#[derive(Debug, Clone)]
+pub struct ElisionThroughput {
+    pub rows: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub elided_secs: f64,
+    pub im2col_secs: f64,
+    /// Activation bytes streamed per second on the elided path
+    /// (`rows · (cin + cout) · 4` per pass).
+    pub gb_per_sec: f64,
+}
+
+/// Result of the fused-vs-unfused forward-path probe — the `fused` object
+/// in `BENCH_hotpath.json`: whole-round timing at K clients (per-runtime
+/// knob via config), a single full fwd+bwd step with the knob explicit
+/// (hooks), arena footprints, and the 1×1 elision bandwidth sample.
+#[derive(Debug, Clone)]
+pub struct FusedThroughput {
+    pub clients: usize,
+    pub rounds: usize,
+    pub fused_secs_per_round: f64,
+    pub unfused_secs_per_round: f64,
+    /// Global params (round probe) AND step outputs/grads (step probe)
+    /// bit-identical between fused and unfused.
+    pub bit_identical: bool,
+    pub step_fused_secs: f64,
+    pub step_unfused_secs: f64,
+    pub step_gflops_fused: f64,
+    pub step_gflops_unfused: f64,
+    pub arena_peak_fused: usize,
+    pub arena_peak_unfused: usize,
+    pub elision: ElisionThroughput,
+}
+
+impl FusedThroughput {
+    pub fn round_speedup(&self) -> f64 {
+        self.unfused_secs_per_round / self.fused_secs_per_round.max(1e-12)
+    }
+
+    pub fn step_speedup(&self) -> f64 {
+        self.step_unfused_secs / self.step_fused_secs.max(1e-12)
+    }
+
+    /// The `fused` object recorded in `BENCH_hotpath.json`. `nr_sweep` is
+    /// the optional `kernels::tune` result (`cargo bench` attaches it; the
+    /// cargo-test smoke passes an empty slice).
+    pub fn to_json(
+        &self,
+        nr_sweep: &[crate::runtime::kernels::tune::TuneSample],
+        source: &str,
+    ) -> Json {
+        let sweep: Vec<Json> = nr_sweep
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("mr", json::num(s.mr as f64)),
+                    ("nr", json::num(s.nr as f64)),
+                    ("gflops", json::num(s.gflops)),
+                    ("pinned", Json::Bool(s.pinned)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("clients", json::num(self.clients as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            ("fused_secs_per_round", json::num(self.fused_secs_per_round)),
+            ("unfused_secs_per_round", json::num(self.unfused_secs_per_round)),
+            ("round_speedup_vs_unfused", json::num(self.round_speedup())),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+            (
+                "step",
+                json::obj(vec![
+                    ("fused_secs", json::num(self.step_fused_secs)),
+                    ("unfused_secs", json::num(self.step_unfused_secs)),
+                    ("gflops_fused", json::num(self.step_gflops_fused)),
+                    ("gflops_unfused", json::num(self.step_gflops_unfused)),
+                    ("speedup_vs_unfused", json::num(self.step_speedup())),
+                    ("arena_peak_fused_bytes", json::num(self.arena_peak_fused as f64)),
+                    (
+                        "arena_peak_unfused_bytes",
+                        json::num(self.arena_peak_unfused as f64),
+                    ),
+                ]),
+            ),
+            (
+                "elision_1x1",
+                json::obj(vec![
+                    ("rows", json::num(self.elision.rows as f64)),
+                    ("cin", json::num(self.elision.cin as f64)),
+                    ("cout", json::num(self.elision.cout as f64)),
+                    ("elided_secs", json::num(self.elision.elided_secs)),
+                    ("im2col_secs", json::num(self.elision.im2col_secs)),
+                    ("gb_per_sec", json::num(self.elision.gb_per_sec)),
+                    (
+                        "speedup_vs_im2col",
+                        json::num(
+                            self.elision.im2col_secs / self.elision.elided_secs.max(1e-12),
+                        ),
+                    ),
+                ]),
+            ),
+            ("nr_sweep", Json::Arr(sweep)),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Bandwidth of the 1×1 stride-1 pad-0 conv forward with and without the
+/// column-buffer round trip, at a residual-proj-shaped problem.
+fn measure_elision_throughput(budget: Duration) -> ElisionThroughput {
+    use crate::runtime::kernels::{self, Epilogue};
+    use crate::util::bench::bench;
+    use crate::util::Rng64;
+
+    let (b, h, w, cin, cout) = (8usize, 16usize, 16usize, 32usize, 32usize);
+    let xd = [b, h, w, cin];
+    let rows = b * h * w;
+    let mut rng = Rng64::seed_from_u64(0x1b1);
+    let x: Vec<f32> = (0..rows * cin).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let wgt: Vec<f32> = (0..cin * cout).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let mut out = vec![0.0f32; rows * cout];
+    let mut cols = vec![0.0f32; rows * cin];
+    let mut macs = 0u64;
+    let se = bench(&format!("conv1x1 {rows}x{cin}x{cout} elided"), 400, budget, || {
+        kernels::matmul_into(&mut out, &x, rows, cin, &wgt, cout, Epilogue::None, &mut macs);
+        std::hint::black_box(out[0]);
+    });
+    let elided_out = out.clone();
+    let si = bench(&format!("conv1x1 {rows}x{cin}x{cout} im2col"), 400, budget, || {
+        kernels::im2col_into(&mut cols, &x, xd, 1, 1, 1, 0);
+        kernels::matmul_into(&mut out, &cols, rows, cin, &wgt, cout, Epilogue::None, &mut macs);
+        std::hint::black_box(out[0]);
+    });
+    assert!(bits_eq(&elided_out, &out), "1×1 elided path must match im2col bits");
+    let bytes = (rows * (cin + cout) * 4) as f64;
+    ElisionThroughput {
+        rows,
+        cin,
+        cout,
+        elided_secs: se.min.as_secs_f64(),
+        im2col_secs: si.min.as_secs_f64(),
+        gb_per_sec: bytes / se.min.as_secs_f64().max(1e-12) / 1e9,
+    }
+}
+
+/// Run the same K-client DTFL experiment with the fused forward path on and
+/// off (both on the full worker pool; the knob is per-runtime, so each
+/// leg's setting sticks even with other experiments in flight), timing
+/// whole rounds and comparing final global parameters bit-for-bit; then
+/// probe one full fwd+bwd step with the knob explicit (via
+/// `refmath::hooks`) and the bare 1×1 elision bandwidth.
+pub fn measure_fused_throughput(
+    clients: usize,
+    rounds: usize,
+    samples_per_client: usize,
+) -> Result<FusedThroughput> {
+    use crate::runtime::refmath::hooks;
+    use crate::runtime::{spec as mspec, Metadata};
+    use crate::util::bench::bench;
+
+    let spec = |fuse: bool| RunSpec {
+        clients,
+        rounds,
+        batch_cap: Some(1),
+        train_total: clients * samples_per_client,
+        test_total: 32,
+        eval_every: 1,
+        threads: 0,
+        fuse_forward: fuse,
+        ..Default::default()
+    };
+    let run = |fuse: bool| -> Result<(f64, Vec<f32>)> {
+        let mut exp = Experiment::new(spec(fuse).to_config())?;
+        let t0 = Instant::now();
+        exp.run()?;
+        let secs = t0.elapsed().as_secs_f64() / rounds.max(1) as f64;
+        Ok((secs, exp.method.global_params().to_vec()))
+    };
+    // fused first: process warmup (page faults, allocator, CPU ramp) lands
+    // on the fused sample, biasing the recorded speedup DOWN — conservative
+    // for the improvement this entry tracks
+    let (fused_secs_per_round, fused_params) = run(true)?;
+    let (unfused_secs_per_round, unfused_params) = run(false)?;
+
+    // single-step probe: full tiny fwd+bwd with the knob explicit
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    let meta = Metadata::load(&dir)?;
+    let p = mspec::init_flat(&meta, 0);
+    let nx = meta.batch * meta.image_hw * meta.image_hw * meta.in_channels;
+    let xd = [meta.batch, meta.image_hw, meta.image_hw, meta.in_channels];
+    let x: Vec<f32> = (0..nx).map(|i| (i % 17) as f32 / 17.0 - 0.5).collect();
+    let dout: Vec<f32> =
+        (0..meta.batch * meta.num_classes).map(|i| ((i % 7) as f32 - 3.0) * 0.01).collect();
+    let step = |fuse: bool| hooks::run_range(&meta, &p, &x, xd, 1, 8, &dout, fuse);
+    let fused_step = step(true)?;
+    let unfused_step = step(false)?;
+    crate::anyhow::ensure!(
+        fused_step.macs == unfused_step.macs,
+        "fused step must cost the same MACs ({} vs {})",
+        fused_step.macs,
+        unfused_step.macs
+    );
+    let step_bits = bits_eq(&fused_step.out, &unfused_step.out)
+        && bits_eq(&fused_step.grads, &unfused_step.grads);
+    let budget = Duration::from_millis(300);
+    let sf = bench("full fwd+bwd fused", 60, budget, || {
+        let r = step(true).expect("fused step");
+        std::hint::black_box(r.grads[0]);
+    });
+    let su = bench("full fwd+bwd unfused", 60, budget, || {
+        let r = step(false).expect("unfused step");
+        std::hint::black_box(r.grads[0]);
+    });
+    let flops = 2.0 * fused_step.macs as f64;
+    let elision = measure_elision_throughput(Duration::from_millis(200));
+    Ok(FusedThroughput {
+        clients,
+        rounds,
+        fused_secs_per_round,
+        unfused_secs_per_round,
+        bit_identical: bits_eq(&fused_params, &unfused_params) && step_bits,
+        step_fused_secs: sf.min.as_secs_f64(),
+        step_unfused_secs: su.min.as_secs_f64(),
+        step_gflops_fused: flops / sf.min.as_secs_f64().max(1e-12) / 1e9,
+        step_gflops_unfused: flops / su.min.as_secs_f64().max(1e-12) / 1e9,
+        arena_peak_fused: fused_step.arena_peak,
+        arena_peak_unfused: unfused_step.arena_peak,
+        elision,
+    })
+}
+
 /// One kernel's blocked-vs-naive throughput sample (`measure_kernel_throughput`).
 #[derive(Debug, Clone)]
 pub struct KernelThroughput {
@@ -464,7 +706,7 @@ fn arena_peak_after_step() -> Result<usize> {
     let refs: Vec<&Literal> = inputs.iter().collect();
     let mut arena = ScratchArena::new();
     let mut macs = 0u64;
-    refmath::full_step(&meta, false, &refs, &mut arena, &mut macs)?;
+    refmath::full_step(&meta, false, true, &refs, &mut arena, &mut macs)?;
     Ok(arena.peak_bytes())
 }
 

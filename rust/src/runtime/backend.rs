@@ -15,6 +15,7 @@
 //! thread count or machine load; PJRT reports measured wall time.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
@@ -77,6 +78,13 @@ pub trait ExecBackend: Send + Sync {
 
     /// Execute the named artifact (prepares it if needed).
     fn execute(&self, artifact: &str, inputs: &[&Literal]) -> Result<ExecOut>;
+
+    /// Toggle the fused forward path for this backend instance (reference
+    /// backend only; fused and unfused are bit-identical, so backends that
+    /// have no such toggle ignore it). Per-instance — not process-wide —
+    /// so concurrent experiments with different settings cannot flip each
+    /// other's paths mid-run.
+    fn set_fuse_forward(&self, _on: bool) {}
 }
 
 /// Parsed artifact name — the step-dispatch "plan".
@@ -131,11 +139,20 @@ pub struct RefBackend {
     /// results (buffers are zeroed/overwritten on loan), so the pop order
     /// is irrelevant to determinism.
     arenas: Mutex<Vec<ScratchArena>>,
+    /// Fused-forward knob for this backend instance (default on). Results
+    /// are bit-identical either way (see `refmath`), so flipping it can
+    /// never change an outcome — only the traversal/materialization count.
+    fuse_forward: AtomicBool,
 }
 
 impl RefBackend {
     pub fn new(meta: Metadata) -> Self {
-        Self { meta, plans: OnceMap::new(), arenas: Mutex::new(Vec::new()) }
+        Self {
+            meta,
+            plans: OnceMap::new(),
+            arenas: Mutex::new(Vec::new()),
+            fuse_forward: AtomicBool::new(true),
+        }
     }
 
     fn plan(&self, artifact: &str) -> Result<(StepKind, Option<f64>)> {
@@ -169,21 +186,26 @@ impl ExecBackend for RefBackend {
     fn execute(&self, artifact: &str, inputs: &[&Literal]) -> Result<ExecOut> {
         let (kind, _) = self.plan(artifact)?;
         let mut macs = 0u64;
+        let fuse = self.fuse_forward.load(Ordering::Relaxed);
         let mut arena = self.arenas.lock().unwrap().pop().unwrap_or_default();
         let result = match kind {
             StepKind::Client { tier, dcor } => {
-                refmath::client_step(&self.meta, tier, dcor, inputs, &mut arena, &mut macs)
+                refmath::client_step(&self.meta, tier, dcor, fuse, inputs, &mut arena, &mut macs)
             }
             StepKind::Server { tier } => {
-                refmath::server_step(&self.meta, tier, inputs, &mut arena, &mut macs)
+                refmath::server_step(&self.meta, tier, fuse, inputs, &mut arena, &mut macs)
             }
             StepKind::Full { sgd } => {
-                refmath::full_step(&self.meta, sgd, inputs, &mut arena, &mut macs)
+                refmath::full_step(&self.meta, sgd, fuse, inputs, &mut arena, &mut macs)
             }
-            StepKind::Eval => refmath::eval(&self.meta, inputs, &mut arena, &mut macs),
+            StepKind::Eval => refmath::eval(&self.meta, fuse, inputs, &mut arena, &mut macs),
         };
         self.arenas.lock().unwrap().push(arena);
         Ok(ExecOut { parts: result?, cost_secs: macs as f64 / REF_MACS_PER_SEC })
+    }
+
+    fn set_fuse_forward(&self, on: bool) {
+        self.fuse_forward.store(on, Ordering::Relaxed);
     }
 }
 

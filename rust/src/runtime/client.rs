@@ -36,6 +36,12 @@ pub struct RuntimeStats {
     /// Largest single-arena footprint seen process-wide (reference
     /// backend; bytes). See `runtime::tensor::arena_peak_bytes`.
     pub arena_peak_bytes: usize,
+    /// Normalizers that ran the single-sweep fused gn(+relu) path —
+    /// each one dropped a ŷ materialization and two activation traversals.
+    pub fused_gn_passes: u64,
+    /// 1×1 stride-1 pad-0 convolutions that skipped the im2col column
+    /// buffer (forward fill and backward col2im scatter both elided).
+    pub im2col_elisions: u64,
 }
 
 /// Backend + artifact registry for one artifact set (one model config).
@@ -90,6 +96,14 @@ impl Runtime {
 
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Toggle the fused forward path on this runtime's backend (reference
+    /// backend only; no-op for PJRT). Per-runtime, so concurrent
+    /// experiments with different settings cannot race; results are
+    /// bit-identical either way.
+    pub fn set_fuse_forward(&self, on: bool) {
+        self.backend.set_fuse_forward(on);
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -175,12 +189,15 @@ impl Runtime {
 
     /// Snapshot of the atomic statistics counters.
     pub fn stats(&self) -> RuntimeStats {
+        let (fused_gn_passes, im2col_elisions) = super::refmath::fusion_counters();
         RuntimeStats {
             compiles: self.compiles.load(Ordering::Relaxed),
             compile_secs: self.compile_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             executions: self.executions.load(Ordering::Relaxed),
             execute_secs: self.execute_nanos.load(Ordering::Relaxed) as f64 / 1e9,
             arena_peak_bytes: super::tensor::arena_peak_bytes(),
+            fused_gn_passes,
+            im2col_elisions,
         }
     }
 }

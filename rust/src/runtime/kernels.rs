@@ -20,11 +20,20 @@
 //! execution where cores would otherwise idle during one big client's
 //! step.
 //!
-//! Epilogues (`Epilogue::Bias`, `Epilogue::BiasRelu`) are fused into the
-//! tile store, so dense heads do not re-walk their output.
+//! Epilogues (`Epilogue::Bias`, `Epilogue::BiasRelu`, `Epilogue::Relu`,
+//! `Epilogue::ScaleBiasRelu`) are fused into the tile store and accepted by
+//! all three orientations, so consumers never re-walk their output.
 //!
 //! im2col / col2im write into caller-provided buffers (the arena's column
-//! buffer) instead of allocating per call.
+//! buffer) instead of allocating per call. 1×1 stride-1 pad-0 convolutions
+//! skip the column buffer entirely: their im2col matrix **is** the NHWC
+//! activation, so `refmath` feeds the activation straight into the packed
+//! core (im2col elision — see `refmath::conv_fwd`).
+//!
+//! `tune` instantiates the same core at a grid of candidate `(MR, NR)`
+//! register tiles (const generics) for the `cargo bench micro_hotpath --
+//! fused` sweep; the winning constants stay pinned in source, and every
+//! candidate is bit-identical to the pinned core by construction.
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -60,7 +69,11 @@ thread_local! {
     static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
 }
 
-/// Operation fused into the tile store.
+/// Operation fused into the tile store. All three matmul orientations
+/// accept an epilogue, so consumers never re-walk their output tensor.
+/// Epilogues apply per output element to the finished accumulator in the
+/// same fixed expression order a separate pass would use, so a fused store
+/// is bit-identical to `Epilogue::None` followed by the unfused pass.
 #[derive(Clone, Copy)]
 pub enum Epilogue<'a> {
     None,
@@ -68,6 +81,12 @@ pub enum Epilogue<'a> {
     Bias(&'a [f32]),
     /// `c[i][j] = max(0, c[i][j] + bias[j])`.
     BiasRelu(&'a [f32]),
+    /// `c[i][j] = max(0, c[i][j])`.
+    Relu,
+    /// `c[i][j] = max(0, c[i][j] * scale[j] + bias[j])` — the gn/relu-style
+    /// hook: a per-column affine + relu for normalizers whose statistics are
+    /// already known (precomputed scale/bias folded per output channel).
+    ScaleBiasRelu { scale: &'a [f32], bias: &'a [f32] },
 }
 
 // ---------------------------------------------------------------------
@@ -99,6 +118,16 @@ fn store_tile(
             Epilogue::BiasRelu(bias) => {
                 for (j, cv) in crow.iter_mut().enumerate() {
                     *cv = (acc[r][j] + bias[j0 + j]).max(0.0);
+                }
+            }
+            Epilogue::Relu => {
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv = acc[r][j].max(0.0);
+                }
+            }
+            Epilogue::ScaleBiasRelu { scale, bias } => {
+                for (j, cv) in crow.iter_mut().enumerate() {
+                    *cv = (acc[r][j] * scale[j0 + j] + bias[j0 + j]).max(0.0);
                 }
             }
         }
@@ -257,7 +286,9 @@ pub fn matmul_into(
     mm_run(c, a, m, k, b, n, ep);
 }
 
-/// C(K,N) = A(M,K)ᵀ · B(M,N): packs Aᵀ, then runs the same core.
+/// C(K,N) = A(M,K)ᵀ · B(M,N): packs Aᵀ, then runs the same core (with a
+/// fused epilogue, like the other two orientations).
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_tn_into(
     c: &mut [f32],
     a: &[f32],
@@ -265,6 +296,7 @@ pub fn matmul_tn_into(
     k: usize,
     b: &[f32],
     n: usize,
+    ep: Epilogue,
     macs: &mut u64,
 ) {
     debug_assert_eq!(a.len(), m * k);
@@ -274,11 +306,13 @@ pub fn matmul_tn_into(
     PACK.with(|p| {
         let mut at = p.borrow_mut();
         transpose_into(&mut at, a, m, k);
-        mm_run(c, &at, k, m, b, n, Epilogue::None);
+        mm_run(c, &at, k, m, b, n, ep);
     });
 }
 
-/// C(M,K) = A(M,N) · B(K,N)ᵀ: packs Bᵀ, then runs the same core.
+/// C(M,K) = A(M,N) · B(K,N)ᵀ: packs Bᵀ, then runs the same core (with a
+/// fused epilogue, like the other two orientations).
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_nt_into(
     c: &mut [f32],
     a: &[f32],
@@ -286,6 +320,7 @@ pub fn matmul_nt_into(
     n: usize,
     b: &[f32],
     k: usize,
+    ep: Epilogue,
     macs: &mut u64,
 ) {
     debug_assert_eq!(a.len(), m * n);
@@ -295,7 +330,7 @@ pub fn matmul_nt_into(
     PACK.with(|p| {
         let mut bt = p.borrow_mut();
         transpose_into(&mut bt, b, k, n);
-        mm_run(c, a, m, n, &bt, k, Epilogue::None);
+        mm_run(c, a, m, n, &bt, k, ep);
     });
 }
 
@@ -325,14 +360,14 @@ pub fn matmul_bias(
 /// Allocating wrapper over [`matmul_tn_into`].
 pub fn matmul_tn(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, macs: &mut u64) -> Vec<f32> {
     let mut c = vec![0.0f32; k * n];
-    matmul_tn_into(&mut c, a, m, k, b, n, macs);
+    matmul_tn_into(&mut c, a, m, k, b, n, Epilogue::None, macs);
     c
 }
 
 /// Allocating wrapper over [`matmul_nt_into`].
 pub fn matmul_nt(a: &[f32], m: usize, n: usize, b: &[f32], k: usize, macs: &mut u64) -> Vec<f32> {
     let mut c = vec![0.0f32; m * k];
-    matmul_nt_into(&mut c, a, m, n, b, k, macs);
+    matmul_nt_into(&mut c, a, m, n, b, k, Epilogue::None, macs);
     c
 }
 
@@ -545,6 +580,151 @@ pub mod naive {
         }
         *macs += (m * n * k) as u64;
         c
+    }
+}
+
+pub mod tune {
+    //! Compile-time MR/NR register-tile sweep.
+    //!
+    //! The production core pins `MR = 4, NR = 16` (see the crate-level
+    //! constants) so every run is deterministic and reproducible; this
+    //! module instantiates the same tiled core at a grid of candidate
+    //! `(MR, NR)` pairs via const generics so `cargo bench micro_hotpath
+    //! -- fused` can re-measure which tile the target CPU prefers. Because
+    //! each output element accumulates over `k` in ascending order no
+    //! matter the tile shape, **every candidate is bit-identical to the
+    //! pinned core** (asserted by `tests/fused_conformance.rs`) — retuning
+    //! is purely a throughput decision. To adopt a new winner, edit the
+    //! pinned constants in source; nothing is tuned at runtime.
+
+    use std::time::{Duration, Instant};
+
+    /// One `(MR, NR)` candidate's measured throughput.
+    #[derive(Debug, Clone)]
+    pub struct TuneSample {
+        pub mr: usize,
+        pub nr: usize,
+        pub gflops: f64,
+        /// Whether this candidate is the pair pinned in source.
+        pub pinned: bool,
+    }
+
+    /// Candidate register tiles the sweep instantiates.
+    pub const CANDIDATES: &[(usize, usize)] =
+        &[(2, 16), (4, 8), (4, 16), (4, 24), (4, 32), (6, 16), (8, 8), (8, 16)];
+
+    /// The tiled panel at compile-time tile sizes. Same loop structure as
+    /// the pinned core: constant trip counts on full tiles, runtime bounds
+    /// on edges, ascending-`k` accumulation per element throughout.
+    fn mm_panel_g<const TMR: usize, const TNR: usize>(
+        c: &mut [f32],
+        a: &[f32],
+        m: usize,
+        k: usize,
+        b: &[f32],
+        n: usize,
+    ) {
+        let mut i0 = 0;
+        while i0 < m {
+            let mr = TMR.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nr = TNR.min(n - j0);
+                let mut acc = [[0.0f32; TNR]; TMR];
+                if mr == TMR && nr == TNR {
+                    for kk in 0..k {
+                        let base = kk * n + j0;
+                        let brow = &b[base..base + TNR];
+                        for (r, accr) in acc.iter_mut().enumerate() {
+                            let av = a[(i0 + r) * k + kk];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            for (x, &bv) in accr.iter_mut().zip(brow) {
+                                *x += av * bv;
+                            }
+                        }
+                    }
+                } else {
+                    for kk in 0..k {
+                        let base = kk * n + j0;
+                        let brow = &b[base..base + nr];
+                        for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                            let av = a[(i0 + r) * k + kk];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            for (x, &bv) in accr[..nr].iter_mut().zip(brow) {
+                                *x += av * bv;
+                            }
+                        }
+                    }
+                }
+                for r in 0..mr {
+                    let base = (i0 + r) * n + j0;
+                    c[base..base + nr].copy_from_slice(&acc[r][..nr]);
+                }
+                j0 += TNR;
+            }
+            i0 += TMR;
+        }
+    }
+
+    /// `C = A·B` with candidate tile `(mr, nr)`; `None` for a pair outside
+    /// [`CANDIDATES`].
+    pub fn matmul_with(
+        mr: usize,
+        nr: usize,
+        a: &[f32],
+        m: usize,
+        k: usize,
+        b: &[f32],
+        n: usize,
+    ) -> Option<Vec<f32>> {
+        let mut c = vec![0.0f32; m * n];
+        match (mr, nr) {
+            (2, 16) => mm_panel_g::<2, 16>(&mut c, a, m, k, b, n),
+            (4, 8) => mm_panel_g::<4, 8>(&mut c, a, m, k, b, n),
+            (4, 16) => mm_panel_g::<4, 16>(&mut c, a, m, k, b, n),
+            (4, 24) => mm_panel_g::<4, 24>(&mut c, a, m, k, b, n),
+            (4, 32) => mm_panel_g::<4, 32>(&mut c, a, m, k, b, n),
+            (6, 16) => mm_panel_g::<6, 16>(&mut c, a, m, k, b, n),
+            (8, 8) => mm_panel_g::<8, 8>(&mut c, a, m, k, b, n),
+            (8, 16) => mm_panel_g::<8, 16>(&mut c, a, m, k, b, n),
+            _ => return None,
+        }
+        Some(c)
+    }
+
+    /// Measure every candidate on one `m × k × n` problem (deterministic
+    /// operands); each sample takes the minimum over iterations within
+    /// `budget`.
+    pub fn sweep(m: usize, k: usize, n: usize, budget: Duration) -> Vec<TuneSample> {
+        let mut rng = crate::util::Rng64::seed_from_u64(0x7121);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+        let flops = 2.0 * (m * k * n) as f64;
+        CANDIDATES
+            .iter()
+            .map(|&(mr, nr)| {
+                let mut best = f64::INFINITY;
+                let deadline = Instant::now() + budget;
+                let mut iters = 0usize;
+                while iters < 3 || Instant::now() < deadline {
+                    let t0 = Instant::now();
+                    let c = matmul_with(mr, nr, &a, m, k, &b, n).expect("listed candidate");
+                    std::hint::black_box(c[0]);
+                    best = best.min(t0.elapsed().as_secs_f64());
+                    iters += 1;
+                }
+                TuneSample {
+                    mr,
+                    nr,
+                    gflops: flops / best.max(1e-12) / 1e9,
+                    pinned: mr == super::MR && nr == super::NR,
+                }
+            })
+            .collect()
     }
 }
 

@@ -22,6 +22,25 @@
 //! multiply-accumulate counts into a `macs` counter; the backend converts
 //! those to *deterministic* simulated host seconds, which is what makes
 //! N-thread round execution bit-identical to sequential execution.
+//!
+//! **Fused forward path** (`run.fuse_forward`, default on): the conv→gn→relu
+//! hot loop drops three whole-activation passes per normalizer —
+//! [`gn_fused_fwd`] computes group statistics and applies
+//! normalize+affine(+relu) in one write sweep over the conv output, saving
+//! the conv output itself (plus per-group μ/σ) instead of materializing the
+//! normalized ŷ tensor, and the fused backward recomputes ŷ on the fly from
+//! those saved stats. 1×1 stride-1 pad-0 convolutions (residual `proj`
+//! shortcuts on width-jump stages) elide im2col entirely: their column
+//! matrix *is* the NHWC activation, so forward/dW/dX matmuls run straight
+//! on the activation and the col2im scatter disappears. Per-element
+//! arithmetic order is pinned identically in both modes, so fused ==
+//! unfused **bitwise** — enforced by `tests/fused_conformance.rs` and the
+//! golden-trace grid. The knob is **per-runtime** (an atomic on
+//! `RefBackend`, threaded into every step entry point as an explicit
+//! `fuse` argument), so concurrent experiments with different settings in
+//! one process cannot flip each other's paths mid-run.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::anyhow::Result;
 
@@ -32,6 +51,21 @@ use super::spec::{gn_groups, GN_EPS};
 use super::tensor::{ActRef, Dims4, ScratchArena, TensorView};
 
 const DCOR_EPS: f64 = 1e-9;
+
+/// Dropped-materialization counters (process-wide, monitoring only — the
+/// fuse decision itself is the per-call `fuse` parameter threaded down from
+/// the backend's per-runtime knob, so concurrent experiments with different
+/// settings cannot race each other's math).
+static FUSED_GN_PASSES: AtomicU64 = AtomicU64::new(0);
+static IM2COL_ELISIONS: AtomicU64 = AtomicU64::new(0);
+
+/// `(fused_gn_passes, im2col_elisions)` since process start: how many
+/// normalizers ran the single-sweep fused path and how many 1×1 convs
+/// skipped the column buffer. Monotonic and shared by every runtime in the
+/// process — for per-run counts use `hooks::run_range`'s returned fields.
+pub fn fusion_counters() -> (u64, u64) {
+    (FUSED_GN_PASSES.load(Ordering::Relaxed), IM2COL_ELISIONS.load(Ordering::Relaxed))
+}
 
 // ---------------------------------------------------------------------
 // conv2d = im2col + matmul (NHWC, weights (kh, kw, cin, cout))
@@ -48,6 +82,10 @@ struct ConvCache {
     /// Saved input (arena slot shared with the producing layer's cache).
     x: ActRef,
     xd: Dims4,
+    /// Recorded at forward time: this conv's im2col was elided (1×1,
+    /// stride 1, pad 0, fusion on), so the backward pass must use the
+    /// direct formulation too.
+    elide: bool,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -61,19 +99,52 @@ fn conv_fwd(
     cout: usize,
     stride: usize,
     pad: usize,
+    fuse: bool,
     arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> (Vec<f32>, Dims4, ConvCache) {
     let xd = arena.act_dims(x);
     debug_assert_eq!(xd[3], cin);
-    let (rows, k) = arena.im2col(x, kh, kw, stride, pad);
-    let mut out = arena.take_buf_uninit(rows * cout);
     let w = &p[off..off + kh * kw * cin * cout];
-    kernels::matmul_into(&mut out, arena.cols(), rows, k, w, cout, kernels::Epilogue::None, macs);
+    // 1×1 stride-1 pad-0: the im2col matrix is the NHWC activation itself
+    // (rows = B·H·W, patch = C), so skip the column-buffer fill and feed
+    // the activation straight into the packed core. Identical operand bits
+    // → identical output bits.
+    let elide = fuse && kh == 1 && kw == 1 && stride == 1 && pad == 0;
+    let out = if elide {
+        IM2COL_ELISIONS.fetch_add(1, Ordering::Relaxed);
+        let rows = xd[0] * xd[1] * xd[2];
+        let mut out = arena.take_buf_uninit(rows * cout);
+        kernels::matmul_into(
+            &mut out,
+            arena.act_data(x),
+            rows,
+            cin,
+            w,
+            cout,
+            kernels::Epilogue::None,
+            macs,
+        );
+        out
+    } else {
+        let (rows, k) = arena.im2col(x, kh, kw, stride, pad);
+        let mut out = arena.take_buf_uninit(rows * cout);
+        kernels::matmul_into(
+            &mut out,
+            arena.cols(),
+            rows,
+            k,
+            w,
+            cout,
+            kernels::Epilogue::None,
+            macs,
+        );
+        out
+    };
     let ho = (xd[1] + 2 * pad - kh) / stride + 1;
     let wo = (xd[2] + 2 * pad - kw) / stride + 1;
     let od = [xd[0], ho, wo, cout];
-    (out, od, ConvCache { off, kh, kw, cin, cout, stride, pad, x, xd })
+    (out, od, ConvCache { off, kh, kw, cin, cout, stride, pad, x, xd, elide })
 }
 
 /// dW accumulated into `grads`; returns dX (empty when `need_dx` is false —
@@ -91,10 +162,58 @@ fn conv_bwd(
     macs: &mut u64,
     need_dx: bool,
 ) -> Vec<f32> {
-    let (rows, k) = arena.im2col(c.x, c.kh, c.kw, c.stride, c.pad);
     let wsz = c.kh * c.kw * c.cin * c.cout;
+    if c.elide {
+        // elided 1×1: dW = Xᵀ·dout and dX = dout·Wᵀ straight on the NHWC
+        // activation — no column replay, no dcols buffer, no col2im
+        // scatter (for this geometry col2im is the identity, and the
+        // matmul core never produces -0.0, so skipping the zero-init
+        // accumulate is bit-neutral).
+        let rows = c.xd[0] * c.xd[1] * c.xd[2];
+        let mut dw = arena.take_buf_uninit(wsz);
+        kernels::matmul_tn_into(
+            &mut dw,
+            arena.act_data(c.x),
+            rows,
+            c.cin,
+            dout,
+            c.cout,
+            kernels::Epilogue::None,
+            macs,
+        );
+        for (g, d) in grads[c.off..c.off + wsz].iter_mut().zip(&dw) {
+            *g += d;
+        }
+        arena.recycle(dw);
+        if !need_dx {
+            return Vec::new();
+        }
+        let w = &p[c.off..c.off + wsz];
+        let mut dx = arena.take_buf_uninit(rows * c.cin);
+        kernels::matmul_nt_into(
+            &mut dx,
+            dout,
+            rows,
+            c.cout,
+            w,
+            c.cin,
+            kernels::Epilogue::None,
+            macs,
+        );
+        return dx;
+    }
+    let (rows, k) = arena.im2col(c.x, c.kh, c.kw, c.stride, c.pad);
     let mut dw = arena.take_buf_uninit(wsz);
-    kernels::matmul_tn_into(&mut dw, arena.cols(), rows, k, dout, c.cout, macs);
+    kernels::matmul_tn_into(
+        &mut dw,
+        arena.cols(),
+        rows,
+        k,
+        dout,
+        c.cout,
+        kernels::Epilogue::None,
+        macs,
+    );
     for (g, d) in grads[c.off..c.off + wsz].iter_mut().zip(&dw) {
         *g += d;
     }
@@ -104,7 +223,7 @@ fn conv_bwd(
     }
     let w = &p[c.off..c.off + wsz];
     let dcols = arena.dcols_mut(rows * k);
-    kernels::matmul_nt_into(dcols, dout, rows, c.cout, w, k, macs);
+    kernels::matmul_nt_into(dcols, dout, rows, c.cout, w, k, kernels::Epilogue::None, macs);
     let mut dx = arena.take_buf(c.xd.iter().product());
     kernels::col2im_into(&mut dx, arena.dcols(), c.xd, c.kh, c.kw, c.stride, c.pad);
     dx
@@ -114,15 +233,26 @@ fn conv_bwd(
 // group norm
 // ---------------------------------------------------------------------
 
+/// What the forward pass saved for the backward replay.
+enum GnSaved {
+    /// Unfused path: the normalized activations ŷ (pre scale/bias),
+    /// arena-held.
+    Y(ActRef),
+    /// Fused path: the conv output x itself plus per-(batch, group) means —
+    /// ŷ is recomputed on the fly as `((x − μ)/σ) as f32`, the exact
+    /// expression the forward used, so the recomputed bits equal the
+    /// stored-ŷ bits.
+    X { x: ActRef, mu: Vec<f64> },
+}
+
 struct GnCache {
     soff: usize,
     boff: usize,
     d: Dims4,
     groups: usize,
-    /// Normalized activations (pre scale/bias), arena-held.
-    y: ActRef,
     /// Per-(batch, group) standard deviation.
     sigma: Vec<f64>,
+    saved: GnSaved,
 }
 
 fn gn_fwd(
@@ -172,12 +302,102 @@ fn gn_fwd(
         }
     }
     let y = arena.store_vec(y, d);
-    (out, GnCache { soff, boff, d, groups: g, y, sigma })
+    (out, GnCache { soff, boff, d, groups: g, sigma, saved: GnSaved::Y(y) })
+}
+
+/// Fused gn(+relu): one statistics sweep, then one write sweep applying
+/// normalize+affine(+relu) — the separate relu traversal and the ŷ
+/// materialization both disappear. Consumes the conv output `h` and parks
+/// it in the arena as the backward replay source (the slot the unfused
+/// path would have spent on ŷ). Bit-identical to `gn_fwd` + `relu`: every
+/// per-element expression is written out in the same order.
+fn gn_fused_fwd(
+    p: &[f32],
+    soff: usize,
+    boff: usize,
+    h: Vec<f32>,
+    d: Dims4,
+    fuse_relu: bool,
+    arena: &mut ScratchArena,
+) -> (Vec<f32>, GnCache) {
+    let [b, hh, w, c] = d;
+    let g = gn_groups(c);
+    let cg = c / g;
+    let m = (hh * w * cg) as f64;
+    FUSED_GN_PASSES.fetch_add(1, Ordering::Relaxed);
+    let mut out = arena.take_buf_uninit(h.len());
+    let x = arena.store_vec(h, d);
+    let xs = arena.act_data(x);
+    let mut sigma = vec![0.0f64; b * g];
+    let mut mu = vec![0.0f64; b * g];
+    for bi in 0..b {
+        for gi in 0..g {
+            let (mut s, mut s2) = (0.0f64, 0.0f64);
+            for hy in 0..hh {
+                for wx in 0..w {
+                    let base = ((bi * hh + hy) * w + wx) * c + gi * cg;
+                    for v in &xs[base..base + cg] {
+                        let v = *v as f64;
+                        s += v;
+                        s2 += v * v;
+                    }
+                }
+            }
+            let muv = s / m;
+            let var = (s2 / m - muv * muv).max(0.0);
+            let sg = (var + GN_EPS as f64).sqrt();
+            mu[bi * g + gi] = muv;
+            sigma[bi * g + gi] = sg;
+            for hy in 0..hh {
+                for wx in 0..w {
+                    let base = ((bi * hh + hy) * w + wx) * c + gi * cg;
+                    for cc in 0..cg {
+                        let idx = base + cc;
+                        let ch = gi * cg + cc;
+                        let yv = ((xs[idx] as f64 - muv) / sg) as f32;
+                        let o = yv * p[soff + ch] + p[boff + ch];
+                        // same branch shape as the standalone `relu` pass
+                        // (-0.0 stays -0.0), so the bits match exactly
+                        out[idx] = if fuse_relu && o < 0.0 { 0.0 } else { o };
+                    }
+                }
+            }
+        }
+    }
+    (out, GnCache { soff, boff, d, groups: g, sigma, saved: GnSaved::X { x, mu } })
+}
+
+/// Forward gn with the fusion knob explicit: fused single-sweep vs the
+/// legacy gn_fwd → recycle → relu sequence. Consumes the conv output `h`
+/// either way; `fuse_relu` folds the activation into the same sweep.
+#[allow(clippy::too_many_arguments)]
+fn gn_apply(
+    p: &[f32],
+    soff: usize,
+    boff: usize,
+    h: Vec<f32>,
+    d: Dims4,
+    fuse: bool,
+    fuse_relu: bool,
+    arena: &mut ScratchArena,
+) -> (Vec<f32>, GnCache) {
+    if fuse {
+        gn_fused_fwd(p, soff, boff, h, d, fuse_relu, arena)
+    } else {
+        let (mut out, gc) = gn_fwd(p, soff, boff, &h, d, arena);
+        arena.recycle(h);
+        if fuse_relu {
+            relu(&mut out);
+        }
+        (out, gc)
+    }
 }
 
 /// Standard normalization backward: with y = (x−μ)/σ over each group,
 /// dx = (dy − mean(dy) − y·mean(dy∘y)) / σ. dscale/dbias accumulate into
-/// `grads`.
+/// `grads`. Dispatches on what the forward saved: a stored ŷ tensor
+/// (unfused) or the conv output + stats (fused; ŷ recomputed per element
+/// with the forward's exact expression, so the bits are identical).
 fn gn_bwd(
     p: &[f32],
     cache: &GnCache,
@@ -185,14 +405,39 @@ fn gn_bwd(
     grads: &mut [f32],
     arena: &mut ScratchArena,
 ) -> Vec<f32> {
+    let mut dx = arena.take_buf_uninit(dout.len());
+    match &cache.saved {
+        GnSaved::Y(y) => {
+            let ys = arena.act_data(*y);
+            gn_bwd_core(p, cache, dout, grads, &mut dx, |idx, _| ys[idx]);
+        }
+        GnSaved::X { x, mu } => {
+            let xs = arena.act_data(*x);
+            gn_bwd_core(p, cache, dout, grads, &mut dx, |idx, bg| {
+                ((xs[idx] as f64 - mu[bg]) / cache.sigma[bg]) as f32
+            });
+        }
+    }
+    dx
+}
+
+/// The three gn backward sweeps, generic over the ŷ source; `y_at` takes
+/// `(element index, batch·groups + group index)`.
+fn gn_bwd_core(
+    p: &[f32],
+    cache: &GnCache,
+    dout: &[f32],
+    grads: &mut [f32],
+    dx: &mut [f32],
+    y_at: impl Fn(usize, usize) -> f32,
+) {
     let [b, h, w, c] = cache.d;
     let g = cache.groups;
     let cg = c / g;
     let m = (h * w * cg) as f64;
-    let mut dx = arena.take_buf_uninit(dout.len());
-    let y = arena.act_data(cache.y);
     for bi in 0..b {
         for gi in 0..g {
+            let bg = bi * g + gi;
             let (mut sdy, mut sdyy) = (0.0f64, 0.0f64);
             for hy in 0..h {
                 for wx in 0..w {
@@ -202,13 +447,13 @@ fn gn_bwd(
                         let ch = gi * cg + cc;
                         let dy = (dout[idx] * p[cache.soff + ch]) as f64;
                         sdy += dy;
-                        sdyy += dy * y[idx] as f64;
+                        sdyy += dy * y_at(idx, bg) as f64;
                     }
                 }
             }
             let mdy = sdy / m;
             let mdyy = sdyy / m;
-            let sg = cache.sigma[bi * g + gi];
+            let sg = cache.sigma[bg];
             for hy in 0..h {
                 for wx in 0..w {
                     let base = ((bi * h + hy) * w + wx) * c + gi * cg;
@@ -216,7 +461,7 @@ fn gn_bwd(
                         let idx = base + cc;
                         let ch = gi * cg + cc;
                         let dy = (dout[idx] * p[cache.soff + ch]) as f64;
-                        dx[idx] = ((dy - mdy - y[idx] as f64 * mdyy) / sg) as f32;
+                        dx[idx] = ((dy - mdy - y_at(idx, bg) as f64 * mdyy) / sg) as f32;
                     }
                 }
             }
@@ -229,13 +474,13 @@ fn gn_bwd(
                 let base = ((bi * h + hy) * w + wx) * c;
                 for ch in 0..c {
                     let idx = base + ch;
+                    let bg = bi * g + ch / cg;
                     grads[cache.boff + ch] += dout[idx];
-                    grads[cache.soff + ch] += dout[idx] * y[idx];
+                    grads[cache.soff + ch] += dout[idx] * y_at(idx, bg);
                 }
             }
         }
     }
-    dx
 }
 
 // ---------------------------------------------------------------------
@@ -525,12 +770,14 @@ fn take(cur: &mut usize, n: usize) -> usize {
 /// backward pass replays). Parameters are consumed off `p` in flat-layout
 /// order; the number of parameters consumed is returned for validation
 /// against the metadata split geometry.
+#[allow(clippy::too_many_arguments)]
 fn forward_modules(
     meta: &Metadata,
     p: &[f32],
     x0: ActRef,
     lo: usize,
     hi: usize,
+    fuse: bool,
     arena: &mut ScratchArena,
     macs: &mut u64,
 ) -> Result<(Vec<f32>, Vec<usize>, Vec<Item>, usize)> {
@@ -548,12 +795,10 @@ fn forward_modules(
         if module == 1 {
             let w0 = meta.widths[0];
             let woff = take(&mut cur, 3 * 3 * cin * w0);
-            let (h1, d1, c1) = conv_fwd(p, woff, xcur, 3, 3, cin, w0, 1, 1, arena, macs);
+            let (h1, d1, c1) = conv_fwd(p, woff, xcur, 3, 3, cin, w0, 1, 1, fuse, arena, macs);
             let soff = take(&mut cur, w0);
             let boff = take(&mut cur, w0);
-            let (mut g1, gc) = gn_fwd(p, soff, boff, &h1, d1, arena);
-            arena.recycle(h1);
-            relu(&mut g1);
+            let (g1, gc) = gn_apply(p, soff, boff, h1, d1, fuse, true, arena);
             let out = arena.store_vec(g1, d1);
             items.push(Item::Stem { conv: c1, gn: gc, out });
             xcur = out;
@@ -575,27 +820,26 @@ fn forward_modules(
                 let need_proj = stride != 1 || cin != cout;
                 let w1off = take(&mut cur, 3 * 3 * cin * cout);
                 let (h1, d1, c1) =
-                    conv_fwd(p, w1off, xcur, 3, 3, cin, cout, stride, 1, arena, macs);
+                    conv_fwd(p, w1off, xcur, 3, 3, cin, cout, stride, 1, fuse, arena, macs);
                 let s1 = take(&mut cur, cout);
                 let b1 = take(&mut cur, cout);
-                let (mut r1, g1c) = gn_fwd(p, s1, b1, &h1, d1, arena);
-                arena.recycle(h1);
-                relu(&mut r1);
+                let (r1, g1c) = gn_apply(p, s1, b1, h1, d1, fuse, true, arena);
                 let relu1 = arena.store_vec(r1, d1);
                 let w2off = take(&mut cur, 3 * 3 * cout * cout);
-                let (h2, d2, c2) = conv_fwd(p, w2off, relu1, 3, 3, cout, cout, 1, 1, arena, macs);
+                let (h2, d2, c2) =
+                    conv_fwd(p, w2off, relu1, 3, 3, cout, cout, 1, 1, fuse, arena, macs);
                 let s2 = take(&mut cur, cout);
                 let b2 = take(&mut cur, cout);
-                let (mut g2, g2c) = gn_fwd(p, s2, b2, &h2, d2, arena);
-                arena.recycle(h2);
+                // relu comes after the residual add, so gn2 fuses only the
+                // normalize+affine sweep
+                let (mut g2, g2c) = gn_apply(p, s2, b2, h2, d2, fuse, false, arena);
                 let proj = if need_proj {
                     let wpoff = take(&mut cur, cin * cout);
                     let (hp, dp, cp) =
-                        conv_fwd(p, wpoff, xcur, 1, 1, cin, cout, stride, 0, arena, macs);
+                        conv_fwd(p, wpoff, xcur, 1, 1, cin, cout, stride, 0, fuse, arena, macs);
                     let sp = take(&mut cur, cout);
                     let bp = take(&mut cur, cout);
-                    let (gp, gpc) = gn_fwd(p, sp, bp, &hp, dp, arena);
-                    arena.recycle(hp);
+                    let (gp, gpc) = gn_apply(p, sp, bp, hp, dp, fuse, false, arena);
                     debug_assert_eq!(dp, d2);
                     for (a, b) in g2.iter_mut().zip(&gp) {
                         *a += b;
@@ -778,11 +1022,14 @@ fn train_state_outputs(p: Vec<f32>, m: Vec<f32>, v: Vec<f32>, t: f32) -> Result<
 
 /// Client-side local-loss step: modules 1..tier + aux head (+ optional
 /// distance-correlation term). Output tuple:
-/// `[client_vec', m', v', t+1, z, loss]`.
+/// `[client_vec', m', v', t+1, z, loss]`. `fuse` selects the fused forward
+/// path (bit-identical either way).
+#[allow(clippy::too_many_arguments)]
 pub fn client_step(
     meta: &Metadata,
     tier: usize,
     dcor: bool,
+    fuse: bool,
     inputs: &[&Literal],
     arena: &mut ScratchArena,
     macs: &mut u64,
@@ -799,7 +1046,7 @@ pub fn client_step(
     let cpl = tm.client_param_len;
     arena.begin_step();
     let x0 = arena.store_slice(ti.x, ti.xd);
-    let (z, zdims, items, used) = forward_modules(meta, ti.p, x0, 1, tier, arena, macs)?;
+    let (z, zdims, items, used) = forward_modules(meta, ti.p, x0, 1, tier, fuse, arena, macs)?;
     crate::anyhow::ensure!(used == cpl, "client params consumed {used} != {cpl}");
     let zd = [zdims[0], zdims[1], zdims[2], zdims[3]];
     let c = meta.widths[tier - 1];
@@ -834,6 +1081,7 @@ pub fn client_step(
 pub fn server_step(
     meta: &Metadata,
     tier: usize,
+    fuse: bool,
     inputs: &[&Literal],
     arena: &mut ScratchArena,
     macs: &mut u64,
@@ -850,7 +1098,8 @@ pub fn server_step(
     let ncls = meta.num_classes;
     arena.begin_step();
     let x0 = arena.store_slice(ti.x, ti.xd);
-    let (logits, _, items, used) = forward_modules(meta, ti.p, x0, tier + 1, 8, arena, macs)?;
+    let (logits, _, items, used) =
+        forward_modules(meta, ti.p, x0, tier + 1, 8, fuse, arena, macs)?;
     crate::anyhow::ensure!(used == ti.p.len(), "server params consumed {used} != {}", ti.p.len());
     let loss = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
     let correct = correct_count(&logits, ti.xd[0], ncls, ti.y);
@@ -874,6 +1123,7 @@ pub fn server_step(
 pub fn full_step(
     meta: &Metadata,
     sgd: bool,
+    fuse: bool,
     inputs: &[&Literal],
     arena: &mut ScratchArena,
     macs: &mut u64,
@@ -883,7 +1133,7 @@ pub fn full_step(
     let ncls = meta.num_classes;
     arena.begin_step();
     let x0 = arena.store_slice(ti.x, ti.xd);
-    let (logits, _, items, used) = forward_modules(meta, ti.p, x0, 1, 8, arena, macs)?;
+    let (logits, _, items, used) = forward_modules(meta, ti.p, x0, 1, 8, fuse, arena, macs)?;
     crate::anyhow::ensure!(used == meta.total_params, "full params consumed {used}");
     let loss = ce_fwd(&logits, ti.xd[0], ncls, ti.y);
     let correct = correct_count(&logits, ti.xd[0], ncls, ti.y);
@@ -911,6 +1161,7 @@ pub fn full_step(
 /// Evaluate the full model on one batch → `[loss, correct]`.
 pub fn eval(
     meta: &Metadata,
+    fuse: bool,
     inputs: &[&Literal],
     arena: &mut ScratchArena,
     macs: &mut u64,
@@ -929,11 +1180,193 @@ pub fn eval(
     }
     arena.begin_step();
     let x0 = arena.store_slice(x, xd);
-    let (logits, _, _, used) = forward_modules(meta, p, x0, 1, 8, arena, macs)?;
+    let (logits, _, _, used) = forward_modules(meta, p, x0, 1, 8, fuse, arena, macs)?;
     crate::anyhow::ensure!(used == meta.total_params, "eval params consumed {used}");
     let loss = ce_fwd(&logits, xd[0], meta.num_classes, y);
     let correct = correct_count(&logits, xd[0], meta.num_classes, y);
     Ok(vec![lit::f32_scalar(loss), lit::f32_scalar(correct)])
+}
+
+// ---------------------------------------------------------------------
+// conformance / bench hooks
+// ---------------------------------------------------------------------
+
+pub mod hooks {
+    //! Entry points for the kernel-conformance suite and the fused-path
+    //! benches: run pieces of the forward/backward pipeline with the fusion
+    //! knob **explicit** (instead of the per-runtime backend knob), so
+    //! fused and unfused executions can be compared bit-for-bit in one
+    //! process, with per-run fusion counts that cannot race other threads.
+
+    use super::*;
+
+    /// gn(+optional trailing relu) forward + backward on one tensor.
+    pub struct GnOut {
+        pub out: Vec<f32>,
+        pub dx: Vec<f32>,
+        pub dscale: Vec<f32>,
+        pub dbias: Vec<f32>,
+    }
+
+    /// Run group norm (and optionally the trailing relu) forward, then the
+    /// backward pass for upstream gradient `dout`, fused or unfused.
+    pub fn gn_forward_backward(
+        scale: &[f32],
+        bias: &[f32],
+        x: &[f32],
+        d: Dims4,
+        dout: &[f32],
+        relu_after: bool,
+        fused: bool,
+    ) -> GnOut {
+        let c = d[3];
+        assert_eq!(scale.len(), c);
+        assert_eq!(bias.len(), c);
+        assert_eq!(x.len(), d.iter().product::<usize>());
+        assert_eq!(dout.len(), x.len());
+        let mut p = scale.to_vec();
+        p.extend_from_slice(bias);
+        let (soff, boff) = (0, c);
+        let mut arena = ScratchArena::new();
+        arena.begin_step();
+        let mut h = arena.take_buf_uninit(x.len());
+        h.copy_from_slice(x);
+        let (out, cache) = gn_apply(&p, soff, boff, h, d, fused, relu_after, &mut arena);
+        let mut dmask = dout.to_vec();
+        if relu_after {
+            relu_bwd_mask(&out, &mut dmask);
+        }
+        let mut grads = vec![0.0f32; p.len()];
+        let dx = gn_bwd(&p, &cache, &dmask, &mut grads, &mut arena);
+        GnOut { out, dx, dscale: grads[..c].to_vec(), dbias: grads[c..].to_vec() }
+    }
+
+    /// conv2d forward + backward on one tensor.
+    pub struct ConvOut {
+        pub out: Vec<f32>,
+        pub od: Dims4,
+        pub dw: Vec<f32>,
+        pub dx: Vec<f32>,
+        pub macs: u64,
+        pub arena_peak: usize,
+        pub arena_loans: u64,
+    }
+
+    /// Run one convolution forward + backward (dW and dX), with the fusion
+    /// knob explicit — under `fuse`, a 1×1 stride-1 pad-0 geometry takes
+    /// the im2col-elided path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_forward_backward(
+        w: &[f32],
+        x: &[f32],
+        xd: Dims4,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        stride: usize,
+        pad: usize,
+        dout: &[f32],
+        fuse: bool,
+    ) -> ConvOut {
+        let cin = xd[3];
+        assert_eq!(w.len(), kh * kw * cin * cout);
+        let mut arena = ScratchArena::new();
+        arena.begin_step();
+        let x0 = arena.store_slice(x, xd);
+        let mut macs = 0u64;
+        let (out, od, cache) =
+            conv_fwd(w, 0, x0, kh, kw, cin, cout, stride, pad, fuse, &mut arena, &mut macs);
+        assert_eq!(dout.len(), od.iter().product::<usize>());
+        let mut grads = vec![0.0f32; w.len()];
+        let dx = conv_bwd(w, &cache, dout, &mut grads, &mut arena, &mut macs, true);
+        ConvOut {
+            out,
+            od,
+            dw: grads,
+            dx,
+            macs,
+            arena_peak: arena.peak_bytes(),
+            arena_loans: arena.buffer_loans(),
+        }
+    }
+
+    /// Forward + backward over a module range of the real model walker.
+    pub struct RangeOut {
+        pub out: Vec<f32>,
+        pub out_dims: Vec<usize>,
+        pub grads: Vec<f32>,
+        pub macs: u64,
+        pub arena_peak: usize,
+        pub arena_loans: u64,
+        /// Convolutions in this run that took the im2col-elided path
+        /// (per-run, derived from the forward caches — unlike the
+        /// process-wide `fusion_counters`, this cannot race other threads).
+        pub elided_convs: usize,
+        /// Normalizers in this run that took the fused single-sweep path.
+        pub fused_gn: usize,
+    }
+
+    /// Run modules `lo..=hi` forward then backward with upstream gradient
+    /// `dout`, on a fresh arena, with the fusion knob explicit. `p` must
+    /// start at module `lo`'s first parameter (`meta.module_offsets[lo-1]`
+    /// into the flat vector).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_range(
+        meta: &Metadata,
+        p: &[f32],
+        x: &[f32],
+        xd: Dims4,
+        lo: usize,
+        hi: usize,
+        dout: &[f32],
+        fuse: bool,
+    ) -> Result<RangeOut> {
+        let mut arena = ScratchArena::new();
+        arena.begin_step();
+        let x0 = arena.store_slice(x, xd);
+        let mut macs = 0u64;
+        let (out, out_dims, items, _used) =
+            forward_modules(meta, p, x0, lo, hi, fuse, &mut arena, &mut macs)?;
+        crate::anyhow::ensure!(
+            dout.len() == out.len(),
+            "run_range: dout length {} != output length {}",
+            dout.len(),
+            out.len()
+        );
+        let (mut elided_convs, mut fused_gn) = (0usize, 0usize);
+        for item in &items {
+            match item {
+                Item::Stem { conv, gn, .. } => {
+                    elided_convs += conv.elide as usize;
+                    fused_gn += matches!(gn.saved, GnSaved::X { .. }) as usize;
+                }
+                Item::Block { conv1, gn1, conv2, gn2, proj, .. } => {
+                    elided_convs += conv1.elide as usize + conv2.elide as usize;
+                    fused_gn += matches!(gn1.saved, GnSaved::X { .. }) as usize
+                        + matches!(gn2.saved, GnSaved::X { .. }) as usize;
+                    if let Some((cp, gp)) = proj {
+                        elided_convs += cp.elide as usize;
+                        fused_gn += matches!(gp.saved, GnSaved::X { .. }) as usize;
+                    }
+                }
+                Item::Head(_) => {}
+            }
+        }
+        let mut grads = vec![0.0f32; p.len()];
+        let mut d0 = arena.take_buf_uninit(dout.len());
+        d0.copy_from_slice(dout);
+        backward_modules(p, &items, d0, &mut grads, &mut arena, &mut macs);
+        Ok(RangeOut {
+            out,
+            out_dims,
+            grads,
+            macs,
+            arena_peak: arena.peak_bytes(),
+            arena_loans: arena.buffer_loans(),
+            elided_convs,
+            fused_gn,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -967,7 +1400,7 @@ mod tests {
         arena.begin_step();
         let x0 = arena.store_slice(x, xd);
         let (logits, _, items, _) =
-            forward_modules(meta, p, x0, 1, 8, &mut arena, &mut macs).unwrap();
+            forward_modules(meta, p, x0, 1, 8, true, &mut arena, &mut macs).unwrap();
         let loss = ce_fwd(&logits, xd[0], meta.num_classes, y) as f64;
         let dlogits = ce_bwd(&logits, xd[0], meta.num_classes, y, 1.0);
         let mut grads = vec![0.0f32; p.len()];
@@ -1038,7 +1471,7 @@ mod tests {
             ];
             let refs: Vec<&Literal> = inputs.iter().collect();
             let mut macs = 0u64;
-            let out = full_step(&meta, false, &refs, &mut arena, &mut macs).unwrap();
+            let out = full_step(&meta, false, true, &refs, &mut arena, &mut macs).unwrap();
             assert_eq!(out.len(), 6);
             assert!(macs > 0);
             p = out[0].to_vec::<f32>().unwrap();
@@ -1083,7 +1516,7 @@ mod tests {
             ];
             let refs: Vec<&Literal> = ci.iter().collect();
             let mut macs = 0u64;
-            let cout = client_step(&meta, tier, false, &refs, &mut arena, &mut macs).unwrap();
+            let cout = client_step(&meta, tier, false, true, &refs, &mut arena, &mut macs).unwrap();
             assert_eq!(cout.len(), 6);
             let z = &cout[4];
             assert_eq!(z.dims(), &tm.z_shape[..]);
@@ -1101,7 +1534,7 @@ mod tests {
             ];
             let srefs: Vec<&Literal> = si.iter().collect();
             let mut smacs = 0u64;
-            let sout = server_step(&meta, tier, &srefs, &mut arena, &mut smacs).unwrap();
+            let sout = server_step(&meta, tier, true, &srefs, &mut arena, &mut smacs).unwrap();
             assert_eq!(sout.len(), 6);
             assert!(lit::scalar_f32(&sout[4]).unwrap().is_finite());
             assert!(client_macs > 0 && smacs > 0);
@@ -1134,7 +1567,7 @@ mod tests {
             ];
             let refs: Vec<&Literal> = ci.iter().collect();
             let mut cm = 0u64;
-            let cout = client_step(&meta, tier, false, &refs, &mut arena, &mut cm).unwrap();
+            let cout = client_step(&meta, tier, false, true, &refs, &mut arena, &mut cm).unwrap();
 
             let sv = flat[tm.cut_offset..].to_vec();
             let szeros = vec![0.0f32; sv.len()];
@@ -1149,7 +1582,7 @@ mod tests {
             ];
             let srefs: Vec<&Literal> = si.iter().collect();
             let mut sm = 0u64;
-            server_step(&meta, tier, &srefs, &mut arena, &mut sm).unwrap();
+            server_step(&meta, tier, true, &srefs, &mut arena, &mut sm).unwrap();
 
             assert!(cm > last_client, "tier {tier}: client macs {cm} <= {last_client}");
             assert!(sm < last_server, "tier {tier}: server macs {sm} >= {last_server}");
@@ -1182,7 +1615,7 @@ mod tests {
             let refs: Vec<&Literal> = ci.iter().collect();
             let mut arena = ScratchArena::new();
             let mut macs = 0u64;
-            let out = client_step(&meta, 1, true, &refs, &mut arena, &mut macs).unwrap();
+            let out = client_step(&meta, 1, true, true, &refs, &mut arena, &mut macs).unwrap();
             lit::scalar_f32(&out[5]).unwrap()
         };
         let l0 = mk(0.0);
@@ -1228,7 +1661,7 @@ mod tests {
         let refs: Vec<&Literal> = inputs.iter().collect();
         let mut arena = ScratchArena::new();
         let mut macs = 0u64;
-        let out = eval(&meta, &refs, &mut arena, &mut macs).unwrap();
+        let out = eval(&meta, true, &refs, &mut arena, &mut macs).unwrap();
         let loss = lit::scalar_f32(&out[0]).unwrap();
         let correct = lit::scalar_f32(&out[1]).unwrap();
         // random init on 10 classes: CE in a loose band around ln(10)
@@ -1255,7 +1688,7 @@ mod tests {
             let refs: Vec<&Literal> = inputs.iter().collect();
             let mut arena = ScratchArena::new();
             let mut macs = 0u64;
-            let out = full_step(&meta, false, &refs, &mut arena, &mut macs).unwrap();
+            let out = full_step(&meta, false, true, &refs, &mut arena, &mut macs).unwrap();
             (out[0].to_vec::<f32>().unwrap(), lit::scalar_f32(&out[4]).unwrap(), macs)
         };
         let (p1, l1, m1) = run();
@@ -1284,7 +1717,7 @@ mod tests {
             ];
             let refs: Vec<&Literal> = inputs.iter().collect();
             let mut macs = 0u64;
-            let out = full_step(&meta, false, &refs, arena, &mut macs).unwrap();
+            let out = full_step(&meta, false, true, &refs, arena, &mut macs).unwrap();
             out[0].to_vec::<f32>().unwrap()
         };
         let mut shared = ScratchArena::new();

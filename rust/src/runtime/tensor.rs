@@ -108,6 +108,13 @@ pub struct ScratchArena {
     /// Tracked so the high-water mark sees live gradient buffers too, not
     /// just what sits inside the arena at `note_peak` time.
     loaned: usize,
+    /// Lifetime count of `take_buf`/`take_buf_uninit` checkouts. Counts
+    /// activation/gradient-sized materializations only — the shared im2col
+    /// `cols`/`dcols` buffers are resized in place and never loaned, so
+    /// elision regressions show up in `peak_bytes`, not here. The fused
+    /// forward path must still show strictly fewer loans than the unfused
+    /// one (the dropped ŷ slots; see `tests/fused_conformance.rs`).
+    loans: u64,
     peak_bytes: usize,
 }
 
@@ -167,6 +174,7 @@ impl ScratchArena {
         v.clear();
         v.resize(len, 0.0);
         self.loaned += v.capacity();
+        self.loans += 1;
         self.note_peak();
         v
     }
@@ -181,6 +189,7 @@ impl ScratchArena {
         // shrink is O(1); surviving elements keep their stale values
         v.resize(len, 0.0);
         self.loaned += v.capacity();
+        self.loans += 1;
         self.note_peak();
         v
     }
@@ -235,6 +244,15 @@ impl ScratchArena {
     /// High-water mark of all memory this arena has held, in bytes.
     pub fn peak_bytes(&self) -> usize {
         self.peak_bytes
+    }
+
+    /// Lifetime count of scratch-buffer checkouts (`take_buf` +
+    /// `take_buf_uninit`) — one per materialized activation/gradient
+    /// buffer (the in-place `cols`/`dcols` buffers are not loans), so
+    /// fewer loans for the same step means a materialization was dropped,
+    /// not moved.
+    pub fn buffer_loans(&self) -> u64 {
+        self.loans
     }
 
     fn current_bytes(&self) -> usize {

@@ -1,0 +1,361 @@
+//! Kernel-conformance suite for the fused forward path.
+//!
+//! The repo's bit-identity contract says the fused conv→gn→relu pipeline
+//! (single-sweep gn(+relu) epilogues, ŷ recomputed from saved stats in the
+//! backward pass, 1×1 stride-1 pad-0 im2col elision) must be **bitwise**
+//! indistinguishable from the unfused legacy path — not merely close. These
+//! tests drive both paths through `refmath::hooks` (the fusion knob passed
+//! explicitly, so fused and unfused runs cannot race the process-wide
+//! setting) over randomized shapes, including edge tiles where m/n are not
+//! multiples of MR/NR, batch = 1, and single-group gn; they also pin the
+//! arena-footprint win (strictly fewer bytes AND strictly fewer buffer
+//! loans with fusion on) so a silent re-materialization cannot creep back,
+//! and check every `kernels::tune` register-tile candidate against the
+//! pinned core.
+
+use dtfl::runtime::kernels::{self, tune, Epilogue, MR, NR};
+use dtfl::runtime::refmath::hooks;
+use dtfl::runtime::{Dims4, Metadata};
+use dtfl::util::Rng64;
+
+fn rand_vec(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_f32(-1.5, 1.5)).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+fn tiny() -> Metadata {
+    Metadata::load(std::path::Path::new("artifacts/tiny")).expect("tiny is built in")
+}
+
+// ---------------------------------------------------------------------
+// gn(+relu) fusion
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_gn_fused_matches_unfused_bitwise() {
+    let mut rng = Rng64::seed_from_u64(0xf05e);
+    // channel counts exercising single-group (c = 1), one-channel-per-group
+    // (c = 5 → 5 groups), partial vector widths, and the max 8-group case
+    let channels = [1usize, 3, 5, 8, 16, 24];
+    for case in 0..40u64 {
+        let b = 1 + rng.gen_range(0, 3); // includes batch = 1
+        let h = 1 + rng.gen_range(0, 7);
+        let w = 1 + rng.gen_range(0, 7);
+        let c = channels[rng.gen_range(0, channels.len())];
+        let d: Dims4 = [b, h, w, c];
+        let n = b * h * w * c;
+        let x = rand_vec(&mut rng, n);
+        let dout = rand_vec(&mut rng, n);
+        let scale = rand_vec(&mut rng, c);
+        let bias = rand_vec(&mut rng, c);
+        for relu_after in [false, true] {
+            let fused = hooks::gn_forward_backward(&scale, &bias, &x, d, &dout, relu_after, true);
+            let plain = hooks::gn_forward_backward(&scale, &bias, &x, d, &dout, relu_after, false);
+            let tag = format!("case {case} {d:?} relu={relu_after}");
+            assert_bits_eq(&fused.out, &plain.out, &format!("{tag}: out"));
+            assert_bits_eq(&fused.dx, &plain.dx, &format!("{tag}: dx"));
+            assert_bits_eq(&fused.dscale, &plain.dscale, &format!("{tag}: dscale"));
+            assert_bits_eq(&fused.dbias, &plain.dbias, &format!("{tag}: dbias"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1×1 im2col elision
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_conv1x1_elision_matches_im2col_bitwise() {
+    let mut rng = Rng64::seed_from_u64(0xe11d);
+    // rows = b·h·w and cout chosen around MR/NR multiples so both full and
+    // edge tiles are exercised; includes batch = 1
+    let couts = [1usize, 5, NR - 1, NR, NR + 1, 2 * NR + 3];
+    for case in 0..40u64 {
+        let b = 1 + rng.gen_range(0, 3);
+        let h = 1 + rng.gen_range(0, 6);
+        let w = 1 + rng.gen_range(0, 6);
+        let cin = 1 + rng.gen_range(0, 24);
+        let cout = couts[rng.gen_range(0, couts.len())];
+        let xd: Dims4 = [b, h, w, cin];
+        let x = rand_vec(&mut rng, b * h * w * cin);
+        let wgt = rand_vec(&mut rng, cin * cout);
+        let dout = rand_vec(&mut rng, b * h * w * cout);
+        let elided = hooks::conv_forward_backward(&wgt, &x, xd, 1, 1, cout, 1, 0, &dout, true);
+        let im2col = hooks::conv_forward_backward(&wgt, &x, xd, 1, 1, cout, 1, 0, &dout, false);
+        let tag = format!("case {case} {xd:?} cout={cout}");
+        assert_eq!(elided.od, im2col.od, "{tag}: output dims");
+        assert_eq!(elided.macs, im2col.macs, "{tag}: MAC count");
+        assert_bits_eq(&elided.out, &im2col.out, &format!("{tag}: out"));
+        assert_bits_eq(&elided.dw, &im2col.dw, &format!("{tag}: dw"));
+        assert_bits_eq(&elided.dx, &im2col.dx, &format!("{tag}: dx"));
+        // the elision must actually drop the column buffers, not just match
+        assert!(
+            elided.arena_peak < im2col.arena_peak,
+            "{tag}: elided peak {} !< im2col peak {}",
+            elided.arena_peak,
+            im2col.arena_peak
+        );
+    }
+}
+
+#[test]
+fn conv_non_elidable_geometries_unchanged_by_fuse() {
+    // 3×3 convs and strided 1×1 convs must take the im2col path under
+    // either knob setting — and therefore match bitwise trivially
+    let mut rng = Rng64::seed_from_u64(0x3e3);
+    for &(kh, kw, stride, pad) in &[(3usize, 3usize, 1usize, 1usize), (1, 1, 2, 0), (3, 3, 2, 1)] {
+        let (b, h, w, cin, cout) = (2usize, 8usize, 8usize, 6usize, 9usize);
+        let xd: Dims4 = [b, h, w, cin];
+        let x = rand_vec(&mut rng, b * h * w * cin);
+        let wgt = rand_vec(&mut rng, kh * kw * cin * cout);
+        let ho = (h + 2 * pad - kh) / stride + 1;
+        let wo = (w + 2 * pad - kw) / stride + 1;
+        let dout = rand_vec(&mut rng, b * ho * wo * cout);
+        let on = hooks::conv_forward_backward(&wgt, &x, xd, kh, kw, cout, stride, pad, &dout, true);
+        let off =
+            hooks::conv_forward_backward(&wgt, &x, xd, kh, kw, cout, stride, pad, &dout, false);
+        let tag = format!("k=({kh},{kw}) s={stride} p={pad}");
+        assert_bits_eq(&on.out, &off.out, &format!("{tag}: out"));
+        assert_bits_eq(&on.dw, &off.dw, &format!("{tag}: dw"));
+        assert_bits_eq(&on.dx, &off.dx, &format!("{tag}: dx"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// whole-model fused == unfused, and the arena-footprint contract
+// ---------------------------------------------------------------------
+
+fn det_dout(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng64::seed_from_u64(seed);
+    (0..n).map(|_| rng.gen_f32(-0.1, 0.1)).collect()
+}
+
+#[test]
+fn full_model_fused_matches_unfused_bitwise_and_shrinks_arena() {
+    let meta = tiny();
+    let p = dtfl::runtime::spec::init_flat(&meta, 3);
+    let b = meta.batch;
+    let xd: Dims4 = [b, meta.image_hw, meta.image_hw, meta.in_channels];
+    let mut rng = Rng64::seed_from_u64(7);
+    let x = rand_vec(&mut rng, xd.iter().product());
+    let dout = det_dout(b * meta.num_classes, 11);
+    let fused = hooks::run_range(&meta, &p, &x, xd, 1, 8, &dout, true).unwrap();
+    let plain = hooks::run_range(&meta, &p, &x, xd, 1, 8, &dout, false).unwrap();
+    assert_eq!(fused.out_dims, plain.out_dims);
+    assert_eq!(fused.macs, plain.macs, "fusion must not change the cost model");
+    assert_bits_eq(&fused.out, &plain.out, "full model: logits");
+    assert_bits_eq(&fused.grads, &plain.grads, "full model: grads");
+    assert!(
+        fused.arena_peak < plain.arena_peak,
+        "fused full-model peak {} !< unfused {}",
+        fused.arena_peak,
+        plain.arena_peak
+    );
+    assert!(
+        fused.arena_loans < plain.arena_loans,
+        "fused full-model loans {} !< unfused {}",
+        fused.arena_loans,
+        plain.arena_loans
+    );
+}
+
+#[test]
+fn residual_block_arena_peak_strictly_decreases_with_fusion() {
+    // md2 of resnet56 is the width-jump stage: b0 carries a 1×1 stride-1
+    // proj shortcut (elided) and every block carries two fused gn sweeps —
+    // the dropped ŷ materializations and column buffers must show up as a
+    // strictly smaller arena footprint, or something silently
+    // re-materialized
+    let meta = Metadata::load(std::path::Path::new("artifacts/resnet56")).expect("built-in");
+    let flat = dtfl::runtime::spec::init_flat(&meta, 1);
+    // module 2's parameter range in the flat layout
+    let p = &flat[meta.module_offsets[1]..meta.module_offsets[2]];
+    let xd: Dims4 = [1, meta.image_hw, meta.image_hw, meta.widths[0]];
+    let mut rng = Rng64::seed_from_u64(21);
+    let x = rand_vec(&mut rng, xd.iter().product());
+    let dout = det_dout(meta.image_hw * meta.image_hw * meta.widths[1], 5);
+    let fused = hooks::run_range(&meta, p, &x, xd, 2, 2, &dout, true).unwrap();
+    let plain = hooks::run_range(&meta, p, &x, xd, 2, 2, &dout, false).unwrap();
+    assert_bits_eq(&fused.out, &plain.out, "md2: out");
+    assert_bits_eq(&fused.grads, &plain.grads, "md2: grads");
+    assert!(
+        fused.arena_peak < plain.arena_peak,
+        "residual block: fused peak {} !< unfused peak {}",
+        fused.arena_peak,
+        plain.arena_peak
+    );
+    assert!(
+        fused.arena_loans < plain.arena_loans,
+        "residual block: fused loans {} !< unfused loans {}",
+        fused.arena_loans,
+        plain.arena_loans
+    );
+}
+
+#[test]
+fn stride1_proj_elision_fires_in_the_real_model() {
+    // resnet56 md1..md2 at batch 1: the md2.b0 proj (16 → 64, stride 1) is
+    // the paper model's elidable shortcut; the fused run must take it.
+    // Counts come from the run's own forward caches (RangeOut), not the
+    // process-wide monotonic counters, so concurrent tests cannot mask a
+    // regression here.
+    let meta = Metadata::load(std::path::Path::new("artifacts/resnet56")).expect("built-in");
+    let flat = dtfl::runtime::spec::init_flat(&meta, 0);
+    let p = &flat[..meta.module_offsets[2]];
+    let xd: Dims4 = [1, meta.image_hw, meta.image_hw, meta.in_channels];
+    let mut rng = Rng64::seed_from_u64(9);
+    let x = rand_vec(&mut rng, xd.iter().product());
+    let dout = det_dout(meta.image_hw * meta.image_hw * meta.widths[1], 3);
+    let (gn_before, el_before) = dtfl::runtime::refmath::fusion_counters();
+    let fused = hooks::run_range(&meta, p, &x, xd, 1, 2, &dout, true).unwrap();
+    // exactly one elidable conv in md1..md2: the b0 width-jump proj; every
+    // normalizer (stem gn + 3 blocks × {gn1, gn2} + b0 gnp) runs fused
+    assert_eq!(fused.elided_convs, 1, "stride-1 proj must take the elided path");
+    assert_eq!(fused.fused_gn, 1 + 3 * 2 + 1, "all md1..md2 normalizers must fuse");
+    let plain = hooks::run_range(&meta, p, &x, xd, 1, 2, &dout, false).unwrap();
+    assert_eq!(plain.elided_convs, 0, "unfused run must not elide");
+    assert_eq!(plain.fused_gn, 0, "unfused run must not fuse gn");
+    assert_bits_eq(&fused.out, &plain.out, "md1..md2: out");
+    assert_bits_eq(&fused.grads, &plain.grads, "md1..md2: grads");
+    // the process-wide RuntimeStats counters are monotonic, so they must
+    // have advanced by at least this run's own counts (other threads can
+    // only add)
+    let (gn_after, el_after) = dtfl::runtime::refmath::fusion_counters();
+    assert!(el_after >= el_before + fused.elided_convs as u64);
+    assert!(gn_after >= gn_before + fused.fused_gn as u64);
+}
+
+// ---------------------------------------------------------------------
+// epilogue hooks across all three matmul orientations
+// ---------------------------------------------------------------------
+
+#[test]
+fn epilogues_bitwise_match_unfused_passes_in_all_orientations() {
+    let mut rng = Rng64::seed_from_u64(0xe91);
+    for &(m, k, n) in &[(3usize, 5usize, 7usize), (MR, 9, NR), (MR + 1, 4, NR + 1), (17, 33, 19)] {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let atn = rand_vec(&mut rng, m * k); // A for tn: (m, k) → C is (k, n)
+        let btn = rand_vec(&mut rng, m * n);
+        let ant = rand_vec(&mut rng, m * n); // A for nt: (m, n) → C is (m, k)
+        let bnt = rand_vec(&mut rng, k * n);
+        let scale_n = rand_vec(&mut rng, n);
+        let bias_n = rand_vec(&mut rng, n);
+        let scale_k = rand_vec(&mut rng, k);
+        let bias_k = rand_vec(&mut rng, k);
+        let mut macs = 0u64;
+
+        // plain orientation
+        let base = kernels::matmul(&a, m, k, &b, n, &mut macs);
+        let mut got = vec![0.0f32; m * n];
+        kernels::matmul_into(&mut got, &a, m, k, &b, n, Epilogue::Relu, &mut macs);
+        let want: Vec<f32> = base.iter().map(|v| v.max(0.0)).collect();
+        assert_bits_eq(&got, &want, &format!("matmul relu {m}x{k}x{n}"));
+        kernels::matmul_into(
+            &mut got,
+            &a,
+            m,
+            k,
+            &b,
+            n,
+            Epilogue::ScaleBiasRelu { scale: &scale_n, bias: &bias_n },
+            &mut macs,
+        );
+        let want: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v * scale_n[i % n] + bias_n[i % n]).max(0.0))
+            .collect();
+        assert_bits_eq(&got, &want, &format!("matmul sbr {m}x{k}x{n}"));
+
+        // tn orientation: C is (k, n)
+        let base = kernels::matmul_tn(&atn, m, k, &btn, n, &mut macs);
+        let mut got = vec![0.0f32; k * n];
+        kernels::matmul_tn_into(&mut got, &atn, m, k, &btn, n, Epilogue::Relu, &mut macs);
+        let want: Vec<f32> = base.iter().map(|v| v.max(0.0)).collect();
+        assert_bits_eq(&got, &want, &format!("matmul_tn relu {m}x{k}x{n}"));
+        kernels::matmul_tn_into(
+            &mut got,
+            &atn,
+            m,
+            k,
+            &btn,
+            n,
+            Epilogue::ScaleBiasRelu { scale: &scale_n, bias: &bias_n },
+            &mut macs,
+        );
+        let want: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v * scale_n[i % n] + bias_n[i % n]).max(0.0))
+            .collect();
+        assert_bits_eq(&got, &want, &format!("matmul_tn sbr {m}x{k}x{n}"));
+
+        // nt orientation: C is (m, k) — per-column vectors have length k
+        let base = kernels::matmul_nt(&ant, m, n, &bnt, k, &mut macs);
+        let mut got = vec![0.0f32; m * k];
+        kernels::matmul_nt_into(&mut got, &ant, m, n, &bnt, k, Epilogue::Relu, &mut macs);
+        let want: Vec<f32> = base.iter().map(|v| v.max(0.0)).collect();
+        assert_bits_eq(&got, &want, &format!("matmul_nt relu {m}x{n}x{k}"));
+        kernels::matmul_nt_into(
+            &mut got,
+            &ant,
+            m,
+            n,
+            &bnt,
+            k,
+            Epilogue::ScaleBiasRelu { scale: &scale_k, bias: &bias_k },
+            &mut macs,
+        );
+        let want: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v * scale_k[i % k] + bias_k[i % k]).max(0.0))
+            .collect();
+        assert_bits_eq(&got, &want, &format!("matmul_nt sbr {m}x{n}x{k}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// tune candidates vs the pinned core
+// ---------------------------------------------------------------------
+
+#[test]
+fn tune_candidates_are_bit_identical_to_pinned_core() {
+    // per-element accumulation runs over k in ascending order whatever the
+    // register tile, so every candidate must reproduce the pinned core
+    // exactly — retuning MR/NR can never change results
+    let mut rng = Rng64::seed_from_u64(0x70e);
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (MR - 1, 5, NR - 1),
+        (2 * MR + 3, 17, 2 * NR + 5),
+        (33, 40, 29),
+    ] {
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut macs = 0u64;
+        let pinned = kernels::matmul(&a, m, k, &b, n, &mut macs);
+        for &(mr, nr) in tune::CANDIDATES {
+            let got = tune::matmul_with(mr, nr, &a, m, k, &b, n).expect("listed candidate");
+            assert_bits_eq(&got, &pinned, &format!("tile ({mr},{nr}) at {m}x{k}x{n}"));
+        }
+        assert!(
+            tune::CANDIDATES.contains(&(MR, NR)),
+            "the pinned (MR, NR) must stay in the sweep grid"
+        );
+        assert!(tune::matmul_with(7, 13, &a, m, k, &b, n).is_none());
+    }
+}

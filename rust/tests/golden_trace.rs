@@ -4,12 +4,13 @@
 //! compact trace — per-round makespan/sim-time/loss/accuracy bits, the
 //! tier assignments, and a checksum plus the full bit pattern of the final
 //! global parameters — from the **sequential barrier engine** (1 thread,
-//! `pipeline_depth` 1, `agg_shards` 1, intra off). Every other engine
-//! configuration in the `{threads, intra_threads, pipeline_depth,
-//! agg_shards}` grid must reproduce that trace **byte for byte**: the
-//! pipelined round engine, the sharded aggregation flush, the double-
-//! buffered snapshot swap, and next-round input prefetch are all required
-//! to be bit-invisible.
+//! `pipeline_depth` 1, `agg_shards` 1, intra off, `fuse_forward` off —
+//! i.e. the legacy unfused math). Every other engine configuration in the
+//! `{threads, intra_threads, pipeline_depth, agg_shards, fuse_forward}`
+//! grid must reproduce that trace **byte for byte**: the pipelined round
+//! engine, the sharded aggregation flush, the double-buffered snapshot
+//! swap, next-round input prefetch, the fused gn/relu forward path, and
+//! the 1×1 im2col elision are all required to be bit-invisible.
 //!
 //! The reference trace is recorded in-process (float bit patterns are only
 //! stable per libm build, so a committed file would be flaky across
@@ -88,9 +89,10 @@ struct Knobs {
     intra: usize,
     depth: usize,
     shards: usize,
+    fuse: bool,
 }
 
-const REFERENCE: Knobs = Knobs { threads: 1, intra: 1, depth: 1, shards: 1 };
+const REFERENCE: Knobs = Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: false };
 
 fn run(method: &str, k: Knobs) -> Trace {
     let mut spec = RunSpec {
@@ -105,6 +107,7 @@ fn run(method: &str, k: Knobs) -> Trace {
         intra_threads: k.intra,
         pipeline_depth: k.depth,
         agg_shards: k.shards,
+        fuse_forward: k.fuse,
         ..Default::default()
     };
     if method == "static" {
@@ -140,30 +143,37 @@ fn assert_trace_matches(method: &str, golden: &Trace, k: Knobs) {
 /// The grid every method is checked against (DTFL gets a larger one).
 fn small_grid() -> Vec<Knobs> {
     let mut g = vec![
-        Knobs { threads: 4, intra: 1, depth: 4, shards: 0 },
-        Knobs { threads: 2, intra: 1, depth: 8, shards: 3 },
+        // fusion alone against the unfused sequential reference
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true },
+        // the default engine (fused) with the parallel pool
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
+        // pipelined + sharded with fusion off
+        Knobs { threads: 2, intra: 1, depth: 8, shards: 3, fuse: false },
     ];
     if let Some(n) = env_threads() {
-        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0 });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true });
     }
     g
 }
 
 fn dtfl_grid() -> Vec<Knobs> {
     let mut g = vec![
-        // pipelining/sharding alone, sequential pool
-        Knobs { threads: 1, intra: 1, depth: 4, shards: 3 },
+        // fusion alone, sequential barrier pool
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true },
+        // pipelining/sharding alone, sequential pool, unfused
+        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false },
         // deep pipeline: every flat fold deferred to the finish flush
-        Knobs { threads: 1, intra: 1, depth: 64, shards: 0 },
-        // parallel pool with the barrier aggregator
-        Knobs { threads: 2, intra: 1, depth: 1, shards: 1 },
-        // parallel + pipelined + auto shards (the default engine)
-        Knobs { threads: 4, intra: 1, depth: 4, shards: 0 },
+        Knobs { threads: 1, intra: 1, depth: 64, shards: 0, fuse: true },
+        // parallel pool with the barrier aggregator, unfused
+        Knobs { threads: 2, intra: 1, depth: 1, shards: 1, fuse: false },
+        // parallel + pipelined + auto shards + fusion (the default engine)
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
         // everything composed, including intra-step kernel splits
-        Knobs { threads: 4, intra: 2, depth: 8, shards: 2 },
+        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true },
     ];
     if let Some(n) = env_threads() {
-        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0 });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false });
     }
     g
 }

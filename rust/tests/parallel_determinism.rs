@@ -133,8 +133,8 @@ fn bench_round_smoke_writes_hotpath_json() {
     use std::time::Duration;
 
     use dtfl::harness::{
-        kernels_to_json, measure_kernel_throughput, measure_pipeline_throughput,
-        measure_round_throughput,
+        kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
+        measure_pipeline_throughput, measure_round_throughput,
     };
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
 
@@ -143,6 +143,9 @@ fn bench_round_smoke_writes_hotpath_json() {
 
     let pt = measure_pipeline_throughput(50, 1, 8).expect("pipeline throughput probe");
     assert!(pt.bit_identical, "K=50 pipelined round must match barrier-engine bits");
+
+    let ft = measure_fused_throughput(50, 1, 8).expect("fused throughput probe");
+    assert!(ft.bit_identical, "K=50 fused round must match unfused bits");
 
     let (kernels, arena_peak) =
         measure_kernel_throughput(Duration::from_millis(150)).expect("kernel throughput probe");
@@ -154,6 +157,7 @@ fn bench_round_smoke_writes_hotpath_json() {
     let source = "cargo-test smoke (see benches/micro_hotpath.rs for the full run)";
     report.extra("bench_round", rt.to_json(source));
     report.extra("pipeline", pt.to_json(source));
+    report.extra("fused", ft.to_json(&[], source));
     report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }
