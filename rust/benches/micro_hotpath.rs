@@ -27,7 +27,7 @@ use dtfl::coordinator::{
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
 use dtfl::harness::{
     kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
-    measure_pipeline_throughput, measure_round_throughput,
+    measure_pipeline_throughput, measure_round_throughput, measure_scenario_throughput,
 };
 use dtfl::runtime::kernels::tune;
 use dtfl::runtime::{literal as lit, Metadata};
@@ -107,6 +107,34 @@ fn bench_fused(clients: usize, rounds: usize) -> dtfl::util::json::Json {
         );
     }
     ft.to_json(&sweep, "cargo bench micro_hotpath")
+}
+
+/// Scenario probe: flash-crowd DTFL makespan + delta-vs-full broadcast
+/// bytes (shared probe in `harness::measure_scenario_throughput`).
+fn bench_scenario(report: &mut BenchReport, rounds: usize) {
+    section("bench_scenario: flash-crowd fleet, delta vs full broadcast");
+    let st = measure_scenario_throughput(rounds).expect("scenario probe");
+    assert!(
+        st.bit_identical,
+        "delta-compressed downlink must not change FedAvg parameter bits"
+    );
+    println!(
+        "{}: K={} DTFL sim {:.1}s over {} rounds ({:.2}s mean makespan, {} straggles, {} bytes)",
+        st.name,
+        st.clients,
+        st.dtfl_sim_secs,
+        st.rounds,
+        st.dtfl_mean_makespan,
+        st.dtfl_straggles,
+        st.dtfl_wire_bytes
+    );
+    println!(
+        "broadcast bytes: delta {} vs full {} — {:.1}% saved",
+        st.fedavg_delta_bytes,
+        st.fedavg_full_bytes,
+        100.0 * st.bytes_saved_ratio()
+    );
+    report.extra("scenario", st.to_json("cargo bench micro_hotpath"));
 }
 
 /// Round-throughput comparison: K clients, 1 thread vs all cores (shared
@@ -260,6 +288,9 @@ fn main() {
     // ---------------- fused forward path + NR sweep ----------------
     let fused = bench_fused(50, 2);
     report.extra("fused", fused);
+
+    // ---------------- scenario engine + delta downlink ----------------
+    bench_scenario(&mut report, 8);
 
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -65,6 +65,8 @@ fn main() -> dtfl::anyhow::Result<()> {
                 pipeline_depth: 4,
                 agg_shards: 0,
                 next_participants: None,
+                scenario: None,
+                downlink: None,
             };
             dtfl.round(&mut env)?
         };

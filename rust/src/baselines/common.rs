@@ -12,7 +12,7 @@
 use crate::anyhow::Result;
 use crate::coordinator::aggregate::fold_whole;
 use crate::coordinator::parallel::{for_each_streamed_windowed, resolve_shards};
-use crate::fed::{PoolTask, RoundEnv};
+use crate::fed::{PoolTask, RoundEnv, RoundOutcome};
 use crate::runtime::{StepEngine, TrainState};
 use crate::simulation::ClientRoundTime;
 
@@ -42,27 +42,38 @@ pub fn local_full_train(
 
 /// One full-model round shared by FedAvg / FedYogi / SplitFed: fan
 /// [`local_full_train`] over the worker pool and stream each client's model
-/// into a [`WeightedAvg`] in participant order. The only thing that differs
-/// between those baselines is the optimizer flag and the per-client timing
-/// model, supplied as `time_of(client, host_secs)`.
+/// into a [`WeightedAvg`] in participant order. The only things that differ
+/// between those baselines are the optimizer flag and two per-client
+/// closures: `bytes_of(client)` — the simulated wire bytes, a **pure
+/// function of immutable round state** so it runs in the parallel map stage
+/// (with delta downlink on it scans the full model, which must not
+/// serialize on the sink thread) — and `time_of(client, host_secs, bytes)`,
+/// the timing model, applied in the in-order sink.
 ///
 /// Pipelining: the accumulator buffers up to `env.pipeline_depth` updates
 /// per sharded flush (`env.agg_shards`), and next-round batch-encoding
 /// prefetch items ride at the tail of the pool's item list — both
 /// bit-invisible (see `coordinator::aggregate`).
 ///
-/// Returns the (unfinished) accumulator, per-participant timings, and the
-/// summed last-batch losses.
+/// Scenario hooks: the round deadline is applied to each client's time in
+/// the in-order sink (a pure per-client decision, so every knob setting
+/// agrees); a `drop`-policy miss skips the fold, and stragglers/bytes land
+/// on the returned outcome. Without a scenario this is bit-for-bit the
+/// legacy round.
+///
+/// Returns the (unfinished) accumulator and the round outcome with
+/// `tiers` left empty (the caller fills it).
 pub fn run_full_model_round(
     env: &RoundEnv,
     global: &[f32],
     sgd: bool,
-    mut time_of: impl FnMut(usize, f64) -> ClientRoundTime,
-) -> Result<(WeightedAvg, Vec<ClientRoundTime>, f64)> {
+    bytes_of: impl Fn(usize) -> u64 + Sync,
+    mut time_of: impl FnMut(usize, f64, u64) -> ClientRoundTime,
+) -> Result<(WeightedAvg, RoundOutcome)> {
     let tasks = env.pool_tasks(env.participants.iter().copied());
 
     let mut avg = WeightedAvg::with_pipeline(global.len(), env.pipeline_depth, env.agg_shards);
-    let mut times = Vec::with_capacity(env.participants.len());
+    let mut outcome = RoundOutcome::default();
     let mut loss_sum = 0.0f64;
     for_each_streamed_windowed(
         env.threads,
@@ -71,23 +82,33 @@ pub fn run_full_model_round(
         |_, task| match task {
             PoolTask::Work(k) => {
                 let (params, host, loss) = local_full_train(env, *k, global, sgd)?;
-                Ok(Some((*k, params, host, loss)))
+                Ok(Some((*k, params, host, loss, bytes_of(*k))))
             }
             PoolTask::Prefetch { k, bi } => {
                 env.run_prefetch(*k, *bi)?;
                 Ok(None)
             }
         },
-        |_, item: Option<(usize, Vec<f32>, f64, f64)>| {
-            let Some((k, params, host, loss)) = item else {
+        |_, item: Option<(usize, Vec<f32>, f64, f64, u64)>| {
+            let Some((k, params, host, loss, bytes)) = item else {
                 return Ok(());
             };
-            times.push(time_of(k, host));
+            let mut time = time_of(k, host, bytes);
+            let straggle = env.apply_deadline(&mut time);
+            outcome.times.push(time);
+            outcome.wire_bytes += bytes;
             loss_sum += loss;
-            avg.fold_owned(params, env.partition.size(k).max(1) as f64)
+            if straggle.straggled() {
+                outcome.straggled.push(k);
+            }
+            if straggle.dropped() {
+                return Ok(()); // deadline missed: the update never lands
+            }
+            avg.fold_owned(params, env.client_weight(k))
         },
     )?;
-    Ok((avg, times, loss_sum))
+    outcome.train_loss = loss_sum / env.participants.len().max(1) as f64;
+    Ok((avg, outcome))
 }
 
 /// Streaming weighted average over full-model parameter vectors: folds each

@@ -34,26 +34,31 @@ impl Method for FedAvg {
 
     fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
         let env: &RoundEnv = env;
-        let model_bytes = 2 * self.global.len() * 4; // download + upload
-        let (avg, times, loss_sum) =
-            run_full_model_round(env, &self.global, false, |k, host| {
+        let full = self.global.len() * 4; // one whole-model transfer leg
+        let global = &self.global;
+        let (avg, outcome) = run_full_model_round(
+            env,
+            global,
+            false,
+            // scenario hooks: the download leg is delta-sized vs the
+            // client's last-seen snapshot (computed on worker threads — a
+            // full-model scan), and the link may vary per round
+            |k| (env.downlink_bytes(k, full, global) + full) as u64,
+            |k, host, bytes| {
                 let profile = env.profiles[k];
                 ClientRoundTime {
                     compute: profile.compute_secs(host),
-                    comm: profile.comm_secs(model_bytes),
+                    comm: env.comm_secs(k, bytes as usize),
                     server: 0.0,
                 }
-            })?;
+            },
+        )?;
 
         if avg.count() == 0 {
-            return Ok(RoundOutcome::carried_over(env.round));
+            return Ok(outcome.with_no_update(env.round));
         }
         avg.finish_into(&mut self.global)?;
-        Ok(RoundOutcome {
-            times,
-            train_loss: loss_sum / env.participants.len().max(1) as f64,
-            tiers: vec![],
-        })
+        Ok(outcome)
     }
 
     fn global_params(&self) -> &[f32] {

@@ -49,6 +49,7 @@ struct GktBundle {
     update: ClientUpdate,
     time: ClientRoundTime,
     loss: f64,
+    bytes: u64,
 }
 
 impl Method for FedGkt {
@@ -69,6 +70,8 @@ impl Method for FedGkt {
         let mut agg = Aggregator::with_pipeline(meta, env.pipeline_depth, env.agg_shards);
         let mut times = Vec::with_capacity(env.participants.len());
         let mut loss_sum = 0.0f64;
+        let mut wire_bytes = 0u64;
+        let mut straggled = Vec::new();
         for_each_streamed_windowed(
             env.threads,
             env.pipeline_depth.saturating_sub(1),
@@ -109,44 +112,57 @@ impl Method for FedGkt {
                     }
                 }
 
-                // timing: features up + soft labels both ways + client model sync
+                // timing: features up + soft labels both ways + client model
+                // sync (download delta-sized vs the last-seen cut prefix in
+                // scenario mode; the link itself may vary per round)
                 let logit_bytes = batch * meta.num_classes * 4;
-                let bytes = tmeta.model_transfer_bytes
-                    + nb * (tmeta.z_bytes_per_batch + 2 * logit_bytes);
+                let down_full = tmeta.model_transfer_bytes / 2;
+                let up = tmeta.model_transfer_bytes - down_full;
+                let down =
+                    env.downlink_bytes(k, down_full, &global.flat[..meta.cut_offset(tier)]);
+                let bytes = down + up + nb * (tmeta.z_bytes_per_batch + 2 * logit_bytes);
                 let sim_c = profile.compute_secs(host_client);
                 let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
-                let sim_com = profile.comm_secs(bytes);
+                let sim_com = env.comm_secs(k, bytes);
 
                 Ok(Some(GktBundle {
                     update: ClientUpdate {
                         client_id: k,
                         tier,
-                        weight: env.partition.size(k).max(1) as f64,
+                        weight: env.client_weight(k),
                         client_vec: cstate.params,
                         server_vec: sstate.params,
                     },
                     time: ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s },
                     loss,
+                    bytes: bytes as u64,
                 }))
             },
             |_, b: Option<GktBundle>| {
-                let Some(b) = b else { return Ok(()) };
+                let Some(mut b) = b else { return Ok(()) };
+                let straggle = env.apply_deadline(&mut b.time);
                 times.push(b.time);
                 loss_sum += b.loss;
+                wire_bytes += b.bytes;
+                if straggle.straggled() {
+                    straggled.push(b.update.client_id);
+                }
+                if straggle.dropped() {
+                    return Ok(()); // deadline missed: the update never lands
+                }
                 agg.fold_owned(b.update)
             },
         )?;
 
+        let train_loss = loss_sum / env.participants.len().max(1) as f64;
+        let tiers = vec![tier; times.len()];
         if agg.count() == 0 {
-            return Ok(RoundOutcome::carried_over(env.round));
+            let out = RoundOutcome { times, train_loss, tiers, wire_bytes, straggled };
+            return Ok(out.with_no_update(env.round));
         }
         agg.finish_into(&self.global, &mut self.back)?;
         std::mem::swap(&mut self.global, &mut self.back);
-        Ok(RoundOutcome {
-            times,
-            train_loss: loss_sum / env.participants.len().max(1) as f64,
-            tiers: vec![tier; env.participants.len()],
-        })
+        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled })
     }
 
     fn global_params(&self) -> &[f32] {

@@ -54,21 +54,27 @@ impl Method for FedYogi {
 
     fn round(&mut self, env: &mut RoundEnv) -> Result<RoundOutcome> {
         let env: &RoundEnv = env;
-        let model_bytes = 2 * self.global.len() * 4;
-        let (avg, times, loss_sum) =
-            run_full_model_round(env, &self.global, true, |k, host| {
+        let full = self.global.len() * 4; // one whole-model transfer leg
+        let global = &self.global;
+        let (avg, outcome) = run_full_model_round(
+            env,
+            global,
+            true,
+            |k| (env.downlink_bytes(k, full, global) + full) as u64,
+            |k, host, bytes| {
                 let profile = env.profiles[k];
                 ClientRoundTime {
                     compute: profile.compute_secs(host),
-                    comm: profile.comm_secs(model_bytes),
+                    comm: env.comm_secs(k, bytes as usize),
                     server: 0.0,
                 }
-            })?;
+            },
+        )?;
 
         if avg.count() == 0 {
             // no pseudo-gradient, no Yogi step — model and optimizer state
             // carry over
-            return Ok(RoundOutcome::carried_over(env.round));
+            return Ok(outcome.with_no_update(env.round));
         }
 
         // aggregated client model → pseudo-gradient
@@ -83,11 +89,7 @@ impl Method for FedYogi {
             self.global[i] += self.server_lr * self.m[i] / (self.v[i].max(0.0).sqrt() + self.tau);
         }
 
-        Ok(RoundOutcome {
-            times,
-            train_loss: loss_sum / env.participants.len().max(1) as f64,
-            tiers: vec![],
-        })
+        Ok(outcome)
     }
 
     fn global_params(&self) -> &[f32] {

@@ -58,10 +58,24 @@ impl Method for SplitFed {
         let client_frac =
             (t.client_param_len as f64 / meta.total_params as f64).max(0.15);
 
-        let (avg, times, loss_sum) =
-            run_full_model_round(env, &self.global, false, |k, host| {
-                let profile = env.profiles[k];
+        let global = &self.global;
+        let (avg, mut outcome) = run_full_model_round(
+            env,
+            global,
+            false,
+            // z and grad(z) have identical size; model down+up once per
+            // round (download delta-sized vs the last-seen cut prefix in
+            // scenario mode — a prefix scan, so it runs on worker threads)
+            |k| {
                 let nb = env.n_batches(k, batch) as f64;
+                let act_bytes = (2.0 * t.z_bytes_per_batch as f64 * nb) as usize;
+                let down_full = t.model_transfer_bytes / 2;
+                let up = t.model_transfer_bytes - down_full;
+                let down = env.downlink_bytes(k, down_full, &global[..t.cut_offset]);
+                (act_bytes + down + up) as u64
+            },
+            |k, host, bytes| {
+                let profile = env.profiles[k];
 
                 // decompose measured whole-step host time
                 let host_client = host * client_frac;
@@ -72,10 +86,7 @@ impl Method for SplitFed {
                 let t_client_fwd = profile.compute_secs(host_client * FWD_FRACTION);
                 let t_client_bwd = profile.compute_secs(host_client * (1.0 - FWD_FRACTION));
                 let t_server = env.server.secs(host_server);
-                // z and grad(z) have identical size; model down+up once per round
-                let act_bytes = 2.0 * t.z_bytes_per_batch as f64 * nb;
-                let model_bytes = t.model_transfer_bytes as f64;
-                let t_comm = profile.comm_secs((act_bytes + model_bytes) as usize);
+                let t_comm = env.comm_secs(k, bytes as usize);
 
                 // everything serial: Eq. (5)'s max degenerates to a sum
                 ClientRoundTime {
@@ -83,17 +94,15 @@ impl Method for SplitFed {
                     comm: t_comm,
                     server: 0.0, // folded into the serial compute path
                 }
-            })?;
+            },
+        )?;
 
+        outcome.tiers = vec![self.cut_tier; outcome.times.len()];
         if avg.count() == 0 {
-            return Ok(RoundOutcome::carried_over(env.round));
+            return Ok(outcome.with_no_update(env.round));
         }
         avg.finish_into(&mut self.global)?;
-        Ok(RoundOutcome {
-            times,
-            train_loss: loss_sum / env.participants.len().max(1) as f64,
-            tiers: vec![self.cut_tier; env.participants.len()],
-        })
+        Ok(outcome)
     }
 
     fn global_params(&self) -> &[f32] {

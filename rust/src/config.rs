@@ -6,9 +6,9 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::anyhow::{anyhow, Context, Result};
+use crate::anyhow::{Context, Result};
 
-use crate::simulation::ProfilePool;
+use crate::simulation::{ProfilePool, Scenario};
 use crate::util::toml_mini::TomlDoc;
 
 fn default_artifacts_dir() -> PathBuf {
@@ -130,6 +130,26 @@ pub struct PrivacyCfgToml {
     pub patch_shuffle: Option<usize>,
 }
 
+/// Where the experiment's scenario (if any) comes from. Configs reference a
+/// scenario file; harnesses/tests inject a parsed [`Scenario`] directly.
+/// Resolution (file read + fleet-size cross-checks) happens when the
+/// [`crate::experiment::Experiment`] is built, so a config parse stays
+/// I/O-free beyond its own file.
+#[derive(Debug, Clone)]
+pub enum ScenarioRef {
+    File(PathBuf),
+    Inline(Scenario),
+}
+
+impl ScenarioRef {
+    pub fn resolve(&self) -> Result<Scenario> {
+        match self {
+            ScenarioRef::File(p) => Scenario::load(p),
+            ScenarioRef::Inline(s) => Ok(s.clone()),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct OutputCfg {
     /// Directory for CSV outputs (curves, per-round records).
@@ -147,6 +167,10 @@ pub struct ExperimentConfig {
     pub sim: SimCfg,
     pub privacy: PrivacyCfgToml,
     pub output: Option<OutputCfg>,
+    /// Trace-driven environment scenario (churn, time-varying links,
+    /// deadlines, delta downlink). `None` = the static environment; every
+    /// existing run is unchanged byte-for-byte.
+    pub scenario: Option<ScenarioRef>,
 }
 
 impl ExperimentConfig {
@@ -154,7 +178,17 @@ impl ExperimentConfig {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
-        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+        let mut cfg = Self::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        // a relative [scenario] file is relative to the config that names
+        // it (conventional include semantics), not to the process CWD
+        if let Some(ScenarioRef::File(f)) = &mut cfg.scenario {
+            if f.is_relative() {
+                if let Some(dir) = path.parent() {
+                    *f = dir.join(&*f);
+                }
+            }
+        }
+        Ok(cfg)
     }
 
     pub fn parse(text: &str) -> Result<Self> {
@@ -186,7 +220,7 @@ impl ExperimentConfig {
             ClientsCfg {
                 count: s.usize_or("count", 10)?,
                 profile_pool: ProfilePool::from_name(&pool_name)
-                    .ok_or_else(|| anyhow!("unknown profile_pool '{pool_name}'"))?,
+                    .context("in [clients] profile_pool")?,
                 seed: s.u64_or("seed", 17)?,
             }
         };
@@ -238,8 +272,14 @@ impl ExperimentConfig {
         } else {
             None
         };
+        let scenario = if doc.has_section("scenario") {
+            let s = doc.section("scenario");
+            Some(ScenarioRef::File(PathBuf::from(s.req_str("file")?)))
+        } else {
+            None
+        };
 
-        let cfg = Self { model, data, clients, run, sim, privacy, output };
+        let cfg = Self { model, data, clients, run, sim, privacy, output, scenario };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -272,6 +312,18 @@ impl ExperimentConfig {
             self.run.pipeline_depth >= 1,
             "run.pipeline_depth must be >= 1 (1 = barrier engine)"
         );
+        if self.scenario.is_some() {
+            // the scenario is the environment model: mixing in the legacy
+            // profile-switch dynamics would double-drive client state
+            crate::anyhow::ensure!(
+                self.sim.profile_switch_every == 0,
+                "a [scenario] supersedes sim.profile_switch_every/frac — remove one of the two"
+            );
+            if let Some(ScenarioRef::Inline(sc)) = &self.scenario {
+                sc.validate()?;
+                sc.ensure_fleet_matches(self.clients.count)?;
+            }
+        }
         Ok(())
     }
 }
@@ -373,8 +425,50 @@ mod tests {
     }
 
     #[test]
-    fn bad_profile_pool_rejected() {
+    fn bad_profile_pool_rejected_with_valid_names() {
         let text = MINIMAL.to_string() + "\n[clients]\nprofile_pool = \"warp\"\n";
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("warp"), "error names the offender: {err}");
+        for name in crate::simulation::ProfilePool::NAMES {
+            assert!(err.contains(name), "error lists valid pool '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn scenario_section_references_a_file() {
+        let text = MINIMAL.to_string() + "\n[scenario]\nfile = \"scenarios/flash_crowd.toml\"\n";
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        match cfg.scenario {
+            Some(ScenarioRef::File(p)) => {
+                assert_eq!(p, PathBuf::from("scenarios/flash_crowd.toml"))
+            }
+            other => panic!("expected a file scenario ref, got {other:?}"),
+        }
+        // a [scenario] section without `file` is rejected
+        let text = MINIMAL.to_string() + "\n[scenario]\nseed = 3\n";
         assert!(ExperimentConfig::parse(&text).is_err());
+    }
+
+    #[test]
+    fn scenario_conflicts_rejected() {
+        use crate::simulation::{CohortSpec, DeadlinePolicy, Scenario};
+        let sc = Scenario {
+            name: "t".into(),
+            seed: 1,
+            deadline_secs: None,
+            on_deadline: DeadlinePolicy::Drop,
+            delta_downlink: false,
+            cohorts: vec![CohortSpec::new("a", 3, 1.0, 30.0)],
+            links: vec![],
+        };
+        let mut cfg = ExperimentConfig::parse(MINIMAL).unwrap();
+        cfg.scenario = Some(ScenarioRef::Inline(sc));
+        // fleet size mismatch: scenario has 3 clients, config 10
+        assert!(cfg.validate().is_err());
+        cfg.clients.count = 3;
+        cfg.validate().unwrap();
+        // profile switching and scenarios cannot be combined
+        cfg.sim.profile_switch_every = 10;
+        assert!(cfg.validate().is_err());
     }
 }

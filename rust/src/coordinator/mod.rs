@@ -7,7 +7,9 @@
 //! * `parallel` — the deterministic scoped worker pool (in-order streaming
 //!   reduction) plus the shard-splitting helpers;
 //! * `model_state`/`aggregate` — flat-layout model halves and the
-//!   pipelined, sharded streaming weighted-average global update (step ⑤).
+//!   pipelined, sharded streaming weighted-average global update (step ⑤);
+//! * `snapshot_delta` — bitwise-lossless delta codec for the simulated
+//!   downlink broadcast + per-client last-seen snapshot tracking.
 
 pub mod aggregate;
 pub mod model_state;
@@ -15,8 +17,10 @@ pub mod parallel;
 pub mod profiler;
 pub mod round;
 pub mod scheduler;
+pub mod snapshot_delta;
 
 pub use aggregate::{aggregate, fold_updates_sharded, Aggregator};
+pub use snapshot_delta::{DeltaTracker, SnapshotDelta};
 pub use model_state::{ClientUpdate, GlobalModel};
 pub use parallel::{
     for_each_streamed, for_each_streamed_windowed, join_scoped, resolve_shards, resolve_threads,

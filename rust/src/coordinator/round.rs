@@ -181,6 +181,9 @@ struct ClientBundle {
     time: ClientRoundTime,
     tier: usize,
     last_loss: f64,
+    /// Simulated bytes this client put on the wire (delta-sized downlink in
+    /// scenario mode + full upload + activations).
+    bytes: u64,
     /// Profiler observation (per-batch compute secs, link bytes/sec); None
     /// when the client ran no batches this round.
     obs: Option<(f64, f64)>,
@@ -246,8 +249,15 @@ fn run_client(
     // --- simulated timings (Eq. 5) ---
     let sim_c = noisy(task.profile.compute_secs(host_client), timing_noise, &mut crng);
     let sim_s = server.secs(host_server) / server.parallel_factor.max(1.0);
-    let bytes = tmeta.model_transfer_bytes + nb * tmeta.z_bytes_per_batch;
-    let sim_com = task.profile.comm_secs(bytes);
+    // the tier's model transfer is download + upload of the client-side
+    // model; in scenario mode with delta downlink the download leg shrinks
+    // to the codec size vs this client's last-seen snapshot (a pure
+    // function of immutable round state — safe on any worker thread)
+    let down_full = tmeta.model_transfer_bytes / 2;
+    let up = tmeta.model_transfer_bytes - down_full;
+    let down = env.downlink_bytes(k, down_full, &global.flat[..meta.cut_offset(tier)]);
+    let bytes = down + up + nb * tmeta.z_bytes_per_batch;
+    let sim_com = env.comm_secs(k, bytes);
     let obs = (nb > 0).then(|| {
         // per-batch compute + measured link speed
         (sim_c / nb as f64, bytes as f64 / sim_com.max(1e-9))
@@ -257,13 +267,14 @@ fn run_client(
         update: ClientUpdate {
             client_id: k,
             tier,
-            weight: env.partition.size(k).max(1) as f64,
+            weight: env.client_weight(k),
             client_vec: cstate.params,
             server_vec: sstate.params,
         },
         time: ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s },
         tier,
         last_loss,
+        bytes: bytes as u64,
         obs,
     })
 }
@@ -312,6 +323,8 @@ impl Method for Dtfl {
         let mut times = Vec::with_capacity(env.participants.len());
         let mut tiers = Vec::with_capacity(env.participants.len());
         let mut loss_sum = 0.0f64;
+        let mut wire_bytes = 0u64;
+        let mut straggled = Vec::new();
         for_each_streamed_windowed(
             env.threads,
             env.pipeline_depth.saturating_sub(1),
@@ -324,21 +337,34 @@ impl Method for Dtfl {
                 }
             },
             |_, b: Option<ClientBundle>| {
-                let Some(b) = b else { return Ok(()) };
+                let Some(mut b) = b else { return Ok(()) };
                 if let Some((batch_secs, nu)) = b.obs {
+                    // the scheduler observes the TRUE attempt (straggled or
+                    // not): scenario-driven histories are exactly what the
+                    // next round's tier decisions must react to
                     profiler.observe(b.update.client_id, b.tier, batch_secs, nu);
                 }
+                let straggle = env.apply_deadline(&mut b.time);
                 times.push(b.time);
                 tiers.push(b.tier);
                 loss_sum += b.last_loss;
+                wire_bytes += b.bytes;
+                if straggle.straggled() {
+                    straggled.push(b.update.client_id);
+                }
+                if straggle.dropped() {
+                    return Ok(()); // deadline missed: the update never lands
+                }
                 agg.fold_owned(b.update)
             },
         )?;
 
         self.last_schedule = Some(sched);
+        let train_loss = loss_sum / env.participants.len().max(1) as f64;
         if agg.count() == 0 {
             // nothing to aggregate — no flush, no snapshot swap
-            return Ok(RoundOutcome::carried_over(env.round));
+            let out = RoundOutcome { times, train_loss, tiers, wire_bytes, straggled };
+            return Ok(out.with_no_update(env.round));
         }
 
         // ⑤ publish: flush + normalize into the back snapshot, then one
@@ -346,11 +372,7 @@ impl Method for Dtfl {
         agg.finish_into(&self.global, &mut self.back)?;
         std::mem::swap(&mut self.global, &mut self.back);
 
-        Ok(RoundOutcome {
-            times,
-            train_loss: loss_sum / env.participants.len().max(1) as f64,
-            tiers,
-        })
+        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled })
     }
 
     fn global_params(&self) -> &[f32] {

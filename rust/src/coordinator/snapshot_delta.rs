@@ -1,0 +1,475 @@
+//! Delta-compressed downlink for the simulated broadcast (step ①).
+//!
+//! Between consecutive rounds most global parameters move a little and many
+//! (frozen layers, un-trained tiers' aux heads, carried-over rounds) do not
+//! move at all. Instead of charging every client a full model download, the
+//! coordinator can broadcast a **delta vs the client's last-seen snapshot**:
+//! XOR the f32 bit patterns (unchanged parameters become exact zero words;
+//! slightly-moved parameters share sign/exponent/high-mantissa bits, so
+//! their XOR is a small integer) and encode with whichever of three modes
+//! is smallest — dense raw words, sparse varint-gap entries for
+//! few-changed snapshots, or a packed byte-plane mode (a 2-bit length
+//! class per word + only the significant XOR bytes) that compresses the
+//! everything-moved-a-little case typical of SGD rounds. The codec is
+//! **bitwise lossless** — `apply(prev, encode(prev, cur)) == cur` exactly —
+//! so using it can never perturb training math; only the simulated
+//! bytes-on-wire change.
+//!
+//! [`DeltaTracker`] holds each client's last-seen snapshot. During a round
+//! it is shared immutably with the worker pool (byte accounting is a pure
+//! function of `(last seen, current global)`), and the experiment driver
+//! records the broadcast after the round — so accounting is deterministic
+//! for every `{threads, pipeline_depth, agg_shards}` setting.
+
+use crate::anyhow::{bail, Result};
+
+/// Encoding mode tag (first byte of the wire format).
+const MODE_DENSE: u8 = 0;
+const MODE_SPARSE: u8 = 1;
+const MODE_PACKED: u8 = 2;
+
+/// Header: 1 mode byte + 4-byte LE element count.
+const HEADER_BYTES: usize = 5;
+
+/// Packed-mode length class of one XOR word: payload bytes it needs
+/// (3-byte values round up to 4 so the class fits 2 bits).
+fn packed_class(x: u32) -> usize {
+    if x == 0 {
+        0
+    } else if x < 1 << 8 {
+        1
+    } else if x < 1 << 16 {
+        2
+    } else {
+        4
+    }
+}
+
+/// 2-bit tag encoding of a length class (0, 1, 2, 4 bytes).
+fn class_tag(class: usize) -> u8 {
+    match class {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        _ => 3,
+    }
+}
+
+fn tag_class(tag: u8) -> usize {
+    match tag & 0b11 {
+        0 => 0,
+        1 => 1,
+        2 => 2,
+        _ => 4,
+    }
+}
+
+/// One encoded broadcast delta (a real byte stream, round-trippable).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotDelta {
+    bytes: Vec<u8>,
+}
+
+impl SnapshotDelta {
+    /// Simulated (and actual) wire size of this delta.
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+fn varint_len(mut v: u32) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u32) {
+    while v >= 0x80 {
+        out.push((v & 0x7F) as u8 | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    let mut v: u32 = 0;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = bytes.get(*pos) else {
+            bail!("truncated varint")
+        };
+        *pos += 1;
+        let chunk = (b & 0x7F) as u32;
+        // reject chunks whose bits would shift past 32 (a corrupted 5th
+        // byte must error, not silently truncate the decoded gap)
+        crate::anyhow::ensure!(
+            shift < 32 && (chunk << shift) >> shift == chunk,
+            "varint overflow"
+        );
+        v |= chunk << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Wire size of the sparse encoding without materializing it.
+fn sparse_size(prev: &[f32], cur: &[f32]) -> usize {
+    let mut size = HEADER_BYTES;
+    let mut last = 0usize;
+    for (i, (p, c)) in prev.iter().zip(cur).enumerate() {
+        if p.to_bits() != c.to_bits() {
+            size += varint_len((i - last) as u32) + 4;
+            last = i + 1;
+        }
+    }
+    size
+}
+
+fn dense_size(n: usize) -> usize {
+    HEADER_BYTES + 4 * n
+}
+
+/// Wire size of the packed byte-plane encoding: 2-bit class tags for every
+/// word, then only the significant XOR bytes.
+fn packed_size(prev: &[f32], cur: &[f32]) -> usize {
+    let payload: usize = prev
+        .iter()
+        .zip(cur)
+        .map(|(p, c)| packed_class(p.to_bits() ^ c.to_bits()))
+        .sum();
+    HEADER_BYTES + prev.len().div_ceil(4) + payload
+}
+
+/// Encode `cur` as a delta against `prev` (same length). Picks the
+/// smallest of the dense / sparse / packed encodings; ties prefer dense
+/// (simplest decode), then sparse.
+pub fn encode(prev: &[f32], cur: &[f32]) -> SnapshotDelta {
+    assert_eq!(prev.len(), cur.len(), "delta endpoints must have equal length");
+    let n = cur.len();
+    assert!(n <= u32::MAX as usize, "snapshot too large for the wire header");
+    let dense = dense_size(n);
+    let sparse = sparse_size(prev, cur);
+    let packed = packed_size(prev, cur);
+    let best = dense.min(sparse).min(packed);
+    let mut bytes = Vec::with_capacity(best);
+    if packed < dense.min(sparse) {
+        bytes.push(MODE_PACKED);
+        bytes.extend_from_slice(&(n as u32).to_le_bytes());
+        let tag_at = bytes.len();
+        bytes.resize(tag_at + n.div_ceil(4), 0u8);
+        for (i, (p, c)) in prev.iter().zip(cur).enumerate() {
+            let x = p.to_bits() ^ c.to_bits();
+            let class = packed_class(x);
+            bytes[tag_at + i / 4] |= class_tag(class) << ((i % 4) * 2);
+            bytes.extend_from_slice(&x.to_le_bytes()[..class]);
+        }
+        debug_assert_eq!(bytes.len(), packed);
+    } else if sparse < dense {
+        bytes.push(MODE_SPARSE);
+        bytes.extend_from_slice(&(n as u32).to_le_bytes());
+        let mut last = 0usize;
+        for (i, (p, c)) in prev.iter().zip(cur).enumerate() {
+            let x = p.to_bits() ^ c.to_bits();
+            if x != 0 {
+                push_varint(&mut bytes, (i - last) as u32);
+                bytes.extend_from_slice(&x.to_le_bytes());
+                last = i + 1;
+            }
+        }
+        debug_assert_eq!(bytes.len(), sparse);
+    } else {
+        bytes.push(MODE_DENSE);
+        bytes.extend_from_slice(&(n as u32).to_le_bytes());
+        for c in cur {
+            bytes.extend_from_slice(&c.to_bits().to_le_bytes());
+        }
+    }
+    SnapshotDelta { bytes }
+}
+
+/// Wire size of `encode(prev, cur)` without building the byte stream (the
+/// per-client, per-round accounting hot path).
+pub fn encoded_bytes(prev: &[f32], cur: &[f32]) -> usize {
+    assert_eq!(prev.len(), cur.len(), "delta endpoints must have equal length");
+    // one pass computes both data-dependent sizes
+    let mut payload = 0usize;
+    let mut sparse = HEADER_BYTES;
+    let mut last = 0usize;
+    for (i, (p, c)) in prev.iter().zip(cur).enumerate() {
+        let x = p.to_bits() ^ c.to_bits();
+        payload += packed_class(x);
+        if x != 0 {
+            sparse += varint_len((i - last) as u32) + 4;
+            last = i + 1;
+        }
+    }
+    let packed = HEADER_BYTES + prev.len().div_ceil(4) + payload;
+    dense_size(cur.len()).min(sparse).min(packed)
+}
+
+/// Decode a delta against the same `prev` it was encoded from. Bitwise
+/// exact: returns `cur` as encoded.
+pub fn apply(prev: &[f32], delta: &SnapshotDelta) -> Result<Vec<f32>> {
+    let bytes = &delta.bytes;
+    crate::anyhow::ensure!(bytes.len() >= HEADER_BYTES, "truncated delta header");
+    let mode = bytes[0];
+    let n = u32::from_le_bytes([bytes[1], bytes[2], bytes[3], bytes[4]]) as usize;
+    crate::anyhow::ensure!(
+        n == prev.len(),
+        "delta encodes {n} params but the base snapshot has {}",
+        prev.len()
+    );
+    let mut pos = HEADER_BYTES;
+    match mode {
+        MODE_DENSE => {
+            crate::anyhow::ensure!(bytes.len() == dense_size(n), "bad dense delta length");
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let w = u32::from_le_bytes([
+                    bytes[pos],
+                    bytes[pos + 1],
+                    bytes[pos + 2],
+                    bytes[pos + 3],
+                ]);
+                out.push(f32::from_bits(w));
+                pos += 4;
+            }
+            Ok(out)
+        }
+        MODE_SPARSE => {
+            let mut out = prev.to_vec();
+            let mut i = 0usize;
+            while pos < bytes.len() {
+                let gap = read_varint(bytes, &mut pos)? as usize;
+                crate::anyhow::ensure!(pos + 4 <= bytes.len(), "truncated sparse entry");
+                let x = u32::from_le_bytes([
+                    bytes[pos],
+                    bytes[pos + 1],
+                    bytes[pos + 2],
+                    bytes[pos + 3],
+                ]);
+                pos += 4;
+                i += gap;
+                crate::anyhow::ensure!(i < n, "sparse index {i} out of range {n}");
+                out[i] = f32::from_bits(out[i].to_bits() ^ x);
+                i += 1;
+            }
+            Ok(out)
+        }
+        MODE_PACKED => {
+            let tag_at = pos;
+            pos += n.div_ceil(4);
+            crate::anyhow::ensure!(pos <= bytes.len(), "truncated packed tags");
+            let mut out = prev.to_vec();
+            for (i, o) in out.iter_mut().enumerate() {
+                let class = tag_class(bytes[tag_at + i / 4] >> ((i % 4) * 2));
+                crate::anyhow::ensure!(pos + class <= bytes.len(), "truncated packed entry");
+                let mut w = [0u8; 4];
+                w[..class].copy_from_slice(&bytes[pos..pos + class]);
+                pos += class;
+                *o = f32::from_bits(o.to_bits() ^ u32::from_le_bytes(w));
+            }
+            crate::anyhow::ensure!(pos == bytes.len(), "trailing bytes in packed delta");
+            Ok(out)
+        }
+        m => bail!("unknown delta mode {m}"),
+    }
+}
+
+/// Per-client last-seen global snapshots for downlink accounting.
+///
+/// A client that has never participated (or just arrived via churn) has no
+/// snapshot and pays the full download. Snapshots record the model as
+/// broadcast at the START of the client's round — the experiment driver
+/// copies the pre-round global and calls [`DeltaTracker::note_broadcast`]
+/// after the round completes, covering straggled clients too (they received
+/// the model even if their update was dropped).
+///
+/// Tiered methods account the delta over the *prefix* a tier downloads.
+/// This assumes the server keeps each participant's model mirror in sync
+/// across its broadcasts (the server always knows both endpoints, so it can
+/// compute any prefix delta); a client whose tier grows since its last
+/// round is charged the delta for the newly exposed slice rather than its
+/// raw bytes — a small, documented undercount in the simulated byte
+/// accounting, never in the training math (which does not go through the
+/// codec at all).
+#[derive(Debug, Clone, Default)]
+pub struct DeltaTracker {
+    last_seen: Vec<Option<Vec<f32>>>,
+}
+
+impl DeltaTracker {
+    pub fn new(clients: usize) -> Self {
+        Self { last_seen: vec![None; clients] }
+    }
+
+    /// Simulated downlink bytes for client `k` when the broadcast prefix is
+    /// `cur_prefix` (tiered methods download only the flat prefix + aux
+    /// head; whole-model methods pass the full flat vector) and the
+    /// uncompressed downlink would cost `full_bytes`. The non-prefix
+    /// remainder of the download (aux head, framing) stays raw; the result
+    /// never exceeds `full_bytes`.
+    pub fn downlink_bytes(&self, k: usize, cur_prefix: &[f32], full_bytes: usize) -> usize {
+        let Some(prev) = self.last_seen.get(k).and_then(|s| s.as_ref()) else {
+            return full_bytes;
+        };
+        if prev.len() < cur_prefix.len() {
+            return full_bytes;
+        }
+        let raw_rest = full_bytes.saturating_sub(4 * cur_prefix.len());
+        (encoded_bytes(&prev[..cur_prefix.len()], cur_prefix) + raw_rest).min(full_bytes)
+    }
+
+    /// Record that client `k` received `broadcast` this round.
+    pub fn note_broadcast(&mut self, k: usize, broadcast: &[f32]) {
+        if let Some(slot) = self.last_seen.get_mut(k) {
+            match slot {
+                Some(prev) if prev.len() == broadcast.len() => prev.copy_from_slice(broadcast),
+                _ => *slot = Some(broadcast.to_vec()),
+            }
+        }
+    }
+
+    /// Whether client `k` has a snapshot to delta against.
+    pub fn has_snapshot(&self, k: usize) -> bool {
+        self.last_seen.get(k).and_then(|s| s.as_ref()).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng64;
+
+    fn roundtrip(prev: &[f32], cur: &[f32]) -> SnapshotDelta {
+        let d = encode(prev, cur);
+        let back = apply(prev, &d).expect("decode");
+        assert_eq!(back.len(), cur.len());
+        for (i, (a, b)) in back.iter().zip(cur).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "param {i} not bitwise round-tripped");
+        }
+        assert_eq!(d.wire_bytes(), encoded_bytes(prev, cur), "size probe must match encoder");
+        d
+    }
+
+    #[test]
+    fn roundtrip_empty_model() {
+        let d = roundtrip(&[], &[]);
+        assert_eq!(d.wire_bytes(), HEADER_BYTES);
+    }
+
+    #[test]
+    fn roundtrip_one_param() {
+        roundtrip(&[1.0], &[1.0]); // unchanged
+        roundtrip(&[1.0], &[-3.5]); // changed
+        roundtrip(&[0.0], &[-0.0]); // sign-of-zero is a bit flip, must survive
+    }
+
+    #[test]
+    fn roundtrip_all_changed_small_steps_pick_packed() {
+        // the SGD regime: every parameter moves a little, so the XOR words
+        // are small integers — the packed byte-plane mode must beat dense
+        let mut rng = Rng64::seed_from_u64(3);
+        let prev: Vec<f32> = (0..1024).map(|_| rng.gen_f32(-0.5, 0.5)).collect();
+        let cur: Vec<f32> = prev.iter().map(|v| v - 1e-3 * v.abs().max(1e-2)).collect();
+        let d = roundtrip(&prev, &cur);
+        assert_eq!(d.as_bytes()[0], MODE_PACKED);
+        assert!(
+            d.wire_bytes() < dense_size(1024),
+            "packed {} must beat dense {}",
+            d.wire_bytes(),
+            dense_size(1024)
+        );
+    }
+
+    #[test]
+    fn roundtrip_all_changed_adversarial_picks_dense() {
+        // a sign flip makes every XOR word full-width: dense must win (the
+        // delta can cost at most the raw download + header)
+        let prev: Vec<f32> = (0..257).map(|i| 1.0 + i as f32).collect();
+        let cur: Vec<f32> = prev.iter().map(|v| -v).collect();
+        let d = roundtrip(&prev, &cur);
+        assert_eq!(d.as_bytes()[0], MODE_DENSE, "all-flipped must not pay per-word overhead");
+        assert_eq!(d.wire_bytes(), dense_size(257));
+    }
+
+    #[test]
+    fn roundtrip_sparse_subsets() {
+        let mut rng = Rng64::seed_from_u64(11);
+        let prev: Vec<f32> = (0..4096).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+        for frac in [0.0, 0.01, 0.1, 0.5] {
+            let mut cur = prev.clone();
+            let k = (4096.0 * frac) as usize;
+            for i in rng.sample_indices(4096, k) {
+                cur[i] += 0.25;
+            }
+            let d = roundtrip(&prev, &cur);
+            if frac <= 0.1 {
+                assert_eq!(d.as_bytes()[0], MODE_SPARSE, "frac={frac}");
+                assert!(
+                    d.wire_bytes() < dense_size(4096),
+                    "sparse at frac={frac} must beat dense"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_bits_survive() {
+        let prev = [f32::NAN, 1.0, f32::INFINITY, -0.0];
+        let cur = [f32::from_bits(0x7fc0_0001), f32::NEG_INFINITY, 1.0, 0.0];
+        roundtrip(&prev, &cur);
+    }
+
+    #[test]
+    fn apply_rejects_mismatched_base() {
+        let d = encode(&[1.0, 2.0], &[1.0, 3.0]);
+        assert!(apply(&[1.0], &d).is_err(), "wrong-length base must be rejected");
+    }
+
+    #[test]
+    fn apply_rejects_overflowing_varint() {
+        // a corrupted sparse gap whose 5th varint byte shifts bits past 32
+        // must error rather than silently truncate the decoded index
+        let n = 8u32;
+        let mut bytes = vec![MODE_SPARSE];
+        bytes.extend_from_slice(&n.to_le_bytes());
+        bytes.extend_from_slice(&[0x80, 0x80, 0x80, 0x80, 0x7F]); // gap varint
+        bytes.extend_from_slice(&[1, 0, 0, 0]); // one XOR word
+        let d = SnapshotDelta { bytes };
+        let err = apply(&[0.0; 8], &d).unwrap_err().to_string();
+        assert!(err.contains("varint overflow"), "{err}");
+    }
+
+    #[test]
+    fn tracker_accounts_and_updates() {
+        let mut t = DeltaTracker::new(2);
+        let g0: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let full = 4 * g0.len() + 8; // model + 8 bytes of raw aux head
+        assert_eq!(t.downlink_bytes(0, &g0, full), full, "no snapshot -> full download");
+        t.note_broadcast(0, &g0);
+        assert!(t.has_snapshot(0) && !t.has_snapshot(1));
+        // unchanged model: header + raw remainder only
+        assert_eq!(t.downlink_bytes(0, &g0, full), HEADER_BYTES + 8);
+        // one changed param: header + one sparse entry + raw remainder
+        let mut g1 = g0.clone();
+        g1[3] = 9.0;
+        assert_eq!(t.downlink_bytes(0, &g1, full), HEADER_BYTES + 5 + 8);
+        // a shorter prefix (lower tier) deltas against the snapshot prefix
+        let half_full = 4 * 4 + 8;
+        let b = t.downlink_bytes(0, &g1[..4], half_full);
+        assert_eq!(b, HEADER_BYTES + 5 + 8);
+        // never exceeds the full download even for adversarial inputs
+        let noisy: Vec<f32> = (0..8).map(|i| (i as f32).sin() * 1e9).collect();
+        assert!(t.downlink_bytes(0, &noisy, 16) <= 16);
+    }
+}

@@ -11,13 +11,15 @@ use crate::anyhow::{Context, Result};
 use crate::baselines::{FedAvg, FedGkt, FedYogi, SplitFed};
 use crate::config::ExperimentConfig;
 use crate::coordinator::parallel::for_each_streamed;
-use crate::coordinator::{load_initial_model, Dtfl, DtflOptions};
+use crate::coordinator::{load_initial_model, DeltaTracker, Dtfl, DtflOptions};
 use crate::csv_row;
 use crate::data::{self, Batch, BatchCache, Dataset, DatasetSpec, Partition, PartitionScheme};
 use crate::fed::{Method, PrivacyCfg, RoundEnv};
 use crate::metrics::{CsvWriter, Recorder, RoundRecord, RunReport};
 use crate::runtime::{Runtime, StepEngine};
-use crate::simulation::{DynamicEnvironment, ResourceProfile, ServerModel, VirtualClock};
+use crate::simulation::{
+    DynamicEnvironment, ResourceProfile, ScenarioEngine, ServerModel, VirtualClock,
+};
 use crate::util::Rng64;
 
 /// A fully-constructed experiment, ready to run.
@@ -36,6 +38,11 @@ pub struct Experiment {
     pub clock: VirtualClock,
     rng: Rng64,
     env_dyn: Option<DynamicEnvironment>,
+    /// Trace-driven environment (churn, links, deadlines); `None` = static.
+    scenario: Option<ScenarioEngine>,
+    /// Per-client last-seen snapshots for delta-downlink accounting
+    /// (scenario mode with `delta_downlink = true`).
+    delta: Option<DeltaTracker>,
     lr: f32,
     plateau: usize,
     best_acc: f64,
@@ -86,13 +93,30 @@ impl Experiment {
         let eval_batches = data::eval_batches(&test, rt.meta.eval_batch)?;
 
         // --- heterogeneity ---
+        let scenario_spec = cfg.scenario.as_ref().map(|s| s.resolve()).transpose()?;
+        if let Some(sc) = &scenario_spec {
+            // spec validity is checked by parse (file refs) / config
+            // validation (inline) and again by ScenarioEngine::new below;
+            // only the fleet-size cross-check is owed here, because file
+            // references cannot be checked before resolution
+            sc.ensure_fleet_matches(cfg.clients.count)?;
+        }
         let mut rng = Rng64::seed_from_u64(cfg.clients.seed ^ 0xD7F1);
-        let profiles = cfg.clients.profile_pool.assign(cfg.clients.count, &mut rng);
+        let profiles = match &scenario_spec {
+            // scenario cohorts define the fleet; the static pool is unused
+            Some(sc) => sc.initial_profiles(),
+            None => cfg.clients.profile_pool.assign(cfg.clients.count, &mut rng),
+        };
         let env_dyn = (cfg.sim.profile_switch_every > 0).then(|| DynamicEnvironment {
             pool: cfg.clients.profile_pool,
             switch_every: cfg.sim.profile_switch_every,
             switch_frac: cfg.sim.profile_switch_frac,
         });
+        let delta = scenario_spec
+            .as_ref()
+            .filter(|sc| sc.delta_downlink)
+            .map(|sc| DeltaTracker::new(sc.total_clients()));
+        let scenario = scenario_spec.map(ScenarioEngine::new).transpose()?;
 
         // --- method ---
         let method = build_method(&cfg, &rt)?;
@@ -119,6 +143,8 @@ impl Experiment {
             clock: VirtualClock::new(),
             rng,
             env_dyn,
+            scenario,
+            delta,
             lr,
             plateau: 0,
             best_acc: 0.0,
@@ -134,12 +160,16 @@ impl Experiment {
 
     /// Participants for round `r`, drawn from a per-round derived RNG
     /// stream (never the shared experiment RNG): the sample is a pure
-    /// function of `(seed, r)`, so round r+1's participant set is known
-    /// while round r executes — the pipelined engines use it to prefetch
+    /// function of `(seed, r)` — plus the scenario's (pure) churn schedule
+    /// when one is active — so round r+1's participant set is known while
+    /// round r executes; the pipelined engines use it to prefetch
     /// next-round batch encodings during the aggregation tail.
+    ///
+    /// With a scenario, sampling runs over the clients *present* at round
+    /// `r` (arrived, not departed): a flash crowd immediately joins the
+    /// sampling pool and departures leave it. The static path (no
+    /// scenario) consumes the RNG stream exactly as before.
     fn sample_for_round(&self, r: usize) -> Vec<usize> {
-        let n = self.cfg.clients.count;
-        let sample = ((n as f64) * self.cfg.run.sample_frac).round().max(1.0) as usize;
         let mix = self
             .cfg
             .clients
@@ -147,7 +177,26 @@ impl Experiment {
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
             .wrapping_add((r as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
         let mut rng = Rng64::seed_from_u64(mix ^ 0x5A4D_504C);
-        let mut ids = rng.sample_indices(n, sample.min(n));
+        let mut ids = match self.scenario.as_ref().map(|e| e.scenario()) {
+            None => {
+                let n = self.cfg.clients.count;
+                let sample = ((n as f64) * self.cfg.run.sample_frac).round().max(1.0) as usize;
+                rng.sample_indices(n, sample.min(n))
+            }
+            Some(sc) => {
+                let present: Vec<usize> =
+                    (0..self.cfg.clients.count).filter(|&k| sc.active_at(k, r)).collect();
+                if present.is_empty() {
+                    return Vec::new();
+                }
+                let sample =
+                    ((present.len() as f64) * self.cfg.run.sample_frac).round().max(1.0) as usize;
+                rng.sample_indices(present.len(), sample.min(present.len()))
+                    .into_iter()
+                    .map(|i| present[i])
+                    .collect()
+            }
+        };
         ids.sort_unstable();
         ids
     }
@@ -207,6 +256,13 @@ impl Experiment {
                 }
             }
 
+            // scenario: advance the fleet state (link walks, churn, growth)
+            // and copy the model being broadcast for post-round snapshot
+            // bookkeeping (the delta tracker must record the PRE-round
+            // global, which the method mutates during the round)
+            let scenario_round = self.scenario.as_mut().map(|e| e.begin_round(r));
+            let broadcast = self.delta.is_some().then(|| self.method.global_params().to_vec());
+
             let next_ids = (r + 1 < rounds).then(|| self.sample_for_round(r + 1));
             let outcome = {
                 let mut env = RoundEnv {
@@ -229,9 +285,18 @@ impl Experiment {
                     pipeline_depth: self.cfg.run.pipeline_depth,
                     agg_shards: self.cfg.run.agg_shards,
                     next_participants: next_ids.as_deref(),
+                    scenario: scenario_round.as_ref(),
+                    downlink: self.delta.as_ref(),
                 };
                 self.method.round(&mut env)?
             };
+            // every participant received this round's broadcast (straggled
+            // or not) — future downlinks delta against it
+            if let (Some(t), Some(b)) = (self.delta.as_mut(), broadcast.as_ref()) {
+                for &k in &ids {
+                    t.note_broadcast(k, b);
+                }
+            }
             let makespan = self.clock.advance_round(&outcome.times);
             // straggler decomposition (Table 1 compute/comm rows)
             let (ms_comp, ms_comm) = outcome
@@ -277,6 +342,8 @@ impl Experiment {
                 lr: self.lr,
                 mean_tier,
                 tiers: outcome.tiers.clone(),
+                wire_bytes: outcome.wire_bytes,
+                straggled: outcome.straggled.len(),
                 host_secs: t0.elapsed().as_secs_f64(),
             };
             crate::log::info!(
@@ -287,6 +354,13 @@ impl Experiment {
                 mean_tier,
                 rec.host_secs
             );
+            if !outcome.straggled.is_empty() {
+                crate::log::info!(
+                    "round {r}: {} deadline stragglers: {:?}",
+                    outcome.straggled.len(),
+                    outcome.straggled
+                );
+            }
             if let Some(w) = csv.as_mut() {
                 w.row(&csv_row![
                     rec.round,
@@ -297,6 +371,8 @@ impl Experiment {
                     rec.test_accuracy.map(|v| v.to_string()).unwrap_or_default(),
                     rec.lr,
                     rec.mean_tier,
+                    rec.wire_bytes,
+                    rec.straggled,
                     rec.host_secs
                 ])?;
             }
@@ -341,6 +417,8 @@ impl Experiment {
                 "test_accuracy",
                 "lr",
                 "mean_tier",
+                "wire_bytes",
+                "straggled",
                 "host_secs",
             ],
         )?))

@@ -11,9 +11,10 @@
 use std::sync::Arc;
 
 use crate::anyhow::Result;
+use crate::coordinator::snapshot_delta::DeltaTracker;
 use crate::data::{Batch, BatchCache, Dataset, Partition};
 use crate::runtime::Runtime;
-use crate::simulation::{ClientRoundTime, ResourceProfile, ServerModel};
+use crate::simulation::{ClientRoundTime, ResourceProfile, ScenarioRound, ServerModel, Straggle};
 use crate::util::Rng64;
 
 /// Privacy configuration (paper §4.4, Table 5).
@@ -57,6 +58,15 @@ pub struct RoundEnv<'a> {
     /// them — lets the engines prefetch model-independent inputs (batch
     /// encoding) for round r+1 while round r's aggregation streams.
     pub next_participants: Option<&'a [usize]>,
+    /// Per-round fleet state from the scenario engine (churn, time-varying
+    /// links, dataset growth, deadline). `None` = the static environment —
+    /// every scenario hook below then reduces to the legacy computation
+    /// bit-for-bit.
+    pub scenario: Option<&'a ScenarioRound>,
+    /// Last-seen snapshot tracker for delta-compressed downlink accounting
+    /// (scenario mode with `delta_downlink = true`); `None` = full
+    /// downloads.
+    pub downlink: Option<&'a DeltaTracker>,
 }
 
 /// How many leading batches per next-round participant the engines warm
@@ -64,16 +74,62 @@ pub struct RoundEnv<'a> {
 const PREFETCH_BATCHES_PER_CLIENT: usize = 2;
 
 impl RoundEnv<'_> {
+    /// Client k's effective shard size this round: the partition size,
+    /// scaled by the scenario's dataset-growth fraction when a scenario is
+    /// active (exactly the partition size otherwise — no float path).
+    pub fn shard_size(&self, k: usize) -> usize {
+        let base = self.partition.size(k);
+        match self.scenario {
+            Some(sr) => ((base as f64) * sr.data_scale[k]).ceil() as usize,
+            None => base,
+        }
+    }
+
+    /// Aggregation weight N_k for client k (effective dataset size).
+    pub fn client_weight(&self, k: usize) -> f64 {
+        self.shard_size(k).max(1) as f64
+    }
+
     /// Ñ_k for client k under the configured cap (0 for an empty shard —
     /// such a client contributes its unchanged download to aggregation).
     pub fn n_batches(&self, k: usize, batch: usize) -> usize {
-        if self.partition.size(k) == 0 {
+        let size = self.shard_size(k);
+        if size == 0 {
             return 0;
         }
-        let n = self.partition.size(k).div_ceil(batch).max(1);
+        let n = size.div_ceil(batch).max(1);
         match self.batch_cap {
             Some(cap) => n.min(cap),
             None => n,
+        }
+    }
+
+    /// Simulated seconds to move `bytes` for client k: the scenario's
+    /// time-varying link when one is active, the static profile otherwise.
+    pub fn comm_secs(&self, k: usize, bytes: usize) -> f64 {
+        match self.scenario {
+            Some(sr) => sr.links[k].comm_secs(bytes),
+            None => self.profiles[k].comm_secs(bytes),
+        }
+    }
+
+    /// Simulated downlink bytes for client k when the broadcast prefix is
+    /// `flat_prefix` and an uncompressed download costs `full_bytes`:
+    /// the delta-codec size vs the client's last-seen snapshot when delta
+    /// downlink is on, `full_bytes` otherwise (never more than it).
+    pub fn downlink_bytes(&self, k: usize, full_bytes: usize, flat_prefix: &[f32]) -> usize {
+        match self.downlink {
+            Some(t) => t.downlink_bytes(k, flat_prefix, full_bytes),
+            None => full_bytes,
+        }
+    }
+
+    /// Apply the scenario's round deadline to one client's simulated time
+    /// (see [`ScenarioRound::check_deadline`]); a no-op without a scenario.
+    pub fn apply_deadline(&self, t: &mut ClientRoundTime) -> Straggle {
+        match self.scenario {
+            Some(sr) => sr.check_deadline(t),
+            None => Straggle::None,
         }
     }
 
@@ -157,6 +213,13 @@ pub struct RoundOutcome {
     pub train_loss: f64,
     /// Tier of each participant (DTFL/static-tier; tier 0 = whole model).
     pub tiers: Vec<usize>,
+    /// Total simulated bytes on the wire this round (model down/up +
+    /// activations; the downlink leg is delta-sized in scenario mode).
+    pub wire_bytes: u64,
+    /// Clients that missed the round deadline (scenario mode), in
+    /// participant order. Under the `drop` policy their updates were not
+    /// aggregated; under `wait` they were.
+    pub straggled: Vec<usize>,
 }
 
 impl RoundOutcome {
@@ -168,6 +231,22 @@ impl RoundOutcome {
     pub fn carried_over(round: usize) -> Self {
         crate::log::info!("round {round}: empty participant set — global model carried over");
         Self::default()
+    }
+
+    /// The aggregator saw zero updates this round. With no participants at
+    /// all this is the classic carried-over round; in scenario mode every
+    /// participant may instead have missed the deadline — the observed
+    /// times/bytes/straggles are kept (the clock still advances by the
+    /// capped makespan) while the global model carries over unchanged.
+    pub fn with_no_update(self, round: usize) -> Self {
+        if self.times.is_empty() {
+            return Self::carried_over(round);
+        }
+        crate::log::info!(
+            "round {round}: all {} participants missed the deadline — global model carried over",
+            self.times.len()
+        );
+        self
     }
 }
 
@@ -210,6 +289,8 @@ mod tests {
             pipeline_depth: 1,
             agg_shards: 1,
             next_participants: None,
+            scenario: None,
+            downlink: None,
         };
         let mut a1 = env.client_rng(0);
         let mut a2 = env.client_rng(0);

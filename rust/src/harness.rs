@@ -8,12 +8,13 @@ use std::time::{Duration, Instant};
 use crate::anyhow::Result;
 
 use crate::config::{
-    ClientsCfg, DataCfg, ExperimentConfig, ModelCfg, OutputCfg, PrivacyCfgToml, RunCfg, SimCfg,
+    ClientsCfg, DataCfg, ExperimentConfig, ModelCfg, OutputCfg, PrivacyCfgToml, RunCfg,
+    ScenarioRef, SimCfg,
 };
 use crate::coordinator::resolve_threads;
 use crate::experiment::Experiment;
 use crate::metrics::{RoundRecord, RunReport};
-use crate::simulation::ProfilePool;
+use crate::simulation::{ProfilePool, Scenario};
 use crate::util::json::{self, Json};
 
 /// Builder with testbed-sized defaults; every table harness starts here and
@@ -53,6 +54,9 @@ pub struct RunSpec {
     pub fuse_forward: bool,
     pub lr: f32,
     pub out_name: Option<String>,
+    /// Trace-driven environment scenario; when set, `clients` must equal
+    /// the scenario's fleet size and the profile pool is unused.
+    pub scenario: Option<Scenario>,
 }
 
 impl Default for RunSpec {
@@ -85,6 +89,7 @@ impl Default for RunSpec {
             fuse_forward: true,
             lr: 1e-3,
             out_name: None,
+            scenario: None,
         }
     }
 }
@@ -149,6 +154,7 @@ impl RunSpec {
                 dir: "results".into(),
                 name: Some(n.clone()),
             }),
+            scenario: self.scenario.clone().map(ScenarioRef::Inline),
         }
     }
 
@@ -658,6 +664,139 @@ pub fn measure_fused_throughput(
         arena_peak_fused: fused_step.arena_peak,
         arena_peak_unfused: unfused_step.arena_peak,
         elision,
+    })
+}
+
+/// The committed scenario the `scenario` bench object runs (also driven end
+/// to end by `examples/scenario_churn.rs`).
+pub const FLASH_CROWD_TOML: &str =
+    include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/flash_crowd.toml"));
+
+/// Result of the scenario probe — the `scenario` object in
+/// `BENCH_hotpath.json`: a full flash-crowd DTFL run (makespan + stragglers
+/// + bytes with delta downlink), plus a delta-vs-full broadcast byte
+/// comparison on FedAvg (whose training math has no timing feedback, so the
+/// two legs must produce bit-identical parameters).
+#[derive(Debug, Clone)]
+pub struct ScenarioThroughput {
+    pub name: String,
+    pub clients: usize,
+    pub rounds: usize,
+    /// Total simulated seconds of the DTFL scenario run (deadline active).
+    pub dtfl_sim_secs: f64,
+    /// Mean round makespan of that run.
+    pub dtfl_mean_makespan: f64,
+    /// Total deadline straggles observed across the run.
+    pub dtfl_straggles: usize,
+    /// Total simulated wire bytes of that run (delta downlink on).
+    pub dtfl_wire_bytes: u64,
+    /// FedAvg total wire bytes with delta-compressed downlink.
+    pub fedavg_delta_bytes: u64,
+    /// FedAvg total wire bytes with full broadcasts.
+    pub fedavg_full_bytes: u64,
+    /// FedAvg total simulated seconds, delta vs full broadcast.
+    pub fedavg_delta_sim_secs: f64,
+    pub fedavg_full_sim_secs: f64,
+    /// Whether the delta and full FedAvg legs produced identical global
+    /// parameter bits (they must — the codec never touches training math).
+    pub bit_identical: bool,
+}
+
+impl ScenarioThroughput {
+    /// Fraction of FedAvg broadcast traffic saved by the delta codec.
+    pub fn bytes_saved_ratio(&self) -> f64 {
+        1.0 - self.fedavg_delta_bytes as f64 / (self.fedavg_full_bytes as f64).max(1.0)
+    }
+
+    /// The `scenario` object recorded in `BENCH_hotpath.json`.
+    pub fn to_json(&self, source: &str) -> Json {
+        json::obj(vec![
+            ("name", json::s(self.name.clone())),
+            ("clients", json::num(self.clients as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            (
+                "dtfl",
+                json::obj(vec![
+                    ("sim_secs", json::num(self.dtfl_sim_secs)),
+                    ("mean_makespan_secs", json::num(self.dtfl_mean_makespan)),
+                    ("straggles", json::num(self.dtfl_straggles as f64)),
+                    ("wire_bytes", json::num(self.dtfl_wire_bytes as f64)),
+                ]),
+            ),
+            (
+                "broadcast",
+                json::obj(vec![
+                    ("delta_bytes", json::num(self.fedavg_delta_bytes as f64)),
+                    ("full_bytes", json::num(self.fedavg_full_bytes as f64)),
+                    ("bytes_saved_ratio", json::num(self.bytes_saved_ratio())),
+                    ("delta_sim_secs", json::num(self.fedavg_delta_sim_secs)),
+                    ("full_sim_secs", json::num(self.fedavg_full_sim_secs)),
+                ]),
+            ),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Run the committed flash-crowd scenario: once under DTFL with the full
+/// semantics (churn, drift, deadline, delta downlink) for the makespan
+/// trajectory, then twice under FedAvg — delta vs full broadcast, deadline
+/// stripped so the only difference is byte accounting — comparing total
+/// bytes-on-wire and asserting the global parameters match bit-for-bit.
+/// (DTFL is excluded from the identity check by design: its scheduler
+/// observes link speeds, so compression legitimately feeds back into tier
+/// choices.)
+pub fn measure_scenario_throughput(rounds: usize) -> Result<ScenarioThroughput> {
+    let scenario = Scenario::parse(FLASH_CROWD_TOML)?;
+    let clients = scenario.total_clients();
+    let spec = |method: &str, sc: Scenario| RunSpec {
+        method: method.into(),
+        clients,
+        rounds,
+        batch_cap: Some(1),
+        train_total: clients * 16,
+        test_total: 32,
+        eval_every: 1,
+        threads: 0,
+        scenario: Some(sc),
+        ..Default::default()
+    };
+    let run = |method: &str, sc: Scenario| -> Result<(Vec<RoundRecord>, Vec<f32>)> {
+        let mut exp = Experiment::new(spec(method, sc).to_config())?;
+        let mut records = Vec::new();
+        exp.run_with(|r| records.push(r.clone()))?;
+        Ok((records, exp.method.global_params().to_vec()))
+    };
+
+    let (dtfl_recs, _) = run("dtfl", scenario.clone())?;
+    let dtfl_sim_secs = dtfl_recs.last().map(|r| r.sim_time).unwrap_or(0.0);
+    let dtfl_mean_makespan = dtfl_sim_secs / dtfl_recs.len().max(1) as f64;
+    let dtfl_straggles: usize = dtfl_recs.iter().map(|r| r.straggled).sum();
+    let dtfl_wire_bytes: u64 = dtfl_recs.iter().map(|r| r.wire_bytes).sum();
+
+    // byte probe: identical training, only the downlink accounting differs
+    let mut probe = scenario.clone();
+    probe.deadline_secs = None;
+    let mut full = probe.clone();
+    full.delta_downlink = false;
+    probe.delta_downlink = true;
+    let (delta_recs, delta_params) = run("fedavg", probe)?;
+    let (full_recs, full_params) = run("fedavg", full)?;
+
+    Ok(ScenarioThroughput {
+        name: scenario.name.clone(),
+        clients,
+        rounds,
+        dtfl_sim_secs,
+        dtfl_mean_makespan,
+        dtfl_straggles,
+        dtfl_wire_bytes,
+        fedavg_delta_bytes: delta_recs.iter().map(|r| r.wire_bytes).sum(),
+        fedavg_full_bytes: full_recs.iter().map(|r| r.wire_bytes).sum(),
+        fedavg_delta_sim_secs: delta_recs.last().map(|r| r.sim_time).unwrap_or(0.0),
+        fedavg_full_sim_secs: full_recs.last().map(|r| r.sim_time).unwrap_or(0.0),
+        bit_identical: bits_eq(&delta_params, &full_params),
     })
 }
 

@@ -9,8 +9,10 @@
 //!   smoothing, the **parallel round engine** (per-client steps fanned over
 //!   a deterministic worker pool, streaming flat-layout aggregation), a
 //!   heterogeneity simulator (CPU/network resource profiles + virtual
-//!   clock), synthetic datasets with Dirichlet non-IID partitioning, and the
-//!   FedAvg / SplitFed / FedYogi / FedGKT baselines.
+//!   clock + the trace-driven scenario engine: churn, time-varying links,
+//!   round deadlines, delta-compressed downlink), synthetic datasets with
+//!   Dirichlet non-IID partitioning, and the FedAvg / SplitFed / FedYogi /
+//!   FedGKT baselines.
 //! * **Layer 2** — the splittable ResNet-style global model, written in JAX
 //!   (`python/compile/model.py`) and AOT-lowered to HLO text artifacts.
 //! * **Layer 1** — a tiled Pallas matmul kernel carrying every conv/dense

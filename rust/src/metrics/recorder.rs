@@ -24,6 +24,12 @@ pub struct RoundRecord {
     /// Per-participant tier assignments this round, in participant order
     /// (empty for whole-model methods; recorded for the golden traces).
     pub tiers: Vec<usize>,
+    /// Simulated bytes on the wire this round (delta-sized downlink when a
+    /// scenario enables it; 0 only on empty rounds).
+    pub wire_bytes: u64,
+    /// Participants that missed the scenario's round deadline (0 outside
+    /// scenario mode).
+    pub straggled: usize,
     /// Host wall seconds actually spent executing this round.
     pub host_secs: f64,
 }
@@ -150,6 +156,8 @@ mod tests {
             lr: 1e-3,
             mean_tier: 3.0,
             tiers: vec![3; 4],
+            wire_bytes: 1024,
+            straggled: 0,
             host_secs: 0.1,
         }
     }

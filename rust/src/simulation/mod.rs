@@ -1,14 +1,21 @@
 //! Heterogeneity simulation: resource profiles, the dynamic environment,
-//! and the virtual clock that turns real PJRT step timings into the
-//! simulated training times the paper reports.
+//! the virtual clock that turns real PJRT step timings into the simulated
+//! training times the paper reports, and the trace-driven scenario engine
+//! (churn, time-varying links, deadlines) layered on top of it.
 
 pub mod clock;
+pub mod network;
 pub mod profile;
+pub mod scenario;
 
 pub use clock::{ClientRoundTime, VirtualClock};
+pub use network::{LinkProcess, LinkQuality, LinkWindow};
 pub use profile::{
     DynamicEnvironment, ProfilePool, ResourceProfile, CASE1_PROFILES, CASE2_PROFILES,
     PAPER_PROFILES,
+};
+pub use scenario::{
+    CohortSpec, DeadlinePolicy, LinkEventSpec, Scenario, ScenarioEngine, ScenarioRound, Straggle,
 };
 
 /// Server compute model: the paper's server is a GPU box that trains all

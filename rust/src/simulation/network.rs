@@ -1,0 +1,167 @@
+//! Time-varying link models for the scenario engine.
+//!
+//! The static environment model gives every client a scalar `mbps` for the
+//! whole run ([`super::ResourceProfile`]); scenarios replace it with a
+//! per-client **link process**: a base bandwidth modulated by a seeded
+//! multiplicative random walk (slow drift) and piecewise-constant event
+//! windows (sudden degradation, e.g. a backhaul jam), plus a per-transfer
+//! latency floor. Every draw comes from the client's own derived RNG
+//! stream, advanced exactly once per round by the scenario engine's
+//! single-threaded `begin_round` — so link state is a pure function of
+//! `(scenario seed, client, round)` and identical for every engine knob
+//! setting.
+
+use crate::util::Rng64;
+
+/// One client's sampled link quality for one round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkQuality {
+    /// Effective bandwidth in Mbit/s (already includes drift + windows).
+    pub mbps: f64,
+    /// Fixed per-round latency charged once per round's transfer burst.
+    pub latency_secs: f64,
+}
+
+impl LinkQuality {
+    /// Simulated seconds to move `bytes` over this link this round. Zero
+    /// bytes cost nothing (not even latency — nothing was sent); a dead
+    /// link (`mbps <= 0`) makes any positive transfer take forever, which
+    /// the deadline semantics then turn into a straggle.
+    pub fn comm_secs(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        if self.mbps <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.latency_secs + (bytes as f64 * 8.0) / (self.mbps * 1e6)
+    }
+}
+
+/// A piecewise-constant link event: over rounds `from..=until` the affected
+/// clients' bandwidth is multiplied by `mbps_scale` and `add_latency_secs`
+/// is added to their per-round latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkWindow {
+    pub from: usize,
+    pub until: usize,
+    pub mbps_scale: f64,
+    pub add_latency_secs: f64,
+}
+
+impl LinkWindow {
+    pub fn covers(&self, round: usize) -> bool {
+        (self.from..=self.until).contains(&round)
+    }
+}
+
+/// Per-client link process state. `advance` must be called exactly once per
+/// round, in round order (the scenario engine owns that discipline).
+#[derive(Debug, Clone)]
+pub struct LinkProcess {
+    base_mbps: f64,
+    base_latency_secs: f64,
+    /// Std-dev of the per-round log-bandwidth step (0 = no drift).
+    walk_sigma: f64,
+    /// Drift never takes the un-windowed bandwidth below this.
+    floor_mbps: f64,
+    /// Multiplicative random-walk state (starts at 1.0).
+    walk: f64,
+    rng: Rng64,
+    windows: Vec<LinkWindow>,
+}
+
+impl LinkProcess {
+    /// `rng` is the client's derived stream — never a shared RNG.
+    pub fn new(
+        base_mbps: f64,
+        base_latency_secs: f64,
+        walk_sigma: f64,
+        floor_mbps: f64,
+        windows: Vec<LinkWindow>,
+        rng: Rng64,
+    ) -> Self {
+        Self {
+            base_mbps,
+            base_latency_secs,
+            walk_sigma,
+            floor_mbps,
+            walk: 1.0,
+            rng,
+            windows,
+        }
+    }
+
+    /// Advance the drift one step and sample this round's quality. One
+    /// normal variate is consumed per call even when `walk_sigma` is 0, so
+    /// turning drift on/off for one client never shifts another client's
+    /// stream (each client owns its RNG, but uniform consumption also keeps
+    /// a single client's window/no-window variants comparable).
+    pub fn advance(&mut self, round: usize) -> LinkQuality {
+        let step = self.rng.normal();
+        if self.walk_sigma > 0.0 {
+            self.walk *= (self.walk_sigma * step).exp();
+        }
+        let mut mbps = (self.base_mbps * self.walk).max(self.floor_mbps);
+        let mut latency = self.base_latency_secs;
+        for w in &self.windows {
+            if w.covers(round) {
+                mbps *= w.mbps_scale;
+                latency += w.add_latency_secs;
+            }
+        }
+        LinkQuality { mbps, latency_secs: latency }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quality_comm_secs_edge_cases() {
+        let q = LinkQuality { mbps: 30.0, latency_secs: 0.01 };
+        // 3.75 MB over 30 Mbps = 1s, plus latency
+        assert!((q.comm_secs(3_750_000) - 1.01).abs() < 1e-9);
+        assert_eq!(q.comm_secs(0), 0.0, "nothing sent, nothing charged");
+        let dead = LinkQuality { mbps: 0.0, latency_secs: 0.01 };
+        assert!(dead.comm_secs(1).is_infinite());
+        assert_eq!(dead.comm_secs(0), 0.0);
+    }
+
+    #[test]
+    fn windows_scale_bandwidth_and_add_latency() {
+        let w = LinkWindow { from: 2, until: 4, mbps_scale: 0.5, add_latency_secs: 0.1 };
+        let mut lp =
+            LinkProcess::new(40.0, 0.0, 0.0, 1.0, vec![w], Rng64::seed_from_u64(9));
+        let q1 = lp.advance(1);
+        assert!((q1.mbps - 40.0).abs() < 1e-12 && q1.latency_secs == 0.0);
+        let q2 = lp.advance(2);
+        assert!((q2.mbps - 20.0).abs() < 1e-12, "in-window bandwidth halved");
+        assert!((q2.latency_secs - 0.1).abs() < 1e-12);
+        let _ = lp.advance(3);
+        let q5 = lp.advance(5);
+        assert!((q5.mbps - 40.0).abs() < 1e-12, "window over");
+    }
+
+    #[test]
+    fn walk_is_deterministic_per_seed_and_floored() {
+        let run = |seed| {
+            let mut lp = LinkProcess::new(
+                10.0,
+                0.0,
+                0.4,
+                2.0,
+                Vec::new(),
+                Rng64::seed_from_u64(seed),
+            );
+            (0..50).map(|r| lp.advance(r).mbps).collect::<Vec<f64>>()
+        };
+        let a = run(3);
+        let b = run(3);
+        assert_eq!(a, b, "same seed, same drift trajectory");
+        assert_ne!(a, run(4), "distinct seeds drift differently");
+        assert!(a.iter().all(|&m| m >= 2.0), "floor holds under drift");
+        assert!(a.iter().any(|&m| (m - 10.0).abs() > 0.5), "drift actually moves");
+    }
+}

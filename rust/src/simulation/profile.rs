@@ -29,8 +29,18 @@ impl ResourceProfile {
         ref_secs / self.cpus
     }
 
-    /// Simulated seconds to move `bytes` over this client's link.
+    /// Simulated seconds to move `bytes` over this client's link. Zero
+    /// bytes cost nothing even on a dead link (nothing is sent — and the
+    /// naive `0/0` would be NaN, which would poison every downstream
+    /// makespan fold); a non-positive bandwidth makes any positive
+    /// transfer take forever rather than going negative.
     pub fn comm_secs(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        if self.mbps <= 0.0 {
+            return f64::INFINITY;
+        }
         (bytes as f64 * 8.0) / (self.mbps * 1e6)
     }
 }
@@ -72,13 +82,20 @@ pub enum ProfilePool {
 }
 
 impl ProfilePool {
-    pub fn from_name(name: &str) -> Option<Self> {
-        Some(match name {
+    /// Every name [`ProfilePool::from_name`] accepts (config error texts
+    /// enumerate these).
+    pub const NAMES: [&'static str; 4] = ["paper", "case1", "case2", "uniform"];
+
+    pub fn from_name(name: &str) -> crate::anyhow::Result<Self> {
+        Ok(match name {
             "paper" => ProfilePool::Paper,
             "case1" => ProfilePool::Case1,
             "case2" => ProfilePool::Case2,
             "uniform" => ProfilePool::Uniform,
-            _ => return None,
+            other => crate::anyhow::bail!(
+                "unknown profile_pool '{other}' (valid: {})",
+                Self::NAMES.join(", ")
+            ),
         })
     }
 
@@ -125,6 +142,19 @@ pub struct DynamicEnvironment {
 impl DynamicEnvironment {
     /// Mutates `profiles` in place at the start of round `round`; returns
     /// the indices of clients whose profile changed.
+    ///
+    /// **RNG-stream contract:** all randomness comes from the caller's
+    /// `rng`, consumed in a fixed order — one `sample_indices(n, k)` draw
+    /// (a full Fisher–Yates pass over `n` clients, so `n` is part of the
+    /// stream contract) followed by exactly one `gen_range` per switched
+    /// client, on switch rounds only; non-switch rounds consume nothing.
+    /// The experiment driver passes its dedicated heterogeneity stream
+    /// (`seed ^ 0xD7F1`, advanced only by profile assignment and these
+    /// switches), which makes the switch schedule a deterministic function
+    /// of `(seed, round history)`: same seed ⇒ same switch rounds, same
+    /// client indices, same replacement profiles (regression-tested by
+    /// `dynamic_environment_is_deterministic_per_seed`). Callers must not
+    /// interleave other draws on the same stream between rounds.
     pub fn maybe_switch(
         &self,
         round: usize,
@@ -162,6 +192,22 @@ mod tests {
         // 30 Mbps -> 3.75 MB/s; 3.75 MB should take 1s.
         let bytes = 3_750_000;
         assert!((p.comm_secs(bytes) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_time_edge_cases() {
+        // zero bytes cost nothing, whatever the link
+        assert_eq!(ResourceProfile::new(1.0, 30.0).comm_secs(0), 0.0);
+        assert_eq!(ResourceProfile::new(1.0, 0.0).comm_secs(0), 0.0, "0/0 must not be NaN");
+        // dead and negative links: positive transfers take forever
+        assert!(ResourceProfile::new(1.0, 0.0).comm_secs(1).is_infinite());
+        assert!(ResourceProfile::new(1.0, -5.0).comm_secs(1024).is_infinite());
+        // near-zero bandwidth: finite, positive, and astronomically large
+        let t = ResourceProfile::new(1.0, 1e-9).comm_secs(1);
+        assert!(t.is_finite() && t > 1e6);
+        // a single byte on a fast link is still charged
+        let t = ResourceProfile::new(1.0, 100.0).comm_secs(1);
+        assert!(t > 0.0 && t < 1e-6);
     }
 
     #[test]
@@ -205,8 +251,45 @@ mod tests {
             ProfilePool::Case2,
             ProfilePool::Uniform,
         ] {
-            assert_eq!(ProfilePool::from_name(p.name()), Some(p));
+            assert_eq!(ProfilePool::from_name(p.name()).unwrap(), p);
+            assert!(ProfilePool::NAMES.contains(&p.name()));
         }
-        assert_eq!(ProfilePool::from_name("bogus"), None);
+        let err = ProfilePool::from_name("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"), "error names the offender: {err}");
+        for name in ProfilePool::NAMES {
+            assert!(err.contains(name), "error lists valid pool '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn dynamic_environment_is_deterministic_per_seed() {
+        // regression for the RNG-stream contract on maybe_switch: same seed
+        // ⇒ same switch rounds, same switched clients, same replacements
+        let env = DynamicEnvironment {
+            pool: ProfilePool::Paper,
+            switch_every: 3,
+            switch_frac: 0.4,
+        };
+        let run = |seed: u64| {
+            let mut rng = Rng64::seed_from_u64(seed);
+            let mut profiles = ProfilePool::Paper.assign(10, &mut rng);
+            let mut switches = Vec::new();
+            for r in 0..12 {
+                let mut idx = env.maybe_switch(r, &mut profiles, &mut rng);
+                idx.sort_unstable();
+                switches.push((r, idx, profiles.clone()));
+            }
+            switches
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed must reproduce the exact switch history");
+        assert_ne!(a, run(8), "different seeds must diverge");
+        for (r, idx, _) in &a {
+            if *r == 0 || *r % 3 != 0 {
+                assert!(idx.is_empty(), "round {r}: no switch expected");
+            } else {
+                assert_eq!(idx.len(), 4, "round {r}: 40% of 10 clients switch");
+            }
+        }
     }
 }

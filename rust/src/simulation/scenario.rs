@@ -1,0 +1,634 @@
+//! Trace-driven fleet scenarios: churn, dataset growth, time-varying links,
+//! and round deadlines.
+//!
+//! DTFL's claim is that the dynamic tier scheduler adapts to *changing*
+//! client conditions; a static per-round cost lookup never stresses that.
+//! A [`Scenario`] declares the fleet as **cohorts** (count, compute/link
+//! profile, arrival/departure rounds, dataset growth) plus **link events**
+//! (piecewise-constant degradation windows) layered on each client's seeded
+//! bandwidth random walk ([`super::network`]), and the round semantics
+//! (deadline + straggler policy, delta-compressed downlink).
+//!
+//! The [`ScenarioEngine`] turns the spec into per-round state: the driver
+//! calls [`ScenarioEngine::begin_round`] once per round (single-threaded,
+//! in round order), producing an immutable [`ScenarioRound`] that the
+//! worker pool shares. All randomness comes from per-client RNG streams
+//! derived from `(scenario seed, client)` — never a shared mutable RNG —
+//! so a scenario run is bit-identical across the whole engine knob grid
+//! `{threads, intra_threads, pipeline_depth, agg_shards, fuse_forward}`
+//! (enforced by `tests/scenario_trace.rs`).
+//!
+//! ## Scenario file format (mini-TOML)
+//!
+//! ```toml
+//! [scenario]
+//! name = "flash-crowd"
+//! seed = 42
+//! deadline_secs = 40.0      # optional; omit for no deadline
+//! on_deadline = "drop"      # drop (default) | wait
+//! delta_downlink = true     # default false
+//!
+//! [cohort.base]             # cohorts enumerate in NAME order
+//! count = 6
+//! cpus = 1.0                # ResourceProfile compute share
+//! mbps = 30.0               # base link bandwidth
+//! arrive = 0                # first round present (default 0)
+//! # depart = 20             # first round absent (default: never)
+//! data_start = 1.0          # initial fraction of the shard in use
+//! data_growth = 0.0         # per-round growth of that fraction
+//! walk_sigma = 0.05         # log-bandwidth random-walk step std-dev
+//! latency_ms = 5.0          # per-round link latency
+//! floor_mbps = 1.0          # drift floor (before event windows)
+//!
+//! [link.jam]                # piecewise-constant link event
+//! cohort = "base"           # omit to hit every client
+//! rounds = [5, 8]           # inclusive round window
+//! mbps_scale = 0.25
+//! add_latency_ms = 40.0
+//! ```
+
+use std::path::Path;
+
+use crate::anyhow::{anyhow, Context, Result};
+use crate::util::toml_mini::TomlDoc;
+use crate::util::Rng64;
+
+use super::clock::ClientRoundTime;
+use super::network::{LinkProcess, LinkQuality, LinkWindow};
+use super::profile::ResourceProfile;
+
+/// What happens to a client whose round time exceeds the deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeadlinePolicy {
+    /// The server stops waiting at the deadline: the update is dropped and
+    /// the client's recorded round time is capped at the deadline.
+    #[default]
+    Drop,
+    /// The server waits the straggler out: the update is still aggregated
+    /// and the full time counts toward the makespan; the client is only
+    /// *marked* straggled (FedAT-style bookkeeping without async tiers).
+    Wait,
+}
+
+impl DeadlinePolicy {
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "drop" => Ok(DeadlinePolicy::Drop),
+            "wait" => Ok(DeadlinePolicy::Wait),
+            other => Err(anyhow!("unknown on_deadline '{other}' (valid: drop, wait)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeadlinePolicy::Drop => "drop",
+            DeadlinePolicy::Wait => "wait",
+        }
+    }
+}
+
+/// Per-client deadline verdict for one round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Straggle {
+    /// Made the deadline (or no deadline configured).
+    None,
+    /// Missed it under [`DeadlinePolicy::Wait`]: update kept, full time.
+    Waited,
+    /// Missed it under [`DeadlinePolicy::Drop`]: update dropped, time
+    /// capped at the deadline.
+    Dropped,
+}
+
+impl Straggle {
+    pub fn straggled(self) -> bool {
+        !matches!(self, Straggle::None)
+    }
+
+    pub fn dropped(self) -> bool {
+        matches!(self, Straggle::Dropped)
+    }
+}
+
+/// One homogeneous group of clients in the trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CohortSpec {
+    pub name: String,
+    pub count: usize,
+    /// Simulated CPU share (see [`ResourceProfile::cpus`]).
+    pub cpus: f64,
+    /// Base link bandwidth before drift/events.
+    pub mbps: f64,
+    /// First round this cohort is present.
+    pub arrive: usize,
+    /// First round this cohort is absent again (`None` = stays forever).
+    pub depart: Option<usize>,
+    /// Fraction of the client's data shard in use at `arrive`.
+    pub data_start: f64,
+    /// Per-round multiplicative growth of that fraction (clamped at 1.0).
+    pub data_growth: f64,
+    /// Log-bandwidth random-walk step std-dev (0 = no drift).
+    pub walk_sigma: f64,
+    /// Per-round link latency, milliseconds.
+    pub latency_ms: f64,
+    /// Bandwidth floor the drift cannot cross.
+    pub floor_mbps: f64,
+}
+
+impl CohortSpec {
+    /// A stationary full-data cohort; scenario builders override fields.
+    pub fn new(name: &str, count: usize, cpus: f64, mbps: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            count,
+            cpus,
+            mbps,
+            arrive: 0,
+            depart: None,
+            data_start: 1.0,
+            data_growth: 0.0,
+            walk_sigma: 0.0,
+            latency_ms: 0.0,
+            floor_mbps: 1.0,
+        }
+    }
+
+    fn active_at(&self, round: usize) -> bool {
+        let departed = match self.depart {
+            Some(d) => round >= d,
+            None => false,
+        };
+        round >= self.arrive && !departed
+    }
+
+    fn data_scale(&self, round: usize) -> f64 {
+        let age = round.saturating_sub(self.arrive) as f64;
+        (self.data_start * (1.0 + self.data_growth).powf(age)).clamp(0.0, 1.0)
+    }
+}
+
+/// A piecewise-constant link degradation window over one cohort (or all).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkEventSpec {
+    pub name: String,
+    /// Affected cohort name; `None` = every client.
+    pub cohort: Option<String>,
+    /// Inclusive round window.
+    pub from: usize,
+    pub until: usize,
+    pub mbps_scale: f64,
+    pub add_latency_ms: f64,
+}
+
+/// A full fleet trace + round semantics. See the module docs for the file
+/// format; build programmatically via the public fields for tests/benches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Base seed all per-client link streams derive from.
+    pub seed: u64,
+    /// Round deadline in simulated seconds (`None` = no deadline).
+    pub deadline_secs: Option<f64>,
+    pub on_deadline: DeadlinePolicy,
+    /// Broadcast the global model as a delta vs each client's last-seen
+    /// snapshot (`coordinator::snapshot_delta`) instead of a full download.
+    pub delta_downlink: bool,
+    pub cohorts: Vec<CohortSpec>,
+    pub links: Vec<LinkEventSpec>,
+}
+
+impl Scenario {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing scenario {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let s = doc.section("scenario");
+        let on_deadline = DeadlinePolicy::from_name(&s.str_or("on_deadline", "drop")?)?;
+
+        let mut cohorts = Vec::new();
+        for (name, c) in doc.sections_with_prefix("cohort.") {
+            cohorts.push(CohortSpec {
+                name: name.to_string(),
+                count: c.usize_or("count", 1)?,
+                cpus: c.f64_or("cpus", 1.0)?,
+                mbps: c.f64_or("mbps", 30.0)?,
+                arrive: c.usize_or("arrive", 0)?,
+                depart: c.opt_usize("depart")?,
+                data_start: c.f64_or("data_start", 1.0)?,
+                data_growth: c.f64_or("data_growth", 0.0)?,
+                walk_sigma: c.f64_or("walk_sigma", 0.0)?,
+                latency_ms: c.f64_or("latency_ms", 0.0)?,
+                floor_mbps: c.f64_or("floor_mbps", 1.0)?,
+            });
+        }
+
+        let mut links = Vec::new();
+        for (name, l) in doc.sections_with_prefix("link.") {
+            let (from, until) = l
+                .opt_usize_pair("rounds")?
+                .ok_or_else(|| anyhow!("[link.{name}] missing 'rounds = [from, until]'"))?;
+            links.push(LinkEventSpec {
+                name: name.to_string(),
+                cohort: l.opt_str("cohort")?,
+                from,
+                until,
+                mbps_scale: l.f64_or("mbps_scale", 1.0)?,
+                add_latency_ms: l.f64_or("add_latency_ms", 0.0)?,
+            });
+        }
+
+        let sc = Self {
+            name: s.str_or("name", "unnamed")?,
+            seed: s.u64_or("seed", 17)?,
+            deadline_secs: s.opt_f64("deadline_secs")?,
+            on_deadline,
+            delta_downlink: s.bool_or("delta_downlink", false)?,
+            cohorts,
+            links,
+        };
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        crate::anyhow::ensure!(!self.cohorts.is_empty(), "scenario declares no cohorts");
+        for c in &self.cohorts {
+            crate::anyhow::ensure!(c.count > 0, "cohort '{}': count must be > 0", c.name);
+            crate::anyhow::ensure!(c.cpus > 0.0, "cohort '{}': cpus must be > 0", c.name);
+            crate::anyhow::ensure!(c.mbps > 0.0, "cohort '{}': mbps must be > 0", c.name);
+            if let Some(d) = c.depart {
+                crate::anyhow::ensure!(
+                    d > c.arrive,
+                    "cohort '{}': depart {} must be after arrive {}",
+                    c.name,
+                    d,
+                    c.arrive
+                );
+            }
+            crate::anyhow::ensure!(
+                c.data_start > 0.0 && c.data_start <= 1.0,
+                "cohort '{}': data_start must be in (0, 1]",
+                c.name
+            );
+            crate::anyhow::ensure!(
+                c.data_growth > -1.0,
+                "cohort '{}': data_growth must be > -1",
+                c.name
+            );
+            crate::anyhow::ensure!(
+                c.walk_sigma >= 0.0 && c.latency_ms >= 0.0 && c.floor_mbps >= 0.0,
+                "cohort '{}': walk_sigma/latency_ms/floor_mbps must be >= 0",
+                c.name
+            );
+        }
+        if let Some(d) = self.deadline_secs {
+            crate::anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "deadline_secs must be a positive finite number"
+            );
+        }
+        for l in &self.links {
+            crate::anyhow::ensure!(
+                l.from <= l.until,
+                "link event '{}': rounds window is reversed",
+                l.name
+            );
+            crate::anyhow::ensure!(
+                l.mbps_scale > 0.0 && l.add_latency_ms >= 0.0,
+                "link event '{}': mbps_scale must be > 0, add_latency_ms >= 0",
+                l.name
+            );
+            if let Some(cohort) = &l.cohort {
+                crate::anyhow::ensure!(
+                    self.cohorts.iter().any(|c| &c.name == cohort),
+                    "link event '{}' names unknown cohort '{}'",
+                    l.name,
+                    cohort
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total fleet size (must equal the experiment's `clients.count`).
+    pub fn total_clients(&self) -> usize {
+        self.cohorts.iter().map(|c| c.count).sum()
+    }
+
+    /// The single authority for the fleet-size cross-check against an
+    /// experiment's `clients.count` (config validation checks inline
+    /// scenarios eagerly; `Experiment::with_runtime` checks every resolved
+    /// scenario, including file references).
+    pub fn ensure_fleet_matches(&self, clients: usize) -> Result<()> {
+        crate::anyhow::ensure!(
+            self.total_clients() == clients,
+            "scenario '{}' declares {} clients but clients.count is {}",
+            self.name,
+            self.total_clients(),
+            clients
+        );
+        Ok(())
+    }
+
+    /// Cohort index of client `k`; clients are numbered cohort-by-cohort in
+    /// declaration order (file format: lexicographic cohort-name order).
+    pub fn cohort_of(&self, k: usize) -> &CohortSpec {
+        let mut base = 0usize;
+        for c in &self.cohorts {
+            if k < base + c.count {
+                return c;
+            }
+            base += c.count;
+        }
+        panic!("client {k} out of range for a {}-client scenario", self.total_clients());
+    }
+
+    /// Whether client `k` is present (arrived, not departed) at `round`.
+    pub fn active_at(&self, k: usize, round: usize) -> bool {
+        self.cohort_of(k).active_at(round)
+    }
+
+    /// Initial compute/link profile per client (the scheduler's static view
+    /// before scenario dynamics kick in).
+    pub fn initial_profiles(&self) -> Vec<ResourceProfile> {
+        (0..self.total_clients())
+            .map(|k| {
+                let c = self.cohort_of(k);
+                ResourceProfile::new(c.cpus, c.mbps)
+            })
+            .collect()
+    }
+}
+
+/// Immutable per-round fleet state, shared with the worker pool. All
+/// vectors are indexed by client id. Churn membership is not repeated
+/// here: the driver already restricts `participants` to the clients
+/// present this round ([`Scenario::active_at`] is a pure function the
+/// sampler consults directly).
+#[derive(Debug, Clone)]
+pub struct ScenarioRound {
+    pub round: usize,
+    pub links: Vec<LinkQuality>,
+    /// Fraction of each client's data shard in use this round.
+    pub data_scale: Vec<f64>,
+    pub deadline_secs: Option<f64>,
+    pub on_deadline: DeadlinePolicy,
+}
+
+impl ScenarioRound {
+    /// Apply the deadline to one client's simulated round time. Pure
+    /// per-client decision (no cross-client state), so it is identical
+    /// whether the sink runs streamed, pipelined, or sharded.
+    pub fn check_deadline(&self, t: &mut ClientRoundTime) -> Straggle {
+        let Some(d) = self.deadline_secs else {
+            return Straggle::None;
+        };
+        if t.total() <= d {
+            return Straggle::None;
+        }
+        match self.on_deadline {
+            DeadlinePolicy::Wait => Straggle::Waited,
+            DeadlinePolicy::Drop => {
+                // the server stopped waiting at the deadline; the capped
+                // time is all compute-bucket so the makespan decomposition
+                // attributes the stall to the straggler, not the link
+                *t = ClientRoundTime { compute: d, comm: 0.0, server: 0.0 };
+                Straggle::Dropped
+            }
+        }
+    }
+}
+
+/// Drives a [`Scenario`] over virtual time. Owned by the experiment driver;
+/// `begin_round` must be called once per round, in round order (the link
+/// random walks are sequential state).
+#[derive(Debug, Clone)]
+pub struct ScenarioEngine {
+    scenario: Scenario,
+    links: Vec<LinkProcess>,
+    next_round: usize,
+}
+
+impl ScenarioEngine {
+    pub fn new(scenario: Scenario) -> Result<Self> {
+        scenario.validate()?;
+        let n = scenario.total_clients();
+        let links = (0..n)
+            .map(|k| {
+                let c = scenario.cohort_of(k);
+                let windows = scenario
+                    .links
+                    .iter()
+                    .filter(|l| match &l.cohort {
+                        Some(name) => *name == c.name,
+                        None => true,
+                    })
+                    .map(|l| LinkWindow {
+                        from: l.from,
+                        until: l.until,
+                        mbps_scale: l.mbps_scale,
+                        add_latency_secs: l.add_latency_ms / 1e3,
+                    })
+                    .collect();
+                // per-client derived stream: a pure function of
+                // (scenario seed, client id), mixing in a domain tag so the
+                // stream never collides with the experiment's other
+                // derivations from the same base seed
+                let mix = scenario
+                    .seed
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add((k as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+                LinkProcess::new(
+                    c.mbps,
+                    c.latency_ms / 1e3,
+                    c.walk_sigma,
+                    c.floor_mbps,
+                    windows,
+                    Rng64::seed_from_u64(mix ^ 0x5CE7_A210),
+                )
+            })
+            .collect();
+        Ok(Self { scenario, links, next_round: 0 })
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    pub fn clients(&self) -> usize {
+        self.scenario.total_clients()
+    }
+
+    /// Advance every client's link process one round and snapshot the fleet
+    /// state. Every client's walk advances every round (active or not) so
+    /// churn never shifts another client's stream.
+    pub fn begin_round(&mut self, round: usize) -> ScenarioRound {
+        assert_eq!(
+            round, self.next_round,
+            "ScenarioEngine::begin_round must be called once per round, in order"
+        );
+        self.next_round += 1;
+        let n = self.clients();
+        let links: Vec<LinkQuality> =
+            self.links.iter_mut().map(|lp| lp.advance(round)).collect();
+        ScenarioRound {
+            round,
+            links,
+            data_scale: (0..n).map(|k| self.scenario.cohort_of(k).data_scale(round)).collect(),
+            deadline_secs: self.scenario.deadline_secs,
+            on_deadline: self.scenario.on_deadline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOML: &str = r#"
+        [scenario]
+        name = "flash-crowd"
+        seed = 42
+        deadline_secs = 40.0
+        on_deadline = "drop"
+        delta_downlink = true
+
+        [cohort.base]
+        count = 4
+        cpus = 1.0
+        mbps = 30.0
+        walk_sigma = 0.1
+
+        [cohort.crowd]
+        count = 2
+        cpus = 0.25
+        mbps = 8.0
+        arrive = 2
+        depart = 5
+        data_start = 0.5
+        data_growth = 0.5
+
+        [link.jam]
+        cohort = "base"
+        rounds = [3, 4]
+        mbps_scale = 0.25
+        add_latency_ms = 40.0
+    "#;
+
+    #[test]
+    fn parses_cohorts_links_and_semantics() {
+        let sc = Scenario::parse(TOML).unwrap();
+        assert_eq!(sc.name, "flash-crowd");
+        assert_eq!(sc.total_clients(), 6);
+        assert_eq!(sc.on_deadline, DeadlinePolicy::Drop);
+        assert_eq!(sc.deadline_secs, Some(40.0));
+        assert!(sc.delta_downlink);
+        // cohorts enumerate in name order: base, crowd
+        assert_eq!(sc.cohorts[0].name, "base");
+        assert_eq!(sc.cohorts[1].arrive, 2);
+        assert_eq!(sc.links[0].cohort.as_deref(), Some("base"));
+        assert_eq!((sc.links[0].from, sc.links[0].until), (3, 4));
+    }
+
+    #[test]
+    fn churn_schedule_is_pure() {
+        let sc = Scenario::parse(TOML).unwrap();
+        // base cohort (clients 0..4) always active; crowd (4..6) in [2, 5)
+        for r in 0..7 {
+            assert!(sc.active_at(0, r));
+            assert_eq!(sc.active_at(4, r), (2..5).contains(&r), "round {r}");
+        }
+        let p = sc.initial_profiles();
+        assert_eq!(p.len(), 6);
+        assert_eq!(p[0].cpus, 1.0);
+        assert_eq!(p[5].cpus, 0.25);
+    }
+
+    #[test]
+    fn data_growth_ramps_and_clamps() {
+        let sc = Scenario::parse(TOML).unwrap();
+        let c = &sc.cohorts[1];
+        assert!((c.data_scale(2) - 0.5).abs() < 1e-12, "start fraction at arrival");
+        assert!((c.data_scale(3) - 0.75).abs() < 1e-12);
+        assert_eq!(c.data_scale(10), 1.0, "growth clamps at the full shard");
+    }
+
+    #[test]
+    fn engine_rounds_are_deterministic_and_ordered() {
+        let sc = Scenario::parse(TOML).unwrap();
+        let run = || {
+            let mut e = ScenarioEngine::new(sc.clone()).unwrap();
+            (0..6).map(|r| e.begin_round(r)).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.links, rb.links, "round {}: link state must be reproducible", ra.round);
+            assert_eq!(ra.data_scale, rb.data_scale);
+        }
+        // the jam window hits cohort 'base' only, rounds 3..=4
+        assert!(a[3].links[0].mbps < a[2].links[0].mbps * 0.5, "jam degrades base");
+        assert!((a[3].links[4].latency_secs - 0.0).abs() < 1e-12, "crowd unaffected");
+    }
+
+    #[test]
+    fn begin_round_enforces_order() {
+        let sc = Scenario::parse(TOML).unwrap();
+        let mut e = ScenarioEngine::new(sc).unwrap();
+        let _ = e.begin_round(0);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| e.begin_round(5)));
+        assert!(res.is_err(), "skipping rounds must panic");
+    }
+
+    #[test]
+    fn deadline_policies() {
+        let mk = |policy| ScenarioRound {
+            round: 0,
+            links: vec![LinkQuality { mbps: 30.0, latency_secs: 0.0 }],
+            data_scale: vec![1.0],
+            deadline_secs: Some(5.0),
+            on_deadline: policy,
+        };
+        let slow = ClientRoundTime { compute: 7.0, comm: 1.0, server: 0.0 };
+        let fast = ClientRoundTime { compute: 1.0, comm: 1.0, server: 0.0 };
+
+        let sr = mk(DeadlinePolicy::Drop);
+        let mut t = fast;
+        assert_eq!(sr.check_deadline(&mut t), Straggle::None);
+        assert_eq!(t, fast, "fast client untouched");
+        let mut t = slow;
+        assert_eq!(sr.check_deadline(&mut t), Straggle::Dropped);
+        assert!((t.total() - 5.0).abs() < 1e-12, "dropped client capped at deadline");
+
+        let sr = mk(DeadlinePolicy::Wait);
+        let mut t = slow;
+        assert_eq!(sr.check_deadline(&mut t), Straggle::Waited);
+        assert_eq!(t, slow, "waited client keeps its full time");
+
+        // dead link: infinite comm time still resolves to a drop
+        let sr = mk(DeadlinePolicy::Drop);
+        let mut t = ClientRoundTime { compute: 1.0, comm: f64::INFINITY, server: 0.0 };
+        assert_eq!(sr.check_deadline(&mut t), Straggle::Dropped);
+        assert!(t.total().is_finite());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let bad = |patch: &str, with: &str| {
+            let text = TOML.replace(patch, with);
+            assert!(Scenario::parse(&text).is_err(), "{patch} -> {with} must be rejected");
+        };
+        bad("count = 4", "count = 0");
+        bad("cpus = 0.25", "cpus = 0.0");
+        bad("on_deadline = \"drop\"", "on_deadline = \"retry\"");
+        bad("deadline_secs = 40.0", "deadline_secs = -1.0");
+        bad("arrive = 2\n        depart = 5", "arrive = 5\n        depart = 5");
+        bad("cohort = \"base\"", "cohort = \"ghost\"");
+        bad("rounds = [3, 4]", "rounds = [4, 3]");
+        bad("mbps_scale = 0.25", "mbps_scale = 0.0");
+    }
+}

@@ -1,8 +1,10 @@
 //! Mini-TOML parser for experiment configs (offline testbed — no `toml`).
 //!
-//! Supports the subset `configs/*.toml` uses: `[section]` headers (one
-//! level, dotted names kept verbatim), `key = value` with strings, bools,
-//! integers, floats, and `#` comments. Values are exposed through typed
+//! Supports the subset `configs/*.toml` and `scenarios/*.toml` use:
+//! `[section]` headers (one level, dotted names kept verbatim — scenario
+//! files enumerate them via [`TomlDoc::sections_with_prefix`]), `key =
+//! value` with strings, bools, integers, floats, single-line scalar arrays
+//! (`rounds = [5, 8]`), and `#` comments. Values are exposed through typed
 //! getters with defaults.
 
 use std::collections::BTreeMap;
@@ -15,6 +17,8 @@ pub enum TomlValue {
     Bool(bool),
     Int(i64),
     Float(f64),
+    /// Single-line array of scalar values (no nesting).
+    Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
@@ -44,6 +48,13 @@ impl TomlValue {
         match self {
             TomlValue::Int(v) if *v >= 0 => Ok(*v as usize),
             _ => bail!("expected non-negative integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(vs) => Ok(vs),
+            _ => bail!("expected array, got {self:?}"),
         }
     }
 }
@@ -94,6 +105,22 @@ impl TomlDoc {
 
     pub fn has_section(&self, name: &str) -> bool {
         self.sections.contains_key(name)
+    }
+
+    /// Every section whose name starts with `prefix`, as `(suffix,
+    /// accessor)` pairs. Ordering is the sections' lexicographic name order
+    /// (the backing map is a `BTreeMap`), so repeated-table formats that
+    /// enumerate e.g. `[cohort.*]` are deterministic regardless of the
+    /// declaration order in the file.
+    pub fn sections_with_prefix<'a>(&'a self, prefix: &str) -> Vec<(&'a str, Section<'a>)> {
+        self.sections
+            .keys()
+            .filter_map(|name| {
+                name.strip_prefix(prefix)
+                    .filter(|s| !s.is_empty())
+                    .map(|suffix| (suffix, self.section(name)))
+            })
+            .collect()
     }
 }
 
@@ -158,6 +185,21 @@ impl Section<'_> {
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         Ok(self.usize_or(key, default as usize)? as u64)
     }
+
+    /// Optional two-element non-negative integer array, e.g. an inclusive
+    /// round window `rounds = [5, 8]`.
+    pub fn opt_usize_pair(&self, key: &str) -> Result<Option<(usize, usize)>> {
+        let Some(v) = self.get(key) else { return Ok(None) };
+        let arr = v.as_arr()?;
+        crate::anyhow::ensure!(
+            arr.len() == 2,
+            "[{}] '{}' must be a 2-element array, got {} elements",
+            self.name,
+            key,
+            arr.len()
+        );
+        Ok(Some((arr[0].as_usize()?, arr[1].as_usize()?)))
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -176,6 +218,25 @@ fn strip_comment(line: &str) -> &str {
 
 fn parse_value(text: &str) -> Result<TomlValue> {
     crate::anyhow::ensure!(!text.is_empty(), "empty value");
+    if let Some(stripped) = text.strip_prefix('[') {
+        let inner = stripped
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array: {text}"))?
+            .trim();
+        crate::anyhow::ensure!(
+            !inner.contains(['[', ']']),
+            "nested arrays unsupported: {text}"
+        );
+        let items = if inner.is_empty() {
+            Vec::new()
+        } else {
+            inner
+                .split(',')
+                .map(|e| parse_value(e.trim()))
+                .collect::<Result<Vec<_>>>()?
+        };
+        return Ok(TomlValue::Arr(items));
+    }
     if let Some(stripped) = text.strip_prefix('"') {
         let inner = stripped
             .strip_suffix('"')
@@ -261,5 +322,33 @@ mod tests {
     fn underscored_integers() {
         let d = TomlDoc::parse("n = 10_000\n").unwrap();
         assert_eq!(d.section("").usize_or("n", 0).unwrap(), 10_000);
+    }
+
+    #[test]
+    fn scalar_arrays_parse() {
+        let d = TomlDoc::parse("w = [5, 8]\nempty = []\nf = [0.5, 1.5, 2]\n").unwrap();
+        let s = d.section("");
+        assert_eq!(s.opt_usize_pair("w").unwrap(), Some((5, 8)));
+        assert_eq!(s.opt_usize_pair("absent").unwrap(), None);
+        assert!(s.opt_usize_pair("f").is_err(), "3-element pair must be rejected");
+        let f = d.sections.get("").unwrap().get("f").unwrap().as_arr().unwrap();
+        assert_eq!(f.len(), 3);
+        assert!((f[2].as_f64().unwrap() - 2.0).abs() < 1e-12);
+        assert!(d.sections.get("").unwrap().get("empty").unwrap().as_arr().unwrap().is_empty());
+        assert!(TomlDoc::parse("x = [1, 2\n").is_err(), "unterminated array rejected");
+        assert!(TomlDoc::parse("x = [[1], 2]\n").is_err(), "nested arrays rejected");
+    }
+
+    #[test]
+    fn sections_with_prefix_enumerates_in_name_order() {
+        let d = TomlDoc::parse(
+            "[cohort.zeta]\ncount = 1\n[cohort.alpha]\ncount = 2\n[link.jam]\nmbps_scale = 0.5\n",
+        )
+        .unwrap();
+        let cohorts = d.sections_with_prefix("cohort.");
+        let names: Vec<&str> = cohorts.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, vec!["alpha", "zeta"], "BTreeMap order is lexicographic");
+        assert_eq!(cohorts[0].1.usize_or("count", 0).unwrap(), 2);
+        assert_eq!(d.sections_with_prefix("nope.").len(), 0);
     }
 }

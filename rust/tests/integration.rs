@@ -312,6 +312,8 @@ fn pipelined_empty_round_carries_global_over() {
         pipeline_depth: 4, // pipelined engine: prefetch + buffered flush on
         agg_shards: 0,
         next_participants: Some(&next),
+        scenario: None,
+        downlink: None,
     };
     let out = dtfl.round(&mut env).unwrap();
     assert!(out.times.is_empty() && out.tiers.is_empty());

@@ -134,7 +134,7 @@ fn bench_round_smoke_writes_hotpath_json() {
 
     use dtfl::harness::{
         kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
-        measure_pipeline_throughput, measure_round_throughput,
+        measure_pipeline_throughput, measure_round_throughput, measure_scenario_throughput,
     };
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
 
@@ -147,6 +147,15 @@ fn bench_round_smoke_writes_hotpath_json() {
     let ft = measure_fused_throughput(50, 1, 8).expect("fused throughput probe");
     assert!(ft.bit_identical, "K=50 fused round must match unfused bits");
 
+    let st = measure_scenario_throughput(4).expect("scenario throughput probe");
+    assert!(st.bit_identical, "delta downlink must not change FedAvg parameter bits");
+    assert!(
+        st.fedavg_delta_bytes < st.fedavg_full_bytes,
+        "delta broadcast must save bytes ({} vs {})",
+        st.fedavg_delta_bytes,
+        st.fedavg_full_bytes
+    );
+
     let (kernels, arena_peak) =
         measure_kernel_throughput(Duration::from_millis(150)).expect("kernel throughput probe");
     assert!(arena_peak > 0, "full_step must exercise the scratch arena");
@@ -158,6 +167,7 @@ fn bench_round_smoke_writes_hotpath_json() {
     report.extra("bench_round", rt.to_json(source));
     report.extra("pipeline", pt.to_json(source));
     report.extra("fused", ft.to_json(&[], source));
+    report.extra("scenario", st.to_json(source));
     report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

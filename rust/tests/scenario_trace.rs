@@ -1,0 +1,263 @@
+//! Golden scenario trace: the determinism contract extended to scenario
+//! mode.
+//!
+//! With a scenario active — churn, seeded link drift, deadlines, and
+//! delta-compressed downlink all exercised at once — every engine
+//! configuration in the `{threads, intra_threads, pipeline_depth,
+//! agg_shards, fuse_forward}` grid must reproduce the sequential barrier
+//! engine's trace **byte for byte**, including the scenario-specific
+//! channels (per-round wire bytes and straggler sets). The scenario is
+//! constructed so the straggler pattern is *guaranteed* (one cohort's link
+//! is slow enough that no tier assignment can beat the deadline), so the
+//! test also asserts the semantics carry real signal: churn changes the
+//! participant count and the dead-slow cohort is dropped every round it
+//! attends.
+//!
+//! The CI determinism matrix injects extra thread counts per leg via
+//! `DTFL_TEST_THREADS` (1/2/8), exactly like `tests/golden_trace.rs`.
+
+use dtfl::experiment::Experiment;
+use dtfl::harness::{RunSpec, FLASH_CROWD_TOML};
+use dtfl::metrics::RoundRecord;
+use dtfl::simulation::{CohortSpec, DeadlinePolicy, LinkEventSpec, Scenario};
+
+/// One round of the trace, everything reduced to exact bit patterns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct TraceRow {
+    round: usize,
+    sim_time: u64,
+    makespan: u64,
+    train_loss: u64,
+    test_accuracy: Option<u64>,
+    tiers: Vec<usize>,
+    wire_bytes: u64,
+    straggled: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Trace {
+    rows: Vec<TraceRow>,
+    params: Vec<u32>,
+}
+
+fn trace_of(records: &[RoundRecord], params: &[f32]) -> Trace {
+    Trace {
+        rows: records
+            .iter()
+            .map(|r| TraceRow {
+                round: r.round,
+                sim_time: r.sim_time.to_bits(),
+                makespan: r.makespan.to_bits(),
+                train_loss: r.train_loss.to_bits(),
+                test_accuracy: r.test_accuracy.map(f64::to_bits),
+                tiers: r.tiers.clone(),
+                wire_bytes: r.wire_bytes,
+                straggled: r.straggled,
+            })
+            .collect(),
+        params: params.iter().map(|p| p.to_bits()).collect(),
+    }
+}
+
+/// Churn + drift + deadline + delta downlink, with a *guaranteed* straggler
+/// pattern: the "crowd" cohort's 0.02 Mbps link cannot move any tier's
+/// transfer inside the 2 s deadline (the smallest per-tier payload of the
+/// tiny artifact is tens of KB ⇒ > 4 s on the wire), while the "core"
+/// cohort stays far under it even through the jam window.
+fn drop_scenario() -> Scenario {
+    let mut core = CohortSpec::new("core", 4, 1.0, 30.0);
+    core.walk_sigma = 0.1;
+    core.latency_ms = 5.0;
+    core.floor_mbps = 10.0;
+    let mut crowd = CohortSpec::new("crowd", 2, 0.25, 0.02);
+    crowd.arrive = 1;
+    crowd.depart = Some(4);
+    crowd.data_start = 0.5;
+    crowd.data_growth = 0.5;
+    crowd.floor_mbps = 0.01;
+    crowd.latency_ms = 50.0;
+    let jam = LinkEventSpec {
+        name: "jam".into(),
+        cohort: Some("core".into()),
+        from: 2,
+        until: 3,
+        mbps_scale: 0.5,
+        add_latency_ms: 10.0,
+    };
+    Scenario {
+        name: "golden-drop".into(),
+        seed: 7,
+        deadline_secs: Some(2.0),
+        on_deadline: DeadlinePolicy::Drop,
+        delta_downlink: true,
+        cohorts: vec![core, crowd],
+        links: vec![jam],
+    }
+}
+
+/// Engine configuration under test.
+#[derive(Debug, Clone, Copy)]
+struct Knobs {
+    threads: usize,
+    intra: usize,
+    depth: usize,
+    shards: usize,
+    fuse: bool,
+}
+
+const REFERENCE: Knobs = Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: false };
+
+fn run(method: &str, scenario: Scenario, rounds: usize, k: Knobs) -> Trace {
+    let spec = RunSpec {
+        method: method.into(),
+        clients: scenario.total_clients(),
+        rounds,
+        batch_cap: Some(1),
+        train_total: 96,
+        test_total: 32,
+        eval_every: 1,
+        threads: k.threads,
+        intra_threads: k.intra,
+        pipeline_depth: k.depth,
+        agg_shards: k.shards,
+        fuse_forward: k.fuse,
+        scenario: Some(scenario),
+        ..Default::default()
+    };
+    let mut exp = Experiment::new(spec.to_config()).expect("scenario experiment");
+    let mut records = Vec::new();
+    exp.run_with(|r| records.push(r.clone())).expect("scenario run");
+    trace_of(&records, exp.method.global_params())
+}
+
+/// Extra thread count injected by the CI determinism matrix.
+fn env_threads() -> Option<usize> {
+    std::env::var("DTFL_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+}
+
+fn grid() -> Vec<Knobs> {
+    let mut g = vec![
+        // fusion alone against the unfused sequential reference
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true },
+        // pipelining/sharding alone, sequential pool
+        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false },
+        // the default engine (parallel pool, pipelined, auto shards, fused)
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
+        // everything composed, including intra-step kernel splits
+        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true },
+    ];
+    if let Some(n) = env_threads() {
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false });
+    }
+    g
+}
+
+fn assert_knob_invariant(method: &str, scenario: &Scenario, rounds: usize) -> Trace {
+    let golden = run(method, scenario.clone(), rounds, REFERENCE);
+    assert!(!golden.rows.is_empty(), "{method}: empty scenario trace");
+    for k in grid() {
+        let t = run(method, scenario.clone(), rounds, k);
+        assert_eq!(
+            golden.rows, t.rows,
+            "{method} {k:?}: scenario trace diverged from the sequential barrier engine"
+        );
+        assert_eq!(golden.params, t.params, "{method} {k:?}: global param bits diverged");
+    }
+    golden
+}
+
+#[test]
+fn dtfl_scenario_trace_is_knob_invariant_with_guaranteed_straggles() {
+    let sc = drop_scenario();
+    let golden = assert_knob_invariant("dtfl", &sc, 5);
+
+    // churn signal: crowd (2 clients) attends rounds 1..=3 only
+    let expect_n = [4usize, 6, 6, 6, 4];
+    for (r, row) in golden.rows.iter().enumerate() {
+        assert_eq!(
+            row.tiers.len(),
+            expect_n[r],
+            "round {r}: participant count must follow the churn schedule"
+        );
+        assert!(row.wire_bytes > 0, "round {r}: wire bytes must be accounted");
+        // deadline signal: exactly the crowd misses, every round it attends
+        let expect_straggled = if (1..=3).contains(&r) { 2 } else { 0 };
+        assert_eq!(
+            row.straggled, expect_straggled,
+            "round {r}: the dead-slow cohort must be dropped, and only it"
+        );
+    }
+    // dropped clients are capped at the deadline, which the core cohort
+    // never reaches — so crowd rounds' makespans are exactly the deadline
+    for r in 1..=3 {
+        assert_eq!(
+            f64::from_bits(golden.rows[r].makespan),
+            2.0,
+            "round {r}: makespan must be the deadline (server stops waiting)"
+        );
+    }
+    assert!(f64::from_bits(golden.rows[0].makespan) < 2.0, "round 0 is drop-free");
+}
+
+#[test]
+fn fedavg_scenario_trace_is_knob_invariant() {
+    let sc = drop_scenario();
+    let golden = assert_knob_invariant("fedavg", &sc, 4);
+    // whole-model baseline under the same scenario: crowd still can't move
+    // a ~44 KP model over a 0.02 Mbps link inside 2 s
+    assert_eq!(golden.rows[1].straggled, 2);
+    assert!(golden.rows.iter().all(|r| r.tiers.is_empty()), "fedavg records no tiers");
+}
+
+#[test]
+fn wait_policy_keeps_updates_and_full_makespan() {
+    let mut sc = drop_scenario();
+    sc.on_deadline = DeadlinePolicy::Wait;
+    let golden = assert_knob_invariant("dtfl", &sc, 3);
+    // stragglers are still marked...
+    assert_eq!(golden.rows[1].straggled, 2);
+    // ...but the server waits them out: the makespan blows past the
+    // deadline instead of being capped at it
+    assert!(f64::from_bits(golden.rows[1].makespan) > 2.0);
+
+    // and the kept updates must change training: same scenario under
+    // drop vs wait diverges from round 1 on
+    let dropped = run("dtfl", drop_scenario(), 3, REFERENCE);
+    assert_ne!(
+        golden.params, dropped.params,
+        "wait must aggregate the straggler updates that drop discards"
+    );
+}
+
+#[test]
+fn committed_flash_crowd_scenario_runs_and_is_knob_invariant() {
+    // the committed example/bench scenario parses and holds the same
+    // determinism contract (lighter grid — this one runs 10 clients)
+    let sc = Scenario::parse(FLASH_CROWD_TOML).expect("committed scenario parses");
+    assert_eq!(sc.total_clients(), 10);
+    assert!(sc.delta_downlink && sc.deadline_secs.is_some());
+    let golden = run("dtfl", sc.clone(), 4, REFERENCE);
+    for k in [
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
+        Knobs { threads: 2, intra: 1, depth: 8, shards: 3, fuse: false },
+    ] {
+        let t = run("dtfl", sc.clone(), 4, k);
+        assert_eq!(golden.rows, t.rows, "{k:?}: flash-crowd trace diverged");
+        assert_eq!(golden.params, t.params, "{k:?}: flash-crowd params diverged");
+    }
+    // flash cohort arrives at round 3: participant count grows
+    assert_eq!(golden.rows[0].tiers.len(), 6);
+    assert_eq!(golden.rows[3].tiers.len(), 10);
+}
+
+#[test]
+fn scenario_off_is_the_legacy_driver() {
+    // belt and braces next to tests/golden_trace.rs: the same RunSpec with
+    // and without `scenario: None` is literally the same config object
+    let spec = RunSpec { clients: 6, rounds: 2, ..Default::default() };
+    assert!(spec.to_config().scenario.is_none());
+}
