@@ -27,7 +27,8 @@ use dtfl::coordinator::{
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
 use dtfl::harness::{
     kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
-    measure_pipeline_throughput, measure_round_throughput, measure_scenario_throughput,
+    measure_pipeline_throughput, measure_robustness_throughput, measure_round_throughput,
+    measure_scenario_throughput,
 };
 use dtfl::runtime::kernels::tune;
 use dtfl::runtime::{literal as lit, Metadata};
@@ -135,6 +136,30 @@ fn bench_scenario(report: &mut BenchReport, rounds: usize) {
         100.0 * st.bytes_saved_ratio()
     );
     report.extra("scenario", st.to_json("cargo bench micro_hotpath"));
+}
+
+/// Robustness probe: robust-fold bandwidth vs the plain sharded mean, plus
+/// the committed `scenarios/byzantine_flaky.toml` run under a plain vs a
+/// trimmed-mean fold (shared probe in
+/// `harness::measure_robustness_throughput`).
+fn bench_robustness(report: &mut BenchReport, clients: usize, rounds: usize) {
+    section(&format!("bench_robustness: K={clients} robust folds + byzantine-flaky scenario"));
+    let rb = measure_robustness_throughput(clients, rounds, Duration::from_millis(400))
+        .expect("robustness probe");
+    println!(
+        "fold K={} P={}: plain {:.2} GB/s, trimmed-mean {:.2} GB/s, median {:.2} GB/s",
+        rb.clients, rb.params, rb.plain_gb_per_sec, rb.trimmed_gb_per_sec, rb.median_gb_per_sec
+    );
+    println!(
+        "{}: K={} sim {:.1}s over {} rounds ({:.2}s mean makespan, {} quarantined, {} retries)",
+        rb.scenario, rb.scenario_clients, rb.sim_secs, rb.rounds, rb.mean_makespan_secs,
+        rb.quarantined, rb.retries
+    );
+    println!(
+        "final train loss: mean fold {:.4} vs trimmed fold {:.4}",
+        rb.mean_final_train_loss, rb.trimmed_final_train_loss
+    );
+    report.extra("robustness", rb.to_json("cargo bench micro_hotpath"));
 }
 
 /// Round-throughput comparison: K clients, 1 thread vs all cores (shared
@@ -291,6 +316,9 @@ fn main() {
 
     // ---------------- scenario engine + delta downlink ----------------
     bench_scenario(&mut report, 8);
+
+    // ---------------- fault injection + robust aggregation ----------------
+    bench_robustness(&mut report, 50, 6);
 
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

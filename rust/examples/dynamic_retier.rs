@@ -67,6 +67,7 @@ fn main() -> dtfl::anyhow::Result<()> {
                 next_participants: None,
                 scenario: None,
                 downlink: None,
+                fold: dtfl::coordinator::FoldStrategy::Mean,
             };
             dtfl.round(&mut env)?
         };

@@ -10,8 +10,9 @@
 //! ever sees a partially reduced vector.
 
 use crate::anyhow::Result;
-use crate::coordinator::aggregate::fold_whole;
+use crate::coordinator::aggregate::{fold_whole, robust_fold_whole};
 use crate::coordinator::parallel::{for_each_streamed_windowed, resolve_shards};
+use crate::coordinator::FoldStrategy;
 use crate::fed::{PoolTask, RoundEnv, RoundOutcome};
 use crate::runtime::{StepEngine, TrainState};
 use crate::simulation::ClientRoundTime;
@@ -61,18 +62,28 @@ pub fn local_full_train(
 /// on the returned outcome. Without a scenario this is bit-for-bit the
 /// legacy round.
 ///
+/// Fault hooks (scenario mode; all-clear without one): crashed clients run
+/// no work and report no time; Byzantine clients' trained vectors are
+/// poisoned before upload (`corrupt_mode`); flaky uplinks charge each
+/// retried attempt of `up_bytes` plus exponential backoff in simulated time
+/// (and count the resends on the wire), and an update whose every attempt
+/// failed is lost; non-finite updates are quarantined in the sink instead
+/// of reaching the fold. `env.fold` selects the combine rule ([`FoldStrategy`]).
+///
 /// Returns the (unfinished) accumulator and the round outcome with
 /// `tiers` left empty (the caller fills it).
 pub fn run_full_model_round(
     env: &RoundEnv,
     global: &[f32],
     sgd: bool,
+    up_bytes: usize,
     bytes_of: impl Fn(usize) -> u64 + Sync,
     mut time_of: impl FnMut(usize, f64, u64) -> ClientRoundTime,
 ) -> Result<(WeightedAvg, RoundOutcome)> {
     let tasks = env.pool_tasks(env.participants.iter().copied());
 
-    let mut avg = WeightedAvg::with_pipeline(global.len(), env.pipeline_depth, env.agg_shards);
+    let mut avg =
+        WeightedAvg::with_strategy(global.len(), env.pipeline_depth, env.agg_shards, env.fold);
     let mut outcome = RoundOutcome::default();
     let mut loss_sum = 0.0f64;
     for_each_streamed_windowed(
@@ -81,8 +92,17 @@ pub fn run_full_model_round(
         &tasks,
         |_, task| match task {
             PoolTask::Work(k) => {
-                let (params, host, loss) = local_full_train(env, *k, global, sgd)?;
-                Ok(Some((*k, params, host, loss, bytes_of(*k))))
+                let k = *k;
+                let fault = env.fault(k);
+                if fault.crashed {
+                    // client died mid-round: no work, no observed time
+                    return Ok(None);
+                }
+                let (mut params, host, loss) = local_full_train(env, k, global, sgd)?;
+                if let Some(mode) = fault.corrupt {
+                    mode.poison(&mut params);
+                }
+                Ok(Some((k, params, host, loss, bytes_of(k))))
             }
             PoolTask::Prefetch { k, bi } => {
                 env.run_prefetch(*k, *bi)?;
@@ -93,16 +113,35 @@ pub fn run_full_model_round(
             let Some((k, params, host, loss, bytes)) = item else {
                 return Ok(());
             };
+            let fault = env.fault(k);
+            let (retry_secs, retries) = env.uplink_retry(k, up_bytes);
             let mut time = time_of(k, host, bytes);
+            time.comm += retry_secs;
+            let bytes = bytes + (retries * up_bytes) as u64;
             let straggle = env.apply_deadline(&mut time);
             outcome.times.push(time);
             outcome.wire_bytes += bytes;
+            outcome.retries += retries;
             loss_sum += loss;
             if straggle.straggled() {
                 outcome.straggled.push(k);
             }
             if straggle.dropped() {
                 return Ok(()); // deadline missed: the update never lands
+            }
+            if fault.uplink_lost {
+                return Ok(()); // every uplink attempt failed
+            }
+            if let Some(off) = params.iter().position(|v| !v.is_finite()) {
+                // graceful degradation: quarantine instead of corrupting
+                // the global model
+                outcome.quarantined += 1;
+                crate::runtime::note_quarantined_update();
+                crate::log::info!(
+                    "round {}: quarantined non-finite update from client {k} (offset {off})",
+                    env.round
+                );
+                return Ok(());
             }
             avg.fold_owned(params, env.client_weight(k))
         },
@@ -124,6 +163,10 @@ pub struct WeightedAvg {
     pending: Vec<(Vec<f32>, f32)>,
     depth: usize,
     shards: usize,
+    strategy: FoldStrategy,
+    /// Whole updates buffered for a robust (non-`Mean`) strategy — order
+    /// statistics need the full round, so O(K) memory instead of O(depth).
+    robust: Vec<(Vec<f32>, f64)>,
 }
 
 impl WeightedAvg {
@@ -135,6 +178,13 @@ impl WeightedAvg {
     /// Pipelined/sharded accumulator; `depth` clamped to ≥ 1, `shards`
     /// resolved like the engine knob (0 = one per core).
     pub fn with_pipeline(n: usize, depth: usize, shards: usize) -> Self {
+        Self::with_strategy(n, depth, shards, FoldStrategy::Mean)
+    }
+
+    /// Pipelined/sharded accumulator with an explicit combine rule. `Mean`
+    /// is the streaming path above; robust strategies buffer the round and
+    /// reduce at `finish_into` (bit-identical for every `(depth, shards)`).
+    pub fn with_strategy(n: usize, depth: usize, shards: usize, strategy: FoldStrategy) -> Self {
         Self {
             acc: vec![0.0f32; n],
             total_w: 0.0,
@@ -142,18 +192,27 @@ impl WeightedAvg {
             pending: Vec::new(),
             depth: depth.max(1),
             shards: resolve_shards(shards, n),
+            strategy,
+            robust: Vec::new(),
         }
     }
 
-    /// Shared admission: validate and apply the weight/count bookkeeping.
-    fn admit(&mut self, len: usize, w: f64) -> Result<()> {
+    /// Shared admission: validate (shape, weight, finiteness) and apply the
+    /// weight/count bookkeeping.
+    fn admit(&mut self, params: &[f32], w: f64) -> Result<()> {
         crate::anyhow::ensure!(
-            len == self.acc.len(),
+            params.len() == self.acc.len(),
             "update has {} params, accumulator {}",
-            len,
+            params.len(),
             self.acc.len()
         );
         crate::anyhow::ensure!(w > 0.0, "non-positive aggregation weight {w}");
+        if let Some(off) = params.iter().position(|v| !v.is_finite()) {
+            return Err(crate::anyhow::anyhow!(
+                "update has a non-finite value at offset {off}; refusing to fold it into the \
+                 global model (quarantine it instead)"
+            ));
+        }
         self.total_w += w;
         self.count += 1;
         Ok(())
@@ -164,17 +223,22 @@ impl WeightedAvg {
     /// path; with a pipeline it is cloned into the queue (round loops hand
     /// over ownership via [`WeightedAvg::fold_owned`] instead).
     pub fn fold(&mut self, params: &[f32], w: f64) -> Result<()> {
-        if self.depth > 1 || !self.pending.is_empty() {
+        if self.strategy.is_robust() || self.depth > 1 || !self.pending.is_empty() {
             return self.fold_owned(params.to_vec(), w);
         }
-        self.admit(params.len(), w)?;
+        self.admit(params, w)?;
         fold_whole(&mut self.acc, &[(params, w as f32)], self.shards);
         Ok(())
     }
 
-    /// Queue one owned update for the pipelined fold.
+    /// Queue one owned update for the pipelined fold (robust strategies
+    /// buffer it whole instead).
     pub fn fold_owned(&mut self, params: Vec<f32>, w: f64) -> Result<()> {
-        self.admit(params.len(), w)?;
+        self.admit(&params, w)?;
+        if self.strategy.is_robust() {
+            self.robust.push((params, w));
+            return Ok(());
+        }
         self.pending.push((params, w as f32));
         if self.pending.len() >= self.depth {
             self.flush();
@@ -199,11 +263,18 @@ impl WeightedAvg {
         self.count
     }
 
-    /// Flush and normalize into `out`.
+    /// Flush and normalize (or robust-combine) into `out`.
     pub fn finish_into(mut self, out: &mut [f32]) -> Result<()> {
         crate::anyhow::ensure!(self.count > 0, "weighted average of no updates");
         crate::anyhow::ensure!(self.total_w > 0.0, "total weight must be positive");
         self.flush();
+        if self.strategy.is_robust() {
+            crate::anyhow::ensure!(out.len() == self.acc.len(), "output length mismatch");
+            let items: Vec<(&[f32], f64)> =
+                self.robust.iter().map(|(p, w)| (p.as_slice(), *w)).collect();
+            robust_fold_whole(self.strategy, &items, out, self.shards);
+            return Ok(());
+        }
         let inv = (1.0 / self.total_w) as f32;
         for (o, a) in out.iter_mut().zip(self.acc) {
             *o = a * inv;
@@ -287,5 +358,63 @@ mod tests {
         assert!(avg.fold(&[1.0, 2.0], 0.0).is_err(), "zero weight");
         let mut out = vec![0.0f32; 2];
         assert!(WeightedAvg::new(2).finish_into(&mut out).is_err(), "no updates");
+    }
+
+    #[test]
+    fn non_finite_update_rejected_with_offset() {
+        let mut avg = WeightedAvg::new(3);
+        let err = avg.fold(&[1.0, f32::NAN, 2.0], 1.0).unwrap_err().to_string();
+        assert!(err.contains("offset 1"), "{err}");
+        assert_eq!(avg.count(), 0, "rejected update leaves no bookkeeping");
+        let err = avg.fold(&[1.0, 2.0, f32::INFINITY], 1.0).unwrap_err().to_string();
+        assert!(err.contains("offset 2"), "{err}");
+        // fold_owned takes the same gate
+        let mut avg = WeightedAvg::with_pipeline(3, 4, 2);
+        assert!(avg.fold_owned(vec![f32::NEG_INFINITY, 0.0, 0.0], 1.0).is_err());
+        assert_eq!(avg.count(), 0);
+    }
+
+    #[test]
+    fn robust_strategies_defeat_poison_and_stay_knob_invariant() {
+        let n = 64usize;
+        let mut ups: Vec<(Vec<f32>, f64)> = (0..4).map(|_| (vec![1.0f32; n], 1.0)).collect();
+        ups.push((vec![-50.0f32; n], 1.0)); // finite Byzantine update
+        for strategy in
+            [FoldStrategy::TrimmedMean, FoldStrategy::Median, FoldStrategy::NormClip]
+        {
+            let mut reference: Option<Vec<f32>> = None;
+            for depth in [1usize, 4] {
+                for shards in [1usize, 3, 0] {
+                    let mut avg = WeightedAvg::with_strategy(n, depth, shards, strategy);
+                    for (p, w) in &ups {
+                        avg.fold(p, *w).unwrap();
+                    }
+                    let mut out = vec![0.0f32; n];
+                    avg.finish_into(&mut out).unwrap();
+                    match &reference {
+                        None => reference = Some(out),
+                        Some(r) => assert_eq!(
+                            r,
+                            &out,
+                            "{} depth={depth} shards={shards}",
+                            strategy.name()
+                        ),
+                    }
+                }
+            }
+            let out = reference.unwrap();
+            match strategy {
+                // trim/median land on the honest value exactly
+                FoldStrategy::TrimmedMean | FoldStrategy::Median => {
+                    assert!(out.iter().all(|&v| (v - 1.0).abs() < 1e-6), "{}", strategy.name());
+                }
+                // norm clip caps the attacker at the honest norm: the -50
+                // vector shrinks to -1, so the mean is (4·1 - 1)/5 = 0.6
+                FoldStrategy::NormClip => {
+                    assert!(out.iter().all(|&v| (v - 0.6).abs() < 1e-2), "{}", strategy.name());
+                }
+                FoldStrategy::Mean => unreachable!(),
+            }
+        }
     }
 }

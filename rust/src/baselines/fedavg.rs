@@ -40,6 +40,8 @@ impl Method for FedAvg {
             env,
             global,
             false,
+            // retried uplink attempts re-send the whole model
+            full,
             // scenario hooks: the download leg is delta-sized vs the
             // client's last-seen snapshot (computed on worker threads — a
             // full-model scan), and the link may vary per round

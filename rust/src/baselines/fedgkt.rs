@@ -50,6 +50,10 @@ struct GktBundle {
     time: ClientRoundTime,
     loss: f64,
     bytes: u64,
+    /// Failed uplink attempts (charged in simulated time + wire bytes).
+    retries: usize,
+    /// Every uplink attempt failed: time spent, update never delivered.
+    lost: bool,
 }
 
 impl Method for FedGkt {
@@ -67,11 +71,13 @@ impl Method for FedGkt {
 
         let tasks = env.pool_tasks(env.participants.iter().copied());
 
-        let mut agg = Aggregator::with_pipeline(meta, env.pipeline_depth, env.agg_shards);
+        let mut agg = Aggregator::with_strategy(meta, env.pipeline_depth, env.agg_shards, env.fold);
         let mut times = Vec::with_capacity(env.participants.len());
         let mut loss_sum = 0.0f64;
         let mut wire_bytes = 0u64;
         let mut straggled = Vec::new();
+        let mut quarantined = 0usize;
+        let mut retries = 0usize;
         for_each_streamed_windowed(
             env.threads,
             env.pipeline_depth.saturating_sub(1),
@@ -84,6 +90,11 @@ impl Method for FedGkt {
                         return Ok(None);
                     }
                 };
+                let fault = env.fault(k);
+                if fault.crashed {
+                    // client died mid-round: no work, no observed time
+                    return Ok(None);
+                }
                 let rt = env.rt;
                 let engine = StepEngine::new(rt);
                 let tmeta = meta.tier(tier);
@@ -112,6 +123,12 @@ impl Method for FedGkt {
                     }
                 }
 
+                // Byzantine cohorts poison the trained halves before upload
+                if let Some(mode) = fault.corrupt {
+                    mode.poison(&mut cstate.params);
+                    mode.poison(&mut sstate.params);
+                }
+
                 // timing: features up + soft labels both ways + client model
                 // sync (download delta-sized vs the last-seen cut prefix in
                 // scenario mode; the link itself may vary per round)
@@ -123,7 +140,11 @@ impl Method for FedGkt {
                 let bytes = down + up + nb * (tmeta.z_bytes_per_batch + 2 * logit_bytes);
                 let sim_c = profile.compute_secs(host_client);
                 let sim_s = env.server.secs(host_server) / env.server.parallel_factor.max(1.0);
-                let sim_com = env.comm_secs(k, bytes);
+                // flaky uplink: each failed attempt re-sends the model
+                // upload leg and waits an exponential backoff
+                let (retry_secs, retries) = env.uplink_retry(k, up);
+                let sim_com = env.comm_secs(k, bytes) + retry_secs;
+                let bytes = bytes + retries * up;
 
                 Ok(Some(GktBundle {
                     update: ClientUpdate {
@@ -136,6 +157,8 @@ impl Method for FedGkt {
                     time: ClientRoundTime { compute: sim_c, comm: sim_com, server: sim_s },
                     loss,
                     bytes: bytes as u64,
+                    retries,
+                    lost: fault.uplink_lost,
                 }))
             },
             |_, b: Option<GktBundle>| {
@@ -144,11 +167,26 @@ impl Method for FedGkt {
                 times.push(b.time);
                 loss_sum += b.loss;
                 wire_bytes += b.bytes;
+                retries += b.retries;
                 if straggle.straggled() {
                     straggled.push(b.update.client_id);
                 }
                 if straggle.dropped() {
                     return Ok(()); // deadline missed: the update never lands
+                }
+                if b.lost {
+                    return Ok(()); // every uplink attempt failed
+                }
+                if let Some(off) = b.update.first_non_finite() {
+                    // quarantine: a non-finite update never reaches the fold
+                    quarantined += 1;
+                    crate::runtime::note_quarantined_update();
+                    crate::log::info!(
+                        "round {}: quarantined non-finite update from client {} (flat offset {off})",
+                        env.round,
+                        b.update.client_id
+                    );
+                    return Ok(());
                 }
                 agg.fold_owned(b.update)
             },
@@ -157,12 +195,20 @@ impl Method for FedGkt {
         let train_loss = loss_sum / env.participants.len().max(1) as f64;
         let tiers = vec![tier; times.len()];
         if agg.count() == 0 {
-            let out = RoundOutcome { times, train_loss, tiers, wire_bytes, straggled };
+            let out = RoundOutcome {
+                times,
+                train_loss,
+                tiers,
+                wire_bytes,
+                straggled,
+                quarantined,
+                retries,
+            };
             return Ok(out.with_no_update(env.round));
         }
         agg.finish_into(&self.global, &mut self.back)?;
         std::mem::swap(&mut self.global, &mut self.back);
-        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled })
+        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled, quarantined, retries })
     }
 
     fn global_params(&self) -> &[f32] {

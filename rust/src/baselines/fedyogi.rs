@@ -60,6 +60,8 @@ impl Method for FedYogi {
             env,
             global,
             true,
+            // retried uplink attempts re-send the whole model
+            full,
             |k| (env.downlink_bytes(k, full, global) + full) as u64,
             |k, host, bytes| {
                 let profile = env.profiles[k];

@@ -59,10 +59,13 @@ impl Method for SplitFed {
             (t.client_param_len as f64 / meta.total_params as f64).max(0.15);
 
         let global = &self.global;
+        // retried uplink attempts re-send the client-side model upload leg
+        let up_leg = t.model_transfer_bytes - t.model_transfer_bytes / 2;
         let (avg, mut outcome) = run_full_model_round(
             env,
             global,
             false,
+            up_leg,
             // z and grad(z) have identical size; model down+up once per
             // round (download delta-sized vs the last-seen cut prefix in
             // scenario mode — a prefix scan, so it runs on worker threads)

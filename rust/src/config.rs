@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use crate::anyhow::{Context, Result};
 
+use crate::coordinator::FoldStrategy;
 use crate::simulation::{ProfilePool, Scenario};
 use crate::util::toml_mini::TomlDoc;
 
@@ -97,6 +98,11 @@ pub struct RunCfg {
     /// runtime should use the same setting — results cannot depend on it
     /// either way.
     pub fuse_forward: bool,
+    /// Server-side aggregation rule: mean (default) | trimmed_mean |
+    /// median | norm_clip. The robust folds tolerate Byzantine cohorts at
+    /// the price of buffering whole updates; all are bit-identical across
+    /// the `{threads, intra, depth, shards, fuse}` grid.
+    pub fold: FoldStrategy,
 }
 
 #[derive(Debug, Clone)]
@@ -245,6 +251,8 @@ impl ExperimentConfig {
                 pipeline_depth: s.usize_or("pipeline_depth", 4)?,
                 agg_shards: s.usize_or("agg_shards", 0)?,
                 fuse_forward: s.bool_or("fuse_forward", true)?,
+                fold: FoldStrategy::from_name(&s.str_or("fold", "mean")?)
+                    .context("in [run] fold")?,
             }
         };
         let sim = {
@@ -351,6 +359,7 @@ mod tests {
         assert_eq!(cfg.run.pipeline_depth, 4, "pipelined aggregation defaults on");
         assert_eq!(cfg.run.agg_shards, 0, "sharded aggregation defaults to one per core");
         assert!(cfg.run.fuse_forward, "fused forward path defaults on");
+        assert_eq!(cfg.run.fold, FoldStrategy::Mean, "aggregation defaults to plain weighted mean");
         assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
         assert!(cfg.privacy.dcor_alpha.is_none());
         assert!(cfg.output.is_none());
@@ -416,6 +425,17 @@ mod tests {
         assert_eq!(cfg.sim.profile_switch_every, 50);
         assert_eq!(cfg.output.as_ref().unwrap().dir, PathBuf::from("results"));
         assert_eq!(cfg.clients.profile_pool, crate::simulation::ProfilePool::Case1);
+    }
+
+    #[test]
+    fn fold_strategy_parses_and_rejects_unknown_names() {
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nfold = \"trimmed_mean\"");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(cfg.run.fold, FoldStrategy::TrimmedMean);
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nfold = \"krum\"");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("krum"), "error names the offender: {err}");
+        assert!(err.contains("trimmed_mean"), "error lists the menu: {err}");
     }
 
     #[test]

@@ -34,12 +34,89 @@
 //! the front, aggregation streams into the back, one swap publishes), also
 //! sharded. The inner loops are chunked, bounds-check-free axpy that
 //! autovectorizes.
+//!
+//! ## Byzantine-robust folds
+//!
+//! [`FoldStrategy`] selects how the round's updates combine. `Mean` is the
+//! streaming weighted average above, untouched. The robust strategies
+//! (`TrimmedMean`, `Median`, `NormClip`) are order statistics over the full
+//! update set, so they buffer the round's updates whole (O(K) memory
+//! instead of O(depth)) and reduce at `finish_into`:
+//!
+//! * **coordinate-wise trimmed mean** — per flat element, sort the K
+//!   contributions ([`f32::total_cmp`], stable, so ties keep participant
+//!   order), drop `ceil(0.2 K)` from each end, weighted-mean the rest;
+//! * **coordinate-wise weighted median** — the value where the cumulative
+//!   weight crosses half the total mass;
+//! * **norm-clipped mean** — each update's flat vector is scaled down to
+//!   the fleet's weighted-median L2 norm before the usual weighted mean
+//!   (magnitude attacks neutralized, direction preserved).
+//!
+//! All three keep the pinned per-element reduction order: every element is
+//! computed by exactly one shard from the same sorted gather (or the same
+//! fold order), so sharded robust folds are bit-identical to serial ones.
+//! Aux heads always use the plain weighted mean — they are tier-local and
+//! never cross tiers, so coordinate-wise statistics across the fleet do
+//! not apply.
+//!
+//! Non-finite updates are rejected at admission with the client id and the
+//! first bad flat offset (the round engines' sinks quarantine such updates
+//! *before* folding — see `RuntimeStats::quarantined_updates`).
 
 use crate::anyhow::Result;
 use crate::runtime::Metadata;
 
 use super::model_state::{ClientUpdate, GlobalModel};
 use super::parallel::{join_scoped, resolve_shards, shard_chunks};
+
+/// Fraction trimmed from EACH end of the per-coordinate sort by
+/// [`FoldStrategy::TrimmedMean`] (`ceil(0.2 K)` values per side — with ten
+/// participants the two most extreme contributions on both sides go).
+pub const TRIM_FRAC: f64 = 0.2;
+
+/// Server-side combine rule for one round's client updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FoldStrategy {
+    /// Dataset-size-weighted mean (Eq. 1) — the streaming default.
+    #[default]
+    Mean,
+    /// Coordinate-wise trimmed mean ([`TRIM_FRAC`] per end).
+    TrimmedMean,
+    /// Coordinate-wise weighted median.
+    Median,
+    /// Weighted mean after clipping every update's L2 norm to the fleet's
+    /// weighted-median norm.
+    NormClip,
+}
+
+impl FoldStrategy {
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "mean" => Ok(FoldStrategy::Mean),
+            "trimmed_mean" => Ok(FoldStrategy::TrimmedMean),
+            "median" => Ok(FoldStrategy::Median),
+            "norm_clip" => Ok(FoldStrategy::NormClip),
+            other => Err(crate::anyhow::anyhow!(
+                "unknown fold strategy '{other}' (valid: mean, trimmed_mean, median, norm_clip)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FoldStrategy::Mean => "mean",
+            FoldStrategy::TrimmedMean => "trimmed_mean",
+            FoldStrategy::Median => "median",
+            FoldStrategy::NormClip => "norm_clip",
+        }
+    }
+
+    /// Whether the strategy must buffer the whole update set (everything
+    /// except the streaming `Mean`).
+    pub fn is_robust(self) -> bool {
+        !matches!(self, FoldStrategy::Mean)
+    }
+}
 
 /// `acc += w * x` over cache-friendly chunks, vectorizable.
 #[inline]
@@ -144,6 +221,216 @@ pub fn fold_updates_sharded(
     fold_refs(acc, &folds, shards);
 }
 
+/// Borrowed view of one buffered update for the robust (order-statistic)
+/// reduction: the flat layout is `client[..cut] ‖ server`, exactly like
+/// [`FoldRef`], but robust folds *gather* per element instead of
+/// accumulating, so they also carry the f64 weight.
+struct RobustRef<'a> {
+    cut: usize,
+    w: f64,
+    /// Full client vector; only the `[..cut]` prefix belongs to the flat
+    /// layout (the aux tail past `cut` is weighted-mean-folded eagerly).
+    client: &'a [f32],
+    server: &'a [f32],
+}
+
+impl RobustRef<'_> {
+    /// Value of flat element `j` in this update's reconstituted layout.
+    #[inline]
+    fn value_at(&self, j: usize) -> f32 {
+        if j < self.cut {
+            self.client[j]
+        } else {
+            self.server[j - self.cut]
+        }
+    }
+
+    /// L2 norm of the reconstituted flat vector (f64 accumulation in a
+    /// fixed per-update order — independent of sharding, so deterministic).
+    fn l2_norm(&self) -> f64 {
+        let mut s = 0.0f64;
+        for &v in &self.client[..self.cut] {
+            s += f64::from(v) * f64::from(v);
+        }
+        for &v in self.server {
+            s += f64::from(v) * f64::from(v);
+        }
+        s.sqrt()
+    }
+}
+
+/// One coordinate's robust combine over `(value, weight)` contributions in
+/// participant order. Sorts by value ([`f32::total_cmp`], stable — equal
+/// values keep participant order) and reduces per `strategy`; the sort and
+/// the reduction are per-element and shard-independent, which is what pins
+/// the reduction order for the bitwise-determinism contract.
+fn robust_column(strategy: FoldStrategy, vals: &mut [(f32, f64)]) -> f32 {
+    debug_assert!(!vals.is_empty());
+    vals.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let n = vals.len();
+    match strategy {
+        FoldStrategy::TrimmedMean => {
+            let mut trim = (TRIM_FRAC * n as f64).ceil() as usize;
+            if 2 * trim >= n {
+                // tiny rounds: always keep at least one survivor
+                trim = (n - 1) / 2;
+            }
+            let kept = &vals[trim..n - trim];
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for &(v, w) in kept {
+                num += w * f64::from(v);
+                den += w;
+            }
+            (num / den) as f32
+        }
+        FoldStrategy::Median => {
+            let total: f64 = vals.iter().map(|&(_, w)| w).sum();
+            let half = 0.5 * total;
+            let mut cum = 0.0f64;
+            for (i, &(v, w)) in vals.iter().enumerate() {
+                cum += w;
+                if cum > half {
+                    return v;
+                }
+                // pinned-reduction site 1: the cumulative mass lands
+                // exactly on half the total, so the weighted median sits
+                // between this value and the next (weights are positive,
+                // so a later element must exist here).
+                #[allow(clippy::float_cmp)]
+                if cum == half {
+                    let next = vals[i + 1].0;
+                    // pinned-reduction site 2: equal middles short-circuit
+                    // so `v + next` cannot overflow to infinity when a
+                    // poisoned cohort pushes both middles to huge values.
+                    #[allow(clippy::float_cmp)]
+                    let mid = if v == next { v } else { 0.5 * v + 0.5 * next };
+                    return mid;
+                }
+            }
+            vals[n - 1].0
+        }
+        // Mean/NormClip are not per-column strategies; the plain weighted
+        // mean here keeps the function total (NormClip reuses `Median` on
+        // the norm column for its clip threshold).
+        FoldStrategy::Mean | FoldStrategy::NormClip => {
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for &(v, w) in vals.iter() {
+                num += w * f64::from(v);
+                den += w;
+            }
+            (num / den) as f32
+        }
+    }
+}
+
+/// Robust-combine a buffered round into `out` (already normalized — robust
+/// strategies produce final values directly, not weighted sums). Sharded
+/// variants are bit-identical to serial: each flat element is reduced by
+/// exactly one shard from the same per-element gather.
+fn robust_refs_into(strategy: FoldStrategy, refs: &[RobustRef<'_>], out: &mut [f32], shards: usize) {
+    debug_assert!(!refs.is_empty());
+    match strategy {
+        FoldStrategy::TrimmedMean | FoldStrategy::Median => {
+            let chunks = shard_chunks(out, shards);
+            join_scoped(chunks, |(start, chunk)| {
+                let mut vals: Vec<(f32, f64)> = Vec::with_capacity(refs.len());
+                for (i, o) in chunk.iter_mut().enumerate() {
+                    let j = start + i;
+                    vals.clear();
+                    for r in refs {
+                        vals.push((r.value_at(j), r.w));
+                    }
+                    *o = robust_column(strategy, &mut vals);
+                }
+            });
+        }
+        FoldStrategy::NormClip => {
+            // clip threshold = weighted median of the updates' L2 norms
+            let norms: Vec<f64> = refs.iter().map(RobustRef::l2_norm).collect();
+            let mut norm_col: Vec<(f32, f64)> =
+                norms.iter().zip(refs).map(|(&n, r)| (n as f32, r.w)).collect();
+            let clip = f64::from(robust_column(FoldStrategy::Median, &mut norm_col));
+            // Σ w·(scale·x) = Σ (w·scale)·x — scaling values is a weight
+            // adjustment on the numerator only, so the pinned axpy fold
+            // does the heavy lifting; the denominator keeps the raw Σ w.
+            let total_w: f64 = refs.iter().map(|r| r.w).sum();
+            let folds: Vec<FoldRef<'_>> = refs
+                .iter()
+                .zip(&norms)
+                .map(|(r, &n)| {
+                    let scale = if n <= clip || n <= 0.0 { 1.0 } else { clip / n };
+                    FoldRef { cut: r.cut, w: (r.w * scale) as f32, client: r.client, server: r.server }
+                })
+                .collect();
+            out.fill(0.0);
+            fold_refs(out, &folds, shards);
+            let inv = (1.0 / total_w) as f32;
+            if shards <= 1 {
+                for o in out.iter_mut() {
+                    *o *= inv;
+                }
+            } else {
+                let chunks = shard_chunks(out, shards);
+                join_scoped(chunks, |(_, chunk)| {
+                    for o in chunk.iter_mut() {
+                        *o *= inv;
+                    }
+                });
+            }
+        }
+        FoldStrategy::Mean => unreachable!("Mean uses the streaming fold, not the robust buffer"),
+    }
+}
+
+/// Robust-combine a fixed batch of tiered updates into `out` (length
+/// `meta.total_params`) — the robust counterpart of
+/// [`fold_updates_sharded`], exposed so the micro-bench can compare robust
+/// GB/s against the plain fold. `Mean` falls through to the plain sharded
+/// fold (unnormalized sum, like `fold_updates_sharded`); robust strategies
+/// write final combined values.
+pub fn fold_updates_robust(
+    meta: &Metadata,
+    out: &mut [f32],
+    updates: &[ClientUpdate],
+    shards: usize,
+    strategy: FoldStrategy,
+) {
+    if !strategy.is_robust() {
+        fold_updates_sharded(meta, out, updates, shards);
+        return;
+    }
+    let refs: Vec<RobustRef<'_>> = updates
+        .iter()
+        .map(|u| RobustRef {
+            cut: meta.cut_offset(u.tier),
+            w: u.weight,
+            client: &u.client_vec,
+            server: &u.server_vec,
+        })
+        .collect();
+    let shards = resolve_shards(shards, out.len());
+    robust_refs_into(strategy, &refs, out, shards);
+}
+
+/// Robust-combine whole-vector `(params, w)` updates — no client/server
+/// cut — with an already-resolved shard count. The baselines' `WeightedAvg`
+/// shares the robust reduction core through this, mirroring [`fold_whole`].
+pub(crate) fn robust_fold_whole(
+    strategy: FoldStrategy,
+    items: &[(&[f32], f64)],
+    out: &mut [f32],
+    shards: usize,
+) {
+    let cut = out.len();
+    let refs: Vec<RobustRef<'_>> = items
+        .iter()
+        .map(|&(p, w)| RobustRef { cut, w, client: p, server: &[] })
+        .collect();
+    robust_refs_into(strategy, &refs, out, shards);
+}
+
 /// Streaming weighted-average accumulator for one round's client updates.
 pub struct Aggregator<'m> {
     meta: &'m Metadata,
@@ -157,6 +444,11 @@ pub struct Aggregator<'m> {
     pending: Vec<PendingFold>,
     depth: usize,
     shards: usize,
+    strategy: FoldStrategy,
+    /// Whole updates buffered for a robust (non-`Mean`) strategy — order
+    /// statistics need the full round, so memory is O(K) here instead of
+    /// the streaming path's O(depth).
+    robust: Vec<ClientUpdate>,
 }
 
 impl<'m> Aggregator<'m> {
@@ -171,6 +463,19 @@ impl<'m> Aggregator<'m> {
     /// is resolved per [`resolve_shards`] (0 = one per core). Results are
     /// bit-identical for every `(depth, shards)` setting.
     pub fn with_pipeline(meta: &'m Metadata, depth: usize, shards: usize) -> Self {
+        Self::with_strategy(meta, depth, shards, FoldStrategy::Mean)
+    }
+
+    /// Pipelined/sharded accumulator with an explicit [`FoldStrategy`].
+    /// `Mean` is the streaming path; robust strategies buffer the round's
+    /// updates whole and reduce at `finish_into`. Every strategy is
+    /// bit-identical across the `(depth, shards)` grid.
+    pub fn with_strategy(
+        meta: &'m Metadata,
+        depth: usize,
+        shards: usize,
+        strategy: FoldStrategy,
+    ) -> Self {
         Self {
             flat: vec![0.0f32; meta.total_params],
             aux: meta.tiers.iter().map(|t| vec![0.0f32; t.aux_len]).collect(),
@@ -180,6 +485,8 @@ impl<'m> Aggregator<'m> {
             pending: Vec::new(),
             depth: depth.max(1),
             shards: resolve_shards(shards, meta.total_params),
+            strategy,
+            robust: Vec::new(),
             meta,
         }
     }
@@ -200,6 +507,13 @@ impl<'m> Aggregator<'m> {
     fn admit(&mut self, u: &ClientUpdate) -> Result<(usize, f32)> {
         u.check(self.meta)?;
         crate::anyhow::ensure!(u.weight > 0.0, "client {} has non-positive weight", u.client_id);
+        if let Some(off) = u.first_non_finite() {
+            return Err(crate::anyhow::anyhow!(
+                "client {} update has a non-finite value at flat offset {off}; refusing to fold \
+                 it into the global model (quarantine it instead)",
+                u.client_id
+            ));
+        }
         let w = u.weight as f32;
         let cut = self.meta.cut_offset(u.tier);
         // aux tail, averaged within its tier (tiny — folded eagerly)
@@ -219,7 +533,7 @@ impl<'m> Aggregator<'m> {
     /// cloned into the queue (round engines avoid even that by handing
     /// over ownership via [`Aggregator::fold_owned`]).
     pub fn fold(&mut self, u: &ClientUpdate) -> Result<()> {
-        if self.depth > 1 || !self.pending.is_empty() {
+        if self.strategy.is_robust() || self.depth > 1 || !self.pending.is_empty() {
             return self.fold_owned(u.clone());
         }
         let (cut, w) = self.admit(u)?;
@@ -230,9 +544,15 @@ impl<'m> Aggregator<'m> {
 
     /// Queue one owned client update for the pipelined fold. Bookkeeping is
     /// applied immediately; the O(P) flat-range fold runs at the next flush
-    /// (after `pipeline_depth` updates, or at `finish`).
+    /// (after `pipeline_depth` updates, or at `finish`). Robust strategies
+    /// buffer the update whole instead — their order statistics need the
+    /// full round at `finish_into`.
     pub fn fold_owned(&mut self, u: ClientUpdate) -> Result<()> {
         let (cut, w) = self.admit(&u)?;
+        if self.strategy.is_robust() {
+            self.robust.push(u);
+            return Ok(());
+        }
         self.pending.push(PendingFold {
             cut,
             w,
@@ -280,6 +600,20 @@ impl<'m> Aggregator<'m> {
             "back snapshot shape mismatch"
         );
         self.flush();
+        if self.strategy.is_robust() {
+            let refs: Vec<RobustRef<'_>> = self
+                .robust
+                .iter()
+                .map(|u| RobustRef {
+                    cut: self.meta.cut_offset(u.tier),
+                    w: u.weight,
+                    client: &u.client_vec,
+                    server: &u.server_vec,
+                })
+                .collect();
+            robust_refs_into(self.strategy, &refs, &mut back.flat, self.shards);
+            return self.finish_aux_into(prev, back);
+        }
         let inv = (1.0 / self.total_w) as f32;
         if self.shards <= 1 {
             for (o, &a) in back.flat.iter_mut().zip(self.flat.iter()) {
@@ -296,6 +630,13 @@ impl<'m> Aggregator<'m> {
                 }
             });
         }
+        self.finish_aux_into(prev, back)
+    }
+
+    /// Normalize the aux heads into `back` (tiers with no participant carry
+    /// over from `prev`). Aux heads are tier-local and always weighted-mean
+    /// regardless of the flat [`FoldStrategy`].
+    fn finish_aux_into(&self, prev: &GlobalModel, back: &mut GlobalModel) -> Result<()> {
         for i in 0..self.meta.max_tiers {
             crate::anyhow::ensure!(
                 back.aux[i].len() == self.aux[i].len(),
@@ -396,8 +737,8 @@ mod tests {
         let prev = GlobalModel::new(vec![0.0; meta.total_params], prev_aux, &meta);
         let ups = vec![update(&meta, 1, 1.0, 1.0, 0)];
         let g = aggregate(&meta, &prev, &ups).unwrap();
-        // tier 2 had no participants; its aux head is unchanged
-        assert!(g.aux[1].iter().all(|&v| v == 7.5));
+        // tier 2 had no participants; its aux head is unchanged (bitwise)
+        assert!(g.aux[1].iter().all(|&v| v.to_bits() == 7.5f32.to_bits()));
         // tier 1 aux updated
         assert!(g.aux[0].iter().all(|&v| (v - 1.0).abs() < 1e-6));
     }
@@ -581,6 +922,173 @@ mod tests {
             let mut sharded = vec![0.0f32; meta.total_params];
             fold_updates_sharded(&meta, &mut sharded, &ups, shards);
             assert_eq!(serial, sharded, "shards={shards}");
+        }
+    }
+
+    // --- robustness: non-finite rejection and the FoldStrategy family ---
+
+    #[test]
+    fn non_finite_update_rejected_with_client_and_offset() {
+        let Some(meta) = tiny_meta() else { return };
+        let mut agg = Aggregator::new(&meta);
+        // NaN in the server half: flat offset = client_vec.len() + index
+        let mut u = update(&meta, 2, 1.0, 1.0, 4);
+        let expect_off = u.client_vec.len() + 3;
+        u.server_vec[3] = f32::NAN;
+        let err = agg.fold(&u).unwrap_err().to_string();
+        assert!(err.contains("client 4"), "{err}");
+        assert!(err.contains(&format!("offset {expect_off}")), "{err}");
+        // the rejected update must leave no bookkeeping behind
+        assert_eq!(agg.count(), 0);
+        assert_eq!(agg.pending_len(), 0);
+        // inf in the client half reports the client-prefix position
+        let mut u = update(&meta, 2, 1.0, 1.0, 7);
+        u.client_vec[5] = f32::NEG_INFINITY;
+        let err = agg.fold(&u).unwrap_err().to_string();
+        assert!(err.contains("client 7"), "{err}");
+        assert!(err.contains("offset 5"), "{err}");
+        assert_eq!(agg.count(), 0);
+        // fold_owned takes the same admission gate
+        let mut u = update(&meta, 3, 1.0, 1.0, 8);
+        u.client_vec[0] = f32::INFINITY;
+        let mut agg = Aggregator::with_pipeline(&meta, 4, 2);
+        assert!(agg.fold_owned(u).is_err());
+        assert_eq!(agg.count(), 0);
+        assert_eq!(agg.pending_len(), 0);
+    }
+
+    #[test]
+    fn fold_strategy_names_round_trip() {
+        for s in [
+            FoldStrategy::Mean,
+            FoldStrategy::TrimmedMean,
+            FoldStrategy::Median,
+            FoldStrategy::NormClip,
+        ] {
+            assert_eq!(FoldStrategy::from_name(s.name()).unwrap(), s);
+        }
+        assert!(FoldStrategy::from_name("krum").is_err());
+        assert_eq!(FoldStrategy::default(), FoldStrategy::Mean);
+        assert!(!FoldStrategy::Mean.is_robust());
+        assert!(FoldStrategy::Median.is_robust());
+    }
+
+    #[test]
+    fn robust_folds_are_bit_identical_across_depth_and_shards() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.25; t.aux_len]).collect(),
+            &meta,
+        );
+        let ups = mixed_updates(&meta, 9);
+        for strategy in [FoldStrategy::TrimmedMean, FoldStrategy::Median, FoldStrategy::NormClip] {
+            let mut r = Aggregator::with_strategy(&meta, 1, 1, strategy);
+            for u in &ups {
+                r.fold(u).unwrap();
+            }
+            let reference = r.finish(&prev).unwrap();
+            for depth in [1usize, 4, 64] {
+                for shards in [2usize, 3, 5, 0] {
+                    let mut agg = Aggregator::with_strategy(&meta, depth, shards, strategy);
+                    for u in &ups {
+                        agg.fold(u).unwrap();
+                    }
+                    let g = agg.finish(&prev).unwrap();
+                    assert_eq!(
+                        reference.flat,
+                        g.flat,
+                        "{} depth={depth} shards={shards}: flat diverged",
+                        strategy.name()
+                    );
+                    assert_eq!(reference.aux, g.aux);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_and_median_shrug_off_a_poisoned_update() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = zero_prev(&meta);
+        // four honest clients at 1.0; one Byzantine client at 100× holding
+        // a minority of the weight (robust statistics only promise recovery
+        // while honest clients keep the weight majority)
+        let mut ups: Vec<ClientUpdate> =
+            (0..4).map(|i| update(&meta, 3, 1.0, 1.0, i)).collect();
+        ups.push(update(&meta, 3, 100.0, 1.5, 9));
+        let mean = aggregate(&meta, &prev, &ups).unwrap();
+        // mean is dragged to (4·1 + 1.5·100) / 5.5 = 28
+        assert!(mean.flat.iter().all(|&v| v > 20.0), "mean should be poisoned");
+        for strategy in [FoldStrategy::TrimmedMean, FoldStrategy::Median] {
+            let mut agg = Aggregator::with_strategy(&meta, 1, 1, strategy);
+            for u in &ups {
+                agg.fold(u).unwrap();
+            }
+            let g = agg.finish(&prev).unwrap();
+            assert!(
+                g.flat.iter().all(|&v| (v - 1.0).abs() < 1e-6),
+                "{} should recover the honest value",
+                strategy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn norm_clip_neutralizes_a_magnitude_attack() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = zero_prev(&meta);
+        let mut ups: Vec<ClientUpdate> =
+            (0..4).map(|i| update(&meta, 3, 1.0, 1.0, i)).collect();
+        ups.push(update(&meta, 3, 1000.0, 1.0, 9));
+        let mut agg = Aggregator::with_strategy(&meta, 1, 1, FoldStrategy::NormClip);
+        for u in &ups {
+            agg.fold(u).unwrap();
+        }
+        let g = agg.finish(&prev).unwrap();
+        // the 1000× update is clipped to the median (honest) norm, so its
+        // effective contribution is ≈ the honest fill: (4·1 + 1) / 5 = 1
+        assert!(
+            g.flat.iter().all(|&v| (v - 1.0).abs() < 1e-2),
+            "norm clip should cap the attacker at the honest norm"
+        );
+    }
+
+    #[test]
+    fn weighted_median_splits_an_exact_half_mass_tie() {
+        // two equal-weight updates: cum hits exactly half the total at the
+        // first value → median is the midpoint of the two middles
+        let mut vals = vec![(1.0f32, 1.0f64), (3.0, 1.0)];
+        let m = robust_column(FoldStrategy::Median, &mut vals);
+        assert!((m - 2.0).abs() < 1e-6);
+        // equal middles at huge magnitude: the short-circuit keeps the
+        // result finite instead of overflowing v + next
+        let mut vals = vec![(f32::MAX, 1.0f64), (f32::MAX, 1.0)];
+        let m = robust_column(FoldStrategy::Median, &mut vals);
+        assert!(m.is_finite());
+        assert_eq!(m.to_bits(), f32::MAX.to_bits());
+        // unequal huge middles stay finite too (0.5·v + 0.5·next form)
+        let mut vals = vec![(f32::MAX, 1.0f64), (f32::MAX / 2.0, 1.0)];
+        let m = robust_column(FoldStrategy::Median, &mut vals);
+        assert!(m.is_finite());
+    }
+
+    #[test]
+    fn fold_updates_robust_matches_aggregator_path() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = zero_prev(&meta);
+        let ups = mixed_updates(&meta, 6);
+        for strategy in [FoldStrategy::TrimmedMean, FoldStrategy::Median, FoldStrategy::NormClip] {
+            let mut agg = Aggregator::with_strategy(&meta, 1, 1, strategy);
+            for u in &ups {
+                agg.fold(u).unwrap();
+            }
+            let g = agg.finish(&prev).unwrap();
+            for shards in [1usize, 3, 0] {
+                let mut out = vec![f32::NAN; meta.total_params];
+                fold_updates_robust(&meta, &mut out, &ups, shards, strategy);
+                assert_eq!(g.flat, out, "{} shards={shards}", strategy.name());
+            }
         }
     }
 }

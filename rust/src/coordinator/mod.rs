@@ -19,7 +19,9 @@ pub mod round;
 pub mod scheduler;
 pub mod snapshot_delta;
 
-pub use aggregate::{aggregate, fold_updates_sharded, Aggregator};
+pub use aggregate::{
+    aggregate, fold_updates_robust, fold_updates_sharded, Aggregator, FoldStrategy,
+};
 pub use snapshot_delta::{DeltaTracker, SnapshotDelta};
 pub use model_state::{ClientUpdate, GlobalModel};
 pub use parallel::{

@@ -102,6 +102,23 @@ impl ClientUpdate {
         );
         Ok(())
     }
+
+    /// Offset of the first non-finite (NaN/±inf) parameter in the update,
+    /// scanning the client half before the server half; server-half hits
+    /// report `client_vec.len() + index` so the offset is unambiguous in
+    /// one number. `None` when the update is clean. The round-engine sinks
+    /// use this to quarantine poisoned updates before they reach the
+    /// aggregator, and the aggregator itself rejects at admission with this
+    /// offset in its error.
+    pub fn first_non_finite(&self) -> Option<usize> {
+        if let Some(i) = self.client_vec.iter().position(|v| !v.is_finite()) {
+            return Some(i);
+        }
+        self.server_vec
+            .iter()
+            .position(|v| !v.is_finite())
+            .map(|i| self.client_vec.len() + i)
+    }
 }
 
 #[cfg(test)]
@@ -134,5 +151,21 @@ mod tests {
             assert_eq!(recon, flat, "tier {tier} partition must be lossless");
             assert_eq!(cv.len(), meta.tier(tier).client_vec_len);
         }
+    }
+
+    #[test]
+    fn first_non_finite_scans_client_then_server() {
+        let mut u = ClientUpdate {
+            client_id: 0,
+            tier: 1,
+            weight: 1.0,
+            client_vec: vec![0.0; 4],
+            server_vec: vec![0.0; 4],
+        };
+        assert_eq!(u.first_non_finite(), None);
+        u.server_vec[2] = f32::NEG_INFINITY;
+        assert_eq!(u.first_non_finite(), Some(6), "server hits offset past the client half");
+        u.client_vec[1] = f32::NAN;
+        assert_eq!(u.first_non_finite(), Some(1), "client half scanned first");
     }
 }

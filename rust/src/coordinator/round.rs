@@ -182,11 +182,16 @@ struct ClientBundle {
     tier: usize,
     last_loss: f64,
     /// Simulated bytes this client put on the wire (delta-sized downlink in
-    /// scenario mode + full upload + activations).
+    /// scenario mode + full upload + retransmissions + activations).
     bytes: u64,
     /// Profiler observation (per-batch compute secs, link bytes/sec); None
     /// when the client ran no batches this round.
     obs: Option<(f64, f64)>,
+    /// Failed uplink attempts this round (each charged in simulated time).
+    retries: usize,
+    /// Every uplink attempt failed: the time was spent but the update never
+    /// reached the server.
+    lost: bool,
 }
 
 /// Steps ①–④ for one client — a pure function of the global snapshot, the
@@ -246,6 +251,16 @@ fn run_client(
         host_server += sout.host_secs;
     }
 
+    // Byzantine cohorts poison the update they are about to upload; the
+    // trained halves are corrupted in place so the sink sees exactly what
+    // a faulty client would send (nan-mode updates are quarantined there,
+    // finite corruptions are what the robust folds must absorb).
+    let fault = env.fault(k);
+    if let Some(mode) = fault.corrupt {
+        mode.poison(&mut cstate.params);
+        mode.poison(&mut sstate.params);
+    }
+
     // --- simulated timings (Eq. 5) ---
     let sim_c = noisy(task.profile.compute_secs(host_client), timing_noise, &mut crng);
     let sim_s = server.secs(host_server) / server.parallel_factor.max(1.0);
@@ -257,7 +272,12 @@ fn run_client(
     let up = tmeta.model_transfer_bytes - down_full;
     let down = env.downlink_bytes(k, down_full, &global.flat[..meta.cut_offset(tier)]);
     let bytes = down + up + nb * tmeta.z_bytes_per_batch;
-    let sim_com = env.comm_secs(k, bytes);
+    // flaky uplink: every failed attempt re-sends the upload and waits an
+    // exponential backoff, all charged in simulated time (and the resent
+    // bytes count on the wire) so the tier profiler sees the true cost
+    let (retry_secs, retries) = env.uplink_retry(k, up);
+    let sim_com = env.comm_secs(k, bytes) + retry_secs;
+    let bytes = bytes + retries * up;
     let obs = (nb > 0).then(|| {
         // per-batch compute + measured link speed
         (sim_c / nb as f64, bytes as f64 / sim_com.max(1e-9))
@@ -276,6 +296,8 @@ fn run_client(
         last_loss,
         bytes: bytes as u64,
         obs,
+        retries,
+        lost: fault.uplink_lost,
     })
 }
 
@@ -319,18 +341,27 @@ impl Method for Dtfl {
         let profiler = &mut self.profiler;
         let timing_noise = self.opts.timing_noise;
         let server = env.server;
-        let mut agg = Aggregator::with_pipeline(meta, env.pipeline_depth, env.agg_shards);
+        let mut agg = Aggregator::with_strategy(meta, env.pipeline_depth, env.agg_shards, env.fold);
         let mut times = Vec::with_capacity(env.participants.len());
         let mut tiers = Vec::with_capacity(env.participants.len());
         let mut loss_sum = 0.0f64;
         let mut wire_bytes = 0u64;
         let mut straggled = Vec::new();
+        let mut quarantined = 0usize;
+        let mut retries = 0usize;
         for_each_streamed_windowed(
             env.threads,
             env.pipeline_depth.saturating_sub(1),
             &tasks,
             |_, task| match task {
-                PoolTask::Work(t) => run_client(env, global, &server, timing_noise, t).map(Some),
+                PoolTask::Work(t) => {
+                    if env.fault(t.k).crashed {
+                        // client died mid-round: no work, no observed time,
+                        // its update is simply lost
+                        return Ok(None);
+                    }
+                    run_client(env, global, &server, timing_noise, t).map(Some)
+                }
                 PoolTask::Prefetch { k, bi } => {
                     env.run_prefetch(*k, *bi)?;
                     Ok(None)
@@ -349,11 +380,27 @@ impl Method for Dtfl {
                 tiers.push(b.tier);
                 loss_sum += b.last_loss;
                 wire_bytes += b.bytes;
+                retries += b.retries;
                 if straggle.straggled() {
                     straggled.push(b.update.client_id);
                 }
                 if straggle.dropped() {
                     return Ok(()); // deadline missed: the update never lands
+                }
+                if b.lost {
+                    return Ok(()); // every uplink attempt failed
+                }
+                if let Some(off) = b.update.first_non_finite() {
+                    // graceful degradation: a poisoned (non-finite) update
+                    // is quarantined instead of corrupting the global model
+                    quarantined += 1;
+                    crate::runtime::note_quarantined_update();
+                    crate::log::info!(
+                        "round {}: quarantined non-finite update from client {} (flat offset {off})",
+                        env.round,
+                        b.update.client_id
+                    );
+                    return Ok(());
                 }
                 agg.fold_owned(b.update)
             },
@@ -362,8 +409,18 @@ impl Method for Dtfl {
         self.last_schedule = Some(sched);
         let train_loss = loss_sum / env.participants.len().max(1) as f64;
         if agg.count() == 0 {
-            // nothing to aggregate — no flush, no snapshot swap
-            let out = RoundOutcome { times, train_loss, tiers, wire_bytes, straggled };
+            // nothing to aggregate (all crashed, dropped, lost, or
+            // quarantined) — no flush, no snapshot swap: the global model
+            // carries forward exactly like the empty-participant path
+            let out = RoundOutcome {
+                times,
+                train_loss,
+                tiers,
+                wire_bytes,
+                straggled,
+                quarantined,
+                retries,
+            };
             return Ok(out.with_no_update(env.round));
         }
 
@@ -372,7 +429,7 @@ impl Method for Dtfl {
         agg.finish_into(&self.global, &mut self.back)?;
         std::mem::swap(&mut self.global, &mut self.back);
 
-        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled })
+        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled, quarantined, retries })
     }
 
     fn global_params(&self) -> &[f32] {

@@ -451,6 +451,73 @@ mod tests {
     }
 
     #[test]
+    fn truncated_payloads_error_for_every_mode() {
+        // fuzz-style: encode one delta per codec mode, then truncate the
+        // byte stream at EVERY length. `apply` must return an error (never
+        // panic on a bad slice index). Dense and packed carry exact-length
+        // invariants, so every proper truncation errors; a sparse stream
+        // cut at an entry boundary is a valid shorter delta (fewer entries
+        // changed), so only mid-entry cuts are asserted as errors.
+        let mut rng = Rng64::seed_from_u64(7);
+        let prev: Vec<f32> = (0..512).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+        let dense_cur: Vec<f32> = prev.iter().map(|v| -v).collect();
+        let packed_cur: Vec<f32> = prev.iter().map(|v| v - 1e-3 * v.abs().max(1e-2)).collect();
+        let mut sparse_cur = prev.clone();
+        for i in rng.sample_indices(512, 5) {
+            sparse_cur[i] += 0.25;
+        }
+        for (cur, mode) in
+            [(&dense_cur, MODE_DENSE), (&sparse_cur, MODE_SPARSE), (&packed_cur, MODE_PACKED)]
+        {
+            let d = encode(&prev, cur);
+            assert_eq!(d.as_bytes()[0], mode, "probe input must exercise mode {mode}");
+            let full = d.as_bytes().to_vec();
+            for cut in 0..full.len() {
+                let t = SnapshotDelta { bytes: full[..cut].to_vec() };
+                let r = apply(&prev, &t);
+                if mode != MODE_SPARSE || cut < HEADER_BYTES {
+                    assert!(r.is_err(), "mode {mode} truncated at {cut} must error");
+                }
+            }
+            // a length-mismatched base snapshot is rejected, not indexed
+            assert!(apply(&prev[..prev.len() - 1], &d).is_err());
+            assert!(apply(&[], &d).is_err());
+        }
+    }
+
+    #[test]
+    fn corrupted_payloads_never_panic() {
+        // single-bit-flip fuzz over every mode's encoding: apply may decode
+        // garbage (a flipped payload bit is indistinguishable from data) or
+        // error, but it must never panic
+        let mut rng = Rng64::seed_from_u64(23);
+        let prev: Vec<f32> = (0..256).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+        let mut sparse_cur = prev.clone();
+        for i in rng.sample_indices(256, 4) {
+            sparse_cur[i] -= 0.5;
+        }
+        let curs: Vec<Vec<f32>> = vec![
+            prev.iter().map(|v| -v).collect(),
+            sparse_cur,
+            prev.iter().map(|v| v - 1e-3 * v.abs().max(1e-2)).collect(),
+        ];
+        for cur in &curs {
+            let full = encode(&prev, cur).as_bytes().to_vec();
+            for _ in 0..200 {
+                let mut bytes = full.clone();
+                let idx = (rng.next_u64() % bytes.len() as u64) as usize;
+                bytes[idx] ^= 1 << (rng.next_u64() % 8);
+                let _ = apply(&prev, &SnapshotDelta { bytes });
+            }
+        }
+        // an unknown mode byte is rejected by name
+        let mut bytes = encode(&prev, &curs[0]).as_bytes().to_vec();
+        bytes[0] = 7;
+        let err = apply(&prev, &SnapshotDelta { bytes }).unwrap_err().to_string();
+        assert!(err.contains("unknown delta mode"), "{err}");
+    }
+
+    #[test]
     fn tracker_accounts_and_updates() {
         let mut t = DeltaTracker::new(2);
         let g0: Vec<f32> = (0..8).map(|i| i as f32).collect();

@@ -287,6 +287,7 @@ impl Experiment {
                     next_participants: next_ids.as_deref(),
                     scenario: scenario_round.as_ref(),
                     downlink: self.delta.as_ref(),
+                    fold: self.cfg.run.fold,
                 };
                 self.method.round(&mut env)?
             };
@@ -344,6 +345,8 @@ impl Experiment {
                 tiers: outcome.tiers.clone(),
                 wire_bytes: outcome.wire_bytes,
                 straggled: outcome.straggled.len(),
+                quarantined: outcome.quarantined,
+                retries: outcome.retries,
                 host_secs: t0.elapsed().as_secs_f64(),
             };
             crate::log::info!(
@@ -361,6 +364,13 @@ impl Experiment {
                     outcome.straggled
                 );
             }
+            if outcome.quarantined > 0 || outcome.retries > 0 {
+                crate::log::info!(
+                    "round {r}: {} updates quarantined, {} uplink retries",
+                    outcome.quarantined,
+                    outcome.retries
+                );
+            }
             if let Some(w) = csv.as_mut() {
                 w.row(&csv_row![
                     rec.round,
@@ -373,6 +383,8 @@ impl Experiment {
                     rec.mean_tier,
                     rec.wire_bytes,
                     rec.straggled,
+                    rec.quarantined,
+                    rec.retries,
                     rec.host_secs
                 ])?;
             }
@@ -419,6 +431,8 @@ impl Experiment {
                 "mean_tier",
                 "wire_bytes",
                 "straggled",
+                "quarantined",
+                "retries",
                 "host_secs",
             ],
         )?))

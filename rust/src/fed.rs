@@ -12,9 +12,12 @@ use std::sync::Arc;
 
 use crate::anyhow::Result;
 use crate::coordinator::snapshot_delta::DeltaTracker;
+use crate::coordinator::FoldStrategy;
 use crate::data::{Batch, BatchCache, Dataset, Partition};
 use crate::runtime::Runtime;
-use crate::simulation::{ClientRoundTime, ResourceProfile, ScenarioRound, ServerModel, Straggle};
+use crate::simulation::{
+    ClientRoundTime, FaultVerdict, ResourceProfile, ScenarioRound, ServerModel, Straggle,
+};
 use crate::util::Rng64;
 
 /// Privacy configuration (paper §4.4, Table 5).
@@ -67,6 +70,10 @@ pub struct RoundEnv<'a> {
     /// (scenario mode with `delta_downlink = true`); `None` = full
     /// downloads.
     pub downlink: Option<&'a DeltaTracker>,
+    /// Server-side combine rule for this round's updates (weighted mean by
+    /// default; robust strategies for Byzantine cohorts). `Mean` keeps the
+    /// streaming aggregation path bit-for-bit.
+    pub fold: FoldStrategy,
 }
 
 /// How many leading batches per next-round participant the engines warm
@@ -131,6 +138,38 @@ impl RoundEnv<'_> {
             Some(sr) => sr.check_deadline(t),
             None => Straggle::None,
         }
+    }
+
+    /// Client k's fault verdict this round (all-clear without a scenario or
+    /// with no fault knobs configured — every engine then behaves
+    /// bit-for-bit like the pre-fault code).
+    pub fn fault(&self, k: usize) -> FaultVerdict {
+        match self.scenario {
+            Some(sr) => sr.fault(k),
+            None => FaultVerdict::default(),
+        }
+    }
+
+    /// Extra simulated uplink seconds client k spends on retried transfers
+    /// this round, plus the retry count: each failed attempt re-sends the
+    /// `up_bytes` payload and then waits an exponentially growing backoff
+    /// (base `retry_backoff_secs`, doubling per failure), so the tier
+    /// profiler sees the true cost of a flaky link. The accumulation order
+    /// is pinned (attempt by attempt) for bitwise determinism. Zero-cost
+    /// all-clear when no faults are configured.
+    pub fn uplink_retry(&self, k: usize, up_bytes: usize) -> (f64, usize) {
+        let f = self.fault(k);
+        if f.uplink_failures == 0 {
+            return (0.0, 0);
+        }
+        let per_attempt = self.comm_secs(k, up_bytes);
+        let mut extra = 0.0f64;
+        let mut backoff = f.retry_backoff_secs;
+        for _ in 0..f.uplink_failures {
+            extra += per_attempt + backoff;
+            backoff *= 2.0;
+        }
+        (extra, f.uplink_failures)
     }
 
     /// Deterministic RNG stream for client k this round: independent of
@@ -220,6 +259,13 @@ pub struct RoundOutcome {
     /// participant order. Under the `drop` policy their updates were not
     /// aggregated; under `wait` they were.
     pub straggled: Vec<usize>,
+    /// Updates quarantined this round for carrying non-finite values (they
+    /// were dropped before aggregation; see
+    /// `runtime::RuntimeStats::quarantined_updates` for the run total).
+    pub quarantined: usize,
+    /// Total uplink retry attempts across participants this round (each one
+    /// charged in simulated time via [`RoundEnv::uplink_retry`]).
+    pub retries: usize,
 }
 
 impl RoundOutcome {
@@ -291,6 +337,7 @@ mod tests {
             next_participants: None,
             scenario: None,
             downlink: None,
+            fold: FoldStrategy::Mean,
         };
         let mut a1 = env.client_rng(0);
         let mut a2 = env.client_rng(0);
@@ -298,5 +345,70 @@ mod tests {
         assert_eq!(a1.next_u64(), a2.next_u64(), "same (seed, round, client) → same stream");
         assert_ne!(env.client_rng(0).next_u64(), b.next_u64(), "clients get distinct streams");
         let _ = a1.next_u64();
+
+        // no scenario → all-clear fault verdict and zero-cost retries
+        let f = env.fault(0);
+        assert!(!f.crashed && f.corrupt.is_none() && !f.uplink_lost);
+        assert_eq!(env.uplink_retry(0, 1024), (0.0, 0));
+    }
+
+    #[test]
+    fn uplink_retry_charges_resends_plus_doubling_backoff() {
+        use crate::simulation::{CorruptMode, ScenarioRound, Straggle};
+        let train = data::generate_train(&DatasetSpec::tiny(32, 8));
+        let partition = data::partition(&train, 2, PartitionScheme::Iid, 1);
+        let batches = BatchCache::new(&partition, 8);
+        let rt = Runtime::open("artifacts/tiny").unwrap();
+        let link = crate::simulation::LinkQuality { mbps: 8.0, latency_secs: 0.1 };
+        let sr = ScenarioRound {
+            round: 0,
+            links: vec![link; 2],
+            data_scale: vec![1.0; 2],
+            deadline_secs: None,
+            on_deadline: crate::simulation::DeadlinePolicy::Drop,
+            faults: Some(vec![
+                FaultVerdict {
+                    crashed: false,
+                    corrupt: Some(CorruptMode::SignFlip),
+                    uplink_failures: 2,
+                    uplink_lost: false,
+                    retry_backoff_secs: 0.5,
+                },
+                FaultVerdict::default(),
+            ]),
+        };
+        let env = RoundEnv {
+            rt: &rt,
+            train: &train,
+            partition: &partition,
+            batches: &batches,
+            profiles: &[],
+            participants: &[0, 1],
+            server: ServerModel::default(),
+            lr: 1e-3,
+            round: 0,
+            batch_cap: None,
+            privacy: PrivacyCfg::default(),
+            seed: 17,
+            threads: 0,
+            pipeline_depth: 1,
+            agg_shards: 1,
+            next_participants: None,
+            scenario: Some(&sr),
+            downlink: None,
+            fold: FoldStrategy::Mean,
+        };
+        // per attempt: 0.1 latency + 1000·8 bits / 8 Mbps = 0.1 + 0.001
+        let per_attempt = link.comm_secs(1000);
+        let (extra, retries) = env.uplink_retry(0, 1000);
+        assert_eq!(retries, 2);
+        // two failed attempts: (resend + 0.5) + (resend + 1.0), pinned order
+        let expect = (per_attempt + 0.5) + (per_attempt + 1.0);
+        assert_eq!(extra.to_bits(), expect.to_bits(), "pinned accumulation order");
+        // the clean client pays nothing
+        assert_eq!(env.uplink_retry(1, 1000), (0.0, 0));
+        // straggle helper still behaves with faults present
+        let mut t = ClientRoundTime { compute: 0.0, comm: 0.0, server: 0.0 };
+        assert_eq!(env.apply_deadline(&mut t), Straggle::None);
     }
 }

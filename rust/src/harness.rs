@@ -11,7 +11,7 @@ use crate::config::{
     ClientsCfg, DataCfg, ExperimentConfig, ModelCfg, OutputCfg, PrivacyCfgToml, RunCfg,
     ScenarioRef, SimCfg,
 };
-use crate::coordinator::resolve_threads;
+use crate::coordinator::{resolve_threads, FoldStrategy};
 use crate::experiment::Experiment;
 use crate::metrics::{RoundRecord, RunReport};
 use crate::simulation::{ProfilePool, Scenario};
@@ -52,6 +52,8 @@ pub struct RunSpec {
     /// Fused forward path (gn/relu epilogues + 1×1 im2col elision);
     /// bit-identical either way, off only for bisection.
     pub fuse_forward: bool,
+    /// Server aggregation rule (mean | trimmed_mean | median | norm_clip).
+    pub fold: FoldStrategy,
     pub lr: f32,
     pub out_name: Option<String>,
     /// Trace-driven environment scenario; when set, `clients` must equal
@@ -87,6 +89,7 @@ impl Default for RunSpec {
             pipeline_depth: 4,
             agg_shards: 0,
             fuse_forward: true,
+            fold: FoldStrategy::Mean,
             lr: 1e-3,
             out_name: None,
             scenario: None,
@@ -139,6 +142,7 @@ impl RunSpec {
                 pipeline_depth: self.pipeline_depth,
                 agg_shards: self.agg_shards,
                 fuse_forward: self.fuse_forward,
+                fold: self.fold,
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -797,6 +801,175 @@ pub fn measure_scenario_throughput(rounds: usize) -> Result<ScenarioThroughput> 
         fedavg_delta_sim_secs: delta_recs.last().map(|r| r.sim_time).unwrap_or(0.0),
         fedavg_full_sim_secs: full_recs.last().map(|r| r.sim_time).unwrap_or(0.0),
         bit_identical: bits_eq(&delta_params, &full_params),
+    })
+}
+
+/// The committed fault-injection scenario the `robustness` bench object
+/// runs (also asserted byte-for-byte by `tests/fault_trace.rs`).
+pub const BYZANTINE_FLAKY_TOML: &str =
+    include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/byzantine_flaky.toml"));
+
+/// Result of the robustness probe — the `robustness` object in
+/// `BENCH_hotpath.json`: bare robust-fold bandwidth (trimmed-mean / median
+/// vs the plain streaming mean) plus a full run of the committed
+/// `scenarios/byzantine_flaky.toml` (makespan, quarantines, retries, and
+/// the train loss a robust fold recovers where the poisoned mean diverges).
+#[derive(Debug, Clone)]
+pub struct RobustnessThroughput {
+    /// Bandwidth probe: K mixed-tier updates into a P-param accumulator.
+    pub clients: usize,
+    pub params: usize,
+    /// Update-stream GB/s of the plain streaming weighted mean.
+    pub plain_gb_per_sec: f64,
+    /// Same stream through the buffered coordinate-wise trimmed mean.
+    pub trimmed_gb_per_sec: f64,
+    /// Same stream through the buffered coordinate-wise weighted median.
+    pub median_gb_per_sec: f64,
+    /// Committed scenario leg (fedavg under crash + signflip + flaky links).
+    pub scenario: String,
+    pub scenario_clients: usize,
+    pub rounds: usize,
+    pub sim_secs: f64,
+    pub mean_makespan_secs: f64,
+    /// Non-finite updates quarantined across the run (NaN-corrupt cohorts).
+    pub quarantined: usize,
+    /// Failed uplink attempts charged (and re-sent) across the run.
+    pub retries: usize,
+    /// Final train loss with the plain weighted mean (poison folds in).
+    pub mean_final_train_loss: f64,
+    /// Final train loss with the trimmed mean (poison trimmed away).
+    pub trimmed_final_train_loss: f64,
+}
+
+impl RobustnessThroughput {
+    /// The `robustness` object recorded in `BENCH_hotpath.json`.
+    pub fn to_json(&self, source: &str) -> Json {
+        json::obj(vec![
+            (
+                "fold_bandwidth",
+                json::obj(vec![
+                    ("clients", json::num(self.clients as f64)),
+                    ("params", json::num(self.params as f64)),
+                    ("plain_gb_per_sec", json::num(self.plain_gb_per_sec)),
+                    ("trimmed_mean_gb_per_sec", json::num(self.trimmed_gb_per_sec)),
+                    ("median_gb_per_sec", json::num(self.median_gb_per_sec)),
+                ]),
+            ),
+            (
+                "scenario",
+                json::obj(vec![
+                    ("name", json::s(self.scenario.clone())),
+                    ("clients", json::num(self.scenario_clients as f64)),
+                    ("rounds", json::num(self.rounds as f64)),
+                    ("sim_secs", json::num(self.sim_secs)),
+                    ("mean_makespan_secs", json::num(self.mean_makespan_secs)),
+                    ("quarantined", json::num(self.quarantined as f64)),
+                    ("uplink_retries", json::num(self.retries as f64)),
+                    ("mean_fold_final_train_loss", json::num(self.mean_final_train_loss)),
+                    (
+                        "trimmed_fold_final_train_loss",
+                        json::num(self.trimmed_final_train_loss),
+                    ),
+                ]),
+            ),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Probe the robust folds: (1) bare bandwidth of the buffered trimmed-mean
+/// and median folds vs the plain streaming mean on K mixed-tier updates
+/// (each sample bounded by `budget`); (2) the committed byzantine-flaky
+/// scenario end to end under FedAvg, once with the plain mean (the signflip
+/// cohort folds straight into the global model) and once with the trimmed
+/// mean (the poison is trimmed away), recording makespan, quarantines,
+/// retries, and both final train losses.
+pub fn measure_robustness_throughput(
+    clients: usize,
+    rounds: usize,
+    budget: Duration,
+) -> Result<RobustnessThroughput> {
+    use crate::coordinator::{fold_updates_robust, fold_updates_sharded, ClientUpdate};
+    use crate::runtime::Metadata;
+    use crate::util::bench::bench;
+
+    // --- bare fold bandwidth ---
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    let meta = Metadata::load(&dir)?;
+    let updates: Vec<ClientUpdate> = (0..clients)
+        .map(|i| {
+            let tier = 1 + i % meta.max_tiers;
+            let t = meta.tier(tier);
+            ClientUpdate {
+                client_id: i,
+                tier,
+                weight: 100.0,
+                client_vec: vec![0.5; t.client_vec_len],
+                server_vec: vec![0.5; t.server_vec_len],
+            }
+        })
+        .collect();
+    let mut acc = vec![0.0f32; meta.total_params];
+    let shards = resolve_threads(0);
+    let bytes = (clients * meta.total_params * 4) as f64;
+    let gbps = |st: crate::util::bench::BenchStats| bytes / st.min.as_secs_f64().max(1e-12) / 1e9;
+    let sp = bench(&format!("robust fold K={clients} plain mean"), 100, budget, || {
+        fold_updates_sharded(&meta, &mut acc, &updates, shards);
+        std::hint::black_box(acc[0]);
+    });
+    let st = bench(&format!("robust fold K={clients} trimmed mean"), 100, budget, || {
+        fold_updates_robust(&meta, &mut acc, &updates, shards, FoldStrategy::TrimmedMean);
+        std::hint::black_box(acc[0]);
+    });
+    let sm = bench(&format!("robust fold K={clients} median"), 100, budget, || {
+        fold_updates_robust(&meta, &mut acc, &updates, shards, FoldStrategy::Median);
+        std::hint::black_box(acc[0]);
+    });
+
+    // --- committed byzantine-flaky scenario ---
+    let scenario = Scenario::parse(BYZANTINE_FLAKY_TOML)?;
+    let sc_clients = scenario.total_clients();
+    let sc_name = scenario.name.clone();
+    let run = |fold: FoldStrategy| -> Result<Vec<RoundRecord>> {
+        let spec = RunSpec {
+            method: "fedavg".into(),
+            clients: sc_clients,
+            rounds,
+            batch_cap: Some(1),
+            train_total: sc_clients * 16,
+            test_total: 32,
+            eval_every: 1,
+            threads: 0,
+            scenario: Some(scenario.clone()),
+            fold,
+            ..Default::default()
+        };
+        let mut exp = Experiment::new(spec.to_config())?;
+        let mut records = Vec::new();
+        exp.run_with(|r| records.push(r.clone()))?;
+        Ok(records)
+    };
+    let mean_recs = run(FoldStrategy::Mean)?;
+    let trimmed_recs = run(FoldStrategy::TrimmedMean)?;
+    let sim_secs = trimmed_recs.last().map(|r| r.sim_time).unwrap_or(0.0);
+
+    Ok(RobustnessThroughput {
+        clients,
+        params: meta.total_params,
+        plain_gb_per_sec: gbps(sp),
+        trimmed_gb_per_sec: gbps(st),
+        median_gb_per_sec: gbps(sm),
+        scenario: sc_name,
+        scenario_clients: sc_clients,
+        rounds,
+        sim_secs,
+        mean_makespan_secs: sim_secs / trimmed_recs.len().max(1) as f64,
+        // the fault schedule is a pure function of the scenario seed, so
+        // both legs observe the same quarantines/retries — record one
+        quarantined: trimmed_recs.iter().map(|r| r.quarantined).sum(),
+        retries: trimmed_recs.iter().map(|r| r.retries).sum(),
+        mean_final_train_loss: mean_recs.last().map(|r| r.train_loss).unwrap_or(0.0),
+        trimmed_final_train_loss: trimmed_recs.last().map(|r| r.train_loss).unwrap_or(0.0),
     })
 }
 

@@ -43,6 +43,12 @@
 // lint suggests obscure the fixed accumulation order the determinism
 // contract depends on. Correctness lints still gate via `-D warnings`.
 #![allow(clippy::needless_range_loop)]
+// Direct `==` on floats is almost always a latent determinism bug in this
+// codebase — comparisons belong on `to_bits()` (the golden-trace currency)
+// or an explicit tolerance. The only two allowed sites are the pinned
+// weighted-median reduction in `coordinator::aggregate::robust_column`,
+// where exact equality of sorted coordinates is the intended semantics.
+#![warn(clippy::float_cmp)]
 
 pub mod anyhow;
 pub mod baselines;

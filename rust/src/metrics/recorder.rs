@@ -30,6 +30,12 @@ pub struct RoundRecord {
     /// Participants that missed the scenario's round deadline (0 outside
     /// scenario mode).
     pub straggled: usize,
+    /// Updates quarantined this round: a non-finite parameter vector never
+    /// reaches the fold (0 outside fault-injection scenarios).
+    pub quarantined: usize,
+    /// Failed uplink attempts across participants this round — each one
+    /// charged a re-send plus backoff in simulated time and wire bytes.
+    pub retries: usize,
     /// Host wall seconds actually spent executing this round.
     pub host_secs: f64,
 }
@@ -158,6 +164,8 @@ mod tests {
             tiers: vec![3; 4],
             wire_bytes: 1024,
             straggled: 0,
+            quarantined: 0,
+            retries: 0,
             host_secs: 0.1,
         }
     }

@@ -42,6 +42,25 @@ pub struct RuntimeStats {
     /// 1×1 stride-1 pad-0 convolutions that skipped the im2col column
     /// buffer (forward fill and backward col2im scatter both elided).
     pub im2col_elisions: u64,
+    /// Client updates quarantined by the round-engine sinks because they
+    /// carried non-finite values (never folded into the global model).
+    pub quarantined_updates: u64,
+}
+
+/// Process-wide count of quarantined (non-finite) client updates — like the
+/// fusion counters, a lock-free atomic surfaced through [`RuntimeStats`].
+static QUARANTINED_UPDATES: AtomicU64 = AtomicU64::new(0);
+
+/// Record one quarantined client update (round-engine sinks call this when
+/// an update fails the non-finite pre-check and is dropped instead of
+/// folded).
+pub fn note_quarantined_update() {
+    QUARANTINED_UPDATES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Current process-wide quarantined-update count.
+pub fn quarantined_updates() -> u64 {
+    QUARANTINED_UPDATES.load(Ordering::Relaxed)
 }
 
 /// Backend + artifact registry for one artifact set (one model config).
@@ -198,6 +217,7 @@ impl Runtime {
             arena_peak_bytes: super::tensor::arena_peak_bytes(),
             fused_gn_passes,
             im2col_elisions,
+            quarantined_updates: quarantined_updates(),
         }
     }
 }

@@ -30,7 +30,7 @@ pub mod tensor;
 
 pub use artifact::{ClientStepOut, FullStepOut, ServerStepOut, StepEngine, TrainState};
 pub use backend::{ExecBackend, ExecOut, RefBackend, StepKind};
-pub use client::{Runtime, RuntimeStats};
+pub use client::{note_quarantined_update, quarantined_updates, Runtime, RuntimeStats};
 pub use literal::Literal;
 pub use metadata::{load_f32_bin, Metadata, ParamEntry, TierMeta};
 pub use spec::ModelConfig;

@@ -359,7 +359,7 @@ mod tests {
         assert_ne!(a, c);
         // GN scales are exactly 1, biases 0
         let e = meta.params.iter().find(|e| e.name == "md1.gn.scale").unwrap();
-        assert!(a[e.offset..e.offset + e.size()].iter().all(|&v| v == 1.0));
+        assert!(a[e.offset..e.offset + e.size()].iter().all(|&v| v.to_bits() == 1.0f32.to_bits()));
         for t in 1..=meta.max_tiers {
             let aux = init_aux(&meta, t, 0).unwrap();
             assert_eq!(aux.len(), meta.tier(t).aux_len);

@@ -15,7 +15,8 @@ pub use profile::{
     PAPER_PROFILES,
 };
 pub use scenario::{
-    CohortSpec, DeadlinePolicy, LinkEventSpec, Scenario, ScenarioEngine, ScenarioRound, Straggle,
+    CohortSpec, CorruptMode, DeadlinePolicy, FaultVerdict, LinkEventSpec, Scenario,
+    ScenarioEngine, ScenarioRound, Straggle,
 };
 
 /// Server compute model: the paper's server is a GPU box that trains all

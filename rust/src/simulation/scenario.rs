@@ -46,6 +46,27 @@
 //! mbps_scale = 0.25
 //! add_latency_ms = 40.0
 //! ```
+//!
+//! ## Fault knobs (per cohort)
+//!
+//! ```toml
+//! [cohort.byzantine]
+//! count = 2
+//! crash_prob = 0.1          # client dies mid-round, update lost
+//! corrupt_prob = 1.0        # Byzantine: the trained update is poisoned
+//! corrupt_mode = "signflip" # nan | scale | signflip
+//! link_fail_prob = 0.4      # per-attempt transient uplink failure
+//! retry_max = 3             # retries after the first failed attempt
+//! retry_backoff_secs = 0.5  # backoff before retry i is 0.5 * 2^i
+//! ```
+//!
+//! Fault verdicts are **pre-drawn** by `begin_round` (single-threaded, in
+//! round order) from per-client fault streams derived from
+//! `(scenario seed, client)` — separate from the link streams, with a fixed
+//! draw schedule per client per round — so fault outcomes are a pure
+//! function of the scenario and identical for every engine knob setting.
+//! A scenario with no fault knobs allocates no fault streams at all: the
+//! fault-free path is bit-identical to the pre-fault engine.
 
 use std::path::Path;
 
@@ -109,6 +130,86 @@ impl Straggle {
     }
 }
 
+/// How a Byzantine cohort poisons the updates it uploads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptMode {
+    /// Every parameter becomes NaN. Caught by the aggregation quarantine
+    /// (non-finite updates never fold), so this mode exercises graceful
+    /// degradation rather than robust statistics.
+    Nan,
+    /// Parameters scaled by ×100 — a classic magnitude attack that a plain
+    /// weighted mean amplifies and trimmed-mean/median reject.
+    Scale,
+    /// Parameters negated — a direction attack: finite, plausible norms,
+    /// so only coordinate-wise robust folds defeat it.
+    SignFlip,
+}
+
+impl CorruptMode {
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "nan" => Ok(CorruptMode::Nan),
+            "scale" => Ok(CorruptMode::Scale),
+            "signflip" => Ok(CorruptMode::SignFlip),
+            other => {
+                Err(anyhow!("unknown corrupt_mode '{other}' (valid: nan, scale, signflip)"))
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CorruptMode::Nan => "nan",
+            CorruptMode::Scale => "scale",
+            CorruptMode::SignFlip => "signflip",
+        }
+    }
+
+    /// Poison a trained parameter vector in place. Pure per-element map, so
+    /// applying it on a worker thread is deterministic.
+    pub fn poison(self, xs: &mut [f32]) {
+        match self {
+            CorruptMode::Nan => {
+                for x in xs {
+                    *x = f32::NAN;
+                }
+            }
+            CorruptMode::Scale => {
+                for x in xs {
+                    *x *= 100.0;
+                }
+            }
+            CorruptMode::SignFlip => {
+                for x in xs {
+                    *x = -*x;
+                }
+            }
+        }
+    }
+}
+
+/// Pre-drawn fault outcome for one client in one round. Drawn by
+/// [`ScenarioEngine::begin_round`] on the coordinator thread; workers and
+/// sinks only ever read it, so fault handling is identical across the
+/// engine knob grid.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultVerdict {
+    /// The client dies mid-round: it does no work, uploads nothing, and the
+    /// server does not wait for it (contributes nothing to the makespan).
+    pub crashed: bool,
+    /// Byzantine poisoning applied to the trained update, if any.
+    pub corrupt: Option<CorruptMode>,
+    /// Failed uplink attempts before the first success (or before giving
+    /// up — see `uplink_lost`). Each failed attempt re-charges the uplink
+    /// transfer plus an exponential backoff in virtual time.
+    pub uplink_failures: usize,
+    /// All `retry_max + 1` attempts failed: the update never arrives, but
+    /// the full retry cost still counts toward the client's round time.
+    pub uplink_lost: bool,
+    /// Base backoff of the client's cohort (doubles per failed attempt).
+    pub retry_backoff_secs: f64,
+}
+
 /// One homogeneous group of clients in the trace.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CohortSpec {
@@ -132,6 +233,19 @@ pub struct CohortSpec {
     pub latency_ms: f64,
     /// Bandwidth floor the drift cannot cross.
     pub floor_mbps: f64,
+    /// Per-round probability the client dies mid-round (update lost).
+    pub crash_prob: f64,
+    /// Per-round probability the client uploads a poisoned update.
+    pub corrupt_prob: f64,
+    /// How poisoned updates are corrupted (engaged when `corrupt_prob > 0`).
+    pub corrupt_mode: CorruptMode,
+    /// Per-attempt probability an uplink transfer fails transiently.
+    pub link_fail_prob: f64,
+    /// Retries after the first failed uplink attempt (so up to
+    /// `retry_max + 1` attempts total before the update is lost).
+    pub retry_max: usize,
+    /// Backoff before retry `i` is `retry_backoff_secs * 2^i`.
+    pub retry_backoff_secs: f64,
 }
 
 impl CohortSpec {
@@ -149,7 +263,18 @@ impl CohortSpec {
             walk_sigma: 0.0,
             latency_ms: 0.0,
             floor_mbps: 1.0,
+            crash_prob: 0.0,
+            corrupt_prob: 0.0,
+            corrupt_mode: CorruptMode::Nan,
+            link_fail_prob: 0.0,
+            retry_max: 3,
+            retry_backoff_secs: 0.5,
         }
+    }
+
+    /// Whether any fault knob is engaged for this cohort.
+    pub fn has_faults(&self) -> bool {
+        self.crash_prob > 0.0 || self.corrupt_prob > 0.0 || self.link_fail_prob > 0.0
     }
 
     fn active_at(&self, round: usize) -> bool {
@@ -223,6 +348,15 @@ impl Scenario {
                 walk_sigma: c.f64_or("walk_sigma", 0.0)?,
                 latency_ms: c.f64_or("latency_ms", 0.0)?,
                 floor_mbps: c.f64_or("floor_mbps", 1.0)?,
+                crash_prob: c.f64_or("crash_prob", 0.0)?,
+                corrupt_prob: c.f64_or("corrupt_prob", 0.0)?,
+                corrupt_mode: match c.opt_str("corrupt_mode")? {
+                    Some(m) => CorruptMode::from_name(&m)?,
+                    None => CorruptMode::Nan,
+                },
+                link_fail_prob: c.f64_or("link_fail_prob", 0.0)?,
+                retry_max: c.usize_or("retry_max", 3)?,
+                retry_backoff_secs: c.f64_or("retry_backoff_secs", 0.5)?,
             });
         }
 
@@ -284,6 +418,28 @@ impl Scenario {
                 "cohort '{}': walk_sigma/latency_ms/floor_mbps must be >= 0",
                 c.name
             );
+            for (key, p) in [
+                ("crash_prob", c.crash_prob),
+                ("corrupt_prob", c.corrupt_prob),
+                ("link_fail_prob", c.link_fail_prob),
+            ] {
+                crate::anyhow::ensure!(
+                    (0.0..=1.0).contains(&p),
+                    "cohort '{}': {} must be in [0, 1]",
+                    c.name,
+                    key
+                );
+            }
+            crate::anyhow::ensure!(
+                c.retry_backoff_secs.is_finite() && c.retry_backoff_secs >= 0.0,
+                "cohort '{}': retry_backoff_secs must be finite and >= 0",
+                c.name
+            );
+            crate::anyhow::ensure!(
+                c.retry_max <= 16,
+                "cohort '{}': retry_max must be <= 16 (each attempt is one RNG draw)",
+                c.name
+            );
         }
         if let Some(d) = self.deadline_secs {
             crate::anyhow::ensure!(
@@ -317,6 +473,14 @@ impl Scenario {
     /// Total fleet size (must equal the experiment's `clients.count`).
     pub fn total_clients(&self) -> usize {
         self.cohorts.iter().map(|c| c.count).sum()
+    }
+
+    /// Whether any cohort engages the fault-injection layer. When false,
+    /// the engine allocates no fault streams and `ScenarioRound::faults`
+    /// is `None` — the fault-free path is bit-identical to the pre-fault
+    /// engine by construction.
+    pub fn has_faults(&self) -> bool {
+        self.cohorts.iter().any(|c| c.has_faults())
     }
 
     /// The single authority for the fleet-size cross-check against an
@@ -377,9 +541,18 @@ pub struct ScenarioRound {
     pub data_scale: Vec<f64>,
     pub deadline_secs: Option<f64>,
     pub on_deadline: DeadlinePolicy,
+    /// Pre-drawn per-client fault verdicts; `None` when the scenario
+    /// declares no fault knobs (the common case — nothing changes).
+    pub faults: Option<Vec<FaultVerdict>>,
 }
 
 impl ScenarioRound {
+    /// This round's fault verdict for client `k` (no-fault default when the
+    /// scenario has no fault layer).
+    pub fn fault(&self, k: usize) -> FaultVerdict {
+        self.faults.as_ref().map(|f| f[k]).unwrap_or_default()
+    }
+
     /// Apply the deadline to one client's simulated round time. Pure
     /// per-client decision (no cross-client state), so it is identical
     /// whether the sink runs streamed, pipelined, or sharded.
@@ -410,6 +583,9 @@ impl ScenarioRound {
 pub struct ScenarioEngine {
     scenario: Scenario,
     links: Vec<LinkProcess>,
+    /// Per-client fault streams, separate from the link streams; `None`
+    /// when no cohort declares fault knobs.
+    fault_rngs: Option<Vec<Rng64>>,
     next_round: usize,
 }
 
@@ -452,7 +628,21 @@ impl ScenarioEngine {
                 )
             })
             .collect();
-        Ok(Self { scenario, links, next_round: 0 })
+        // fault streams reuse the per-client mix with a fresh domain tag,
+        // so turning faults on never perturbs the link walks (and vice
+        // versa); allocated only when some cohort engages the fault layer
+        let fault_rngs = scenario.has_faults().then(|| {
+            (0..n)
+                .map(|k| {
+                    let mix = scenario
+                        .seed
+                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        .wrapping_add((k as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+                    Rng64::seed_from_u64(mix ^ 0xFA17_5EED)
+                })
+                .collect()
+        });
+        Ok(Self { scenario, links, fault_rngs, next_round: 0 })
     }
 
     pub fn scenario(&self) -> &Scenario {
@@ -475,12 +665,48 @@ impl ScenarioEngine {
         let n = self.clients();
         let links: Vec<LinkQuality> =
             self.links.iter_mut().map(|lp| lp.advance(round)).collect();
+        let scenario = &self.scenario;
+        // pre-draw every client's fault verdict with a FIXED draw schedule
+        // per client per round (1 crash + 1 corrupt + retry_max+1 attempt
+        // draws), active or not, fault-prone or not — so churn, sampling,
+        // or one knob flipping never shifts another draw in the stream
+        let faults = self.fault_rngs.as_mut().map(|rngs| {
+            (0..n)
+                .map(|k| {
+                    let c = scenario.cohort_of(k);
+                    let rng = &mut rngs[k];
+                    let crash_u = rng.next_f64();
+                    let corrupt_u = rng.next_f64();
+                    let mut failed = 0usize;
+                    let mut delivered = false;
+                    for _ in 0..=c.retry_max {
+                        let u = rng.next_f64();
+                        if delivered {
+                            continue; // draw consumed, outcome already fixed
+                        }
+                        if u < c.link_fail_prob {
+                            failed += 1;
+                        } else {
+                            delivered = true;
+                        }
+                    }
+                    FaultVerdict {
+                        crashed: crash_u < c.crash_prob,
+                        corrupt: (corrupt_u < c.corrupt_prob).then_some(c.corrupt_mode),
+                        uplink_failures: failed,
+                        uplink_lost: !delivered,
+                        retry_backoff_secs: c.retry_backoff_secs,
+                    }
+                })
+                .collect()
+        });
         ScenarioRound {
             round,
             links,
-            data_scale: (0..n).map(|k| self.scenario.cohort_of(k).data_scale(round)).collect(),
-            deadline_secs: self.scenario.deadline_secs,
-            on_deadline: self.scenario.on_deadline,
+            data_scale: (0..n).map(|k| scenario.cohort_of(k).data_scale(round)).collect(),
+            deadline_secs: scenario.deadline_secs,
+            on_deadline: scenario.on_deadline,
+            faults,
         }
     }
 }
@@ -592,6 +818,7 @@ mod tests {
             data_scale: vec![1.0],
             deadline_secs: Some(5.0),
             on_deadline: policy,
+            faults: None,
         };
         let slow = ClientRoundTime { compute: 7.0, comm: 1.0, server: 0.0 };
         let fast = ClientRoundTime { compute: 1.0, comm: 1.0, server: 0.0 };
@@ -626,9 +853,155 @@ mod tests {
         bad("cpus = 0.25", "cpus = 0.0");
         bad("on_deadline = \"drop\"", "on_deadline = \"retry\"");
         bad("deadline_secs = 40.0", "deadline_secs = -1.0");
+        bad("deadline_secs = 40.0", "deadline_secs = 0.0");
         bad("arrive = 2\n        depart = 5", "arrive = 5\n        depart = 5");
         bad("cohort = \"base\"", "cohort = \"ghost\"");
         bad("rounds = [3, 4]", "rounds = [4, 3]");
         bad("mbps_scale = 0.25", "mbps_scale = 0.0");
+    }
+
+    const FAULT_TOML: &str = r#"
+        [scenario]
+        name = "byzantine"
+        seed = 11
+
+        [cohort.honest]
+        count = 3
+        cpus = 1.0
+        mbps = 30.0
+
+        [cohort.rogue]
+        count = 2
+        cpus = 1.0
+        mbps = 30.0
+        crash_prob = 0.25
+        corrupt_prob = 1.0
+        corrupt_mode = "signflip"
+        link_fail_prob = 0.5
+        retry_max = 2
+        retry_backoff_secs = 0.25
+    "#;
+
+    #[test]
+    fn fault_knobs_parse_with_defaults() {
+        let sc = Scenario::parse(FAULT_TOML).unwrap();
+        assert!(sc.has_faults());
+        let honest = &sc.cohorts[0];
+        assert!(!honest.has_faults(), "no knobs set -> fault-free cohort");
+        assert_eq!(honest.retry_max, 3, "retry defaults present even when inert");
+        let rogue = &sc.cohorts[1];
+        assert_eq!(rogue.corrupt_mode, CorruptMode::SignFlip);
+        assert_eq!(rogue.retry_max, 2);
+        assert!((rogue.retry_backoff_secs - 0.25).abs() < 1e-12);
+        // the flash-crowd style spec with no fault knobs stays fault-free
+        assert!(!Scenario::parse(TOML).unwrap().has_faults());
+    }
+
+    #[test]
+    fn fault_validation_rejects_bad_knobs() {
+        let bad = |patch: &str, with: &str| {
+            let text = FAULT_TOML.replace(patch, with);
+            assert!(Scenario::parse(&text).is_err(), "{patch} -> {with} must be rejected");
+        };
+        bad("crash_prob = 0.25", "crash_prob = 1.5");
+        bad("corrupt_prob = 1.0", "corrupt_prob = -0.1");
+        bad("corrupt_mode = \"signflip\"", "corrupt_mode = \"zero\"");
+        bad("link_fail_prob = 0.5", "link_fail_prob = 2.0");
+        bad("retry_max = 2", "retry_max = 99");
+        bad("retry_backoff_secs = 0.25", "retry_backoff_secs = -1.0");
+    }
+
+    #[test]
+    fn fault_verdicts_are_deterministic_and_leave_links_untouched() {
+        let sc = Scenario::parse(FAULT_TOML).unwrap();
+        let run = || {
+            let mut e = ScenarioEngine::new(sc.clone()).unwrap();
+            (0..8).map(|r| e.begin_round(r)).collect::<Vec<_>>()
+        };
+        let a = run();
+        let b = run();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.faults, rb.faults, "round {}: verdicts must be reproducible", ra.round);
+        }
+        // verdicts actually vary (corrupt_prob = 1.0 marks the rogue cohort
+        // every round; honest clients never fault)
+        for r in &a {
+            let f = r.faults.as_ref().expect("fault layer engaged");
+            assert_eq!(f.len(), 5);
+            for k in 0..3 {
+                let v = f[k];
+                assert!(
+                    !v.crashed && v.corrupt.is_none() && v.uplink_failures == 0 && !v.uplink_lost,
+                    "honest client {k} never faults"
+                );
+            }
+            for k in 3..5 {
+                assert_eq!(f[k].corrupt, Some(CorruptMode::SignFlip));
+                assert!((f[k].retry_backoff_secs - 0.25).abs() < 1e-12);
+            }
+        }
+        assert!(
+            a.iter().any(|r| r.faults.as_ref().unwrap()[3..].iter().any(|v| v.uplink_failures > 0)),
+            "link_fail_prob = 0.5 over 8 rounds must produce some failed attempts"
+        );
+
+        // the fault layer must not perturb the link streams: the same
+        // scenario with the fault knobs stripped yields identical link
+        // state round for round
+        let mut stripped = sc.clone();
+        for c in &mut stripped.cohorts {
+            c.crash_prob = 0.0;
+            c.corrupt_prob = 0.0;
+            c.link_fail_prob = 0.0;
+        }
+        assert!(!stripped.has_faults());
+        let mut e = ScenarioEngine::new(stripped).unwrap();
+        for r in 0..8 {
+            let plain = e.begin_round(r);
+            assert!(plain.faults.is_none(), "fault-free scenario carries no verdicts");
+            assert_eq!(plain.links, a[r].links, "round {r}: links must not shift");
+            assert_eq!(plain.data_scale, a[r].data_scale);
+        }
+    }
+
+    #[test]
+    fn exhausted_retries_lose_the_update_deterministically() {
+        let mut sc = Scenario::parse(FAULT_TOML).unwrap();
+        sc.cohorts[1].link_fail_prob = 1.0; // every attempt fails
+        sc.cohorts[1].retry_max = 2;
+        let mut e = ScenarioEngine::new(sc).unwrap();
+        let r = e.begin_round(0);
+        let v = r.fault(3);
+        assert!(v.uplink_lost, "p=1 exhausts every attempt");
+        assert_eq!(v.uplink_failures, 3, "retry_max + 1 attempts all failed");
+        assert!(!r.fault(0).uplink_lost, "honest cohort unaffected");
+    }
+
+    #[test]
+    fn deadline_exactly_equal_is_not_a_straggle() {
+        let sr = ScenarioRound {
+            round: 0,
+            links: vec![LinkQuality { mbps: 30.0, latency_secs: 0.0 }],
+            data_scale: vec![1.0],
+            deadline_secs: Some(5.0),
+            on_deadline: DeadlinePolicy::Drop,
+            faults: None,
+        };
+        // 2.5 + 1.5 + 1.0 sums to exactly 5.0 in binary
+        let mut t = ClientRoundTime { compute: 2.5, comm: 1.5, server: 1.0 };
+        assert_eq!(sr.check_deadline(&mut t), Straggle::None, "t == deadline makes it");
+        assert!((t.total() - 5.0).abs() < 1e-12, "time untouched");
+        // nudged past the deadline it straggles
+        let mut t = ClientRoundTime { compute: 2.5, comm: 1.5, server: 1.0 + 1e-9 };
+        assert_eq!(sr.check_deadline(&mut t), Straggle::Dropped);
+    }
+
+    #[test]
+    fn zero_deadline_rejected_by_validation() {
+        let mut sc = Scenario::parse(TOML).unwrap();
+        sc.deadline_secs = Some(0.0);
+        assert!(sc.validate().is_err(), "a zero deadline would drop every client");
+        sc.deadline_secs = Some(f64::NAN);
+        assert!(sc.validate().is_err());
     }
 }

@@ -1,0 +1,285 @@
+//! Golden fault trace: the determinism contract extended to fault
+//! injection and Byzantine-robust aggregation.
+//!
+//! With crash faults, Byzantine corruption, and flaky retried uplinks all
+//! active at once — plus a robust fold on the server — every engine
+//! configuration in the `{threads, intra_threads, pipeline_depth,
+//! agg_shards, fuse_forward}` grid must reproduce the sequential barrier
+//! engine's trace **byte for byte**, including the fault-specific channels
+//! (per-round quarantine and retry counts). The inline scenario guarantees
+//! the fault signal: a NaN-corrupt cohort is quarantined every round it
+//! delivers, and a flaky cohort's failed uplink attempts are charged and
+//! re-sent. A second suite shows the robust folds carry real signal: under
+//! a sign-flipping cohort, the trimmed mean and median recover train loss
+//! the poisoned plain mean loses.
+//!
+//! The CI determinism matrix injects extra thread counts per leg via
+//! `DTFL_TEST_THREADS` (1/2/8), exactly like `tests/golden_trace.rs`.
+
+use dtfl::coordinator::FoldStrategy;
+use dtfl::experiment::Experiment;
+use dtfl::harness::{RunSpec, BYZANTINE_FLAKY_TOML};
+use dtfl::metrics::RoundRecord;
+use dtfl::simulation::{CohortSpec, CorruptMode, DeadlinePolicy, Scenario};
+
+/// One round of the trace, everything reduced to exact bit patterns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct TraceRow {
+    round: usize,
+    sim_time: u64,
+    makespan: u64,
+    train_loss: u64,
+    test_accuracy: Option<u64>,
+    tiers: Vec<usize>,
+    wire_bytes: u64,
+    straggled: usize,
+    quarantined: usize,
+    retries: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Trace {
+    rows: Vec<TraceRow>,
+    params: Vec<u32>,
+}
+
+fn trace_of(records: &[RoundRecord], params: &[f32]) -> Trace {
+    Trace {
+        rows: records
+            .iter()
+            .map(|r| TraceRow {
+                round: r.round,
+                sim_time: r.sim_time.to_bits(),
+                makespan: r.makespan.to_bits(),
+                train_loss: r.train_loss.to_bits(),
+                test_accuracy: r.test_accuracy.map(f64::to_bits),
+                tiers: r.tiers.clone(),
+                wire_bytes: r.wire_bytes,
+                straggled: r.straggled,
+                quarantined: r.quarantined,
+                retries: r.retries,
+            })
+            .collect(),
+        params: params.iter().map(|p| p.to_bits()).collect(),
+    }
+}
+
+/// Crash + NaN-corruption + flaky retried uplinks, with guaranteed fault
+/// signal: the "nasty" client's every update is NaN-poisoned (quarantined
+/// whenever it delivers) and the "flaky" client's uplink attempts fail 60%
+/// of the time (retries charged; occasionally all attempts fail and the
+/// update is lost). Links are fast and the deadline loose, so the fault
+/// channels — not deadline drops — drive the trace.
+fn fault_scenario() -> Scenario {
+    let mut honest = CohortSpec::new("honest", 4, 1.0, 30.0);
+    honest.walk_sigma = 0.05;
+    honest.latency_ms = 5.0;
+    honest.floor_mbps = 10.0;
+    let mut nasty = CohortSpec::new("nasty", 1, 1.0, 30.0);
+    nasty.corrupt_prob = 1.0;
+    nasty.corrupt_mode = CorruptMode::Nan;
+    let mut flaky = CohortSpec::new("flaky", 1, 0.5, 12.0);
+    flaky.crash_prob = 0.25;
+    flaky.link_fail_prob = 0.6;
+    flaky.retry_max = 2;
+    flaky.retry_backoff_secs = 0.25;
+    Scenario {
+        name: "golden-faults".into(),
+        seed: 13,
+        deadline_secs: Some(30.0),
+        on_deadline: DeadlinePolicy::Drop,
+        delta_downlink: true,
+        cohorts: vec![honest, nasty, flaky],
+        links: vec![],
+    }
+}
+
+/// Engine configuration under test.
+#[derive(Debug, Clone, Copy)]
+struct Knobs {
+    threads: usize,
+    intra: usize,
+    depth: usize,
+    shards: usize,
+    fuse: bool,
+}
+
+const REFERENCE: Knobs = Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: false };
+
+fn run(method: &str, scenario: Scenario, rounds: usize, fold: FoldStrategy, k: Knobs) -> Trace {
+    let spec = RunSpec {
+        method: method.into(),
+        clients: scenario.total_clients(),
+        rounds,
+        batch_cap: Some(1),
+        train_total: scenario.total_clients() * 16,
+        test_total: 32,
+        eval_every: 1,
+        threads: k.threads,
+        intra_threads: k.intra,
+        pipeline_depth: k.depth,
+        agg_shards: k.shards,
+        fuse_forward: k.fuse,
+        fold,
+        scenario: Some(scenario),
+        ..Default::default()
+    };
+    let mut exp = Experiment::new(spec.to_config()).expect("fault experiment");
+    let mut records = Vec::new();
+    exp.run_with(|r| records.push(r.clone())).expect("fault run");
+    trace_of(&records, exp.method.global_params())
+}
+
+/// Extra thread count injected by the CI determinism matrix.
+fn env_threads() -> Option<usize> {
+    std::env::var("DTFL_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+}
+
+fn grid() -> Vec<Knobs> {
+    let mut g = vec![
+        // fusion alone against the unfused sequential reference
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true },
+        // pipelining/sharding alone, sequential pool
+        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false },
+        // the default engine (parallel pool, pipelined, auto shards, fused)
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
+        // everything composed, including intra-step kernel splits
+        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true },
+    ];
+    if let Some(n) = env_threads() {
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false });
+    }
+    g
+}
+
+fn assert_knob_invariant(
+    method: &str,
+    scenario: &Scenario,
+    rounds: usize,
+    fold: FoldStrategy,
+) -> Trace {
+    let golden = run(method, scenario.clone(), rounds, fold, REFERENCE);
+    assert!(!golden.rows.is_empty(), "{method}: empty fault trace");
+    for k in grid() {
+        let t = run(method, scenario.clone(), rounds, fold, k);
+        assert_eq!(
+            golden.rows, t.rows,
+            "{method} fold={fold:?} {k:?}: fault trace diverged from the barrier engine"
+        );
+        assert_eq!(
+            golden.params, t.params,
+            "{method} fold={fold:?} {k:?}: global param bits diverged"
+        );
+    }
+    golden
+}
+
+#[test]
+fn dtfl_fault_trace_is_knob_invariant_with_guaranteed_faults() {
+    let sc = fault_scenario();
+    let golden = assert_knob_invariant("dtfl", &sc, 5, FoldStrategy::Mean);
+
+    // fault signal: the NaN cohort is quarantined every round it delivers,
+    // and the flaky cohort's failed attempts are charged as retries
+    let quarantined: usize = golden.rows.iter().map(|r| r.quarantined).sum();
+    let retries: usize = golden.rows.iter().map(|r| r.retries).sum();
+    assert!(quarantined > 0, "the NaN-corrupt cohort must be quarantined at least once");
+    assert!(retries > 0, "a 60% flaky uplink must retry at least once in 5 rounds");
+    assert!(
+        golden.rows.iter().all(|r| r.quarantined <= 1),
+        "only the single NaN client can be quarantined per round"
+    );
+    // quarantine protects the model: every global parameter stays finite
+    assert!(
+        golden.params.iter().all(|&b| f32::from_bits(b).is_finite()),
+        "quarantined NaN updates must never reach the global model"
+    );
+}
+
+#[test]
+fn fedavg_fault_trace_is_knob_invariant_under_a_robust_fold() {
+    // the whole-model path (shared by fedavg/fedyogi/splitfed) holds the
+    // same contract, with the robust fold engaged to cover its sharded
+    // per-coordinate reduction under real fault traffic
+    let sc = fault_scenario();
+    let golden = assert_knob_invariant("fedavg", &sc, 4, FoldStrategy::TrimmedMean);
+    assert!(golden.rows.iter().all(|r| r.tiers.is_empty()), "fedavg records no tiers");
+    assert!(
+        golden.params.iter().all(|&b| f32::from_bits(b).is_finite()),
+        "robust fold + quarantine must keep the global model finite"
+    );
+}
+
+#[test]
+fn committed_byzantine_flaky_scenario_is_knob_invariant() {
+    // the committed bench scenario parses and holds the byte-for-byte
+    // contract across the grid
+    let sc = Scenario::parse(BYZANTINE_FLAKY_TOML).expect("committed scenario parses");
+    assert_eq!(sc.total_clients(), 10);
+    assert!(sc.delta_downlink && sc.deadline_secs.is_some());
+    assert!(
+        sc.cohorts.iter().any(|c| c.corrupt_prob > 0.0)
+            && sc.cohorts.iter().any(|c| c.link_fail_prob > 0.0),
+        "the committed scenario must actually inject faults"
+    );
+    let golden = assert_knob_invariant("dtfl", &sc, 3, FoldStrategy::Median);
+    let retries: usize = golden.rows.iter().map(|r| r.retries).sum();
+    assert!(retries > 0, "the flaky cohort must retry at least once in 3 rounds");
+}
+
+#[test]
+fn trimmed_mean_and_median_recover_loss_a_poisoned_mean_loses() {
+    // the committed scenario's Byzantine cohort sign-flips every update it
+    // uploads (finite poison: it folds silently into a plain mean, and the
+    // honest clients hold the weight majority — the regime robust
+    // aggregation promises recovery in). After 8 rounds the plain mean
+    // must be training a measurably worse model than either robust fold.
+    let sc = Scenario::parse(BYZANTINE_FLAKY_TOML).expect("committed scenario parses");
+    let rounds = 8;
+    let final_loss = |fold: FoldStrategy| {
+        let t = run("fedavg", sc.clone(), rounds, fold, REFERENCE);
+        let loss = f64::from_bits(t.rows.last().expect("rounds ran").train_loss);
+        assert!(loss.is_finite(), "{fold:?}: train loss must stay finite");
+        loss
+    };
+    let mean = final_loss(FoldStrategy::Mean);
+    let trimmed = final_loss(FoldStrategy::TrimmedMean);
+    let median = final_loss(FoldStrategy::Median);
+    assert!(
+        trimmed < mean,
+        "trimmed mean must recover loss the poisoned mean loses ({trimmed} vs {mean})"
+    );
+    assert!(
+        median < mean,
+        "median must recover loss the poisoned mean loses ({median} vs {mean})"
+    );
+}
+
+#[test]
+fn no_faults_section_means_no_fault_machinery() {
+    // a scenario without fault knobs draws no fault RNG streams and its
+    // rounds carry no verdicts — the engines see exactly the pre-fault
+    // behavior (the existing golden/scenario traces pin the bytes; this
+    // pins the mechanism)
+    let sc = Scenario {
+        name: "clean".into(),
+        seed: 5,
+        deadline_secs: None,
+        on_deadline: DeadlinePolicy::Drop,
+        delta_downlink: false,
+        cohorts: vec![CohortSpec::new("a", 3, 1.0, 30.0)],
+        links: vec![],
+    };
+    assert!(sc.cohorts.iter().all(|c| !c.has_faults()));
+    let mut engine = dtfl::simulation::ScenarioEngine::new(sc).expect("engine");
+    let round = engine.begin_round(0);
+    assert!(round.faults.is_none(), "no [faults] knobs -> no verdicts drawn");
+    for k in 0..3 {
+        let v = round.fault(k);
+        assert!(!v.crashed && v.corrupt.is_none() && v.uplink_failures == 0 && !v.uplink_lost);
+    }
+}

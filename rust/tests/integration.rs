@@ -314,6 +314,7 @@ fn pipelined_empty_round_carries_global_over() {
         next_participants: Some(&next),
         scenario: None,
         downlink: None,
+        fold: dtfl::coordinator::FoldStrategy::Mean,
     };
     let out = dtfl.round(&mut env).unwrap();
     assert!(out.times.is_empty() && out.tiers.is_empty());

@@ -134,7 +134,8 @@ fn bench_round_smoke_writes_hotpath_json() {
 
     use dtfl::harness::{
         kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
-        measure_pipeline_throughput, measure_round_throughput, measure_scenario_throughput,
+        measure_pipeline_throughput, measure_robustness_throughput, measure_round_throughput,
+        measure_scenario_throughput,
     };
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
 
@@ -156,6 +157,14 @@ fn bench_round_smoke_writes_hotpath_json() {
         st.fedavg_full_bytes
     );
 
+    let rb = measure_robustness_throughput(50, 4, Duration::from_millis(150))
+        .expect("robustness throughput probe");
+    assert!(rb.quarantined > 0 || rb.retries > 0, "the committed fault scenario must fire");
+    assert!(
+        rb.trimmed_final_train_loss.is_finite() && rb.mean_final_train_loss.is_finite(),
+        "signflip poison is finite — both folds' losses must be too"
+    );
+
     let (kernels, arena_peak) =
         measure_kernel_throughput(Duration::from_millis(150)).expect("kernel throughput probe");
     assert!(arena_peak > 0, "full_step must exercise the scratch arena");
@@ -168,6 +177,7 @@ fn bench_round_smoke_writes_hotpath_json() {
     report.extra("pipeline", pt.to_json(source));
     report.extra("fused", ft.to_json(&[], source));
     report.extra("scenario", st.to_json(source));
+    report.extra("robustness", rb.to_json(source));
     report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }
