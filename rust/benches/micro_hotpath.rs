@@ -1,7 +1,9 @@
 //! L3 hot-path micro-benchmarks (the §Perf targets):
 //!   * blocked vs naive matmul kernels (GFLOP/s) + scratch-arena peak bytes
 //!   * fused vs unfused forward path (gn/relu epilogues, 1×1 im2col
-//!     elision) + the `kernels::tune` MR/NR register-tile sweep
+//!     elision) + the `kernels::tune` lane-width × MR/NR register-tile
+//!     sweep
+//!   * per-level SIMD dispatch throughput (scalar/AVX2/AVX-512/NEON)
 //!   * flat-layout aggregation (O(K·P) FMAs — the per-round CPU hot loop)
 //!   * dynamic tier scheduling (O(K·M) estimates)
 //!   * literal construction / extraction (backend boundary per step)
@@ -28,7 +30,7 @@ use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
 use dtfl::harness::{
     kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
     measure_pipeline_throughput, measure_robustness_throughput, measure_round_throughput,
-    measure_scenario_throughput,
+    measure_scenario_throughput, measure_simd_throughput,
 };
 use dtfl::runtime::kernels::tune;
 use dtfl::runtime::{literal as lit, Metadata};
@@ -96,18 +98,44 @@ fn bench_fused(clients: usize, rounds: usize) -> dtfl::util::json::Json {
         ft.elision.im2col_secs / ft.elision.elided_secs.max(1e-12)
     );
 
-    section("kernels::tune — MR/NR register-tile sweep (conv hot shape)");
+    section("kernels::tune — lane-width × MR/NR register-tile sweep (conv hot shape)");
     let sweep = tune::sweep(512, 144, 64, Duration::from_millis(400));
     for s in &sweep {
         println!(
-            "tile {}x{:<2} {:>7.2} GFLOP/s{}",
+            "tile {}x{:<2} {:<7} {:>7.2} GFLOP/s{}",
             s.mr,
             s.nr,
+            s.simd,
             s.gflops,
             if s.pinned { "  <- pinned in source" } else { "" }
         );
     }
     ft.to_json(&sweep, "cargo bench micro_hotpath")
+}
+
+/// Per-level SIMD dispatch probe: packed-matmul GFLOP/s and L1-resident
+/// agg-fold GB/s at every available level, bit-identity asserted (shared
+/// probe in `harness::measure_simd_throughput`).
+fn bench_simd(report: &mut BenchReport) {
+    section("simd dispatch: per-level matmul GFLOP/s + L1-resident agg GB/s");
+    let sd = measure_simd_throughput(Duration::from_millis(400)).expect("simd probe");
+    assert!(sd.bit_identical, "every dispatch level must match scalar bits");
+    for s in &sd.levels {
+        println!(
+            "{:<7} matmul {:>7.2} GFLOP/s   agg {:>7.2} GB/s{}",
+            s.level,
+            s.matmul_gflops,
+            s.agg_gb_per_sec,
+            if s.level == sd.active { "  <- active" } else { "" }
+        );
+    }
+    println!(
+        "best vs scalar: matmul {:.2}x, agg {:.2}x ({:.2} GB/s L1-resident)",
+        sd.matmul_speedup_vs_scalar(),
+        sd.agg_speedup_vs_scalar(),
+        sd.agg_best_gb_per_sec()
+    );
+    report.extra("simd", sd.to_json("cargo bench micro_hotpath"));
 }
 
 /// Scenario probe: flash-crowd DTFL makespan + delta-vs-full broadcast
@@ -313,6 +341,9 @@ fn main() {
     // ---------------- fused forward path + NR sweep ----------------
     let fused = bench_fused(50, 2);
     report.extra("fused", fused);
+
+    // ---------------- SIMD dispatch levels ----------------
+    bench_simd(&mut report);
 
     // ---------------- scenario engine + delta downlink ----------------
     bench_scenario(&mut report, 8);

@@ -103,6 +103,13 @@ pub struct RunCfg {
     /// the price of buffering whole updates; all are bit-identical across
     /// the `{threads, intra, depth, shards, fuse}` grid.
     pub fold: FoldStrategy,
+    /// SIMD dispatch level for the hot kernels: "auto" (default — runtime
+    /// feature detection, `DTFL_TEST_SIMD` overridable) | "scalar" |
+    /// "avx2" | "avx512" | "neon". Like `intra_threads` the knob is
+    /// **process-wide** (last-constructed experiment wins), which is safe
+    /// because every level produces bit-identical results (enforced by the
+    /// conformance and golden-trace suites) — only throughput changes.
+    pub simd: String,
 }
 
 #[derive(Debug, Clone)]
@@ -253,6 +260,16 @@ impl ExperimentConfig {
                 fuse_forward: s.bool_or("fuse_forward", true)?,
                 fold: FoldStrategy::from_name(&s.str_or("fold", "mean")?)
                     .context("in [run] fold")?,
+                simd: {
+                    let name = s.str_or("simd", "auto")?;
+                    if name != "auto" && crate::runtime::SimdLevel::from_name(&name).is_none() {
+                        return Err(crate::anyhow::anyhow!(
+                            "in [run] simd: unknown level '{name}' \
+                             (valid: auto, scalar, avx2, avx512, neon)"
+                        ));
+                    }
+                    name
+                },
             }
         };
         let sim = {
@@ -360,6 +377,7 @@ mod tests {
         assert_eq!(cfg.run.agg_shards, 0, "sharded aggregation defaults to one per core");
         assert!(cfg.run.fuse_forward, "fused forward path defaults on");
         assert_eq!(cfg.run.fold, FoldStrategy::Mean, "aggregation defaults to plain weighted mean");
+        assert_eq!(cfg.run.simd, "auto", "SIMD dispatch defaults to runtime detection");
         assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
         assert!(cfg.privacy.dcor_alpha.is_none());
         assert!(cfg.output.is_none());
@@ -436,6 +454,17 @@ mod tests {
         let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
         assert!(err.contains("krum"), "error names the offender: {err}");
         assert!(err.contains("trimmed_mean"), "error lists the menu: {err}");
+    }
+
+    #[test]
+    fn simd_level_parses_and_rejects_unknown_names() {
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nsimd = \"scalar\"");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(cfg.run.simd, "scalar");
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nsimd = \"sse9\"");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("sse9"), "error names the offender: {err}");
+        assert!(err.contains("avx512"), "error lists the menu: {err}");
     }
 
     #[test]

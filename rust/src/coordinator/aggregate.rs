@@ -32,8 +32,9 @@
 //! writes the normalized model into a caller-owned **back buffer** (the
 //! round engines double-buffer their `GlobalModel` snapshot: readers hold
 //! the front, aggregation streams into the back, one swap publishes), also
-//! sharded. The inner loops are chunked, bounds-check-free axpy that
-//! autovectorizes.
+//! sharded. The inner loops are chunked axpy dispatched to the explicit
+//! SIMD kernels in `runtime::simd` (element-wise, bit-identical at every
+//! lane width).
 //!
 //! ## Byzantine-robust folds
 //!
@@ -64,7 +65,7 @@
 //! *before* folding — see `RuntimeStats::quarantined_updates`).
 
 use crate::anyhow::Result;
-use crate::runtime::Metadata;
+use crate::runtime::{simd, Metadata};
 
 use super::model_state::{ClientUpdate, GlobalModel};
 use super::parallel::{join_scoped, resolve_shards, shard_chunks};
@@ -118,15 +119,17 @@ impl FoldStrategy {
     }
 }
 
-/// `acc += w * x` over cache-friendly chunks, vectorizable.
+/// `acc += w * x` over cache-friendly chunks, dispatched to the active
+/// SIMD level's explicit vector kernel (element-wise, no cross-lane
+/// reduction — every level is bit-identical; robust folds keep their
+/// pinned scalar `total_cmp` reductions and never come through here).
 #[inline]
 fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
     debug_assert_eq!(acc.len(), x.len());
+    let lv = simd::active();
     const CHUNK: usize = 4096;
     for (a, b) in acc.chunks_mut(CHUNK).zip(x.chunks(CHUNK)) {
-        for (ai, &bi) in a.iter_mut().zip(b.iter()) {
-            *ai += w * bi;
-        }
+        simd::axpy(lv, a, b, w);
     }
 }
 

@@ -122,12 +122,22 @@ impl Experiment {
         let method = build_method(&cfg, &rt)?;
         let lr = cfg.run.lr;
 
-        // intra-step kernel parallelism (process-wide knob; results are
-        // bit-identical for every setting, so late overrides by other
-        // experiments in the same process cannot skew outcomes) + the
-        // per-runtime fused-forward knob (scoped to this experiment's
-        // backend, so concurrent fused/unfused comparisons cannot race)
+        // intra-step kernel parallelism and SIMD dispatch (process-wide
+        // knobs; results are bit-identical for every setting, so late
+        // overrides by other experiments in the same process cannot skew
+        // outcomes) + the per-runtime fused-forward knob (scoped to this
+        // experiment's backend, so concurrent fused/unfused comparisons
+        // cannot race)
         crate::runtime::kernels::set_intra_threads(cfg.run.intra_threads);
+        let level = match cfg.run.simd.as_str() {
+            // re-resolve detection + the DTFL_TEST_SIMD override, so forced
+            // CI legs flow through every "auto" config unchanged
+            "auto" => crate::runtime::simd::default_level(),
+            name => crate::runtime::SimdLevel::from_name(name)
+                .ok_or_else(|| crate::anyhow::anyhow!("unknown [run] simd level '{name}'"))?,
+        };
+        crate::runtime::set_simd(level)
+            .with_context(|| format!("applying [run] simd = \"{}\"", cfg.run.simd))?;
         rt.set_fuse_forward(cfg.run.fuse_forward);
 
         Ok(Self {

@@ -54,6 +54,9 @@ pub struct RunSpec {
     pub fuse_forward: bool,
     /// Server aggregation rule (mean | trimmed_mean | median | norm_clip).
     pub fold: FoldStrategy,
+    /// SIMD dispatch level ("auto" | "scalar" | "avx2" | "avx512" |
+    /// "neon"); bit-identical at every level, a pure throughput knob.
+    pub simd: String,
     pub lr: f32,
     pub out_name: Option<String>,
     /// Trace-driven environment scenario; when set, `clients` must equal
@@ -90,6 +93,7 @@ impl Default for RunSpec {
             agg_shards: 0,
             fuse_forward: true,
             fold: FoldStrategy::Mean,
+            simd: "auto".into(),
             lr: 1e-3,
             out_name: None,
             scenario: None,
@@ -143,6 +147,7 @@ impl RunSpec {
                 agg_shards: self.agg_shards,
                 fuse_forward: self.fuse_forward,
                 fold: self.fold,
+                simd: self.simd.clone(),
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -480,8 +485,8 @@ impl FusedThroughput {
     }
 
     /// The `fused` object recorded in `BENCH_hotpath.json`. `nr_sweep` is
-    /// the optional `kernels::tune` result (`cargo bench` attaches it; the
-    /// cargo-test smoke passes an empty slice).
+    /// the `kernels::tune` lane-width × (MR, NR) sweep (the cargo-test
+    /// smoke attaches a small-budget run; `cargo bench` a full one).
     pub fn to_json(
         &self,
         nr_sweep: &[crate::runtime::kernels::tune::TuneSample],
@@ -493,6 +498,7 @@ impl FusedThroughput {
                 json::obj(vec![
                     ("mr", json::num(s.mr as f64)),
                     ("nr", json::num(s.nr as f64)),
+                    ("simd", json::s(s.simd)),
                     ("gflops", json::num(s.gflops)),
                     ("pinned", Json::Bool(s.pinned)),
                 ])
@@ -1152,6 +1158,158 @@ pub fn kernels_to_json(
         ("arena_peak_bytes", json::num(arena_peak_bytes as f64)),
         ("entries", Json::Arr(entries)),
     ])
+}
+
+/// One dispatch level's hot-loop sample (`measure_simd_throughput`).
+#[derive(Debug, Clone)]
+pub struct SimdLevelThroughput {
+    pub level: &'static str,
+    pub matmul_gflops: f64,
+    /// L1-resident agg-fold bandwidth (update bytes folded per second,
+    /// same byte convention as `AggShardThroughput`).
+    pub agg_gb_per_sec: f64,
+}
+
+/// Result of the per-level SIMD dispatch probe — the `simd` object in
+/// `BENCH_hotpath.json`. One packed-matmul + one L1-resident agg-fold
+/// sample per available dispatch level, with every level's outputs
+/// compared to the scalar core bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct SimdThroughput {
+    /// Level active before (and restored after) the probe — the variant
+    /// the process actually dispatches to.
+    pub active: &'static str,
+    pub levels: Vec<SimdLevelThroughput>,
+    /// Every level's matmul output and agg accumulator matched scalar bits.
+    pub bit_identical: bool,
+}
+
+impl SimdThroughput {
+    fn sample(&self, name: &str) -> Option<&SimdLevelThroughput> {
+        self.levels.iter().find(|s| s.level == name)
+    }
+
+    /// Best matmul GFLOP/s across levels over the scalar core's.
+    pub fn matmul_speedup_vs_scalar(&self) -> f64 {
+        let scalar = self.sample("scalar").map_or(0.0, |s| s.matmul_gflops);
+        let best = self.levels.iter().map(|s| s.matmul_gflops).fold(0.0, f64::max);
+        best / scalar.max(1e-12)
+    }
+
+    /// Best agg-fold GB/s across levels over the scalar fold's. Within the
+    /// L1-resident probe this can sit near 1× in release builds (the scalar
+    /// axpy has no ordering hazard, so the autovectorizer already covers
+    /// it); the paper-relevant comparison is `agg_best_gb_per_sec` against
+    /// the streaming committed baseline (`robustness.fold_bandwidth`).
+    pub fn agg_speedup_vs_scalar(&self) -> f64 {
+        let scalar = self.sample("scalar").map_or(0.0, |s| s.agg_gb_per_sec);
+        let best = self.levels.iter().map(|s| s.agg_gb_per_sec).fold(0.0, f64::max);
+        best / scalar.max(1e-12)
+    }
+
+    /// Best L1-resident agg-fold bandwidth across levels — the number to
+    /// set against the streaming `robustness.fold_bandwidth` baseline.
+    pub fn agg_best_gb_per_sec(&self) -> f64 {
+        self.levels.iter().map(|s| s.agg_gb_per_sec).fold(0.0, f64::max)
+    }
+
+    /// The `simd` object recorded in `BENCH_hotpath.json`. `release`
+    /// distinguishes `cargo bench` numbers from the debug-build cargo-test
+    /// smoke (whose intrinsics are not inlined and whose scalar loops are
+    /// not autovectorized) — CI gates the speedup floors on it.
+    pub fn to_json(&self, source: &str) -> Json {
+        let levels: Vec<Json> = self
+            .levels
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("level", json::s(s.level)),
+                    ("matmul_gflops", json::num(s.matmul_gflops)),
+                    ("agg_gb_per_sec", json::num(s.agg_gb_per_sec)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("active", json::s(self.active)),
+            ("release", Json::Bool(!cfg!(debug_assertions))),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+            ("levels", Json::Arr(levels)),
+            (
+                "matmul_speedup_vs_scalar",
+                json::num(self.matmul_speedup_vs_scalar()),
+            ),
+            ("agg_speedup_vs_scalar", json::num(self.agg_speedup_vs_scalar())),
+            ("agg_best_gb_per_sec", json::num(self.agg_best_gb_per_sec())),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Per-level throughput of the SIMD-dispatched hot loops: the packed
+/// matmul core at the conv hot shape and an L1-resident agg fold (small
+/// enough to re-fold from cache, isolating lane-width effects from memory
+/// bandwidth — the streaming case is `measure_agg_shard_throughput`).
+/// Sets each available level in turn, restores the prior level on exit,
+/// and fails if any level diverges from the scalar core's bits.
+pub fn measure_simd_throughput(budget: Duration) -> Result<SimdThroughput> {
+    use crate::runtime::{kernels, simd};
+    use crate::util::bench::bench;
+    use crate::util::Rng64;
+
+    let prior = simd::active();
+    let (m, k, n) = (512usize, 144usize, 64usize);
+    let mut rng = Rng64::seed_from_u64(0x51d);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let (p, folds) = (4096usize, 50usize);
+    let x: Vec<f32> = (0..p).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
+    let w = 1.0 / folds as f32;
+    let agg_bytes = (folds * p * 4) as f64;
+
+    let mut levels = Vec::new();
+    let mut scalar_mm: Vec<f32> = Vec::new();
+    let mut scalar_acc: Vec<f32> = Vec::new();
+    let mut bit_identical = true;
+    for lv in simd::available() {
+        simd::set_simd(lv)?;
+        let mut macs = 0u64;
+        let name = lv.name();
+        let sm = bench(&format!("matmul {m}x{k}x{n} simd={name}"), 400, budget, || {
+            let c = kernels::matmul(&a, m, k, &b, n, &mut macs);
+            std::hint::black_box(c[0]);
+        });
+        let mm = kernels::matmul(&a, m, k, &b, n, &mut macs);
+
+        let mut acc = vec![0.0f32; p];
+        let sa = bench(&format!("agg axpy P={p}x{folds} simd={name}"), 400, budget, || {
+            for _ in 0..folds {
+                simd::axpy(lv, &mut acc, &x, w);
+            }
+            std::hint::black_box(acc[0]);
+        });
+        let mut acc_once = vec![0.0f32; p];
+        for _ in 0..folds {
+            simd::axpy(lv, &mut acc_once, &x, w);
+        }
+
+        if lv == simd::SimdLevel::Scalar {
+            scalar_mm = mm;
+            scalar_acc = acc_once;
+        } else {
+            bit_identical &= bits_eq(&mm, &scalar_mm) && bits_eq(&acc_once, &scalar_acc);
+        }
+        levels.push(SimdLevelThroughput {
+            level: name,
+            matmul_gflops: gflops(sm.min, m, k, n),
+            agg_gb_per_sec: agg_bytes / sa.min.as_secs_f64().max(1e-12) / 1e9,
+        });
+    }
+    simd::set_simd(prior)?;
+    crate::anyhow::ensure!(
+        bit_identical,
+        "SIMD probe: a non-scalar level diverged from the scalar core's bits"
+    );
+    Ok(SimdThroughput { active: prior.name(), levels, bit_identical })
 }
 
 /// Format a simulated duration the way the paper's tables do (integer

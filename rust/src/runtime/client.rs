@@ -45,6 +45,9 @@ pub struct RuntimeStats {
     /// Client updates quarantined by the round-engine sinks because they
     /// carried non-finite values (never folded into the global model).
     pub quarantined_updates: u64,
+    /// Active SIMD dispatch level (`scalar|avx2|avx512|neon`) — process-wide
+    /// and bit-neutral (see `runtime::simd`), surfaced for perf accounting.
+    pub simd: &'static str,
 }
 
 /// Process-wide count of quarantined (non-finite) client updates — like the
@@ -218,6 +221,7 @@ impl Runtime {
             fused_gn_passes,
             im2col_elisions,
             quarantined_updates: quarantined_updates(),
+            simd: super::simd::active().name(),
         }
     }
 }

@@ -30,14 +30,26 @@
 //! activation, so `refmath` feeds the activation straight into the packed
 //! core (im2col elision — see `refmath::conv_fwd`).
 //!
+//! The full-tile accumulator body dispatches through `runtime::simd`:
+//! explicit AVX2 / AVX-512 / NEON variants of the inner core, resolved
+//! once per process from runtime feature detection (forceable via
+//! `DTFL_TEST_SIMD` or `run.simd`). Every level replays the scalar core's
+//! pinned per-element reduction order exactly — including the skip-zero
+//! test and the separate mul + add (no FMA) — so dispatch is a pure
+//! throughput knob: results are bit-identical at every level (see
+//! `runtime::simd` and `tests/simd_conformance.rs`). The epilogue store
+//! and all edge tiles stay on the shared scalar paths.
+//!
 //! `tune` instantiates the same core at a grid of candidate `(MR, NR)`
-//! register tiles (const generics) for the `cargo bench micro_hotpath --
-//! fused` sweep; the winning constants stay pinned in source, and every
-//! candidate is bit-identical to the pinned core by construction.
+//! register tiles (const generics) × available SIMD levels for the `cargo
+//! bench micro_hotpath -- fused` sweep; the winning constants stay pinned
+//! in source, and every candidate is bit-identical to the pinned core by
+//! construction.
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use super::simd;
 use super::tensor::Dims4;
 use crate::coordinator::parallel::{join_scoped, resolve_threads};
 
@@ -134,10 +146,14 @@ fn store_tile(
     }
 }
 
-/// Full MR×NR tile: constant trip counts so the inner loop vectorizes.
+/// Full MR×NR tile: accumulators computed by the dispatched SIMD level
+/// (bit-identical to the scalar core at every level — `runtime::simd`
+/// pins the reduction order), epilogue applied by the shared scalar
+/// `store_tile`.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn mm_tile_full(
+    lv: simd::SimdLevel,
     c: &mut [f32],
     a: &[f32],
     k: usize,
@@ -148,19 +164,7 @@ fn mm_tile_full(
     ep: Epilogue,
 ) {
     let mut acc = [[0.0f32; NR]; MR];
-    for kk in 0..k {
-        let base = kk * n + j0;
-        let brow = &b[base..base + NR];
-        for (r, accr) in acc.iter_mut().enumerate() {
-            let av = a[(i0 + r) * k + kk];
-            if av == 0.0 {
-                continue; // skip-zero: bit-neutral for finite data (see tests)
-            }
-            for (x, &bv) in accr.iter_mut().zip(brow) {
-                *x += av * bv;
-            }
-        }
-    }
+    simd::accum_tile::<MR, NR>(lv, &mut acc, a, k, b, n, i0, j0);
     store_tile(c, n, i0, MR, j0, NR, &acc, ep);
 }
 
@@ -197,6 +201,7 @@ fn mm_tile_edge(
 
 /// One contiguous row panel: `c` is `m × n`, `a` is `m × k`.
 fn mm_panel(c: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize, ep: Epilogue) {
+    let lv = simd::active(); // resolved once per panel, not per tile
     let mut i0 = 0;
     while i0 < m {
         let mr = MR.min(m - i0);
@@ -204,7 +209,7 @@ fn mm_panel(c: &mut [f32], a: &[f32], m: usize, k: usize, b: &[f32], n: usize, e
         while j0 < n {
             let nr = NR.min(n - j0);
             if mr == MR && nr == NR {
-                mm_tile_full(c, a, k, b, n, i0, j0, ep);
+                mm_tile_full(lv, c, a, k, b, n, i0, j0, ep);
             } else {
                 mm_tile_edge(c, a, k, b, n, i0, mr, j0, nr, ep);
             }
@@ -584,28 +589,36 @@ pub mod naive {
 }
 
 pub mod tune {
-    //! Compile-time MR/NR register-tile sweep.
+    //! Compile-time MR/NR register-tile sweep × runtime SIMD levels.
     //!
     //! The production core pins `MR = 4, NR = 16` (see the crate-level
     //! constants) so every run is deterministic and reproducible; this
     //! module instantiates the same tiled core at a grid of candidate
-    //! `(MR, NR)` pairs via const generics so `cargo bench micro_hotpath
-    //! -- fused` can re-measure which tile the target CPU prefers. Because
-    //! each output element accumulates over `k` in ascending order no
-    //! matter the tile shape, **every candidate is bit-identical to the
-    //! pinned core** (asserted by `tests/fused_conformance.rs`) — retuning
-    //! is purely a throughput decision. To adopt a new winner, edit the
-    //! pinned constants in source; nothing is tuned at runtime.
+    //! `(MR, NR)` pairs via const generics — each driven through every
+    //! SIMD level the host supports — so `cargo bench micro_hotpath --
+    //! fused` can re-measure which tile × lane width the target CPU
+    //! prefers. Because each output element accumulates over `k` in
+    //! ascending order no matter the tile shape or lane width, **every
+    //! candidate is bit-identical to the pinned core** (asserted by
+    //! `tests/fused_conformance.rs`) — retuning is purely a throughput
+    //! decision. To adopt a new tile winner, edit the pinned constants in
+    //! source; the SIMD level is already picked at runtime by
+    //! `runtime::simd` dispatch.
 
     use std::time::{Duration, Instant};
 
-    /// One `(MR, NR)` candidate's measured throughput.
+    use super::simd;
+
+    /// One `(MR, NR, simd)` candidate's measured throughput.
     #[derive(Debug, Clone)]
     pub struct TuneSample {
         pub mr: usize,
         pub nr: usize,
+        /// SIMD level name this sample ran at (`scalar|avx2|avx512|neon`).
+        pub simd: &'static str,
         pub gflops: f64,
-        /// Whether this candidate is the pair pinned in source.
+        /// Whether this candidate is the production configuration: the
+        /// `(MR, NR)` pair pinned in source at the active dispatch level.
         pub pinned: bool,
     }
 
@@ -614,9 +627,11 @@ pub mod tune {
         &[(2, 16), (4, 8), (4, 16), (4, 24), (4, 32), (6, 16), (8, 8), (8, 16)];
 
     /// The tiled panel at compile-time tile sizes. Same loop structure as
-    /// the pinned core: constant trip counts on full tiles, runtime bounds
-    /// on edges, ascending-`k` accumulation per element throughout.
+    /// the pinned core: constant trip counts on full tiles (dispatched to
+    /// `lv`'s vector body), runtime bounds on scalar edges, ascending-`k`
+    /// accumulation per element throughout.
     fn mm_panel_g<const TMR: usize, const TNR: usize>(
+        lv: simd::SimdLevel,
         c: &mut [f32],
         a: &[f32],
         m: usize,
@@ -632,19 +647,7 @@ pub mod tune {
                 let nr = TNR.min(n - j0);
                 let mut acc = [[0.0f32; TNR]; TMR];
                 if mr == TMR && nr == TNR {
-                    for kk in 0..k {
-                        let base = kk * n + j0;
-                        let brow = &b[base..base + TNR];
-                        for (r, accr) in acc.iter_mut().enumerate() {
-                            let av = a[(i0 + r) * k + kk];
-                            if av == 0.0 {
-                                continue;
-                            }
-                            for (x, &bv) in accr.iter_mut().zip(brow) {
-                                *x += av * bv;
-                            }
-                        }
-                    }
+                    simd::accum_tile::<TMR, TNR>(lv, &mut acc, a, k, b, n, i0, j0);
                 } else {
                     for kk in 0..k {
                         let base = kk * n + j0;
@@ -670,11 +673,13 @@ pub mod tune {
         }
     }
 
-    /// `C = A·B` with candidate tile `(mr, nr)`; `None` for a pair outside
-    /// [`CANDIDATES`].
+    /// `C = A·B` with candidate tile `(mr, nr)` at SIMD level `lv`; `None`
+    /// for a pair outside [`CANDIDATES`].
+    #[allow(clippy::too_many_arguments)]
     pub fn matmul_with(
         mr: usize,
         nr: usize,
+        lv: simd::SimdLevel,
         a: &[f32],
         m: usize,
         k: usize,
@@ -683,48 +688,51 @@ pub mod tune {
     ) -> Option<Vec<f32>> {
         let mut c = vec![0.0f32; m * n];
         match (mr, nr) {
-            (2, 16) => mm_panel_g::<2, 16>(&mut c, a, m, k, b, n),
-            (4, 8) => mm_panel_g::<4, 8>(&mut c, a, m, k, b, n),
-            (4, 16) => mm_panel_g::<4, 16>(&mut c, a, m, k, b, n),
-            (4, 24) => mm_panel_g::<4, 24>(&mut c, a, m, k, b, n),
-            (4, 32) => mm_panel_g::<4, 32>(&mut c, a, m, k, b, n),
-            (6, 16) => mm_panel_g::<6, 16>(&mut c, a, m, k, b, n),
-            (8, 8) => mm_panel_g::<8, 8>(&mut c, a, m, k, b, n),
-            (8, 16) => mm_panel_g::<8, 16>(&mut c, a, m, k, b, n),
+            (2, 16) => mm_panel_g::<2, 16>(lv, &mut c, a, m, k, b, n),
+            (4, 8) => mm_panel_g::<4, 8>(lv, &mut c, a, m, k, b, n),
+            (4, 16) => mm_panel_g::<4, 16>(lv, &mut c, a, m, k, b, n),
+            (4, 24) => mm_panel_g::<4, 24>(lv, &mut c, a, m, k, b, n),
+            (4, 32) => mm_panel_g::<4, 32>(lv, &mut c, a, m, k, b, n),
+            (6, 16) => mm_panel_g::<6, 16>(lv, &mut c, a, m, k, b, n),
+            (8, 8) => mm_panel_g::<8, 8>(lv, &mut c, a, m, k, b, n),
+            (8, 16) => mm_panel_g::<8, 16>(lv, &mut c, a, m, k, b, n),
             _ => return None,
         }
         Some(c)
     }
 
-    /// Measure every candidate on one `m × k × n` problem (deterministic
-    /// operands); each sample takes the minimum over iterations within
-    /// `budget`.
+    /// Measure every `(MR, NR)` candidate × available SIMD level on one
+    /// `m × k × n` problem (deterministic operands); each sample takes the
+    /// minimum over iterations within `budget`.
     pub fn sweep(m: usize, k: usize, n: usize, budget: Duration) -> Vec<TuneSample> {
         let mut rng = crate::util::Rng64::seed_from_u64(0x7121);
         let a: Vec<f32> = (0..m * k).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
         let b: Vec<f32> = (0..k * n).map(|_| rng.gen_f32(-1.0, 1.0)).collect();
         let flops = 2.0 * (m * k * n) as f64;
-        CANDIDATES
-            .iter()
-            .map(|&(mr, nr)| {
+        let active = simd::active();
+        let mut samples = Vec::new();
+        for lv in simd::available() {
+            for &(mr, nr) in CANDIDATES {
                 let mut best = f64::INFINITY;
                 let deadline = Instant::now() + budget;
                 let mut iters = 0usize;
                 while iters < 3 || Instant::now() < deadline {
                     let t0 = Instant::now();
-                    let c = matmul_with(mr, nr, &a, m, k, &b, n).expect("listed candidate");
+                    let c = matmul_with(mr, nr, lv, &a, m, k, &b, n).expect("listed candidate");
                     std::hint::black_box(c[0]);
                     best = best.min(t0.elapsed().as_secs_f64());
                     iters += 1;
                 }
-                TuneSample {
+                samples.push(TuneSample {
                     mr,
                     nr,
+                    simd: lv.name(),
                     gflops: flops / best.max(1e-12) / 1e9,
-                    pinned: mr == super::MR && nr == super::NR,
-                }
-            })
-            .collect()
+                    pinned: mr == super::MR && nr == super::NR && lv == active,
+                });
+            }
+        }
+        samples
     }
 }
 

@@ -8,10 +8,12 @@
 //!   are a deterministic MAC-count model, which makes whole simulated runs
 //!   bit-reproducible and thread-count independent. Under `refmath` sit the
 //!   tensor/kernel layers: `tensor` (shape-carrying storage + the per-client
-//!   `ScratchArena` that holds each activation exactly once across fwd/bwd)
-//!   and `kernels` (register-tiled packed-panel matmuls with fused
-//!   bias/ReLU epilogues and optional deterministic intra-step row-panel
-//!   parallelism).
+//!   `ScratchArena` that holds each activation exactly once across fwd/bwd),
+//!   `kernels` (register-tiled packed-panel matmuls with fused bias/ReLU
+//!   epilogues and optional deterministic intra-step row-panel parallelism)
+//!   and `simd` (explicit AVX2/AVX-512/NEON variants of the hot inner
+//!   loops behind runtime feature detection, bit-identical to the scalar
+//!   core at every lane width).
 //! * **pjrt** (feature `pjrt`) — loads the AOT artifacts produced by
 //!   `python/compile/aot.py` (HLO text) and executes them on the CPU PJRT
 //!   client via the `xla` crate.
@@ -25,6 +27,7 @@ pub mod metadata;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod refmath;
+pub mod simd;
 pub mod spec;
 pub mod tensor;
 
@@ -33,5 +36,6 @@ pub use backend::{ExecBackend, ExecOut, RefBackend, StepKind};
 pub use client::{note_quarantined_update, quarantined_updates, Runtime, RuntimeStats};
 pub use literal::Literal;
 pub use metadata::{load_f32_bin, Metadata, ParamEntry, TierMeta};
+pub use simd::{set_simd, SimdLevel};
 pub use spec::ModelConfig;
 pub use tensor::{arena_peak_bytes, ActRef, Dims4, ScratchArena, Tensor, TensorView};

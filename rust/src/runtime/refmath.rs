@@ -47,6 +47,7 @@ use crate::anyhow::Result;
 use super::kernels;
 use super::literal::{self as lit, Literal};
 use super::metadata::{AdamMeta, Metadata};
+use super::simd;
 use super::spec::{gn_groups, GN_EPS};
 use super::tensor::{ActRef, Dims4, ScratchArena, TensorView};
 
@@ -255,6 +256,57 @@ struct GnCache {
     saved: GnSaved,
 }
 
+/// Pinned group-norm statistics: per-channel f64 column sums accumulated
+/// row-by-row over one batch image's `h*w` rows (lane = channel — the
+/// layout `runtime::simd::gn_col_sums` vectorizes at any width without
+/// changing the per-channel chain), then combined per group in ascending
+/// channel order. Returns per-(batch, group) `(μ, σ)`.
+fn gn_stats(lv: simd::SimdLevel, xs: &[f32], d: Dims4, g: usize) -> (Vec<f64>, Vec<f64>) {
+    let [b, h, w, c] = d;
+    let cg = c / g;
+    let m = (h * w * cg) as f64;
+    let rows = h * w;
+    let mut mu = vec![0.0f64; b * g];
+    let mut sigma = vec![0.0f64; b * g];
+    let mut acc = vec![0.0f64; c];
+    let mut acc2 = vec![0.0f64; c];
+    for bi in 0..b {
+        acc.fill(0.0);
+        acc2.fill(0.0);
+        let base = bi * rows * c;
+        simd::gn_col_sums(lv, &xs[base..base + rows * c], rows, c, &mut acc, &mut acc2);
+        for gi in 0..g {
+            let (mut s, mut s2) = (0.0f64, 0.0f64);
+            for cc in 0..cg {
+                s += acc[gi * cg + cc];
+                s2 += acc2[gi * cg + cc];
+            }
+            let muv = s / m;
+            let var = (s2 / m - muv * muv).max(0.0);
+            mu[bi * g + gi] = muv;
+            sigma[bi * g + gi] = (var + GN_EPS as f64).sqrt();
+        }
+    }
+    (mu, sigma)
+}
+
+/// Broadcast per-(batch, group) stats to per-channel arrays for one batch
+/// image, so the normalize sweeps can run row-major over all channels.
+fn gn_channel_stats(
+    mu: &[f64],
+    sigma: &[f64],
+    bi: usize,
+    g: usize,
+    cg: usize,
+    muc: &mut [f64],
+    sgc: &mut [f64],
+) {
+    for ch in 0..muc.len() {
+        muc[ch] = mu[bi * g + ch / cg];
+        sgc[ch] = sigma[bi * g + ch / cg];
+    }
+}
+
 fn gn_fwd(
     p: &[f32],
     soff: usize,
@@ -266,38 +318,25 @@ fn gn_fwd(
     let [b, h, w, c] = d;
     let g = gn_groups(c);
     let cg = c / g;
-    let m = (h * w * cg) as f64;
+    let rows = h * w;
     let mut y = arena.take_buf_uninit(x.len());
     let mut out = arena.take_buf_uninit(x.len());
-    let mut sigma = vec![0.0f64; b * g];
+    let (mu, sigma) = gn_stats(simd::active(), x, d, g);
+    // Row-major normalize over all channels: per-element expressions are
+    // order-independent given μ/σ and written out exactly as in the fused
+    // sweep, so unfused bits equal fused bits at every dispatch level.
+    let mut muc = vec![0.0f64; c];
+    let mut sgc = vec![0.0f64; c];
     for bi in 0..b {
-        for gi in 0..g {
-            let (mut s, mut s2) = (0.0f64, 0.0f64);
-            for hy in 0..h {
-                for wx in 0..w {
-                    let base = ((bi * h + hy) * w + wx) * c + gi * cg;
-                    for v in &x[base..base + cg] {
-                        let v = *v as f64;
-                        s += v;
-                        s2 += v * v;
-                    }
-                }
-            }
-            let mu = s / m;
-            let var = (s2 / m - mu * mu).max(0.0);
-            let sg = (var + GN_EPS as f64).sqrt();
-            sigma[bi * g + gi] = sg;
-            for hy in 0..h {
-                for wx in 0..w {
-                    let base = ((bi * h + hy) * w + wx) * c + gi * cg;
-                    for cc in 0..cg {
-                        let idx = base + cc;
-                        let ch = gi * cg + cc;
-                        let yv = ((x[idx] as f64 - mu) / sg) as f32;
-                        y[idx] = yv;
-                        out[idx] = yv * p[soff + ch] + p[boff + ch];
-                    }
-                }
+        gn_channel_stats(&mu, &sigma, bi, g, cg, &mut muc, &mut sgc);
+        let base = bi * rows * c;
+        for row in 0..rows {
+            let rbase = base + row * c;
+            for ch in 0..c {
+                let idx = rbase + ch;
+                let yv = ((x[idx] as f64 - muc[ch]) / sgc[ch]) as f32;
+                y[idx] = yv;
+                out[idx] = yv * p[soff + ch] + p[boff + ch];
             }
         }
     }
@@ -323,46 +362,36 @@ fn gn_fused_fwd(
     let [b, hh, w, c] = d;
     let g = gn_groups(c);
     let cg = c / g;
-    let m = (hh * w * cg) as f64;
+    let rows = hh * w;
+    let lv = simd::active();
     FUSED_GN_PASSES.fetch_add(1, Ordering::Relaxed);
     let mut out = arena.take_buf_uninit(h.len());
     let x = arena.store_vec(h, d);
     let xs = arena.act_data(x);
-    let mut sigma = vec![0.0f64; b * g];
-    let mut mu = vec![0.0f64; b * g];
+    let (mu, sigma) = gn_stats(lv, xs, d, g);
+    // One vectorized write sweep per batch image: normalize + affine
+    // (+relu) row-major over all channels. The relu branch inside
+    // `gn_norm_rows` has the same shape as the standalone `relu` pass
+    // (-0.0 stays -0.0, NaN stays NaN), so the bits match exactly.
+    let scale = &p[soff..soff + c];
+    let bias = &p[boff..boff + c];
+    let mut muc = vec![0.0f64; c];
+    let mut sgc = vec![0.0f64; c];
     for bi in 0..b {
-        for gi in 0..g {
-            let (mut s, mut s2) = (0.0f64, 0.0f64);
-            for hy in 0..hh {
-                for wx in 0..w {
-                    let base = ((bi * hh + hy) * w + wx) * c + gi * cg;
-                    for v in &xs[base..base + cg] {
-                        let v = *v as f64;
-                        s += v;
-                        s2 += v * v;
-                    }
-                }
-            }
-            let muv = s / m;
-            let var = (s2 / m - muv * muv).max(0.0);
-            let sg = (var + GN_EPS as f64).sqrt();
-            mu[bi * g + gi] = muv;
-            sigma[bi * g + gi] = sg;
-            for hy in 0..hh {
-                for wx in 0..w {
-                    let base = ((bi * hh + hy) * w + wx) * c + gi * cg;
-                    for cc in 0..cg {
-                        let idx = base + cc;
-                        let ch = gi * cg + cc;
-                        let yv = ((xs[idx] as f64 - muv) / sg) as f32;
-                        let o = yv * p[soff + ch] + p[boff + ch];
-                        // same branch shape as the standalone `relu` pass
-                        // (-0.0 stays -0.0), so the bits match exactly
-                        out[idx] = if fuse_relu && o < 0.0 { 0.0 } else { o };
-                    }
-                }
-            }
-        }
+        gn_channel_stats(&mu, &sigma, bi, g, cg, &mut muc, &mut sgc);
+        let base = bi * rows * c;
+        simd::gn_norm_rows(
+            lv,
+            &mut out[base..base + rows * c],
+            &xs[base..base + rows * c],
+            rows,
+            c,
+            &muc,
+            &sgc,
+            scale,
+            bias,
+            fuse_relu,
+        );
     }
     (out, GnCache { soff, boff, d, groups: g, sigma, saved: GnSaved::X { x, mu } })
 }

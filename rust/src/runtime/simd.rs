@@ -1,0 +1,1040 @@
+//! Explicit SIMD micro-kernels with runtime dispatch.
+//!
+//! The three hot loops of the reference backend — the MR×NR packed-panel
+//! matmul inner core ([`accum_tile`]), the fused group-norm stats/normalize
+//! sweeps ([`gn_col_sums`] / [`gn_norm_rows`]), and the plain-mean
+//! aggregation fold ([`axpy`]) — each get `std::arch` vector variants (AVX2
+//! and AVX-512 on x86_64, NEON on aarch64) behind runtime feature
+//! detection. The active level is resolved **once per process** (cached in
+//! an atomic, like `kernels::set_intra_threads`) from, in order:
+//!
+//! 1. the `DTFL_TEST_SIMD` env override (`scalar|avx2|avx512|neon`;
+//!    unknown or unsupported names panic so CI legs cannot silently
+//!    downgrade),
+//! 2. the best level the host supports.
+//!
+//! `run.simd` in the experiment config (or [`set_simd`] directly) can force
+//! a specific level; `"auto"` re-reads the env + detection.
+//!
+//! ## Determinism contract
+//!
+//! Every level is **bit-identical** to the scalar core, by construction:
+//! the per-element reduction order is pinned and each vector lane replays
+//! exactly the scalar sequence for its element.
+//!
+//! * `accum_tile` — lane = output column. Each `(row, col)` accumulator
+//!   sums `a[row,kk] * b[kk,col]` in ascending `kk`, as separate IEEE
+//!   mul + add (**never** FMA — the scalar core compiles with fp-contract
+//!   off), with the scalar core's skip-zero test (`a == 0.0` skips the
+//!   whole row-step) replicated per `(kk, row)` before the broadcast.
+//!   Columns beyond the widest full vector chunk run the identical scalar
+//!   tail. The epilogue store stays the shared scalar `store_tile`.
+//! * `gn_col_sums` — lane = channel. Per-channel f64 sums/sum-squares
+//!   accumulate row-by-row in memory; vector adds commute with nothing
+//!   (each lane is one channel's ascending-row chain).
+//! * `gn_norm_rows` — per-element `((x − μ)/σ → f32) * scale + bias` with
+//!   an exact-IEEE f64 divide; order-independent per element, so the
+//!   vector form is trivially identical. The fused-relu branch keeps NaN
+//!   (`o < 0.0` is false for NaN) and maps negatives — including `-inf` —
+//!   to literal `+0.0`, matching the scalar `if o < 0.0 { 0.0 }`.
+//! * `axpy` — element-wise `acc[i] += w * x[i]`; no cross-lane reduction.
+//!
+//! The conformance tests below (plus `tests/simd_conformance.rs` and the
+//! golden-trace `simd` grid axis) assert all of this bit-for-bit,
+//! including shapes not divisible by any lane width and NaN/inf/-0.0
+//! propagation.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::anyhow::{bail, Result};
+
+/// A SIMD dispatch level. `Scalar` is always supported; the vector levels
+/// are gated on runtime CPU feature detection (see [`supported`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SimdLevel {
+    /// Portable scalar core — the reference every other level must match.
+    Scalar = 0,
+    /// 8-lane f32 / 4-lane f64 via AVX2 (x86_64).
+    Avx2 = 1,
+    /// 16-lane f32 / 8-lane f64 via AVX-512F (x86_64; implies the AVX2
+    /// remainder path, so detection requires both).
+    Avx512 = 2,
+    /// 4-lane f32 / 2-lane f64 via NEON (aarch64).
+    Neon = 3,
+}
+
+impl SimdLevel {
+    /// All levels, in ascending preference order (best last).
+    pub const ALL: [SimdLevel; 4] =
+        [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Avx512, SimdLevel::Neon];
+
+    /// Stable lowercase name, as accepted by `DTFL_TEST_SIMD` / `run.simd`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a level name (the inverse of [`SimdLevel::name`]).
+    pub fn from_name(name: &str) -> Option<SimdLevel> {
+        match name {
+            "scalar" => Some(SimdLevel::Scalar),
+            "avx2" => Some(SimdLevel::Avx2),
+            "avx512" => Some(SimdLevel::Avx512),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> SimdLevel {
+        SimdLevel::ALL.get(v as usize).copied().unwrap_or(SimdLevel::Scalar)
+    }
+}
+
+/// Whether the running host supports `level`.
+pub fn supported(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx512 => {
+            std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx2")
+        }
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// Every level the host supports, ascending preference (always starts with
+/// `Scalar`). Conformance suites iterate this to cover the whole dispatch
+/// table on whatever machine they run on.
+pub fn available() -> Vec<SimdLevel> {
+    SimdLevel::ALL.iter().copied().filter(|&l| supported(l)).collect()
+}
+
+/// The best level the host supports.
+pub fn best() -> SimdLevel {
+    *available().last().expect("Scalar is always available")
+}
+
+/// The level `"auto"` resolves to: the `DTFL_TEST_SIMD` env override when
+/// set (and non-empty — the CI matrix exports empty strings for the
+/// baseline legs), else [`best`]. Unknown or unsupported override names
+/// panic: a forced determinism leg that silently fell back to scalar would
+/// be testing nothing.
+pub fn default_level() -> SimdLevel {
+    match std::env::var("DTFL_TEST_SIMD") {
+        Ok(s) if !s.is_empty() => {
+            let level = SimdLevel::from_name(&s).unwrap_or_else(|| {
+                panic!("DTFL_TEST_SIMD={s}: unknown SIMD level (scalar|avx2|avx512|neon)")
+            });
+            assert!(
+                supported(level),
+                "DTFL_TEST_SIMD={s}: level not supported on this host (available: {:?})",
+                available()
+            );
+            level
+        }
+        _ => best(),
+    }
+}
+
+/// Sentinel for "not yet resolved" in [`ACTIVE`].
+const UNRESOLVED: u8 = u8::MAX;
+
+/// Process-wide active dispatch level (`UNRESOLVED` until first use).
+/// Process-wide on purpose, like `kernels::INTRA_THREADS`: the level is a
+/// pure performance knob — every level produces identical bits, so a race
+/// between two runtimes forcing different levels can change *speed*, never
+/// *results* (asserted by `tests/simd_conformance.rs`).
+static ACTIVE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+/// The active dispatch level, resolving (and caching) [`default_level`] on
+/// first use.
+pub fn active() -> SimdLevel {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != UNRESOLVED {
+        return SimdLevel::from_u8(v);
+    }
+    let level = default_level();
+    ACTIVE.store(level as u8, Ordering::Relaxed);
+    level
+}
+
+/// Force the process-wide dispatch level. Errors if the host does not
+/// support `level` — the vector kernels are `unsafe` precisely because
+/// they assume their feature set, so an unsupported level must never be
+/// stored.
+pub fn set_simd(level: SimdLevel) -> Result<()> {
+    if !supported(level) {
+        bail!(
+            "SIMD level '{}' is not supported on this host (available: {:?})",
+            level.name(),
+            available()
+        );
+    }
+    ACTIVE.store(level as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// dispatchers
+//
+// Each takes the level explicitly (read once per panel / fold by the
+// caller, not per element) and falls back to the scalar core for levels
+// without an arch implementation. Safety of the `unsafe` arch calls:
+// `set_simd` / `default_level` only ever admit host-supported levels, and
+// the dispatchers bounds-check every slice against the full access
+// pattern up front, so the raw loads/stores inside stay in bounds.
+// ---------------------------------------------------------------------
+
+/// Widest row count any tile instantiation may use.
+const MAX_TMR: usize = 8;
+/// Widest column count any tile instantiation may use.
+const MAX_TNR: usize = 32;
+
+/// Accumulate a full `TMR`×`TNR` tile of `C += A·B` into `acc`, reading
+/// `a[(i0 + r) * k + kk]` and `b[kk * n + j0 + j]` — exactly the scalar
+/// core's access pattern and reduction order (see the module doc). The
+/// epilogue store stays with the caller.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn accum_tile<const TMR: usize, const TNR: usize>(
+    level: SimdLevel,
+    acc: &mut [[f32; TNR]; TMR],
+    a: &[f32],
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    j0: usize,
+) {
+    assert!(TMR <= MAX_TMR && TNR <= MAX_TNR, "tile {TMR}x{TNR} exceeds SIMD register budget");
+    if k == 0 {
+        return;
+    }
+    assert!((i0 + TMR) * k <= a.len(), "A panel out of bounds");
+    assert!((k - 1) * n + j0 + TNR <= b.len(), "B panel out of bounds");
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::accum_tile_avx2::<TMR, TNR>(acc, a, k, b, n, i0, j0) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx512 => unsafe { x86::accum_tile_avx512::<TMR, TNR>(acc, a, k, b, n, i0, j0) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::accum_tile_neon::<TMR, TNR>(acc, a, k, b, n, i0, j0) },
+        _ => accum_tile_scalar::<TMR, TNR>(acc, a, k, b, n, i0, j0),
+    }
+}
+
+/// Per-channel column sums for group-norm stats: for each of `rows` rows
+/// of `c` channels, `acc[j] += x[row*c + j] as f64` and `acc2[j] += v*v`.
+/// Lane = channel, rows ascending — every lane width replays the scalar
+/// per-channel chain exactly.
+pub(crate) fn gn_col_sums(
+    level: SimdLevel,
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    acc: &mut [f64],
+    acc2: &mut [f64],
+) {
+    assert!(rows * c <= x.len() && c <= acc.len() && c <= acc2.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::gn_col_sums_avx2(x, rows, c, acc, acc2) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx512 => unsafe { x86::gn_col_sums_avx512(x, rows, c, acc, acc2) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::gn_col_sums_neon(x, rows, c, acc, acc2) },
+        _ => gn_col_sums_scalar(x, rows, c, acc, acc2),
+    }
+}
+
+/// Group-norm normalize + affine (+ optional fused relu) over `rows` rows
+/// of `c` channels: `out = (((x − muc[j]) / sgc[j]) as f32) * scale[j] +
+/// bias[j]`, negatives zeroed when `relu`. Per-element and
+/// order-independent given μ/σ, so every level is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gn_norm_rows(
+    level: SimdLevel,
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    muc: &[f64],
+    sgc: &[f64],
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+) {
+    assert!(rows * c <= x.len() && rows * c <= out.len());
+    assert!(c <= muc.len() && c <= sgc.len() && c <= scale.len() && c <= bias.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe {
+            x86::gn_norm_rows_avx2(out, x, rows, c, muc, sgc, scale, bias, relu)
+        },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx512 => unsafe {
+            x86::gn_norm_rows_avx512(out, x, rows, c, muc, sgc, scale, bias, relu)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe {
+            arm::gn_norm_rows_neon(out, x, rows, c, muc, sgc, scale, bias, relu)
+        },
+        _ => gn_norm_rows_scalar(out, x, rows, c, muc, sgc, scale, bias, relu),
+    }
+}
+
+/// Element-wise weighted accumulate `acc[i] += w * x[i]` — the plain-mean
+/// aggregation fold step. No cross-lane reduction, so every level is
+/// bit-identical.
+pub(crate) fn axpy(level: SimdLevel, acc: &mut [f32], x: &[f32], w: f32) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy_avx2(acc, x, w) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx512 => unsafe { x86::axpy_avx512(acc, x, w) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { arm::axpy_neon(acc, x, w) },
+        _ => axpy_scalar(acc, x, w),
+    }
+}
+
+// ---------------------------------------------------------------------
+// scalar reference implementations (the pinned order)
+// ---------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+fn accum_tile_scalar<const TMR: usize, const TNR: usize>(
+    acc: &mut [[f32; TNR]; TMR],
+    a: &[f32],
+    k: usize,
+    b: &[f32],
+    n: usize,
+    i0: usize,
+    j0: usize,
+) {
+    for kk in 0..k {
+        let base = kk * n + j0;
+        let brow = &b[base..base + TNR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = a[(i0 + r) * k + kk];
+            if av == 0.0 {
+                continue; // skip-zero: bit-neutral for finite data (see tests)
+            }
+            for (x, &bv) in accr.iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+}
+
+fn gn_col_sums_scalar(x: &[f32], rows: usize, c: usize, acc: &mut [f64], acc2: &mut [f64]) {
+    for row in 0..rows {
+        let xr = &x[row * c..row * c + c];
+        for (j, &xv) in xr.iter().enumerate() {
+            let v = xv as f64;
+            acc[j] += v;
+            acc2[j] += v * v;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gn_norm_rows_scalar(
+    out: &mut [f32],
+    x: &[f32],
+    rows: usize,
+    c: usize,
+    muc: &[f64],
+    sgc: &[f64],
+    scale: &[f32],
+    bias: &[f32],
+    relu: bool,
+) {
+    for row in 0..rows {
+        let base = row * c;
+        for j in 0..c {
+            let yv = ((x[base + j] as f64 - muc[j]) / sgc[j]) as f32;
+            let o = yv * scale[j] + bias[j];
+            out[base + j] = if relu && o < 0.0 { 0.0 } else { o };
+        }
+    }
+}
+
+fn axpy_scalar(acc: &mut [f32], x: &[f32], w: f32) {
+    for (ai, &xi) in acc.iter_mut().zip(x) {
+        *ai += w * xi;
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86_64: AVX2 + AVX-512F
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use super::{MAX_TMR, MAX_TNR};
+
+    /// Shared scalar column tail for the vector tiles: columns
+    /// `[jt, TNR)` of the accumulator, same ascending-`kk` order and
+    /// skip-zero test as the vector body.
+    ///
+    /// # Safety
+    /// Caller upholds the `accum_tile` bounds contract.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn accum_tile_tail<const TMR: usize, const TNR: usize>(
+        acc: &mut [[f32; TNR]; TMR],
+        a: &[f32],
+        k: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        j0: usize,
+        jt: usize,
+    ) {
+        for kk in 0..k {
+            let base = kk * n + j0 + jt;
+            for r in 0..TMR {
+                let av = *a.get_unchecked((i0 + r) * k + kk);
+                if av == 0.0 {
+                    continue;
+                }
+                for j in jt..TNR {
+                    acc[r][j] += av * *b.get_unchecked(base + (j - jt));
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; caller upholds the `accum_tile` bounds contract.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn accum_tile_avx2<const TMR: usize, const TNR: usize>(
+        acc: &mut [[f32; TNR]; TMR],
+        a: &[f32],
+        k: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        j0: usize,
+    ) {
+        let nv = TNR / 8; // full 8-lane chunks; scalar tail covers TNR % 8
+        let mut vacc = [[_mm256_setzero_ps(); MAX_TNR / 8]; MAX_TMR];
+        for kk in 0..k {
+            let bp = b.as_ptr().add(kk * n + j0);
+            let mut bv = [_mm256_setzero_ps(); MAX_TNR / 8];
+            for v in 0..nv {
+                bv[v] = _mm256_loadu_ps(bp.add(v * 8));
+            }
+            for r in 0..TMR {
+                let av = *a.get_unchecked((i0 + r) * k + kk);
+                if av == 0.0 {
+                    continue;
+                }
+                let avv = _mm256_set1_ps(av);
+                for v in 0..nv {
+                    // mul + add kept separate: the scalar core never fuses
+                    vacc[r][v] = _mm256_add_ps(vacc[r][v], _mm256_mul_ps(avv, bv[v]));
+                }
+            }
+        }
+        for (r, accr) in acc.iter_mut().enumerate() {
+            for v in 0..nv {
+                _mm256_storeu_ps(accr.as_mut_ptr().add(v * 8), vacc[r][v]);
+            }
+        }
+        if TNR % 8 != 0 {
+            accum_tile_tail::<TMR, TNR>(acc, a, k, b, n, i0, j0, nv * 8);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX-512F + AVX2; caller upholds the `accum_tile` bounds
+    /// contract.
+    #[target_feature(enable = "avx512f,avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn accum_tile_avx512<const TMR: usize, const TNR: usize>(
+        acc: &mut [[f32; TNR]; TMR],
+        a: &[f32],
+        k: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        j0: usize,
+    ) {
+        let n16 = TNR / 16; // full 16-lane chunks
+        let rem8 = (TNR % 16) / 8; // at most one trailing 8-lane chunk
+        let mut vacc = [[_mm512_setzero_ps(); MAX_TNR / 16]; MAX_TMR];
+        let mut hacc = [_mm256_setzero_ps(); MAX_TMR];
+        for kk in 0..k {
+            let bp = b.as_ptr().add(kk * n + j0);
+            let mut bv = [_mm512_setzero_ps(); MAX_TNR / 16];
+            for v in 0..n16 {
+                bv[v] = _mm512_loadu_ps(bp.add(v * 16));
+            }
+            let bh = if rem8 != 0 {
+                _mm256_loadu_ps(bp.add(n16 * 16))
+            } else {
+                _mm256_setzero_ps()
+            };
+            for r in 0..TMR {
+                let av = *a.get_unchecked((i0 + r) * k + kk);
+                if av == 0.0 {
+                    continue;
+                }
+                let avv = _mm512_set1_ps(av);
+                for v in 0..n16 {
+                    vacc[r][v] = _mm512_add_ps(vacc[r][v], _mm512_mul_ps(avv, bv[v]));
+                }
+                if rem8 != 0 {
+                    let avh = _mm256_set1_ps(av);
+                    hacc[r] = _mm256_add_ps(hacc[r], _mm256_mul_ps(avh, bh));
+                }
+            }
+        }
+        for (r, accr) in acc.iter_mut().enumerate() {
+            for v in 0..n16 {
+                _mm512_storeu_ps(accr.as_mut_ptr().add(v * 16), vacc[r][v]);
+            }
+            if rem8 != 0 {
+                _mm256_storeu_ps(accr.as_mut_ptr().add(n16 * 16), hacc[r]);
+            }
+        }
+        if TNR % 8 != 0 {
+            accum_tile_tail::<TMR, TNR>(acc, a, k, b, n, i0, j0, n16 * 16 + rem8 * 8);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; caller guarantees `rows * c <= x.len()` and
+    /// `c <= acc.len() / acc2.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gn_col_sums_avx2(
+        x: &[f32],
+        rows: usize,
+        c: usize,
+        acc: &mut [f64],
+        acc2: &mut [f64],
+    ) {
+        for row in 0..rows {
+            let base = row * c;
+            let mut j = 0;
+            while j + 4 <= c {
+                let v = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(base + j)));
+                let pa = acc.as_mut_ptr().add(j);
+                _mm256_storeu_pd(pa, _mm256_add_pd(_mm256_loadu_pd(pa), v));
+                let p2 = acc2.as_mut_ptr().add(j);
+                _mm256_storeu_pd(p2, _mm256_add_pd(_mm256_loadu_pd(p2), _mm256_mul_pd(v, v)));
+                j += 4;
+            }
+            while j < c {
+                let v = *x.get_unchecked(base + j) as f64;
+                *acc.get_unchecked_mut(j) += v;
+                *acc2.get_unchecked_mut(j) += v * v;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX-512F; caller guarantees the `gn_col_sums` bounds.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn gn_col_sums_avx512(
+        x: &[f32],
+        rows: usize,
+        c: usize,
+        acc: &mut [f64],
+        acc2: &mut [f64],
+    ) {
+        for row in 0..rows {
+            let base = row * c;
+            let mut j = 0;
+            while j + 8 <= c {
+                let v = _mm512_cvtps_pd(_mm256_loadu_ps(x.as_ptr().add(base + j)));
+                let pa = acc.as_mut_ptr().add(j);
+                _mm512_storeu_pd(pa, _mm512_add_pd(_mm512_loadu_pd(pa), v));
+                let p2 = acc2.as_mut_ptr().add(j);
+                _mm512_storeu_pd(p2, _mm512_add_pd(_mm512_loadu_pd(p2), _mm512_mul_pd(v, v)));
+                j += 8;
+            }
+            while j < c {
+                let v = *x.get_unchecked(base + j) as f64;
+                *acc.get_unchecked_mut(j) += v;
+                *acc2.get_unchecked_mut(j) += v * v;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; caller guarantees the `gn_norm_rows` bounds.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn gn_norm_rows_avx2(
+        out: &mut [f32],
+        x: &[f32],
+        rows: usize,
+        c: usize,
+        muc: &[f64],
+        sgc: &[f64],
+        scale: &[f32],
+        bias: &[f32],
+        relu: bool,
+    ) {
+        let zero = _mm_setzero_ps();
+        for row in 0..rows {
+            let base = row * c;
+            let mut j = 0;
+            while j + 4 <= c {
+                let xv = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(base + j)));
+                let num = _mm256_sub_pd(xv, _mm256_loadu_pd(muc.as_ptr().add(j)));
+                let yv = _mm256_cvtpd_ps(_mm256_div_pd(num, _mm256_loadu_pd(sgc.as_ptr().add(j))));
+                let sv = _mm_loadu_ps(scale.as_ptr().add(j));
+                let bv = _mm_loadu_ps(bias.as_ptr().add(j));
+                let mut o = _mm_add_ps(_mm_mul_ps(yv, sv), bv);
+                if relu {
+                    // zero exactly the lanes where o < 0.0 (NaN lanes keep NaN)
+                    o = _mm_andnot_ps(_mm_cmplt_ps(o, zero), o);
+                }
+                _mm_storeu_ps(out.as_mut_ptr().add(base + j), o);
+                j += 4;
+            }
+            while j < c {
+                let yv = ((*x.get_unchecked(base + j) as f64 - *muc.get_unchecked(j))
+                    / *sgc.get_unchecked(j)) as f32;
+                let o = yv * *scale.get_unchecked(j) + *bias.get_unchecked(j);
+                *out.get_unchecked_mut(base + j) = if relu && o < 0.0 { 0.0 } else { o };
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX-512F; caller guarantees the `gn_norm_rows` bounds.
+    #[target_feature(enable = "avx512f")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn gn_norm_rows_avx512(
+        out: &mut [f32],
+        x: &[f32],
+        rows: usize,
+        c: usize,
+        muc: &[f64],
+        sgc: &[f64],
+        scale: &[f32],
+        bias: &[f32],
+        relu: bool,
+    ) {
+        let zero = _mm256_setzero_ps();
+        for row in 0..rows {
+            let base = row * c;
+            let mut j = 0;
+            while j + 8 <= c {
+                let xv = _mm512_cvtps_pd(_mm256_loadu_ps(x.as_ptr().add(base + j)));
+                let num = _mm512_sub_pd(xv, _mm512_loadu_pd(muc.as_ptr().add(j)));
+                let yv = _mm512_cvtpd_ps(_mm512_div_pd(num, _mm512_loadu_pd(sgc.as_ptr().add(j))));
+                let sv = _mm256_loadu_ps(scale.as_ptr().add(j));
+                let bv = _mm256_loadu_ps(bias.as_ptr().add(j));
+                let mut o = _mm256_add_ps(_mm256_mul_ps(yv, sv), bv);
+                if relu {
+                    o = _mm256_andnot_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(o, zero), o);
+                }
+                _mm256_storeu_ps(out.as_mut_ptr().add(base + j), o);
+                j += 8;
+            }
+            while j < c {
+                let yv = ((*x.get_unchecked(base + j) as f64 - *muc.get_unchecked(j))
+                    / *sgc.get_unchecked(j)) as f32;
+                let o = yv * *scale.get_unchecked(j) + *bias.get_unchecked(j);
+                *out.get_unchecked_mut(base + j) = if relu && o < 0.0 { 0.0 } else { o };
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn axpy_avx2(acc: &mut [f32], x: &[f32], w: f32) {
+        let n = acc.len().min(x.len());
+        let wv = _mm256_set1_ps(w);
+        let mut i = 0;
+        while i + 8 <= n {
+            let p = acc.as_mut_ptr().add(i);
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), _mm256_mul_ps(wv, xv)));
+            i += 8;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) += w * *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX-512F.
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn axpy_avx512(acc: &mut [f32], x: &[f32], w: f32) {
+        let n = acc.len().min(x.len());
+        let wv = _mm512_set1_ps(w);
+        let mut i = 0;
+        while i + 16 <= n {
+            let p = acc.as_mut_ptr().add(i);
+            let xv = _mm512_loadu_ps(x.as_ptr().add(i));
+            _mm512_storeu_ps(p, _mm512_add_ps(_mm512_loadu_ps(p), _mm512_mul_ps(wv, xv)));
+            i += 16;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) += w * *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64: NEON
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use core::arch::aarch64::*;
+
+    use super::{MAX_TMR, MAX_TNR};
+
+    /// # Safety
+    /// Requires NEON; caller upholds the `accum_tile` bounds contract.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn accum_tile_neon<const TMR: usize, const TNR: usize>(
+        acc: &mut [[f32; TNR]; TMR],
+        a: &[f32],
+        k: usize,
+        b: &[f32],
+        n: usize,
+        i0: usize,
+        j0: usize,
+    ) {
+        let nv = TNR / 4; // full 4-lane chunks; scalar tail covers TNR % 4
+        let mut vacc = [[vdupq_n_f32(0.0); MAX_TNR / 4]; MAX_TMR];
+        for kk in 0..k {
+            let bp = b.as_ptr().add(kk * n + j0);
+            let mut bv = [vdupq_n_f32(0.0); MAX_TNR / 4];
+            for v in 0..nv {
+                bv[v] = vld1q_f32(bp.add(v * 4));
+            }
+            for r in 0..TMR {
+                let av = *a.get_unchecked((i0 + r) * k + kk);
+                if av == 0.0 {
+                    continue;
+                }
+                let avv = vdupq_n_f32(av);
+                for v in 0..nv {
+                    // mul + add kept separate: never vfmaq
+                    vacc[r][v] = vaddq_f32(vacc[r][v], vmulq_f32(avv, bv[v]));
+                }
+            }
+        }
+        for (r, accr) in acc.iter_mut().enumerate() {
+            for v in 0..nv {
+                vst1q_f32(accr.as_mut_ptr().add(v * 4), vacc[r][v]);
+            }
+        }
+        if TNR % 4 != 0 {
+            let jt = nv * 4;
+            for kk in 0..k {
+                let base = kk * n + j0 + jt;
+                for r in 0..TMR {
+                    let av = *a.get_unchecked((i0 + r) * k + kk);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for j in jt..TNR {
+                        acc[r][j] += av * *b.get_unchecked(base + (j - jt));
+                    }
+                }
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON; caller guarantees the `gn_col_sums` bounds.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn gn_col_sums_neon(
+        x: &[f32],
+        rows: usize,
+        c: usize,
+        acc: &mut [f64],
+        acc2: &mut [f64],
+    ) {
+        for row in 0..rows {
+            let base = row * c;
+            let mut j = 0;
+            while j + 4 <= c {
+                let xv = vld1q_f32(x.as_ptr().add(base + j));
+                let lo = vcvt_f64_f32(vget_low_f32(xv));
+                let hi = vcvt_high_f64_f32(xv);
+                let pa = acc.as_mut_ptr().add(j);
+                vst1q_f64(pa, vaddq_f64(vld1q_f64(pa), lo));
+                vst1q_f64(pa.add(2), vaddq_f64(vld1q_f64(pa.add(2)), hi));
+                let p2 = acc2.as_mut_ptr().add(j);
+                vst1q_f64(p2, vaddq_f64(vld1q_f64(p2), vmulq_f64(lo, lo)));
+                vst1q_f64(p2.add(2), vaddq_f64(vld1q_f64(p2.add(2)), vmulq_f64(hi, hi)));
+                j += 4;
+            }
+            while j < c {
+                let v = *x.get_unchecked(base + j) as f64;
+                *acc.get_unchecked_mut(j) += v;
+                *acc2.get_unchecked_mut(j) += v * v;
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON; caller guarantees the `gn_norm_rows` bounds.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn gn_norm_rows_neon(
+        out: &mut [f32],
+        x: &[f32],
+        rows: usize,
+        c: usize,
+        muc: &[f64],
+        sgc: &[f64],
+        scale: &[f32],
+        bias: &[f32],
+        relu: bool,
+    ) {
+        let zero = vdupq_n_f32(0.0);
+        for row in 0..rows {
+            let base = row * c;
+            let mut j = 0;
+            while j + 4 <= c {
+                let xv = vld1q_f32(x.as_ptr().add(base + j));
+                let lo = vcvt_f64_f32(vget_low_f32(xv));
+                let hi = vcvt_high_f64_f32(xv);
+                let nlo = vsubq_f64(lo, vld1q_f64(muc.as_ptr().add(j)));
+                let nhi = vsubq_f64(hi, vld1q_f64(muc.as_ptr().add(j + 2)));
+                let ylo = vcvt_f32_f64(vdivq_f64(nlo, vld1q_f64(sgc.as_ptr().add(j))));
+                let yhi = vcvt_f32_f64(vdivq_f64(nhi, vld1q_f64(sgc.as_ptr().add(j + 2))));
+                let yv = vcombine_f32(ylo, yhi);
+                let sv = vld1q_f32(scale.as_ptr().add(j));
+                let bv = vld1q_f32(bias.as_ptr().add(j));
+                let mut o = vaddq_f32(vmulq_f32(yv, sv), bv);
+                if relu {
+                    // select zero exactly where o < 0.0 (NaN lanes keep NaN)
+                    o = vbslq_f32(vcltq_f32(o, zero), zero, o);
+                }
+                vst1q_f32(out.as_mut_ptr().add(base + j), o);
+                j += 4;
+            }
+            while j < c {
+                let yv = ((*x.get_unchecked(base + j) as f64 - *muc.get_unchecked(j))
+                    / *sgc.get_unchecked(j)) as f32;
+                let o = yv * *scale.get_unchecked(j) + *bias.get_unchecked(j);
+                *out.get_unchecked_mut(base + j) = if relu && o < 0.0 { 0.0 } else { o };
+                j += 1;
+            }
+        }
+    }
+
+    /// # Safety
+    /// Requires NEON.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn axpy_neon(acc: &mut [f32], x: &[f32], w: f32) {
+        let n = acc.len().min(x.len());
+        let wv = vdupq_n_f32(w);
+        let mut i = 0;
+        while i + 4 <= n {
+            let p = acc.as_mut_ptr().add(i);
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(p, vaddq_f32(vld1q_f32(p), vmulq_f32(wv, xv)));
+            i += 4;
+        }
+        while i < n {
+            *acc.get_unchecked_mut(i) += w * *x.get_unchecked(i);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic LCG (no external rng crates in the image).
+    struct Rng(u64);
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            self.0
+        }
+        fn f32(&mut self) -> f32 {
+            ((self.next() >> 40) as f32 / (1u64 << 24) as f32) * 2.0 - 1.0
+        }
+    }
+
+    /// Random data with the special values the contract must carry:
+    /// exact zeros (skip-zero), -0.0, NaN and infinities.
+    fn specials(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| match i % 17 {
+                3 => 0.0,
+                7 => -0.0,
+                11 => f32::NAN,
+                13 => f32::INFINITY,
+                15 => f32::NEG_INFINITY,
+                _ => rng.f32(),
+            })
+            .collect()
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+        }
+    }
+
+    fn non_scalar() -> Vec<SimdLevel> {
+        available().into_iter().filter(|&l| l != SimdLevel::Scalar).collect()
+    }
+
+    fn check_accum<const TMR: usize, const TNR: usize>(m: usize, k: usize, n: usize) {
+        let mut rng = Rng(0x5eed ^ ((TMR * 64 + TNR) as u64) ^ ((m * k * n) as u64));
+        let a: Vec<f32> = specials(&mut rng, m * k);
+        let b: Vec<f32> = specials(&mut rng, k * n);
+        for i0 in [0, m - TMR] {
+            for j0 in [0, n - TNR] {
+                let mut want = [[0.0f32; TNR]; TMR];
+                accum_tile_scalar::<TMR, TNR>(&mut want, &a, k, &b, n, i0, j0);
+                for level in non_scalar() {
+                    let mut got = [[0.0f32; TNR]; TMR];
+                    accum_tile::<TMR, TNR>(level, &mut got, &a, k, &b, n, i0, j0);
+                    for r in 0..TMR {
+                        assert_bits(
+                            &got[r],
+                            &want[r],
+                            &format!("accum {TMR}x{TNR} @({i0},{j0}) {level:?} row {r}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accum_tile_levels_match_scalar_bits() {
+        // lane-multiple and non-lane-multiple tiles, k not a multiple of
+        // anything, offsets off the panel origin
+        check_accum::<4, 16>(9, 33, 37);
+        check_accum::<8, 8>(11, 17, 19);
+        check_accum::<2, 16>(5, 23, 29);
+        check_accum::<4, 32>(7, 13, 41);
+        check_accum::<4, 24>(9, 21, 31);
+        check_accum::<3, 5>(6, 15, 13); // tails only on every vector level
+        check_accum::<5, 12>(8, 19, 23);
+        check_accum::<8, 16>(13, 9, 27);
+    }
+
+    #[test]
+    fn gn_col_sums_levels_match_scalar_bits() {
+        for c in [1usize, 2, 3, 4, 5, 7, 8, 11, 16, 24] {
+            let rows = 13;
+            let mut rng = Rng(0xc0_15 ^ c as u64);
+            let x = specials(&mut rng, rows * c);
+            let mut want = (vec![0.1f64; c], vec![0.2f64; c]);
+            gn_col_sums_scalar(&x, rows, c, &mut want.0, &mut want.1);
+            for level in non_scalar() {
+                let mut got = (vec![0.1f64; c], vec![0.2f64; c]);
+                gn_col_sums(level, &x, rows, c, &mut got.0, &mut got.1);
+                for j in 0..c {
+                    assert_eq!(got.0[j].to_bits(), want.0[j].to_bits(), "sum c={c} {level:?}");
+                    assert_eq!(got.1[j].to_bits(), want.1[j].to_bits(), "sumsq c={c} {level:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gn_norm_rows_levels_match_scalar_bits() {
+        for c in [1usize, 3, 4, 6, 8, 9, 16, 21] {
+            let rows = 11;
+            let mut rng = Rng(0x90_44 ^ c as u64);
+            let x = specials(&mut rng, rows * c);
+            let muc: Vec<f64> = (0..c).map(|_| rng.f32() as f64).collect();
+            let sgc: Vec<f64> = (0..c).map(|_| 0.5 + rng.f32().abs() as f64).collect();
+            let scale: Vec<f32> = (0..c).map(|_| rng.f32()).collect();
+            let bias: Vec<f32> = (0..c).map(|_| rng.f32()).collect();
+            for relu in [false, true] {
+                let mut want = vec![0.0f32; rows * c];
+                gn_norm_rows_scalar(&mut want, &x, rows, c, &muc, &sgc, &scale, &bias, relu);
+                for level in non_scalar() {
+                    let mut got = vec![0.0f32; rows * c];
+                    gn_norm_rows(level, &mut got, &x, rows, c, &muc, &sgc, &scale, &bias, relu);
+                    assert_bits(&got, &want, &format!("gn_norm c={c} relu={relu} {level:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_levels_match_scalar_bits() {
+        for n in [1usize, 3, 7, 8, 15, 16, 17, 64, 100] {
+            let mut rng = Rng(0xa9_31 ^ n as u64);
+            let x = specials(&mut rng, n);
+            let init: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            for w in [0.25f32, -1.5, 0.0] {
+                let mut want = init.clone();
+                axpy_scalar(&mut want, &x, w);
+                for level in non_scalar() {
+                    let mut got = init.clone();
+                    axpy(level, &mut got, &x, w);
+                    assert_bits(&got, &want, &format!("axpy n={n} w={w} {level:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn level_names_round_trip() {
+        for level in SimdLevel::ALL {
+            assert_eq!(SimdLevel::from_name(level.name()), Some(level));
+        }
+        assert_eq!(SimdLevel::from_name("auto"), None);
+        assert_eq!(SimdLevel::from_name("AVX2"), None);
+    }
+
+    #[test]
+    fn available_starts_scalar_and_best_is_last() {
+        let avail = available();
+        assert_eq!(avail[0], SimdLevel::Scalar);
+        assert_eq!(best(), *avail.last().unwrap());
+        assert!(avail.iter().all(|&l| supported(l)));
+    }
+
+    #[test]
+    fn set_simd_rejects_unsupported_levels() {
+        for level in SimdLevel::ALL {
+            if !supported(level) {
+                assert!(set_simd(level).is_err(), "{level:?} must be rejected");
+            }
+        }
+        // Scalar is always settable; every level leaves results unchanged,
+        // so flipping the global here cannot perturb concurrent tests.
+        set_simd(SimdLevel::Scalar).unwrap();
+        assert_eq!(active(), SimdLevel::Scalar);
+        set_simd(best()).unwrap();
+        assert_eq!(active(), best());
+    }
+}

@@ -125,13 +125,20 @@ impl BenchReport {
         }
     }
 
+    /// Report document, schema 2: `schema` plus one key per recorded
+    /// section. `entries` (raw per-bench stats) is emitted only when
+    /// non-empty — schema 1 always wrote it, leaving a dead `[]` in
+    /// documents produced by the structured probes alone.
     pub fn to_json(&self) -> Json {
-        let entries = if self.entries.is_empty() {
+        let entries: Vec<Json> = if self.entries.is_empty() {
             self.carried_entries.clone()
         } else {
             self.entries.iter().map(BenchStats::to_json).collect()
         };
-        let mut pairs = vec![("schema", json::num(1.0)), ("entries", Json::Arr(entries))];
+        let mut pairs = vec![("schema", json::num(2.0))];
+        if !entries.is_empty() {
+            pairs.push(("entries", Json::Arr(entries)));
+        }
         for (k, v) in &self.extras {
             pairs.push((k.as_str(), v.clone()));
         }
@@ -156,6 +163,23 @@ pub fn hotpath_report_path() -> PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn report_omits_empty_entries_and_stamps_schema_2() {
+        let mut r = BenchReport::new();
+        r.extra("probe", json::num(1.0));
+        let doc = json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_f64().unwrap(), 2.0);
+        assert!(doc.get("entries").is_err(), "empty entries must be omitted");
+        assert!(doc.get("probe").is_ok());
+
+        let mut r = BenchReport::new();
+        r.push(bench("one", 1, Duration::from_millis(10), || {
+            std::hint::black_box(0);
+        }));
+        let doc = json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(doc.get("entries").unwrap().as_arr().unwrap().len(), 1);
+    }
 
     #[test]
     fn bench_collects_samples() {

@@ -335,8 +335,10 @@ fn epilogues_bitwise_match_unfused_passes_in_all_orientations() {
 #[test]
 fn tune_candidates_are_bit_identical_to_pinned_core() {
     // per-element accumulation runs over k in ascending order whatever the
-    // register tile, so every candidate must reproduce the pinned core
-    // exactly — retuning MR/NR can never change results
+    // register tile or lane width, so every (candidate × dispatch level)
+    // must reproduce the pinned core exactly — retuning can never change
+    // results
+    use dtfl::runtime::simd;
     let mut rng = Rng64::seed_from_u64(0x70e);
     for &(m, k, n) in &[
         (1usize, 1usize, 1usize),
@@ -348,14 +350,18 @@ fn tune_candidates_are_bit_identical_to_pinned_core() {
         let b = rand_vec(&mut rng, k * n);
         let mut macs = 0u64;
         let pinned = kernels::matmul(&a, m, k, &b, n, &mut macs);
-        for &(mr, nr) in tune::CANDIDATES {
-            let got = tune::matmul_with(mr, nr, &a, m, k, &b, n).expect("listed candidate");
-            assert_bits_eq(&got, &pinned, &format!("tile ({mr},{nr}) at {m}x{k}x{n}"));
+        for lv in simd::available() {
+            for &(mr, nr) in tune::CANDIDATES {
+                let got =
+                    tune::matmul_with(mr, nr, lv, &a, m, k, &b, n).expect("listed candidate");
+                let what = format!("tile ({mr},{nr}) simd={} at {m}x{k}x{n}", lv.name());
+                assert_bits_eq(&got, &pinned, &what);
+            }
+            assert!(tune::matmul_with(7, 13, lv, &a, m, k, &b, n).is_none());
         }
         assert!(
             tune::CANDIDATES.contains(&(MR, NR)),
             "the pinned (MR, NR) must stay in the sweep grid"
         );
-        assert!(tune::matmul_with(7, 13, &a, m, k, &b, n).is_none());
     }
 }

@@ -4,13 +4,15 @@
 //! compact trace — per-round makespan/sim-time/loss/accuracy bits, the
 //! tier assignments, and a checksum plus the full bit pattern of the final
 //! global parameters — from the **sequential barrier engine** (1 thread,
-//! `pipeline_depth` 1, `agg_shards` 1, intra off, `fuse_forward` off —
-//! i.e. the legacy unfused math). Every other engine configuration in the
-//! `{threads, intra_threads, pipeline_depth, agg_shards, fuse_forward}`
-//! grid must reproduce that trace **byte for byte**: the pipelined round
-//! engine, the sharded aggregation flush, the double-buffered snapshot
-//! swap, next-round input prefetch, the fused gn/relu forward path, and
-//! the 1×1 im2col elision are all required to be bit-invisible.
+//! `pipeline_depth` 1, `agg_shards` 1, intra off, `fuse_forward` off,
+//! `simd` forced to `scalar` — i.e. the legacy unfused scalar math). Every
+//! other engine configuration in the
+//! `{threads, intra_threads, pipeline_depth, agg_shards, fuse_forward,
+//! simd}` grid must reproduce that trace **byte for byte**: the pipelined
+//! round engine, the sharded aggregation flush, the double-buffered
+//! snapshot swap, next-round input prefetch, the fused gn/relu forward
+//! path, the 1×1 im2col elision, and every SIMD dispatch level are all
+//! required to be bit-invisible.
 //!
 //! The reference trace is recorded in-process (float bit patterns are only
 //! stable per libm build, so a committed file would be flaky across
@@ -19,11 +21,13 @@
 //! `BENCH_hotpath.json`.
 //!
 //! The CI determinism matrix injects an extra thread count per leg via
-//! `DTFL_TEST_THREADS` (1/2/8).
+//! `DTFL_TEST_THREADS` (1/2/8) and forces dispatch levels via
+//! `DTFL_TEST_SIMD` (flows through every `simd: None` = "auto" entry).
 
 use dtfl::experiment::Experiment;
 use dtfl::harness::RunSpec;
 use dtfl::metrics::RoundRecord;
+use dtfl::runtime::{simd, SimdLevel};
 use dtfl::util::json::{self, Json};
 
 /// One round of the trace, everything reduced to exact bit patterns.
@@ -82,7 +86,9 @@ fn trace_of(records: &[RoundRecord], params: &[f32]) -> Trace {
     Trace { rows, params, checksum }
 }
 
-/// Engine configuration under test.
+/// Engine configuration under test. `simd: None` means `[run] simd =
+/// "auto"` (runtime detection + the `DTFL_TEST_SIMD` override); `Some`
+/// forces one dispatch level.
 #[derive(Debug, Clone, Copy)]
 struct Knobs {
     threads: usize,
@@ -90,9 +96,17 @@ struct Knobs {
     depth: usize,
     shards: usize,
     fuse: bool,
+    simd: Option<SimdLevel>,
 }
 
-const REFERENCE: Knobs = Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: false };
+const REFERENCE: Knobs = Knobs {
+    threads: 1,
+    intra: 1,
+    depth: 1,
+    shards: 1,
+    fuse: false,
+    simd: Some(SimdLevel::Scalar),
+};
 
 fn run(method: &str, k: Knobs) -> Trace {
     let mut spec = RunSpec {
@@ -108,6 +122,7 @@ fn run(method: &str, k: Knobs) -> Trace {
         pipeline_depth: k.depth,
         agg_shards: k.shards,
         fuse_forward: k.fuse,
+        simd: k.simd.map_or_else(|| "auto".into(), |l| l.name().into()),
         ..Default::default()
     };
     if method == "static" {
@@ -140,18 +155,29 @@ fn assert_trace_matches(method: &str, golden: &Trace, k: Knobs) {
     assert_eq!(golden.params, t.params, "{method} {k:?}: global param bits diverged");
 }
 
+/// One grid entry per supported non-scalar dispatch level, everything else
+/// at the default engine settings — the heavyweight per-level coverage
+/// runs in the CI `DTFL_TEST_SIMD` legs through the "auto" entries.
+fn simd_entries() -> impl Iterator<Item = Knobs> {
+    simd::available()
+        .into_iter()
+        .filter(|&l| l != SimdLevel::Scalar)
+        .map(|l| Knobs { threads: 2, intra: 1, depth: 4, shards: 0, fuse: true, simd: Some(l) })
+}
+
 /// The grid every method is checked against (DTFL gets a larger one).
 fn small_grid() -> Vec<Knobs> {
     let mut g = vec![
         // fusion alone against the unfused sequential reference
-        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true },
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true, simd: None },
         // the default engine (fused) with the parallel pool
-        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true, simd: None },
         // pipelined + sharded with fusion off
-        Knobs { threads: 2, intra: 1, depth: 8, shards: 3, fuse: false },
+        Knobs { threads: 2, intra: 1, depth: 8, shards: 3, fuse: false, simd: None },
     ];
+    g.extend(simd_entries());
     if let Some(n) = env_threads() {
-        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true, simd: None });
     }
     g
 }
@@ -159,21 +185,22 @@ fn small_grid() -> Vec<Knobs> {
 fn dtfl_grid() -> Vec<Knobs> {
     let mut g = vec![
         // fusion alone, sequential barrier pool
-        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true },
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true, simd: None },
         // pipelining/sharding alone, sequential pool, unfused
-        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false },
+        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false, simd: None },
         // deep pipeline: every flat fold deferred to the finish flush
-        Knobs { threads: 1, intra: 1, depth: 64, shards: 0, fuse: true },
+        Knobs { threads: 1, intra: 1, depth: 64, shards: 0, fuse: true, simd: None },
         // parallel pool with the barrier aggregator, unfused
-        Knobs { threads: 2, intra: 1, depth: 1, shards: 1, fuse: false },
+        Knobs { threads: 2, intra: 1, depth: 1, shards: 1, fuse: false, simd: None },
         // parallel + pipelined + auto shards + fusion (the default engine)
-        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true, simd: None },
         // everything composed, including intra-step kernel splits
-        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true },
+        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true, simd: None },
     ];
+    g.extend(simd_entries());
     if let Some(n) = env_threads() {
-        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true });
-        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true, simd: None });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false, simd: None });
     }
     g
 }

@@ -135,8 +135,9 @@ fn bench_round_smoke_writes_hotpath_json() {
     use dtfl::harness::{
         kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
         measure_pipeline_throughput, measure_robustness_throughput, measure_round_throughput,
-        measure_scenario_throughput,
+        measure_scenario_throughput, measure_simd_throughput,
     };
+    use dtfl::runtime::kernels::tune;
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
 
     let rt = measure_round_throughput(50, 1, 8).expect("round throughput probe");
@@ -169,15 +170,28 @@ fn bench_round_smoke_writes_hotpath_json() {
         measure_kernel_throughput(Duration::from_millis(150)).expect("kernel throughput probe");
     assert!(arena_peak > 0, "full_step must exercise the scratch arena");
 
+    // lane-width × (MR, NR) sweep: smoke-budget samples so `nr_sweep` is
+    // populated from every cargo-test run, not only `cargo bench`
+    let sweep = tune::sweep(256, 64, 64, Duration::from_millis(25));
+    assert!(!sweep.is_empty(), "tune sweep must produce samples");
+    assert!(
+        sweep.iter().any(|s| s.pinned),
+        "one sweep sample must be the pinned (MR, NR, simd) triple"
+    );
+
+    let sd = measure_simd_throughput(Duration::from_millis(60)).expect("simd throughput probe");
+    assert!(sd.bit_identical, "every dispatch level must match scalar bits");
+
     let mut report = BenchReport::new();
     // keep any full `cargo bench` micro-bench entries already on disk
     report.preserve_entries_from(hotpath_report_path());
     let source = "cargo-test smoke (see benches/micro_hotpath.rs for the full run)";
     report.extra("bench_round", rt.to_json(source));
     report.extra("pipeline", pt.to_json(source));
-    report.extra("fused", ft.to_json(&[], source));
+    report.extra("fused", ft.to_json(&sweep, source));
     report.extra("scenario", st.to_json(source));
     report.extra("robustness", rb.to_json(source));
     report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
+    report.extra("simd", sd.to_json(source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -4,7 +4,7 @@
 //! With a scenario active — churn, seeded link drift, deadlines, and
 //! delta-compressed downlink all exercised at once — every engine
 //! configuration in the `{threads, intra_threads, pipeline_depth,
-//! agg_shards, fuse_forward}` grid must reproduce the sequential barrier
+//! agg_shards, fuse_forward, simd}` grid must reproduce the sequential barrier
 //! engine's trace **byte for byte**, including the scenario-specific
 //! channels (per-round wire bytes and straggler sets). The scenario is
 //! constructed so the straggler pattern is *guaranteed* (one cohort's link
@@ -19,6 +19,7 @@
 use dtfl::experiment::Experiment;
 use dtfl::harness::{RunSpec, FLASH_CROWD_TOML};
 use dtfl::metrics::RoundRecord;
+use dtfl::runtime::{simd, SimdLevel};
 use dtfl::simulation::{CohortSpec, DeadlinePolicy, LinkEventSpec, Scenario};
 
 /// One round of the trace, everything reduced to exact bit patterns.
@@ -95,7 +96,7 @@ fn drop_scenario() -> Scenario {
     }
 }
 
-/// Engine configuration under test.
+/// Engine configuration under test (`simd: None` = `[run] simd = "auto"`).
 #[derive(Debug, Clone, Copy)]
 struct Knobs {
     threads: usize,
@@ -103,9 +104,17 @@ struct Knobs {
     depth: usize,
     shards: usize,
     fuse: bool,
+    simd: Option<SimdLevel>,
 }
 
-const REFERENCE: Knobs = Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: false };
+const REFERENCE: Knobs = Knobs {
+    threads: 1,
+    intra: 1,
+    depth: 1,
+    shards: 1,
+    fuse: false,
+    simd: Some(SimdLevel::Scalar),
+};
 
 fn run(method: &str, scenario: Scenario, rounds: usize, k: Knobs) -> Trace {
     let spec = RunSpec {
@@ -121,6 +130,7 @@ fn run(method: &str, scenario: Scenario, rounds: usize, k: Knobs) -> Trace {
         pipeline_depth: k.depth,
         agg_shards: k.shards,
         fuse_forward: k.fuse,
+        simd: k.simd.map_or_else(|| "auto".into(), |l| l.name().into()),
         scenario: Some(scenario),
         ..Default::default()
     };
@@ -138,20 +148,30 @@ fn env_threads() -> Option<usize> {
         .filter(|&n| n > 0)
 }
 
+/// One grid entry per supported non-scalar dispatch level (heavyweight
+/// per-level coverage runs in the CI `DTFL_TEST_SIMD` legs).
+fn simd_entries() -> impl Iterator<Item = Knobs> {
+    simd::available()
+        .into_iter()
+        .filter(|&l| l != SimdLevel::Scalar)
+        .map(|l| Knobs { threads: 2, intra: 1, depth: 4, shards: 0, fuse: true, simd: Some(l) })
+}
+
 fn grid() -> Vec<Knobs> {
     let mut g = vec![
         // fusion alone against the unfused sequential reference
-        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true },
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true, simd: None },
         // pipelining/sharding alone, sequential pool
-        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false },
+        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false, simd: None },
         // the default engine (parallel pool, pipelined, auto shards, fused)
-        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true, simd: None },
         // everything composed, including intra-step kernel splits
-        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true },
+        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true, simd: None },
     ];
+    g.extend(simd_entries());
     if let Some(n) = env_threads() {
-        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true });
-        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true, simd: None });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false, simd: None });
     }
     g
 }
@@ -242,8 +262,8 @@ fn committed_flash_crowd_scenario_runs_and_is_knob_invariant() {
     assert!(sc.delta_downlink && sc.deadline_secs.is_some());
     let golden = run("dtfl", sc.clone(), 4, REFERENCE);
     for k in [
-        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true },
-        Knobs { threads: 2, intra: 1, depth: 8, shards: 3, fuse: false },
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true, simd: None },
+        Knobs { threads: 2, intra: 1, depth: 8, shards: 3, fuse: false, simd: None },
     ] {
         let t = run("dtfl", sc.clone(), 4, k);
         assert_eq!(golden.rows, t.rows, "{k:?}: flash-crowd trace diverged");

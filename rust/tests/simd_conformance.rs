@@ -1,0 +1,243 @@
+//! SIMD-dispatch conformance suite.
+//!
+//! The explicit AVX2/AVX-512/NEON kernel variants in `runtime::simd` are
+//! required to be **bitwise** indistinguishable from the scalar core —
+//! every vector lane replays the scalar core's pinned per-element
+//! reduction order, so switching dispatch levels (or racing the
+//! process-wide knob mid-run) can never change a single bit. These tests
+//! drive the public APIs the variants sit under — the three packed-panel
+//! matmul orientations with every fused epilogue, the fused gn(+relu)
+//! sweep, and the sharded aggregation fold — over randomized
+//! non-lane-multiple shapes, NaN/±inf/-0.0 payloads, and concurrent
+//! runs with a thread hammering `set_simd`.
+//!
+//! The CI determinism matrix additionally forces whole-suite levels via
+//! `DTFL_TEST_SIMD` (scalar / avx2 legs).
+
+use dtfl::coordinator::{fold_updates_sharded, ClientUpdate};
+use dtfl::runtime::kernels::{self, Epilogue};
+use dtfl::runtime::refmath::hooks;
+use dtfl::runtime::{set_simd, simd, Dims4, Metadata, SimdLevel};
+use dtfl::util::Rng64;
+
+fn rand_vec(rng: &mut Rng64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.gen_f32(-1.5, 1.5)).collect()
+}
+
+/// Scatter NaN, ±inf, and signed zeros through a buffer so the special
+/// cases flow through the fused epilogues at every lane position.
+fn inject_specials(v: &mut [f32]) {
+    let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0f32, 0.0f32];
+    for (i, x) in v.iter_mut().enumerate() {
+        if i % 7 == 3 {
+            *x = specials[(i / 7) % specials.len()];
+        }
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}[{i}]: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+/// Run `f` with the process-wide dispatch level set to `lv`. Another test
+/// thread may legitimately flip the level mid-call — the whole point of
+/// the contract is that this cannot change the result.
+fn with_level<T>(lv: SimdLevel, f: impl FnOnce() -> T) -> T {
+    set_simd(lv).expect("available level is supported");
+    f()
+}
+
+// ---------------------------------------------------------------------
+// matmul orientations × epilogues
+// ---------------------------------------------------------------------
+
+#[test]
+fn matmul_orientations_and_epilogues_match_scalar_across_levels() {
+    // shapes chosen so edge tiles and non-lane-multiple columns are hit:
+    // n ∈ {3, 27, 29} is never a multiple of 4/8/16, m smaller than MR,
+    // and the 1×1×1 degenerate case
+    let mut rng = Rng64::seed_from_u64(0x51dc);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 7, 3), (13, 9, 27), (33, 20, 29)] {
+        let mut a = rand_vec(&mut rng, m * k);
+        let mut b = rand_vec(&mut rng, k * n);
+        inject_specials(&mut a);
+        inject_specials(&mut b);
+        let bias = rand_vec(&mut rng, n);
+        let scale = rand_vec(&mut rng, n);
+        let run = |lv: SimdLevel| {
+            with_level(lv, || {
+                let mut macs = 0u64;
+                let mut outs = vec![
+                    kernels::matmul(&a, m, k, &b, n, &mut macs),
+                    kernels::matmul_tn(&a, k, m, &b, n, &mut macs),
+                    kernels::matmul_nt(&a, m, k, &b, n, &mut macs),
+                ];
+                let eps = [
+                    Epilogue::None,
+                    Epilogue::Bias(&bias),
+                    Epilogue::BiasRelu(&bias),
+                    Epilogue::Relu,
+                    Epilogue::ScaleBiasRelu { scale: &scale, bias: &bias },
+                ];
+                for ep in eps {
+                    let mut c = vec![0.0f32; m * n];
+                    kernels::matmul_into(&mut c, &a, m, k, &b, n, ep, &mut macs);
+                    outs.push(c);
+                }
+                outs
+            })
+        };
+        let scalar = run(SimdLevel::Scalar);
+        for lv in simd::available() {
+            let got = run(lv);
+            for (which, (g, s)) in got.iter().zip(&scalar).enumerate() {
+                let what = format!("{m}x{k}x{n} out#{which} simd={}", lv.name());
+                assert_bits_eq(g, s, &what);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// fused gn(+relu) sweep with special payloads
+// ---------------------------------------------------------------------
+
+#[test]
+fn fused_gn_propagates_specials_identically_across_levels() {
+    // NaN / ±inf poison whole groups through the shared stats; -0.0 and
+    // +0.0 must keep their sign bits through normalize and survive (or
+    // not) the relu clamp exactly as the scalar core decides
+    let mut rng = Rng64::seed_from_u64(0x6e5);
+    for &(b, h, w, c) in &[(1usize, 3usize, 5usize, 3usize), (2, 4, 4, 5), (1, 7, 3, 16)] {
+        let d: Dims4 = [b, h, w, c];
+        let n = b * h * w * c;
+        let mut x = rand_vec(&mut rng, n);
+        inject_specials(&mut x);
+        let dout = rand_vec(&mut rng, n);
+        let scale = rand_vec(&mut rng, c);
+        let bias = rand_vec(&mut rng, c);
+        for relu_after in [false, true] {
+            let run = |lv: SimdLevel, fuse: bool| {
+                with_level(lv, || {
+                    hooks::gn_forward_backward(&scale, &bias, &x, d, &dout, relu_after, fuse)
+                })
+            };
+            let scalar = run(SimdLevel::Scalar, true);
+            for lv in simd::available() {
+                let got = run(lv, true);
+                let tag = format!("{d:?} relu={relu_after} simd={}", lv.name());
+                assert_bits_eq(&got.out, &scalar.out, &format!("{tag}: out"));
+                assert_bits_eq(&got.dx, &scalar.dx, &format!("{tag}: dx"));
+                assert_bits_eq(&got.dscale, &scalar.dscale, &format!("{tag}: dscale"));
+                assert_bits_eq(&got.dbias, &scalar.dbias, &format!("{tag}: dbias"));
+                // and the fused sweep still matches the unfused legacy
+                // path at this level even with specials in flight
+                let plain = run(lv, false);
+                assert_bits_eq(&got.out, &plain.out, &format!("{tag}: fused vs unfused"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aggregation folds
+// ---------------------------------------------------------------------
+
+#[test]
+fn agg_fold_is_identical_across_shards_and_levels() {
+    let meta = Metadata::load(std::path::Path::new("artifacts/tiny")).expect("built-in config");
+    let mut rng = Rng64::seed_from_u64(0xa66);
+    let updates: Vec<ClientUpdate> = (0..7)
+        .map(|i| {
+            let tier = 1 + i % meta.max_tiers;
+            let t = meta.tier(tier);
+            let mut client_vec = rand_vec(&mut rng, t.client_vec_len);
+            let mut server_vec = rand_vec(&mut rng, t.server_vec_len);
+            inject_specials(&mut client_vec);
+            inject_specials(&mut server_vec);
+            ClientUpdate {
+                client_id: i,
+                tier,
+                weight: 1.0 + i as f32 * 0.25,
+                client_vec,
+                server_vec,
+            }
+        })
+        .collect();
+    let fold = |lv: SimdLevel, shards: usize| {
+        with_level(lv, || {
+            let mut acc = vec![0.0f32; meta.total_params];
+            fold_updates_sharded(&meta, &mut acc, &updates, shards);
+            acc
+        })
+    };
+    let reference = fold(SimdLevel::Scalar, 1);
+    for lv in simd::available() {
+        for shards in [1usize, 2, 3, 5] {
+            let got = fold(lv, shards);
+            let what = format!("fold shards={shards} simd={}", lv.name());
+            assert_bits_eq(&got, &reference, &what);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the process-wide knob under contention
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_runs_with_racing_level_flips_stay_bit_identical() {
+    // `set_simd` is process-wide (like `set_intra_threads`), so two
+    // runtimes forcing different levels share one knob. That is safe by
+    // construction — every level produces identical bits — and this pins
+    // it: workers compute while a flipper hammers the knob, and every
+    // result must still equal the scalar reference.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let levels = simd::available();
+    let (m, k, n) = (33usize, 20usize, 29usize);
+    let mut rng = Rng64::seed_from_u64(0xace5);
+    let a = rand_vec(&mut rng, m * k);
+    let b = rand_vec(&mut rng, k * n);
+    let reference = with_level(SimdLevel::Scalar, || {
+        let mut macs = 0u64;
+        kernels::matmul(&a, m, k, &b, n, &mut macs)
+    });
+
+    let stop = AtomicBool::new(false);
+    let (a, b, reference) = (&a, &b, &reference);
+    std::thread::scope(|s| {
+        let flipper = s.spawn(|| {
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                set_simd(levels[i % levels.len()]).expect("available level");
+                i += 1;
+            }
+        });
+        let workers: Vec<_> = (0..3)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut macs = 0u64;
+                    for it in 0..200 {
+                        let got = kernels::matmul(a, m, k, b, n, &mut macs);
+                        assert_bits_eq(&got, reference, &format!("worker {w} iter {it}"));
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("worker");
+        }
+        stop.store(true, Ordering::Relaxed);
+        flipper.join().expect("flipper");
+    });
+}
