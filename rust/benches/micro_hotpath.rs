@@ -28,9 +28,9 @@ use dtfl::coordinator::{
 };
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
 use dtfl::harness::{
-    kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
-    measure_pipeline_throughput, measure_robustness_throughput, measure_round_throughput,
-    measure_scenario_throughput, measure_simd_throughput,
+    kernels_to_json, measure_async_throughput, measure_fused_throughput,
+    measure_kernel_throughput, measure_pipeline_throughput, measure_robustness_throughput,
+    measure_round_throughput, measure_scenario_throughput, measure_simd_throughput,
 };
 use dtfl::runtime::kernels::tune;
 use dtfl::runtime::{literal as lit, Metadata};
@@ -188,6 +188,34 @@ fn bench_robustness(report: &mut BenchReport, clients: usize, rounds: usize) {
         rb.mean_final_train_loss, rb.trimmed_final_train_loss
     );
     report.extra("robustness", rb.to_json("cargo bench micro_hotpath"));
+}
+
+/// Async tier-engine probe: event-queue throughput plus the sync-vs-async
+/// makespan pin on the committed straggler-heavy scenario (shared probe in
+/// `harness::measure_async_throughput`).
+fn bench_async_tiers(report: &mut BenchReport, rounds: usize) {
+    section("bench_async_tiers: straggler-heavy fleet, event queue vs sync barrier");
+    let at = measure_async_throughput(rounds).expect("async tiers probe");
+    assert!(at.bit_identical, "async event trace must be knob-invariant");
+    println!(
+        "{}: K={} async {:.2}s vs drop {:.2}s / wait {:.2}s — {:.2}x / {:.2}x",
+        at.name,
+        at.clients,
+        at.async_sim_secs,
+        at.drop_sim_secs,
+        at.wait_sim_secs,
+        at.speedup_vs_drop(),
+        at.speedup_vs_wait()
+    );
+    println!(
+        "{} events over {} windows ({:.0} events/s); final test loss async {:.4} vs drop {:.4}",
+        at.events,
+        at.rounds,
+        at.events_per_sec,
+        at.async_final_test_loss,
+        at.drop_final_test_loss
+    );
+    report.extra("async_tiers", at.to_json("cargo bench micro_hotpath"));
 }
 
 /// Round-throughput comparison: K clients, 1 thread vs all cores (shared
@@ -350,6 +378,9 @@ fn main() {
 
     // ---------------- fault injection + robust aggregation ----------------
     bench_robustness(&mut report, 50, 6);
+
+    // ---------------- async tier engine + event queue ----------------
+    bench_async_tiers(&mut report, 8);
 
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

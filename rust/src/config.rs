@@ -110,6 +110,15 @@ pub struct RunCfg {
     /// because every level produces bit-identical results (enforced by the
     /// conformance and golden-trace suites) — only throughput changes.
     pub simd: String,
+    /// Asynchronous tiers (FedAT-style): run the DTFL session on the
+    /// virtual-time event engine — each tier aggregates at its own cadence
+    /// and straggled updates merge with staleness-discounted weights
+    /// instead of being dropped or waited on. DTFL/static only. In async
+    /// mode every present client participates (`sample_frac` is ignored),
+    /// scenario deadlines are superseded, and the plateau LR schedule is
+    /// held constant. Off (false) = the synchronous engines, byte-for-byte
+    /// unchanged.
+    pub async_tiers: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -270,6 +279,7 @@ impl ExperimentConfig {
                     }
                     name
                 },
+                async_tiers: s.bool_or("async_tiers", false)?,
             }
         };
         let sim = {
@@ -337,6 +347,14 @@ impl ExperimentConfig {
             self.run.pipeline_depth >= 1,
             "run.pipeline_depth must be >= 1 (1 = barrier engine)"
         );
+        if self.run.async_tiers {
+            crate::anyhow::ensure!(
+                matches!(self.run.method.as_str(), "dtfl" | "static"),
+                "run.async_tiers requires the tiered methods (dtfl | static); \
+                 '{}' has no tier cadences to run asynchronously",
+                self.run.method
+            );
+        }
         if self.scenario.is_some() {
             // the scenario is the environment model: mixing in the legacy
             // profile-switch dynamics would double-drive client state
@@ -376,6 +394,7 @@ mod tests {
         assert_eq!(cfg.run.pipeline_depth, 4, "pipelined aggregation defaults on");
         assert_eq!(cfg.run.agg_shards, 0, "sharded aggregation defaults to one per core");
         assert!(cfg.run.fuse_forward, "fused forward path defaults on");
+        assert!(!cfg.run.async_tiers, "async tiers default off (sync engines unchanged)");
         assert_eq!(cfg.run.fold, FoldStrategy::Mean, "aggregation defaults to plain weighted mean");
         assert_eq!(cfg.run.simd, "auto", "SIMD dispatch defaults to runtime detection");
         assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
@@ -471,6 +490,16 @@ mod tests {
     fn zero_pipeline_depth_rejected() {
         let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\npipeline_depth = 0");
         assert!(ExperimentConfig::parse(&text).is_err());
+    }
+
+    #[test]
+    fn async_tiers_parses_for_tiered_methods_only() {
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nasync_tiers = true");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert!(cfg.run.async_tiers);
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"fedavg\"\nasync_tiers = true");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("async_tiers"), "error names the knob: {err}");
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! Asynchronous tier engine: DTFL rounds on a deterministic virtual-time
+//! event queue ([`crate::simulation::events`]) instead of a global
+//! synchronous round barrier.
+//!
+//! FedAT-style (PAPERS.md, arxiv 2010.05958): each tier aggregates at its
+//! own cadence, so a deadline-straggled update is neither discarded
+//! (`on_deadline = "drop"`) nor allowed to stall the fleet
+//! (`on_deadline = "wait"`) — it is delivered whenever the client finishes
+//! and merged at its tier's next flush with a staleness-discounted weight
+//! `s(d) = 1/(1+d)`, `d` = tier flushes elapsed since the client pulled its
+//! snapshot. Cross-tier merging blends the tier average into the global
+//! model by `β = min(1, Σ wᵢ·s(dᵢ) / fleet_weight)`:
+//! `new = (1−β)·global + β·tier_avg` (same blend for the tier's aux head;
+//! other tiers' heads carry forward).
+//!
+//! The session layout, fixed deterministically up front from the profiled
+//! estimates (TiFL-style tier pools, arxiv 2001.09249):
+//!
+//! * one `schedule()` pass assigns every client a tier for the whole
+//!   session (`static_tier` override honored);
+//! * tier cadence `C_t` = the slowest member's estimated round time, so a
+//!   tier flushes right as its stragglers finish; the window length
+//!   `W = max_t C_t` and the horizon `H = rounds·W`;
+//! * clients train eagerly: a start at virtual time `t` computes the
+//!   update from the *current* global snapshot (each client step is a pure
+//!   function of that snapshot and the client's `(seed, personal_round,
+//!   k)` RNG stream) and delivers it at `t + T_k` (Eq. 5 time + faults);
+//!   a client that finishes idle until its tier's next flush restarts it.
+//!
+//! Scenario state (churn, link walks, dataset growth, fault verdicts) is
+//! pre-generated per window by the usual `ScenarioEngine::begin_round`
+//! sequence, and a client's verdict is drawn once from its **start**
+//! window: a flaky uplink's retry backoff is charged exactly once in
+//! virtual time regardless of how many flush windows the attempt spans
+//! (the `wait`-policy accounting fix pinned by `tests/event_trace.rs`).
+//! Deadlines and `sample_frac` are superseded in async mode: nothing is
+//! dropped or waited on, and every present client participates.
+//!
+//! Event processing is strictly serial in `(time, pinned key)` order —
+//! thread/pipeline knobs only change how a flush folds, which the
+//! aggregation contract already pins bit-for-bit — so the recorded
+//! [`EventRecord`] stream is byte-identical across the whole
+//! `{threads, intra, depth, shards, fuse, simd}` grid.
+
+use crate::anyhow::Result;
+use crate::data::{BatchCache, Dataset, Partition};
+use crate::fed::{PrivacyCfg, RoundEnv};
+use crate::runtime::Runtime;
+use crate::simulation::events::{
+    fnv1a_params, staleness_merge, staleness_weight, EventKind, EventQueue, EventRecord, NO_CLIENT,
+};
+use crate::simulation::{ResourceProfile, Scenario, ScenarioRound, ServerModel};
+
+use super::aggregate::{Aggregator, FoldStrategy};
+use super::model_state::GlobalModel;
+use super::round::{run_client, ClientBundle, ClientTask, Dtfl};
+use super::scheduler::{estimate_round_time, schedule, ClientLoad};
+use super::snapshot_delta::DeltaTracker;
+
+/// Everything the async driver borrows from the experiment for one
+/// session. A trimmed [`RoundEnv`] is derived from this per client start.
+pub struct AsyncCtx<'a> {
+    pub rt: &'a Runtime,
+    pub train: &'a Dataset,
+    pub partition: &'a Partition,
+    pub batches: &'a BatchCache,
+    pub profiles: &'a [ResourceProfile],
+    pub server: ServerModel,
+    pub lr: f32,
+    /// Virtual windows to simulate (one per configured round; window
+    /// length is the slowest tier's cadence).
+    pub rounds: usize,
+    /// Evaluate at every `eval_every`-th window boundary (and the last).
+    pub eval_every: usize,
+    pub batch_cap: Option<usize>,
+    pub privacy: PrivacyCfg,
+    pub seed: u64,
+    pub pipeline_depth: usize,
+    pub agg_shards: usize,
+    pub fold: FoldStrategy,
+    /// The scenario spec (churn schedule lookups); `None` = static fleet.
+    pub scenario: Option<&'a Scenario>,
+    /// Pre-generated per-window scenario state, `rounds` entries (links,
+    /// data growth, fault verdicts), from the in-order `begin_round` walk.
+    pub scenario_rounds: Option<&'a [ScenarioRound]>,
+}
+
+/// Per-window aggregate statistics — the async analogue of a round row.
+#[derive(Debug, Clone)]
+pub struct AsyncWindow {
+    pub round: usize,
+    /// Mean last-batch loss over updates delivered in this window.
+    pub train_loss: f64,
+    /// Tier of each update delivered in this window.
+    pub tiers: Vec<usize>,
+    pub wire_bytes: u64,
+    /// Updates merged with staleness d > 0 (carried forward, not dropped).
+    pub straggled: usize,
+    pub quarantined: usize,
+    pub retries: usize,
+    /// Updates merged across this window's tier flushes.
+    pub merged: usize,
+    /// Σ s(d) over merged updates (mean staleness weight = sum / merged).
+    pub staleness_sum: f64,
+    /// Tier flushes that fired in this window.
+    pub tier_flushes: usize,
+    /// (test_loss, test_accuracy) when this window hit the eval cadence.
+    pub eval: Option<(f64, f64)>,
+}
+
+/// Result of one async session.
+pub struct AsyncRun {
+    pub windows: Vec<AsyncWindow>,
+    /// The event-sequence golden trace, in processing order.
+    pub events: Vec<EventRecord>,
+    /// Window length W (simulated seconds) — the per-window makespan.
+    pub window_secs: f64,
+    /// `(tier, cadence_secs)` for every tier in use this session.
+    pub cadences: Vec<(usize, f64)>,
+    /// Total simulated horizon `rounds · W`.
+    pub horizon_secs: f64,
+}
+
+/// Per-client engine state.
+struct Slot {
+    tier: usize,
+    /// Local round counter — the client's RNG-stream index, advanced on
+    /// every start (a fast client running twice in one window must not
+    /// reuse a stream).
+    personal_round: usize,
+    /// Tier flush count when the in-flight round started (staleness base).
+    start_flushes: usize,
+    bundle: Option<ClientBundle>,
+    busy: bool,
+}
+
+/// Window a *start* at time `t` belongs to (scenario state lookups).
+fn start_window(t: f64, win: f64, rounds: usize) -> usize {
+    ((t / win) as usize).min(rounds.saturating_sub(1))
+}
+
+/// Window an *event* at time `te` is accounted to: window r covers
+/// `(r·W, (r+1)·W]`, so a flush landing exactly on a boundary closes the
+/// window it ends.
+fn event_window(te: f64, win: f64, rounds: usize) -> usize {
+    let w = (te / win).ceil() as usize;
+    w.saturating_sub(1).min(rounds.saturating_sub(1))
+}
+
+fn active_at(ctx: &AsyncCtx, k: usize, window: usize) -> bool {
+    match ctx.scenario {
+        Some(s) => s.active_at(k, window),
+        None => true,
+    }
+}
+
+/// Build the per-start round environment. `personal_round` feeds the RNG
+/// stream derivation, so each (client, start) pair trains on a distinct
+/// stream exactly like distinct sync rounds.
+fn env_at<'e>(
+    ctx: &'e AsyncCtx<'_>,
+    delta: Option<&'e DeltaTracker>,
+    sr: Option<&'e ScenarioRound>,
+    personal_round: usize,
+) -> RoundEnv<'e> {
+    RoundEnv {
+        rt: ctx.rt,
+        train: ctx.train,
+        partition: ctx.partition,
+        batches: ctx.batches,
+        profiles: ctx.profiles,
+        participants: &[],
+        server: ctx.server,
+        lr: ctx.lr,
+        round: personal_round,
+        batch_cap: ctx.batch_cap,
+        privacy: ctx.privacy,
+        seed: ctx.seed,
+        threads: 1,
+        pipeline_depth: ctx.pipeline_depth,
+        agg_shards: ctx.agg_shards,
+        next_participants: None,
+        scenario: sr,
+        downlink: delta,
+        fold: ctx.fold,
+    }
+}
+
+/// Start one local round for client `k` at virtual time `t`: pull the
+/// current snapshot, train eagerly, and schedule the delivery at
+/// `t + T_k`. A crash verdict for the start window means the device does
+/// no work and idles until its tier's next flush scan.
+#[allow(clippy::too_many_arguments)]
+fn start_client(
+    ctx: &AsyncCtx,
+    global: &GlobalModel,
+    timing_noise: f64,
+    delta: &mut Option<&mut DeltaTracker>,
+    queue: &mut EventQueue,
+    slots: &mut [Slot],
+    flushes_done: &[usize],
+    tindex: &[usize],
+    k: usize,
+    t: f64,
+    win: f64,
+    rounds: usize,
+    horizon: f64,
+) -> Result<()> {
+    let w = start_window(t, win, rounds);
+    let sr = ctx.scenario_rounds.map(|v| &v[w]);
+    let slot = &mut slots[k];
+    let pr = slot.personal_round;
+    slot.personal_round += 1;
+    let env = env_at(ctx, delta.as_deref(), sr, pr);
+    if env.fault(k).crashed {
+        slot.busy = false;
+        return Ok(());
+    }
+    let task = ClientTask {
+        k,
+        tier: slot.tier,
+        nb: env.n_batches(k, ctx.rt.meta.batch),
+        profile: ctx.profiles[k],
+    };
+    // the whole attempt is priced here, once: Eq. 5 compute/comm plus the
+    // flaky-uplink retry backoff from the START window's verdict — never
+    // re-charged for flush windows the attempt happens to span
+    let b = run_client(&env, global, &ctx.server, timing_noise, &task)?;
+    drop(env);
+    if let Some(d) = delta.as_deref_mut() {
+        d.note_broadcast(k, &global.flat);
+    }
+    let finish = t + b.time.total();
+    slot.start_flushes = flushes_done[tindex[slot.tier]];
+    slot.bundle = Some(b);
+    slot.busy = true;
+    if finish <= horizon {
+        queue.push(finish, EventKind::ClientFinish, k, slot.tier);
+    }
+    Ok(())
+}
+
+/// Close the accounting window `w`: fold the accumulators into an
+/// [`AsyncWindow`], evaluating at the configured cadence.
+fn close_window<F>(
+    acc: &mut WindowAccum,
+    windows: &mut Vec<AsyncWindow>,
+    w: usize,
+    rounds: usize,
+    eval_every: usize,
+    params: &[f32],
+    eval: &mut F,
+) -> Result<()>
+where
+    F: FnMut(&[f32]) -> Result<(f64, f64)>,
+{
+    let a = std::mem::take(acc);
+    // same cadence as the synchronous driver
+    let eval_now = w % eval_every.max(1) == 0 || w + 1 == rounds;
+    let ev = if eval_now { Some(eval(params)?) } else { None };
+    windows.push(AsyncWindow {
+        round: w,
+        train_loss: a.loss_sum / a.delivered.max(1) as f64,
+        tiers: a.tiers,
+        wire_bytes: a.wire_bytes,
+        straggled: a.straggled,
+        quarantined: a.quarantined,
+        retries: a.retries,
+        merged: a.merged,
+        staleness_sum: a.staleness_sum,
+        tier_flushes: a.tier_flushes,
+        eval: ev,
+    });
+    Ok(())
+}
+
+#[derive(Default)]
+struct WindowAccum {
+    loss_sum: f64,
+    delivered: usize,
+    tiers: Vec<usize>,
+    wire_bytes: u64,
+    retries: usize,
+    straggled: usize,
+    quarantined: usize,
+    merged: usize,
+    staleness_sum: f64,
+    tier_flushes: usize,
+}
+
+/// Run one asynchronous tier session. `eval` is called on the current
+/// global parameters at eval-cadence window boundaries.
+pub fn run_async_tiers<F>(
+    dtfl: &mut Dtfl,
+    ctx: &AsyncCtx<'_>,
+    mut delta: Option<&mut DeltaTracker>,
+    mut eval: F,
+) -> Result<AsyncRun>
+where
+    F: FnMut(&[f32]) -> Result<(f64, f64)>,
+{
+    let meta = &ctx.rt.meta;
+    let n = ctx.profiles.len();
+    crate::anyhow::ensure!(n > 0, "async tiers need at least one client");
+    crate::anyhow::ensure!(ctx.rounds > 0, "async tiers need rounds > 0");
+    if let Some(v) = ctx.scenario_rounds {
+        crate::anyhow::ensure!(v.len() == ctx.rounds, "scenario rounds/windows mismatch");
+    }
+
+    // --- session layout: one scheduling pass fixes tier pools + cadences ---
+    let nb0: Vec<usize> = {
+        let sr0 = ctx.scenario_rounds.map(|v| &v[0]);
+        let env = env_at(ctx, None, sr0, 0);
+        (0..n).map(|k| env.n_batches(k, meta.batch)).collect()
+    };
+    let loads: Vec<ClientLoad> = nb0
+        .iter()
+        .map(|&nb| ClientLoad { n_batches: nb, participating: true })
+        .collect();
+    let sched = schedule(meta, &dtfl.profiler, &ctx.server, &loads, dtfl.opts.max_tiers);
+    let tier_of: Vec<usize> = (0..n)
+        .map(|k| dtfl.opts.static_tier.unwrap_or_else(|| sched.tier_of(k)))
+        .collect();
+    let est: Vec<f64> = (0..n)
+        .map(|k| estimate_round_time(meta, &dtfl.profiler, &ctx.server, k, tier_of[k], nb0[k]))
+        .collect();
+    dtfl.last_schedule = Some(sched);
+
+    let mut used: Vec<usize> = tier_of.clone();
+    used.sort_unstable();
+    used.dedup();
+    let mut tindex = vec![usize::MAX; meta.max_tiers + 1];
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); used.len()];
+    for (i, &t) in used.iter().enumerate() {
+        tindex[t] = i;
+    }
+    for (k, &t) in tier_of.iter().enumerate() {
+        members[tindex[t]].push(k);
+    }
+    let cad: Vec<f64> = members
+        .iter()
+        .map(|ks| ks.iter().map(|&k| est[k]).fold(1e-6f64, f64::max))
+        .collect();
+    let win = cad.iter().fold(1e-6f64, |a, &c| a.max(c));
+    let horizon = ctx.rounds as f64 * win;
+    let fleet_w: f64 = (0..n).map(|k| ctx.partition.size(k).max(1) as f64).sum();
+    let timing_noise = dtfl.opts.timing_noise;
+
+    let mut slots: Vec<Slot> = tier_of
+        .iter()
+        .map(|&t| Slot {
+            tier: t,
+            personal_round: 0,
+            start_flushes: 0,
+            bundle: None,
+            busy: false,
+        })
+        .collect();
+    let mut pending: Vec<Vec<(super::model_state::ClientUpdate, usize)>> =
+        vec![Vec::new(); used.len()];
+    let mut flushes_done = vec![0usize; used.len()];
+    let mut queue = EventQueue::new();
+    let mut events: Vec<EventRecord> = Vec::new();
+    let mut windows: Vec<AsyncWindow> = Vec::new();
+    let mut acc = WindowAccum::default();
+    let mut cur_w = 0usize;
+
+    // first flush of every tier in use (tier-ascending push order)
+    for (i, &t) in used.iter().enumerate() {
+        if cad[i] <= horizon {
+            queue.push(cad[i], EventKind::TierFlush, NO_CLIENT, t);
+        }
+    }
+    // initial client starts at t = 0 (client-ascending)
+    for k in 0..n {
+        if active_at(ctx, k, 0) {
+            start_client(
+                ctx,
+                &dtfl.global,
+                timing_noise,
+                &mut delta,
+                &mut queue,
+                &mut slots,
+                &flushes_done,
+                &tindex,
+                k,
+                0.0,
+                win,
+                ctx.rounds,
+                horizon,
+            )?;
+        }
+    }
+
+    while let Some(ev) = queue.pop() {
+        let w = event_window(ev.time, win, ctx.rounds);
+        while cur_w < w {
+            close_window(
+                &mut acc,
+                &mut windows,
+                cur_w,
+                ctx.rounds,
+                ctx.eval_every,
+                &dtfl.global.flat,
+                &mut eval,
+            )?;
+            cur_w += 1;
+        }
+        match ev.kind {
+            EventKind::ClientFinish => {
+                let k = ev.client;
+                let b = slots[k].bundle.take().expect("finish without an in-flight bundle");
+                slots[k].busy = false;
+                let ti = tindex[b.tier];
+                if let Some((batch_secs, nu)) = b.obs {
+                    dtfl.profiler.observe(k, b.tier, batch_secs, nu);
+                }
+                acc.loss_sum += b.last_loss;
+                acc.delivered += 1;
+                acc.tiers.push(b.tier);
+                acc.wire_bytes += b.bytes;
+                acc.retries += b.retries;
+                let d = flushes_done[ti] - slots[k].start_flushes;
+                let s_w = staleness_weight(d);
+                let still_active = active_at(ctx, k, w);
+                if !b.lost && still_active {
+                    if b.update.first_non_finite().is_some() {
+                        // poisoned update: quarantined at delivery — it
+                        // never reaches a tier buffer or a cross-tier merge
+                        acc.quarantined += 1;
+                        crate::runtime::note_quarantined_update();
+                        crate::log::info!(
+                            "async t={:.3}: quarantined non-finite update from client {k}",
+                            ev.time
+                        );
+                    } else {
+                        pending[ti].push((b.update, d));
+                    }
+                }
+                events.push(EventRecord::new(EventKind::ClientFinish, k, b.tier, ev.time, s_w, 0));
+                if still_active && ev.time < horizon {
+                    start_client(
+                        ctx,
+                        &dtfl.global,
+                        timing_noise,
+                        &mut delta,
+                        &mut queue,
+                        &mut slots,
+                        &flushes_done,
+                        &tindex,
+                        k,
+                        ev.time,
+                        win,
+                        ctx.rounds,
+                        horizon,
+                    )?;
+                }
+            }
+            EventKind::TierFlush => {
+                let tier = ev.tier;
+                let ti = tindex[tier];
+                let pend = std::mem::take(&mut pending[ti]);
+                let mut beta = 0.0f64;
+                let merged_any = !pend.is_empty();
+                if merged_any {
+                    let base: Vec<f64> = pend.iter().map(|(u, _)| u.weight).collect();
+                    let behind: Vec<usize> = pend.iter().map(|&(_, d)| d).collect();
+                    let (scaled, b) = staleness_merge(&base, &behind, fleet_w);
+                    beta = b;
+                    let mut agg = Aggregator::with_strategy(
+                        meta,
+                        ctx.pipeline_depth,
+                        ctx.agg_shards,
+                        ctx.fold,
+                    );
+                    for ((mut u, d), sw) in pend.into_iter().zip(scaled) {
+                        acc.merged += 1;
+                        acc.staleness_sum += staleness_weight(d);
+                        if d > 0 {
+                            acc.straggled += 1;
+                        }
+                        u.weight = sw;
+                        agg.fold_owned(u)?;
+                    }
+                    // tier average (staleness-convex) into the back buffer,
+                    // then the β-blend against the published snapshot —
+                    // serial elementwise, order pinned
+                    agg.finish_into(&dtfl.global, &mut dtfl.back)?;
+                    let bf = beta as f32;
+                    let omb = 1.0 - bf;
+                    for (o, &g) in dtfl.back.flat.iter_mut().zip(dtfl.global.flat.iter()) {
+                        *o = omb * g + bf * *o;
+                    }
+                    let at = tier - 1;
+                    for (o, &g) in dtfl.back.aux[at].iter_mut().zip(dtfl.global.aux[at].iter()) {
+                        *o = omb * g + bf * *o;
+                    }
+                    std::mem::swap(&mut dtfl.global, &mut dtfl.back);
+                }
+                // an all-idle/churned-out tier carries the model forward:
+                // no merge, no swap — the flush row still lands with β = 0
+                // and the unchanged checksum
+                flushes_done[ti] += 1;
+                acc.tier_flushes += 1;
+                let ck = fnv1a_params(&dtfl.global.flat);
+                events.push(EventRecord::new(
+                    EventKind::TierFlush,
+                    NO_CLIENT,
+                    tier,
+                    ev.time,
+                    beta,
+                    ck,
+                ));
+                if merged_any {
+                    queue.push(ev.time, EventKind::ServerBroadcast, NO_CLIENT, tier);
+                }
+                // restart idle members present in this window (crashed
+                // devices rejoining, churned cohorts re-arriving)
+                let ws = start_window(ev.time, win, ctx.rounds);
+                let ks: Vec<usize> = members[ti]
+                    .iter()
+                    .copied()
+                    .filter(|&k| !slots[k].busy)
+                    .collect();
+                for k in ks {
+                    if ev.time < horizon && active_at(ctx, k, ws) {
+                        start_client(
+                            ctx,
+                            &dtfl.global,
+                            timing_noise,
+                            &mut delta,
+                            &mut queue,
+                            &mut slots,
+                            &flushes_done,
+                            &tindex,
+                            k,
+                            ev.time,
+                            win,
+                            ctx.rounds,
+                            horizon,
+                        )?;
+                    }
+                }
+                let next = (flushes_done[ti] as f64 + 1.0) * cad[ti];
+                if next <= horizon {
+                    queue.push(next, EventKind::TierFlush, NO_CLIENT, tier);
+                }
+            }
+            EventKind::ServerBroadcast => {
+                // bookkeeping event: the merged model became the snapshot
+                // every subsequent start pulls (same-instant starts ordered
+                // before this row already trained on the pre-broadcast
+                // snapshot, by the pinned tie-break)
+                events.push(EventRecord::new(
+                    EventKind::ServerBroadcast,
+                    NO_CLIENT,
+                    ev.tier,
+                    ev.time,
+                    0.0,
+                    fnv1a_params(&dtfl.global.flat),
+                ));
+            }
+        }
+    }
+
+    while cur_w < ctx.rounds {
+        close_window(
+            &mut acc,
+            &mut windows,
+            cur_w,
+            ctx.rounds,
+            ctx.eval_every,
+            &dtfl.global.flat,
+            &mut eval,
+        )?;
+        cur_w += 1;
+    }
+
+    crate::log::info!(
+        "async session: {} windows of {:.3}s, {} tiers, {} events",
+        ctx.rounds,
+        win,
+        used.len(),
+        events.len()
+    );
+
+    Ok(AsyncRun {
+        windows,
+        events,
+        window_secs: win,
+        cadences: used.iter().copied().zip(cad).collect(),
+        horizon_secs: horizon,
+    })
+}

@@ -4,6 +4,9 @@
 //! * `profiler` — tier profiling + EMA timing histories (§3.3);
 //! * `round` — the DTFL training round (steps ①–⑤, Figure 1), fanned over
 //!   the worker pool with a double-buffered global snapshot;
+//! * `async_round` — the asynchronous tier engine: the same client step on
+//!   a deterministic virtual-time event queue, per-tier flush cadences and
+//!   staleness-weighted cross-tier merging (FedAT-style);
 //! * `parallel` — the deterministic scoped worker pool (in-order streaming
 //!   reduction) plus the shard-splitting helpers;
 //! * `model_state`/`aggregate` — flat-layout model halves and the
@@ -12,6 +15,7 @@
 //!   downlink broadcast + per-client last-seen snapshot tracking.
 
 pub mod aggregate;
+pub mod async_round;
 pub mod model_state;
 pub mod parallel;
 pub mod profiler;
@@ -22,6 +26,7 @@ pub mod snapshot_delta;
 pub use aggregate::{
     aggregate, fold_updates_robust, fold_updates_sharded, Aggregator, FoldStrategy,
 };
+pub use async_round::{run_async_tiers, AsyncCtx, AsyncRun, AsyncWindow};
 pub use snapshot_delta::{DeltaTracker, SnapshotDelta};
 pub use model_state::{ClientUpdate, GlobalModel};
 pub use parallel::{

@@ -76,7 +76,7 @@ pub struct Dtfl {
     /// Back snapshot: the double-buffer target `Aggregator::finish_into`
     /// writes the next round's model into; swapped with `global` to
     /// publish. Reused across rounds (every element is overwritten).
-    back: GlobalModel,
+    pub(crate) back: GlobalModel,
     pub profiler: Profiler,
     pub opts: DtflOptions,
     /// Schedule of the most recent round (diagnostics, Table 2 / Fig 3).
@@ -167,36 +167,37 @@ pub fn profile_tiers(rt: &Runtime, global: &GlobalModel, tiers: usize) -> Result
     Ok(TierProfile { client_batch_secs: client_secs, server_batch_secs: server_secs })
 }
 
-/// Per-client work description handed to the worker pool.
-struct ClientTask {
-    k: usize,
-    tier: usize,
-    nb: usize,
-    profile: ResourceProfile,
+/// Per-client work description handed to the worker pool (shared with the
+/// async tier engine in [`super::async_round`]).
+pub(crate) struct ClientTask {
+    pub(crate) k: usize,
+    pub(crate) tier: usize,
+    pub(crate) nb: usize,
+    pub(crate) profile: ResourceProfile,
 }
 
 /// Per-client result streamed back to the reducer.
-struct ClientBundle {
-    update: ClientUpdate,
-    time: ClientRoundTime,
-    tier: usize,
-    last_loss: f64,
+pub(crate) struct ClientBundle {
+    pub(crate) update: ClientUpdate,
+    pub(crate) time: ClientRoundTime,
+    pub(crate) tier: usize,
+    pub(crate) last_loss: f64,
     /// Simulated bytes this client put on the wire (delta-sized downlink in
     /// scenario mode + full upload + retransmissions + activations).
-    bytes: u64,
+    pub(crate) bytes: u64,
     /// Profiler observation (per-batch compute secs, link bytes/sec); None
     /// when the client ran no batches this round.
-    obs: Option<(f64, f64)>,
+    pub(crate) obs: Option<(f64, f64)>,
     /// Failed uplink attempts this round (each charged in simulated time).
-    retries: usize,
+    pub(crate) retries: usize,
     /// Every uplink attempt failed: the time was spent but the update never
     /// reached the server.
-    lost: bool,
+    pub(crate) lost: bool,
 }
 
 /// Steps ①–④ for one client — a pure function of the global snapshot, the
 /// task, and the client's deterministic RNG stream.
-fn run_client(
+pub(crate) fn run_client(
     env: &RoundEnv,
     global: &GlobalModel,
     server: &ServerModel,
@@ -434,6 +435,10 @@ impl Method for Dtfl {
 
     fn global_params(&self) -> &[f32] {
         &self.global.flat
+    }
+
+    fn as_dtfl_mut(&mut self) -> Option<&mut Dtfl> {
+        Some(self)
     }
 }
 

@@ -11,14 +11,16 @@ use crate::anyhow::{Context, Result};
 use crate::baselines::{FedAvg, FedGkt, FedYogi, SplitFed};
 use crate::config::ExperimentConfig;
 use crate::coordinator::parallel::for_each_streamed;
-use crate::coordinator::{load_initial_model, DeltaTracker, Dtfl, DtflOptions};
+use crate::coordinator::{
+    load_initial_model, run_async_tiers, AsyncCtx, AsyncRun, DeltaTracker, Dtfl, DtflOptions,
+};
 use crate::csv_row;
 use crate::data::{self, Batch, BatchCache, Dataset, DatasetSpec, Partition, PartitionScheme};
 use crate::fed::{Method, PrivacyCfg, RoundEnv};
 use crate::metrics::{CsvWriter, Recorder, RoundRecord, RunReport};
 use crate::runtime::{Runtime, StepEngine};
 use crate::simulation::{
-    DynamicEnvironment, ResourceProfile, ScenarioEngine, ServerModel, VirtualClock,
+    DynamicEnvironment, EventRecord, ResourceProfile, ScenarioEngine, ServerModel, VirtualClock,
 };
 use crate::util::Rng64;
 
@@ -43,6 +45,9 @@ pub struct Experiment {
     /// Per-client last-seen snapshots for delta-downlink accounting
     /// (scenario mode with `delta_downlink = true`).
     delta: Option<DeltaTracker>,
+    /// The async session's event-sequence golden trace (empty in sync
+    /// mode) — `tests/event_trace.rs` asserts it byte-for-byte.
+    pub event_log: Vec<EventRecord>,
     lr: f32,
     plateau: usize,
     best_acc: f64,
@@ -155,6 +160,7 @@ impl Experiment {
             env_dyn,
             scenario,
             delta,
+            event_log: Vec::new(),
             lr,
             plateau: 0,
             best_acc: 0.0,
@@ -215,28 +221,12 @@ impl Experiment {
     /// pre-encoded at construction and fan out over the worker pool; the
     /// in-order streaming reduction keeps the result bit-deterministic.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        let params = self.method.global_params();
-        let rt = &*self.rt;
-        let mut loss = 0.0f64;
-        let mut correct = 0.0f64;
-        let mut n = 0usize;
-        for_each_streamed(
+        eval_params(
+            &self.rt,
             self.cfg.run.threads,
             &self.eval_batches,
-            |_, b| {
-                let engine = StepEngine::new(rt);
-                let (l, c) = engine.eval_batch(params, &b.x, &b.y)?;
-                Ok((l, c, b.size))
-            },
-            |_, (l, c, size): (f32, f32, usize)| {
-                loss += l as f64;
-                correct += c as f64;
-                n += size;
-                Ok(())
-            },
-        )?;
-        let nb = self.eval_batches.len().max(1) as f64;
-        Ok((loss / nb, correct / n.max(1) as f64))
+            self.method.global_params(),
+        )
     }
 
     /// Run the full experiment loop; returns the report.
@@ -246,6 +236,9 @@ impl Experiment {
 
     /// Run with a per-round observer (curve capture for figures).
     pub fn run_with(&mut self, mut observe: impl FnMut(&RoundRecord)) -> Result<RunReport> {
+        if self.cfg.run.async_tiers {
+            return self.run_async_with(observe);
+        }
         let mut recorder = Recorder::new();
         let rounds = self.cfg.run.rounds;
         let target = self.cfg.run.target_accuracy;
@@ -357,6 +350,8 @@ impl Experiment {
                 straggled: outcome.straggled.len(),
                 quarantined: outcome.quarantined,
                 retries: outcome.retries,
+                staleness: 0.0,
+                tier_flushes: 0,
                 host_secs: t0.elapsed().as_secs_f64(),
             };
             crate::log::info!(
@@ -395,6 +390,8 @@ impl Experiment {
                     rec.straggled,
                     rec.quarantined,
                     rec.retries,
+                    rec.staleness,
+                    rec.tier_flushes,
                     rec.host_secs
                 ])?;
             }
@@ -411,6 +408,146 @@ impl Experiment {
         }
         if let Some(w) = csv.as_mut() {
             w.flush()?;
+        }
+
+        Ok(recorder.report(
+            self.method.name(),
+            &self.cfg.model.artifact,
+            &self.cfg.data.spec,
+            target,
+        ))
+    }
+
+    /// Run the session on the asynchronous tier engine
+    /// ([`crate::coordinator::async_round`]): per-tier flush cadences on a
+    /// deterministic virtual-time event queue, one [`RoundRecord`] per
+    /// window of length W (the slowest tier's cadence). The makespan
+    /// column is W itself — no straggler ever stretches it — and its
+    /// compute/comm decomposition is 0 (no single critical path exists in
+    /// event time). The LR is held constant (the plateau schedule would
+    /// feed back into already-simulated history) and there is no early
+    /// stop (the horizon is fully simulated before records are folded);
+    /// time-to-target is still derived from the per-window evals.
+    fn run_async_with(&mut self, mut observe: impl FnMut(&RoundRecord)) -> Result<RunReport> {
+        let mut recorder = Recorder::new();
+        let rounds = self.cfg.run.rounds;
+        let target = self.cfg.run.target_accuracy;
+        let mut csv = self.open_csv()?;
+        let server = self.server_model();
+        let t0 = Instant::now();
+
+        // pre-generate the per-window scenario state with the usual
+        // in-order walk, so churn/links/faults become pure lookups charged
+        // in virtual time by the event engine
+        let scen_rounds: Option<Vec<_>> = self
+            .scenario
+            .as_mut()
+            .map(|e| (0..rounds).map(|r| e.begin_round(r)).collect());
+
+        let run: AsyncRun = {
+            let ctx = AsyncCtx {
+                rt: &self.rt,
+                train: &self.train,
+                partition: &self.partition,
+                batches: &self.batches,
+                profiles: &self.profiles,
+                server,
+                lr: self.lr,
+                rounds,
+                eval_every: self.cfg.run.eval_every,
+                batch_cap: self.cfg.run.batch_cap,
+                privacy: PrivacyCfg {
+                    dcor_alpha: self.cfg.privacy.dcor_alpha.filter(|&a| a > 0.0),
+                    patch_shuffle: self.cfg.privacy.patch_shuffle,
+                },
+                seed: self.cfg.clients.seed,
+                pipeline_depth: self.cfg.run.pipeline_depth,
+                agg_shards: self.cfg.run.agg_shards,
+                fold: self.cfg.run.fold,
+                scenario: self.scenario.as_ref().map(|e| e.scenario()),
+                scenario_rounds: scen_rounds.as_deref(),
+            };
+            let rt = &self.rt;
+            let threads = self.cfg.run.threads;
+            let eval_batches = &self.eval_batches;
+            let delta = self.delta.as_mut();
+            let dtfl = self.method.as_dtfl_mut().ok_or_else(|| {
+                crate::anyhow::anyhow!("run.async_tiers requires the DTFL/static method")
+            })?;
+            run_async_tiers(dtfl, &ctx, delta, |params| {
+                eval_params(rt, threads, eval_batches, params)
+            })?
+        };
+
+        let AsyncRun { windows, events, window_secs, cadences, horizon_secs } = run;
+        crate::log::info!(
+            "async tiers: {} events over {:.1}s horizon, cadences {:?}",
+            events.len(),
+            horizon_secs,
+            cadences
+        );
+        self.event_log = events;
+        let host_per = t0.elapsed().as_secs_f64() / windows.len().max(1) as f64;
+        for w in &windows {
+            self.clock.advance(window_secs);
+            let mean_tier = if w.tiers.is_empty() {
+                0.0
+            } else {
+                w.tiers.iter().sum::<usize>() as f64 / w.tiers.len() as f64
+            };
+            let rec = RoundRecord {
+                round: w.round,
+                sim_time: self.clock.now(),
+                makespan: window_secs,
+                makespan_compute: 0.0,
+                makespan_comm: 0.0,
+                train_loss: w.train_loss,
+                test_loss: w.eval.map(|e| e.0),
+                test_accuracy: w.eval.map(|e| e.1),
+                lr: self.lr,
+                mean_tier,
+                tiers: w.tiers.clone(),
+                wire_bytes: w.wire_bytes,
+                straggled: w.straggled,
+                quarantined: w.quarantined,
+                retries: w.retries,
+                staleness: if w.merged > 0 { w.staleness_sum / w.merged as f64 } else { 0.0 },
+                tier_flushes: w.tier_flushes,
+                host_secs: host_per,
+            };
+            crate::log::info!(
+                "window {}: sim_time={:.1}s loss={:.3} acc={} flushes={} staleness={:.3}",
+                rec.round,
+                rec.sim_time,
+                rec.train_loss,
+                rec.test_accuracy.map(|a| format!("{a:.3}")).unwrap_or_else(|| "-".into()),
+                rec.tier_flushes,
+                rec.staleness
+            );
+            if let Some(wr) = csv.as_mut() {
+                wr.row(&csv_row![
+                    rec.round,
+                    rec.sim_time,
+                    rec.makespan,
+                    rec.train_loss,
+                    rec.test_loss.map(|v| v.to_string()).unwrap_or_default(),
+                    rec.test_accuracy.map(|v| v.to_string()).unwrap_or_default(),
+                    rec.lr,
+                    rec.mean_tier,
+                    rec.wire_bytes,
+                    rec.straggled,
+                    rec.quarantined,
+                    rec.retries,
+                    rec.staleness,
+                    rec.tier_flushes,
+                    rec.host_secs
+                ])?;
+            }
+            observe(&rec);
+            recorder.push(rec, target);
+        }
+        if let Some(wr) = csv.as_mut() {
+            wr.flush()?;
         }
 
         Ok(recorder.report(
@@ -443,10 +580,43 @@ impl Experiment {
                 "straggled",
                 "quarantined",
                 "retries",
+                "staleness",
+                "tier_flushes",
                 "host_secs",
             ],
         )?))
     }
+}
+
+/// Evaluate `params` on pre-encoded test batches over the worker pool —
+/// the free-function form the async driver calls mid-session (the method
+/// state is mutably borrowed by the event engine at that point).
+fn eval_params(
+    rt: &Runtime,
+    threads: usize,
+    eval_batches: &[Batch],
+    params: &[f32],
+) -> Result<(f64, f64)> {
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut n = 0usize;
+    for_each_streamed(
+        threads,
+        eval_batches,
+        |_, b| {
+            let engine = StepEngine::new(rt);
+            let (l, c) = engine.eval_batch(params, &b.x, &b.y)?;
+            Ok((l, c, b.size))
+        },
+        |_, (l, c, size): (f32, f32, usize)| {
+            loss += l as f64;
+            correct += c as f64;
+            n += size;
+            Ok(())
+        },
+    )?;
+    let nb = eval_batches.len().max(1) as f64;
+    Ok((loss / nb, correct / n.max(1) as f64))
 }
 
 /// Instantiate the configured method.

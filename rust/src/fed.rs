@@ -305,6 +305,15 @@ pub trait Method {
 
     /// Full global model parameters in the flat layout (for evaluation).
     fn global_params(&self) -> &[f32];
+
+    /// Downcast to the DTFL method state. The asynchronous tier driver
+    /// ([`crate::coordinator::async_round`]) needs the concrete
+    /// scheduler/profiler/double-buffer internals, which only the DTFL
+    /// family carries; every other method returns `None` (and the config
+    /// layer rejects `async_tiers` for them up front).
+    fn as_dtfl_mut(&mut self) -> Option<&mut crate::coordinator::Dtfl> {
+        None
+    }
 }
 
 #[cfg(test)]

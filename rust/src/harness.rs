@@ -57,6 +57,9 @@ pub struct RunSpec {
     /// SIMD dispatch level ("auto" | "scalar" | "avx2" | "avx512" |
     /// "neon"); bit-identical at every level, a pure throughput knob.
     pub simd: String,
+    /// Asynchronous tier engine: per-tier flush cadences on a virtual-time
+    /// event queue instead of the synchronous global-round barrier.
+    pub async_tiers: bool,
     pub lr: f32,
     pub out_name: Option<String>,
     /// Trace-driven environment scenario; when set, `clients` must equal
@@ -94,6 +97,7 @@ impl Default for RunSpec {
             fuse_forward: true,
             fold: FoldStrategy::Mean,
             simd: "auto".into(),
+            async_tiers: false,
             lr: 1e-3,
             out_name: None,
             scenario: None,
@@ -148,6 +152,7 @@ impl RunSpec {
                 fuse_forward: self.fuse_forward,
                 fold: self.fold,
                 simd: self.simd.clone(),
+                async_tiers: self.async_tiers,
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -976,6 +981,161 @@ pub fn measure_robustness_throughput(
         retries: trimmed_recs.iter().map(|r| r.retries).sum(),
         mean_final_train_loss: mean_recs.last().map(|r| r.train_loss).unwrap_or(0.0),
         trimmed_final_train_loss: trimmed_recs.last().map(|r| r.train_loss).unwrap_or(0.0),
+    })
+}
+
+/// The committed straggler-heavy scenario the `async_tiers` bench object
+/// runs (also pinned sync-vs-async by `tests/event_trace.rs`).
+pub const STRAGGLER_HEAVY_TOML: &str =
+    include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/straggler_heavy.toml"));
+
+/// Result of the async-tier probe — the `async_tiers` object in
+/// `BENCH_hotpath.json`: the committed straggler-heavy scenario run once on
+/// the asynchronous tier engine and once under each synchronous deadline
+/// policy (`drop` and `wait`), comparing total simulated makespan and final
+/// test loss, plus the event-engine throughput and a bit-identity flag over
+/// the full event-sequence golden trace (two async legs on different
+/// engine knobs must agree byte for byte).
+#[derive(Debug, Clone)]
+pub struct AsyncTiersThroughput {
+    pub name: String,
+    pub clients: usize,
+    pub rounds: usize,
+    /// Total simulated seconds of the async run (windows × W).
+    pub async_sim_secs: f64,
+    /// Total simulated seconds under the synchronous `drop` policy.
+    pub drop_sim_secs: f64,
+    /// Total simulated seconds under the synchronous `wait` policy.
+    pub wait_sim_secs: f64,
+    /// Events processed by the async engine (ClientFinish + TierFlush +
+    /// ServerBroadcast).
+    pub events: usize,
+    /// Host-side event-processing rate of the async leg.
+    pub events_per_sec: f64,
+    /// Final test loss of the async run.
+    pub async_final_test_loss: f64,
+    /// Final test loss of the synchronous `drop` run.
+    pub drop_final_test_loss: f64,
+    /// Whether two async legs on different engine knobs produced identical
+    /// global parameter bits AND identical event-sequence golden traces.
+    pub bit_identical: bool,
+}
+
+impl AsyncTiersThroughput {
+    /// Makespan speedup of the async engine over the sync `drop` policy.
+    pub fn speedup_vs_drop(&self) -> f64 {
+        self.drop_sim_secs / self.async_sim_secs.max(1e-12)
+    }
+
+    /// Makespan speedup of the async engine over the sync `wait` policy.
+    pub fn speedup_vs_wait(&self) -> f64 {
+        self.wait_sim_secs / self.async_sim_secs.max(1e-12)
+    }
+
+    /// The `async_tiers` object recorded in `BENCH_hotpath.json`.
+    pub fn to_json(&self, source: &str) -> Json {
+        json::obj(vec![
+            ("name", json::s(self.name.clone())),
+            ("clients", json::num(self.clients as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            (
+                "makespan",
+                json::obj(vec![
+                    ("async_sim_secs", json::num(self.async_sim_secs)),
+                    ("drop_sim_secs", json::num(self.drop_sim_secs)),
+                    ("wait_sim_secs", json::num(self.wait_sim_secs)),
+                    ("speedup_vs_drop", json::num(self.speedup_vs_drop())),
+                    ("speedup_vs_wait", json::num(self.speedup_vs_wait())),
+                ]),
+            ),
+            (
+                "events",
+                json::obj(vec![
+                    ("count", json::num(self.events as f64)),
+                    ("per_sec", json::num(self.events_per_sec)),
+                ]),
+            ),
+            (
+                "loss",
+                json::obj(vec![
+                    ("async_final_test_loss", json::num(self.async_final_test_loss)),
+                    ("drop_final_test_loss", json::num(self.drop_final_test_loss)),
+                ]),
+            ),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Run the committed straggler-heavy scenario three ways: on the async tier
+/// engine (per-tier flush cadences, staleness-weighted merging — stragglers
+/// never stretch the clock) and on the synchronous engine under both
+/// deadline policies (`drop` pays the deadline and discards the slow
+/// updates; `wait` pays the full straggler path). The async leg runs twice
+/// on different engine knobs and the two event-sequence golden traces plus
+/// final parameter bits must agree — the recorded `bit_identical` flag.
+pub fn measure_async_throughput(rounds: usize) -> Result<AsyncTiersThroughput> {
+    use crate::simulation::{DeadlinePolicy, EventRecord};
+
+    let scenario = Scenario::parse(STRAGGLER_HEAVY_TOML)?;
+    let clients = scenario.total_clients();
+    let spec = |sc: Scenario, async_tiers: bool| RunSpec {
+        method: "dtfl".into(),
+        clients,
+        rounds,
+        batch_cap: Some(1),
+        train_total: clients * 16,
+        test_total: 32,
+        eval_every: 1,
+        threads: 0,
+        async_tiers,
+        scenario: Some(sc),
+        ..Default::default()
+    };
+    type AsyncLeg = (Vec<RoundRecord>, Vec<f32>, Vec<EventRecord>);
+    let run_async = |threads: usize, depth: usize| -> Result<AsyncLeg> {
+        let mut s = spec(scenario.clone(), true);
+        s.threads = threads;
+        s.pipeline_depth = depth;
+        let mut exp = Experiment::new(s.to_config())?;
+        let mut records = Vec::new();
+        exp.run_with(|r| records.push(r.clone()))?;
+        let params = exp.method.global_params().to_vec();
+        Ok((records, params, exp.event_log.clone()))
+    };
+    let run_sync = |sc: Scenario| -> Result<Vec<RoundRecord>> {
+        let mut exp = Experiment::new(spec(sc, false).to_config())?;
+        let mut records = Vec::new();
+        exp.run_with(|r| records.push(r.clone()))?;
+        Ok(records)
+    };
+
+    let t0 = Instant::now();
+    let (async_recs, async_params, async_events) = run_async(1, 1)?;
+    let host = t0.elapsed().as_secs_f64();
+    let (_, alt_params, alt_events) = run_async(2, 4)?;
+
+    let drop_recs = run_sync(scenario.clone())?;
+    let mut waited = scenario.clone();
+    waited.on_deadline = DeadlinePolicy::Wait;
+    let wait_recs = run_sync(waited)?;
+
+    let last_loss = |recs: &[RoundRecord]| {
+        recs.iter().rev().find_map(|r| r.test_loss).unwrap_or(f64::INFINITY)
+    };
+    Ok(AsyncTiersThroughput {
+        name: scenario.name.clone(),
+        clients,
+        rounds,
+        async_sim_secs: async_recs.last().map(|r| r.sim_time).unwrap_or(0.0),
+        drop_sim_secs: drop_recs.last().map(|r| r.sim_time).unwrap_or(0.0),
+        wait_sim_secs: wait_recs.last().map(|r| r.sim_time).unwrap_or(0.0),
+        events: async_events.len(),
+        events_per_sec: async_events.len() as f64 / host.max(1e-12),
+        async_final_test_loss: last_loss(&async_recs),
+        drop_final_test_loss: last_loss(&drop_recs),
+        bit_identical: bits_eq(&async_params, &alt_params) && async_events == alt_events,
     })
 }
 

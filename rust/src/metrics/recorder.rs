@@ -36,6 +36,12 @@ pub struct RoundRecord {
     /// Failed uplink attempts across participants this round — each one
     /// charged a re-send plus backoff in simulated time and wire bytes.
     pub retries: usize,
+    /// Mean staleness weight s(d) = 1/(1+d) over updates merged in this
+    /// async window (1.0 = all fresh; 0.0 when nothing merged or in sync
+    /// mode, where every merge is fresh by construction).
+    pub staleness: f64,
+    /// Tier flushes that fired in this async window (0 in sync mode).
+    pub tier_flushes: usize,
     /// Host wall seconds actually spent executing this round.
     pub host_secs: f64,
 }
@@ -166,6 +172,8 @@ mod tests {
             straggled: 0,
             quarantined: 0,
             retries: 0,
+            staleness: 0.0,
+            tier_flushes: 0,
             host_secs: 0.1,
         }
     }

@@ -1,0 +1,302 @@
+//! Deterministic virtual-time event queue for the asynchronous tier engine.
+//!
+//! The synchronous drivers advance the fleet one global round at a time;
+//! the async engine (FedAT-style, PAPERS.md arxiv 2010.05958) instead
+//! schedules three event kinds on one virtual clock:
+//!
+//! * [`EventKind::ClientFinish`] — a client's local round completes and its
+//!   update is delivered to its tier's buffer;
+//! * [`EventKind::TierFlush`] — a tier aggregates its buffered updates at
+//!   its own cadence and merges them into the global model with
+//!   staleness-discounted weights;
+//! * [`EventKind::ServerBroadcast`] — the merged model is published
+//!   (clients pick it up when they next start a round).
+//!
+//! Determinism is the whole point: events are totally ordered by
+//! `(virtual_time, pinned tie-break key)` where the key is
+//! `(kind rank, tier, client, insertion seq)` — compared via
+//! [`f64::total_cmp`] on the timestamp, so the order is a pure function of
+//! the event set, never of heap internals or insertion interleaving. Equal
+//! timestamps resolve ClientFinish → TierFlush → ServerBroadcast, which
+//! pins the straddle semantics: a client finishing exactly at a flush
+//! joins that flush, and a client (re)starting at a broadcast instant
+//! trains on the pre-broadcast snapshot.
+//!
+//! The processed stream is recorded as [`EventRecord`] rows (exact bit
+//! patterns + an FNV-1a parameter checksum at each flush/broadcast) and
+//! asserted byte-for-byte across the whole
+//! `{threads, intra, depth, shards, fuse, simd}` knob grid by
+//! `tests/event_trace.rs`; the queue's ordering contract is property-tested
+//! by `tests/event_props.rs`.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Sentinel for event rows that are not about a single client
+/// (tier flushes, broadcasts).
+pub const NO_CLIENT: usize = usize::MAX;
+
+/// The three event kinds of the async tier engine, in tie-break rank order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    ClientFinish,
+    TierFlush,
+    ServerBroadcast,
+}
+
+impl EventKind {
+    /// Equal-timestamp processing rank: deliveries land before the flush
+    /// that consumes them, and broadcasts publish after every same-instant
+    /// flush has merged.
+    pub fn rank(self) -> u8 {
+        match self {
+            EventKind::ClientFinish => 0,
+            EventKind::TierFlush => 1,
+            EventKind::ServerBroadcast => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::ClientFinish => "client_finish",
+            EventKind::TierFlush => "tier_flush",
+            EventKind::ServerBroadcast => "server_broadcast",
+        }
+    }
+}
+
+/// One scheduled event. Ordering ignores nothing: time (total order over
+/// the f64 bit patterns), then the pinned key — so two distinct events
+/// never compare equal and the pop order is a pure function of the set.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Virtual timestamp, simulated seconds.
+    pub time: f64,
+    pub kind: EventKind,
+    /// Client id for `ClientFinish`; [`NO_CLIENT`] otherwise.
+    pub client: usize,
+    /// Tier the event concerns (the finishing client's tier, the flushing
+    /// tier, or the tier whose flush triggered the broadcast).
+    pub tier: usize,
+    /// Insertion sequence number — the final tie-break. The engine pushes
+    /// events in a deterministic order, so this is reproducible by
+    /// construction.
+    pub seq: u64,
+}
+
+impl Event {
+    /// The pinned tie-break key for equal timestamps.
+    pub fn key(&self) -> (u8, usize, usize, u64) {
+        (self.kind.rank(), self.tier, self.client, self.seq)
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.to_bits() == other.time.to_bits() && self.key() == other.key()
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| self.key().cmp(&other.key()))
+    }
+}
+
+/// Min-queue over [`Event`]s. A thin wrapper over a binary heap whose pop
+/// order is fully pinned by [`Event`]'s total order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<Event>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule an event, assigning the next insertion sequence number.
+    pub fn push(&mut self, time: f64, kind: EventKind, client: usize, tier: usize) -> Event {
+        let ev = Event { time, kind, client, tier, seq: self.seq };
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(ev));
+        ev
+    }
+
+    /// Schedule a fully-specified event (property tests construct events
+    /// with explicit sequence numbers to prove insertion-order invariance).
+    pub fn push_event(&mut self, ev: Event) {
+        self.seq = self.seq.max(ev.seq + 1);
+        self.heap.push(std::cmp::Reverse(ev));
+    }
+
+    /// Next event in `(time, key)` order.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Staleness discount for an update delivered `rounds_behind` tier flushes
+/// after the flush epoch it started in: `s(d) = 1 / (1 + d)` — FedAT-style
+/// polynomial decay, monotone non-increasing in `d`, `s(0) = 1` for a
+/// fresh update (property-tested by `tests/event_props.rs`).
+pub fn staleness_weight(rounds_behind: usize) -> f64 {
+    1.0 / (1.0 + rounds_behind as f64)
+}
+
+/// Staleness-discounted merge weights for one tier flush.
+///
+/// Each buffered update's aggregation weight `base_w[i]` (its dataset size
+/// N_k) is scaled by [`staleness_weight`] of its `rounds_behind[i]`; the
+/// scaled weights are what the flush folds with (the aggregator normalizes
+/// them into a convex combination, so the within-tier weight sum is
+/// preserved at every flush). The returned blend factor
+/// `β = min(1, Σ scaled / fleet_w)` is the tier average's share of the new
+/// global model: `new = (1 − β)·global + β·tier_avg`, so a tier holding a
+/// small or stale fraction of the fleet's data moves the global model
+/// proportionally little.
+pub fn staleness_merge(base_w: &[f64], rounds_behind: &[usize], fleet_w: f64) -> (Vec<f64>, f64) {
+    assert_eq!(base_w.len(), rounds_behind.len(), "weight/staleness length mismatch");
+    let mut scaled = Vec::with_capacity(base_w.len());
+    let mut sum = 0.0f64;
+    for (&w, &d) in base_w.iter().zip(rounds_behind) {
+        let s = w * staleness_weight(d);
+        // pinned accumulation order: index order, one add per update
+        sum += s;
+        scaled.push(s);
+    }
+    let beta = (sum / fleet_w.max(1e-12)).min(1.0);
+    (scaled, beta)
+}
+
+/// FNV-1a over the exact bit patterns of a parameter vector — the compact
+/// fingerprint each flush/broadcast row carries (same basis/prime as the
+/// golden-trace suites).
+pub fn fnv1a_params(params: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for p in params {
+        for b in p.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// One processed event, everything reduced to exact bits — a row of the
+/// event-sequence golden trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EventRecord {
+    pub kind: EventKind,
+    /// Client id, or `u64::MAX` for flush/broadcast rows.
+    pub client: u64,
+    pub tier: u64,
+    /// Virtual timestamp bits (`f64::to_bits`).
+    pub time_bits: u64,
+    /// Staleness-weight bits: `s(d)` of the delivered update on
+    /// `ClientFinish` rows, the blend factor β on `TierFlush` rows
+    /// (0.0 for an empty carry-forward flush), 0.0 on broadcasts.
+    pub staleness_bits: u64,
+    /// FNV-1a over the global flat parameters right after the event on
+    /// flush/broadcast rows; 0 on `ClientFinish` rows.
+    pub checksum: u64,
+}
+
+impl EventRecord {
+    pub fn new(
+        kind: EventKind,
+        client: usize,
+        tier: usize,
+        time: f64,
+        staleness: f64,
+        checksum: u64,
+    ) -> Self {
+        Self {
+            kind,
+            client: if client == NO_CLIENT { u64::MAX } else { client as u64 },
+            tier: tier as u64,
+            time_bits: time.to_bits(),
+            staleness_bits: staleness.to_bits(),
+            checksum,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, EventKind::ClientFinish, 1, 2);
+        q.push(1.0, EventKind::TierFlush, NO_CLIENT, 1);
+        q.push(2.0, EventKind::ClientFinish, 0, 1);
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn equal_time_resolves_by_kind_then_tier_then_client() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::ServerBroadcast, NO_CLIENT, 1);
+        q.push(5.0, EventKind::TierFlush, NO_CLIENT, 2);
+        q.push(5.0, EventKind::TierFlush, NO_CLIENT, 1);
+        q.push(5.0, EventKind::ClientFinish, 7, 2);
+        q.push(5.0, EventKind::ClientFinish, 3, 2);
+        let order: Vec<(EventKind, usize, usize)> =
+            std::iter::from_fn(|| q.pop()).map(|e| (e.kind, e.tier, e.client)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (EventKind::ClientFinish, 2, 3),
+                (EventKind::ClientFinish, 2, 7),
+                (EventKind::TierFlush, 1, NO_CLIENT),
+                (EventKind::TierFlush, 2, NO_CLIENT),
+                (EventKind::ServerBroadcast, 1, NO_CLIENT),
+            ]
+        );
+    }
+
+    #[test]
+    fn staleness_weight_decays_from_one() {
+        assert_eq!(staleness_weight(0), 1.0);
+        assert_eq!(staleness_weight(1), 0.5);
+        assert!(staleness_weight(3) < staleness_weight(2));
+    }
+
+    #[test]
+    fn merge_scales_and_clamps_beta() {
+        let (scaled, beta) = staleness_merge(&[10.0, 10.0], &[0, 1], 40.0);
+        assert_eq!(scaled, vec![10.0, 5.0]);
+        assert!((beta - 15.0 / 40.0).abs() < 1e-15);
+        let (_, beta) = staleness_merge(&[100.0], &[0], 10.0);
+        assert_eq!(beta, 1.0, "blend factor clamps at 1");
+    }
+
+    #[test]
+    fn fnv_matches_reference_basis() {
+        // empty input = FNV-1a offset basis
+        assert_eq!(fnv1a_params(&[]), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a_params(&[1.0]), fnv1a_params(&[-1.0]));
+    }
+}

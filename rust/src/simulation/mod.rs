@@ -4,11 +4,16 @@
 //! (churn, time-varying links, deadlines) layered on top of it.
 
 pub mod clock;
+pub mod events;
 pub mod network;
 pub mod profile;
 pub mod scenario;
 
 pub use clock::{ClientRoundTime, VirtualClock};
+pub use events::{
+    fnv1a_params, staleness_merge, staleness_weight, Event, EventKind, EventQueue, EventRecord,
+    NO_CLIENT,
+};
 pub use network::{LinkProcess, LinkQuality, LinkWindow};
 pub use profile::{
     DynamicEnvironment, ProfilePool, ResourceProfile, CASE1_PROFILES, CASE2_PROFILES,

@@ -1,0 +1,199 @@
+//! Property tests for the async event queue's ordering contract and the
+//! staleness-weighted merge arithmetic (`simulation::events`).
+//!
+//! Randomized over many seeds: event insertion order never changes the pop
+//! order (the queue's total order is a pure function of the event *set*);
+//! equal-timestamp ties always resolve by the pinned
+//! `(kind rank, tier, client, seq)` key; the staleness discount is
+//! monotone non-increasing in rounds-behind; and every tier flush
+//! preserves the weight-sum invariant `β·fleet_w = min(Σ wᵢ·s(dᵢ),
+//! fleet_w)` with per-update weights never amplified.
+
+use dtfl::simulation::{
+    staleness_merge, staleness_weight, Event, EventKind, EventQueue, NO_CLIENT,
+};
+use dtfl::util::Rng64;
+
+const KINDS: [EventKind; 3] =
+    [EventKind::ClientFinish, EventKind::TierFlush, EventKind::ServerBroadcast];
+
+/// A random event; times are drawn from a small lattice so equal-timestamp
+/// collisions (the interesting case) are common.
+fn random_event(rng: &mut Rng64, seq: u64) -> Event {
+    let kind = KINDS[rng.gen_range(0, 3)];
+    let client = if kind == EventKind::ClientFinish { rng.gen_range(0, 8) } else { NO_CLIENT };
+    Event {
+        time: rng.gen_range(0, 12) as f64 * 0.25,
+        kind,
+        client,
+        tier: 1 + rng.gen_range(0, 4),
+        seq,
+    }
+}
+
+fn pop_all(q: &mut EventQueue) -> Vec<Event> {
+    std::iter::from_fn(|| q.pop()).collect()
+}
+
+fn key_of(e: &Event) -> (u8, usize, usize, u64) {
+    (e.kind.rank(), e.tier, e.client, e.seq)
+}
+
+#[test]
+fn pop_order_is_a_pure_function_of_the_event_set() {
+    for seed in 0..32u64 {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let n = 1 + rng.gen_range(0, 64);
+        let events: Vec<Event> = (0..n).map(|i| random_event(&mut rng, i as u64)).collect();
+
+        // the specified order: (total_cmp on time, pinned key)
+        let mut expected = events.clone();
+        expected.sort_by(|a, b| a.time.total_cmp(&b.time).then_with(|| key_of(a).cmp(&key_of(b))));
+
+        // insertion order must be irrelevant: original vs shuffled
+        let mut q = EventQueue::new();
+        for &e in &events {
+            q.push_event(e);
+        }
+        let popped = pop_all(&mut q);
+        assert_eq!(popped, expected, "seed {seed}: pop order violates the (time, key) order");
+
+        let mut shuffled = events.clone();
+        rng.shuffle(&mut shuffled);
+        let mut q2 = EventQueue::new();
+        for &e in &shuffled {
+            q2.push_event(e);
+        }
+        assert_eq!(
+            pop_all(&mut q2),
+            popped,
+            "seed {seed}: shuffled insertion changed the pop order"
+        );
+    }
+}
+
+#[test]
+fn pop_order_never_violates_the_total_order() {
+    for seed in 100..120u64 {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let mut q = EventQueue::new();
+        for i in 0..50u64 {
+            q.push_event(random_event(&mut rng, i));
+        }
+        let popped = pop_all(&mut q);
+        for pair in popped.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            assert!(
+                a.time.total_cmp(&b.time).is_le(),
+                "seed {seed}: time order violated ({} before {})",
+                a.time,
+                b.time
+            );
+            if a.time.to_bits() == b.time.to_bits() {
+                assert!(
+                    key_of(a) < key_of(b),
+                    "seed {seed}: equal-time tie not resolved by the pinned key"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn equal_timestamp_ties_resolve_by_pinned_key_regardless_of_insertion() {
+    for seed in 200..216u64 {
+        let mut rng = Rng64::seed_from_u64(seed);
+        // every event at the same instant: ordering is the key alone
+        let events: Vec<Event> = (0..24u64)
+            .map(|i| Event { time: 3.5, ..random_event(&mut rng, i) })
+            .collect();
+        let mut expected = events.clone();
+        expected.sort_by(|a, b| key_of(a).cmp(&key_of(b)));
+        for trial in 0..4 {
+            let mut shuffled = events.clone();
+            rng.shuffle(&mut shuffled);
+            let mut q = EventQueue::new();
+            for &e in &shuffled {
+                q.push_event(e);
+            }
+            assert_eq!(
+                pop_all(&mut q),
+                expected,
+                "seed {seed} trial {trial}: tie-break depended on insertion order"
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_sequencing_preserves_fifo_among_identical_events() {
+    // push() assigns monotone seq numbers, so two otherwise-identical
+    // events pop in insertion order — the last resort of the pinned key
+    let mut q = EventQueue::new();
+    let a = q.push(1.0, EventKind::TierFlush, NO_CLIENT, 2);
+    let b = q.push(1.0, EventKind::TierFlush, NO_CLIENT, 2);
+    assert!(a.seq < b.seq);
+    let popped = pop_all(&mut q);
+    assert_eq!(popped[0].seq, a.seq);
+    assert_eq!(popped[1].seq, b.seq);
+}
+
+#[test]
+fn staleness_weight_is_monotone_non_increasing_from_one() {
+    assert_eq!(staleness_weight(0), 1.0, "a fresh update is not discounted");
+    let mut prev = staleness_weight(0);
+    for d in 1..=256 {
+        let w = staleness_weight(d);
+        assert!(w > 0.0 && w <= 1.0, "s({d}) = {w} out of (0, 1]");
+        assert!(w <= prev, "s({d}) = {w} > s({}) = {prev}: not monotone", d - 1);
+        prev = w;
+    }
+}
+
+#[test]
+fn staleness_merge_preserves_the_weight_sum_invariant() {
+    for seed in 300..332u64 {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let n = 1 + rng.gen_range(0, 12);
+        let base: Vec<f64> = (0..n).map(|_| rng.gen_f64(1.0, 200.0)).collect();
+        let behind: Vec<usize> = (0..n).map(|_| rng.gen_range(0, 6)).collect();
+        let fleet_w: f64 = rng.gen_f64(50.0, 2000.0);
+        let (scaled, beta) = staleness_merge(&base, &behind, fleet_w);
+        assert_eq!(scaled.len(), n);
+
+        // per-update: scaled exactly w·s(d), never amplified
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            let expect = base[i] * staleness_weight(behind[i]);
+            assert_eq!(scaled[i].to_bits(), expect.to_bits(), "seed {seed}: scale mismatch");
+            assert!(scaled[i] <= base[i], "seed {seed}: staleness must never amplify a weight");
+            if behind[i] == 0 {
+                assert_eq!(scaled[i].to_bits(), base[i].to_bits(), "fresh weight untouched");
+            }
+            sum += scaled[i];
+        }
+        // the flush invariant, bit-exact in the pinned accumulation order:
+        // β·fleet_w recovers the scaled weight mass (clamped at fleet_w)
+        let expect_beta = (sum / fleet_w).min(1.0);
+        assert_eq!(beta.to_bits(), expect_beta.to_bits(), "seed {seed}: β mismatch");
+        assert!((0.0..=1.0).contains(&beta), "seed {seed}: β = {beta} out of [0, 1]");
+    }
+}
+
+#[test]
+fn stale_mix_weighs_less_than_the_same_fresh_mix() {
+    for seed in 400..416u64 {
+        let mut rng = Rng64::seed_from_u64(seed);
+        let n = 2 + rng.gen_range(0, 8);
+        let base: Vec<f64> = (0..n).map(|_| rng.gen_f64(1.0, 100.0)).collect();
+        let fresh = vec![0usize; n];
+        let stale: Vec<usize> = (0..n).map(|_| 1 + rng.gen_range(0, 5)).collect();
+        let fleet_w = 10_000.0; // far from the clamp
+        let (_, beta_fresh) = staleness_merge(&base, &fresh, fleet_w);
+        let (_, beta_stale) = staleness_merge(&base, &stale, fleet_w);
+        assert!(
+            beta_stale < beta_fresh,
+            "seed {seed}: a strictly stale mix must move the global model less"
+        );
+    }
+}

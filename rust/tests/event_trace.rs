@@ -1,0 +1,461 @@
+//! Golden event-sequence suite: the determinism contract extended to the
+//! asynchronous tier engine's event stream itself.
+//!
+//! An async DTFL session is recorded from the single-thread sequential
+//! reference as a stream of [`EventRecord`] rows — event kind, client,
+//! tier, virtual timestamp bits, staleness-weight bits, and an FNV-1a
+//! parameter checksum at each flush/broadcast — plus the per-window round
+//! records and the final global parameter bits. Every engine configuration
+//! in the `{threads, intra_threads, pipeline_depth, agg_shards,
+//! fuse_forward, simd}` grid must reproduce all three **byte for byte**
+//! (the CI determinism matrix injects extra legs via `DTFL_TEST_THREADS`
+//! and `DTFL_TEST_SIMD`, exactly like `tests/golden_trace.rs`).
+//!
+//! On top of the byte contract, the suite pins the async engine's
+//! semantics on crafted scenarios: the committed straggler-heavy trace
+//! must be strictly faster end to end than both synchronous deadline
+//! policies at no loss cost; a tier whose every client churns out
+//! carries the model forward through empty flushes; quarantined
+//! non-finite updates never reach a cross-tier merge; and a flaky
+//! uplink's retry backoff is charged exactly once in virtual time even
+//! when the attempt spans tier-flush boundaries.
+
+use dtfl::experiment::Experiment;
+use dtfl::harness::{self, RunSpec, STRAGGLER_HEAVY_TOML};
+use dtfl::metrics::RoundRecord;
+use dtfl::runtime::{simd, SimdLevel};
+use dtfl::simulation::{CohortSpec, CorruptMode, DeadlinePolicy, EventKind, EventRecord, Scenario};
+
+/// One async window row, everything reduced to exact bit patterns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct WindowRow {
+    round: usize,
+    sim_time: u64,
+    train_loss: u64,
+    test_loss: Option<u64>,
+    staleness: u64,
+    tier_flushes: usize,
+    straggled: usize,
+    quarantined: usize,
+    retries: usize,
+    wire_bytes: u64,
+}
+
+/// One async session's full golden trace: the event stream, the window
+/// rows, and the final global parameter bits.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct AsyncTrace {
+    events: Vec<EventRecord>,
+    windows: Vec<WindowRow>,
+    params: Vec<u32>,
+}
+
+fn window_rows(records: &[RoundRecord]) -> Vec<WindowRow> {
+    records
+        .iter()
+        .map(|r| WindowRow {
+            round: r.round,
+            sim_time: r.sim_time.to_bits(),
+            train_loss: r.train_loss.to_bits(),
+            test_loss: r.test_loss.map(f64::to_bits),
+            staleness: r.staleness.to_bits(),
+            tier_flushes: r.tier_flushes,
+            straggled: r.straggled,
+            quarantined: r.quarantined,
+            retries: r.retries,
+            wire_bytes: r.wire_bytes,
+        })
+        .collect()
+}
+
+/// Engine configuration under test (`simd: None` = `[run] simd = "auto"`).
+#[derive(Debug, Clone, Copy)]
+struct Knobs {
+    threads: usize,
+    intra: usize,
+    depth: usize,
+    shards: usize,
+    fuse: bool,
+    simd: Option<SimdLevel>,
+}
+
+const REFERENCE: Knobs = Knobs {
+    threads: 1,
+    intra: 1,
+    depth: 1,
+    shards: 1,
+    fuse: false,
+    simd: Some(SimdLevel::Scalar),
+};
+
+/// Run one async DTFL session and capture its full golden trace.
+fn run_async(
+    scenario: Option<Scenario>,
+    clients: usize,
+    rounds: usize,
+    eval_every: usize,
+    k: Knobs,
+) -> AsyncTrace {
+    let spec = RunSpec {
+        method: "dtfl".into(),
+        clients,
+        rounds,
+        batch_cap: Some(1),
+        train_total: clients * 16,
+        test_total: 32,
+        eval_every,
+        threads: k.threads,
+        intra_threads: k.intra,
+        pipeline_depth: k.depth,
+        agg_shards: k.shards,
+        fuse_forward: k.fuse,
+        simd: k.simd.map_or_else(|| "auto".into(), |l| l.name().into()),
+        async_tiers: true,
+        scenario,
+        ..Default::default()
+    };
+    let mut exp = Experiment::new(spec.to_config()).expect("async experiment");
+    let mut records = Vec::new();
+    exp.run_with(|r| records.push(r.clone())).expect("async run");
+    AsyncTrace {
+        events: exp.event_log.clone(),
+        windows: window_rows(&records),
+        params: exp.method.global_params().iter().map(|p| p.to_bits()).collect(),
+    }
+}
+
+/// Extra thread count injected by the CI determinism matrix.
+fn env_threads() -> Option<usize> {
+    std::env::var("DTFL_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+}
+
+/// One grid entry per supported non-scalar dispatch level (heavyweight
+/// per-level coverage runs in the CI `DTFL_TEST_SIMD` legs).
+fn simd_entries() -> impl Iterator<Item = Knobs> {
+    simd::available()
+        .into_iter()
+        .filter(|&l| l != SimdLevel::Scalar)
+        .map(|l| Knobs { threads: 2, intra: 1, depth: 4, shards: 0, fuse: true, simd: Some(l) })
+}
+
+fn full_grid() -> Vec<Knobs> {
+    let mut g = vec![
+        // fusion alone against the unfused sequential reference
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true, simd: None },
+        // pipelining/sharding alone, sequential pool, unfused
+        Knobs { threads: 1, intra: 1, depth: 4, shards: 3, fuse: false, simd: None },
+        // parallel pool with the barrier aggregator, unfused
+        Knobs { threads: 2, intra: 1, depth: 1, shards: 1, fuse: false, simd: None },
+        // parallel + pipelined + auto shards + fusion (the default engine)
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true, simd: None },
+        // everything composed, including intra-step kernel splits
+        Knobs { threads: 4, intra: 2, depth: 8, shards: 2, fuse: true, simd: None },
+    ];
+    g.extend(simd_entries());
+    if let Some(n) = env_threads() {
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true, simd: None });
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: false, simd: None });
+    }
+    g
+}
+
+/// A smaller grid for the scenario-driven legs (the full grid runs on the
+/// cheaper scenario-free session).
+fn small_grid() -> Vec<Knobs> {
+    let mut g = vec![
+        Knobs { threads: 1, intra: 1, depth: 1, shards: 1, fuse: true, simd: None },
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true, simd: None },
+    ];
+    g.extend(simd_entries());
+    if let Some(n) = env_threads() {
+        g.push(Knobs { threads: n, intra: 1, depth: 4, shards: 0, fuse: true, simd: None });
+    }
+    g
+}
+
+fn assert_grid_invariant(
+    label: &str,
+    scenario: Option<&Scenario>,
+    clients: usize,
+    rounds: usize,
+    grid: &[Knobs],
+) -> AsyncTrace {
+    let golden = run_async(scenario.cloned(), clients, rounds, 1, REFERENCE);
+    assert!(!golden.events.is_empty(), "{label}: empty event stream");
+    assert_eq!(golden.windows.len(), rounds, "{label}: one window row per round");
+    for &k in grid {
+        let t = run_async(scenario.cloned(), clients, rounds, 1, k);
+        assert_eq!(
+            golden.events, t.events,
+            "{label} {k:?}: event-sequence golden trace diverged"
+        );
+        assert_eq!(golden.windows, t.windows, "{label} {k:?}: window rows diverged");
+        assert_eq!(golden.params, t.params, "{label} {k:?}: global param bits diverged");
+    }
+    golden
+}
+
+/// Structural invariants every recorded stream must satisfy: processing
+/// order is non-decreasing in time; equal timestamps resolve ClientFinish →
+/// TierFlush → ServerBroadcast (the pinned straddle semantics); and every
+/// broadcast publishes exactly what the latest same-instant flush merged.
+fn assert_stream_well_formed(label: &str, events: &[EventRecord]) {
+    for pair in events.windows(2) {
+        let (a, b) = (&pair[0], &pair[1]);
+        let (ta, tb) = (f64::from_bits(a.time_bits), f64::from_bits(b.time_bits));
+        assert!(
+            ta.total_cmp(&tb).is_le(),
+            "{label}: stream out of time order ({ta} then {tb})"
+        );
+        if a.time_bits == b.time_bits {
+            assert!(
+                a.kind.rank() <= b.kind.rank(),
+                "{label}: equal-time events out of kind-rank order ({:?} then {:?})",
+                a.kind,
+                b.kind
+            );
+        }
+    }
+    let mut last_flush_ck: Option<u64> = None;
+    let mut last_flush_time = 0u64;
+    for e in events {
+        match e.kind {
+            EventKind::ClientFinish => {
+                let s = f64::from_bits(e.staleness_bits);
+                assert!(s > 0.0 && s <= 1.0, "{label}: finish staleness weight out of (0,1]");
+                assert_eq!(e.checksum, 0, "{label}: finish rows carry no checksum");
+            }
+            EventKind::TierFlush => {
+                let beta = f64::from_bits(e.staleness_bits);
+                assert!((0.0..=1.0).contains(&beta), "{label}: blend factor out of [0,1]");
+                last_flush_ck = Some(e.checksum);
+                last_flush_time = e.time_bits;
+            }
+            EventKind::ServerBroadcast => {
+                assert_eq!(
+                    Some(e.checksum),
+                    last_flush_ck,
+                    "{label}: broadcast must publish the latest flushed model"
+                );
+                assert_eq!(
+                    e.time_bits, last_flush_time,
+                    "{label}: broadcast shares its triggering flush's instant"
+                );
+            }
+        }
+    }
+}
+
+fn has_kind(events: &[EventRecord], kind: EventKind) -> bool {
+    events.iter().any(|e| e.kind == kind)
+}
+
+#[test]
+fn async_event_trace_is_knob_invariant() {
+    let golden = assert_grid_invariant("async", None, 6, 3, &full_grid());
+    assert!(has_kind(&golden.events, EventKind::ClientFinish));
+    assert!(has_kind(&golden.events, EventKind::TierFlush));
+    assert!(has_kind(&golden.events, EventKind::ServerBroadcast));
+    assert_stream_well_formed("async", &golden.events);
+    assert!(
+        golden.params.iter().all(|&b| f32::from_bits(b).is_finite()),
+        "async training must keep the global model finite"
+    );
+}
+
+#[test]
+fn straggler_heavy_event_trace_is_knob_invariant() {
+    let sc = Scenario::parse(STRAGGLER_HEAVY_TOML).expect("committed scenario parses");
+    assert_eq!(sc.total_clients(), 6);
+    assert!(sc.deadline_secs.is_some() && !sc.links.is_empty());
+    let golden = assert_grid_invariant("straggler-heavy", Some(&sc), 6, 4, &small_grid());
+    assert_stream_well_formed("straggler-heavy", &golden.events);
+}
+
+/// The acceptance pin: on the committed straggler-heavy scenario the async
+/// tier engine's makespan strictly beats both synchronous deadline
+/// policies, final loss is no worse than `drop`'s, and the recorded event
+/// stream is bit-identical across engine knobs. Exactly the probe the
+/// `async_tiers` object in `BENCH_hotpath.json` records.
+#[test]
+fn straggler_heavy_async_beats_both_sync_policies() {
+    let at = harness::measure_async_throughput(8).expect("async throughput probe");
+    assert!(at.events > 0, "the async leg must process events");
+    assert!(at.bit_identical, "async legs on different knobs must agree byte for byte");
+    assert!(
+        at.async_sim_secs < at.drop_sim_secs,
+        "async makespan must beat the sync drop policy ({} vs {})",
+        at.async_sim_secs,
+        at.drop_sim_secs
+    );
+    assert!(
+        at.drop_sim_secs < at.wait_sim_secs,
+        "dropping stragglers must beat waiting on them ({} vs {})",
+        at.drop_sim_secs,
+        at.wait_sim_secs
+    );
+    assert!(
+        at.async_final_test_loss <= at.drop_final_test_loss + 0.05,
+        "async final loss must be no worse than drop's ({} vs {})",
+        at.async_final_test_loss,
+        at.drop_final_test_loss
+    );
+}
+
+/// A tier whose every client churns out keeps flushing on cadence with an
+/// empty buffer: β = 0 rows that carry the tier model forward unchanged
+/// (same checksum as the previous flush) instead of stalling or resetting.
+#[test]
+fn fully_churned_out_tier_carries_model_forward() {
+    let mut ephemeral = CohortSpec::new("ephemeral", 4, 1.0, 20.0);
+    ephemeral.depart = Some(1); // everyone gone after the first window
+    let sc = Scenario {
+        name: "churn-out".into(),
+        seed: 7,
+        deadline_secs: None,
+        on_deadline: DeadlinePolicy::Drop,
+        delta_downlink: false,
+        cohorts: vec![ephemeral],
+        links: vec![],
+    };
+    let t = run_async(Some(sc), 4, 4, 4, REFERENCE);
+    assert_eq!(t.windows.len(), 4, "the horizon is fully simulated despite the churn-out");
+    let flushes: Vec<&EventRecord> =
+        t.events.iter().filter(|e| e.kind == EventKind::TierFlush).collect();
+    assert!(
+        flushes.iter().any(|e| e.staleness_bits == 0.0f64.to_bits()),
+        "a fully-departed tier must flush empty (β = 0) at least once"
+    );
+    // carry-forward: an empty flush leaves the model checksum exactly
+    // where the same tier's previous flush left it
+    let mut carried = 0usize;
+    for (i, e) in flushes.iter().enumerate().skip(1) {
+        if e.staleness_bits == 0.0f64.to_bits() {
+            let prev = flushes[..i].iter().rev().find(|p| p.tier == e.tier);
+            if let Some(p) = prev {
+                assert_eq!(
+                    e.checksum, p.checksum,
+                    "empty flush of tier {} must carry the model forward",
+                    e.tier
+                );
+                carried += 1;
+            }
+        }
+    }
+    assert!(carried > 0, "at least one empty flush follows a previous flush of its tier");
+    assert!(t.params.iter().all(|&b| f32::from_bits(b).is_finite()));
+}
+
+/// Quarantined non-finite updates never enter a cross-tier merge: with
+/// every client NaN-poisoned, every flush is an empty carry-forward, the
+/// global model never moves, and every parameter stays finite.
+#[test]
+fn quarantined_updates_never_enter_a_merge() {
+    let mut poisoned = CohortSpec::new("poisoned", 3, 1.0, 20.0);
+    poisoned.corrupt_prob = 1.0;
+    poisoned.corrupt_mode = CorruptMode::Nan;
+    let sc = Scenario {
+        name: "all-poisoned".into(),
+        seed: 11,
+        deadline_secs: None,
+        on_deadline: DeadlinePolicy::Drop,
+        delta_downlink: false,
+        cohorts: vec![poisoned],
+        links: vec![],
+    };
+    let t = run_async(Some(sc), 3, 3, 1, REFERENCE);
+    let quarantined: usize = t.windows.iter().map(|w| w.quarantined).sum();
+    assert!(quarantined > 0, "every delivered NaN update must be quarantined");
+    let flushes: Vec<&EventRecord> =
+        t.events.iter().filter(|e| e.kind == EventKind::TierFlush).collect();
+    assert!(!flushes.is_empty());
+    for e in &flushes {
+        assert_eq!(
+            e.staleness_bits,
+            0.0f64.to_bits(),
+            "no poisoned update may reach a merge (β must stay 0)"
+        );
+    }
+    assert!(
+        flushes.iter().all(|e| e.checksum == flushes[0].checksum),
+        "with nothing merged the global checksum never changes"
+    );
+    assert!(
+        t.windows.iter().all(|w| w.staleness == 0.0f64.to_bits()),
+        "no merge means no staleness signal"
+    );
+    assert!(
+        t.params.iter().all(|&b| f32::from_bits(b).is_finite()),
+        "quarantine must keep the global model finite"
+    );
+}
+
+/// The `wait`-policy accounting fix: a flaky uplink's retry backoff is
+/// charged exactly once in virtual time, not once per flush window the
+/// attempt spans. Two sessions identical except the backoff base must
+/// differ in the flaky client's first finish time by exactly
+/// `B·(2^(retry_max+1) − 1)` — the one-shot exponential backoff sum —
+/// even though that span crosses tier-flush boundaries, and the flush
+/// stream itself must be untouched (the lost update never merges).
+#[test]
+fn retry_backoff_is_charged_once_across_flush_windows() {
+    let session = |backoff: f64| {
+        let steady = CohortSpec::new("steady", 3, 1.0, 2.0);
+        let mut flaky = CohortSpec::new("flaky", 1, 1.0, 2.0);
+        flaky.link_fail_prob = 1.0; // every attempt fails, deterministically
+        flaky.retry_max = 2;
+        flaky.retry_backoff_secs = backoff;
+        let sc = Scenario {
+            name: "flaky-charge".into(),
+            seed: 3,
+            deadline_secs: None,
+            on_deadline: DeadlinePolicy::Wait,
+            delta_downlink: false,
+            cohorts: vec![steady, flaky],
+            links: vec![],
+        };
+        run_async(Some(sc), 4, 24, 24, REFERENCE)
+    };
+    let base = session(0.0);
+    let charged = session(0.5);
+    let first_finish = |t: &AsyncTrace| {
+        t.events
+            .iter()
+            .find(|e| e.kind == EventKind::ClientFinish && e.client == 3)
+            .map(|e| (f64::from_bits(e.time_bits), e.tier))
+            .expect("the flaky client's first finish lands within the horizon")
+    };
+    let (t0, tier) = first_finish(&base);
+    let (t1, _) = first_finish(&charged);
+    // backoff 0.5 doubling per failed attempt, retry_max + 1 = 3 failures:
+    // 0.5 + 1.0 + 2.0 = 3.5 s, charged exactly once
+    let expected = 0.5 * (1.0 + 2.0 + 4.0);
+    assert!(
+        ((t1 - t0) - expected).abs() < 1e-9,
+        "retry backoff must be charged once: finish delta {} vs expected {expected}",
+        t1 - t0
+    );
+    // the charged attempt really does span tier-flush boundaries
+    let flushes_crossed = charged
+        .events
+        .iter()
+        .filter(|e| {
+            e.kind == EventKind::TierFlush && e.tier == tier && f64::from_bits(e.time_bits) < t1
+        })
+        .count();
+    assert!(
+        flushes_crossed >= 1,
+        "the flaky attempt must cross at least one tier-flush boundary"
+    );
+    // the lost update never merges, so the flush/broadcast stream (β values
+    // and checksums) is identical whatever the backoff costs
+    let merges = |t: &AsyncTrace| -> Vec<EventRecord> {
+        t.events.iter().filter(|e| e.kind != EventKind::ClientFinish).cloned().collect()
+    };
+    assert_eq!(merges(&base), merges(&charged), "backoff accounting must not leak into merges");
+    let retries: usize = charged.windows.iter().map(|w| w.retries).sum();
+    assert!(retries > 0, "the failed attempts must be charged as retries");
+}

@@ -133,9 +133,9 @@ fn bench_round_smoke_writes_hotpath_json() {
     use std::time::Duration;
 
     use dtfl::harness::{
-        kernels_to_json, measure_fused_throughput, measure_kernel_throughput,
-        measure_pipeline_throughput, measure_robustness_throughput, measure_round_throughput,
-        measure_scenario_throughput, measure_simd_throughput,
+        kernels_to_json, measure_async_throughput, measure_fused_throughput,
+        measure_kernel_throughput, measure_pipeline_throughput, measure_robustness_throughput,
+        measure_round_throughput, measure_scenario_throughput, measure_simd_throughput,
     };
     use dtfl::runtime::kernels::tune;
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
@@ -182,6 +182,15 @@ fn bench_round_smoke_writes_hotpath_json() {
     let sd = measure_simd_throughput(Duration::from_millis(60)).expect("simd throughput probe");
     assert!(sd.bit_identical, "every dispatch level must match scalar bits");
 
+    let at = measure_async_throughput(6).expect("async tiers probe");
+    assert!(at.bit_identical, "async event trace must be knob-invariant");
+    assert!(
+        at.async_sim_secs < at.drop_sim_secs,
+        "async makespan ({:.2}s) must beat the sync drop policy ({:.2}s)",
+        at.async_sim_secs,
+        at.drop_sim_secs
+    );
+
     let mut report = BenchReport::new();
     // keep any full `cargo bench` micro-bench entries already on disk
     report.preserve_entries_from(hotpath_report_path());
@@ -193,5 +202,6 @@ fn bench_round_smoke_writes_hotpath_json() {
     report.extra("robustness", rb.to_json(source));
     report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
     report.extra("simd", sd.to_json(source));
+    report.extra("async_tiers", at.to_json(source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }
