@@ -31,6 +31,7 @@ use dtfl::harness::{
     kernels_to_json, measure_async_throughput, measure_fused_throughput,
     measure_kernel_throughput, measure_pipeline_throughput, measure_robustness_throughput,
     measure_round_throughput, measure_scenario_throughput, measure_simd_throughput,
+    measure_wire_efficiency,
 };
 use dtfl::runtime::kernels::tune;
 use dtfl::runtime::{literal as lit, Metadata};
@@ -218,6 +219,36 @@ fn bench_async_tiers(report: &mut BenchReport, rounds: usize) {
     report.extra("async_tiers", at.to_json("cargo bench micro_hotpath"));
 }
 
+/// Uplink-codec probe: per-codec uplink bytes plus the final loss on the
+/// committed straggler-heavy scenario (shared probe in
+/// `harness::measure_wire_efficiency`).
+fn bench_wire_efficiency(report: &mut BenchReport, rounds: usize) {
+    section("bench_wire_efficiency: uplink codecs on the straggler-heavy fleet");
+    let we = measure_wire_efficiency(rounds).expect("wire efficiency probe");
+    assert!(we.bit_identical, "lossless uplink delta must match the raw leg bit-for-bit");
+    assert!(
+        we.delta_up_bytes < we.raw_up_bytes,
+        "uplink delta must save bytes ({} vs {})",
+        we.delta_up_bytes,
+        we.raw_up_bytes
+    );
+    println!(
+        "{}: K={} up-bytes raw {} / delta {} ({:.1}% saved) / int8 {} / topk {}",
+        we.name,
+        we.clients,
+        we.raw_up_bytes,
+        we.delta_up_bytes,
+        100.0 * we.delta_saved_ratio(),
+        we.int8_up_bytes,
+        we.topk_up_bytes
+    );
+    println!(
+        "final train loss: raw {:.4} / delta {:.4} / int8 {:.4} / topk {:.4}",
+        we.raw_final_loss, we.delta_final_loss, we.int8_final_loss, we.topk_final_loss
+    );
+    report.extra("wire_efficiency", we.to_json("cargo bench micro_hotpath"));
+}
+
 /// Round-throughput comparison: K clients, 1 thread vs all cores (shared
 /// probe in `harness::measure_round_throughput`).
 fn bench_round(report: &mut BenchReport, clients: usize, rounds: usize) {
@@ -381,6 +412,9 @@ fn main() {
 
     // ---------------- async tier engine + event queue ----------------
     bench_async_tiers(&mut report, 8);
+
+    // ---------------- uplink codec family + wire accounting ----------------
+    bench_wire_efficiency(&mut report, 6);
 
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -37,6 +37,16 @@ pub fn local_full_train(
         let out = engine.full_step(&mut state, env.lr, &bt.x, &bt.y, sgd)?;
         host += out.host_secs;
         loss = out.loss as f64;
+        if env.prox_mu != 0.0 {
+            // FedProx: pull back toward the round's downloaded model after
+            // every local step (`global` is the download — no extra clone)
+            crate::coordinator::uplink::apply_prox(
+                &mut state.params,
+                global,
+                env.lr,
+                env.prox_mu,
+            );
+        }
     }
     Ok((state.params, host, loss))
 }
@@ -72,11 +82,17 @@ pub fn local_full_train(
 ///
 /// Returns the (unfinished) accumulator and the round outcome with
 /// `tiers` left empty (the caller fills it).
+/// `codec_prefix` is the leading slice of the trained vector that
+/// physically crosses the wire (the whole model for FedAvg/FedYogi, the
+/// client-side prefix for SplitFed): the uplink codec sizes — and, for
+/// the lossy tracks, transforms — exactly that slice against the same
+/// prefix of `global`, capped at the raw `up_bytes` accounting.
 pub fn run_full_model_round(
     env: &RoundEnv,
     global: &[f32],
     sgd: bool,
     up_bytes: usize,
+    codec_prefix: usize,
     bytes_of: impl Fn(usize) -> u64 + Sync,
     mut time_of: impl FnMut(usize, f64, u64) -> ClientRoundTime,
 ) -> Result<(WeightedAvg, RoundOutcome)> {
@@ -102,15 +118,24 @@ pub fn run_full_model_round(
                 if let Some(mode) = fault.corrupt {
                     mode.poison(&mut params);
                 }
-                Ok(Some((k, params, host, loss, bytes_of(k))))
+                // uplink codec AFTER poisoning: a poisoned update passes
+                // through raw so the sink's quarantine sees it unchanged
+                let up_coded = match env.uplink {
+                    Some(_) => {
+                        let p = codec_prefix.min(params.len());
+                        env.uplink_bytes(k, &global[..p], &mut params[..p], up_bytes)
+                    }
+                    None => up_bytes,
+                };
+                Ok(Some((k, params, host, loss, bytes_of(k), up_coded)))
             }
             PoolTask::Prefetch { k, bi } => {
                 env.run_prefetch(*k, *bi)?;
                 Ok(None)
             }
         },
-        |_, item: Option<(usize, Vec<f32>, f64, f64, u64)>| {
-            let Some((k, params, host, loss, bytes)) = item else {
+        |_, item: Option<(usize, Vec<f32>, f64, f64, u64, usize)>| {
+            let Some((k, params, host, loss, bytes, up_coded)) = item else {
                 return Ok(());
             };
             let fault = env.fault(k);
@@ -121,6 +146,7 @@ pub fn run_full_model_round(
             let straggle = env.apply_deadline(&mut time);
             outcome.times.push(time);
             outcome.wire_bytes += bytes;
+            outcome.up_wire_bytes += (up_coded * (1 + retries)) as u64;
             outcome.retries += retries;
             loss_sum += loss;
             if straggle.straggled() {

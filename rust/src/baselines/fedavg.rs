@@ -42,6 +42,8 @@ impl Method for FedAvg {
             false,
             // retried uplink attempts re-send the whole model
             full,
+            // the whole model crosses the wire: codec over the full vector
+            global.len(),
             // scenario hooks: the download leg is delta-sized vs the
             // client's last-seen snapshot (computed on worker threads — a
             // full-model scan), and the link may vary per round

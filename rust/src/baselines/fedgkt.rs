@@ -54,6 +54,8 @@ struct GktBundle {
     retries: usize,
     /// Every uplink attempt failed: time spent, update never delivered.
     lost: bool,
+    /// Codec-sized client→server model bytes (retried sends included).
+    up_bytes: u64,
 }
 
 impl Method for FedGkt {
@@ -78,6 +80,7 @@ impl Method for FedGkt {
         let mut straggled = Vec::new();
         let mut quarantined = 0usize;
         let mut retries = 0usize;
+        let mut up_wire_bytes = 0u64;
         for_each_streamed_windowed(
             env.threads,
             env.pipeline_depth.saturating_sub(1),
@@ -104,6 +107,11 @@ impl Method for FedGkt {
                 let mut cstate = TrainState::new(global.client_vec(meta, tier));
                 let mut sstate = TrainState::new(global.server_vec(meta, tier));
 
+                // FedProx anchor / uplink-codec base: the downloaded
+                // client-side model (cloned only when a consumer needs it)
+                let base_client = (env.prox_mu != 0.0 || env.uplink.is_some())
+                    .then(|| cstate.params.clone());
+
                 let mut host_client = 0.0f64;
                 let mut host_server = 0.0f64;
                 let mut loss = 0.0f64;
@@ -113,6 +121,15 @@ impl Method for FedGkt {
                     let out = engine.client_step(tier, &mut cstate, env.lr, &bt.x, &bt.y, None)?;
                     host_client += out.host_secs;
                     loss += out.loss as f64 / nb as f64;
+                    if env.prox_mu != 0.0 {
+                        // FedProx: client-side pull toward the download
+                        crate::coordinator::uplink::apply_prox(
+                            &mut cstate.params,
+                            base_client.as_deref().expect("prox base cloned above"),
+                            env.lr,
+                            env.prox_mu,
+                        );
+                    }
                     zs.push((out.z, bt));
                 }
                 // server distillation: multiple passes over the uploaded features
@@ -135,6 +152,12 @@ impl Method for FedGkt {
                 let logit_bytes = batch * meta.num_classes * 4;
                 let down_full = tmeta.model_transfer_bytes / 2;
                 let up = tmeta.model_transfer_bytes - down_full;
+                // uplink codec on the client-held half, after poisoning so
+                // the quarantine sees a poisoned update unchanged
+                let up_coded = match &base_client {
+                    Some(base) => env.uplink_bytes(k, base, &mut cstate.params, up),
+                    None => up,
+                };
                 let down =
                     env.downlink_bytes(k, down_full, &global.flat[..meta.cut_offset(tier)]);
                 let bytes = down + up + nb * (tmeta.z_bytes_per_batch + 2 * logit_bytes);
@@ -145,6 +168,7 @@ impl Method for FedGkt {
                 let (retry_secs, retries) = env.uplink_retry(k, up);
                 let sim_com = env.comm_secs(k, bytes) + retry_secs;
                 let bytes = bytes + retries * up;
+                let up_bytes = (up_coded * (1 + retries)) as u64;
 
                 Ok(Some(GktBundle {
                     update: ClientUpdate {
@@ -159,6 +183,7 @@ impl Method for FedGkt {
                     bytes: bytes as u64,
                     retries,
                     lost: fault.uplink_lost,
+                    up_bytes,
                 }))
             },
             |_, b: Option<GktBundle>| {
@@ -167,6 +192,7 @@ impl Method for FedGkt {
                 times.push(b.time);
                 loss_sum += b.loss;
                 wire_bytes += b.bytes;
+                up_wire_bytes += b.up_bytes;
                 retries += b.retries;
                 if straggle.straggled() {
                     straggled.push(b.update.client_id);
@@ -203,12 +229,22 @@ impl Method for FedGkt {
                 straggled,
                 quarantined,
                 retries,
+                up_wire_bytes,
             };
             return Ok(out.with_no_update(env.round));
         }
         agg.finish_into(&self.global, &mut self.back)?;
         std::mem::swap(&mut self.global, &mut self.back);
-        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled, quarantined, retries })
+        Ok(RoundOutcome {
+            times,
+            train_loss,
+            tiers,
+            wire_bytes,
+            straggled,
+            quarantined,
+            retries,
+            up_wire_bytes,
+        })
     }
 
     fn global_params(&self) -> &[f32] {

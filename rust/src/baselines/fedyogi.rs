@@ -62,6 +62,8 @@ impl Method for FedYogi {
             true,
             // retried uplink attempts re-send the whole model
             full,
+            // the whole model crosses the wire: codec over the full vector
+            global.len(),
             |k| (env.downlink_bytes(k, full, global) + full) as u64,
             |k, host, bytes| {
                 let profile = env.profiles[k];

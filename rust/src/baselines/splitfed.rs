@@ -66,6 +66,9 @@ impl Method for SplitFed {
             global,
             false,
             up_leg,
+            // only the client-side prefix crosses the wire (the server
+            // trains its own half); the codec sizes that slice
+            t.cut_offset,
             // z and grad(z) have identical size; model down+up once per
             // round (download delta-sized vs the last-seen cut prefix in
             // scenario mode — a prefix scan, so it runs on worker threads)

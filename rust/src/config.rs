@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 
 use crate::anyhow::{Context, Result};
 
+use crate::coordinator::uplink::UplinkCodec;
 use crate::coordinator::FoldStrategy;
 use crate::simulation::{ProfilePool, Scenario};
 use crate::util::toml_mini::TomlDoc;
@@ -280,6 +281,9 @@ impl ExperimentConfig {
                     name
                 },
                 async_tiers: s.bool_or("async_tiers", false)?,
+                uplink: UplinkCodec::from_name(&s.str_or("uplink", "raw")?)
+                    .context("in [run] uplink")?,
+                prox_mu: s.f64_or("prox_mu", 0.0)? as f32,
             }
         };
         let sim = {
@@ -347,6 +351,11 @@ impl ExperimentConfig {
             self.run.pipeline_depth >= 1,
             "run.pipeline_depth must be >= 1 (1 = barrier engine)"
         );
+        crate::anyhow::ensure!(
+            self.run.prox_mu.is_finite() && self.run.prox_mu >= 0.0,
+            "run.prox_mu must be a finite weight >= 0 (got {})",
+            self.run.prox_mu
+        );
         if self.run.async_tiers {
             crate::anyhow::ensure!(
                 matches!(self.run.method.as_str(), "dtfl" | "static"),
@@ -397,6 +406,8 @@ mod tests {
         assert!(!cfg.run.async_tiers, "async tiers default off (sync engines unchanged)");
         assert_eq!(cfg.run.fold, FoldStrategy::Mean, "aggregation defaults to plain weighted mean");
         assert_eq!(cfg.run.simd, "auto", "SIMD dispatch defaults to runtime detection");
+        assert_eq!(cfg.run.uplink, UplinkCodec::Raw, "uplink codec defaults to raw uploads");
+        assert_eq!(cfg.run.prox_mu, 0.0, "proximal correction defaults off");
         assert!((cfg.run.lr - 1e-3).abs() < 1e-9);
         assert!(cfg.privacy.dcor_alpha.is_none());
         assert!(cfg.output.is_none());
@@ -484,6 +495,34 @@ mod tests {
         let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
         assert!(err.contains("sse9"), "error names the offender: {err}");
         assert!(err.contains("avx512"), "error lists the menu: {err}");
+    }
+
+    #[test]
+    fn uplink_codec_parses_and_rejects_unknown_names() {
+        for (name, codec) in [
+            ("delta", UplinkCodec::Delta),
+            ("int8", UplinkCodec::Int8),
+            ("topk", UplinkCodec::TopK),
+        ] {
+            let text = MINIMAL
+                .replace("method = \"dtfl\"", &format!("method = \"dtfl\"\nuplink = \"{name}\""));
+            let cfg = ExperimentConfig::parse(&text).unwrap();
+            assert_eq!(cfg.run.uplink, codec);
+        }
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nuplink = \"gzip\"");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("gzip"), "error names the offender: {err}");
+        assert!(err.contains("topk"), "error lists the menu: {err}");
+    }
+
+    #[test]
+    fn prox_mu_parses_and_rejects_negative() {
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nprox_mu = 0.01");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert!((cfg.run.prox_mu - 0.01).abs() < 1e-9);
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nprox_mu = -0.5");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("prox_mu"), "error names the knob: {err}");
     }
 
     #[test]

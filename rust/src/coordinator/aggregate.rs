@@ -51,7 +51,12 @@
 //!   weight crosses half the total mass;
 //! * **norm-clipped mean** — each update's flat vector is scaled down to
 //!   the fleet's weighted-median L2 norm before the usual weighted mean
-//!   (magnitude attacks neutralized, direction preserved).
+//!   (magnitude attacks neutralized, direction preserved);
+//! * **adaptive weighting** — updates whose norm exceeds the
+//!   weighted-median norm are attenuated in both the numerator and the
+//!   denominator (they lose their vote, not just their magnitude); norms
+//!   at or below the median fold with `scale == 1.0` exactly, so the
+//!   degenerate cases are bit-identical to the plain weighted mean.
 //!
 //! All three keep the pinned per-element reduction order: every element is
 //! computed by exactly one shard from the same sorted gather (or the same
@@ -88,6 +93,17 @@ pub enum FoldStrategy {
     /// Weighted mean after clipping every update's L2 norm to the fleet's
     /// weighted-median norm.
     NormClip,
+    /// Adaptive per-client weighting: updates whose L2 norm exceeds the
+    /// fleet's weighted-median norm are attenuated by `median / norm` in
+    /// **both** the numerator and the denominator — an outsized update
+    /// loses its vote instead of merely being shrunk (contrast
+    /// [`FoldStrategy::NormClip`], which keeps the client's full weight in
+    /// `Σ w`). Norms at or below the median keep `scale == 1.0` exactly, so
+    /// a single client, all-equal norms, or a zero-weight straggler reduce
+    /// bit-for-bit to the plain weighted mean. Staleness-aware by
+    /// composition: the async engine discounts `u.weight` before folding,
+    /// and the attenuation multiplies on top.
+    Adaptive,
 }
 
 impl FoldStrategy {
@@ -97,8 +113,10 @@ impl FoldStrategy {
             "trimmed_mean" => Ok(FoldStrategy::TrimmedMean),
             "median" => Ok(FoldStrategy::Median),
             "norm_clip" => Ok(FoldStrategy::NormClip),
+            "adaptive" => Ok(FoldStrategy::Adaptive),
             other => Err(crate::anyhow::anyhow!(
-                "unknown fold strategy '{other}' (valid: mean, trimmed_mean, median, norm_clip)"
+                "unknown fold strategy '{other}' (valid: mean, trimmed_mean, median, norm_clip, \
+                 adaptive)"
             )),
         }
     }
@@ -109,6 +127,7 @@ impl FoldStrategy {
             FoldStrategy::TrimmedMean => "trimmed_mean",
             FoldStrategy::Median => "median",
             FoldStrategy::NormClip => "norm_clip",
+            FoldStrategy::Adaptive => "adaptive",
         }
     }
 
@@ -313,10 +332,11 @@ fn robust_column(strategy: FoldStrategy, vals: &mut [(f32, f64)]) -> f32 {
             }
             vals[n - 1].0
         }
-        // Mean/NormClip are not per-column strategies; the plain weighted
-        // mean here keeps the function total (NormClip reuses `Median` on
-        // the norm column for its clip threshold).
-        FoldStrategy::Mean | FoldStrategy::NormClip => {
+        // Mean/NormClip/Adaptive are not per-column strategies; the plain
+        // weighted mean here keeps the function total (NormClip and
+        // Adaptive reuse `Median` on the norm column for their reference
+        // norm).
+        FoldStrategy::Mean | FoldStrategy::NormClip | FoldStrategy::Adaptive => {
             let mut num = 0.0f64;
             let mut den = 0.0f64;
             for &(v, w) in vals.iter() {
@@ -365,6 +385,55 @@ fn robust_refs_into(strategy: FoldStrategy, refs: &[RobustRef<'_>], out: &mut [f
                 .map(|(r, &n)| {
                     let scale = if n <= clip || n <= 0.0 { 1.0 } else { clip / n };
                     FoldRef { cut: r.cut, w: (r.w * scale) as f32, client: r.client, server: r.server }
+                })
+                .collect();
+            out.fill(0.0);
+            fold_refs(out, &folds, shards);
+            let inv = (1.0 / total_w) as f32;
+            if shards <= 1 {
+                for o in out.iter_mut() {
+                    *o *= inv;
+                }
+            } else {
+                let chunks = shard_chunks(out, shards);
+                join_scoped(chunks, |(_, chunk)| {
+                    for o in chunk.iter_mut() {
+                        *o *= inv;
+                    }
+                });
+            }
+        }
+        FoldStrategy::Adaptive => {
+            // reference norm = weighted median of the updates' L2 norms,
+            // computed over the same f32-rounded column NormClip uses
+            let norms: Vec<f64> = refs.iter().map(RobustRef::l2_norm).collect();
+            let mut norm_col: Vec<(f32, f64)> =
+                norms.iter().zip(refs).map(|(&n, r)| (n as f32, r.w)).collect();
+            let m = robust_column(FoldStrategy::Median, &mut norm_col);
+            // Attenuate-only, and scale BOTH sides of the quotient: the
+            // numerator folds with `w·scale` and the denominator is
+            // `Σ w·scale`, so an outsized update loses influence instead of
+            // being clipped-but-fully-voting. The `nf <= m` comparison runs
+            // in f32 space (the space `m` lives in), so the degenerate
+            // cases — one client, all-equal norms — hit `scale == 1.0`
+            // exactly and the whole fold collapses, bit-for-bit, to the
+            // plain weighted mean's `w as f32` / `Σ w` arithmetic.
+            let scales: Vec<f64> = norms
+                .iter()
+                .map(|&n| {
+                    let nf = n as f32;
+                    if nf <= m || nf <= 0.0 { 1.0 } else { f64::from(m) / f64::from(nf) }
+                })
+                .collect();
+            let total_w: f64 = refs.iter().zip(&scales).map(|(r, &s)| r.w * s).sum();
+            let folds: Vec<FoldRef<'_>> = refs
+                .iter()
+                .zip(&scales)
+                .map(|(r, &s)| FoldRef {
+                    cut: r.cut,
+                    w: (r.w * s) as f32,
+                    client: r.client,
+                    server: r.server,
                 })
                 .collect();
             out.fill(0.0);
@@ -967,13 +1036,16 @@ mod tests {
             FoldStrategy::TrimmedMean,
             FoldStrategy::Median,
             FoldStrategy::NormClip,
+            FoldStrategy::Adaptive,
         ] {
             assert_eq!(FoldStrategy::from_name(s.name()).unwrap(), s);
         }
-        assert!(FoldStrategy::from_name("krum").is_err());
+        let err = FoldStrategy::from_name("krum").unwrap_err().to_string();
+        assert!(err.contains("adaptive"), "menu must list the new strategy: {err}");
         assert_eq!(FoldStrategy::default(), FoldStrategy::Mean);
         assert!(!FoldStrategy::Mean.is_robust());
         assert!(FoldStrategy::Median.is_robust());
+        assert!(FoldStrategy::Adaptive.is_robust());
     }
 
     #[test]
@@ -985,7 +1057,12 @@ mod tests {
             &meta,
         );
         let ups = mixed_updates(&meta, 9);
-        for strategy in [FoldStrategy::TrimmedMean, FoldStrategy::Median, FoldStrategy::NormClip] {
+        for strategy in [
+            FoldStrategy::TrimmedMean,
+            FoldStrategy::Median,
+            FoldStrategy::NormClip,
+            FoldStrategy::Adaptive,
+        ] {
             let mut r = Aggregator::with_strategy(&meta, 1, 1, strategy);
             for u in &ups {
                 r.fold(u).unwrap();
@@ -1081,7 +1158,12 @@ mod tests {
         let Some(meta) = tiny_meta() else { return };
         let prev = zero_prev(&meta);
         let ups = mixed_updates(&meta, 6);
-        for strategy in [FoldStrategy::TrimmedMean, FoldStrategy::Median, FoldStrategy::NormClip] {
+        for strategy in [
+            FoldStrategy::TrimmedMean,
+            FoldStrategy::Median,
+            FoldStrategy::NormClip,
+            FoldStrategy::Adaptive,
+        ] {
             let mut agg = Aggregator::with_strategy(&meta, 1, 1, strategy);
             for u in &ups {
                 agg.fold(u).unwrap();
@@ -1093,5 +1175,80 @@ mod tests {
                 assert_eq!(g.flat, out, "{} shards={shards}", strategy.name());
             }
         }
+    }
+
+    #[test]
+    fn adaptive_degenerate_cases_are_bitwise_mean() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = GlobalModel::new(
+            vec![0.0; meta.total_params],
+            meta.tiers.iter().map(|t| vec![0.25; t.aux_len]).collect(),
+            &meta,
+        );
+        // single client: the median norm IS the client's norm → scale 1.0;
+        // all-equal norms: fills of equal magnitude (mixed sign/weight)
+        // reconstitute to the same L2 norm in every tier → scale 1.0
+        let single = vec![update(&meta, 4, -2.5, 3.0, 0)];
+        let equal = vec![
+            update(&meta, 1, 1.25, 2.0, 0),
+            update(&meta, 3, -1.25, 5.0, 1),
+            update(&meta, 7, 1.25, 1.0, 2),
+        ];
+        for ups in [single, equal] {
+            let mut mean = Aggregator::new(&meta);
+            let mut adaptive = Aggregator::with_strategy(&meta, 1, 1, FoldStrategy::Adaptive);
+            for u in &ups {
+                mean.fold(u).unwrap();
+                adaptive.fold(u).unwrap();
+            }
+            let gm = mean.finish(&prev).unwrap();
+            let ga = adaptive.finish(&prev).unwrap();
+            assert_eq!(gm.flat, ga.flat, "adaptive must collapse to the mean bit-for-bit");
+            assert_eq!(gm.aux, ga.aux);
+        }
+    }
+
+    #[test]
+    fn adaptive_zero_weight_client_reduces_to_the_weighted_mean() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = zero_prev(&meta);
+        // three positive-weight clients with equal-magnitude norms
+        // (scale == 1.0 for each), plus one zero-weight client with a huge
+        // norm — its scaled weight is 0 either way, so the adaptive fold
+        // must bit-match the plain mean over the positive-weight clients
+        let mut ups = vec![
+            update(&meta, 2, 1.5, 2.0, 0),
+            update(&meta, 5, -1.5, 1.0, 1),
+            update(&meta, 7, 1.5, 4.0, 2),
+        ];
+        let reference = aggregate(&meta, &prev, &ups).unwrap();
+        ups.push(update(&meta, 3, 500.0, 0.0, 3));
+        for shards in [1usize, 3, 0] {
+            let mut out = vec![f32::NAN; meta.total_params];
+            fold_updates_robust(&meta, &mut out, &ups, shards, FoldStrategy::Adaptive);
+            assert_eq!(reference.flat, out, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn adaptive_discounts_a_magnitude_attacker_vote_and_value() {
+        let Some(meta) = tiny_meta() else { return };
+        let prev = zero_prev(&meta);
+        let mut ups: Vec<ClientUpdate> =
+            (0..4).map(|i| update(&meta, 3, 1.0, 1.0, i)).collect();
+        ups.push(update(&meta, 3, 1000.0, 1.0, 9));
+        let mean = aggregate(&meta, &prev, &ups).unwrap();
+        assert!(mean.flat.iter().all(|&v| v > 20.0), "mean should be poisoned");
+        let mut agg = Aggregator::with_strategy(&meta, 1, 1, FoldStrategy::Adaptive);
+        for u in &ups {
+            agg.fold(u).unwrap();
+        }
+        let g = agg.finish(&prev).unwrap();
+        // the attacker folds at median-norm magnitude but with a ~1/1000
+        // vote: (4·1 + 1) / 4.001 ≈ 1.25, far from the poisoned mean ≈ 200
+        assert!(
+            g.flat.iter().all(|&v| (v - 1.0).abs() < 0.5),
+            "adaptive should hold near the honest value"
+        );
     }
 }

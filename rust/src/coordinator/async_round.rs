@@ -56,6 +56,7 @@ use super::model_state::GlobalModel;
 use super::round::{run_client, ClientBundle, ClientTask, Dtfl};
 use super::scheduler::{estimate_round_time, schedule, ClientLoad};
 use super::snapshot_delta::DeltaTracker;
+use super::uplink::UplinkSession;
 
 /// Everything the async driver borrows from the experiment for one
 /// session. A trimmed [`RoundEnv`] is derived from this per client start.
@@ -78,6 +79,11 @@ pub struct AsyncCtx<'a> {
     pub pipeline_depth: usize,
     pub agg_shards: usize,
     pub fold: FoldStrategy,
+    /// Uplink codec session (`None` = raw); per-client error-feedback
+    /// residuals live here across starts, exactly like the sync engines.
+    pub uplink: Option<&'a UplinkSession>,
+    /// FedProx proximal coefficient (0 = off, the bit-exact default).
+    pub prox_mu: f32,
     /// The scenario spec (churn schedule lookups); `None` = static fleet.
     pub scenario: Option<&'a Scenario>,
     /// Pre-generated per-window scenario state, `rounds` entries (links,
@@ -94,6 +100,9 @@ pub struct AsyncWindow {
     /// Tier of each update delivered in this window.
     pub tiers: Vec<usize>,
     pub wire_bytes: u64,
+    /// Uplink bytes after the configured codec (= the raw uplink budget
+    /// when `run.uplink = raw`); `wire_bytes` stays codec-invariant.
+    pub up_wire_bytes: u64,
     /// Updates merged with staleness d > 0 (carried forward, not dropped).
     pub straggled: usize,
     pub quarantined: usize,
@@ -183,6 +192,8 @@ fn env_at<'e>(
         scenario: sr,
         downlink: delta,
         fold: ctx.fold,
+        uplink: ctx.uplink,
+        prox_mu: ctx.prox_mu,
     }
 }
 
@@ -263,6 +274,7 @@ where
         train_loss: a.loss_sum / a.delivered.max(1) as f64,
         tiers: a.tiers,
         wire_bytes: a.wire_bytes,
+        up_wire_bytes: a.up_wire_bytes,
         straggled: a.straggled,
         quarantined: a.quarantined,
         retries: a.retries,
@@ -280,6 +292,7 @@ struct WindowAccum {
     delivered: usize,
     tiers: Vec<usize>,
     wire_bytes: u64,
+    up_wire_bytes: u64,
     retries: usize,
     straggled: usize,
     quarantined: usize,
@@ -419,10 +432,23 @@ where
                 acc.delivered += 1;
                 acc.tiers.push(b.tier);
                 acc.wire_bytes += b.bytes;
+                acc.up_wire_bytes += b.up_bytes;
                 acc.retries += b.retries;
                 let d = flushes_done[ti] - slots[k].start_flushes;
                 let s_w = staleness_weight(d);
                 let still_active = active_at(ctx, k, w);
+                if !still_active {
+                    // the client churned out mid-flight: drop its pinned
+                    // downlink base snapshot and any uplink residual — a
+                    // departed device does not keep codec state, and a
+                    // rejoin re-seeds both from a fresh full broadcast
+                    if let Some(dl) = delta.as_deref_mut() {
+                        dl.evict(k);
+                    }
+                    if let Some(up) = ctx.uplink {
+                        up.evict(k);
+                    }
+                }
                 if !b.lost && still_active {
                     if b.update.first_non_finite().is_some() {
                         // poisoned update: quarantined at delivery — it

@@ -12,7 +12,10 @@
 //! * `model_state`/`aggregate` — flat-layout model halves and the
 //!   pipelined, sharded streaming weighted-average global update (step ⑤);
 //! * `snapshot_delta` — bitwise-lossless delta codec for the simulated
-//!   downlink broadcast + per-client last-seen snapshot tracking.
+//!   downlink broadcast + per-client last-seen snapshot tracking;
+//! * `uplink` — the client→server codec family (lossless XOR delta plus
+//!   opt-in lossy int8 / top-k tracks with error feedback) and the
+//!   FedProx proximal helper.
 
 pub mod aggregate;
 pub mod async_round;
@@ -22,12 +25,14 @@ pub mod profiler;
 pub mod round;
 pub mod scheduler;
 pub mod snapshot_delta;
+pub mod uplink;
 
 pub use aggregate::{
     aggregate, fold_updates_robust, fold_updates_sharded, Aggregator, FoldStrategy,
 };
 pub use async_round::{run_async_tiers, AsyncCtx, AsyncRun, AsyncWindow};
 pub use snapshot_delta::{DeltaTracker, SnapshotDelta};
+pub use uplink::{UplinkCodec, UplinkSession};
 pub use model_state::{ClientUpdate, GlobalModel};
 pub use parallel::{
     for_each_streamed, for_each_streamed_windowed, join_scoped, resolve_shards, resolve_threads,

@@ -193,6 +193,9 @@ pub(crate) struct ClientBundle {
     /// Every uplink attempt failed: the time was spent but the update never
     /// reached the server.
     pub(crate) lost: bool,
+    /// Codec-sized client→server bytes (retried sends included); equals
+    /// the raw upload accounting under the `raw` codec.
+    pub(crate) up_bytes: u64,
 }
 
 /// Steps ①–④ for one client — a pure function of the global snapshot, the
@@ -215,6 +218,12 @@ pub(crate) fn run_client(
     let mut cstate = TrainState::new(global.client_vec(meta, tier));
     let mut sstate = TrainState::new(global.server_vec(meta, tier));
 
+    // the round's downloaded client-side base: the FedProx proximal anchor
+    // and the uplink codec's delta / error-feedback reference. Cloned only
+    // when a consumer is configured, so the default path allocates nothing.
+    let base_client = (env.prox_mu != 0.0 || env.uplink.is_some())
+        .then(|| cstate.params.clone());
+
     let mut host_client = 0.0f64;
     let mut host_server = 0.0f64;
     let mut last_loss = 0.0f64;
@@ -231,6 +240,17 @@ pub(crate) fn run_client(
         )?;
         host_client += cout.host_secs;
         last_loss = cout.loss as f64;
+        if env.prox_mu != 0.0 {
+            // FedProx: pull the client-side parameters back toward the
+            // round's download after every local step (client-side only —
+            // the server half trains at the server, which needs no anchor)
+            super::uplink::apply_prox(
+                &mut cstate.params,
+                base_client.as_deref().expect("prox base cloned above"),
+                env.lr,
+                env.prox_mu,
+            );
+        }
 
         // optional privacy transform on the uploaded activation
         let z = match env.privacy.patch_shuffle {
@@ -271,6 +291,18 @@ pub(crate) fn run_client(
     // function of immutable round state — safe on any worker thread)
     let down_full = tmeta.model_transfer_bytes / 2;
     let up = tmeta.model_transfer_bytes - down_full;
+    // uplink codec on the client-held half that crosses the wire: the lossy
+    // tracks transform the trained vector in place (the aggregated update
+    // is exactly the server-side reconstruction), the lossless tracks only
+    // account bytes. Runs AFTER fault poisoning so a poisoned update passes
+    // through raw and the quarantine sees it unchanged. Timing and
+    // `wire_bytes` stay on the raw protocol for every codec, so the
+    // profiler's observations — and the whole trace — are codec-invariant
+    // on the lossless tracks.
+    let up_coded = match &base_client {
+        Some(base) => env.uplink_bytes(k, base, &mut cstate.params, up),
+        None => up,
+    };
     let down = env.downlink_bytes(k, down_full, &global.flat[..meta.cut_offset(tier)]);
     let bytes = down + up + nb * tmeta.z_bytes_per_batch;
     // flaky uplink: every failed attempt re-sends the upload and waits an
@@ -279,6 +311,7 @@ pub(crate) fn run_client(
     let (retry_secs, retries) = env.uplink_retry(k, up);
     let sim_com = env.comm_secs(k, bytes) + retry_secs;
     let bytes = bytes + retries * up;
+    let up_bytes = (up_coded * (1 + retries)) as u64;
     let obs = (nb > 0).then(|| {
         // per-batch compute + measured link speed
         (sim_c / nb as f64, bytes as f64 / sim_com.max(1e-9))
@@ -299,6 +332,7 @@ pub(crate) fn run_client(
         obs,
         retries,
         lost: fault.uplink_lost,
+        up_bytes,
     })
 }
 
@@ -350,6 +384,7 @@ impl Method for Dtfl {
         let mut straggled = Vec::new();
         let mut quarantined = 0usize;
         let mut retries = 0usize;
+        let mut up_wire_bytes = 0u64;
         for_each_streamed_windowed(
             env.threads,
             env.pipeline_depth.saturating_sub(1),
@@ -381,6 +416,7 @@ impl Method for Dtfl {
                 tiers.push(b.tier);
                 loss_sum += b.last_loss;
                 wire_bytes += b.bytes;
+                up_wire_bytes += b.up_bytes;
                 retries += b.retries;
                 if straggle.straggled() {
                     straggled.push(b.update.client_id);
@@ -421,6 +457,7 @@ impl Method for Dtfl {
                 straggled,
                 quarantined,
                 retries,
+                up_wire_bytes,
             };
             return Ok(out.with_no_update(env.round));
         }
@@ -430,7 +467,16 @@ impl Method for Dtfl {
         agg.finish_into(&self.global, &mut self.back)?;
         std::mem::swap(&mut self.global, &mut self.back);
 
-        Ok(RoundOutcome { times, train_loss, tiers, wire_bytes, straggled, quarantined, retries })
+        Ok(RoundOutcome {
+            times,
+            train_loss,
+            tiers,
+            wire_bytes,
+            straggled,
+            quarantined,
+            retries,
+            up_wire_bytes,
+        })
     }
 
     fn global_params(&self) -> &[f32] {

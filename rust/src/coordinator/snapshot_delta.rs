@@ -79,6 +79,12 @@ impl SnapshotDelta {
     pub fn as_bytes(&self) -> &[u8] {
         &self.bytes
     }
+
+    /// Wrap a received byte stream for [`apply`] (the uplink codec embeds
+    /// delta streams inside its own framing; `apply` validates the bytes).
+    pub fn from_bytes(bytes: Vec<u8>) -> Self {
+        Self { bytes }
+    }
 }
 
 fn varint_len(mut v: u32) -> usize {
@@ -342,6 +348,18 @@ impl DeltaTracker {
     /// Whether client `k` has a snapshot to delta against.
     pub fn has_snapshot(&self, k: usize) -> bool {
         self.last_seen.get(k).and_then(|s| s.as_ref()).is_some()
+    }
+
+    /// Drop client `k`'s snapshot. Called when the scenario engine churns
+    /// the client out (`depart`): without eviction a departed client pins
+    /// its full model snapshot for the rest of the run — pure leaked
+    /// memory, since only `note_broadcast` (never reached for inactive
+    /// clients) could touch the slot again. Idempotent, and invisible to
+    /// byte accounting: an inactive client downloads nothing.
+    pub fn evict(&mut self, k: usize) {
+        if let Some(slot) = self.last_seen.get_mut(k) {
+            *slot = None;
+        }
     }
 }
 

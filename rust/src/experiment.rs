@@ -13,6 +13,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::parallel::for_each_streamed;
 use crate::coordinator::{
     load_initial_model, run_async_tiers, AsyncCtx, AsyncRun, DeltaTracker, Dtfl, DtflOptions,
+    UplinkCodec, UplinkSession,
 };
 use crate::csv_row;
 use crate::data::{self, Batch, BatchCache, Dataset, DatasetSpec, Partition, PartitionScheme};
@@ -45,6 +46,11 @@ pub struct Experiment {
     /// Per-client last-seen snapshots for delta-downlink accounting
     /// (scenario mode with `delta_downlink = true`).
     delta: Option<DeltaTracker>,
+    /// Uplink codec session (`run.uplink != raw`): per-client
+    /// error-feedback residuals plus the codec itself. `None` keeps the
+    /// raw path allocation-free and trivially bit-identical to pre-codec
+    /// builds.
+    uplink: Option<UplinkSession>,
     /// The async session's event-sequence golden trace (empty in sync
     /// mode) — `tests/event_trace.rs` asserts it byte-for-byte.
     pub event_log: Vec<EventRecord>,
@@ -121,6 +127,12 @@ impl Experiment {
             .as_ref()
             .filter(|sc| sc.delta_downlink)
             .map(|sc| DeltaTracker::new(sc.total_clients()));
+        let fleet = scenario_spec
+            .as_ref()
+            .map(|sc| sc.total_clients())
+            .unwrap_or(cfg.clients.count);
+        let uplink = (cfg.run.uplink != UplinkCodec::Raw)
+            .then(|| UplinkSession::new(cfg.run.uplink, fleet));
         let scenario = scenario_spec.map(ScenarioEngine::new).transpose()?;
 
         // --- method ---
@@ -160,6 +172,7 @@ impl Experiment {
             env_dyn,
             scenario,
             delta,
+            uplink,
             event_log: Vec::new(),
             lr,
             plateau: 0,
@@ -229,6 +242,19 @@ impl Experiment {
         )
     }
 
+    /// Whether client `k` currently pins a downlink base snapshot
+    /// (`None` when delta downlink is off) — regression hook for the
+    /// scenario-depart eviction fix.
+    pub fn delta_has_snapshot(&self, k: usize) -> Option<bool> {
+        self.delta.as_ref().map(|t| t.has_snapshot(k))
+    }
+
+    /// Whether client `k` currently carries an uplink error-feedback
+    /// residual (`None` when the codec is raw).
+    pub fn uplink_has_residual(&self, k: usize) -> Option<bool> {
+        self.uplink.as_ref().map(|s| s.has_residual(k))
+    }
+
     /// Run the full experiment loop; returns the report.
     pub fn run(&mut self) -> Result<RunReport> {
         self.run_with(|_| {})
@@ -291,6 +317,8 @@ impl Experiment {
                     scenario: scenario_round.as_ref(),
                     downlink: self.delta.as_ref(),
                     fold: self.cfg.run.fold,
+                    uplink: self.uplink.as_ref(),
+                    prox_mu: self.cfg.run.prox_mu,
                 };
                 self.method.round(&mut env)?
             };
@@ -299,6 +327,24 @@ impl Experiment {
             if let (Some(t), Some(b)) = (self.delta.as_mut(), broadcast.as_ref()) {
                 for &k in &ids {
                     t.note_broadcast(k, b);
+                }
+            }
+            // scenario depart: a churned-out device does not keep codec
+            // state across its absence — drop its pinned downlink base
+            // snapshot and uplink residual so a rejoin re-seeds from a
+            // fresh full broadcast. (Bugfix: before this, a departed
+            // client pinned its snapshot for the rest of the run.)
+            if let Some(eng) = self.scenario.as_ref() {
+                let sc = eng.scenario();
+                for k in 0..self.profiles.len() {
+                    if !sc.active_at(k, r) {
+                        if let Some(t) = self.delta.as_mut() {
+                            t.evict(k);
+                        }
+                        if let Some(up) = self.uplink.as_ref() {
+                            up.evict(k);
+                        }
+                    }
                 }
             }
             let makespan = self.clock.advance_round(&outcome.times);
@@ -347,6 +393,8 @@ impl Experiment {
                 mean_tier,
                 tiers: outcome.tiers.clone(),
                 wire_bytes: outcome.wire_bytes,
+                up_wire_bytes: outcome.up_wire_bytes,
+                codec: self.cfg.run.uplink.name(),
                 straggled: outcome.straggled.len(),
                 quarantined: outcome.quarantined,
                 retries: outcome.retries,
@@ -387,6 +435,8 @@ impl Experiment {
                     rec.lr,
                     rec.mean_tier,
                     rec.wire_bytes,
+                    rec.up_wire_bytes,
+                    rec.codec,
                     rec.straggled,
                     rec.quarantined,
                     rec.retries,
@@ -464,6 +514,8 @@ impl Experiment {
                 pipeline_depth: self.cfg.run.pipeline_depth,
                 agg_shards: self.cfg.run.agg_shards,
                 fold: self.cfg.run.fold,
+                uplink: self.uplink.as_ref(),
+                prox_mu: self.cfg.run.prox_mu,
                 scenario: self.scenario.as_ref().map(|e| e.scenario()),
                 scenario_rounds: scen_rounds.as_deref(),
             };
@@ -508,6 +560,8 @@ impl Experiment {
                 mean_tier,
                 tiers: w.tiers.clone(),
                 wire_bytes: w.wire_bytes,
+                up_wire_bytes: w.up_wire_bytes,
+                codec: self.cfg.run.uplink.name(),
                 straggled: w.straggled,
                 quarantined: w.quarantined,
                 retries: w.retries,
@@ -535,6 +589,8 @@ impl Experiment {
                     rec.lr,
                     rec.mean_tier,
                     rec.wire_bytes,
+                    rec.up_wire_bytes,
+                    rec.codec,
                     rec.straggled,
                     rec.quarantined,
                     rec.retries,
@@ -577,6 +633,8 @@ impl Experiment {
                 "lr",
                 "mean_tier",
                 "wire_bytes",
+                "up_wire_bytes",
+                "codec",
                 "straggled",
                 "quarantined",
                 "retries",

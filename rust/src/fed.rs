@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::anyhow::Result;
 use crate::coordinator::snapshot_delta::DeltaTracker;
+use crate::coordinator::uplink::UplinkSession;
 use crate::coordinator::FoldStrategy;
 use crate::data::{Batch, BatchCache, Dataset, Partition};
 use crate::runtime::Runtime;
@@ -74,6 +75,12 @@ pub struct RoundEnv<'a> {
     /// default; robust strategies for Byzantine cohorts). `Mean` keeps the
     /// streaming aggregation path bit-for-bit.
     pub fold: FoldStrategy,
+    /// Uplink codec session (`[run] uplink`); `None` = raw uploads — the
+    /// legacy accounting and the legacy training bits.
+    pub uplink: Option<&'a UplinkSession>,
+    /// FedProx proximal weight μ (`[run] prox_mu`); 0 keeps the local step
+    /// loop bit-identical to the pre-prox path (engines gate on μ ≠ 0).
+    pub prox_mu: f32,
 }
 
 /// How many leading batches per next-round participant the engines warm
@@ -172,6 +179,18 @@ impl RoundEnv<'_> {
         (extra, f.uplink_failures)
     }
 
+    /// Simulated uplink bytes for client k's trained vector `cur` (the
+    /// client-held half/prefix that crosses the wire), transforming it in
+    /// place when a lossy codec is configured. `base` is the vector the
+    /// client downloaded this round; `raw_bytes` the uncompressed uplink
+    /// accounting for this payload (the result never exceeds it).
+    pub fn uplink_bytes(&self, k: usize, base: &[f32], cur: &mut [f32], raw_bytes: usize) -> usize {
+        match self.uplink {
+            Some(s) => s.encode_update(k, base, cur, raw_bytes),
+            None => raw_bytes,
+        }
+    }
+
     /// Deterministic RNG stream for client k this round: independent of
     /// scheduling/thread interleaving by construction.
     pub fn client_rng(&self, k: usize) -> Rng64 {
@@ -266,6 +285,13 @@ pub struct RoundOutcome {
     /// Total uplink retry attempts across participants this round (each one
     /// charged in simulated time via [`RoundEnv::uplink_retry`]).
     pub retries: usize,
+    /// Codec-sized client→server bytes this round (retried sends included).
+    /// Equals the uplink component of `wire_bytes` under the `raw` codec;
+    /// the coded tracks shrink only this column — `wire_bytes` and the
+    /// simulated timing stay on the raw protocol so the tier profiler's
+    /// observations (and therefore every trace) are codec-invariant for
+    /// the lossless tracks.
+    pub up_wire_bytes: u64,
 }
 
 impl RoundOutcome {
@@ -347,6 +373,8 @@ mod tests {
             scenario: None,
             downlink: None,
             fold: FoldStrategy::Mean,
+            uplink: None,
+            prox_mu: 0.0,
         };
         let mut a1 = env.client_rng(0);
         let mut a2 = env.client_rng(0);
@@ -406,6 +434,8 @@ mod tests {
             scenario: Some(&sr),
             downlink: None,
             fold: FoldStrategy::Mean,
+            uplink: None,
+            prox_mu: 0.0,
         };
         // per attempt: 0.1 latency + 1000·8 bits / 8 Mbps = 0.1 + 0.001
         let per_attempt = link.comm_secs(1000);

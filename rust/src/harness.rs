@@ -11,7 +11,7 @@ use crate::config::{
     ClientsCfg, DataCfg, ExperimentConfig, ModelCfg, OutputCfg, PrivacyCfgToml, RunCfg,
     ScenarioRef, SimCfg,
 };
-use crate::coordinator::{resolve_threads, FoldStrategy};
+use crate::coordinator::{resolve_threads, FoldStrategy, UplinkCodec};
 use crate::experiment::Experiment;
 use crate::metrics::{RoundRecord, RunReport};
 use crate::simulation::{ProfilePool, Scenario};
@@ -52,8 +52,16 @@ pub struct RunSpec {
     /// Fused forward path (gn/relu epilogues + 1×1 im2col elision);
     /// bit-identical either way, off only for bisection.
     pub fuse_forward: bool,
-    /// Server aggregation rule (mean | trimmed_mean | median | norm_clip).
+    /// Server aggregation rule (mean | trimmed_mean | median | norm_clip |
+    /// adaptive).
     pub fold: FoldStrategy,
+    /// Client→server update codec (raw | delta | int8 | topk). Lossless
+    /// tracks change only `up_wire_bytes`; the lossy tracks transform the
+    /// uploaded vector itself and carry their own golden traces.
+    pub uplink: UplinkCodec,
+    /// FedProx proximal coefficient, applied client-side in the step loop
+    /// (0 = off, bit-identical to the plain path).
+    pub prox_mu: f32,
     /// SIMD dispatch level ("auto" | "scalar" | "avx2" | "avx512" |
     /// "neon"); bit-identical at every level, a pure throughput knob.
     pub simd: String,
@@ -96,6 +104,8 @@ impl Default for RunSpec {
             agg_shards: 0,
             fuse_forward: true,
             fold: FoldStrategy::Mean,
+            uplink: UplinkCodec::Raw,
+            prox_mu: 0.0,
             simd: "auto".into(),
             async_tiers: false,
             lr: 1e-3,
@@ -151,6 +161,8 @@ impl RunSpec {
                 agg_shards: self.agg_shards,
                 fuse_forward: self.fuse_forward,
                 fold: self.fold,
+                uplink: self.uplink,
+                prox_mu: self.prox_mu,
                 simd: self.simd.clone(),
                 async_tiers: self.async_tiers,
             },
@@ -1136,6 +1148,122 @@ pub fn measure_async_throughput(rounds: usize) -> Result<AsyncTiersThroughput> {
         async_final_test_loss: last_loss(&async_recs),
         drop_final_test_loss: last_loss(&drop_recs),
         bit_identical: bits_eq(&async_params, &alt_params) && async_events == alt_events,
+    })
+}
+
+/// Result of the uplink-codec probe — the `wire_efficiency` object in
+/// `BENCH_hotpath.json`: the committed straggler-heavy scenario run once
+/// per uplink codec (raw / delta / int8 / topk), comparing total uplink
+/// bytes and final train loss. The lossless delta leg must be bit-identical
+/// to raw (params and final-loss bits) while spending strictly fewer uplink
+/// bytes; the lossy legs record their byte/loss trade-off.
+#[derive(Debug, Clone)]
+pub struct WireEfficiency {
+    pub name: String,
+    pub clients: usize,
+    pub rounds: usize,
+    /// Total `up_wire_bytes` per codec across the run.
+    pub raw_up_bytes: u64,
+    pub delta_up_bytes: u64,
+    pub int8_up_bytes: u64,
+    pub topk_up_bytes: u64,
+    /// Final train loss per codec (raw and delta must agree bit-for-bit).
+    pub raw_final_loss: f64,
+    pub delta_final_loss: f64,
+    pub int8_final_loss: f64,
+    pub topk_final_loss: f64,
+    /// Whether the raw and delta legs produced identical global parameter
+    /// bits AND identical final-loss bits (the lossless contract).
+    pub bit_identical: bool,
+}
+
+impl WireEfficiency {
+    /// Fraction of raw uplink traffic the lossless delta codec saves.
+    pub fn delta_saved_ratio(&self) -> f64 {
+        1.0 - self.delta_up_bytes as f64 / (self.raw_up_bytes as f64).max(1.0)
+    }
+
+    /// The `wire_efficiency` object recorded in `BENCH_hotpath.json`.
+    pub fn to_json(&self, source: &str) -> Json {
+        json::obj(vec![
+            ("name", json::s(self.name.clone())),
+            ("clients", json::num(self.clients as f64)),
+            ("rounds", json::num(self.rounds as f64)),
+            (
+                "up_bytes",
+                json::obj(vec![
+                    ("raw", json::num(self.raw_up_bytes as f64)),
+                    ("delta", json::num(self.delta_up_bytes as f64)),
+                    ("int8", json::num(self.int8_up_bytes as f64)),
+                    ("topk", json::num(self.topk_up_bytes as f64)),
+                    ("delta_saved_ratio", json::num(self.delta_saved_ratio())),
+                ]),
+            ),
+            (
+                "final_loss",
+                json::obj(vec![
+                    ("raw", json::num(self.raw_final_loss)),
+                    ("delta", json::num(self.delta_final_loss)),
+                    ("int8", json::num(self.int8_final_loss)),
+                    ("topk", json::num(self.topk_final_loss)),
+                ]),
+            ),
+            ("bit_identical", Json::Bool(self.bit_identical)),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Run the committed straggler-heavy scenario once per uplink codec under
+/// DTFL. Timing and `wire_bytes` charge the raw protocol for every codec
+/// (the tier profiler's observations stay codec-invariant), so the lossless
+/// delta leg must reproduce the raw leg bit-for-bit while `up_wire_bytes`
+/// drops; the int8/topk legs train on transformed updates and are recorded
+/// for their byte/loss trade-off, not for identity.
+pub fn measure_wire_efficiency(rounds: usize) -> Result<WireEfficiency> {
+    let scenario = Scenario::parse(STRAGGLER_HEAVY_TOML)?;
+    let clients = scenario.total_clients();
+    let run = |codec: UplinkCodec| -> Result<(Vec<RoundRecord>, Vec<f32>)> {
+        let spec = RunSpec {
+            method: "dtfl".into(),
+            clients,
+            rounds,
+            batch_cap: Some(1),
+            train_total: clients * 16,
+            test_total: 32,
+            eval_every: 1,
+            threads: 0,
+            uplink: codec,
+            scenario: Some(scenario.clone()),
+            ..Default::default()
+        };
+        let mut exp = Experiment::new(spec.to_config())?;
+        let mut records = Vec::new();
+        exp.run_with(|r| records.push(r.clone()))?;
+        Ok((records, exp.method.global_params().to_vec()))
+    };
+    let up = |recs: &[RoundRecord]| recs.iter().map(|r| r.up_wire_bytes).sum::<u64>();
+    let loss = |recs: &[RoundRecord]| recs.last().map(|r| r.train_loss).unwrap_or(f64::INFINITY);
+
+    let (raw_recs, raw_params) = run(UplinkCodec::Raw)?;
+    let (delta_recs, delta_params) = run(UplinkCodec::Delta)?;
+    let (int8_recs, _) = run(UplinkCodec::Int8)?;
+    let (topk_recs, _) = run(UplinkCodec::TopK)?;
+
+    Ok(WireEfficiency {
+        name: scenario.name.clone(),
+        clients,
+        rounds,
+        raw_up_bytes: up(&raw_recs),
+        delta_up_bytes: up(&delta_recs),
+        int8_up_bytes: up(&int8_recs),
+        topk_up_bytes: up(&topk_recs),
+        raw_final_loss: loss(&raw_recs),
+        delta_final_loss: loss(&delta_recs),
+        int8_final_loss: loss(&int8_recs),
+        topk_final_loss: loss(&topk_recs),
+        bit_identical: bits_eq(&raw_params, &delta_params)
+            && loss(&raw_recs).to_bits() == loss(&delta_recs).to_bits(),
     })
 }
 

@@ -27,6 +27,14 @@ pub struct RoundRecord {
     /// Simulated bytes on the wire this round (delta-sized downlink when a
     /// scenario enables it; 0 only on empty rounds).
     pub wire_bytes: u64,
+    /// Uplink bytes this round after the configured `run.uplink` codec
+    /// (== the raw uplink budget when the codec is `raw`). `wire_bytes`
+    /// stays codec-invariant: simulated timing always charges the raw
+    /// protocol so tier decisions cannot drift with the codec.
+    pub up_wire_bytes: u64,
+    /// Active uplink codec name (constant per run; a CSV column so mixed
+    /// sweeps stay self-describing).
+    pub codec: &'static str,
     /// Participants that missed the scenario's round deadline (0 outside
     /// scenario mode).
     pub straggled: usize,
@@ -169,6 +177,8 @@ mod tests {
             mean_tier: 3.0,
             tiers: vec![3; 4],
             wire_bytes: 1024,
+            up_wire_bytes: 512,
+            codec: "raw",
             straggled: 0,
             quarantined: 0,
             retries: 0,

@@ -20,6 +20,7 @@
 //! uplink's retry backoff is charged exactly once in virtual time even
 //! when the attempt spans tier-flush boundaries.
 
+use dtfl::coordinator::UplinkCodec;
 use dtfl::experiment::Experiment;
 use dtfl::harness::{self, RunSpec, STRAGGLER_HEAVY_TOML};
 use dtfl::metrics::RoundRecord;
@@ -39,6 +40,8 @@ struct WindowRow {
     quarantined: usize,
     retries: usize,
     wire_bytes: u64,
+    /// Post-codec uplink bytes per async window (knob-invariant).
+    up_wire_bytes: u64,
 }
 
 /// One async session's full golden trace: the event stream, the window
@@ -64,6 +67,7 @@ fn window_rows(records: &[RoundRecord]) -> Vec<WindowRow> {
             quarantined: r.quarantined,
             retries: r.retries,
             wire_bytes: r.wire_bytes,
+            up_wire_bytes: r.up_wire_bytes,
         })
         .collect()
 }
@@ -96,6 +100,17 @@ fn run_async(
     eval_every: usize,
     k: Knobs,
 ) -> AsyncTrace {
+    run_async_with_uplink(scenario, clients, rounds, eval_every, k, env_uplink())
+}
+
+fn run_async_with_uplink(
+    scenario: Option<Scenario>,
+    clients: usize,
+    rounds: usize,
+    eval_every: usize,
+    k: Knobs,
+    uplink: UplinkCodec,
+) -> AsyncTrace {
     let spec = RunSpec {
         method: "dtfl".into(),
         clients,
@@ -110,6 +125,7 @@ fn run_async(
         agg_shards: k.shards,
         fuse_forward: k.fuse,
         simd: k.simd.map_or_else(|| "auto".into(), |l| l.name().into()),
+        uplink,
         async_tiers: true,
         scenario,
         ..Default::default()
@@ -130,6 +146,16 @@ fn env_threads() -> Option<usize> {
         .ok()
         .and_then(|v| v.parse().ok())
         .filter(|&n| n > 0)
+}
+
+/// Uplink codec forced by the CI determinism matrix (`DTFL_TEST_UPLINK`);
+/// `raw` when unset. Goldens are recorded under the same codec in-process.
+fn env_uplink() -> UplinkCodec {
+    std::env::var("DTFL_TEST_UPLINK")
+        .ok()
+        .filter(|v| !v.is_empty())
+        .map(|v| UplinkCodec::from_name(&v).expect("DTFL_TEST_UPLINK"))
+        .unwrap_or(UplinkCodec::Raw)
 }
 
 /// One grid entry per supported non-scalar dispatch level (heavyweight
@@ -273,6 +299,38 @@ fn straggler_heavy_event_trace_is_knob_invariant() {
     assert!(sc.deadline_secs.is_some() && !sc.links.is_empty());
     let golden = assert_grid_invariant("straggler-heavy", Some(&sc), 6, 4, &small_grid());
     assert_stream_well_formed("straggler-heavy", &golden.events);
+}
+
+/// The lossless uplink contract on the async engine: a `delta` session
+/// reproduces the raw session's event stream, window rows, and parameter
+/// bits exactly — only the uplink byte accounting shrinks. The event
+/// queue orders on virtual time, which always charges the raw protocol,
+/// so any divergence here means the codec leaked into the timing model.
+#[test]
+fn lossless_uplink_delta_is_bit_invisible_to_the_async_engine() {
+    let sc = Scenario::parse(STRAGGLER_HEAVY_TOML).expect("committed scenario parses");
+    let raw = run_async_with_uplink(Some(sc.clone()), 6, 4, 1, REFERENCE, UplinkCodec::Raw);
+    let delta = run_async_with_uplink(Some(sc), 6, 4, 1, REFERENCE, UplinkCodec::Delta);
+    assert_eq!(raw.events, delta.events, "delta codec perturbed the async event stream");
+    assert_eq!(raw.params, delta.params, "delta codec perturbed async training bits");
+    let sans_up = |ws: &[WindowRow]| -> Vec<WindowRow> {
+        ws.iter()
+            .cloned()
+            .map(|mut w| {
+                w.up_wire_bytes = 0;
+                w
+            })
+            .collect()
+    };
+    assert_eq!(
+        sans_up(&raw.windows),
+        sans_up(&delta.windows),
+        "the lossless delta codec may only change the uplink byte column"
+    );
+    let up = |t: &AsyncTrace| -> u64 { t.windows.iter().map(|w| w.up_wire_bytes).sum() };
+    let (raw_up, delta_up) = (up(&raw), up(&delta));
+    assert!(raw_up > 0, "async windows must account uplink bytes");
+    assert!(delta_up < raw_up, "uplink delta must save bytes ({delta_up} vs {raw_up})");
 }
 
 /// The acceptance pin: on the committed straggler-heavy scenario the async

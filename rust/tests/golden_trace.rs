@@ -21,9 +21,13 @@
 //! `BENCH_hotpath.json`.
 //!
 //! The CI determinism matrix injects an extra thread count per leg via
-//! `DTFL_TEST_THREADS` (1/2/8) and forces dispatch levels via
-//! `DTFL_TEST_SIMD` (flows through every `simd: None` = "auto" entry).
+//! `DTFL_TEST_THREADS` (1/2/8), forces dispatch levels via
+//! `DTFL_TEST_SIMD` (flows through every `simd: None` = "auto" entry), and
+//! forces an uplink codec via `DTFL_TEST_UPLINK` — the whole grid reruns
+//! under that codec, so its byte accounting and (for lossy codecs) its
+//! transformed training dynamics must be knob-invariant too.
 
+use dtfl::coordinator::UplinkCodec;
 use dtfl::experiment::Experiment;
 use dtfl::harness::RunSpec;
 use dtfl::metrics::RoundRecord;
@@ -43,6 +47,9 @@ struct TraceRow {
     test_accuracy: Option<u64>,
     lr: u32,
     tiers: Vec<usize>,
+    /// Post-codec uplink bytes — the wire accounting is part of the
+    /// determinism contract (must not drift with engine knobs).
+    up_wire_bytes: u64,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -79,6 +86,7 @@ fn trace_of(records: &[RoundRecord], params: &[f32]) -> Trace {
             test_accuracy: r.test_accuracy.map(f64::to_bits),
             lr: r.lr.to_bits(),
             tiers: r.tiers.clone(),
+            up_wire_bytes: r.up_wire_bytes,
         })
         .collect();
     let params: Vec<u32> = params.iter().map(|p| p.to_bits()).collect();
@@ -109,6 +117,10 @@ const REFERENCE: Knobs = Knobs {
 };
 
 fn run(method: &str, k: Knobs) -> Trace {
+    run_with_uplink(method, k, env_uplink())
+}
+
+fn run_with_uplink(method: &str, k: Knobs, uplink: UplinkCodec) -> Trace {
     let mut spec = RunSpec {
         method: method.into(),
         clients: 6,
@@ -123,6 +135,7 @@ fn run(method: &str, k: Knobs) -> Trace {
         agg_shards: k.shards,
         fuse_forward: k.fuse,
         simd: k.simd.map_or_else(|| "auto".into(), |l| l.name().into()),
+        uplink,
         ..Default::default()
     };
     if method == "static" {
@@ -140,6 +153,17 @@ fn env_threads() -> Option<usize> {
         .ok()
         .and_then(|v| v.parse().ok())
         .filter(|&n| n > 0)
+}
+
+/// Uplink codec forced by the CI determinism matrix (`DTFL_TEST_UPLINK`);
+/// `raw` when unset. The in-process golden is recorded under the same
+/// codec, so a forced leg checks that codec's knob-invariance end to end.
+fn env_uplink() -> UplinkCodec {
+    std::env::var("DTFL_TEST_UPLINK")
+        .ok()
+        .filter(|v| !v.is_empty())
+        .map(|v| UplinkCodec::from_name(&v).expect("DTFL_TEST_UPLINK"))
+        .unwrap_or(UplinkCodec::Raw)
 }
 
 fn assert_trace_matches(method: &str, golden: &Trace, k: Knobs) {
@@ -249,6 +273,87 @@ fn fedyogi_golden_trace_is_knob_invariant() {
 #[test]
 fn fedgkt_golden_trace_is_knob_invariant() {
     assert_method_golden("fedgkt", &small_grid());
+}
+
+/// Rows with the byte-accounting column blanked, for cross-codec
+/// comparisons (a lossless codec changes `up_wire_bytes` and nothing else).
+fn rows_sans_up_bytes(t: &Trace) -> Vec<TraceRow> {
+    t.rows
+        .iter()
+        .cloned()
+        .map(|mut r| {
+            r.up_wire_bytes = 0;
+            r
+        })
+        .collect()
+}
+
+fn up_total(t: &Trace) -> u64 {
+    t.rows.iter().map(|r| r.up_wire_bytes).sum()
+}
+
+/// The lossless contract, stated directly: a `delta`-uplink run must
+/// reproduce the raw run's trace and final parameter bits exactly, with
+/// strictly fewer uplink bytes — on the tiered methods and the
+/// whole-model baselines alike.
+#[test]
+fn lossless_uplink_delta_is_bit_invisible_and_saves_bytes() {
+    for method in ["dtfl", "fedavg", "splitfed"] {
+        let raw = run_with_uplink(method, REFERENCE, UplinkCodec::Raw);
+        let delta = run_with_uplink(method, REFERENCE, UplinkCodec::Delta);
+        assert_eq!(
+            rows_sans_up_bytes(&raw),
+            rows_sans_up_bytes(&delta),
+            "{method}: the lossless delta codec may only change byte accounting"
+        );
+        assert_eq!(raw.params, delta.params, "{method}: delta codec perturbed training bits");
+        let (raw_up, delta_up) = (up_total(&raw), up_total(&delta));
+        assert!(raw_up > 0, "{method}: uplink bytes must be accounted");
+        assert!(
+            delta_up < raw_up,
+            "{method}: uplink delta must save bytes ({delta_up} vs {raw_up})"
+        );
+    }
+}
+
+/// The lossy codecs get their own goldens: their (intentionally
+/// different) training dynamics must still be bit-identical across
+/// engine knobs, and smallest-wins caps them at the raw accounting.
+#[test]
+fn lossy_uplink_codecs_are_knob_invariant_with_their_own_goldens() {
+    let light = [
+        Knobs { threads: 4, intra: 1, depth: 4, shards: 0, fuse: true, simd: None },
+        Knobs { threads: 2, intra: 1, depth: 8, shards: 3, fuse: false, simd: None },
+    ];
+    let raw_up = up_total(&run_with_uplink("dtfl", REFERENCE, UplinkCodec::Raw));
+    for codec in [UplinkCodec::Int8, UplinkCodec::TopK] {
+        let golden = run_with_uplink("dtfl", REFERENCE, codec);
+        assert!(
+            golden.rows.iter().all(|r| f64::from_bits(r.train_loss).is_finite()),
+            "{}: lossy training must stay finite",
+            codec.name()
+        );
+        for k in light {
+            let t = run_with_uplink("dtfl", k, codec);
+            assert_eq!(
+                golden.rows,
+                t.rows,
+                "{} {k:?}: lossy uplink trace diverged across engine knobs",
+                codec.name()
+            );
+            assert_eq!(
+                golden.params,
+                t.params,
+                "{} {k:?}: lossy uplink param bits diverged",
+                codec.name()
+            );
+        }
+        assert!(
+            up_total(&golden) <= raw_up,
+            "{}: smallest-wins must cap the codec at the raw accounting",
+            codec.name()
+        );
+    }
 }
 
 /// Record the DTFL golden trace next to BENCH_hotpath.json (diagnostics —

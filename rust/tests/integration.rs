@@ -315,6 +315,8 @@ fn pipelined_empty_round_carries_global_over() {
         scenario: None,
         downlink: None,
         fold: dtfl::coordinator::FoldStrategy::Mean,
+        uplink: None,
+        prox_mu: 0.0,
     };
     let out = dtfl.round(&mut env).unwrap();
     assert!(out.times.is_empty() && out.tiers.is_empty());

@@ -136,6 +136,7 @@ fn bench_round_smoke_writes_hotpath_json() {
         kernels_to_json, measure_async_throughput, measure_fused_throughput,
         measure_kernel_throughput, measure_pipeline_throughput, measure_robustness_throughput,
         measure_round_throughput, measure_scenario_throughput, measure_simd_throughput,
+        measure_wire_efficiency,
     };
     use dtfl::runtime::kernels::tune;
     use dtfl::util::bench::{hotpath_report_path, BenchReport};
@@ -191,6 +192,22 @@ fn bench_round_smoke_writes_hotpath_json() {
         at.drop_sim_secs
     );
 
+    let we = measure_wire_efficiency(4).expect("wire efficiency probe");
+    assert!(
+        we.bit_identical,
+        "lossless uplink delta must reproduce the raw leg's parameter and loss bits"
+    );
+    assert!(
+        we.delta_up_bytes < we.raw_up_bytes,
+        "uplink delta must save bytes ({} vs {})",
+        we.delta_up_bytes,
+        we.raw_up_bytes
+    );
+    assert!(
+        we.int8_final_loss.is_finite() && we.topk_final_loss.is_finite(),
+        "lossy uplink tracks must still train to a finite loss"
+    );
+
     let mut report = BenchReport::new();
     // keep any full `cargo bench` micro-bench entries already on disk
     report.preserve_entries_from(hotpath_report_path());
@@ -203,5 +220,6 @@ fn bench_round_smoke_writes_hotpath_json() {
     report.extra("kernels", kernels_to_json(&kernels, arena_peak, source));
     report.extra("simd", sd.to_json(source));
     report.extra("async_tiers", at.to_json(source));
+    report.extra("wire_efficiency", we.to_json(source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -14,8 +14,10 @@
 //! attends.
 //!
 //! The CI determinism matrix injects extra thread counts per leg via
-//! `DTFL_TEST_THREADS` (1/2/8), exactly like `tests/golden_trace.rs`.
+//! `DTFL_TEST_THREADS` (1/2/8) and forces an uplink codec via
+//! `DTFL_TEST_UPLINK`, exactly like `tests/golden_trace.rs`.
 
+use dtfl::coordinator::UplinkCodec;
 use dtfl::experiment::Experiment;
 use dtfl::harness::{RunSpec, FLASH_CROWD_TOML};
 use dtfl::metrics::RoundRecord;
@@ -32,6 +34,9 @@ struct TraceRow {
     test_accuracy: Option<u64>,
     tiers: Vec<usize>,
     wire_bytes: u64,
+    /// Post-codec uplink bytes: the codec's byte accounting is part of
+    /// the scenario determinism contract too.
+    up_wire_bytes: u64,
     straggled: usize,
 }
 
@@ -53,6 +58,7 @@ fn trace_of(records: &[RoundRecord], params: &[f32]) -> Trace {
                 test_accuracy: r.test_accuracy.map(f64::to_bits),
                 tiers: r.tiers.clone(),
                 wire_bytes: r.wire_bytes,
+                up_wire_bytes: r.up_wire_bytes,
                 straggled: r.straggled,
             })
             .collect(),
@@ -131,6 +137,7 @@ fn run(method: &str, scenario: Scenario, rounds: usize, k: Knobs) -> Trace {
         agg_shards: k.shards,
         fuse_forward: k.fuse,
         simd: k.simd.map_or_else(|| "auto".into(), |l| l.name().into()),
+        uplink: env_uplink(),
         scenario: Some(scenario),
         ..Default::default()
     };
@@ -146,6 +153,16 @@ fn env_threads() -> Option<usize> {
         .ok()
         .and_then(|v| v.parse().ok())
         .filter(|&n| n > 0)
+}
+
+/// Uplink codec forced by the CI determinism matrix (`DTFL_TEST_UPLINK`);
+/// `raw` when unset. Goldens are recorded under the same codec in-process.
+fn env_uplink() -> UplinkCodec {
+    std::env::var("DTFL_TEST_UPLINK")
+        .ok()
+        .filter(|v| !v.is_empty())
+        .map(|v| UplinkCodec::from_name(&v).expect("DTFL_TEST_UPLINK"))
+        .unwrap_or(UplinkCodec::Raw)
 }
 
 /// One grid entry per supported non-scalar dispatch level (heavyweight
@@ -272,6 +289,74 @@ fn committed_flash_crowd_scenario_runs_and_is_knob_invariant() {
     // flash cohort arrives at round 3: participant count grows
     assert_eq!(golden.rows[0].tiers.len(), 6);
     assert_eq!(golden.rows[3].tiers.len(), 10);
+}
+
+/// Scenario `depart` must evict per-client codec state: a churned-out
+/// device keeps neither its downlink delta snapshot (a rejoin re-seeds
+/// from a full broadcast instead of diffing against stale bits) nor its
+/// top-k error-feedback residual.
+#[test]
+fn departed_clients_lose_their_codec_state() {
+    let run_eviction = |uplink: UplinkCodec, scenario: Scenario, rounds: usize| {
+        let spec = RunSpec {
+            method: "dtfl".into(),
+            clients: scenario.total_clients(),
+            rounds,
+            batch_cap: Some(1),
+            train_total: 96,
+            test_total: 32,
+            eval_every: 1,
+            uplink,
+            scenario: Some(scenario),
+            ..Default::default()
+        };
+        let mut exp = Experiment::new(spec.to_config()).expect("scenario experiment");
+        exp.run_with(|_| {}).expect("scenario run");
+        exp
+    };
+
+    // the crowd cohort (clients 4 and 5) departs at round 4 and never
+    // rejoins; the core cohort (0..4) is broadcast to every round
+    let exp = run_eviction(UplinkCodec::Raw, drop_scenario(), 5);
+    for k in 0..4 {
+        assert_eq!(exp.delta_has_snapshot(k), Some(true), "core client {k} keeps its snapshot");
+    }
+    for k in 4..6 {
+        assert_eq!(
+            exp.delta_has_snapshot(k),
+            Some(false),
+            "departed crowd client {k} must have its delta snapshot evicted"
+        );
+    }
+    assert_eq!(exp.uplink_has_residual(0), None, "raw uplink holds no session state");
+
+    let exp = run_eviction(UplinkCodec::TopK, drop_scenario(), 5);
+    for k in 0..4 {
+        assert_eq!(
+            exp.uplink_has_residual(k),
+            Some(true),
+            "core client {k} carries a top-k residual"
+        );
+    }
+    for k in 4..6 {
+        assert_eq!(
+            exp.uplink_has_residual(k),
+            Some(false),
+            "departed crowd client {k} must have its top-k residual evicted"
+        );
+    }
+
+    // flash-crowd regression: late arrivals are *seeded*, not evicted —
+    // every client that is active at the horizon keeps a snapshot
+    let sc = Scenario::parse(FLASH_CROWD_TOML).expect("committed scenario parses");
+    let exp = run_eviction(UplinkCodec::Delta, sc, 4);
+    for k in 0..10 {
+        assert_eq!(
+            exp.delta_has_snapshot(k),
+            Some(true),
+            "flash-crowd client {k} must be seeded on arrival and kept"
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,346 @@
+//! Uplink codec conformance + fuzz suite (wire-efficiency layer 2).
+//!
+//! The uplink packets are a real wire format, so they get wire-format
+//! tests: seeded-random round trips over awkward shapes (empty, length-1,
+//! chunk-boundary sizes), exact survival of the IEEE special values
+//! through the lossless codecs, hardened rejection of truncated and
+//! corrupted payloads (with the client id and byte offset in the error,
+//! never a panic), the top-k error-feedback partition invariant
+//! (residual + sent == full delta, bit for bit), and the `prox_mu = 0` /
+//! `uplink = raw` defaults being exactly the legacy training path.
+
+use dtfl::coordinator::uplink::{
+    apply_packet, encode_packet, topk_k, UplinkCodec, UplinkSession,
+};
+use dtfl::coordinator::FoldStrategy;
+use dtfl::experiment::Experiment;
+use dtfl::harness::RunSpec;
+
+/// xorshift64* — a seeded in-test generator (the repo has no RNG crate,
+/// and the suite must be reproducible anyway).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Self(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// A value in roughly [-10.3, 10.3] on a lattice (collisions — and so
+    /// zero deltas — are possible and intentionally exercised).
+    fn val(&mut self) -> f32 {
+        ((self.next() % 2001) as f32 - 1000.0) / 97.0
+    }
+
+    fn vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.val()).collect()
+    }
+}
+
+/// Shapes that hit the format's corners: empty, singleton, the `int8`
+/// chunk boundary (255/256/257), and a multi-chunk tail.
+const SHAPES: [usize; 12] = [0, 1, 2, 7, 63, 255, 256, 257, 300, 511, 513, 1000];
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn lossless_codecs_round_trip_every_shape_bitwise() {
+    let mut rng = Rng::new(0x5eed);
+    for &n in &SHAPES {
+        let base = rng.vec(n);
+        // a realistic update: mostly small perturbations, a few jumps
+        let cur: Vec<f32> = base
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| if i % 17 == 0 { rng.val() } else { b + 1e-3 })
+            .collect();
+        for codec in [UplinkCodec::Raw, UplinkCodec::Delta] {
+            let p = encode_packet(codec, &base, &cur, None);
+            let back = apply_packet(&base, &p, 42).expect("lossless decode");
+            assert_bits_eq(&back, &cur, &format!("{} n={n}", codec.name()));
+            // a base of the wrong length is a protocol violation, not a panic
+            if n > 0 {
+                let err = apply_packet(&base[..n - 1], &p, 42).unwrap_err().to_string();
+                assert!(err.contains("client 42"), "{err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn special_values_survive_lossless_codecs_exactly() {
+    let cur = vec![
+        f32::NAN,
+        f32::from_bits(0x7fc1_2345), // NaN with a payload
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        -0.0,
+        0.0,
+        f32::MIN_POSITIVE,
+        1e-41, // subnormal
+        -1.5,
+        f32::MAX,
+    ];
+    let base = vec![0.25f32; cur.len()];
+    for codec in [UplinkCodec::Raw, UplinkCodec::Delta] {
+        let p = encode_packet(codec, &base, &cur, None);
+        let back = apply_packet(&base, &p, 0).expect("lossless decode");
+        assert_bits_eq(&back, &cur, codec.name());
+    }
+    // poisoned updates must reach the server unchanged through the lossy
+    // codecs too: topk falls back to an explicit raw packet, and int8
+    // passes the whole non-finite chunk through raw
+    for codec in [UplinkCodec::TopK, UplinkCodec::Int8] {
+        let p = encode_packet(codec, &base, &cur, None);
+        let back = apply_packet(&base, &p, 0).expect("passthrough decode");
+        assert_bits_eq(&back, &cur, &format!("{} non-finite passthrough", codec.name()));
+    }
+}
+
+#[test]
+fn lossy_codecs_decode_within_their_contract() {
+    let mut rng = Rng::new(0xfeed);
+    for &n in &SHAPES {
+        let base = rng.vec(n);
+        let cur = rng.vec(n);
+
+        // int8: every coordinate lands within half a quantization step
+        let p = encode_packet(UplinkCodec::Int8, &base, &cur, None);
+        let dec = apply_packet(&base, &p, 0).expect("int8 decode");
+        assert_eq!(dec.len(), n);
+        for (ci, chunk) in cur.chunks(256).enumerate() {
+            let lo = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let step = (hi - lo) / 255.0;
+            for (j, &v) in chunk.iter().enumerate() {
+                let d = dec[ci * 256 + j];
+                assert!(
+                    (d - v).abs() <= step * 0.5 + 1e-6,
+                    "int8 n={n} chunk {ci} coord {j}: {d} vs {v} (step {step})"
+                );
+            }
+        }
+
+        // topk: at most k coordinates move, each to base + delta exactly
+        let p = encode_packet(UplinkCodec::TopK, &base, &cur, None);
+        let dec = apply_packet(&base, &p, 0).expect("topk decode");
+        let mut moved = 0usize;
+        for i in 0..n {
+            if dec[i].to_bits() != base[i].to_bits() {
+                moved += 1;
+                let d = (cur[i] - base[i]) + 0.0;
+                assert_eq!(
+                    dec[i].to_bits(),
+                    (base[i] + d).to_bits(),
+                    "topk n={n} coord {i}: sent coordinate must be base + delta"
+                );
+            }
+        }
+        assert!(moved <= topk_k(n), "topk n={n}: moved {moved} > k {}", topk_k(n));
+    }
+}
+
+#[test]
+fn truncated_packets_are_rejected_never_panic() {
+    let mut rng = Rng::new(0xcafe);
+    let n = 300;
+    let base = rng.vec(n);
+    let cur = rng.vec(n);
+    // raw / int8 / topk: every strict prefix is a protocol violation
+    for codec in [UplinkCodec::Raw, UplinkCodec::Int8, UplinkCodec::TopK] {
+        let p = encode_packet(codec, &base, &cur, None);
+        for cut in 0..p.len() {
+            let err = apply_packet(&base, &p[..cut], 7)
+                .err()
+                .unwrap_or_else(|| panic!("{}: truncation at {cut} decoded", codec.name()))
+                .to_string();
+            assert!(err.contains("client 7"), "{}: cut {cut}: {err}", codec.name());
+        }
+    }
+    // delta wraps the snapshot-delta format: a prefix must either be
+    // rejected with the client id, or — if some prefix happens to parse —
+    // still reproduce the exact update (hardened, never wrong, never a
+    // panic)
+    let p = encode_packet(UplinkCodec::Delta, &base, &cur, None);
+    assert!(apply_packet(&base, &p[..0], 7).is_err());
+    for cut in 0..p.len() {
+        match apply_packet(&base, &p[..cut], 7) {
+            Err(e) => assert!(e.to_string().contains("client 7"), "{e}"),
+            Ok(v) => assert_bits_eq(&v, &cur, &format!("delta prefix {cut}")),
+        }
+    }
+    // mid-payload truncations report where the stream broke
+    let p = encode_packet(UplinkCodec::Raw, &base, &cur, None);
+    let err = apply_packet(&base, &p[..p.len() - 1], 7).unwrap_err().to_string();
+    assert!(err.contains("offset"), "{err}");
+}
+
+#[test]
+fn corrupted_packets_are_rejected_with_client_and_offset() {
+    let mut rng = Rng::new(0xbead);
+    let n = 300;
+    let base = rng.vec(n);
+    let cur = rng.vec(n);
+
+    // unknown codec tag
+    let mut bad = encode_packet(UplinkCodec::Raw, &base, &cur, None);
+    bad[0] = 9;
+    let err = apply_packet(&base, &bad, 3).unwrap_err().to_string();
+    assert!(err.contains("client 3") && err.contains("unknown uplink codec tag 9"), "{err}");
+
+    // element-count mismatch vs the base snapshot
+    let mut bad = encode_packet(UplinkCodec::Raw, &base, &cur, None);
+    bad[1..5].copy_from_slice(&((n as u32) + 1).to_le_bytes());
+    let err = apply_packet(&base, &bad, 3).unwrap_err().to_string();
+    assert!(err.contains("client 3") && err.contains("301 params"), "{err}");
+
+    // bad int8 chunk flag (first flag byte sits right after the header)
+    let mut bad = encode_packet(UplinkCodec::Int8, &base, &cur, None);
+    bad[5] = 7;
+    let err = apply_packet(&base, &bad, 3).unwrap_err().to_string();
+    assert!(
+        err.contains("client 3") && err.contains("bad int8 chunk flag 7") && err.contains("offset"),
+        "{err}"
+    );
+
+    // topk claiming more coordinates than the vector holds
+    let mut bad = encode_packet(UplinkCodec::TopK, &base, &cur, None);
+    bad[5..9].copy_from_slice(&((n as u32) + 1).to_le_bytes());
+    let err = apply_packet(&base, &bad, 3).unwrap_err().to_string();
+    assert!(err.contains("client 3") && err.contains("offset"), "{err}");
+
+    // a varint driven past 32 bits of index space
+    let mut bad = encode_packet(UplinkCodec::TopK, &base, &cur, None);
+    for b in &mut bad[9..14] {
+        *b = 0xFF;
+    }
+    let err = apply_packet(&base, &bad, 3).unwrap_err().to_string();
+    assert!(err.contains("client 3"), "{err}");
+}
+
+/// The error-feedback invariant: after every `topk` upload, the kept
+/// residual and the sent coordinates partition the full-precision delta
+/// `(cur − base) + carry` exactly — no mass is created or lost, bit for
+/// bit, across rounds (the carry feeds the next round's delta).
+#[test]
+fn topk_residual_partitions_the_full_delta_bitwise() {
+    let mut rng = Rng::new(0xace);
+    let n = 200;
+    let s = UplinkSession::new(UplinkCodec::TopK, 1);
+    let mut carry = vec![0.0f32; n];
+    for round in 0..3 {
+        let base = rng.vec(n);
+        let mut cur = rng.vec(n);
+        // the exact expression topk_delta computes, replicated coordinate-
+        // wise: (cur - base) + carry
+        let d: Vec<f32> = (0..n).map(|i| (cur[i] - base[i]) + carry[i]).collect();
+        let coded = s.encode_update(0, &base, &mut cur, 4 * n);
+        assert!(coded < 4 * n, "round {round}: topk must beat raw at n={n}");
+        let resid = s.residual(0).expect("topk leaves a residual");
+        assert_eq!(resid.len(), n);
+        for i in 0..n {
+            if resid[i] != 0.0 {
+                // withheld: the residual carries the full delta and the
+                // wire carries nothing
+                assert_eq!(
+                    resid[i].to_bits(),
+                    d[i].to_bits(),
+                    "round {round} coord {i}: residual must equal the unsent delta"
+                );
+                assert_eq!(
+                    cur[i].to_bits(),
+                    base[i].to_bits(),
+                    "round {round} coord {i}: unsent coordinate must stay at base"
+                );
+            } else {
+                // sent (or a zero delta): the wire carries the full delta
+                assert_eq!(
+                    cur[i].to_bits(),
+                    (base[i] + d[i]).to_bits(),
+                    "round {round} coord {i}: sent coordinate must be base + delta"
+                );
+            }
+        }
+        carry = resid;
+    }
+}
+
+/// Smallest-wins: a payload the codec cannot beat ships raw — untouched
+/// update, no residual, raw accounting.
+#[test]
+fn tiny_payloads_fall_back_to_raw_untouched() {
+    let s = UplinkSession::new(UplinkCodec::TopK, 1);
+    let base = vec![1.0f32];
+    let mut cur = vec![2.0f32];
+    let coded = s.encode_update(0, &base, &mut cur, 4);
+    assert_eq!(coded, 4, "a 1-element topk packet can never beat 4 raw bytes");
+    assert_eq!(cur[0].to_bits(), 2.0f32.to_bits(), "raw fallback must not transform");
+    assert!(!s.has_residual(0), "raw fallback must not leave a residual");
+}
+
+/// `prox_mu = 0` (the default) is gated to the exact legacy instruction
+/// stream: repeat runs are bit-identical, and a nonzero μ really changes
+/// training (while keeping it finite).
+#[test]
+fn prox_mu_zero_is_the_legacy_path_and_nonzero_mu_acts() {
+    let run = |prox_mu: f32| -> (Vec<u64>, Vec<u32>) {
+        let spec = RunSpec {
+            method: "dtfl".into(),
+            clients: 6,
+            rounds: 2,
+            batch_cap: Some(1),
+            train_total: 96,
+            test_total: 32,
+            eval_every: 1,
+            threads: 1,
+            prox_mu,
+            ..Default::default()
+        };
+        let mut exp = Experiment::new(spec.to_config()).expect("experiment");
+        let mut losses = Vec::new();
+        exp.run_with(|r| losses.push(r.train_loss.to_bits())).expect("run");
+        (losses, exp.method.global_params().iter().map(|p| p.to_bits()).collect())
+    };
+    let (l0, p0) = run(0.0);
+    let (l0b, p0b) = run(0.0);
+    assert_eq!(l0, l0b, "μ = 0 must be deterministic");
+    assert_eq!(p0, p0b, "μ = 0 must be deterministic");
+    let (l1, p1) = run(0.1);
+    assert_ne!(p0, p1, "a nonzero proximal term must change training");
+    assert!(l1.iter().all(|&b| f64::from_bits(b).is_finite()), "μ > 0 must stay finite");
+    assert!(p1.iter().all(|&b| f32::from_bits(b).is_finite()), "μ > 0 must stay finite");
+}
+
+/// The adaptive fold drives a full experiment to a finite model (its
+/// degenerate-case bit-identity with `mean` is pinned at the unit level
+/// in `coordinator::aggregate`).
+#[test]
+fn adaptive_fold_trains_to_a_finite_model() {
+    let spec = RunSpec {
+        method: "dtfl".into(),
+        clients: 6,
+        rounds: 2,
+        batch_cap: Some(1),
+        train_total: 96,
+        test_total: 32,
+        eval_every: 1,
+        fold: FoldStrategy::Adaptive,
+        ..Default::default()
+    };
+    let mut exp = Experiment::new(spec.to_config()).expect("experiment");
+    exp.run_with(|_| {}).expect("run");
+    assert!(exp.method.global_params().iter().all(|p| p.is_finite()));
+}
