@@ -28,7 +28,7 @@ use dtfl::coordinator::{
 };
 use dtfl::data::{generate_train, patch_shuffle, Batcher, DatasetSpec};
 use dtfl::harness::{
-    kernels_to_json, measure_async_throughput, measure_fused_throughput,
+    kernels_to_json, measure_async_throughput, measure_fleet_scale, measure_fused_throughput,
     measure_kernel_throughput, measure_pipeline_throughput, measure_robustness_throughput,
     measure_round_throughput, measure_scenario_throughput, measure_simd_throughput,
     measure_wire_efficiency,
@@ -249,6 +249,35 @@ fn bench_wire_efficiency(report: &mut BenchReport, rounds: usize) {
     report.extra("wire_efficiency", we.to_json("cargo bench micro_hotpath"));
 }
 
+/// Fleet-scale probe: the mega-fleet scenario shape at three fleet sizes
+/// under the cohort-vectorized engine, fixed participant count (shared
+/// probe in `harness::measure_fleet_scale`).
+fn bench_fleet_scale(report: &mut BenchReport, rounds: usize) {
+    section("bench_fleet_scale: cohort-vectorized fleet, K = 50 / 10^4 / 10^6");
+    let fs = measure_fleet_scale(&[50, 10_000, 1_000_000], rounds).expect("fleet scale probe");
+    for l in &fs.legs {
+        assert!(
+            l.resident_bytes > 0 && l.resident_bytes <= l.resident_bound_bytes,
+            "fleet {}: snapshot residency {} outside (0, {}]",
+            l.fleet,
+            l.resident_bytes,
+            l.resident_bound_bytes
+        );
+        println!(
+            "fleet {:>9}: {} participants/round, makespan {:.3}s, coordinator {:.4}s/round, \
+             resident {} / bound {} bytes, {} cohort advances",
+            l.fleet,
+            l.participants,
+            l.mean_makespan_secs,
+            l.coordinator_secs_per_round,
+            l.resident_bytes,
+            l.resident_bound_bytes,
+            l.cohort_advances
+        );
+    }
+    report.extra("fleet_scale", fs.to_json("cargo bench micro_hotpath"));
+}
+
 /// Round-throughput comparison: K clients, 1 thread vs all cores (shared
 /// probe in `harness::measure_round_throughput`).
 fn bench_round(report: &mut BenchReport, clients: usize, rounds: usize) {
@@ -415,6 +444,9 @@ fn main() {
 
     // ---------------- uplink codec family + wire accounting ----------------
     bench_wire_efficiency(&mut report, 6);
+
+    // ---------------- fleet scale (cohort-vectorized engine) ----------------
+    bench_fleet_scale(&mut report, 3);
 
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

@@ -120,6 +120,27 @@ pub struct RunCfg {
     /// held constant. Off (false) = the synchronous engines, byte-for-byte
     /// unchanged.
     pub async_tiers: bool,
+    /// Client→server uplink codec: raw (default) | delta | int8 | topk.
+    /// `delta` is bitwise-lossless; the lossy tracks carry per-client
+    /// error-feedback residuals across rounds.
+    pub uplink: UplinkCodec,
+    /// FedProx proximal coefficient µ (0 = off, the bit-exact default).
+    pub prox_mu: f32,
+    /// Fleet engine: "naive" (default — per-client state for the whole
+    /// fleet, every client advanced every round) | "cohort" (cohort-
+    /// vectorized: non-participants advance at cohort granularity and a
+    /// sampled client's RNG streams materialize lazily on first
+    /// participation, replaying missed rounds so traces stay bit-identical
+    /// to naive). Cohort mode needs a [scenario] (the cohort spec is the
+    /// vectorization unit) and the synchronous engines (`async_tiers`
+    /// iterates every present client, which is the O(fleet) loop cohort
+    /// mode exists to avoid).
+    pub fleet: String,
+    /// Absolute number of participants sampled per round (overrides
+    /// `sample_frac` when set). Sampling is O(sample_count) rejection
+    /// sampling over the active-cohort id ranges — the knob that keeps
+    /// per-round coordinator cost independent of fleet size.
+    pub sample_count: Option<usize>,
 }
 
 #[derive(Debug, Clone)]
@@ -284,6 +305,8 @@ impl ExperimentConfig {
                 uplink: UplinkCodec::from_name(&s.str_or("uplink", "raw")?)
                     .context("in [run] uplink")?,
                 prox_mu: s.f64_or("prox_mu", 0.0)? as f32,
+                fleet: s.str_or("fleet", "naive")?,
+                sample_count: s.opt_usize("sample_count")?,
             }
         };
         let sim = {
@@ -362,6 +385,30 @@ impl ExperimentConfig {
                 "run.async_tiers requires the tiered methods (dtfl | static); \
                  '{}' has no tier cadences to run asynchronously",
                 self.run.method
+            );
+        }
+        crate::anyhow::ensure!(
+            matches!(self.run.fleet.as_str(), "naive" | "cohort"),
+            "run.fleet must be 'naive' or 'cohort' (got '{}')",
+            self.run.fleet
+        );
+        if self.run.fleet == "cohort" {
+            crate::anyhow::ensure!(
+                self.scenario.is_some(),
+                "run.fleet = 'cohort' needs a [scenario] — the cohort spec is the \
+                 vectorization unit"
+            );
+            crate::anyhow::ensure!(
+                !self.run.async_tiers,
+                "run.fleet = 'cohort' is a synchronous-engine optimization; \
+                 async_tiers iterates every present client and cannot use it"
+            );
+        }
+        if let Some(k) = self.run.sample_count {
+            crate::anyhow::ensure!(
+                k >= 1 && k <= self.clients.count,
+                "run.sample_count must be in 1..={} (got {k})",
+                self.clients.count
             );
         }
         if self.scenario.is_some() {
@@ -539,6 +586,42 @@ mod tests {
         let text = MINIMAL.replace("method = \"dtfl\"", "method = \"fedavg\"\nasync_tiers = true");
         let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
         assert!(err.contains("async_tiers"), "error names the knob: {err}");
+    }
+
+    #[test]
+    fn fleet_mode_parses_and_is_gated() {
+        let cfg = ExperimentConfig::parse(MINIMAL).unwrap();
+        assert_eq!(cfg.run.fleet, "naive", "fleet engine defaults to naive");
+        assert!(cfg.run.sample_count.is_none(), "absolute sampling defaults off");
+        // cohort mode without a scenario is rejected
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nfleet = \"cohort\"");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("[scenario]"), "error explains the gate: {err}");
+        // with a scenario it parses
+        let text = text + "\n[scenario]\nfile = \"scenarios/flash_crowd.toml\"\n";
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(cfg.run.fleet, "cohort");
+        // but not combined with async tiers
+        let text = text.replace("fleet = \"cohort\"", "fleet = \"cohort\"\nasync_tiers = true");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("async_tiers"), "error names the conflict: {err}");
+        // unknown engine names are rejected
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nfleet = \"warp\"");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("warp"), "error names the offender: {err}");
+    }
+
+    #[test]
+    fn sample_count_bounds_checked() {
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nsample_count = 4");
+        let cfg = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(cfg.run.sample_count, Some(4));
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nsample_count = 0");
+        assert!(ExperimentConfig::parse(&text).is_err());
+        // default clients.count is 10
+        let text = MINIMAL.replace("method = \"dtfl\"", "method = \"dtfl\"\nsample_count = 11");
+        let err = ExperimentConfig::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("sample_count"), "error names the knob: {err}");
     }
 
     #[test]

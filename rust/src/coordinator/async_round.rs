@@ -239,7 +239,7 @@ fn start_client(
     let b = run_client(&env, global, &ctx.server, timing_noise, &task)?;
     drop(env);
     if let Some(d) = delta.as_deref_mut() {
-        d.note_broadcast(k, &global.flat);
+        d.note_broadcast(k, w as u64, &global.flat);
     }
     let finish = t + b.time.total();
     slot.start_flushes = flushes_done[tindex[slot.tier]];

@@ -40,4 +40,7 @@ pub use parallel::{
 };
 pub use profiler::{ClientHistory, Profiler, TierProfile};
 pub use round::{estimate_all_tiers, load_initial_model, profile_tiers, Dtfl, DtflOptions};
-pub use scheduler::{estimate_round_time, schedule, Assignment, ClientLoad, Schedule};
+pub use scheduler::{
+    estimate_round_time, schedule, schedule_participants, Assignment, ClientLoad, ParticipantLoad,
+    Schedule,
+};

@@ -34,7 +34,7 @@
 //! `{threads, pipeline_depth, agg_shards}` setting by
 //! `tests/golden_trace.rs`.
 
-use crate::anyhow::Result;
+use crate::anyhow::{anyhow, Result};
 
 use crate::fed::{Method, PoolTask, RoundEnv, RoundOutcome};
 use crate::runtime::{literal as lit, Runtime, StepEngine, TrainState};
@@ -45,7 +45,7 @@ use super::aggregate::Aggregator;
 use super::model_state::{ClientUpdate, GlobalModel};
 use super::parallel::for_each_streamed_windowed;
 use super::profiler::{Profiler, TierProfile};
-use super::scheduler::{schedule, ClientLoad, Schedule};
+use super::scheduler::{schedule_participants, ParticipantLoad, Schedule};
 
 /// Options for the DTFL method.
 #[derive(Debug, Clone)]
@@ -155,7 +155,9 @@ pub fn profile_tiers(rt: &Runtime, global: &GlobalModel, tiers: usize) -> Result
         client_secs.push(best_c);
 
         let mut sstate = TrainState::new(global.server_vec(meta, tier));
-        let z = z.unwrap();
+        let z = z.ok_or_else(|| {
+            anyhow!("tier {tier} profiling produced no activation batch (client step never ran)")
+        })?;
         let mut best_s = f64::INFINITY;
         for _ in 0..2 {
             let out = engine.server_step(tier, &mut sstate, 1e-3, &z, &y)?;
@@ -350,23 +352,43 @@ impl Method for Dtfl {
         let meta = &env.rt.meta;
         let batch = meta.batch;
 
-        // ① dynamic tier scheduling (or the static-tier ablation)
-        let loads: Vec<ClientLoad> = (0..self.profiler.clients.len())
-            .map(|k| ClientLoad {
-                n_batches: env.n_batches(k, batch),
-                participating: env.participants.contains(&k),
-            })
+        // ① dynamic tier scheduling (or the static-tier ablation) over the
+        // participant pool only — O(participants), not O(fleet), so a
+        // million-client fleet schedules 50 entries (participants arrive
+        // sorted ascending from the sampler, which is the order the old
+        // dense loop estimated them in: same bits)
+        let parts: Vec<ParticipantLoad> = env
+            .participants
+            .iter()
+            .map(|&k| ParticipantLoad { client_id: k, n_batches: env.n_batches(k, batch) })
             .collect();
-        let sched = schedule(meta, &self.profiler, &env.server, &loads, self.opts.max_tiers);
+        let sched =
+            schedule_participants(meta, &self.profiler, &env.server, &parts, self.opts.max_tiers);
         let static_tier = self.opts.static_tier;
         // round r+1 input prefetch rides at the tail of the item list, so
         // spare workers run it during this round's aggregation window
-        let tasks = env.pool_tasks(env.participants.iter().map(|&k| ClientTask {
-            k,
-            tier: static_tier.unwrap_or_else(|| sched.tier_of(k)),
-            nb: env.n_batches(k, batch),
-            profile: env.profiles[k],
-        }));
+        let mut client_tasks = Vec::with_capacity(parts.len());
+        for p in &parts {
+            let tier = match static_tier {
+                Some(m) => m,
+                // a malformed schedule must surface as a contextful error,
+                // not panic the coordinator mid-round
+                None => sched.try_tier_of(p.client_id).ok_or_else(|| {
+                    anyhow!(
+                        "round {}: client {} missing from the tier schedule",
+                        env.round,
+                        p.client_id
+                    )
+                })?,
+            };
+            client_tasks.push(ClientTask {
+                k: p.client_id,
+                tier,
+                nb: p.n_batches,
+                profile: env.profiles[p.client_id],
+            });
+        }
+        let tasks = env.pool_tasks(client_tasks);
 
         // ②③④ fan the per-client loop across the worker pool, ⑤ stream the
         // updates into the (pipelined, sharded) aggregator in participant

@@ -16,13 +16,27 @@ use crate::simulation::ServerModel;
 
 use super::profiler::Profiler;
 
-/// Scheduler view of one client for the upcoming round.
+/// Scheduler view of one client for the upcoming round, in the dense
+/// fleet-indexed layout (one entry per client id). Retained for callers
+/// that naturally hold the whole fleet; the coordinator's round loop uses
+/// the participant-only [`ParticipantLoad`] form so scheduling cost is
+/// O(participants), not O(fleet).
 #[derive(Debug, Clone, Copy)]
 pub struct ClientLoad {
     /// Ñ_k — number of standard batches the client will run.
     pub n_batches: usize,
     /// Whether the client participates this round (sampled clients only).
     pub participating: bool,
+}
+
+/// Scheduler view of one *participant* for the upcoming round — the sparse
+/// TiFL-pool-friendly form: only sampled clients appear, so a million-client
+/// fleet schedules 50 entries, not 10^6.
+#[derive(Debug, Clone, Copy)]
+pub struct ParticipantLoad {
+    pub client_id: usize,
+    /// Ñ_k — number of standard batches the client will run.
+    pub n_batches: usize,
 }
 
 /// Per-client assignment diagnostics (logged + used by tests/benches).
@@ -45,12 +59,19 @@ pub struct Schedule {
 }
 
 impl Schedule {
-    pub fn tier_of(&self, client_id: usize) -> usize {
+    /// Tier of `client_id`, or `None` when it is not in this schedule.
+    /// Assignments are sorted ascending by client id (the schedulers emit
+    /// them that way), so this is a binary search — O(log participants)
+    /// even for large participant sets.
+    pub fn try_tier_of(&self, client_id: usize) -> Option<usize> {
         self.assignments
-            .iter()
-            .find(|a| a.client_id == client_id)
-            .map(|a| a.tier)
-            .expect("client not in schedule")
+            .binary_search_by_key(&client_id, |a| a.client_id)
+            .ok()
+            .map(|i| self.assignments[i].tier)
+    }
+
+    pub fn tier_of(&self, client_id: usize) -> usize {
+        self.try_tier_of(client_id).expect("client not in schedule")
     }
 
     /// Check the scheduler's output invariants (used by the property tests
@@ -116,46 +137,47 @@ pub fn estimate_round_time(
     (t_c + t_com).max(t_s + t_com)
 }
 
-/// The dynamic tier scheduler. Returns tier assignments for all
-/// participating clients.
-pub fn schedule(
+/// The dynamic tier scheduler over a sparse participant set — the
+/// O(participants) core. `parts` must be sorted ascending by client id
+/// (the coordinator's samplers emit ids sorted); estimates, the T_max
+/// fold, and the assignment order all follow that order, so the output is
+/// bit-identical to the dense [`schedule`] entry point over the same
+/// participant set.
+pub fn schedule_participants(
     meta: &Metadata,
     profiler: &Profiler,
     server: &ServerModel,
-    loads: &[ClientLoad],
+    parts: &[ParticipantLoad],
     max_tiers: usize,
 ) -> Schedule {
+    debug_assert!(
+        parts.windows(2).all(|w| w[0].client_id < w[1].client_id),
+        "participant loads must be sorted ascending by client id"
+    );
     let tiers = max_tiers.min(meta.max_tiers).max(1);
 
-    // Estimate every participating client in every tier.
-    let mut est: Vec<Vec<f64>> = Vec::with_capacity(loads.len());
-    for (k, load) in loads.iter().enumerate() {
-        if !load.participating {
-            est.push(Vec::new());
-            continue;
-        }
-        est.push(
+    // Estimate every participant in every tier.
+    let est: Vec<Vec<f64>> = parts
+        .iter()
+        .map(|p| {
             (1..=tiers)
-                .map(|m| estimate_round_time(meta, profiler, server, k, m, load.n_batches))
-                .collect(),
-        );
-    }
+                .map(|m| estimate_round_time(meta, profiler, server, p.client_id, m, p.n_batches))
+                .collect()
+        })
+        .collect();
 
     // Line 31: T_max = max_k min_m T̂_k(m).
     let t_max = est
         .iter()
-        .filter(|e| !e.is_empty())
         .map(|e| e.iter().cloned().fold(f64::INFINITY, f64::min))
         .fold(0.0, f64::max);
 
     // Line 33: every client takes the largest tier with T̂ ≤ T_max; the
     // straggler itself lands on its argmin tier.
-    let assignments = loads
+    let assignments = parts
         .iter()
-        .enumerate()
-        .filter(|(_, l)| l.participating)
-        .map(|(k, _)| {
-            let e = &est[k];
+        .zip(&est)
+        .map(|(p, e)| {
             let best = e.iter().cloned().fold(f64::INFINITY, f64::min);
             let mut tier = 0usize;
             for m in (1..=tiers).rev() {
@@ -174,7 +196,7 @@ pub fn schedule(
                     .unwrap_or(0);
             }
             Assignment {
-                client_id: k,
+                client_id: p.client_id,
                 tier,
                 est_secs: e[tier - 1],
                 est_best_secs: best,
@@ -185,6 +207,25 @@ pub fn schedule(
     let sched = Schedule { assignments, t_max };
     debug_assert!(sched.validate(tiers).is_ok(), "scheduler invariants violated");
     sched
+}
+
+/// The dynamic tier scheduler over a dense fleet-indexed load vector.
+/// Thin wrapper extracting the participating entries (ascending by
+/// construction) and delegating to [`schedule_participants`].
+pub fn schedule(
+    meta: &Metadata,
+    profiler: &Profiler,
+    server: &ServerModel,
+    loads: &[ClientLoad],
+    max_tiers: usize,
+) -> Schedule {
+    let parts: Vec<ParticipantLoad> = loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.participating)
+        .map(|(k, l)| ParticipantLoad { client_id: k, n_batches: l.n_batches })
+        .collect();
+    schedule_participants(meta, profiler, server, &parts, max_tiers)
 }
 
 #[cfg(test)]
@@ -268,6 +309,35 @@ mod tests {
         let loads = vec![ClientLoad { n_batches: 2, participating: true }; 2];
         let s = schedule(&meta, &prof, &server(), &loads, 3);
         assert!(s.assignments.iter().all(|a| a.tier <= 3));
+    }
+
+    #[test]
+    fn sparse_participants_match_dense_schedule() {
+        let Some(meta) = tiny_meta() else { return };
+        let mut prof = Profiler::new(profile(&meta), 6, 0.5);
+        prof.observe(2, 4, profile(&meta).client_batch_secs[3] * 10.0, 30e6 / 8.0);
+        prof.observe(5, 4, profile(&meta).client_batch_secs[3] / 2.0, 80e6 / 8.0);
+        let mut loads = vec![ClientLoad { n_batches: 3, participating: false }; 6];
+        for k in [1, 2, 5] {
+            loads[k].participating = true;
+        }
+        let dense = schedule(&meta, &prof, &server(), &loads, meta.max_tiers);
+        let parts: Vec<ParticipantLoad> = [1, 2, 5]
+            .into_iter()
+            .map(|k| ParticipantLoad { client_id: k, n_batches: 3 })
+            .collect();
+        let sparse = schedule_participants(&meta, &prof, &server(), &parts, meta.max_tiers);
+        assert_eq!(dense.t_max.to_bits(), sparse.t_max.to_bits());
+        assert_eq!(dense.assignments.len(), sparse.assignments.len());
+        for (a, b) in dense.assignments.iter().zip(&sparse.assignments) {
+            assert_eq!((a.client_id, a.tier), (b.client_id, b.tier));
+            assert_eq!(a.est_secs.to_bits(), b.est_secs.to_bits());
+            assert_eq!(a.est_best_secs.to_bits(), b.est_best_secs.to_bits());
+        }
+        // binary-search lookups agree with membership
+        assert_eq!(sparse.try_tier_of(1), Some(sparse.tier_of(1)));
+        assert_eq!(sparse.try_tier_of(0), None);
+        assert_eq!(sparse.try_tier_of(4), None);
     }
 
     #[test]

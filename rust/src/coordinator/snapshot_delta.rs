@@ -291,7 +291,29 @@ pub fn apply(prev: &[f32], delta: &SnapshotDelta) -> Result<Vec<f32>> {
     }
 }
 
-/// Per-client last-seen global snapshots for downlink accounting.
+/// Content-addressed snapshot key: `(broadcast tag, FNV-1a checksum of the
+/// parameter bits)`. The tag is the round index for the synchronous engines
+/// and the flush-window index for the async engine; within one tag every
+/// distinct broadcast content gets its own checksum, so two clients share a
+/// key exactly when they last saw the *same* broadcast.
+type SnapKey = (u64, u64);
+
+#[derive(Debug, Clone)]
+struct StoredSnapshot {
+    params: Vec<f32>,
+    /// Clients currently referencing this snapshot.
+    rc: usize,
+}
+
+/// Per-client last-seen global snapshots for downlink accounting, stored
+/// **content-addressed**: clients map to a [`SnapKey`] into a refcounted
+/// `SnapshotStore`, so every client that last saw the same broadcast shares
+/// ONE resident copy. In sync mode all of a round's participants see the
+/// same broadcast, so resident memory is O(distinct broadcast rounds still
+/// referenced × params) — not O(fleet × params), which is what makes
+/// million-client fleets (`[run] fleet = "cohort"`) affordable. An entry is
+/// freed the moment its last reference moves on (a newer broadcast or a
+/// churn eviction).
 ///
 /// A client that has never participated (or just arrived via churn) has no
 /// snapshot and pays the full download. Snapshots record the model as
@@ -310,12 +332,13 @@ pub fn apply(prev: &[f32], delta: &SnapshotDelta) -> Result<Vec<f32>> {
 /// codec at all).
 #[derive(Debug, Clone, Default)]
 pub struct DeltaTracker {
-    last_seen: Vec<Option<Vec<f32>>>,
+    refs: std::collections::HashMap<usize, SnapKey>,
+    store: std::collections::HashMap<SnapKey, StoredSnapshot>,
 }
 
 impl DeltaTracker {
-    pub fn new(clients: usize) -> Self {
-        Self { last_seen: vec![None; clients] }
+    pub fn new() -> Self {
+        Self::default()
     }
 
     /// Simulated downlink bytes for client `k` when the broadcast prefix is
@@ -325,7 +348,7 @@ impl DeltaTracker {
     /// remainder of the download (aux head, framing) stays raw; the result
     /// never exceeds `full_bytes`.
     pub fn downlink_bytes(&self, k: usize, cur_prefix: &[f32], full_bytes: usize) -> usize {
-        let Some(prev) = self.last_seen.get(k).and_then(|s| s.as_ref()) else {
+        let Some(prev) = self.refs.get(&k).map(|key| &self.store[key].params) else {
             return full_bytes;
         };
         if prev.len() < cur_prefix.len() {
@@ -335,31 +358,74 @@ impl DeltaTracker {
         (encoded_bytes(&prev[..cur_prefix.len()], cur_prefix) + raw_rest).min(full_bytes)
     }
 
-    /// Record that client `k` received `broadcast` this round.
-    pub fn note_broadcast(&mut self, k: usize, broadcast: &[f32]) {
-        if let Some(slot) = self.last_seen.get_mut(k) {
-            match slot {
-                Some(prev) if prev.len() == broadcast.len() => prev.copy_from_slice(broadcast),
-                _ => *slot = Some(broadcast.to_vec()),
+    /// Drop one reference to `key`, freeing the stored snapshot when it was
+    /// the last.
+    fn release(&mut self, key: SnapKey) {
+        if let Some(s) = self.store.get_mut(&key) {
+            s.rc -= 1;
+            if s.rc == 0 {
+                self.store.remove(&key);
             }
+        }
+    }
+
+    fn insert_ref(&mut self, k: usize, key: SnapKey, broadcast: &[f32]) {
+        if self.refs.get(&k) == Some(&key) {
+            return; // already referencing this exact broadcast
+        }
+        if let Some(old) = self.refs.insert(k, key) {
+            self.release(old);
+        }
+        self.store
+            .entry(key)
+            .or_insert_with(|| StoredSnapshot { params: broadcast.to_vec(), rc: 0 })
+            .rc += 1;
+    }
+
+    /// Record that client `k` received `broadcast` under `tag` (round index
+    /// for the sync engines, flush-window index for async).
+    pub fn note_broadcast(&mut self, k: usize, tag: u64, broadcast: &[f32]) {
+        let key = (tag, crate::simulation::fnv1a_params(broadcast));
+        self.insert_ref(k, key, broadcast);
+    }
+
+    /// Record one broadcast for a whole participant set: the checksum is
+    /// computed once and all `ids` share one stored snapshot.
+    pub fn note_broadcast_all(&mut self, ids: &[usize], tag: u64, broadcast: &[f32]) {
+        let key = (tag, crate::simulation::fnv1a_params(broadcast));
+        for &k in ids {
+            self.insert_ref(k, key, broadcast);
         }
     }
 
     /// Whether client `k` has a snapshot to delta against.
     pub fn has_snapshot(&self, k: usize) -> bool {
-        self.last_seen.get(k).and_then(|s| s.as_ref()).is_some()
+        self.refs.contains_key(&k)
     }
 
-    /// Drop client `k`'s snapshot. Called when the scenario engine churns
-    /// the client out (`depart`): without eviction a departed client pins
-    /// its full model snapshot for the rest of the run — pure leaked
-    /// memory, since only `note_broadcast` (never reached for inactive
-    /// clients) could touch the slot again. Idempotent, and invisible to
-    /// byte accounting: an inactive client downloads nothing.
+    /// Drop client `k`'s reference (and the stored snapshot if it was the
+    /// last). Called when the scenario engine churns the client out
+    /// (`depart`): without eviction a departed client pins its snapshot for
+    /// the rest of the run — pure leaked memory, since only
+    /// `note_broadcast` (never reached for inactive clients) could touch
+    /// the reference again. Idempotent, and invisible to byte accounting:
+    /// an inactive client downloads nothing.
     pub fn evict(&mut self, k: usize) {
-        if let Some(slot) = self.last_seen.get_mut(k) {
-            *slot = None;
+        if let Some(old) = self.refs.remove(&k) {
+            self.release(old);
         }
+    }
+
+    /// Parameter bytes currently resident in the shared snapshot store
+    /// (the `snapshot_resident_bytes` stats/CSV column). A keyed sum over
+    /// distinct snapshots — O(distinct broadcasts), never O(clients).
+    pub fn resident_bytes(&self) -> u64 {
+        self.store.values().map(|s| 4 * s.params.len() as u64).sum()
+    }
+
+    /// Distinct broadcasts currently resident (each shared by ≥ 1 client).
+    pub fn distinct_snapshots(&self) -> usize {
+        self.store.len()
     }
 }
 
@@ -537,11 +603,11 @@ mod tests {
 
     #[test]
     fn tracker_accounts_and_updates() {
-        let mut t = DeltaTracker::new(2);
+        let mut t = DeltaTracker::new();
         let g0: Vec<f32> = (0..8).map(|i| i as f32).collect();
         let full = 4 * g0.len() + 8; // model + 8 bytes of raw aux head
         assert_eq!(t.downlink_bytes(0, &g0, full), full, "no snapshot -> full download");
-        t.note_broadcast(0, &g0);
+        t.note_broadcast(0, 0, &g0);
         assert!(t.has_snapshot(0) && !t.has_snapshot(1));
         // unchanged model: header + raw remainder only
         assert_eq!(t.downlink_bytes(0, &g0, full), HEADER_BYTES + 8);
@@ -556,5 +622,58 @@ mod tests {
         // never exceeds the full download even for adversarial inputs
         let noisy: Vec<f32> = (0..8).map(|i| (i as f32).sin() * 1e9).collect();
         assert!(t.downlink_bytes(0, &noisy, 16) <= 16);
+    }
+
+    #[test]
+    fn tracker_shares_snapshots_and_refcounts_them() {
+        let mut t = DeltaTracker::new();
+        let g0: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let g1: Vec<f32> = g0.iter().map(|v| v + 1.0).collect();
+        let bytes = 4 * g0.len() as u64;
+
+        // a whole participant set referencing one broadcast stores it once
+        t.note_broadcast_all(&[0, 1, 2, 3], 0, &g0);
+        assert_eq!(t.distinct_snapshots(), 1, "same broadcast shared, not copied");
+        assert_eq!(t.resident_bytes(), bytes);
+
+        // two clients move to round 1: both rounds stay resident (clients
+        // 2/3 still reference round 0), but still one copy per round
+        t.note_broadcast_all(&[0, 1], 1, &g1);
+        assert_eq!(t.distinct_snapshots(), 2);
+        assert_eq!(t.resident_bytes(), 2 * bytes);
+
+        // stragglers catch up: round 0's last references drop, so its
+        // snapshot is freed
+        t.note_broadcast_all(&[2, 3], 1, &g1);
+        assert_eq!(t.distinct_snapshots(), 1, "unreferenced broadcast freed");
+        assert_eq!(t.resident_bytes(), bytes);
+
+        // same content under the SAME tag shares; a re-broadcast of equal
+        // bits under a new tag is a distinct key (tag disambiguates rounds)
+        t.note_broadcast(4, 1, &g1);
+        assert_eq!(t.distinct_snapshots(), 1);
+        t.note_broadcast(5, 2, &g1);
+        assert_eq!(t.distinct_snapshots(), 2);
+
+        // eviction releases references one by one; the store drains to
+        // empty when the last client departs
+        for k in 0..6 {
+            t.evict(k);
+            t.evict(k); // idempotent
+        }
+        assert_eq!(t.distinct_snapshots(), 0);
+        assert_eq!(t.resident_bytes(), 0);
+        assert!(!t.has_snapshot(0));
+    }
+
+    #[test]
+    fn tracker_renote_same_broadcast_is_stable() {
+        let mut t = DeltaTracker::new();
+        let g0: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        t.note_broadcast(0, 3, &g0);
+        t.note_broadcast(0, 3, &g0); // no-op: refcount must not inflate
+        assert_eq!(t.distinct_snapshots(), 1);
+        t.evict(0);
+        assert_eq!(t.distinct_snapshots(), 0, "single evict frees the single ref");
     }
 }

@@ -21,7 +21,8 @@ use crate::fed::{Method, PrivacyCfg, RoundEnv};
 use crate::metrics::{CsvWriter, Recorder, RoundRecord, RunReport};
 use crate::runtime::{Runtime, StepEngine};
 use crate::simulation::{
-    DynamicEnvironment, EventRecord, ResourceProfile, ScenarioEngine, ServerModel, VirtualClock,
+    DynamicEnvironment, EventRecord, FleetEngine, ResourceProfile, Scenario, ScenarioEngine,
+    ScenarioRound, ServerModel, VirtualClock,
 };
 use crate::util::Rng64;
 
@@ -42,7 +43,12 @@ pub struct Experiment {
     rng: Rng64,
     env_dyn: Option<DynamicEnvironment>,
     /// Trace-driven environment (churn, links, deadlines); `None` = static.
-    scenario: Option<ScenarioEngine>,
+    scenario: Option<FleetSim>,
+    /// Clients that have ever been sampled this run. Only participants
+    /// acquire codec state (downlink base snapshots, uplink residuals), so
+    /// the per-round depart sweep walks this set — O(ever sampled), never
+    /// O(fleet).
+    ever_sampled: std::collections::BTreeSet<usize>,
     /// Per-client last-seen snapshots for delta-downlink accounting
     /// (scenario mode with `delta_downlink = true`).
     delta: Option<DeltaTracker>,
@@ -57,6 +63,47 @@ pub struct Experiment {
     lr: f32,
     plateau: usize,
     best_acc: f64,
+}
+
+/// The fleet-state engine behind a scenario run. `Naive` is the legacy
+/// per-client loop: every client's link walk and fault stream advances
+/// every round, active or not. `Cohort` advances non-participants at
+/// cohort granularity and materializes a sampled client's streams lazily
+/// on first participation ([`FleetEngine`]) — bit-identical to naive by
+/// construction (pure per-client stream derivation + fixed per-round draw
+/// schedules), pinned by the golden cross-check in
+/// `tests/fleet_cross_check.rs`.
+enum FleetSim {
+    Naive(ScenarioEngine),
+    Cohort(FleetEngine),
+}
+
+impl FleetSim {
+    fn scenario(&self) -> &Scenario {
+        match self {
+            FleetSim::Naive(e) => e.scenario(),
+            FleetSim::Cohort(e) => e.scenario(),
+        }
+    }
+
+    /// Advance the fleet to round `r`. `ids` (the round's participants,
+    /// ascending) is what the cohort engine materializes; the naive engine
+    /// generates every client and ignores it.
+    fn begin_round(&mut self, r: usize, ids: &[usize]) -> ScenarioRound {
+        match self {
+            FleetSim::Naive(e) => e.begin_round(r),
+            FleetSim::Cohort(e) => e.begin_round(r, ids),
+        }
+    }
+
+    /// Cohorts advanced by the last `begin_round` (0 in naive mode, where
+    /// the engine advances clients, not cohorts).
+    fn cohort_advances(&self) -> u64 {
+        match self {
+            FleetSim::Naive(_) => 0,
+            FleetSim::Cohort(e) => e.last_cohort_advances(),
+        }
+    }
 }
 
 impl Experiment {
@@ -126,14 +173,22 @@ impl Experiment {
         let delta = scenario_spec
             .as_ref()
             .filter(|sc| sc.delta_downlink)
-            .map(|sc| DeltaTracker::new(sc.total_clients()));
+            .map(|_| DeltaTracker::new());
         let fleet = scenario_spec
             .as_ref()
             .map(|sc| sc.total_clients())
             .unwrap_or(cfg.clients.count);
         let uplink = (cfg.run.uplink != UplinkCodec::Raw)
             .then(|| UplinkSession::new(cfg.run.uplink, fleet));
-        let scenario = scenario_spec.map(ScenarioEngine::new).transpose()?;
+        let scenario = scenario_spec
+            .map(|sc| -> Result<FleetSim> {
+                Ok(if cfg.run.fleet == "cohort" {
+                    FleetSim::Cohort(FleetEngine::new(sc)?)
+                } else {
+                    FleetSim::Naive(ScenarioEngine::new(sc)?)
+                })
+            })
+            .transpose()?;
 
         // --- method ---
         let method = build_method(&cfg, &rt)?;
@@ -171,6 +226,7 @@ impl Experiment {
             rng,
             env_dyn,
             scenario,
+            ever_sampled: std::collections::BTreeSet::new(),
             delta,
             uplink,
             event_log: Vec::new(),
@@ -206,7 +262,36 @@ impl Experiment {
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
             .wrapping_add((r as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
         let mut rng = Rng64::seed_from_u64(mix ^ 0x5A4D_504C);
-        let mut ids = match self.scenario.as_ref().map(|e| e.scenario()) {
+        let sc = self.scenario.as_ref().map(|e| e.scenario());
+        if let Some(count) = self.cfg.run.sample_count {
+            // absolute sampling: O(count) expected rejection sampling over
+            // the active-cohort id ranges — never an O(fleet) pass. The
+            // code is mode-independent (naive and cohort draw the same
+            // stream the same way), so switching `run.fleet` cannot move
+            // the sample.
+            let ranges: Vec<(usize, usize)> = match sc {
+                None => vec![(0, self.cfg.clients.count)],
+                Some(s) => s.active_ranges(r),
+            };
+            let total: usize = ranges.iter().map(|&(_, c)| c).sum();
+            if total == 0 {
+                return Vec::new();
+            }
+            let want = count.min(total);
+            let mut picked = std::collections::BTreeSet::new();
+            while picked.len() < want {
+                let mut i = (rng.next_u64() % total as u64) as usize;
+                for &(base, cnt) in &ranges {
+                    if i < cnt {
+                        picked.insert(base + i);
+                        break;
+                    }
+                    i -= cnt;
+                }
+            }
+            return picked.into_iter().collect();
+        }
+        let mut ids = match sc {
             None => {
                 let n = self.cfg.clients.count;
                 let sample = ((n as f64) * self.cfg.run.sample_frac).round().max(1.0) as usize;
@@ -289,7 +374,8 @@ impl Experiment {
             // and copy the model being broadcast for post-round snapshot
             // bookkeeping (the delta tracker must record the PRE-round
             // global, which the method mutates during the round)
-            let scenario_round = self.scenario.as_mut().map(|e| e.begin_round(r));
+            self.ever_sampled.extend(ids.iter().copied());
+            let scenario_round = self.scenario.as_mut().map(|e| e.begin_round(r, &ids));
             let broadcast = self.delta.is_some().then(|| self.method.global_params().to_vec());
 
             let next_ids = (r + 1 < rounds).then(|| self.sample_for_round(r + 1));
@@ -323,27 +409,33 @@ impl Experiment {
                 self.method.round(&mut env)?
             };
             // every participant received this round's broadcast (straggled
-            // or not) — future downlinks delta against it
+            // or not) — future downlinks delta against it. The tracker is
+            // content-addressed: all of this round's participants share one
+            // refcounted stored snapshot.
             if let (Some(t), Some(b)) = (self.delta.as_mut(), broadcast.as_ref()) {
-                for &k in &ids {
-                    t.note_broadcast(k, b);
-                }
+                t.note_broadcast_all(&ids, r as u64, b);
             }
             // scenario depart: a churned-out device does not keep codec
             // state across its absence — drop its pinned downlink base
             // snapshot and uplink residual so a rejoin re-seeds from a
-            // fresh full broadcast. (Bugfix: before this, a departed
-            // client pinned its snapshot for the rest of the run.)
+            // fresh full broadcast. Only ever-sampled clients can hold
+            // codec state (broadcast notes and uplink residuals are
+            // participant-only), so the sweep walks that set — O(ever
+            // sampled), never O(fleet) — and a cohort departing with zero
+            // members ever sampled leaves nothing to clean up. Departure
+            // is permanent (cohort activity is one [arrive, depart)
+            // interval), so evicted ids also leave the sweep set.
             if let Some(eng) = self.scenario.as_ref() {
                 let sc = eng.scenario();
-                for k in 0..self.profiles.len() {
-                    if !sc.active_at(k, r) {
-                        if let Some(t) = self.delta.as_mut() {
-                            t.evict(k);
-                        }
-                        if let Some(up) = self.uplink.as_ref() {
-                            up.evict(k);
-                        }
+                let departed: Vec<usize> =
+                    self.ever_sampled.iter().copied().filter(|&k| !sc.active_at(k, r)).collect();
+                for k in departed {
+                    self.ever_sampled.remove(&k);
+                    if let Some(t) = self.delta.as_mut() {
+                        t.evict(k);
+                    }
+                    if let Some(up) = self.uplink.as_ref() {
+                        up.evict(k);
                     }
                 }
             }
@@ -380,6 +472,10 @@ impl Experiment {
             } else {
                 outcome.tiers.iter().sum::<usize>() as f64 / outcome.tiers.len() as f64
             };
+            let resident = self.delta.as_ref().map(|t| t.resident_bytes()).unwrap_or(0);
+            let cohort_adv = self.scenario.as_ref().map(|e| e.cohort_advances()).unwrap_or(0);
+            crate::runtime::note_snapshot_resident_bytes(resident);
+            crate::runtime::note_cohort_advances(cohort_adv);
             let rec = RoundRecord {
                 round: r,
                 sim_time: self.clock.now(),
@@ -400,6 +496,8 @@ impl Experiment {
                 retries: outcome.retries,
                 staleness: 0.0,
                 tier_flushes: 0,
+                snapshot_resident_bytes: resident,
+                cohort_advances: cohort_adv,
                 host_secs: t0.elapsed().as_secs_f64(),
             };
             crate::log::info!(
@@ -442,6 +540,8 @@ impl Experiment {
                     rec.retries,
                     rec.staleness,
                     rec.tier_flushes,
+                    rec.snapshot_resident_bytes,
+                    rec.cohort_advances,
                     rec.host_secs
                 ])?;
             }
@@ -489,10 +589,13 @@ impl Experiment {
         // pre-generate the per-window scenario state with the usual
         // in-order walk, so churn/links/faults become pure lookups charged
         // in virtual time by the event engine
+        // async mode is always the naive fleet engine (config validation
+        // rejects `fleet = "cohort"` + `async_tiers`), so every window row
+        // is dense
         let scen_rounds: Option<Vec<_>> = self
             .scenario
             .as_mut()
-            .map(|e| (0..rounds).map(|r| e.begin_round(r)).collect());
+            .map(|e| (0..rounds).map(|r| e.begin_round(r, &[])).collect());
 
         let run: AsyncRun = {
             let ctx = AsyncCtx {
@@ -540,6 +643,11 @@ impl Experiment {
         );
         self.event_log = events;
         let host_per = t0.elapsed().as_secs_f64() / windows.len().max(1) as f64;
+        // the async engine notes broadcasts as it goes; record the
+        // end-of-session residency on every window row (no per-window
+        // samples exist once the event loop has drained)
+        let resident = self.delta.as_ref().map(|t| t.resident_bytes()).unwrap_or(0);
+        crate::runtime::note_snapshot_resident_bytes(resident);
         for w in &windows {
             self.clock.advance(window_secs);
             let mean_tier = if w.tiers.is_empty() {
@@ -567,6 +675,8 @@ impl Experiment {
                 retries: w.retries,
                 staleness: if w.merged > 0 { w.staleness_sum / w.merged as f64 } else { 0.0 },
                 tier_flushes: w.tier_flushes,
+                snapshot_resident_bytes: resident,
+                cohort_advances: 0,
                 host_secs: host_per,
             };
             crate::log::info!(
@@ -596,6 +706,8 @@ impl Experiment {
                     rec.retries,
                     rec.staleness,
                     rec.tier_flushes,
+                    rec.snapshot_resident_bytes,
+                    rec.cohort_advances,
                     rec.host_secs
                 ])?;
             }
@@ -640,6 +752,8 @@ impl Experiment {
                 "retries",
                 "staleness",
                 "tier_flushes",
+                "snapshot_resident_bytes",
+                "cohort_advances",
                 "host_secs",
             ],
         )?))

@@ -94,7 +94,7 @@ impl RoundEnv<'_> {
     pub fn shard_size(&self, k: usize) -> usize {
         let base = self.partition.size(k);
         match self.scenario {
-            Some(sr) => ((base as f64) * sr.data_scale[k]).ceil() as usize,
+            Some(sr) => ((base as f64) * sr.scale(k)).ceil() as usize,
             None => base,
         }
     }
@@ -122,7 +122,7 @@ impl RoundEnv<'_> {
     /// time-varying link when one is active, the static profile otherwise.
     pub fn comm_secs(&self, k: usize, bytes: usize) -> f64 {
         match self.scenario {
-            Some(sr) => sr.links[k].comm_secs(bytes),
+            Some(sr) => sr.link(k).comm_secs(bytes),
             None => self.profiles[k].comm_secs(bytes),
         }
     }
@@ -399,6 +399,7 @@ mod tests {
         let link = crate::simulation::LinkQuality { mbps: 8.0, latency_secs: 0.1 };
         let sr = ScenarioRound {
             round: 0,
+            ids: None,
             links: vec![link; 2],
             data_scale: vec![1.0; 2],
             deadline_secs: None,

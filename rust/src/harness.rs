@@ -14,7 +14,7 @@ use crate::config::{
 use crate::coordinator::{resolve_threads, FoldStrategy, UplinkCodec};
 use crate::experiment::Experiment;
 use crate::metrics::{RoundRecord, RunReport};
-use crate::simulation::{ProfilePool, Scenario};
+use crate::simulation::{CohortSpec, DeadlinePolicy, ProfilePool, Scenario};
 use crate::util::json::{self, Json};
 
 /// Builder with testbed-sized defaults; every table harness starts here and
@@ -68,6 +68,10 @@ pub struct RunSpec {
     /// Asynchronous tier engine: per-tier flush cadences on a virtual-time
     /// event queue instead of the synchronous global-round barrier.
     pub async_tiers: bool,
+    /// Fleet engine ("naive" | "cohort"); cohort mode needs a scenario.
+    pub fleet: String,
+    /// Absolute participants per round (overrides `sample_frac` when set).
+    pub sample_count: Option<usize>,
     pub lr: f32,
     pub out_name: Option<String>,
     /// Trace-driven environment scenario; when set, `clients` must equal
@@ -108,6 +112,8 @@ impl Default for RunSpec {
             prox_mu: 0.0,
             simd: "auto".into(),
             async_tiers: false,
+            fleet: "naive".into(),
+            sample_count: None,
             lr: 1e-3,
             out_name: None,
             scenario: None,
@@ -165,6 +171,8 @@ impl RunSpec {
                 prox_mu: self.prox_mu,
                 simd: self.simd.clone(),
                 async_tiers: self.async_tiers,
+                fleet: self.fleet.clone(),
+                sample_count: self.sample_count,
             },
             sim: SimCfg {
                 server_speedup: 8.0,
@@ -1598,6 +1606,159 @@ pub fn measure_simd_throughput(budget: Duration) -> Result<SimdThroughput> {
         "SIMD probe: a non-scalar level diverged from the scalar core's bits"
     );
     Ok(SimdThroughput { active: prior.name(), levels, bit_identical })
+}
+
+/// The committed million-client scenario — the largest leg of the
+/// `fleet_scale` bench object. Pinned byte-for-byte against the
+/// programmatic [`fleet_scenario`] builder by `tests/fleet_scale.rs`.
+pub const MEGA_FLEET_TOML: &str =
+    include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/mega_fleet.toml"));
+
+/// The mega-fleet scenario shape at an arbitrary fleet size: 60% backbone /
+/// 10% edge (arriving at round 1) / 30% metro, cohorts in the name order
+/// the TOML parser enumerates. `fleet_scenario(1_000_000)` must equal the
+/// parsed [`MEGA_FLEET_TOML`] field for field — edit both together.
+pub fn fleet_scenario(clients: usize) -> Scenario {
+    assert!(clients >= 10, "fleet_scenario needs at least 10 clients (got {clients})");
+    let backbone = clients * 6 / 10;
+    let edge = clients / 10;
+    let metro = clients - backbone - edge;
+
+    let mut c_backbone = CohortSpec::new("backbone", backbone, 1.0, 40.0);
+    c_backbone.walk_sigma = 0.05;
+    c_backbone.latency_ms = 10.0;
+    c_backbone.floor_mbps = 5.0;
+
+    let mut c_edge = CohortSpec::new("edge", edge, 0.25, 4.0);
+    c_edge.arrive = 1;
+    c_edge.data_start = 0.5;
+    c_edge.data_growth = 0.2;
+    c_edge.walk_sigma = 0.1;
+    c_edge.latency_ms = 40.0;
+    c_edge.floor_mbps = 1.0;
+
+    let mut c_metro = CohortSpec::new("metro", metro, 0.5, 12.0);
+    c_metro.walk_sigma = 0.08;
+    c_metro.latency_ms = 20.0;
+    c_metro.floor_mbps = 2.0;
+
+    Scenario {
+        name: "mega-fleet".into(),
+        seed: 97,
+        deadline_secs: None,
+        on_deadline: DeadlinePolicy::Drop,
+        delta_downlink: true,
+        cohorts: vec![c_backbone, c_edge, c_metro],
+        links: Vec::new(),
+    }
+}
+
+/// One `fleet_scale` leg: the mega-fleet scenario shape at fleet size K
+/// under the cohort-vectorized engine (`run.fleet = "cohort"`), with a
+/// fixed absolute participant count so the only axis that varies across
+/// legs is the fleet itself.
+#[derive(Debug, Clone)]
+pub struct FleetScaleLeg {
+    pub fleet: usize,
+    /// Participants per round (constant across legs by construction).
+    pub participants: usize,
+    pub rounds: usize,
+    /// Mean simulated round makespan.
+    pub mean_makespan_secs: f64,
+    /// Mean host seconds per round. With participants and per-participant
+    /// work pinned, growth along the fleet axis is pure coordinator-side
+    /// overhead — the quantity the CI sublinearity gate tracks.
+    pub coordinator_secs_per_round: f64,
+    /// Snapshot-store resident bytes at the end of the run.
+    pub resident_bytes: u64,
+    /// The O(distinct broadcast rounds × params) ceiling on
+    /// `resident_bytes` (rounds · params · 4); never O(fleet × params).
+    pub resident_bound_bytes: u64,
+    /// Cohort advances in the final round — bounded by the cohort count,
+    /// never the fleet size.
+    pub cohort_advances: u64,
+}
+
+/// Result of the fleet-scale probe — the `fleet_scale` object in
+/// `BENCH_hotpath.json`: the same DTFL round loop at several fleet sizes.
+#[derive(Debug, Clone)]
+pub struct FleetScaleThroughput {
+    pub sample_count: usize,
+    pub legs: Vec<FleetScaleLeg>,
+}
+
+impl FleetScaleThroughput {
+    /// The `fleet_scale` object recorded in `BENCH_hotpath.json`.
+    pub fn to_json(&self, source: &str) -> Json {
+        let legs: Vec<Json> = self
+            .legs
+            .iter()
+            .map(|l| {
+                json::obj(vec![
+                    ("fleet", json::num(l.fleet as f64)),
+                    ("participants", json::num(l.participants as f64)),
+                    ("rounds", json::num(l.rounds as f64)),
+                    ("mean_makespan_secs", json::num(l.mean_makespan_secs)),
+                    (
+                        "coordinator_secs_per_round",
+                        json::num(l.coordinator_secs_per_round),
+                    ),
+                    ("resident_bytes", json::num(l.resident_bytes as f64)),
+                    ("resident_bound_bytes", json::num(l.resident_bound_bytes as f64)),
+                    ("cohort_advances", json::num(l.cohort_advances as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("sample_count", json::num(self.sample_count as f64)),
+            ("legs", Json::Arr(legs)),
+            ("source", json::s(source)),
+        ])
+    }
+}
+
+/// Run the mega-fleet scenario shape at each fleet size in `fleets` under
+/// DTFL with the cohort-vectorized engine, a fixed absolute participant
+/// count, and a fixed total dataset — so per-round client work is constant
+/// and the legs isolate the coordinator's cost along the fleet axis.
+/// Shared by `benches/micro_hotpath.rs`, the cargo-test smoke recorder,
+/// and the release sublinearity gate in `tests/fleet_scale.rs`.
+pub fn measure_fleet_scale(fleets: &[usize], rounds: usize) -> Result<FleetScaleThroughput> {
+    let sample_count = 10usize;
+    let mut legs = Vec::with_capacity(fleets.len());
+    for &fleet in fleets {
+        let spec = RunSpec {
+            clients: fleet,
+            rounds,
+            batch_cap: Some(1),
+            // fixed dataset: sampled participants must not gain work as the
+            // fleet grows, so shards thin out instead of multiplying
+            train_total: 512,
+            test_total: 16,
+            eval_every: rounds.max(1),
+            threads: 0,
+            fleet: "cohort".into(),
+            sample_count: Some(sample_count),
+            scenario: Some(fleet_scenario(fleet)),
+            ..Default::default()
+        };
+        let mut exp = Experiment::new(spec.to_config())?;
+        let mut records = Vec::new();
+        exp.run_with(|r| records.push(r.clone()))?;
+        let n = records.len().max(1) as f64;
+        let params = exp.method.global_params().len();
+        legs.push(FleetScaleLeg {
+            fleet,
+            participants: sample_count,
+            rounds: records.len(),
+            mean_makespan_secs: records.iter().map(|r| r.makespan).sum::<f64>() / n,
+            coordinator_secs_per_round: records.iter().map(|r| r.host_secs).sum::<f64>() / n,
+            resident_bytes: records.last().map(|r| r.snapshot_resident_bytes).unwrap_or(0),
+            resident_bound_bytes: (records.len().max(1) * params * 4) as u64,
+            cohort_advances: records.last().map(|r| r.cohort_advances).unwrap_or(0),
+        });
+    }
+    Ok(FleetScaleThroughput { sample_count, legs })
 }
 
 /// Format a simulated duration the way the paper's tables do (integer

@@ -50,6 +50,16 @@ pub struct RoundRecord {
     pub staleness: f64,
     /// Tier flushes that fired in this async window (0 in sync mode).
     pub tier_flushes: usize,
+    /// Bytes resident in the content-addressed downlink snapshot store at
+    /// the end of this round (0 when delta downlink is off). All clients
+    /// that last saw the same broadcast share one stored copy, so this is
+    /// bounded by O(distinct broadcast rounds × params), never
+    /// O(fleet × params).
+    pub snapshot_resident_bytes: u64,
+    /// Cohort-granularity fleet advances this round (one per active
+    /// cohort under `run.fleet = "cohort"`; 0 under the naive engine,
+    /// which advances per client instead).
+    pub cohort_advances: u64,
     /// Host wall seconds actually spent executing this round.
     pub host_secs: f64,
 }
@@ -184,6 +194,8 @@ mod tests {
             retries: 0,
             staleness: 0.0,
             tier_flushes: 0,
+            snapshot_resident_bytes: 0,
+            cohort_advances: 0,
             host_secs: 0.1,
         }
     }

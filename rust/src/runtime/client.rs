@@ -45,6 +45,14 @@ pub struct RuntimeStats {
     /// Client updates quarantined by the round-engine sinks because they
     /// carried non-finite values (never folded into the global model).
     pub quarantined_updates: u64,
+    /// Bytes currently resident in the content-addressed downlink snapshot
+    /// store (last value reported by an experiment round; 0 when delta
+    /// downlink is off). Bounded by O(distinct broadcast rounds × params),
+    /// never O(fleet × params).
+    pub snapshot_resident_bytes: u64,
+    /// Cohort-granularity fleet advances performed by the cohort fleet
+    /// engine (one per active cohort per round; 0 under the naive engine).
+    pub cohort_advances: u64,
     /// Active SIMD dispatch level (`scalar|avx2|avx512|neon`) — process-wide
     /// and bit-neutral (see `runtime::simd`), surfaced for perf accounting.
     pub simd: &'static str,
@@ -64,6 +72,35 @@ pub fn note_quarantined_update() {
 /// Current process-wide quarantined-update count.
 pub fn quarantined_updates() -> u64 {
     QUARANTINED_UPDATES.load(Ordering::Relaxed)
+}
+
+/// Last-reported resident byte count of the content-addressed downlink
+/// snapshot store (store semantics — a gauge, not a counter).
+static SNAPSHOT_RESIDENT_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of cohort-granularity fleet advances.
+static COHORT_ADVANCES: AtomicU64 = AtomicU64::new(0);
+
+/// Record the downlink snapshot store's current resident bytes (the
+/// experiment driver calls this once per round).
+pub fn note_snapshot_resident_bytes(bytes: u64) {
+    SNAPSHOT_RESIDENT_BYTES.store(bytes, Ordering::Relaxed);
+}
+
+/// Record cohort advances performed for one round by the cohort fleet
+/// engine.
+pub fn note_cohort_advances(n: u64) {
+    COHORT_ADVANCES.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Current snapshot-store residency gauge.
+pub fn snapshot_resident_bytes() -> u64 {
+    SNAPSHOT_RESIDENT_BYTES.load(Ordering::Relaxed)
+}
+
+/// Cumulative process-wide cohort-advance count.
+pub fn cohort_advances() -> u64 {
+    COHORT_ADVANCES.load(Ordering::Relaxed)
 }
 
 /// Backend + artifact registry for one artifact set (one model config).
@@ -221,6 +258,8 @@ impl Runtime {
             fused_gn_passes,
             im2col_elisions,
             quarantined_updates: quarantined_updates(),
+            snapshot_resident_bytes: snapshot_resident_bytes(),
+            cohort_advances: cohort_advances(),
             simd: super::simd::active().name(),
         }
     }

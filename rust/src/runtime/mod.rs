@@ -33,7 +33,10 @@ pub mod tensor;
 
 pub use artifact::{ClientStepOut, FullStepOut, ServerStepOut, StepEngine, TrainState};
 pub use backend::{ExecBackend, ExecOut, RefBackend, StepKind};
-pub use client::{note_quarantined_update, quarantined_updates, Runtime, RuntimeStats};
+pub use client::{
+    cohort_advances, note_cohort_advances, note_quarantined_update, note_snapshot_resident_bytes,
+    quarantined_updates, snapshot_resident_bytes, Runtime, RuntimeStats,
+};
 pub use literal::Literal;
 pub use metadata::{load_f32_bin, Metadata, ParamEntry, TierMeta};
 pub use simd::{set_simd, SimdLevel};

@@ -1,0 +1,338 @@
+//! Cohort-vectorized fleet engine: million-client scenarios at
+//! O(participants + cohorts) coordinator cost per round.
+//!
+//! The naive [`super::ScenarioEngine`] allocates one link random walk and
+//! one fault stream per client and advances **every** stream **every**
+//! round — O(fleet) work and memory even when only 50 of 10^6 clients
+//! participate. [`FleetEngine`] is the TiFL-pool-shaped replacement
+//! (`[run] fleet = "cohort"`): non-participants advance at **cohort
+//! granularity** (membership, churn, and data-growth statistics are pure
+//! functions of the [`super::CohortSpec`], computed once per cohort per
+//! round), while sampled participants get their per-client derived-RNG
+//! streams **materialized lazily on first participation**.
+//!
+//! ## The lazy materialization contract
+//!
+//! Lazy must be invisible: the cohort engine's output for any participant
+//! set is bit-identical to the naive engine's (pinned by
+//! `tests/fleet_cross_check.rs`). Three properties of the stream design
+//! make that possible:
+//!
+//! 1. **Pure derivation.** Every client stream seeds from
+//!    [`super::Scenario::client_mix`] — a pure function of
+//!    `(scenario seed, client id)` — so materializing at round 7 starts
+//!    from the same state as allocating at round 0.
+//! 2. **Fixed consumption schedules.** A link walk consumes exactly one
+//!    normal variate per round ([`super::LinkProcess::advance`]); a fault
+//!    stream consumes exactly `retry_max + 3` uniforms per round
+//!    ([`super::CohortSpec::draw_fault`]), regardless of outcome. A round
+//!    a client sat out is therefore replayed by one discarded call.
+//! 3. **Per-client streams.** No stream ever reads another client's
+//!    draws, so *not* advancing the 999,950 non-participants cannot shift
+//!    a participant's trajectory.
+//!
+//! On first participation the engine replays rounds `0..=r` of both
+//! streams; afterwards each materialized client is caught up only across
+//! the rounds since its last appearance. Total replay work over a run is
+//! bounded by O(ever_sampled × rounds) — independent of fleet size.
+//!
+//! Materialized state is dropped as soon as a client's cohort departs
+//! (cohorts never re-arrive), so long-running churn scenarios don't
+//! accumulate streams for clients that can never participate again.
+
+use std::collections::HashMap;
+
+use crate::anyhow::Result;
+
+use super::network::LinkProcess;
+use super::scenario::{Scenario, ScenarioRound};
+use crate::util::Rng64;
+
+/// Lazily materialized per-client stream state. Exists only for clients
+/// that have participated at least once (and whose cohort has not yet
+/// departed).
+#[derive(Debug, Clone)]
+struct ClientStreams {
+    link: LinkProcess,
+    fault: Option<Rng64>,
+    /// Next round these streams will consume (rounds `0..caught_up` have
+    /// been replayed or drawn already).
+    caught_up: usize,
+}
+
+/// One cohort's aggregate statistics for one round — everything the
+/// coordinator needs to know about the cohort's non-participants, computed
+/// once per cohort per round from the spec (no per-member work).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CohortRoundStat {
+    /// First client id of the cohort (ids are contiguous per cohort).
+    pub first_id: usize,
+    /// Cohort size.
+    pub members: usize,
+    /// Present this round (arrived, not departed)?
+    pub active: bool,
+    /// Shared data-shard fraction of every member this round.
+    pub data_scale: f64,
+}
+
+/// Drives a [`Scenario`] at cohort granularity. Drop-in peer of
+/// [`super::ScenarioEngine`]: `begin_round` must be called once per round,
+/// in round order, but takes the round's (sorted) participant set and
+/// returns a **sparse** [`ScenarioRound`] covering exactly those clients.
+#[derive(Debug, Clone)]
+pub struct FleetEngine {
+    scenario: Scenario,
+    /// First client id of each cohort (prefix sums over cohort counts).
+    cohort_starts: Vec<usize>,
+    streams: HashMap<usize, ClientStreams>,
+    has_faults: bool,
+    next_round: usize,
+    /// Active cohorts processed in the most recent round.
+    last_cohort_advances: u64,
+}
+
+impl FleetEngine {
+    pub fn new(scenario: Scenario) -> Result<Self> {
+        scenario.validate()?;
+        let mut cohort_starts = Vec::with_capacity(scenario.cohorts.len());
+        let mut base = 0usize;
+        for c in &scenario.cohorts {
+            cohort_starts.push(base);
+            base += c.count;
+        }
+        let has_faults = scenario.has_faults();
+        Ok(Self {
+            scenario,
+            cohort_starts,
+            streams: HashMap::new(),
+            has_faults,
+            next_round: 0,
+            last_cohort_advances: 0,
+        })
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    pub fn clients(&self) -> usize {
+        self.scenario.total_clients()
+    }
+
+    /// Clients currently holding materialized streams (ever sampled, not
+    /// yet departed). Exposed for the leak regression tests.
+    pub fn materialized(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Active cohorts processed by the most recent `begin_round` — the
+    /// per-round `cohort_advances` accounting column.
+    pub fn last_cohort_advances(&self) -> u64 {
+        self.last_cohort_advances
+    }
+
+    /// Cohort index of client `k` via binary search over the start ids.
+    fn cohort_index_of(&self, k: usize) -> usize {
+        match self.cohort_starts.binary_search(&k) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Advance the fleet one round and snapshot state for exactly the
+    /// given participants (`ids` must be sorted ascending and active this
+    /// round). Cohort statistics are computed once per cohort; per-client
+    /// streams are materialized or caught up only for `ids`.
+    pub fn begin_round(&mut self, round: usize, ids: &[usize]) -> ScenarioRound {
+        assert_eq!(
+            round, self.next_round,
+            "FleetEngine::begin_round must be called once per round, in order"
+        );
+        self.next_round += 1;
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "participants must be sorted");
+
+        // one pass over the cohorts — the only O(cohorts) work this round
+        let stats: Vec<CohortRoundStat> = self
+            .scenario
+            .cohorts
+            .iter()
+            .zip(&self.cohort_starts)
+            .map(|(c, &first_id)| CohortRoundStat {
+                first_id,
+                members: c.count,
+                active: c.active_at(round),
+                data_scale: c.data_scale(round),
+            })
+            .collect();
+        self.last_cohort_advances = stats.iter().filter(|s| s.active).count() as u64;
+
+        // departed cohorts can never return: drop their materialized
+        // streams so ever-sampled state doesn't outlive the cohort
+        let scenario = &self.scenario;
+        self.streams.retain(|&k, _| scenario.active_at(k, round));
+
+        let mut links = Vec::with_capacity(ids.len());
+        let mut data_scale = Vec::with_capacity(ids.len());
+        let mut faults = self.has_faults.then(|| Vec::with_capacity(ids.len()));
+        let has_faults = self.has_faults;
+        for &k in ids {
+            let ci = self.cohort_index_of(k);
+            assert!(
+                stats[ci].active,
+                "client {k} sampled at round {round} but its cohort is inactive"
+            );
+            let scenario = &self.scenario;
+            let cohort = &scenario.cohorts[ci];
+            let st = self.streams.entry(k).or_insert_with(|| ClientStreams {
+                link: scenario.link_process_for(k),
+                fault: has_faults.then(|| scenario.fault_rng_for(k)),
+                caught_up: 0,
+            });
+            // replay the rounds this client sat out: the naive engine
+            // advances every stream every round, and both schedules
+            // consume a fixed number of draws per round, so catch-up is
+            // exactly (rounds missed) discarded calls
+            for rr in st.caught_up..round {
+                let _ = st.link.advance(rr);
+                if let Some(rng) = st.fault.as_mut() {
+                    let _ = cohort.draw_fault(rng);
+                }
+            }
+            links.push(st.link.advance(round));
+            if let Some(out) = faults.as_mut() {
+                let rng = st.fault.as_mut().expect("fault stream materialized");
+                out.push(cohort.draw_fault(rng));
+            }
+            st.caught_up = round + 1;
+            data_scale.push(stats[ci].data_scale);
+        }
+
+        ScenarioRound {
+            round,
+            ids: Some(ids.to_vec()),
+            links,
+            data_scale,
+            deadline_secs: self.scenario.deadline_secs,
+            on_deadline: self.scenario.on_deadline,
+            faults,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulation::ScenarioEngine;
+
+    const TOML: &str = r#"
+        [scenario]
+        name = "lazy-fleet"
+        seed = 42
+        deadline_secs = 40.0
+        on_deadline = "drop"
+        delta_downlink = true
+
+        [cohort.base]
+        count = 4
+        cpus = 1.0
+        mbps = 30.0
+        walk_sigma = 0.1
+
+        [cohort.crowd]
+        count = 2
+        cpus = 0.25
+        mbps = 8.0
+        arrive = 2
+        depart = 5
+        data_start = 0.5
+        data_growth = 0.5
+        crash_prob = 0.1
+        link_fail_prob = 0.4
+        retry_max = 2
+
+        [link.jam]
+        cohort = "base"
+        rounds = [3, 4]
+        mbps_scale = 0.25
+        add_latency_ms = 40.0
+    "#;
+
+    /// The core contract: for any participant schedule, the sparse cohort
+    /// round agrees bit-for-bit with the dense naive round — including
+    /// clients first sampled mid-run (lazy replay) and clients sampled
+    /// with gaps (catch-up).
+    #[test]
+    fn lazy_materialization_matches_naive_engine_bit_for_bit() {
+        let sc = Scenario::parse(TOML).unwrap();
+        let mut naive = ScenarioEngine::new(sc.clone()).unwrap();
+        let mut fleet = FleetEngine::new(sc).unwrap();
+        // deliberately gappy, late-start schedules per round
+        let schedule: &[&[usize]] = &[
+            &[0],
+            &[1, 3],
+            &[0, 4],
+            &[2, 4, 5],
+            &[0, 1, 2, 3, 5],
+            &[3],
+            &[0, 2],
+        ];
+        for (r, ids) in schedule.iter().enumerate() {
+            let dense = naive.begin_round(r);
+            let sparse = fleet.begin_round(r, ids);
+            for &k in *ids {
+                assert_eq!(sparse.link(k), dense.link(k), "round {r} client {k}: link");
+                assert_eq!(
+                    sparse.scale(k).to_bits(),
+                    dense.scale(k).to_bits(),
+                    "round {r} client {k}: data scale"
+                );
+                assert_eq!(sparse.fault(k), dense.fault(k), "round {r} client {k}: fault");
+            }
+            assert_eq!(sparse.deadline_secs, dense.deadline_secs);
+            assert_eq!(sparse.on_deadline, dense.on_deadline);
+        }
+    }
+
+    #[test]
+    fn streams_materialize_lazily_and_drop_on_depart() {
+        let sc = Scenario::parse(TOML).unwrap();
+        let mut fleet = FleetEngine::new(sc).unwrap();
+        assert_eq!(fleet.materialized(), 0);
+        let _ = fleet.begin_round(0, &[0, 1]);
+        assert_eq!(fleet.materialized(), 2, "only sampled clients materialize");
+        let _ = fleet.begin_round(1, &[0]);
+        assert_eq!(fleet.materialized(), 2, "catch-up does not re-materialize");
+        let _ = fleet.begin_round(2, &[4]);
+        assert_eq!(fleet.materialized(), 3, "crowd client materializes on arrival");
+        let _ = fleet.begin_round(3, &[]);
+        let _ = fleet.begin_round(4, &[]);
+        // crowd departs at round 5: its materialized stream is dropped
+        let _ = fleet.begin_round(5, &[0]);
+        assert_eq!(fleet.materialized(), 2, "departed cohort's streams dropped");
+    }
+
+    #[test]
+    fn cohort_advances_counts_active_cohorts() {
+        let sc = Scenario::parse(TOML).unwrap();
+        let mut fleet = FleetEngine::new(sc).unwrap();
+        let _ = fleet.begin_round(0, &[0]);
+        assert_eq!(fleet.last_cohort_advances(), 1, "crowd not yet arrived");
+        let _ = fleet.begin_round(1, &[0]);
+        let _ = fleet.begin_round(2, &[0]);
+        assert_eq!(fleet.last_cohort_advances(), 2, "crowd active in [2, 5)");
+        for r in 3..6 {
+            let _ = fleet.begin_round(r, &[0]);
+        }
+        assert_eq!(fleet.last_cohort_advances(), 1, "crowd departed at 5");
+    }
+
+    #[test]
+    fn sampling_an_inactive_client_panics() {
+        let sc = Scenario::parse(TOML).unwrap();
+        let mut fleet = FleetEngine::new(sc).unwrap();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fleet.begin_round(0, &[4]) // crowd arrives at round 2
+        }));
+        assert!(res.is_err(), "sampling a not-yet-arrived client must panic");
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod clock;
 pub mod events;
+pub mod fleet;
 pub mod network;
 pub mod profile;
 pub mod scenario;
@@ -14,6 +15,7 @@ pub use events::{
     fnv1a_params, staleness_merge, staleness_weight, Event, EventKind, EventQueue, EventRecord,
     NO_CLIENT,
 };
+pub use fleet::{CohortRoundStat, FleetEngine};
 pub use network::{LinkProcess, LinkQuality, LinkWindow};
 pub use profile::{
     DynamicEnvironment, ProfilePool, ResourceProfile, CASE1_PROFILES, CASE2_PROFILES,

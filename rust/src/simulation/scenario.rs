@@ -277,7 +277,10 @@ impl CohortSpec {
         self.crash_prob > 0.0 || self.corrupt_prob > 0.0 || self.link_fail_prob > 0.0
     }
 
-    fn active_at(&self, round: usize) -> bool {
+    /// Whether the cohort is present (arrived, not departed) at `round`.
+    /// Pure function of the spec — the fleet engine consults it per cohort,
+    /// never per client.
+    pub fn active_at(&self, round: usize) -> bool {
         let departed = match self.depart {
             Some(d) => round >= d,
             None => false,
@@ -285,9 +288,42 @@ impl CohortSpec {
         round >= self.arrive && !departed
     }
 
-    fn data_scale(&self, round: usize) -> f64 {
+    /// Fraction of each member's data shard in use at `round`. A pure
+    /// cohort-level function: every member of a cohort shares it, so the
+    /// fleet engine computes it once per cohort per round.
+    pub fn data_scale(&self, round: usize) -> f64 {
         let age = round.saturating_sub(self.arrive) as f64;
         (self.data_start * (1.0 + self.data_growth).powf(age)).clamp(0.0, 1.0)
+    }
+
+    /// Draw one round's fault verdict from a client's fault stream. The
+    /// draw schedule is FIXED per round (1 crash + 1 corrupt + retry_max+1
+    /// attempt draws, all consumed regardless of outcome), so skipping a
+    /// round is exactly one discarded call — the lazy fleet engine relies
+    /// on this to fast-forward a stream to a client's first participation.
+    pub fn draw_fault(&self, rng: &mut Rng64) -> FaultVerdict {
+        let crash_u = rng.next_f64();
+        let corrupt_u = rng.next_f64();
+        let mut failed = 0usize;
+        let mut delivered = false;
+        for _ in 0..=self.retry_max {
+            let u = rng.next_f64();
+            if delivered {
+                continue; // draw consumed, outcome already fixed
+            }
+            if u < self.link_fail_prob {
+                failed += 1;
+            } else {
+                delivered = true;
+            }
+        }
+        FaultVerdict {
+            crashed: crash_u < self.crash_prob,
+            corrupt: (corrupt_u < self.corrupt_prob).then_some(self.corrupt_mode),
+            uplink_failures: failed,
+            uplink_lost: !delivered,
+            retry_backoff_secs: self.retry_backoff_secs,
+        }
     }
 }
 
@@ -516,6 +552,23 @@ impl Scenario {
         self.cohort_of(k).active_at(round)
     }
 
+    /// Contiguous `(first_id, count)` id ranges of the cohorts active at
+    /// `round`, ascending. Clients are numbered cohort-by-cohort, so the
+    /// active fleet is always a union of at most `cohorts.len()` ranges —
+    /// the O(participants + cohorts) sampler draws against these instead
+    /// of scanning the fleet.
+    pub fn active_ranges(&self, round: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut base = 0usize;
+        for c in &self.cohorts {
+            if c.active_at(round) {
+                out.push((base, c.count));
+            }
+            base += c.count;
+        }
+        out
+    }
+
     /// Initial compute/link profile per client (the scheduler's static view
     /// before scenario dynamics kick in).
     pub fn initial_profiles(&self) -> Vec<ResourceProfile> {
@@ -526,16 +579,76 @@ impl Scenario {
             })
             .collect()
     }
+
+    /// Per-client stream derivation base: a pure function of
+    /// `(scenario seed, client id)` with a golden-ratio mix so streams for
+    /// adjacent clients never correlate. Both the naive engine and the
+    /// lazy fleet engine derive from this, which is what makes lazy
+    /// materialization bit-identical to eager allocation.
+    pub fn client_mix(&self, k: usize) -> u64 {
+        self.seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((k as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+    }
+
+    /// Build client `k`'s link random-walk process at round 0 (no rounds
+    /// advanced yet). The single authority for link-stream derivation:
+    /// the naive engine builds all of them eagerly, the fleet engine only
+    /// on first participation.
+    pub fn link_process_for(&self, k: usize) -> LinkProcess {
+        let c = self.cohort_of(k);
+        let windows = self
+            .links
+            .iter()
+            .filter(|l| match &l.cohort {
+                Some(name) => *name == c.name,
+                None => true,
+            })
+            .map(|l| LinkWindow {
+                from: l.from,
+                until: l.until,
+                mbps_scale: l.mbps_scale,
+                add_latency_secs: l.add_latency_ms / 1e3,
+            })
+            .collect();
+        LinkProcess::new(
+            c.mbps,
+            c.latency_ms / 1e3,
+            c.walk_sigma,
+            c.floor_mbps,
+            windows,
+            Rng64::seed_from_u64(self.client_mix(k) ^ 0x5CE7_A210),
+        )
+    }
+
+    /// Client `k`'s fault stream at round 0 (no verdicts drawn yet). Same
+    /// derivation contract as [`Scenario::link_process_for`].
+    pub fn fault_rng_for(&self, k: usize) -> Rng64 {
+        Rng64::seed_from_u64(self.client_mix(k) ^ 0xFA17_5EED)
+    }
 }
 
-/// Immutable per-round fleet state, shared with the worker pool. All
-/// vectors are indexed by client id. Churn membership is not repeated
-/// here: the driver already restricts `participants` to the clients
-/// present this round ([`Scenario::active_at`] is a pure function the
-/// sampler consults directly).
+/// Immutable per-round fleet state, shared with the worker pool. Churn
+/// membership is not repeated here: the driver already restricts
+/// `participants` to the clients present this round
+/// ([`Scenario::active_at`] is a pure function the sampler consults
+/// directly).
+///
+/// Two layouts share this type. The naive engine emits **dense** rounds
+/// (`ids = None`): `links`/`data_scale`/`faults` are indexed by client id
+/// and cover the whole fleet. The cohort fleet engine emits **sparse**
+/// rounds (`ids = Some(sorted participants)`): the parallel vectors cover
+/// only those clients, and [`ScenarioRound::link`]/[`ScenarioRound::scale`]
+/// /[`ScenarioRound::fault`] translate a client id to its slot by binary
+/// search. Consumers must go through the accessors, never index `links`
+/// directly — that is what lets the sparse layout stay O(participants)
+/// per round instead of O(fleet).
 #[derive(Debug, Clone)]
 pub struct ScenarioRound {
     pub round: usize,
+    /// `None`: dense, indexed by client id. `Some(ids)`: sparse; `ids` is
+    /// sorted ascending and the other vectors are parallel to it.
+    pub ids: Option<Vec<usize>>,
     pub links: Vec<LinkQuality>,
     /// Fraction of each client's data shard in use this round.
     pub data_scale: Vec<f64>,
@@ -547,10 +660,33 @@ pub struct ScenarioRound {
 }
 
 impl ScenarioRound {
+    /// Slot of client `k` in the per-round vectors (identity when dense).
+    fn slot(&self, k: usize) -> usize {
+        match &self.ids {
+            None => k,
+            Some(ids) => ids
+                .binary_search(&k)
+                .unwrap_or_else(|_| {
+                    panic!("client {k} not materialized in sparse round {}", self.round)
+                }),
+        }
+    }
+
+    /// This round's link quality for client `k`.
+    pub fn link(&self, k: usize) -> &LinkQuality {
+        &self.links[self.slot(k)]
+    }
+
+    /// This round's data-shard fraction for client `k`.
+    pub fn scale(&self, k: usize) -> f64 {
+        self.data_scale[self.slot(k)]
+    }
+
     /// This round's fault verdict for client `k` (no-fault default when the
     /// scenario has no fault layer).
     pub fn fault(&self, k: usize) -> FaultVerdict {
-        self.faults.as_ref().map(|f| f[k]).unwrap_or_default()
+        let slot = self.slot(k);
+        self.faults.as_ref().map(|f| f[slot]).unwrap_or_default()
     }
 
     /// Apply the deadline to one client's simulated round time. Pure
@@ -593,55 +729,17 @@ impl ScenarioEngine {
     pub fn new(scenario: Scenario) -> Result<Self> {
         scenario.validate()?;
         let n = scenario.total_clients();
-        let links = (0..n)
-            .map(|k| {
-                let c = scenario.cohort_of(k);
-                let windows = scenario
-                    .links
-                    .iter()
-                    .filter(|l| match &l.cohort {
-                        Some(name) => *name == c.name,
-                        None => true,
-                    })
-                    .map(|l| LinkWindow {
-                        from: l.from,
-                        until: l.until,
-                        mbps_scale: l.mbps_scale,
-                        add_latency_secs: l.add_latency_ms / 1e3,
-                    })
-                    .collect();
-                // per-client derived stream: a pure function of
-                // (scenario seed, client id), mixing in a domain tag so the
-                // stream never collides with the experiment's other
-                // derivations from the same base seed
-                let mix = scenario
-                    .seed
-                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                    .wrapping_add((k as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
-                LinkProcess::new(
-                    c.mbps,
-                    c.latency_ms / 1e3,
-                    c.walk_sigma,
-                    c.floor_mbps,
-                    windows,
-                    Rng64::seed_from_u64(mix ^ 0x5CE7_A210),
-                )
-            })
-            .collect();
-        // fault streams reuse the per-client mix with a fresh domain tag,
+        // per-client derived streams: pure functions of
+        // (scenario seed, client id), mixing in a domain tag so a stream
+        // never collides with the experiment's other derivations from the
+        // same base seed; fault streams are separate from the link streams
         // so turning faults on never perturbs the link walks (and vice
-        // versa); allocated only when some cohort engages the fault layer
-        let fault_rngs = scenario.has_faults().then(|| {
-            (0..n)
-                .map(|k| {
-                    let mix = scenario
-                        .seed
-                        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                        .wrapping_add((k as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
-                    Rng64::seed_from_u64(mix ^ 0xFA17_5EED)
-                })
-                .collect()
-        });
+        // versa), and fault streams are allocated only when some cohort
+        // engages the fault layer
+        let links = (0..n).map(|k| scenario.link_process_for(k)).collect();
+        let fault_rngs = scenario
+            .has_faults()
+            .then(|| (0..n).map(|k| scenario.fault_rng_for(k)).collect());
         Ok(Self { scenario, links, fault_rngs, next_round: 0 })
     }
 
@@ -671,37 +769,11 @@ impl ScenarioEngine {
         // draws), active or not, fault-prone or not — so churn, sampling,
         // or one knob flipping never shifts another draw in the stream
         let faults = self.fault_rngs.as_mut().map(|rngs| {
-            (0..n)
-                .map(|k| {
-                    let c = scenario.cohort_of(k);
-                    let rng = &mut rngs[k];
-                    let crash_u = rng.next_f64();
-                    let corrupt_u = rng.next_f64();
-                    let mut failed = 0usize;
-                    let mut delivered = false;
-                    for _ in 0..=c.retry_max {
-                        let u = rng.next_f64();
-                        if delivered {
-                            continue; // draw consumed, outcome already fixed
-                        }
-                        if u < c.link_fail_prob {
-                            failed += 1;
-                        } else {
-                            delivered = true;
-                        }
-                    }
-                    FaultVerdict {
-                        crashed: crash_u < c.crash_prob,
-                        corrupt: (corrupt_u < c.corrupt_prob).then_some(c.corrupt_mode),
-                        uplink_failures: failed,
-                        uplink_lost: !delivered,
-                        retry_backoff_secs: c.retry_backoff_secs,
-                    }
-                })
-                .collect()
+            (0..n).map(|k| scenario.cohort_of(k).draw_fault(&mut rngs[k])).collect()
         });
         ScenarioRound {
             round,
+            ids: None,
             links,
             data_scale: (0..n).map(|k| scenario.cohort_of(k).data_scale(round)).collect(),
             deadline_secs: scenario.deadline_secs,
@@ -814,6 +886,7 @@ mod tests {
     fn deadline_policies() {
         let mk = |policy| ScenarioRound {
             round: 0,
+            ids: None,
             links: vec![LinkQuality { mbps: 30.0, latency_secs: 0.0 }],
             data_scale: vec![1.0],
             deadline_secs: Some(5.0),
@@ -981,6 +1054,7 @@ mod tests {
     fn deadline_exactly_equal_is_not_a_straggle() {
         let sr = ScenarioRound {
             round: 0,
+            ids: None,
             links: vec![LinkQuality { mbps: 30.0, latency_secs: 0.0 }],
             data_scale: vec![1.0],
             deadline_secs: Some(5.0),

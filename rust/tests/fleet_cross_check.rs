@@ -1,0 +1,196 @@
+//! Golden cross-check for the cohort-vectorized fleet engine
+//! (`run.fleet = "cohort"`): at small K, where the naive per-client engine
+//! is affordable, both engines must produce **byte-identical** round
+//! records and global parameter bits — for DTFL and FedAvg on the
+//! committed flash-crowd scenario across the {threads, intra, simd} knob
+//! grid, under partial participation (where lazy stream materialization
+//! and catch-up replay actually engage), and under fault injection (crash
+//! / corrupt / flaky uplink), where the replay must consume exactly the
+//! draws the naive engine spent.
+//!
+//! `host_secs` (wall time) and `cohort_advances` (engine-specific by
+//! design: the cohort engine advances per cohort, the naive engine per
+//! client) are the only `RoundRecord` channels excluded from the
+//! comparison. `snapshot_resident_bytes` is included: the
+//! content-addressed store must hold the same bytes either way.
+
+use dtfl::experiment::Experiment;
+use dtfl::harness::{RunSpec, FLASH_CROWD_TOML};
+use dtfl::metrics::RoundRecord;
+use dtfl::runtime::{simd, SimdLevel};
+use dtfl::simulation::{CohortSpec, DeadlinePolicy, Scenario};
+
+/// One round reduced to exact bit patterns — every record channel except
+/// `host_secs` and `cohort_advances`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Row {
+    round: usize,
+    sim_time: u64,
+    makespan: u64,
+    makespan_compute: u64,
+    makespan_comm: u64,
+    train_loss: u64,
+    test_loss: Option<u64>,
+    test_accuracy: Option<u64>,
+    lr: u32,
+    mean_tier: u64,
+    tiers: Vec<usize>,
+    wire_bytes: u64,
+    up_wire_bytes: u64,
+    codec: &'static str,
+    straggled: usize,
+    quarantined: usize,
+    retries: usize,
+    staleness: u64,
+    tier_flushes: usize,
+    snapshot_resident_bytes: u64,
+}
+
+fn row(r: &RoundRecord) -> Row {
+    Row {
+        round: r.round,
+        sim_time: r.sim_time.to_bits(),
+        makespan: r.makespan.to_bits(),
+        makespan_compute: r.makespan_compute.to_bits(),
+        makespan_comm: r.makespan_comm.to_bits(),
+        train_loss: r.train_loss.to_bits(),
+        test_loss: r.test_loss.map(f64::to_bits),
+        test_accuracy: r.test_accuracy.map(f64::to_bits),
+        lr: r.lr.to_bits(),
+        mean_tier: r.mean_tier.to_bits(),
+        tiers: r.tiers.clone(),
+        wire_bytes: r.wire_bytes,
+        up_wire_bytes: r.up_wire_bytes,
+        codec: r.codec,
+        straggled: r.straggled,
+        quarantined: r.quarantined,
+        retries: r.retries,
+        staleness: r.staleness.to_bits(),
+        tier_flushes: r.tier_flushes,
+        snapshot_resident_bytes: r.snapshot_resident_bytes,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Knobs {
+    threads: usize,
+    intra: usize,
+    simd: Option<SimdLevel>,
+}
+
+fn run(
+    method: &str,
+    scenario: Scenario,
+    rounds: usize,
+    fleet: &str,
+    k: Knobs,
+    sample_count: Option<usize>,
+) -> (Vec<Row>, Vec<u32>) {
+    let spec = RunSpec {
+        method: method.into(),
+        clients: scenario.total_clients(),
+        rounds,
+        batch_cap: Some(1),
+        train_total: 96,
+        test_total: 32,
+        eval_every: 1,
+        threads: k.threads,
+        intra_threads: k.intra,
+        simd: k.simd.map_or_else(|| "auto".into(), |l| l.name().into()),
+        fleet: fleet.into(),
+        sample_count,
+        scenario: Some(scenario),
+        ..Default::default()
+    };
+    let mut exp = Experiment::new(spec.to_config()).expect("experiment");
+    let mut rows = Vec::new();
+    exp.run_with(|r| rows.push(row(r))).expect("run");
+    let params = exp.method.global_params().iter().map(|p| p.to_bits()).collect();
+    (rows, params)
+}
+
+/// Extra thread count injected by the CI determinism matrix.
+fn env_threads() -> Option<usize> {
+    std::env::var("DTFL_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+}
+
+fn grid() -> Vec<Knobs> {
+    let mut g = vec![
+        Knobs { threads: 1, intra: 1, simd: Some(SimdLevel::Scalar) },
+        Knobs { threads: 4, intra: 1, simd: None },
+        Knobs { threads: 2, intra: 2, simd: None },
+    ];
+    g.extend(
+        simd::available()
+            .into_iter()
+            .filter(|&l| l != SimdLevel::Scalar)
+            .map(|l| Knobs { threads: 2, intra: 1, simd: Some(l) }),
+    );
+    if let Some(n) = env_threads() {
+        g.push(Knobs { threads: n, intra: 1, simd: None });
+    }
+    g
+}
+
+fn assert_cross_mode(method: &str, scenario: &Scenario, rounds: usize, sample_count: Option<usize>) {
+    for k in grid() {
+        let (nr, np) = run(method, scenario.clone(), rounds, "naive", k, sample_count);
+        let (cr, cp) = run(method, scenario.clone(), rounds, "cohort", k, sample_count);
+        assert!(!nr.is_empty(), "{method} {k:?}: empty trace");
+        assert_eq!(nr, cr, "{method} {k:?}: cohort trace diverged from the naive engine");
+        assert_eq!(np, cp, "{method} {k:?}: global param bits diverged");
+    }
+}
+
+#[test]
+fn flash_crowd_cohort_equals_naive_dtfl() {
+    let sc = Scenario::parse(FLASH_CROWD_TOML).expect("committed scenario parses");
+    assert_cross_mode("dtfl", &sc, 4, None);
+}
+
+#[test]
+fn flash_crowd_cohort_equals_naive_fedavg() {
+    let sc = Scenario::parse(FLASH_CROWD_TOML).expect("committed scenario parses");
+    assert_cross_mode("fedavg", &sc, 4, None);
+}
+
+#[test]
+fn sampled_participation_cohort_equals_naive() {
+    // partial participation is where the cohort engine earns its keep:
+    // non-sampled clients advance only as cohort statistics, and a
+    // client's first sample triggers per-stream catch-up replay that must
+    // land on exactly the state the always-advancing naive engine holds
+    let sc = Scenario::parse(FLASH_CROWD_TOML).expect("committed scenario parses");
+    assert_cross_mode("dtfl", &sc, 5, Some(4));
+}
+
+#[test]
+fn faulty_fleet_cohort_equals_naive() {
+    // every fault knob at once, plus churn: the fixed per-round fault draw
+    // schedule is what makes a skipped round exactly one discarded draw
+    let mut churn = CohortSpec::new("churn", 3, 1.0, 20.0);
+    churn.arrive = 1;
+    churn.depart = Some(4);
+    churn.link_fail_prob = 0.2;
+    churn.walk_sigma = 0.05;
+    let mut flaky = CohortSpec::new("flaky", 3, 0.5, 8.0);
+    flaky.crash_prob = 0.3;
+    flaky.corrupt_prob = 0.3;
+    flaky.link_fail_prob = 0.4;
+    flaky.retry_max = 2;
+    flaky.walk_sigma = 0.1;
+    let sc = Scenario {
+        name: "faulty-cross".into(),
+        seed: 23,
+        deadline_secs: None,
+        on_deadline: DeadlinePolicy::Drop,
+        delta_downlink: true,
+        cohorts: vec![churn, flaky],
+        links: Vec::new(),
+    };
+    assert_cross_mode("dtfl", &sc, 5, None);
+    assert_cross_mode("dtfl", &sc, 5, Some(3));
+}

@@ -1,0 +1,106 @@
+//! Fleet-scale contracts for the cohort-vectorized engine:
+//!
+//! * the committed `scenarios/mega_fleet.toml` (10^6 clients) is pinned
+//!   field-for-field against the programmatic `harness::fleet_scenario`
+//!   builder, so the bench legs and the committed scenario cannot drift;
+//! * with delta downlink on, snapshot-store residency stays bounded by
+//!   O(distinct broadcast rounds × params) — never O(fleet × params);
+//! * (release smoke, `--ignored`) the 10^6-client scenario runs whole DTFL
+//!   rounds, and per-round coordinator overhead grows sublinearly in fleet
+//!   size at a fixed participant count.
+
+use dtfl::experiment::Experiment;
+use dtfl::harness::{fleet_scenario, measure_fleet_scale, RunSpec, MEGA_FLEET_TOML};
+use dtfl::simulation::Scenario;
+
+#[test]
+fn committed_mega_fleet_toml_matches_programmatic_builder() {
+    let parsed = Scenario::parse(MEGA_FLEET_TOML).expect("mega-fleet scenario parses");
+    assert_eq!(parsed.total_clients(), 1_000_000);
+    assert!(parsed.delta_downlink, "the snapshot store must be exercised");
+    assert_eq!(parsed, fleet_scenario(1_000_000), "TOML and builder drifted apart");
+    // smaller sizes keep the same shape and always sum exactly
+    for k in [50usize, 10_000] {
+        assert_eq!(fleet_scenario(k).total_clients(), k);
+    }
+}
+
+#[test]
+fn resident_snapshot_bytes_stay_bounded_at_ten_thousand_clients() {
+    let fleet = 10_000usize;
+    let rounds = 3usize;
+    let spec = RunSpec {
+        clients: fleet,
+        rounds,
+        batch_cap: Some(1),
+        train_total: 512,
+        test_total: 16,
+        eval_every: rounds,
+        fleet: "cohort".into(),
+        sample_count: Some(10),
+        scenario: Some(fleet_scenario(fleet)),
+        ..Default::default()
+    };
+    let mut exp = Experiment::new(spec.to_config()).expect("fleet experiment");
+    let mut records = Vec::new();
+    exp.run_with(|r| records.push(r.clone())).expect("fleet run");
+    assert_eq!(records.len(), rounds);
+
+    let params = exp.method.global_params().len() as u64;
+    let bound = rounds as u64 * params * 4;
+    let per_client_cost = fleet as u64 * params * 4;
+    assert!(bound < per_client_cost, "the bound must beat O(fleet × params)");
+    for r in &records {
+        assert!(r.snapshot_resident_bytes > 0, "round {}: resident gauge must be live", r.round);
+        assert!(
+            r.snapshot_resident_bytes <= bound,
+            "round {}: {} resident bytes exceed the O(distinct rounds × params) bound {}",
+            r.round,
+            r.snapshot_resident_bytes,
+            bound
+        );
+        assert!(
+            (1..=3).contains(&r.cohort_advances),
+            "round {}: fleet must advance at cohort granularity (got {})",
+            r.round,
+            r.cohort_advances
+        );
+    }
+}
+
+/// Release-mode large-K smoke (CI: `cargo test --release -q --test
+/// fleet_scale -- --ignored`): the committed 10^6-client scenario runs
+/// whole DTFL rounds, residency honors its bound at every size, and the
+/// coordinator's per-round overhead grows sublinearly along the fleet axis.
+#[test]
+#[ignore = "large-K smoke; run in release with -- --ignored"]
+fn mega_fleet_runs_and_coordinator_overhead_is_sublinear() {
+    let t = measure_fleet_scale(&[50, 10_000, 1_000_000], 3).expect("fleet-scale probe");
+    assert_eq!(t.legs.len(), 3);
+    for l in &t.legs {
+        assert_eq!(l.rounds, 3, "leg {}: every round must complete", l.fleet);
+        assert!(
+            l.mean_makespan_secs.is_finite() && l.mean_makespan_secs > 0.0,
+            "leg {}: makespan must be simulated",
+            l.fleet
+        );
+        assert!(l.resident_bytes > 0, "leg {}: resident gauge must be live", l.fleet);
+        assert!(
+            l.resident_bytes <= l.resident_bound_bytes,
+            "leg {}: {} resident bytes exceed bound {}",
+            l.fleet,
+            l.resident_bytes,
+            l.resident_bound_bytes
+        );
+        assert!(l.cohort_advances <= 3, "leg {}: advances bounded by the cohort count", l.fleet);
+    }
+    // the fleet grows 100× between the last two legs at a fixed participant
+    // count; per-round coordinator overhead must grow far less (generous
+    // margin for shared-runner timing noise)
+    let mid = t.legs[1].coordinator_secs_per_round.max(1e-9);
+    let big = t.legs[2].coordinator_secs_per_round;
+    assert!(
+        big < mid * 20.0,
+        "coordinator overhead grew superlinearly: {big:.6}s/round at 10^6 vs {mid:.6}s/round at 10^4"
+    );
+}

@@ -133,7 +133,7 @@ fn bench_round_smoke_writes_hotpath_json() {
     use std::time::Duration;
 
     use dtfl::harness::{
-        kernels_to_json, measure_async_throughput, measure_fused_throughput,
+        kernels_to_json, measure_async_throughput, measure_fleet_scale, measure_fused_throughput,
         measure_kernel_throughput, measure_pipeline_throughput, measure_robustness_throughput,
         measure_round_throughput, measure_scenario_throughput, measure_simd_throughput,
         measure_wire_efficiency,
@@ -208,6 +208,18 @@ fn bench_round_smoke_writes_hotpath_json() {
         "lossy uplink tracks must still train to a finite loss"
     );
 
+    let fs = measure_fleet_scale(&[50, 10_000, 1_000_000], 2).expect("fleet scale probe");
+    assert_eq!(fs.legs.len(), 3, "fleet-scale probe must sample every leg");
+    for l in &fs.legs {
+        assert!(
+            l.resident_bytes > 0 && l.resident_bytes <= l.resident_bound_bytes,
+            "fleet {}: snapshot residency {} outside (0, {}]",
+            l.fleet,
+            l.resident_bytes,
+            l.resident_bound_bytes
+        );
+    }
+
     let mut report = BenchReport::new();
     // keep any full `cargo bench` micro-bench entries already on disk
     report.preserve_entries_from(hotpath_report_path());
@@ -221,5 +233,6 @@ fn bench_round_smoke_writes_hotpath_json() {
     report.extra("simd", sd.to_json(source));
     report.extra("async_tiers", at.to_json(source));
     report.extra("wire_efficiency", we.to_json(source));
+    report.extra("fleet_scale", fs.to_json(source));
     report.write(hotpath_report_path()).expect("write BENCH_hotpath.json");
 }

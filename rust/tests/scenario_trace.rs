@@ -359,6 +359,72 @@ fn departed_clients_lose_their_codec_state() {
     }
 }
 
+/// Cohort-engine regression for the depart sweep: once a cohort's `depart`
+/// round passes, no member holds codec state — members that were sampled
+/// get their refcounted snapshot and uplink residual evicted, and members
+/// that were never sampled never acquired any (lazy materialization), so
+/// the assertion holds for the whole cohort regardless of sampling history.
+#[test]
+fn cohort_depart_evicts_snapshots_and_residuals() {
+    let run_cohort = |uplink: UplinkCodec, sample_count: Option<usize>| {
+        let scenario = drop_scenario();
+        let spec = RunSpec {
+            method: "dtfl".into(),
+            clients: scenario.total_clients(),
+            rounds: 5,
+            batch_cap: Some(1),
+            train_total: 96,
+            test_total: 32,
+            eval_every: 1,
+            uplink,
+            fleet: "cohort".into(),
+            sample_count,
+            scenario: Some(scenario),
+            ..Default::default()
+        };
+        let mut exp = Experiment::new(spec.to_config()).expect("cohort experiment");
+        let mut records = Vec::new();
+        exp.run_with(|r| records.push(r.clone())).expect("cohort run");
+        (exp, records)
+    };
+
+    // full participation: exactly the naive test's expectations hold
+    let (exp, records) = run_cohort(UplinkCodec::Raw, None);
+    for k in 0..4 {
+        assert_eq!(exp.delta_has_snapshot(k), Some(true), "core client {k} keeps its snapshot");
+    }
+    for k in 4..6 {
+        assert_eq!(
+            exp.delta_has_snapshot(k),
+            Some(false),
+            "departed crowd client {k} must have its snapshot evicted"
+        );
+    }
+    let last = records.last().expect("records");
+    assert!(last.snapshot_resident_bytes > 0, "resident-bytes gauge must be live");
+    assert!(last.cohort_advances >= 1, "cohort engine advances at cohort granularity");
+
+    // sampled participation: Some(false) must hold for the whole departed
+    // cohort whether or not a member was ever sampled
+    let (exp, _) = run_cohort(UplinkCodec::TopK, Some(3));
+    for k in 4..6 {
+        assert_eq!(
+            exp.delta_has_snapshot(k),
+            Some(false),
+            "departed crowd client {k}: no snapshot, sampled or not"
+        );
+        assert_eq!(
+            exp.uplink_has_residual(k),
+            Some(false),
+            "departed crowd client {k}: no top-k residual, sampled or not"
+        );
+    }
+    // the final round runs with only the core cohort active: its 3 sampled
+    // participants received that round's broadcast and keep shared snapshots
+    let with_snapshot = (0..4).filter(|&k| exp.delta_has_snapshot(k) == Some(true)).count();
+    assert!(with_snapshot >= 3, "final-round participants must keep snapshots (got {with_snapshot})");
+}
+
 #[test]
 fn scenario_off_is_the_legacy_driver() {
     // belt and braces next to tests/golden_trace.rs: the same RunSpec with
